@@ -1,0 +1,93 @@
+//! Figure 3 driver: TF-baseline vs the from-scratch ACL engine.
+//!
+//! Regenerates all three panels of the paper's Fig 3 story on this
+//! substrate: end-to-end latency, the group 1 / group 2 breakdown, and
+//! CPU/RSS utilization.  Paper numbers for reference: TF 420 ms vs ACL
+//! 320 ms (1.31x); group1 +23%, group2 +110%; TF 75% CPU / ~9 MB vs
+//! ACL 90% CPU / ~10 MB.
+//!
+//! ```bash
+//! cargo run --release --example compare_engines -- [iters]
+//! ```
+
+use anyhow::Result;
+use std::time::Duration;
+
+use zuluko::bench::{speedup_line, Bench, Stats};
+use zuluko::engine::{build, EngineKind};
+use zuluko::metrics::sysmon::Sysmon;
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn measure(
+    kind: EngineKind,
+    manifest: &Manifest,
+    input: &Tensor,
+    iters: usize,
+) -> Result<(Stats, [f64; 4], f64, f64)> {
+    let mut e = build(kind, manifest)?;
+    e.warmup()?;
+    e.ledger_mut().clear();
+
+    let mon = Sysmon::start(Duration::from_millis(50));
+    let stats = Bench::new(kind.as_str())
+        .warmup(1)
+        .iters(iters)
+        .run(|| {
+            e.infer(input).expect("infer");
+        });
+    let util = mon.stop()?;
+
+    let groups = e.ledger().group_ms();
+    let n = (iters + 1) as f64; // warmup iteration included in ledger
+    let per_image = [groups[0] / n, groups[1] / n, groups[2] / n, groups[3] / n];
+    Ok((stats, per_image, util.cpu_frac, util.avg_rss_mb))
+}
+
+fn main() -> Result<()> {
+    let iters: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let manifest = Manifest::load(&zuluko::artifacts_dir())?;
+    let input = Tensor::random(&[1, 227, 227, 3], 7);
+
+    println!("== Figure 3 reproduction (iters={iters}) ==\n");
+
+    let (tf, tf_groups, tf_cpu, tf_rss) =
+        measure(EngineKind::TfBaseline, &manifest, &input, iters)?;
+    let (acl, _, acl_cpu, acl_rss) =
+        measure(EngineKind::AclStaged, &manifest, &input, iters)?;
+    let (aclf, _, _, _) = measure(EngineKind::AclFused, &manifest, &input, iters)?;
+    // Probe granularity for the ACL group breakdown.
+    let (_, acl_groups, _, _) =
+        measure(EngineKind::AclProbe, &manifest, &input, iters)?;
+
+    println!("-- Panel 1: end-to-end latency (ms/image) --");
+    println!("{}", Stats::HEADER);
+    for s in [&tf, &acl, &aclf] {
+        println!("{}", s.row());
+    }
+    println!("{}", speedup_line(&tf, &acl));
+    println!("{}", speedup_line(&tf, &aclf));
+    println!("paper: TF 420 ms -> ACL 320 ms = 1.31x (25% speedup)\n");
+
+    println!("-- Panel 2: group breakdown (ms/image, engine-attributed) --");
+    println!("| group | tf | acl | speedup | paper |");
+    println!("|---|---|---|---|---|");
+    let g1 = (tf_groups[0], acl_groups[0]);
+    let g2 = (tf_groups[1], acl_groups[1]);
+    println!("| group1 conv/relu/concat | {:.1} | {:.1} | {:.2}x | 1.23x |",
+             g1.0, g1.1, g1.0 / g1.1.max(1e-9));
+    println!("| group2 pool/softmax | {:.1} | {:.1} | {:.2}x | 2.10x |",
+             g2.0, g2.1, g2.0 / g2.1.max(1e-9));
+    println!();
+
+    println!("-- Panel 3: utilization --");
+    println!("| engine | cpu % | rss MB | paper |");
+    println!("|---|---|---|---|");
+    println!("| tf  | {:.0}% | {:.0} | 75% / ~9 MB |", tf_cpu * 100.0, tf_rss);
+    println!("| acl | {:.0}% | {:.0} | 90% / ~10 MB |", acl_cpu * 100.0, acl_rss);
+    println!("\n(absolute RSS differs — XLA runtime vs bare ARM; the *ordering* is the claim)");
+    Ok(())
+}

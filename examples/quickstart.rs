@@ -1,0 +1,51 @@
+//! Quickstart: load the engine, classify one image, print top-5.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- path/to/image.ppm
+//! ```
+
+use anyhow::Result;
+use zuluko::engine::{build, EngineKind};
+use zuluko::runtime::Manifest;
+use zuluko::tensor::image::Image;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT artifacts (built once by `make artifacts`).
+    let manifest = Manifest::load(&zuluko::artifacts_dir())?;
+    println!(
+        "model {} — {} params",
+        manifest.model,
+        manifest.params.iter().map(|p| p.nelems).sum::<usize>()
+    );
+
+    // 2. Build the from-scratch (ACL-style) engine and warm it up.
+    let mut engine = build(EngineKind::AclStaged, &manifest)?;
+    let t0 = std::time::Instant::now();
+    engine.warmup()?;
+    println!("engine ready in {:.1}s (compile included)", t0.elapsed().as_secs_f64());
+
+    // 3. An image: a PPM from argv, or a synthetic frame.
+    let img = match std::env::args().nth(1) {
+        Some(path) => Image::load_ppm(std::path::Path::new(&path))?,
+        None => Image::synthetic(640, 480, 42),
+    };
+    let input = img.to_input(); // center-crop + resize + scale to [-1,1]
+
+    // 4. Infer.
+    let t0 = std::time::Instant::now();
+    let probs = engine.infer(&input)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let row = probs.unstack()?.remove(0);
+    println!("inference: {ms:.1} ms/image on `{}`", engine.name());
+    for (rank, (class, p)) in row.topk(5).iter().enumerate() {
+        println!("  #{} class {:<4} p={:.4}", rank + 1, class, p);
+    }
+
+    // 5. Where the time went (the paper's Fig 3 instrumentation).
+    let [g1, g2, _, other] = engine.ledger().group_ms();
+    println!("stage time: group1-ish {:.0} ms, group2-ish {:.0} ms, mixed {:.0} ms",
+             g1, g2, other);
+    Ok(())
+}

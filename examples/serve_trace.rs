@@ -1,0 +1,122 @@
+//! End-to-end serving driver (E7) — the system-prompt's required demo.
+//!
+//! Boots the full stack (coordinator + dynamic batcher + TCP server +
+//! ACL engine), replays a Poisson trace of synthetic camera frames over
+//! real sockets, then a closed-loop run, and reports latency percentiles,
+//! throughput, batch-size distribution, and utilization.
+//!
+//! ```bash
+//! cargo run --release --example serve_trace -- [n_requests] [rate_rps]
+//! ```
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zuluko::config::Config;
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::EngineKind;
+use zuluko::metrics::sysmon::Sysmon;
+use zuluko::metrics::Histogram;
+use zuluko::server::client::Client;
+use zuluko::server::Server;
+use zuluko::trace::{Pattern, Trace};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let rate: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+
+    let cfg = Config {
+        engine: EngineKind::AclFused,
+        workers: 1,
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(40),
+        queue_capacity: 64,
+        ..Config::default()
+    };
+
+    println!("== E7: end-to-end serving (engine={}, n={n}, rate={rate}/s) ==",
+             cfg.engine.as_str());
+    let t0 = Instant::now();
+    let coord = Arc::new(Coordinator::start(&cfg)?);
+    println!("coordinator ready in {:.1}s (AOT load + XLA compile + warmup)",
+             t0.elapsed().as_secs_f64());
+    let server = Server::start(coord.clone(), "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+
+    // ---- open-loop Poisson replay over real TCP ----
+    let trace = Trace::generate(Pattern::Poisson { rate }, n, 42);
+    let mon = Sysmon::start(Duration::from_millis(100));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, (at, seed)) in trace
+        .arrivals
+        .iter()
+        .zip(&trace.image_seeds)
+        .enumerate()
+    {
+        let addr = addr.clone();
+        let at = *at;
+        let seed = *seed;
+        let start = t0;
+        handles.push(std::thread::spawn(move || {
+            // Sleep until this request's arrival offset from trace start.
+            std::thread::sleep(at.saturating_sub(start.elapsed()));
+            let mut c = Client::connect(&addr).ok()?;
+            c.infer_synthetic(i as u64, seed).ok()
+        }));
+    }
+    let mut lat = Histogram::default();
+    let mut batch_hist = Histogram::default();
+    let mut ok = 0usize;
+    let mut rejected = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            Some(r) if r.ok => {
+                ok += 1;
+                lat.record_ms(r.total_ms);
+                batch_hist.record_ms(r.batch as f64);
+            }
+            Some(_) => rejected += 1,
+            None => rejected += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    let util = mon.stop()?;
+
+    let (mean, p50, p95, p99, max) = lat.summary();
+    println!("\n-- open-loop Poisson ({rate} rps offered) --");
+    println!("| metric | value |");
+    println!("|---|---|");
+    println!("| completed | {ok}/{n} ({rejected} rejected) |");
+    println!("| throughput | {:.2} img/s |", ok as f64 / wall.as_secs_f64());
+    println!("| latency mean | {mean:.0} ms |");
+    println!("| latency p50/p95/p99 | {p50:.0} / {p95:.0} / {p99:.0} ms |");
+    println!("| latency max | {max:.0} ms |");
+    println!("| mean batch size | {:.2} |", batch_hist.mean_ms());
+    println!("| cpu | {:.0}% |", util.cpu_frac * 100.0);
+    println!("| rss avg/peak | {:.0}/{:.0} MB |", util.avg_rss_mb, util.peak_rss_mb);
+
+    // ---- closed-loop (the paper's own measurement mode), 1 client ----
+    let m = 10.min(n);
+    let mut c = Client::connect(&addr)?;
+    let t0 = Instant::now();
+    let mut closed = Histogram::default();
+    for i in 0..m {
+        let r = c.infer_synthetic(i as u64, i as u64)?;
+        anyhow::ensure!(r.ok, "closed-loop request failed: {:?}", r.error);
+        closed.record_ms(r.total_ms);
+    }
+    let cwall = t0.elapsed();
+    let (cmean, cp50, ..) = closed.summary();
+    println!("\n-- closed-loop, 1 client ({} requests) --", m);
+    println!("| latency mean/p50 | {cmean:.0} / {cp50:.0} ms |");
+    println!("| throughput | {:.2} img/s |", m as f64 / cwall.as_secs_f64());
+
+    let s = coord.stats();
+    println!("\ncoordinator totals: completed={} rejected={} mean_batch={:.2}",
+             s.completed, s.rejected, s.mean_batch);
+
+    server.stop();
+    Ok(())
+}

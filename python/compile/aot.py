@@ -1,0 +1,305 @@
+"""AOT pipeline: lower every artifact the Rust runtime loads.
+
+Run once via `make artifacts` (python -m compile.aot --out ../artifacts).
+Python never runs again after this; the Rust binary is self-contained.
+
+Outputs (see DESIGN.md §4):
+    manifest.json            — global metadata: param tables, stages, ops,
+                               scales, golden index.  The Rust coordinator's
+                               single source of truth.
+    weights.bin              — all fp32 params, little-endian, manifest order.
+    weights_q8.bin           — int8 conv weights (+ scales in manifest).
+    golden/*.bin             — deterministic input + oracle outputs for the
+                               Rust integration tests.
+    acl/stage_*.hlo.txt      — fused per-stage executables (batch variants).
+    acl/probe_*.hlo.txt      — finer-grained stages for the Fig 3 breakdown.
+    acl/full_*.hlo.txt       — fully-fused whole network (ablation + serving).
+    tf/op_*.hlo.txt          — one executable per baseline-graph op.
+    quant/op_*.hlo.txt       — one executable per quantized-graph op (Fig 4).
+
+Interchange format is HLO **text** (not serialized HloModuleProto): jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import graph, model, quantize
+
+BATCH_SIZES = (1, 2, 4, 8)
+GOLDEN_SEED = 123
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, args) -> str:
+    """jit-lower `fn` at `args` (ShapeDtypeStructs) and emit HLO text.
+
+    `return_tuple=True` so the Rust side can uniformly `to_tuple1()`.
+    """
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.int8 if dtype == "i8" else jnp.float32)
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _write_bin(path: str, arr: np.ndarray) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    arr.tofile(path)
+
+
+class _Progress:
+    def __init__(self, label: str, total: int):
+        self.label, self.total, self.done = label, total, 0
+        self.t0 = time.time()
+
+    def tick(self, what: str) -> None:
+        self.done += 1
+        print(f"[aot] {self.label} {self.done}/{self.total} {what} "
+              f"({time.time() - self.t0:.1f}s)", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+def write_weights(out: str, params: dict[str, np.ndarray]) -> list[dict]:
+    """weights.bin + its manifest table (name/shape/offset in f32 elems)."""
+    table, blobs, offset = [], [], 0
+    for name, shape in model.param_specs():
+        arr = np.ascontiguousarray(params[name], dtype="<f4")
+        table.append({
+            "name": name, "shape": list(shape), "dtype": "f32",
+            "offset": offset, "nelems": int(arr.size),
+        })
+        blobs.append(arr.reshape(-1))
+        offset += int(arr.size)
+    _write_bin(os.path.join(out, "weights.bin"), np.concatenate(blobs))
+    return table
+
+
+def write_weights_q8(out: str, params: dict[str, np.ndarray]):
+    """weights_q8.bin + table (int8 weights for the quantized graph)."""
+    q8, w_scales = quantize.quantize_weights(params)
+    table, blobs, offset = [], [], 0
+    for conv, wname in quantize.CONV_WEIGHTS.items():
+        arr = np.ascontiguousarray(q8[wname + "_q8"], dtype=np.int8)
+        table.append({
+            "name": wname + "_q8", "shape": list(arr.shape), "dtype": "i8",
+            "offset": offset, "nelems": int(arr.size),
+            "scale": float(w_scales[conv]),
+        })
+        blobs.append(arr.reshape(-1))
+        offset += int(arr.size)
+    _write_bin(os.path.join(out, "weights_q8.bin"), np.concatenate(blobs))
+    return table, q8
+
+
+def write_goldens(out: str, params, q8_params, scales) -> dict:
+    """Deterministic input + oracle outputs for Rust integration tests."""
+    r = np.random.RandomState(GOLDEN_SEED)
+    img = r.uniform(-1.0, 1.0,
+                    (1, model.INPUT_HW, model.INPUT_HW, 3)).astype(np.float32)
+    _write_bin(os.path.join(out, "golden", "input.bin"), img)
+
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    sites = model.activation_sites(jparams, jnp.asarray(img))
+    probs = np.asarray(sites["probs"])
+    _write_bin(os.path.join(out, "golden", "probs.bin"), probs)
+
+    stage_files = []
+    for st in model.stages():
+        key = st.name if st.name != "head" else "probs"
+        arr = np.asarray(sites[key], dtype="<f4")
+        fname = f"golden/stage_{st.index:02d}_{st.name}.bin"
+        _write_bin(os.path.join(out, fname), arr)
+        stage_files.append(fname)
+
+    # Quantized-path golden via the graph reference interpreter.
+    qops = graph.build_graph(quant=True)
+    allp = {**jparams, **{k: jnp.asarray(v) for k, v in q8_params.items()}}
+    env = graph.execute_graph(qops, allp, jnp.asarray(img), scales)
+    probs_q8 = np.asarray(env["softmax"], dtype="<f4")
+    _write_bin(os.path.join(out, "golden", "probs_q8.bin"), probs_q8)
+
+    return {
+        "input": "golden/input.bin",
+        "probs": "golden/probs.bin",
+        "probs_q8": "golden/probs_q8.bin",
+        "stages": stage_files,
+        "top1": int(np.argmax(probs[0])),
+        "top1_q8": int(np.argmax(probs_q8[0])),
+    }
+
+
+def lower_stages(out: str, stages, kind: str, batch_sizes) -> list[dict]:
+    """Lower a stage list (serving or probe) at each batch size."""
+    prog = _Progress(kind, len(stages) * len(batch_sizes))
+    entries = []
+    for st in stages:
+        artifacts = {}
+        for b in batch_sizes:
+            params, x = st.jit_args(b)
+            fn = st.fn
+            wrapper = (lambda f: lambda *a: f(list(a[:-1]), a[-1]))(fn)
+            text = to_hlo_text(wrapper, [*params, x])
+            rel = f"acl/{kind}_{st.index:02d}_{st.name}_b{b}.hlo.txt"
+            _write(os.path.join(out, rel), text)
+            artifacts[str(b)] = rel
+            prog.tick(f"{st.name} b{b}")
+        entries.append({
+            "index": st.index, "name": st.name,
+            "params": list(st.param_names),
+            "in_shape": list(st.in_shape), "out_shape": list(st.out_shape),
+            "group": model.PROBE_GROUPS.get(st.name, "group1")
+            if kind == "probe" else None,
+            "artifacts": artifacts,
+        })
+    return entries
+
+
+def lower_full(out: str, batch_sizes) -> dict:
+    """Fully-fused whole-network artifacts."""
+    prog = _Progress("full", len(batch_sizes))
+    artifacts = {}
+    pspecs = [_sds(shape) for _, shape in model.param_specs()]
+    names = [n for n, _ in model.param_specs()]
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        return model.forward_fused(params, args[-1])
+
+    for b in batch_sizes:
+        x = _sds((b, model.INPUT_HW, model.INPUT_HW, 3))
+        text = to_hlo_text(fn, [*pspecs, x])
+        rel = f"acl/full_b{b}.hlo.txt"
+        _write(os.path.join(out, rel), text)
+        artifacts[str(b)] = rel
+        prog.tick(f"full b{b}")
+    return artifacts
+
+
+def lower_ops(out: str, ops, scales, q8_table, prefix: str) -> list[dict]:
+    """Lower one executable per graph op (batch 1)."""
+    q8_shapes = {e["name"]: tuple(e["shape"]) for e in q8_table}
+    prog = _Progress(prefix, len(ops))
+    entries = []
+    for op in ops:
+        fn = graph.lower_fn(op, scales)
+        args = []
+        for p in op.param_names:
+            if p.endswith("_q8"):
+                args.append(_sds(q8_shapes[p], "i8"))
+            else:
+                args.append(_sds(model._shape_of(p)))
+        for shp, dt in zip(op.in_shapes, op.in_dtypes):
+            args.append(_sds((1, *shp), dt))
+        text = to_hlo_text(fn, args)
+        rel = f"{prefix}/op_{op.index:03d}_{op.name}.hlo.txt"
+        _write(os.path.join(out, rel), text)
+        prog.tick(op.name)
+        entries.append({
+            "index": op.index, "name": op.name, "kind": op.kind,
+            "group": op.group, "inputs": list(op.inputs),
+            "params": list(op.param_names),
+            "in_shapes": [list(s) for s in op.in_shapes],
+            "in_dtypes": list(op.in_dtypes),
+            "out_shape": list(op.out_shape), "out_dtype": op.out_dtype,
+            "artifact": rel,
+        })
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="b1-only stages, no op graphs (dev loop)")
+    args = ap.parse_args(argv)
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    print("[aot] init params + weights", flush=True)
+    params = model.init_params()
+    param_table = write_weights(out, params)
+    q8_table, q8_params = write_weights_q8(out, params)
+
+    print("[aot] calibration", flush=True)
+    scales = quantize.calibrate(params)
+
+    print("[aot] goldens", flush=True)
+    golden = write_goldens(out, params, q8_params, scales)
+
+    batch_sizes = (1,) if args.quick else BATCH_SIZES
+    stage_entries = lower_stages(out, model.stages(), "stage", batch_sizes)
+    probe_entries = lower_stages(out, model.probe_stages(), "probe", (1,))
+    full_artifacts = lower_full(out, batch_sizes)
+
+    if args.quick:
+        op_entries, qop_entries = [], []
+    else:
+        op_entries = lower_ops(out, graph.build_graph(False), scales,
+                               q8_table, "tf")
+        qop_entries = lower_ops(out, graph.build_graph(True), scales,
+                                q8_table, "quant")
+
+    manifest = {
+        "version": 1,
+        "model": "squeezenet-v1.0",
+        "input_hw": model.INPUT_HW,
+        "input_channels": 3,
+        "num_classes": model.NUM_CLASSES,
+        "attenuation": model.ATTENUATION,
+        "seed": model.SEED,
+        "batch_sizes": list(batch_sizes),
+        "weights_bin": "weights.bin",
+        "weights_q8_bin": "weights_q8.bin",
+        "params": param_table,
+        "params_q8": q8_table,
+        "scales": {k: float(v) for k, v in scales.items()},
+        "stages": stage_entries,
+        "probe_stages": probe_entries,
+        "full": full_artifacts,
+        "ops": op_entries,
+        "quant_ops": qop_entries,
+        "golden": golden,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {out}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

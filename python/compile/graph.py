@@ -1,0 +1,274 @@
+"""L2 — primitive op-graph for the TF-baseline engine (and its quant variant).
+
+The paper's comparator is a *ported framework*: TensorFlow executes
+SqueezeNet as a graph of primitive ops — every conv, ReLU, pool, and an
+explicit `concatenate` per fire module — each dispatched separately by a
+generic graph interpreter.  This module declares that graph.  `aot.py`
+lowers **one HLO executable per op**, and the Rust `TfBaselineEngine` walks
+the graph exactly the way a framework runtime does (dynamic tensor
+registry, per-op dispatch, intermediate materialization).
+
+Fairness note (DESIGN.md): every op lowers from the *same* L1 Pallas
+kernels the ACL engine uses, so any measured difference between engines is
+pure structure — dispatch count, concat copies, lost fusion — never kernel
+quality.  That mirrors the paper's "both engines use NEON" control.
+
+The quant variant reproduces Fig 4's graph surgery: every conv op becomes
+    quantize (f32->int8)  ->  conv_q8 (int8 x int8 -> raw acc)
+        ->  dequantize+bias (acc * s_x*s_w + b)
+with ReLU kept separate, exactly the Quantize/Dequantize node insertion
+TensorFlow's 8-bit path performs.
+
+Op groups follow Fig 3's breakdown:
+    group1 = convolution, ReLU, concatenate
+    group2 = pooling (max/global/attenuation) and soft-max
+    quant  = the inserted quantize/dequantize overhead ops (Fig 4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from . import model
+
+GROUP1 = "group1"
+GROUP2 = "group2"
+QUANT = "quant"
+
+# op kind -> group (Fig 3 classification)
+KIND_GROUPS = {
+    "conv": GROUP1, "conv_q8": GROUP1, "relu": GROUP1, "concat": GROUP1,
+    "maxpool": GROUP2, "gap": GROUP2, "atten": GROUP2, "softmax": GROUP2,
+    "quantize": QUANT, "dequant_bias": QUANT,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One primitive op of the baseline graph.
+
+    inputs are producer op names, or the literal "input" for the image.
+    Shapes are batch-less (HWC, or (C,) after the pool); dtypes are the
+    edge dtypes ("f32" or "i8") the Rust registry must allocate.
+    """
+    index: int
+    name: str
+    kind: str
+    inputs: tuple[str, ...]
+    param_names: tuple[str, ...]
+    attrs: dict[str, Any]
+    in_shapes: tuple[tuple[int, ...], ...]
+    out_shape: tuple[int, ...]
+    in_dtypes: tuple[str, ...]
+    out_dtype: str
+
+    @property
+    def group(self) -> str:
+        return KIND_GROUPS[self.kind]
+
+
+class _Builder:
+    def __init__(self) -> None:
+        self.ops: list[OpSpec] = []
+        self.shapes: dict[str, tuple[int, ...]] = {}
+        self.dtypes: dict[str, str] = {}
+
+    def emit(self, name, kind, inputs, params=(), attrs=None, out_shape=None,
+             out_dtype="f32"):
+        attrs = attrs or {}
+        in_shapes = tuple(self.shapes[i] for i in inputs)
+        in_dtypes = tuple(self.dtypes[i] for i in inputs)
+        op = OpSpec(
+            index=len(self.ops), name=name, kind=kind, inputs=tuple(inputs),
+            param_names=tuple(params), attrs=attrs, in_shapes=in_shapes,
+            out_shape=tuple(out_shape), in_dtypes=in_dtypes,
+            out_dtype=out_dtype,
+        )
+        self.ops.append(op)
+        self.shapes[name] = tuple(out_shape)
+        self.dtypes[name] = out_dtype
+        return name
+
+
+def _conv_out_hw(h: int, k: int, stride: int, same: bool) -> int:
+    if same:
+        return -(-h // stride)
+    return (h - k) // stride + 1
+
+
+def _emit_conv(b: _Builder, name: str, src: str, wname: str, bname: str,
+               k: int, stride: int, same: bool, cout: int,
+               quant: bool) -> str:
+    """Emit a conv (+ separate relu) in fp32 or quantized form.
+
+    Returns the name of the post-ReLU op.
+    """
+    h, _, _ = b.shapes[src]
+    ho = _conv_out_hw(h, k, stride, same)
+    conv_attrs = {"k": k, "stride": stride,
+                  "padding": "SAME" if same else "VALID"}
+    if not quant:
+        b.emit(f"{name}", "conv", [src], [wname, bname], conv_attrs,
+               (ho, ho, cout))
+    else:
+        # Fig 4 graph surgery: quantize -> conv_q8(raw) -> dequant+bias.
+        # Scales are calibration outputs; aot.py injects the numeric values
+        # into attrs at lowering time (manifest carries them for Rust).
+        q = b.emit(f"{name}_quantize", "quantize", [src], [],
+                   {"scale_key": f"{name}:in"}, b.shapes[src], out_dtype="i8")
+        raw = b.emit(f"{name}_q8", "conv_q8", [q], [wname + "_q8"],
+                     {**conv_attrs, "w_scale_key": f"{name}:w"},
+                     (ho, ho, cout))
+        b.emit(f"{name}", "dequant_bias", [raw], [bname],
+               {"scale_key": f"{name}:deq"}, (ho, ho, cout))
+    return b.emit(f"{name}_relu", "relu", [name], [], {},
+                  b.shapes[name])
+
+
+def build_graph(quant: bool = False) -> list[OpSpec]:
+    """The SqueezeNet op graph a framework executes (fp32 or quantized)."""
+    b = _Builder()
+    b.shapes["input"] = (model.INPUT_HW, model.INPUT_HW, 3)
+    b.dtypes["input"] = "f32"
+
+    y = _emit_conv(b, "conv1", "input", "conv1_w", "conv1_b",
+                   k=7, stride=2, same=False, cout=96, quant=quant)
+    h = b.shapes[y][0]
+    hp = (h - 3) // 2 + 1
+    y = b.emit("pool1", "maxpool", [y], [], {"window": 3, "stride": 2},
+               (hp, hp, 96))
+
+    for f in model.FIRES:
+        s = _emit_conv(b, f"{f.name}_squeeze", y, f"{f.name}_sw",
+                       f"{f.name}_sb", k=1, stride=1, same=False,
+                       cout=f.squeeze, quant=quant)
+        e1 = _emit_conv(b, f"{f.name}_expand1", s, f"{f.name}_e1w",
+                        f"{f.name}_e1b", k=1, stride=1, same=False,
+                        cout=f.expand1, quant=quant)
+        e3 = _emit_conv(b, f"{f.name}_expand3", s, f"{f.name}_e3w",
+                        f"{f.name}_e3b", k=3, stride=1, same=True,
+                        cout=f.expand3, quant=quant)
+        h = b.shapes[e1][0]
+        y = b.emit(f"{f.name}_concat", "concat", [e1, e3], [], {},
+                   (h, h, f.cout))
+        if f.name in model.POOL_AFTER:
+            hp = (h - 3) // 2 + 1
+            y = b.emit(f"{f.name}_pool", "maxpool", [y], [],
+                       {"window": 3, "stride": 2}, (hp, hp, f.cout))
+
+    y = _emit_conv(b, "conv10", y, "conv10_w", "conv10_b", k=1, stride=1,
+                   same=False, cout=model.NUM_CLASSES, quant=quant)
+    y = b.emit("gap", "gap", [y], [], {"attenuation": 1.0},
+               (model.NUM_CLASSES,))
+    y = b.emit("atten", "atten", [y], [],
+               {"scale": model.ATTENUATION}, (model.NUM_CLASSES,))
+    b.emit("softmax", "softmax", [y], [], {}, (model.NUM_CLASSES,))
+    return b.ops
+
+
+def lower_fn(op: OpSpec, scales: dict[str, float] | None = None):
+    """Build the jax function for one op (lowered by aot.py).
+
+    Signature: fn(*params, x...) with params first (matches stage lowering).
+    `scales` supplies calibration values for quantized ops.
+    """
+    from . import kernels  # local import: keeps graph.py importable cheaply
+
+    k = op.kind
+    a = op.attrs
+    if k == "conv":
+        def fn(w, bias, x):
+            return kernels.conv2d(x, w, bias, stride=a["stride"],
+                                  padding=a["padding"])
+    elif k == "conv_q8":
+        w_scale = scales[a["w_scale_key"]]
+        del w_scale  # raw accumulate; scale applied by dequant_bias
+        def fn(wq, x):
+            return kernels.conv2d_q8(x, wq, None, 1.0, 1.0,
+                                     stride=a["stride"], padding=a["padding"])
+    elif k == "relu":
+        def fn(x):
+            return kernels.relu(x)
+    elif k == "maxpool":
+        def fn(x):
+            return kernels.maxpool2d(x, window=a["window"], stride=a["stride"])
+    elif k == "concat":
+        def fn(x, y):
+            return kernels.concat_channels(x, y)
+    elif k == "gap":
+        def fn(x):
+            return kernels.global_avgpool(x, attenuation=a["attenuation"])
+    elif k == "atten":
+        def fn(x):
+            return kernels.scale_mul(x, a["scale"])
+    elif k == "softmax":
+        def fn(x):
+            return kernels.softmax(x)
+    elif k == "quantize":
+        s = scales[a["scale_key"]]
+        def fn(x):
+            return kernels.quantize(x, s)
+    elif k == "dequant_bias":
+        s = scales[a["scale_key"]]
+        def fn(bias, x):
+            return kernels.dequant_bias(x, bias, s)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown op kind {k}")
+    return fn
+
+
+def graph_stats(ops: list[OpSpec]) -> dict[str, int]:
+    """Counts used by tests and DESIGN.md's inventory."""
+    out: dict[str, int] = {}
+    for op in ops:
+        out[op.kind] = out.get(op.kind, 0) + 1
+    out["total"] = len(ops)
+    return out
+
+
+def execute_graph(ops: list[OpSpec], params: dict, x,
+                  scales: dict[str, float] | None = None) -> dict[str, Any]:
+    """Reference interpreter for the op graph (pure-jnp oracle semantics).
+
+    Used to (a) sanity-check the graph wiring in pytest and (b) compute the
+    quantized-path goldens the Rust engine validates against.  Returns all
+    intermediate tensors keyed by op name.
+    """
+    import jax.numpy as jnp
+
+    from .kernels import ref
+
+    env: dict[str, Any] = {"input": x}
+    for op in ops:
+        ins = [env[i] for i in op.inputs]
+        a = op.attrs
+        if op.kind == "conv":
+            w, bias = params[op.param_names[0]], params[op.param_names[1]]
+            out = ref.conv2d(ins[0], w, bias, stride=a["stride"],
+                             padding=a["padding"])
+        elif op.kind == "conv_q8":
+            wq = params[op.param_names[0]]
+            out = ref.conv2d_q8(ins[0], wq, None, 1.0, 1.0,
+                                stride=a["stride"], padding=a["padding"])
+        elif op.kind == "relu":
+            out = ref.relu(ins[0])
+        elif op.kind == "maxpool":
+            out = ref.maxpool2d(ins[0], window=a["window"], stride=a["stride"])
+        elif op.kind == "concat":
+            out = jnp.concatenate(ins, axis=-1)
+        elif op.kind == "gap":
+            out = ref.global_avgpool(ins[0], attenuation=a["attenuation"])
+        elif op.kind == "atten":
+            out = ins[0] * a["scale"]
+        elif op.kind == "softmax":
+            out = ref.softmax(ins[0])
+        elif op.kind == "quantize":
+            out = ref.quantize(ins[0], scales[a["scale_key"]])
+        elif op.kind == "dequant_bias":
+            bias = params[op.param_names[0]]
+            out = ins[0] * scales[a["scale_key"]] + bias
+        else:  # pragma: no cover
+            raise ValueError(op.kind)
+        env[op.name] = out
+    return env

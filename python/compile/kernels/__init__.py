@@ -1,0 +1,25 @@
+"""L1 Pallas kernel library — the "ARM Compute Library" of this repro.
+
+Every operator the paper's engine uses, as a Pallas kernel with an exact
+pure-jnp oracle in `ref.py`:
+
+- conv:       `conv2d`, `pointwise_conv`
+- activation: `relu`, `softmax`, `concat_channels` (baseline-only)
+- pool:       `maxpool2d`, `global_avgpool` (w/ dropout attenuation)
+- fire:       `fire` (fused, concat-free — the paper's key trick)
+- quant:      `quantize`, `dequantize`, `conv2d_q8` (Fig 4 substrate)
+"""
+
+from .activation import concat_channels, relu, scale_mul, softmax
+from .conv import conv2d, pointwise_conv
+from .fire import fire
+from .pool import global_avgpool, maxpool2d
+from .quant import conv2d_q8, dequant_bias, dequantize, quantize
+
+__all__ = [
+    "concat_channels", "relu", "scale_mul", "softmax",
+    "conv2d", "pointwise_conv",
+    "fire",
+    "global_avgpool", "maxpool2d",
+    "conv2d_q8", "dequant_bias", "dequantize", "quantize",
+]

@@ -1,0 +1,124 @@
+"""Pallas activation kernels ("ACL Activation" + "ACL Soft-Max").
+
+* `relu` — standalone elementwise ReLU.  The fused conv path folds ReLU
+  into the conv kernel; this op exists for the op-by-op baseline graph,
+  where TensorFlow-style engines dispatch it separately (that separate
+  dispatch is part of what Fig 3 group 1 measures).
+* `softmax` — row-tiled numerically-stable softmax, the network's output
+  operator (Fig 3 group 2).
+* `concat_channels` — explicit channel concatenation as a copy kernel.
+  ACL does not need it (the fused fire kernel writes into channel slices);
+  the baseline graph *does*, and E6 (concat_ablation) measures exactly
+  this copy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def relu(x: jax.Array, *, row_tile: int | None = None) -> jax.Array:
+    """Elementwise ReLU over an array of any rank (flattened row-tiled)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    tm = min(row_tile or common.round_up(1 << 16, common.MXU_TILE), m)
+    n_tiles = common.ceil_div(m, tm)
+    out = pl.pallas_call(
+        _relu_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tm,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    """Stable softmax along the last axis of a 2-D (N, C) array."""
+    assert x.ndim == 2, f"softmax expects (N, C), got {x.shape}"
+    n, c = x.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _concat_kernel(a_ref, b_ref, o_ref, *, ca):
+    """Explicit copy of both inputs into the output's channel slices."""
+    o_ref[0, :, :, :ca] = a_ref[0]
+    o_ref[0, :, :, ca:] = b_ref[0]
+
+
+def concat_channels(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Channel concat as an explicit materializing copy (baseline op).
+
+    The paper's from-scratch engine eliminates this operator entirely; it
+    exists here so the TF-baseline graph pays the same copy TensorFlow's
+    generic concat pays.
+    """
+    common.assert_nhwc(a)
+    common.assert_nhwc(b)
+    n, h, w, ca = a.shape
+    nb, hb, wb, cb = b.shape
+    assert (n, h, w) == (nb, hb, wb), (a.shape, b.shape)
+    return pl.pallas_call(
+        functools.partial(_concat_kernel, ca=ca),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, ca), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, w, cb), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, ca + cb), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, ca + cb), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _scale_kernel(x_ref, o_ref, *, c):
+    o_ref[...] = x_ref[...] * c
+
+
+def scale_mul(x: jax.Array, c: float, *, row_tile: int | None = None) -> jax.Array:
+    """Elementwise multiply by a compile-time constant.
+
+    The baseline graph's standalone "attenuation" op: a framework keeps the
+    dropout-compensation scale as its own node; the ACL engine folds it into
+    the global-pool kernel (pool.py).  E5/dispatch_overhead measures the
+    difference.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    tm = min(row_tile or (1 << 16), m)
+    out = pl.pallas_call(
+        functools.partial(_scale_kernel, c=c),
+        grid=(common.ceil_div(m, tm),),
+        in_specs=[pl.BlockSpec((tm,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)

@@ -1,0 +1,100 @@
+"""Shared tiling / padding helpers for the Pallas kernel library.
+
+Hardware-adaptation note (DESIGN.md §Hardware-Adaptation): the paper's ACL
+operators are NEON-intrinsic loops streaming rows through 128-bit vector
+registers.  The TPU-shaped equivalent is: tile the output height, stream the
+halo'd input rows HBM→VMEM per grid step, and shape the inner loop as an
+`(M, K) x (K, N)` matmul for the MXU.  All kernels here follow that scheme;
+`vmem_bytes_*` helpers compute the per-step footprint so DESIGN.md §Perf can
+check it against the 16 MiB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# TPU-v4-ish VMEM budget we tile against (bytes).
+VMEM_BUDGET = 16 * 1024 * 1024
+
+# MXU native tile (rows x cols for f32/bf16 operands).
+MXU_TILE = 128
+
+
+def ceil_div(a: int, b: int) -> int:
+    """Ceiling division (python ints)."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round `a` up to a multiple of `b`."""
+    return ceil_div(a, b) * b
+
+
+def conv_out_dim(size: int, k: int, stride: int, pad: int) -> int:
+    """Output spatial size of a conv/pool with symmetric padding `pad`."""
+    return (size + 2 * pad - k) // stride + 1
+
+
+def resolve_padding(padding: str | int, k: int) -> tuple[int, int]:
+    """Normalize a padding spec to (lo, hi) pad counts.
+
+    "SAME" here means the SqueezeNet usage: stride-1 SAME for odd k, i.e.
+    symmetric (k-1)//2 / k-1-(k-1)//2.
+    """
+    if isinstance(padding, int):
+        return padding, padding
+    if padding == "VALID":
+        return 0, 0
+    if padding == "SAME":
+        p = (k - 1) // 2
+        return p, k - 1 - p
+    raise ValueError(f"bad padding {padding!r}")
+
+
+def pick_row_tile(h_out: int, w_out: int, cout: int, target_rows: int = 8) -> int:
+    """Pick the output-row tile height TH.
+
+    Heuristic: `target_rows` rows per grid step unless the output is small,
+    in which case take it whole.  TH only shapes the HBM→VMEM schedule; it
+    never affects numerics (tests sweep TH explicitly to prove that).
+    """
+    del w_out, cout  # shape-only heuristic today; kept for tuning hooks
+    return min(target_rows, h_out) if h_out > 0 else 1
+
+
+def vmem_bytes_conv(
+    th: int, w_in: int, cin: int, k: int, stride: int, w_out: int, cout: int,
+    dtype_bytes: int = 4,
+) -> int:
+    """Per-grid-step VMEM footprint of the conv kernel.
+
+    input tile rows + full weights + bias + output tile + accumulator.
+    """
+    rows_in = (th - 1) * stride + k
+    x_tile = rows_in * w_in * cin
+    w_full = k * k * cin * cout
+    out_tile = th * w_out * cout
+    return (x_tile + w_full + cout + 2 * out_tile) * dtype_bytes
+
+
+def pad_rows_for_tiles(h_in: int, n_tiles: int, th: int, stride: int, k: int) -> int:
+    """Input rows needed so every grid step can load a full halo'd tile.
+
+    The last (ragged) output tile still issues a full-height load; we
+    zero-pad the input so that load stays in bounds.  Zero rows only feed
+    output rows that the ragged write drops, so numerics are unaffected.
+    """
+    need = (n_tiles - 1) * th * stride + (th - 1) * stride + k
+    return max(0, need - h_in)
+
+
+def masked_rows(jnp_mod, rows: int, valid_lo: int, valid_hi: int):
+    """Row-validity mask of shape (rows, 1, 1): valid_lo <= r < valid_hi."""
+    r = jnp_mod.arange(rows).reshape(rows, 1, 1)
+    return (r >= valid_lo) & (r < valid_hi)
+
+
+def assert_nhwc(x: jnp.ndarray, name: str = "x") -> None:
+    """Guard: kernels are NHWC-only."""
+    if x.ndim != 4:
+        raise ValueError(f"{name} must be NHWC (4-D), got shape {x.shape}")

@@ -1,0 +1,193 @@
+"""Pallas convolution kernels (the "ACL Convolution" building block).
+
+Two kernels:
+
+* `conv2d` — generic KxK strided conv as a *shifted matmul*: the output
+  tile is accumulated as `sum_{di,dj} X[di::s, dj::s, :] @ W[di, dj]`.
+  Each of the KxK partial products is an `(TH*W_out, Cin) x (Cin, Cout)`
+  matmul, which is exactly the MXU-shaped inner loop the paper's NEON
+  GEMM-based conv uses (im2col without materializing the im2col buffer).
+
+* `pointwise_conv` — the 1x1 special case as a flat row-tiled matmul.
+  SqueezeNet is dominated by 1x1 convs (squeeze + expand1x1 + conv10), so
+  this path matters most; it skips halo logic entirely.
+
+Grid/BlockSpec scheme (see common.py): grid = (N, ceil(H_out/TH)); the
+input block is the whole (padded) image for that batch element and the
+kernel slices its halo'd row window with `pl.dynamic_slice` — this models
+the HBM→VMEM row-streaming schedule; the output block is the (1, TH,
+W_out, Cout) tile.
+
+All kernels run `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness vs `ref.py` is the contract, and §Perf reasons
+about VMEM/MXU structure instead of interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+# ---------------------------------------------------------------------------
+# Generic KxK conv
+# ---------------------------------------------------------------------------
+
+def _conv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, th, stride, k, w_out,
+                   activation):
+    """One grid step: compute a (TH, W_out, Cout) output tile."""
+    h = pl.program_id(1)
+    row0 = h * th * stride
+    rows_in = (th - 1) * stride + k
+
+    # Halo'd input rows for this tile (modelled VMEM load).
+    x_tile = pl.load(
+        x_ref,
+        (0, pl.dslice(row0, rows_in), slice(None), slice(None)),
+    )  # (rows_in, W_pad, Cin)
+
+    cin = x_tile.shape[-1]
+    cout = o_ref.shape[-1]
+    acc = jnp.zeros((th * w_out, cout), dtype=jnp.float32)
+    # KxK shifted matmuls, statically unrolled.
+    for di in range(k):
+        for dj in range(k):
+            patch = jax.lax.slice(
+                x_tile,
+                (di, dj, 0),
+                (di + (th - 1) * stride + 1,
+                 dj + (w_out - 1) * stride + 1,
+                 cin),
+                (stride, stride, 1),
+            )  # (TH, W_out, Cin)
+            acc = acc + jnp.dot(
+                patch.reshape(th * w_out, cin),
+                w_ref[di, dj],
+                preferred_element_type=jnp.float32,
+            )
+
+    out = acc.reshape(th, w_out, cout) + b_ref[...]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str | int = "VALID",
+    activation: str | None = None,
+    row_tile: int | None = None,
+) -> jax.Array:
+    """KxK conv, NHWC x (K,K,Cin,Cout) [+bias] [+relu] -> NHWC.
+
+    `row_tile` overrides the output-row tile height TH (tests sweep it to
+    prove tiling never changes numerics).
+    """
+    common.assert_nhwc(x)
+    n, h_in, w_in, cin = x.shape
+    k, k2, wcin, cout = w.shape
+    assert k == k2 and wcin == cin, (w.shape, x.shape)
+    if b is None:
+        b = jnp.zeros((cout,), dtype=x.dtype)
+
+    plo, phi = common.resolve_padding(padding, k)
+    h_out = common.conv_out_dim(h_in, k, stride, 0) if (plo, phi) == (0, 0) \
+        else (h_in + plo + phi - k) // stride + 1
+    w_out = (w_in + plo + phi - k) // stride + 1
+    if h_out <= 0 or w_out <= 0:
+        raise ValueError(f"conv output empty: in={x.shape} k={k} s={stride}")
+
+    th = row_tile or common.pick_row_tile(h_out, w_out, cout)
+    th = min(th, h_out)
+    n_tiles = common.ceil_div(h_out, th)
+
+    # Spatial padding + bottom tile-safety padding (zeros feed only rows the
+    # ragged output tile drops — see common.pad_rows_for_tiles).
+    extra = common.pad_rows_for_tiles(h_in + plo + phi, n_tiles, th, stride, k)
+    xp = jnp.pad(x, ((0, 0), (plo, phi + extra), (plo, phi), (0, 0)))
+    h_pad, w_pad = xp.shape[1], xp.shape[2]
+
+    kern = functools.partial(
+        _conv2d_kernel, th=th, stride=stride, k=k, w_out=w_out,
+        activation=activation,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w_pad, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, cin, cout), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w_out, cout), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), x.dtype),
+        interpret=True,
+    )(xp, w, b)
+
+
+# ---------------------------------------------------------------------------
+# 1x1 conv (flat matmul)
+# ---------------------------------------------------------------------------
+
+def _pointwise_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """One grid step: (TM, Cin) x (Cin, Cout) tile matmul."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    out = acc + b_ref[...]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def pointwise_conv(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+    row_tile: int | None = None,
+) -> jax.Array:
+    """1x1 conv as a row-tiled matmul over the flattened spatial axes.
+
+    VMEM per step: TM*Cin + Cin*Cout + TM*Cout floats; TM defaults to the
+    largest multiple of the MXU tile that fits the budget.
+    """
+    common.assert_nhwc(x)
+    if w.ndim == 4:
+        assert w.shape[:2] == (1, 1), w.shape
+        w = w[0, 0]
+    cin, cout = w.shape
+    n, h, ww, xc = x.shape
+    assert xc == cin, (x.shape, w.shape)
+    if b is None:
+        b = jnp.zeros((cout,), dtype=x.dtype)
+
+    m = n * h * ww
+    xm = x.reshape(m, cin)
+    tm = row_tile or min(m, common.round_up(
+        max(1, common.VMEM_BUDGET // (4 * max(1, (cin + cout)) * 4)),
+        common.MXU_TILE))
+    tm = min(tm, m)
+    n_tiles = common.ceil_div(m, tm)
+
+    out = pl.pallas_call(
+        functools.partial(_pointwise_kernel, activation=activation),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tm, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, cout), x.dtype),
+        interpret=True,
+    )(xm, w, b)
+    return out.reshape(n, h, ww, cout)

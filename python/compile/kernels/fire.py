@@ -1,0 +1,147 @@
+"""Fused fire-module Pallas kernel — the heart of the paper's engine.
+
+SqueezeNet's fire module (paper Figure 1) is:
+
+    squeeze 1x1 conv + ReLU
+      -> expand 1x1 conv + ReLU   \
+      -> expand 3x3 conv + ReLU   /  channel concat
+
+A framework executes this as five ops plus a `concatenate` that copies
+both expand outputs into a fresh buffer.  The paper's ACL engine "eliminates
+the need for extra memory copy otherwise needed for concatenation" — it
+writes each expand branch directly into its channel slice of the shared
+output buffer.  This kernel reproduces that: one `pallas_call` computes the
+whole module and writes `o_ref[..., :E1]` / `o_ref[..., E1:]` without any
+concat op existing in the lowered HLO.
+
+Tiling: grid = (N, ceil(H/TH)).  The expand-3x3 branch needs a one-row halo
+of *squeeze* output, so each grid step computes squeeze on TH+2 input rows
+(edge rows masked to zero — squeezing a zero-padded input row would give
+relu(bias) != 0 and corrupt the edge, so masking is done *after* the
+squeeze, not by padding the input).  W is zero-padded inside the kernel for
+the SAME 3x3.
+
+VMEM per step (floats): (TH+2)*W*Cin   input rows
+                      + Cin*S + 3*3*S*E3 + S*E1   weights
+                      + (TH+2)*(W+2)*S            squeeze scratch
+                      + TH*W*(E1+E3)              output tile
+For the largest fire (fire8: W=27, Cin=512, S=64, E=256) at TH=8 this is
+~1.1 MiB — comfortably inside the 16 MiB budget (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _fire_kernel(x_ref, ws_ref, bs_ref, w1_ref, b1_ref, w3_ref, b3_ref,
+                 o_ref, *, th, h, e1):
+    """One grid step: TH output rows of a full fire module."""
+    t = pl.program_id(1)
+    row0 = t * th  # first output row of this tile
+
+    # ---- squeeze on TH+2 rows centred on the tile (halo for the 3x3) ----
+    # Loaded window starts one row above the tile; the input was pre-padded
+    # by one zero row on top, so ref row (row0) == image row (row0 - 1).
+    x_tile = pl.load(
+        x_ref, (0, pl.dslice(row0, th + 2), slice(None), slice(None))
+    )  # (TH+2, W, Cin)
+    w = x_tile.shape[1]
+    cin = x_tile.shape[2]
+    s_ch = ws_ref.shape[-1]
+
+    sq = jnp.dot(
+        x_tile.reshape((th + 2) * w, cin),
+        ws_ref[...],
+        preferred_element_type=jnp.float32,
+    ).reshape(th + 2, w, s_ch) + bs_ref[...]
+    sq = jnp.maximum(sq, 0.0)
+
+    # Mask halo rows that fall outside the real image: global squeeze row
+    # index of local row r is (row0 - 1 + r); valid iff 0 <= it < H.
+    gr = row0 - 1 + jnp.arange(th + 2).reshape(th + 2, 1, 1)
+    sq = jnp.where((gr >= 0) & (gr < h), sq, 0.0)
+
+    # ---- expand 1x1 on the middle TH rows -> channels [0, E1) ----
+    mid = jax.lax.slice(sq, (1, 0, 0), (1 + th, w, s_ch))
+    exp1 = jnp.dot(
+        mid.reshape(th * w, s_ch), w1_ref[...],
+        preferred_element_type=jnp.float32,
+    ).reshape(th, w, e1) + b1_ref[...]
+    exp1 = jnp.maximum(exp1, 0.0)
+
+    # ---- expand 3x3 (SAME) on the halo'd squeeze -> channels [E1, end) ----
+    sqp = jnp.pad(sq, ((0, 0), (1, 1), (0, 0)))  # zero-pad W for SAME
+    e3 = w3_ref.shape[-1]
+    acc = jnp.zeros((th * w, e3), dtype=jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            patch = jax.lax.slice(
+                sqp, (di, dj, 0), (di + th, dj + w, s_ch)
+            )  # (TH, W, S)
+            acc = acc + jnp.dot(
+                patch.reshape(th * w, s_ch), w3_ref[di, dj],
+                preferred_element_type=jnp.float32,
+            )
+    exp3 = jnp.maximum(acc.reshape(th, w, e3) + b3_ref[...], 0.0)
+
+    # ---- concat-free writes into channel slices of the shared buffer ----
+    o_ref[0, :, :, :e1] = exp1.astype(o_ref.dtype)
+    o_ref[0, :, :, e1:] = exp3.astype(o_ref.dtype)
+
+
+def fire(
+    x: jax.Array,
+    ws: jax.Array, bs: jax.Array,
+    w1: jax.Array, b1: jax.Array,
+    w3: jax.Array, b3: jax.Array,
+    *,
+    row_tile: int | None = None,
+) -> jax.Array:
+    """Fused SqueezeNet fire module (squeeze+expand+implicit concat).
+
+    Shapes: x (N,H,W,Cin); ws (1,1,Cin,S) or (Cin,S); w1 (1,1,S,E1) or
+    (S,E1); w3 (3,3,S,E3).  Output (N,H,W,E1+E3).
+    """
+    common.assert_nhwc(x)
+    if ws.ndim == 4:
+        ws = ws[0, 0]
+    if w1.ndim == 4:
+        w1 = w1[0, 0]
+    n, h, w, cin = x.shape
+    s_ch = ws.shape[-1]
+    e1 = w1.shape[-1]
+    e3 = w3.shape[-1]
+    assert ws.shape == (cin, s_ch), (ws.shape, cin)
+    assert w3.shape == (3, 3, s_ch, e3), w3.shape
+
+    th = min(row_tile or common.pick_row_tile(h, w, e1 + e3), h)
+    n_tiles = common.ceil_div(h, th)
+    # One zero row on top (halo offset) + tile-safety rows at the bottom:
+    # the last tile loads rows [row0, row0 + TH + 2).
+    need = (n_tiles - 1) * th + th + 2
+    xp = jnp.pad(x, ((0, 0), (1, max(0, need - (h + 1))), (0, 0), (0, 0)))
+    h_pad = xp.shape[1]
+
+    return pl.pallas_call(
+        functools.partial(_fire_kernel, th=th, h=h, e1=e1),
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((cin, s_ch), lambda i, j: (0, 0)),
+            pl.BlockSpec((s_ch,), lambda i, j: (0,)),
+            pl.BlockSpec((s_ch, e1), lambda i, j: (0, 0)),
+            pl.BlockSpec((e1,), lambda i, j: (0,)),
+            pl.BlockSpec((3, 3, s_ch, e3), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((e3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w, e1 + e3), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, e1 + e3), x.dtype),
+        interpret=True,
+    )(xp, ws, bs, w1, b1, w3, b3)

@@ -1,0 +1,113 @@
+"""Pallas pooling kernels ("ACL Pooling" + the paper's hand-rolled ops).
+
+* `maxpool2d` — VALID KxK/stride-S max pool with the same row-tiled
+  halo-load schedule as conv (shifted max instead of shifted matmul).
+* `global_avgpool` — global average pool with an attenuation coefficient.
+  ACL had no global pooling; the paper implemented it from scratch and
+  folded the removed dropout layer into an attenuation coefficient applied
+  after pool10.  We reproduce exactly that operator.
+
+Pool padding uses -inf (not 0) for the tile-safety rows so ragged tiles
+can never leak padded values into a max.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _maxpool_kernel(x_ref, o_ref, *, th, stride, k, w_out):
+    """One grid step: (TH, W_out, C) max-pool tile via shifted max."""
+    h = pl.program_id(1)
+    row0 = h * th * stride
+    rows_in = (th - 1) * stride + k
+    x_tile = pl.load(
+        x_ref, (0, pl.dslice(row0, rows_in), slice(None), slice(None))
+    )  # (rows_in, W_in, C)
+
+    c = x_tile.shape[-1]
+    out = jnp.full((th, w_out, c), -jnp.inf, dtype=jnp.float32)
+    for di in range(k):
+        for dj in range(k):
+            patch = jax.lax.slice(
+                x_tile,
+                (di, dj, 0),
+                (di + (th - 1) * stride + 1,
+                 dj + (w_out - 1) * stride + 1,
+                 c),
+                (stride, stride, 1),
+            )
+            out = jnp.maximum(out, patch.astype(jnp.float32))
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def maxpool2d(
+    x: jax.Array,
+    *,
+    window: int = 3,
+    stride: int = 2,
+    row_tile: int | None = None,
+) -> jax.Array:
+    """VALID max pool, NHWC.  SqueezeNet uses 3x3/s2 everywhere."""
+    common.assert_nhwc(x)
+    n, h_in, w_in, c = x.shape
+    k = window
+    h_out = common.conv_out_dim(h_in, k, stride, 0)
+    w_out = common.conv_out_dim(w_in, k, stride, 0)
+    if h_out <= 0 or w_out <= 0:
+        raise ValueError(f"pool output empty: in={x.shape} k={k} s={stride}")
+
+    th = min(row_tile or common.pick_row_tile(h_out, w_out, c), h_out)
+    n_tiles = common.ceil_div(h_out, th)
+    extra = common.pad_rows_for_tiles(h_in, n_tiles, th, stride, k)
+    # -inf padding: ragged-tile max can never see it as a winner.
+    xp = jnp.pad(x, ((0, 0), (0, extra), (0, 0), (0, 0)),
+                 constant_values=-jnp.inf)
+    h_pad = xp.shape[1]
+
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, th=th, stride=stride, k=k,
+                          w_out=w_out),
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w_in, c), lambda i, j: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w_out, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x.dtype),
+        interpret=True,
+    )(xp)
+
+
+def _gap_kernel(x_ref, o_ref, *, attenuation, hw):
+    """One grid step: one batch element's global average pool."""
+    x = x_ref[0]  # (H, W, C)
+    s = jnp.sum(x.astype(jnp.float32), axis=(0, 1))
+    o_ref[0] = (s * (attenuation / hw)).astype(o_ref.dtype)
+
+
+def global_avgpool(
+    x: jax.Array,
+    *,
+    attenuation: float = 1.0,
+) -> jax.Array:
+    """Global average pool + attenuation coefficient, NHWC -> NC.
+
+    `attenuation` reproduces the paper's dropout compensation (the dropout
+    layer is deleted for inference; its expected scaling is folded in here).
+    """
+    common.assert_nhwc(x)
+    n, h, w, c = x.shape
+    return pl.pallas_call(
+        functools.partial(_gap_kernel, attenuation=attenuation, hw=float(h * w)),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,193 @@
+"""Pallas int8 quantization kernels (the Fig 4 substrate).
+
+The paper's Fig 4 experiment applies "vector quantization" [Han et al.] to
+TensorFlow's convolutions: 8-bit weights let NEON process 4x more lanes per
+instruction, making conv ~25% faster, but every quantized op needs
+re-quantize / de-quantize steps whose cost exceeds the win — end-to-end
+inference gets >100 ms slower.
+
+We reproduce the *structure* exactly:
+
+* `quantize`   — f32 -> int8 (symmetric per-tensor scale), an explicit op.
+* `dequantize` — int8/int32 -> f32, an explicit op.
+* `conv2d_q8`  — shifted-matmul conv on int8 operands accumulating in
+  int32, then rescaling.  Same schedule as conv.py but the MXU-shaped
+  inner matmul runs on 8-bit data (on a real TPU this is the int8 MXU
+  path with 4x the f32 throughput — DESIGN.md §Hardware-Adaptation).
+
+Hardware note: under CPU-PJRT the int8 dot gains little, so the Fig 4
+bench reports both the measured ratio and the paper-scaled ratio (NEON
+8-bit SIMD width modelled as 1.25x conv speedup, the paper's own number).
+The *overhead* side (quantize/requantize/dequantize ops) is fully measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _quantize_kernel(x_ref, o_ref, *, inv_scale):
+    q = jnp.clip(jnp.round(x_ref[...] * inv_scale), -127.0, 127.0)
+    o_ref[...] = q.astype(jnp.int8)
+
+
+def quantize(x: jax.Array, scale: float, *, row_tile: int | None = None) -> jax.Array:
+    """f32 -> int8 with symmetric per-tensor scale (explicit op)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    tm = min(row_tile or (1 << 16), m)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, inv_scale=1.0 / scale),
+        grid=(common.ceil_div(m, tm),),
+        in_specs=[pl.BlockSpec((tm,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int8),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)
+
+
+def _dequantize_kernel(q_ref, o_ref, *, scale):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * scale
+
+
+def dequantize(q: jax.Array, scale: float, *, row_tile: int | None = None) -> jax.Array:
+    """int8/int32 -> f32 (explicit op)."""
+    shape = q.shape
+    flat = q.reshape(-1)
+    m = flat.shape[0]
+    tm = min(row_tile or (1 << 16), m)
+    out = pl.pallas_call(
+        functools.partial(_dequantize_kernel, scale=scale),
+        grid=(common.ceil_div(m, tm),),
+        in_specs=[pl.BlockSpec((tm,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)
+
+
+def _conv2d_q8_kernel(x_ref, w_ref, b_ref, o_ref, *, th, stride, k, w_out,
+                      rescale, activation):
+    """Int8 shifted-matmul conv tile with int32 accumulation."""
+    hgrid = pl.program_id(1)
+    row0 = hgrid * th * stride
+    rows_in = (th - 1) * stride + k
+    x_tile = pl.load(
+        x_ref, (0, pl.dslice(row0, rows_in), slice(None), slice(None))
+    )  # (rows_in, W_pad, Cin) int8
+
+    cin = x_tile.shape[-1]
+    cout = o_ref.shape[-1]
+    acc = jnp.zeros((th * w_out, cout), dtype=jnp.int32)
+    for di in range(k):
+        for dj in range(k):
+            patch = jax.lax.slice(
+                x_tile,
+                (di, dj, 0),
+                (di + (th - 1) * stride + 1,
+                 dj + (w_out - 1) * stride + 1,
+                 cin),
+                (stride, stride, 1),
+            )
+            acc = acc + jax.lax.dot_general(
+                patch.reshape(th * w_out, cin),
+                w_ref[di, dj],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+    out = acc.astype(jnp.float32) * rescale + b_ref[...]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = out.reshape(th, w_out, cout).astype(o_ref.dtype)
+
+
+def conv2d_q8(
+    xq: jax.Array,
+    wq: jax.Array,
+    b: jax.Array | None,
+    x_scale: float,
+    w_scale: float,
+    *,
+    stride: int = 1,
+    padding: str | int = "VALID",
+    activation: str | None = None,
+    row_tile: int | None = None,
+) -> jax.Array:
+    """Quantized KxK conv: int8 NHWC x int8 (K,K,Cin,Cout) -> f32 NHWC."""
+    common.assert_nhwc(xq)
+    assert xq.dtype == jnp.int8 and wq.dtype == jnp.int8, (xq.dtype, wq.dtype)
+    n, h_in, w_in, cin = xq.shape
+    k, _, _, cout = wq.shape
+    if b is None:
+        b = jnp.zeros((cout,), dtype=jnp.float32)
+
+    plo, phi = common.resolve_padding(padding, k)
+    h_out = (h_in + plo + phi - k) // stride + 1
+    w_out = (w_in + plo + phi - k) // stride + 1
+    th = min(row_tile or common.pick_row_tile(h_out, w_out, cout), h_out)
+    n_tiles = common.ceil_div(h_out, th)
+    extra = common.pad_rows_for_tiles(h_in + plo + phi, n_tiles, th, stride, k)
+    xp = jnp.pad(xq, ((0, 0), (plo, phi + extra), (plo, phi), (0, 0)))
+    h_pad, w_pad = xp.shape[1], xp.shape[2]
+
+    return pl.pallas_call(
+        functools.partial(
+            _conv2d_q8_kernel, th=th, stride=stride, k=k, w_out=w_out,
+            rescale=x_scale * w_scale, activation=activation,
+        ),
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w_pad, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, cin, cout), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w_out, cout), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.float32),
+        interpret=True,
+    )(xp, wq, b)
+
+
+def _dequant_bias_kernel(x_ref, b_ref, o_ref, *, scale, activation):
+    out = x_ref[...] * scale + b_ref[...]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def dequant_bias(
+    acc: jax.Array,
+    b: jax.Array,
+    scale: float,
+    *,
+    activation: str | None = None,
+) -> jax.Array:
+    """De-quantize a raw conv accumulator and add the f32 bias.
+
+    This is the explicit "de-quantize" node of the paper's Fig 4 graph:
+    `out = acc * (x_scale*w_scale) + bias`, channelwise bias over NHWC.
+    Kept as its own op (not fused into conv_q8) so the overhead the paper
+    blames for the slowdown is separately schedulable and measurable.
+    """
+    common.assert_nhwc(acc)
+    n, h, w, c = acc.shape
+    return pl.pallas_call(
+        functools.partial(_dequant_bias_kernel, scale=scale,
+                          activation=activation),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), jnp.float32),
+        interpret=True,
+    )(acc, b)

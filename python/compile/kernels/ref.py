@@ -1,0 +1,237 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+This module is the correctness contract of the kernel library ("ACL" layer):
+each Pallas kernel in this package has an exact pure-`jax.numpy` twin here,
+written with maximal clarity and zero performance tricks.  `python/tests/`
+sweeps shapes and dtypes with hypothesis and asserts `allclose` between the
+Pallas kernel (interpret=True) and these functions.
+
+Layout convention: NHWC everywhere (the paper's ACL engine is also
+channels-last on NEON).  Weights for a KxK conv are `(K, K, Cin, Cout)`;
+biases are `(Cout,)`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / activation
+# ---------------------------------------------------------------------------
+
+def relu(x: jax.Array) -> jax.Array:
+    """Rectified linear unit."""
+    return jnp.maximum(x, 0.0)
+
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically stable softmax along `axis`."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Convolution
+# ---------------------------------------------------------------------------
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str | int = "VALID",
+    activation: str | None = None,
+) -> jax.Array:
+    """2-D convolution, NHWC x (K,K,Cin,Cout) -> NHWC.
+
+    `padding` is "VALID", "SAME", or an explicit symmetric pad count.
+    `activation` is None or "relu" (the only activation SqueezeNet uses).
+    """
+    if isinstance(padding, int):
+        pad = ((padding, padding), (padding, padding))
+    elif padding == "SAME":
+        k = w.shape[0]
+        p = (k - 1) // 2
+        pr = k - 1 - p
+        pad = ((p, pr), (p, pr))
+    elif padding == "VALID":
+        pad = ((0, 0), (0, 0))
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"bad padding {padding!r}")
+
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = relu(out)
+    elif activation is not None:  # pragma: no cover
+        raise ValueError(f"bad activation {activation!r}")
+    return out
+
+
+def pointwise_conv(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+) -> jax.Array:
+    """1x1 convolution as an explicit matmul over the channel axis.
+
+    `w` is `(1, 1, Cin, Cout)` or `(Cin, Cout)`.
+    """
+    if w.ndim == 4:
+        w = w[0, 0]
+    out = jnp.einsum("nhwc,cd->nhwd", x, w)
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = relu(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pooling
+# ---------------------------------------------------------------------------
+
+def maxpool2d(x: jax.Array, *, window: int = 3, stride: int = 2) -> jax.Array:
+    """VALID max-pooling, NHWC."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def global_avgpool(x: jax.Array, *, attenuation: float = 1.0) -> jax.Array:
+    """Global average pool over H and W, times an attenuation coefficient.
+
+    The attenuation coefficient reproduces the paper's dropout substitution:
+    dropout is removed at inference and compensated by scaling the pooled
+    activations (Section "Building Inference Engine with the ARM Compute
+    Library", Figure 2 discussion).
+    """
+    return jnp.mean(x, axis=(1, 2)) * attenuation
+
+
+# ---------------------------------------------------------------------------
+# Fire module (SqueezeNet)
+# ---------------------------------------------------------------------------
+
+def fire(
+    x: jax.Array,
+    ws: jax.Array,
+    bs: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w3: jax.Array,
+    b3: jax.Array,
+) -> jax.Array:
+    """SqueezeNet fire module: squeeze 1x1 -> ReLU -> {expand 1x1, expand 3x3
+    (SAME)} -> ReLU -> channel concat.
+
+    This reference version *does* use an explicit `concatenate`; the Pallas
+    kernel's whole point (and the paper's) is to avoid that copy by writing
+    the two expand branches into disjoint channel slices of one buffer.
+    """
+    s = conv2d(x, ws, bs, activation="relu")
+    e1 = conv2d(s, w1, b1, activation="relu")
+    e3 = conv2d(s, w3, b3, padding="SAME", activation="relu")
+    return jnp.concatenate([e1, e3], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (Fig 4 substrate)
+# ---------------------------------------------------------------------------
+
+def quant_scale(x: jax.Array | np.ndarray) -> float:
+    """Symmetric per-tensor int8 scale: max(|x|) / 127."""
+    m = float(jnp.max(jnp.abs(x)))
+    return m / 127.0 if m > 0 else 1.0
+
+
+def quantize(x: jax.Array, scale: float) -> jax.Array:
+    """f32 -> int8 with symmetric scale (round-to-nearest-even, clipped)."""
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: float) -> jax.Array:
+    """int8/int32 -> f32."""
+    return q.astype(jnp.float32) * scale
+
+
+def conv2d_q8(
+    xq: jax.Array,
+    wq: jax.Array,
+    b: jax.Array | None,
+    x_scale: float,
+    w_scale: float,
+    *,
+    stride: int = 1,
+    padding: str | int = "VALID",
+    activation: str | None = None,
+) -> jax.Array:
+    """Quantized conv: int8 x int8 -> int32 accumulate -> rescale to f32.
+
+    Mirrors the paper's "vector quantization" TensorFlow experiment: the
+    conv itself runs on 8-bit data, but a de-quantize (rescale) step is
+    required on the way out — the overhead Fig 4 measures.
+    """
+    if isinstance(padding, int):
+        pad = ((padding, padding), (padding, padding))
+    elif padding == "SAME":
+        k = wq.shape[0]
+        p = (k - 1) // 2
+        pad = ((p, k - 1 - p), (p, k - 1 - p))
+    else:
+        pad = ((0, 0), (0, 0))
+    acc = jax.lax.conv_general_dilated(
+        xq.astype(jnp.int32),
+        wq.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * (x_scale * w_scale)
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = relu(out)
+    return out
+
+
+def fire_q8(x, ws, bs, w1, b1, w3, b3, scales):
+    """Quantized fire module: quantize -> q8 convs -> dequantized f32 out.
+
+    `scales` maps tensor-name -> symmetric int8 scale; see
+    python/compile/quantize.py for calibration.  Activations are re-quantized
+    between the squeeze and expand stages — exactly the re-quantize overhead
+    the paper attributes the Fig 4 slowdown to.
+    """
+    xs = scales["x"]
+    xq = quantize(x, xs)
+    s = conv2d_q8(xq, quantize(ws, scales["ws"]), bs, xs, scales["ws"],
+                  activation="relu")
+    ss = scales["s"]
+    sq = quantize(s, ss)
+    e1 = conv2d_q8(sq, quantize(w1, scales["w1"]), b1, ss, scales["w1"],
+                   activation="relu")
+    e3 = conv2d_q8(sq, quantize(w3, scales["w3"]), b3, ss, scales["w3"],
+                   padding="SAME", activation="relu")
+    return jnp.concatenate([e1, e3], axis=-1)

@@ -1,0 +1,346 @@
+"""L2 — SqueezeNet v1.0 in JAX, composed from the L1 Pallas kernels.
+
+The paper builds SqueezeNet (227x227x3 input, the v1.0 layout its Figure 2
+shows) from ACL building blocks.  This module is the analogous composition:
+
+* `ARCH` / `STAGES` — the declarative network description.  The Rust
+  coordinator reads the same structure from `manifest.json`; this module is
+  the single source of truth.
+* `init_params` — deterministic He-initialized synthetic weights (the paper
+  never evaluates accuracy, only latency; see DESIGN.md §Substitutions).
+* `stage_fns` — one fused jax function per *stage* (conv1-block, each fire
+  module with any trailing maxpool folded in, the conv10/pool/softmax
+  head).  These lower to the per-stage HLO executables the ACL engine runs.
+* `forward_fused` — the whole network as one function (fully-fused
+  ablation artifact, and the oracle path for golden outputs).
+* `forward_ref` — same network on the pure-jnp oracle ops (fast-compiling
+  reference used for calibration and goldens).
+
+Dropout: removed for inference; compensated by `ATTENUATION` applied inside
+the global-average-pool stage, exactly the paper's trick (Figure 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+
+INPUT_HW = 227
+INPUT_SHAPE = (INPUT_HW, INPUT_HW, 3)  # HWC, batch added per artifact
+NUM_CLASSES = 1000
+ATTENUATION = 0.5  # dropout keep-probability folded in after pool10
+SEED = 42
+
+
+@dataclasses.dataclass(frozen=True)
+class FireSpec:
+    """Squeeze/expand widths of one fire module (paper Figure 1)."""
+    name: str
+    cin: int
+    squeeze: int
+    expand1: int
+    expand3: int
+
+    @property
+    def cout(self) -> int:
+        return self.expand1 + self.expand3
+
+
+# SqueezeNet v1.0 fire ladder (Iandola et al., Table 1).
+FIRES: tuple[FireSpec, ...] = (
+    FireSpec("fire2", 96, 16, 64, 64),
+    FireSpec("fire3", 128, 16, 64, 64),
+    FireSpec("fire4", 128, 32, 128, 128),
+    FireSpec("fire5", 256, 32, 128, 128),
+    FireSpec("fire6", 256, 48, 192, 192),
+    FireSpec("fire7", 384, 48, 192, 192),
+    FireSpec("fire8", 384, 64, 256, 256),
+    FireSpec("fire9", 512, 64, 256, 256),
+)
+
+# Maxpool sites: pool1 after conv1, pool4 after fire4, pool8 after fire8.
+POOL_AFTER = {"conv1", "fire4", "fire8"}
+
+
+def param_specs() -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the manifest/weights.bin order."""
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("conv1_w", (7, 7, 3, 96)),
+        ("conv1_b", (96,)),
+    ]
+    for f in FIRES:
+        specs += [
+            (f"{f.name}_sw", (1, 1, f.cin, f.squeeze)),
+            (f"{f.name}_sb", (f.squeeze,)),
+            (f"{f.name}_e1w", (1, 1, f.squeeze, f.expand1)),
+            (f"{f.name}_e1b", (f.expand1,)),
+            (f"{f.name}_e3w", (3, 3, f.squeeze, f.expand3)),
+            (f"{f.name}_e3b", (f.expand3,)),
+        ]
+    specs += [
+        ("conv10_w", (1, 1, 512, NUM_CLASSES)),
+        ("conv10_b", (NUM_CLASSES,)),
+    ]
+    return specs
+
+
+def init_params(seed: int = SEED) -> dict[str, np.ndarray]:
+    """He-initialized synthetic weights, small positive biases.
+
+    Deterministic across runs: the Rust integration tests compare against
+    goldens computed from exactly these values.
+    """
+    r = np.random.RandomState(seed)
+    params: dict[str, np.ndarray] = {}
+    for name, shape in param_specs():
+        if name.endswith("_b"):
+            params[name] = (r.uniform(0.0, 0.01, shape)).astype(np.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / fan_in))
+            params[name] = (r.randn(*shape) * std).astype(np.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (the ACL engine's unit of execution)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One fused ACL-engine stage.
+
+    `param_names` is the stage's slice of the global parameter table, in
+    call order; `fn(params_list, x)` is the jax function that lowers to the
+    stage's HLO executable.
+    """
+    index: int
+    name: str
+    param_names: tuple[str, ...]
+    in_shape: tuple[int, ...]   # HWC (no batch)
+    out_shape: tuple[int, ...]  # HWC or (C,) for the head
+    fn: Callable
+
+    def jit_args(self, batch: int):
+        """Example args for jax.jit(...).lower."""
+        f32 = jnp.float32
+        params = [jax.ShapeDtypeStruct(_shape_of(p), f32)
+                  for p in self.param_names]
+        x = jax.ShapeDtypeStruct((batch, *self.in_shape), f32)
+        return params, x
+
+
+_SHAPES = dict(param_specs())
+
+
+def _shape_of(name: str) -> tuple[int, ...]:
+    return _SHAPES[name]
+
+
+def _conv1_stage(params, x):
+    w, b = params
+    y = kernels.conv2d(x, w, b, stride=2, padding="VALID", activation="relu")
+    return kernels.maxpool2d(y, window=3, stride=2)
+
+
+def _make_fire_stage(f: FireSpec, pool: bool):
+    def fn(params, x):
+        ws, bs, w1, b1, w3, b3 = params
+        y = kernels.fire(x, ws, bs, w1, b1, w3, b3)
+        if pool:
+            y = kernels.maxpool2d(y, window=3, stride=2)
+        return y
+    return fn
+
+
+def _head_stage(params, x):
+    w, b = params
+    y = kernels.pointwise_conv(x, w, b, activation="relu")
+    pooled = kernels.global_avgpool(y, attenuation=ATTENUATION)
+    return kernels.softmax(pooled)
+
+
+def _spatial_ladder() -> dict[str, int]:
+    """H(=W) of each stage's input, following the v1.0 ladder."""
+    return {
+        "conv1": 227, "fire2": 55, "fire3": 55, "fire4": 55,
+        "fire5": 27, "fire6": 27, "fire7": 27, "fire8": 27,
+        "fire9": 13, "head": 13,
+    }
+
+
+def stages() -> list[Stage]:
+    """The ACL engine's stage list, in execution order."""
+    hw = _spatial_ladder()
+    out: list[Stage] = [Stage(
+        index=0, name="conv1",
+        param_names=("conv1_w", "conv1_b"),
+        in_shape=(227, 227, 3), out_shape=(55, 55, 96),
+        fn=_conv1_stage,
+    )]
+    for f in FIRES:
+        pool = f.name in POOL_AFTER
+        h = hw[f.name]
+        h_out = (h - 3) // 2 + 1 if pool else h
+        out.append(Stage(
+            index=len(out), name=f.name,
+            param_names=(f"{f.name}_sw", f"{f.name}_sb",
+                         f"{f.name}_e1w", f"{f.name}_e1b",
+                         f"{f.name}_e3w", f"{f.name}_e3b"),
+            in_shape=(h, h, f.cin), out_shape=(h_out, h_out, f.cout),
+            fn=_make_fire_stage(f, pool),
+        ))
+    out.append(Stage(
+        index=len(out), name="head",
+        param_names=("conv10_w", "conv10_b"),
+        in_shape=(13, 13, 512), out_shape=(NUM_CLASSES,),
+        fn=_head_stage,
+    ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Whole-network forwards
+# ---------------------------------------------------------------------------
+
+def forward_fused(params: dict, x: jax.Array) -> jax.Array:
+    """Whole network on the Pallas kernels (fully-fused artifact)."""
+    for st in stages():
+        plist = [params[p] for p in st.param_names]
+        x = st.fn(plist, x)
+    return x
+
+
+def forward_ref(params: dict, x: jax.Array) -> jax.Array:
+    """Whole network on the pure-jnp oracle ops (goldens/calibration)."""
+    y = ref.conv2d(x, params["conv1_w"], params["conv1_b"], stride=2,
+                   activation="relu")
+    y = ref.maxpool2d(y)
+    for f in FIRES:
+        y = ref.fire(y, params[f"{f.name}_sw"], params[f"{f.name}_sb"],
+                     params[f"{f.name}_e1w"], params[f"{f.name}_e1b"],
+                     params[f"{f.name}_e3w"], params[f"{f.name}_e3b"])
+        if f.name in POOL_AFTER:
+            y = ref.maxpool2d(y)
+    y = ref.conv2d(y, params["conv10_w"], params["conv10_b"],
+                   activation="relu")
+    y = ref.global_avgpool(y, attenuation=ATTENUATION)
+    return ref.softmax(y)
+
+
+def activation_sites(params: dict, x: jax.Array) -> dict[str, jax.Array]:
+    """Named intermediate activations on the oracle path.
+
+    Used for (a) quantization calibration (per-conv-input scales) and
+    (b) per-stage goldens for the Rust integration tests.
+    """
+    acts: dict[str, jax.Array] = {"input": x}
+    y = ref.conv2d(x, params["conv1_w"], params["conv1_b"], stride=2,
+                   activation="relu")
+    y = ref.maxpool2d(y)
+    acts["conv1"] = y
+    for f in FIRES:
+        acts[f"{f.name}_in"] = y
+        s = ref.conv2d(y, params[f"{f.name}_sw"], params[f"{f.name}_sb"],
+                       activation="relu")
+        acts[f"{f.name}_squeeze"] = s
+        y = ref.fire(y, params[f"{f.name}_sw"], params[f"{f.name}_sb"],
+                     params[f"{f.name}_e1w"], params[f"{f.name}_e1b"],
+                     params[f"{f.name}_e3w"], params[f"{f.name}_e3b"])
+        if f.name in POOL_AFTER:
+            y = ref.maxpool2d(y)
+        acts[f.name] = y
+    acts["conv10_in"] = y
+    y = ref.conv2d(y, params["conv10_w"], params["conv10_b"],
+                   activation="relu")
+    y = ref.global_avgpool(y, attenuation=ATTENUATION)
+    acts["pooled"] = y
+    acts["probs"] = ref.softmax(y)
+    return acts
+
+
+# ---------------------------------------------------------------------------
+# Probe stages (Fig 3 group-breakdown granularity)
+# ---------------------------------------------------------------------------
+
+def _probe_conv1(params, x):
+    w, b = params
+    return kernels.conv2d(x, w, b, stride=2, padding="VALID",
+                          activation="relu")
+
+
+def _probe_pool(params, x):
+    del params
+    return kernels.maxpool2d(x, window=3, stride=2)
+
+
+def _make_probe_fire(f: FireSpec):
+    def fn(params, x):
+        ws, bs, w1, b1, w3, b3 = params
+        return kernels.fire(x, ws, bs, w1, b1, w3, b3)
+    return fn
+
+
+def _probe_conv10(params, x):
+    w, b = params
+    return kernels.pointwise_conv(x, w, b, activation="relu")
+
+
+def _probe_gap(params, x):
+    del params
+    return kernels.global_avgpool(x, attenuation=ATTENUATION)
+
+
+def _probe_softmax(params, x):
+    del params
+    return kernels.softmax(x)
+
+
+# Fig 3 group classification for probe stages.
+PROBE_GROUPS = {
+    "conv1": "group1", "pool1": "group2",
+    **{f.name: "group1" for f in FIRES},
+    "pool4": "group2", "pool8": "group2",
+    "conv10": "group1", "gap": "group2", "softmax": "group2",
+}
+
+
+def probe_stages() -> list[Stage]:
+    """Finer-grained ACL stage list used only by the Fig 3 breakdown bench.
+
+    Same kernels and fusion *within* group-1 blocks (fire modules stay
+    fused, conv+relu stays fused), but pools / gap / softmax are separate
+    executables so the ledger can attribute time to group 1 vs group 2 for
+    the ACL engine, matching the paper's instrumentation.
+    """
+    out: list[Stage] = [Stage(0, "conv1", ("conv1_w", "conv1_b"),
+                              (227, 227, 3), (111, 111, 96), _probe_conv1)]
+    out.append(Stage(1, "pool1", (), (111, 111, 96), (55, 55, 96),
+                     _probe_pool))
+    hw = _spatial_ladder()
+    for f in FIRES:
+        h = hw[f.name]
+        out.append(Stage(len(out), f.name,
+                         (f"{f.name}_sw", f"{f.name}_sb",
+                          f"{f.name}_e1w", f"{f.name}_e1b",
+                          f"{f.name}_e3w", f"{f.name}_e3b"),
+                         (h, h, f.cin), (h, h, f.cout),
+                         _make_probe_fire(f)))
+        if f.name in POOL_AFTER:
+            hp = (h - 3) // 2 + 1
+            out.append(Stage(len(out), f"pool{f.name[-1]}", (),
+                             (h, h, f.cout), (hp, hp, f.cout), _probe_pool))
+    out.append(Stage(len(out), "conv10", ("conv10_w", "conv10_b"),
+                     (13, 13, 512), (13, 13, NUM_CLASSES), _probe_conv10))
+    out.append(Stage(len(out), "gap", (), (13, 13, NUM_CLASSES),
+                     (NUM_CLASSES,), _probe_gap))
+    out.append(Stage(len(out), "softmax", (), (NUM_CLASSES,),
+                     (NUM_CLASSES,), _probe_softmax))
+    return out

@@ -1,0 +1,82 @@
+"""Quantization toolkit: weight quantization + activation calibration.
+
+Reproduces the data side of the paper's Fig 4 experiment (8-bit "vector
+quantization" after Han et al. [4]): symmetric per-tensor int8 for every
+conv weight, and activation scales calibrated by running the fp32 oracle
+network over a small synthetic calibration batch and recording per-site
+absolute maxima.
+
+Scale keys match `graph.py`'s quantized op attrs:
+    "<conv>:in"  — input-activation scale of that conv (for `quantize` ops)
+    "<conv>:w"   — weight scale (baked into the int8 weights)
+    "<conv>:deq" — in*w product (for `dequant_bias` ops)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .kernels import ref
+
+# conv-op name -> activation_sites key holding that conv's input.
+_CONV_INPUT_SITE: dict[str, str] = {"conv1": "input", "conv10": "conv10_in"}
+for _f in model.FIRES:
+    _CONV_INPUT_SITE[f"{_f.name}_squeeze"] = f"{_f.name}_in"
+    _CONV_INPUT_SITE[f"{_f.name}_expand1"] = f"{_f.name}_squeeze"
+    _CONV_INPUT_SITE[f"{_f.name}_expand3"] = f"{_f.name}_squeeze"
+
+# conv-op name -> weight param name.
+CONV_WEIGHTS: dict[str, str] = {"conv1": "conv1_w", "conv10": "conv10_w"}
+for _f in model.FIRES:
+    CONV_WEIGHTS[f"{_f.name}_squeeze"] = f"{_f.name}_sw"
+    CONV_WEIGHTS[f"{_f.name}_expand1"] = f"{_f.name}_e1w"
+    CONV_WEIGHTS[f"{_f.name}_expand3"] = f"{_f.name}_e3w"
+
+
+def calibration_batch(n: int = 4, seed: int = 7) -> np.ndarray:
+    """Synthetic calibration images, same distribution as the goldens."""
+    r = np.random.RandomState(seed)
+    return r.uniform(-1.0, 1.0,
+                     (n, model.INPUT_HW, model.INPUT_HW, 3)).astype(np.float32)
+
+
+def quantize_weights(params: dict[str, np.ndarray]):
+    """int8-quantize every conv weight.
+
+    Returns (q8 params dict name+'_q8' -> int8 array, weight scales dict
+    conv-op-name -> float).
+    """
+    q8: dict[str, np.ndarray] = {}
+    w_scales: dict[str, float] = {}
+    for conv, wname in CONV_WEIGHTS.items():
+        w = params[wname]
+        s = ref.quant_scale(w)
+        q8[wname + "_q8"] = np.asarray(ref.quantize(jnp.asarray(w), s))
+        w_scales[conv] = s
+    return q8, w_scales
+
+
+def calibrate(params: dict[str, np.ndarray],
+              batch: np.ndarray | None = None) -> dict[str, float]:
+    """Produce the full scale table for the quantized graph.
+
+    Runs the fp32 oracle over the calibration batch, takes per-site
+    max(|act|) across the batch, and combines with weight scales.
+    """
+    if batch is None:
+        batch = calibration_batch()
+    sites = model.activation_sites(
+        {k: jnp.asarray(v) for k, v in params.items()}, jnp.asarray(batch))
+    _, w_scales = quantize_weights(params)
+
+    scales: dict[str, float] = {}
+    for conv, site in _CONV_INPUT_SITE.items():
+        a = np.asarray(sites[site])
+        m = float(np.abs(a).max())
+        s_in = m / 127.0 if m > 0 else 1.0
+        scales[f"{conv}:in"] = s_in
+        scales[f"{conv}:w"] = w_scales[conv]
+        scales[f"{conv}:deq"] = s_in * w_scales[conv]
+    return scales

@@ -1,0 +1,42 @@
+"""Shared hypothesis strategies for the kernel test suite.
+
+Interpret-mode Pallas is slow, so shapes are kept small but *adversarial*:
+odd sizes, tile sizes that do not divide the output, strides > 1, single-
+row images — everything that has ever broken a tiled kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import HealthCheck, settings
+from hypothesis import strategies as st
+
+# One profile for the whole suite: few examples, no deadline (XLA compile
+# times dominate), suppress the too-slow health check for the same reason.
+settings.register_profile(
+    "kernels",
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+def arrays(shape, seed, lo=-2.0, hi=2.0):
+    """Deterministic float32 array for a shape + seed (hypothesis drives
+    shapes/seeds; numpy generates values — cheaper to shrink than
+    hypothesis-generated element lists)."""
+    r = np.random.RandomState(seed % (2**31 - 1))
+    return r.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+# Strategy pieces ----------------------------------------------------------
+
+batches = st.integers(1, 3)
+channels = st.integers(1, 8)
+seeds = st.integers(0, 2**31 - 2)
+row_tiles = st.integers(1, 9)
+
+
+def spatial(min_size=1, max_size=14):
+    return st.integers(min_size, max_size)

@@ -1,0 +1,63 @@
+"""Hypothesis sweeps: activation / softmax / concat kernels vs the oracle."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import concat_channels, ref, relu, softmax
+
+from .conftest import arrays, batches, channels, seeds, spatial
+
+
+@given(
+    shape=st.sampled_from([(7,), (3, 5), (2, 3, 4), (1, 5, 4, 3), (2, 227)]),
+    tile=st.integers(1, 300),
+    seed=seeds,
+)
+def test_relu_matches_ref_any_rank(shape, tile, seed):
+    x = jnp.asarray(arrays(shape, seed))
+    got = relu(x, row_tile=tile)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.relu(x)))
+
+
+def test_relu_preserves_zero_and_sign():
+    x = jnp.asarray([-1.0, -0.0, 0.0, 2.5], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(relu(x)), [0.0, 0.0, 0.0, 2.5])
+
+
+@given(n=st.integers(1, 6), c=st.integers(1, 1000), seed=seeds)
+def test_softmax_matches_ref(n, c, seed):
+    x = jnp.asarray(arrays((n, c), seed, lo=-30, hi=30))
+    got = softmax(x)
+    want = ref.softmax(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = jnp.asarray(arrays((5, 1000), 11, lo=-50, hi=50))
+    s = np.asarray(softmax(x)).sum(axis=-1)
+    np.testing.assert_allclose(s, np.ones(5), rtol=1e-5)
+
+
+def test_softmax_stable_at_large_logits():
+    """Stability guard: huge logits must not produce NaN/Inf (the kernel
+    subtracts the row max, like the paper's hand-written Soft-Max)."""
+    x = jnp.asarray([[1e4, 1e4 - 1, 0.0]], jnp.float32)
+    out = np.asarray(softmax(x))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out.sum(), 1.0, rtol=1e-6)
+
+
+@given(
+    n=batches, h=spatial(1, 8), w=spatial(1, 8),
+    ca=channels, cb=channels, seed=seeds,
+)
+def test_concat_channels_matches_jnp(n, h, w, ca, cb, seed):
+    a = jnp.asarray(arrays((n, h, w, ca), seed))
+    b = jnp.asarray(arrays((n, h, w, cb), seed + 1))
+    got = concat_channels(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.concatenate([a, b], axis=-1)))

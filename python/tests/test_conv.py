@@ -1,0 +1,115 @@
+"""Hypothesis sweeps: Pallas conv kernels vs the pure-jnp oracle."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import common, conv2d, pointwise_conv, ref
+
+from .conftest import arrays, batches, channels, row_tiles, seeds, spatial
+
+
+@given(
+    n=batches,
+    h=spatial(5, 14),
+    w=spatial(5, 14),
+    cin=channels,
+    cout=channels,
+    k=st.sampled_from([1, 3, 5, 7]),
+    stride=st.sampled_from([1, 2, 4]),
+    padding=st.sampled_from(["VALID", "SAME", 1, 3]),
+    act=st.sampled_from([None, "relu"]),
+    tile=row_tiles,
+    seed=seeds,
+)
+def test_conv2d_matches_ref(n, h, w, cin, cout, k, stride, padding, act,
+                            tile, seed):
+    plo, phi = common.resolve_padding(padding, k)
+    if h + plo + phi < k or w + plo + phi < k:
+        return  # empty output; constructor raises (covered below)
+    x = jnp.asarray(arrays((n, h, w, cin), seed))
+    wt = jnp.asarray(arrays((k, k, cin, cout), seed + 1))
+    b = jnp.asarray(arrays((cout,), seed + 2))
+    got = conv2d(x, wt, b, stride=stride, padding=padding, activation=act,
+                 row_tile=tile)
+    want = ref.conv2d(x, wt, b, stride=stride, padding=padding,
+                      activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=batches, h=spatial(1, 10), w=spatial(1, 10), cin=channels,
+    cout=channels, act=st.sampled_from([None, "relu"]),
+    tile=st.integers(1, 64), seed=seeds,
+)
+def test_pointwise_matches_ref(n, h, w, cin, cout, act, tile, seed):
+    x = jnp.asarray(arrays((n, h, w, cin), seed))
+    wt = jnp.asarray(arrays((1, 1, cin, cout), seed + 1))
+    b = jnp.asarray(arrays((cout,), seed + 2))
+    got = pointwise_conv(x, wt, b, activation=act, row_tile=tile)
+    want = ref.pointwise_conv(x, wt, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(tile_a=row_tiles, tile_b=row_tiles, seed=seeds)
+def test_conv2d_tiling_invariance(tile_a, tile_b, seed):
+    """TH is a pure schedule knob: results agree across tile heights up
+    to f32 accumulation-order tolerance (XLA dot blocking varies with M)."""
+    x = jnp.asarray(arrays((1, 11, 9, 3), seed))
+    w = jnp.asarray(arrays((3, 3, 3, 4), seed + 1))
+    a = conv2d(x, w, stride=2, padding="SAME", row_tile=tile_a)
+    b = conv2d(x, w, stride=2, padding="SAME", row_tile=tile_b)
+    # Same accumulation-order tolerance as the fire invariance test.
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_conv2d_bias_default_is_zero():
+    x = jnp.ones((1, 5, 5, 2), jnp.float32)
+    w = jnp.ones((3, 3, 2, 2), jnp.float32)
+    got = conv2d(x, w)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_conv2d_1x1_kernel_equals_pointwise():
+    x = jnp.asarray(arrays((2, 6, 7, 3), 7))
+    w = jnp.asarray(arrays((1, 1, 3, 5), 8))
+    b = jnp.asarray(arrays((5,), 9))
+    np.testing.assert_allclose(
+        conv2d(x, w, b, activation="relu", row_tile=4),
+        pointwise_conv(x, w, b, activation="relu"),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_conv2d_rejects_empty_output():
+    x = jnp.ones((1, 3, 3, 1), jnp.float32)
+    w = jnp.ones((7, 7, 1, 1), jnp.float32)
+    with pytest.raises(ValueError, match="empty"):
+        conv2d(x, w)
+
+
+def test_conv2d_rejects_non_nhwc():
+    with pytest.raises(ValueError, match="NHWC"):
+        conv2d(jnp.ones((3, 3, 1), jnp.float32),
+               jnp.ones((1, 1, 1, 1), jnp.float32))
+
+
+def test_conv2d_squeezenet_conv1_shape():
+    """The paper's first layer: 227x227x3, 7x7/s2 VALID, 96 filters."""
+    x = jnp.zeros((1, 227, 227, 3), jnp.float32)
+    w = jnp.zeros((7, 7, 3, 96), jnp.float32)
+    out = conv2d(x, w, stride=2)
+    assert out.shape == (1, 111, 111, 96)
+
+
+def test_vmem_budget_largest_stage():
+    """DESIGN.md §Perf: every conv tile must fit the 16 MiB VMEM budget."""
+    # conv1 is the largest input tile: TH=8, W=227, Cin=3, k=7, s=2 -> W_out=111, Cout=96
+    assert common.vmem_bytes_conv(8, 227, 3, 7, 2, 111, 96) < common.VMEM_BUDGET
+    # fire8 expand3x3-equivalent worst case
+    assert common.vmem_bytes_conv(8, 27, 64, 3, 1, 27, 256) < common.VMEM_BUDGET

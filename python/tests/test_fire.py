@@ -1,0 +1,92 @@
+"""Hypothesis sweeps: the fused fire-module kernel vs the oracle.
+
+The oracle (`ref.fire`) uses an explicit concatenate; the kernel writes
+channel slices.  Equality of the two proves the paper's concat-elimination
+is a pure scheduling optimization.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import fire, ref
+
+from .conftest import arrays, batches, row_tiles, seeds, spatial
+
+
+def _fire_params(cin, s, e1, e3, seed):
+    return dict(
+        ws=jnp.asarray(arrays((1, 1, cin, s), seed)),
+        bs=jnp.asarray(arrays((s,), seed + 1)),
+        w1=jnp.asarray(arrays((1, 1, s, e1), seed + 2)),
+        b1=jnp.asarray(arrays((e1,), seed + 3)),
+        w3=jnp.asarray(arrays((3, 3, s, e3), seed + 4)),
+        b3=jnp.asarray(arrays((e3,), seed + 5)),
+    )
+
+
+@given(
+    n=batches,
+    h=spatial(1, 12),
+    w=spatial(3, 12),
+    cin=st.integers(1, 8),
+    s=st.integers(1, 6),
+    e1=st.integers(1, 8),
+    e3=st.integers(1, 8),
+    tile=row_tiles,
+    seed=seeds,
+)
+def test_fire_matches_ref(n, h, w, cin, s, e1, e3, tile, seed):
+    x = jnp.asarray(arrays((n, h, w, cin), seed + 10))
+    p = _fire_params(cin, s, e1, e3, seed)
+    got = fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"],
+               row_tile=tile)
+    want = ref.fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(tile_a=row_tiles, tile_b=row_tiles, seed=seeds)
+def test_fire_tiling_invariance(tile_a, tile_b, seed):
+    x = jnp.asarray(arrays((1, 11, 7, 4), seed + 10))
+    p = _fire_params(4, 3, 5, 5, seed)
+    a = fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"],
+             row_tile=tile_a)
+    b = fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"],
+             row_tile=tile_b)
+    # TH changes the matmul M-dimension, which changes XLA-CPU's dot
+    # blocking and hence f32 accumulation order — tolerance, not equality.
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_fire_edge_rows_with_bias():
+    """Regression guard for the halo-masking subtlety: squeeze(0-row) is
+    relu(bias) != 0, so the kernel must mask *after* squeezing.  A large
+    positive squeeze bias makes any corruption at the top/bottom rows
+    obvious."""
+    x = jnp.asarray(arrays((1, 5, 5, 3), 42))
+    p = _fire_params(3, 2, 3, 3, 43)
+    p["bs"] = p["bs"] + 100.0
+    got = fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"],
+               row_tile=2)
+    want = ref.fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_fire_single_row_image():
+    """H=1: both halo rows are masked; the 3x3 degenerates to one row."""
+    x = jnp.asarray(arrays((2, 1, 6, 4), 7))
+    p = _fire_params(4, 2, 3, 3, 8)
+    got = fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"])
+    want = ref.fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fire_squeezenet_fire2_shapes():
+    """Paper fire2: 55x55x96 -> squeeze 16 -> expand 64+64 -> 55x55x128."""
+    x = jnp.zeros((1, 55, 55, 96), jnp.float32)
+    p = _fire_params(96, 16, 64, 64, 1)
+    out = fire(x, p["ws"], p["bs"], p["w1"], p["b1"], p["w3"], p["b3"])
+    assert out.shape == (1, 55, 55, 128)

@@ -1,0 +1,75 @@
+"""Hypothesis sweeps: pooling kernels vs the oracle."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import global_avgpool, maxpool2d, ref
+
+from .conftest import arrays, batches, channels, row_tiles, seeds, spatial
+
+
+@given(
+    n=batches, h=spatial(3, 14), w=spatial(3, 14), c=channels,
+    window=st.sampled_from([2, 3]), stride=st.sampled_from([1, 2, 3]),
+    tile=row_tiles, seed=seeds,
+)
+def test_maxpool_matches_ref(n, h, w, c, window, stride, tile, seed):
+    if h < window or w < window:
+        return
+    x = jnp.asarray(arrays((n, h, w, c), seed))
+    got = maxpool2d(x, window=window, stride=stride, row_tile=tile)
+    want = ref.maxpool2d(x, window=window, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@given(tile_a=row_tiles, tile_b=row_tiles, seed=seeds)
+def test_maxpool_tiling_invariance(tile_a, tile_b, seed):
+    x = jnp.asarray(arrays((2, 13, 9, 4), seed))
+    a = maxpool2d(x, row_tile=tile_a)
+    b = maxpool2d(x, row_tile=tile_b)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_maxpool_negative_inputs_edge():
+    """-inf tile-safety padding must never win a max, even when all real
+    values are negative and the last tile is ragged."""
+    x = -jnp.ones((1, 7, 7, 1), jnp.float32) * 5.0
+    got = maxpool2d(x, window=3, stride=2, row_tile=2)
+    np.testing.assert_allclose(got, ref.maxpool2d(x), rtol=0)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+@given(
+    n=batches, h=spatial(1, 12), w=spatial(1, 12), c=channels,
+    atten=st.floats(0.05, 2.0), seed=seeds,
+)
+def test_global_avgpool_matches_ref(n, h, w, c, atten, seed):
+    x = jnp.asarray(arrays((n, h, w, c), seed))
+    got = global_avgpool(x, attenuation=atten)
+    want = ref.global_avgpool(x, attenuation=atten)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_global_avgpool_attenuation_is_linear():
+    """The dropout-compensation coefficient is a pure scale (paper Fig 2)."""
+    x = jnp.asarray(arrays((1, 4, 4, 8), 3))
+    base = np.asarray(global_avgpool(x, attenuation=1.0))
+    half = np.asarray(global_avgpool(x, attenuation=0.5))
+    np.testing.assert_allclose(half, base * 0.5, rtol=1e-6)
+
+
+def test_maxpool_rejects_empty():
+    with pytest.raises(ValueError, match="empty"):
+        maxpool2d(jnp.ones((1, 2, 2, 1), jnp.float32), window=3, stride=2)
+
+
+def test_maxpool_squeezenet_shapes():
+    """All three SqueezeNet maxpool sites."""
+    for h, expect in [(111, 55), (55, 27), (27, 13)]:
+        x = jnp.zeros((1, h, h, 4), jnp.float32)
+        assert maxpool2d(x).shape == (1, expect, expect, 4)

@@ -1,0 +1,96 @@
+//! E8 ablation: dynamic-batching policy sweep (serving extension).
+//!
+//! Direct engine-level sweep of the compiled batch variants (amortizing
+//! dispatch + weight traffic across images), then a coordinator-level
+//! sweep of the batch window under burst load.
+//! Run: cargo bench --bench batching_ablation [-- --iters N | --quick]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use zuluko::bench::{Bench, BenchArgs};
+use zuluko::config::Config;
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::{build, EngineKind};
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn main() {
+    let args = BenchArgs::from_env(8);
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP batching_ablation: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+
+    // ---- engine-level: batch-size scaling of the fused artifacts ----
+    println!("== E8a: batch-size scaling, acl-fused (iters={}) ==", args.iters);
+    println!("| batch | mean ms/batch | ms/image | images/s |");
+    println!("|---|---|---|---|");
+    let mut e = build(EngineKind::AclFused, &manifest).expect("engine");
+    e.warmup().expect("warmup");
+    let batches: Vec<usize> = manifest.full.keys().copied().collect();
+    for b in batches {
+        let batch = Tensor::random(&[b, 227, 227, 3], b as u64);
+        let stats = Bench::new(&format!("b{b}"))
+            .warmup(1)
+            .iters(args.iters)
+            .run(|| {
+                e.infer(&batch).expect("infer");
+            });
+        println!(
+            "| {} | {:.1} | {:.1} | {:.2} |",
+            b,
+            stats.mean_ms,
+            stats.mean_ms / b as f64,
+            b as f64 / stats.mean_ms * 1e3
+        );
+    }
+
+    // ---- coordinator-level: batch window sweep under a burst ----
+    println!("\n== E8b: batch-window sweep under 8-request bursts ==");
+    println!("| window ms | mean batch | p50 ms | p95 ms | throughput img/s |");
+    println!("|---|---|---|---|---|");
+    for window_ms in [0u64, 10, 40, 120] {
+        let cfg = Config {
+            engine: EngineKind::AclFused,
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(window_ms),
+            queue_capacity: 64,
+            ..Config::default()
+        };
+        let coord = Arc::new(Coordinator::start(&cfg).expect("coordinator"));
+        let n = if args.quick { 8 } else { 24 };
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let img = Tensor::random(&[227, 227, 3], i as u64);
+            rxs.push(coord.submit(img).expect("submit"));
+        }
+        for rx in rxs {
+            let r = rx.recv().expect("response");
+            assert!(r.is_ok(), "{:?}", r.error);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = coord.stats();
+        let (_, p50, p95, _, _) = s.latency_summary;
+        println!(
+            "| {} | {:.2} | {:.0} | {:.0} | {:.2} |",
+            window_ms,
+            s.mean_batch,
+            p50,
+            p95,
+            n as f64 / wall
+        );
+        match Arc::try_unwrap(coord) {
+            Ok(c) => {
+                c.shutdown();
+            }
+            Err(_) => panic!("coordinator still referenced"),
+        }
+    }
+    println!("\nshape check: larger windows -> bigger batches -> higher throughput,");
+    println!("at the cost of added queueing latency (the classic batching tradeoff).");
+}

@@ -1,0 +1,64 @@
+//! E6 ablation: the fire-module concat elimination (paper Figure 1).
+//!
+//! The paper's engine writes expand branches into channel slices of a
+//! shared buffer, deleting the concatenate op entirely.  This bench
+//! quantifies what that deletion is worth: the measured cost of the 8
+//! concat copies in the baseline graph, and the bytes they move.
+//! Run: cargo bench --bench concat_ablation [-- --iters N | --quick]
+
+use zuluko::bench::BenchArgs;
+use zuluko::engine::{build, EngineKind};
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn main() {
+    let args = BenchArgs::from_env(10);
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP concat_ablation: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let input = Tensor::random(&[1, 227, 227, 3], 7);
+
+    let mut tf = build(EngineKind::TfBaseline, &manifest).expect("tf");
+    tf.warmup().expect("warmup");
+    tf.ledger_mut().clear();
+    for _ in 0..args.iters {
+        tf.infer(&input).expect("infer");
+    }
+    let n = args.iters as f64;
+
+    println!("== E6: concat-elimination ablation (iters={}) ==", args.iters);
+    println!("| fire concat | bytes moved/img | ms/img |");
+    println!("|---|---|---|");
+    let mut total_ms = 0.0;
+    let mut total_bytes = 0usize;
+    for op in &manifest.ops {
+        if op.kind != "concat" {
+            continue;
+        }
+        let bytes: usize = op.out_shape.iter().product::<usize>() * 4;
+        let ms = tf
+            .ledger()
+            .rows()
+            .iter()
+            .find(|(name, ..)| name == &op.name)
+            .map(|(_, _, _, ms)| ms / n)
+            .unwrap_or(0.0);
+        println!("| {} | {} | {:.2} |", op.name, bytes, ms);
+        total_ms += ms;
+        total_bytes += bytes;
+    }
+    println!("| TOTAL | {} ({:.1} MB) | {:.2} |", total_bytes,
+             total_bytes as f64 / 1e6, total_ms);
+
+    let e2e: f64 = tf.ledger().total().as_secs_f64() * 1e3 / n;
+    println!(
+        "\nconcat share of baseline compute: {:.1}% ({:.2} of {:.1} ms) — \
+         the ACL engine pays 0 (fused fire kernel writes channel slices)",
+        total_ms / e2e * 100.0,
+        total_ms,
+        e2e
+    );
+}

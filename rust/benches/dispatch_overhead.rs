@@ -1,0 +1,65 @@
+//! E5 ablation: where does the framework tax come from?
+//!
+//! Sweeps execution granularity on identical compute: fully-fused (1
+//! dispatch/img) -> staged (10) -> probe (15) -> op-by-op (66).  The
+//! latency delta across the sweep isolates per-dispatch cost + lost
+//! fusion, which is the mechanism behind the paper's Fig 3 gap.
+//! Run: cargo bench --bench dispatch_overhead [-- --iters N | --quick]
+
+use zuluko::bench::{Bench, BenchArgs, Stats};
+use zuluko::engine::{build, EngineKind};
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn main() {
+    let args = BenchArgs::from_env(10);
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP dispatch_overhead: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let input = Tensor::random(&[1, 227, 227, 3], 7);
+
+    println!("== E5: dispatch-granularity ablation (iters={}) ==", args.iters);
+    println!("| engine | dispatches/img | mean ms | ms/dispatch delta |");
+    println!("|---|---|---|---|");
+
+    let cases = [
+        (EngineKind::AclFused, 1usize),
+        (EngineKind::AclStaged, 10),
+        (EngineKind::AclProbe, 15),
+        (EngineKind::TfBaseline, 66),
+    ];
+    let mut base: Option<Stats> = None;
+    let mut base_n = 1usize;
+    for (kind, dispatches) in cases {
+        let mut e = build(kind, &manifest).expect("engine");
+        e.warmup().expect("warmup");
+        let stats = Bench::new(kind.as_str())
+            .warmup(args.warmup)
+            .iters(args.iters)
+            .run(|| {
+                e.infer(&input).expect("infer");
+            });
+        let delta = match &base {
+            None => 0.0,
+            Some(b) => {
+                (stats.mean_ms - b.mean_ms) / (dispatches - base_n).max(1) as f64
+            }
+        };
+        println!(
+            "| {} | {} | {:.1} | {:+.2} |",
+            kind.as_str(),
+            dispatches,
+            stats.mean_ms,
+            delta
+        );
+        if base.is_none() {
+            base = Some(stats);
+            base_n = dispatches;
+        }
+    }
+    println!("\nshape check: latency must rise monotonically with dispatch count");
+    println!("(fused < staged < probe < op-by-op) — the framework-overhead mechanism.");
+}

@@ -1,0 +1,72 @@
+//! E2 / Figure 3 panel 2: the group 1 / group 2 time breakdown.
+//!
+//! group 1 = convolution + ReLU + concatenate; group 2 = pooling +
+//! soft-max.  Paper shape: ACL wins group 1 by ~23% and group 2 by ~110%
+//! (small ops suffer most from framework dispatch).
+//! Run: cargo bench --bench fig3_breakdown [-- --iters N | --quick]
+
+use zuluko::bench::BenchArgs;
+use zuluko::engine::{build, Engine, EngineKind};
+use zuluko::metrics::ledger::Group;
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn groups_per_image(e: &mut Box<dyn Engine>, input: &Tensor, iters: usize) -> [f64; 4] {
+    e.ledger_mut().clear();
+    for _ in 0..iters {
+        e.infer(input).expect("infer");
+    }
+    let g = e.ledger().group_ms();
+    [
+        g[0] / iters as f64,
+        g[1] / iters as f64,
+        g[2] / iters as f64,
+        g[3] / iters as f64,
+    ]
+}
+
+fn main() {
+    let args = BenchArgs::from_env(10);
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP fig3_breakdown: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let input = Tensor::random(&[1, 227, 227, 3], 7);
+
+    println!("== E2 / Fig 3: group breakdown (iters={}) ==", args.iters);
+
+    let mut tf = build(EngineKind::TfBaseline, &manifest).expect("tf");
+    tf.warmup().expect("warmup");
+    let tfg = groups_per_image(&mut tf, &input, args.iters);
+
+    let mut acl = build(EngineKind::AclProbe, &manifest).expect("acl-probe");
+    acl.warmup().expect("warmup");
+    let aclg = groups_per_image(&mut acl, &input, args.iters);
+
+    println!("| group | tf ms/img | acl ms/img | acl speedup | paper |");
+    println!("|---|---|---|---|---|");
+    println!(
+        "| {} | {:.1} | {:.1} | {:.2}x | 1.23x |",
+        Group::Group1.name(),
+        tfg[0],
+        aclg[0],
+        tfg[0] / aclg[0].max(1e-9)
+    );
+    println!(
+        "| {} | {:.1} | {:.1} | {:.2}x | 2.10x |",
+        Group::Group2.name(),
+        tfg[1],
+        aclg[1],
+        tfg[1] / aclg[1].max(1e-9)
+    );
+
+    // Per-op detail for the appendix: top-8 most expensive tf ops.
+    let mut rows = tf.ledger().rows();
+    rows.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap());
+    println!("\ntop tf ops by total ms (ledger):");
+    for (name, group, calls, ms) in rows.iter().take(8) {
+        println!("  {:<22} {:<26} calls={:<4} {:>8.1} ms", name, group.name(), calls, ms);
+    }
+}

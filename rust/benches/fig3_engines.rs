@@ -1,0 +1,47 @@
+//! E1 / Figure 3 panel 1: end-to-end per-image latency, TF-baseline vs
+//! the from-scratch ACL engine (staged + fully-fused).
+//!
+//! Paper shape: ACL beats TF by ~25% (420 ms -> 320 ms on 4xARMv7).
+//! Run: cargo bench --bench fig3_engines [-- --iters N | --quick]
+
+use zuluko::bench::{speedup_line, Bench, BenchArgs, Stats};
+use zuluko::engine::{build, EngineKind};
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn main() {
+    let args = BenchArgs::from_env(15);
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP fig3_engines: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let input = Tensor::random(&[1, 227, 227, 3], 7);
+
+    println!("== E1 / Fig 3: engine end-to-end latency (iters={}) ==", args.iters);
+    println!("{}", Stats::HEADER);
+
+    let mut results = Vec::new();
+    for kind in [
+        EngineKind::TfBaseline,
+        EngineKind::AclStaged,
+        EngineKind::AclFused,
+    ] {
+        let mut e = build(kind, &manifest).expect("engine");
+        e.warmup().expect("warmup");
+        let stats = Bench::new(kind.as_str())
+            .warmup(args.warmup)
+            .iters(args.iters)
+            .run(|| {
+                e.infer(&input).expect("infer");
+            });
+        println!("{}", stats.row());
+        results.push(stats);
+    }
+
+    println!();
+    println!("{}", speedup_line(&results[0], &results[1]));
+    println!("{}", speedup_line(&results[0], &results[2]));
+    println!("paper: 420 ms -> 320 ms = 1.31x (ACL wins by ~25%)");
+}

@@ -1,0 +1,97 @@
+//! E4 / Figure 4: vector quantization — conv-level win vs graph-level loss.
+//!
+//! Paper: int8 makes conv ~25% faster (NEON 8-bit SIMD) but the inserted
+//! re-quantize/de-quantize ops cost more than the win; end-to-end slows
+//! by >100 ms.  We measure the fp32 and quantized baseline graphs and
+//! report both the measured conv ratio (XLA-CPU int8 gains little — see
+//! DESIGN.md §Substitutions) and the overhead-vs-win accounting under the
+//! paper's own 1.25x conv speedup.
+//! Run: cargo bench --bench fig4_quant [-- --iters N | --quick]
+
+use zuluko::bench::{Bench, BenchArgs};
+use zuluko::engine::{build, Engine, EngineKind};
+use zuluko::metrics::ledger::Group;
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn conv_ms(e: &dyn Engine, n: f64) -> f64 {
+    e.ledger()
+        .rows()
+        .iter()
+        .filter(|(name, g, _, _)| {
+            *g == Group::Group1
+                && (name == "conv1"
+                    || name == "conv10"
+                    || name.ends_with("_squeeze")
+                    || name.ends_with("_expand1")
+                    || name.ends_with("_expand3")
+                    || name.ends_with("_q8"))
+        })
+        .map(|(_, _, _, ms)| ms)
+        .sum::<f64>()
+        / n
+}
+
+fn main() {
+    let args = BenchArgs::from_env(8);
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP fig4_quant: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let input = Tensor::random(&[1, 227, 227, 3], 9);
+    let n = (args.iters + args.warmup) as f64;
+
+    println!("== E4 / Fig 4: quantization (iters={}) ==", args.iters);
+
+    let mut tf = build(EngineKind::TfBaseline, &manifest).expect("tf");
+    tf.warmup().expect("warmup");
+    tf.ledger_mut().clear();
+    let tf_e2e = Bench::new("fp32")
+        .warmup(args.warmup)
+        .iters(args.iters)
+        .run(|| {
+            tf.infer(&input).expect("infer");
+        });
+    let tf_conv = conv_ms(tf.as_ref(), n);
+
+    let mut q = build(EngineKind::Quant, &manifest).expect("quant");
+    q.warmup().expect("warmup");
+    q.ledger_mut().clear();
+    let q_e2e = Bench::new("quant")
+        .warmup(args.warmup)
+        .iters(args.iters)
+        .run(|| {
+            q.infer(&input).expect("infer");
+        });
+    let q_conv = conv_ms(q.as_ref(), n);
+    let q_overhead = q.ledger().group_ms()[2] / n;
+
+    println!("| quantity | fp32 | quant | delta | paper |");
+    println!("|---|---|---|---|---|");
+    println!(
+        "| conv ops ms/img | {:.1} | {:.1} | {:+.0}% | -25% |",
+        tf_conv,
+        q_conv,
+        (q_conv / tf_conv - 1.0) * 100.0
+    );
+    println!("| q/dq overhead ms/img | 0 | {q_overhead:.1} | +{q_overhead:.1} | 'significant' |");
+    println!(
+        "| end-to-end ms/img | {:.1} | {:.1} | {:+.1} | >+100 ms |",
+        tf_e2e.mean_ms,
+        q_e2e.mean_ms,
+        q_e2e.mean_ms - tf_e2e.mean_ms
+    );
+
+    // Crossover accounting under the paper's own NEON conv win (1.25x):
+    let paper_win = tf_conv * 0.20; // 25% faster = pays back 20% of fp32 time
+    println!(
+        "\ncrossover (paper-scaled): conv win {paper_win:.1} ms vs overhead {q_overhead:.1} ms -> {}",
+        if q_overhead > paper_win {
+            "quantization LOSES end-to-end (matches Fig 4)"
+        } else {
+            "quantization wins (contradicts Fig 4 on this substrate)"
+        }
+    );
+}

@@ -1,0 +1,218 @@
+//! Bench harness (criterion is not a dependency — DESIGN.md §Substitutions).
+//!
+//! Deliberately simple and honest: explicit warmup, fixed iteration
+//! count, wall-clock per iteration, mean/median/p95/min/max + stddev, and
+//! markdown table output so bench logs paste straight into EXPERIMENTS.md.
+//!
+//! ```ignore
+//! let s = Bench::new("acl e2e").warmup(3).iters(30).run(|| { ... });
+//! println!("{}", s.row());
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one measured case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub std_ms: f64,
+    pub samples_ms: Vec<f64>,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples_ms: Vec<f64>) -> Stats {
+        let n = samples_ms.len().max(1);
+        let mean = samples_ms.iter().sum::<f64>() / n as f64;
+        let var = samples_ms
+            .iter()
+            .map(|v| (v - mean) * (v - mean))
+            .sum::<f64>()
+            / n as f64;
+        let mut sorted = samples_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            name: name.to_string(),
+            iters: samples_ms.len(),
+            mean_ms: mean,
+            median_ms: crate::util::percentile_sorted(&sorted, 50.0),
+            p95_ms: crate::util::percentile_sorted(&sorted, 95.0),
+            min_ms: sorted.first().copied().unwrap_or(0.0),
+            max_ms: sorted.last().copied().unwrap_or(0.0),
+            std_ms: var.sqrt(),
+            samples_ms,
+        }
+    }
+
+    /// Markdown table row: `| name | mean | median | p95 | min | max | n |`.
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.2} | {} |",
+            self.name,
+            self.mean_ms,
+            self.median_ms,
+            self.p95_ms,
+            self.min_ms,
+            self.max_ms,
+            self.iters
+        )
+    }
+
+    pub const HEADER: &'static str =
+        "| case | mean ms | median ms | p95 ms | min ms | max ms | n |\n|---|---|---|---|---|---|---|";
+}
+
+/// Builder for one benchmark case.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            iters: 20,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f` warmup+iters times, timing each measured call.
+    pub fn run<F: FnMut()>(self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(crate::util::ms(t0.elapsed()));
+        }
+        Stats::from_samples(&self.name, samples)
+    }
+
+    /// Variant where the closure reports its own duration (e.g. the
+    /// engine's internal exec time, excluding host prep).
+    pub fn run_timed<F: FnMut() -> Duration>(self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            samples.push(crate::util::ms(f()));
+        }
+        Stats::from_samples(&self.name, samples)
+    }
+}
+
+/// Print a comparison line: how much faster is `new` than `base`?
+pub fn speedup_line(base: &Stats, new: &Stats) -> String {
+    let s = base.mean_ms / new.mean_ms.max(1e-9);
+    format!(
+        "{} vs {}: {:.2}x ({:+.1}%)  [{:.2} ms -> {:.2} ms]",
+        new.name,
+        base.name,
+        s,
+        (s - 1.0) * 100.0,
+        base.mean_ms,
+        new.mean_ms
+    )
+}
+
+/// Standard bench CLI: `--iters N --warmup N --quick` (quick = tiny run
+/// for CI smoke).
+pub struct BenchArgs {
+    pub iters: usize,
+    pub warmup: usize,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    pub fn from_env(default_iters: usize) -> BenchArgs {
+        // `cargo bench -- --iters 50` passes args after the binary name;
+        // also tolerate cargo's own `--bench` flag.
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut iters = default_iters;
+        let mut warmup = 3;
+        let mut quick = false;
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--iters" if i + 1 < argv.len() => {
+                    iters = argv[i + 1].parse().unwrap_or(default_iters);
+                    i += 1;
+                }
+                "--warmup" if i + 1 < argv.len() => {
+                    warmup = argv[i + 1].parse().unwrap_or(3);
+                    i += 1;
+                }
+                "--quick" => quick = true,
+                _ => {}
+            }
+            i += 1;
+        }
+        if quick {
+            iters = iters.min(3);
+            warmup = 1;
+        }
+        BenchArgs {
+            iters,
+            warmup,
+            quick,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples("t", vec![1.0, 2.0, 3.0, 4.0, 10.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean_ms - 4.0).abs() < 1e-9);
+        assert_eq!(s.median_ms, 3.0);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 10.0);
+        assert!(s.std_ms > 0.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_count() {
+        let mut calls = 0;
+        let s = Bench::new("count").warmup(2).iters(5).run(|| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn speedup_line_direction() {
+        let base = Stats::from_samples("tf", vec![420.0]);
+        let new = Stats::from_samples("acl", vec![320.0]);
+        let line = speedup_line(&base, &new);
+        assert!(line.contains("1.31x"), "{line}");
+    }
+
+    #[test]
+    fn row_is_markdown() {
+        let s = Stats::from_samples("x", vec![1.5]);
+        assert!(s.row().starts_with("| x | 1.50 |"));
+    }
+}

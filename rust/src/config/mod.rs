@@ -1,0 +1,217 @@
+//! Config system: JSON file + CLI overrides -> validated `Config`.
+//!
+//! Precedence: defaults < `--config file.json` < individual CLI flags.
+//! Every field is validated at startup (fail fast, never mid-request).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::engine::EngineKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Artifacts directory (manifest.json + *.hlo.txt).
+    pub artifacts: PathBuf,
+    /// Which engine backend serves requests.
+    pub engine: EngineKind,
+    /// Worker threads (each owns an engine replica).
+    pub workers: usize,
+    /// Dynamic batcher: max images per batch (must have an artifact).
+    pub max_batch: usize,
+    /// Dynamic batcher: how long to wait for a batch to fill.
+    pub batch_timeout: Duration,
+    /// Admission queue capacity (requests beyond this are rejected —
+    /// backpressure instead of unbounded memory).
+    pub queue_capacity: usize,
+    /// TCP listen address for `zuluko serve`.
+    pub listen: String,
+    /// Log level (0=error..3=debug).
+    pub log_level: u8,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts: crate::artifacts_dir(),
+            engine: EngineKind::AclStaged,
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(20),
+            queue_capacity: 64,
+            listen: "127.0.0.1:7878".to_string(),
+            log_level: crate::util::log::INFO,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file (all fields optional).
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut c = Config::default();
+        c.apply_json(&j)?;
+        Ok(c)
+    }
+
+    fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("artifacts").and_then(|v| v.as_str()) {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("engine").and_then(|v| v.as_str()) {
+            self.engine = EngineKind::parse(v)?;
+        }
+        if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
+            self.workers = v;
+        }
+        if let Some(v) = j.get("max_batch").and_then(|v| v.as_usize()) {
+            self.max_batch = v;
+        }
+        if let Some(v) = j.get("batch_timeout_ms").and_then(|v| v.as_f64()) {
+            self.batch_timeout = Duration::from_secs_f64(v / 1e3);
+        }
+        if let Some(v) = j.get("queue_capacity").and_then(|v| v.as_usize()) {
+            self.queue_capacity = v;
+        }
+        if let Some(v) = j.get("listen").and_then(|v| v.as_str()) {
+            self.listen = v.to_string();
+        }
+        if let Some(v) = j.get("log_level").and_then(|v| v.as_usize()) {
+            self.log_level = v as u8;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI flag overrides (flags named like the JSON keys).
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = a.get("engine") {
+            self.engine = EngineKind::parse(v)?;
+        }
+        self.workers = a.get_usize("workers", self.workers).map_err(anyhow::Error::msg)?;
+        self.max_batch = a
+            .get_usize("max-batch", self.max_batch)
+            .map_err(anyhow::Error::msg)?;
+        let bt = a
+            .get_f64(
+                "batch-timeout-ms",
+                self.batch_timeout.as_secs_f64() * 1e3,
+            )
+            .map_err(anyhow::Error::msg)?;
+        self.batch_timeout = Duration::from_secs_f64(bt / 1e3);
+        self.queue_capacity = a
+            .get_usize("queue-capacity", self.queue_capacity)
+            .map_err(anyhow::Error::msg)?;
+        if let Some(v) = a.get("listen") {
+            self.listen = v.to_string();
+        }
+        self.log_level = a
+            .get_usize("log-level", self.log_level as usize)
+            .map_err(anyhow::Error::msg)? as u8;
+        Ok(())
+    }
+
+    /// Build from CLI: `--config` file first, then flag overrides.
+    pub fn from_args(a: &Args) -> Result<Config> {
+        let mut c = match a.get("config") {
+            Some(p) => Config::from_file(Path::new(p))?,
+            None => Config::default(),
+        };
+        c.apply_args(a)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        if self.queue_capacity < self.max_batch {
+            bail!(
+                "queue_capacity ({}) must be >= max_batch ({})",
+                self.queue_capacity,
+                self.max_batch
+            );
+        }
+        if self.batch_timeout > Duration::from_secs(10) {
+            bail!("batch_timeout > 10s is almost certainly a unit mistake");
+        }
+        Ok(())
+    }
+
+    /// CLI flags this config understands (for Args::parse `known` lists).
+    pub const FLAGS: &'static [&'static str] = &[
+        "config",
+        "artifacts",
+        "engine",
+        "workers",
+        "max-batch",
+        "batch-timeout-ms",
+        "queue-capacity",
+        "listen",
+        "log-level",
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"engine":"tf","workers":2,"max_batch":4,
+                "batch_timeout_ms":5.5,"queue_capacity":32,
+                "listen":"0.0.0.0:9000"}"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.engine, EngineKind::TfBaseline);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.batch_timeout, Duration::from_micros(5500));
+        assert_eq!(c.listen, "0.0.0.0:9000");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides_beat_defaults() {
+        let a = Args::parse(
+            ["serve", "--engine", "acl-fused", "--max-batch", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.engine, EngineKind::AclFused);
+        assert_eq!(c.max_batch, 2);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = Config::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.queue_capacity = 1;
+        c.max_batch = 8;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Dynamic batcher: size + timeout policy over the admission queue.
+//!
+//! vLLM-style request coalescing scaled to an embedded engine: wait for
+//! the first request (no deadline — idle costs nothing), then hold the
+//! batch open up to `timeout` or until `max_batch` requests arrived, then
+//! shrink to the largest batch size that has a compiled artifact and
+//! return the leftovers to the queue front (FIFO preserved).
+//!
+//! Invariants (property-tested in rust/tests/coordinator_props.rs):
+//! * returned batch size is always in `supported`;
+//! * batch ≤ max_batch;
+//! * leftovers keep their relative order;
+//! * a non-empty queue never yields an empty batch.
+
+use std::time::{Duration, Instant};
+
+use super::queue::BoundedQueue;
+
+/// Batch formation policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+    /// Batch sizes with compiled artifacts, ascending (e.g. [1,2,4,8]).
+    pub supported: Vec<usize>,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, timeout: Duration, supported: &[usize]) -> BatchPolicy {
+        let mut s: Vec<usize> = supported.iter().copied().filter(|&b| b > 0).collect();
+        s.sort_unstable();
+        s.dedup();
+        if !s.contains(&1) {
+            s.insert(0, 1);
+        }
+        BatchPolicy {
+            max_batch: max_batch.max(1),
+            timeout,
+            supported: s,
+        }
+    }
+
+    /// Largest supported size <= n (n >= 1 guarantees an answer since 1 is
+    /// always supported).
+    pub fn fit(&self, n: usize) -> usize {
+        self.supported
+            .iter()
+            .copied()
+            .filter(|&b| b <= n && b <= self.max_batch)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Pure batch-shrink step: split `items` into (batch, leftovers).
+    pub fn split<T>(&self, mut items: Vec<T>) -> (Vec<T>, Vec<T>) {
+        let keep = self.fit(items.len().max(1)).min(items.len());
+        let rest = items.split_off(keep);
+        (items, rest)
+    }
+
+    /// Form one batch from the queue.  Blocks for the first item; returns
+    /// None when the queue is closed and drained.
+    pub fn form<T>(&self, queue: &BoundedQueue<T>) -> Option<Vec<T>> {
+        let first = queue.pop_blocking()?;
+        let mut items = vec![first];
+        let deadline = Instant::now() + self.timeout;
+        while items.len() < self.max_batch {
+            // Fast path: grab whatever is already waiting.
+            let mut more = queue.drain_up_to(self.max_batch - items.len());
+            if !more.is_empty() {
+                items.append(&mut more);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match queue.pop_wait(deadline - now) {
+                Some(item) => items.push(item),
+                None => break, // timeout or closed
+            }
+        }
+        let (batch, rest) = self.split(items);
+        if !rest.is_empty() {
+            queue.push_front_bulk(rest);
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max: usize) -> BatchPolicy {
+        BatchPolicy::new(max, Duration::from_millis(5), &[1, 2, 4, 8])
+    }
+
+    #[test]
+    fn fit_picks_largest_supported() {
+        let p = policy(8);
+        assert_eq!(p.fit(1), 1);
+        assert_eq!(p.fit(3), 2);
+        assert_eq!(p.fit(4), 4);
+        assert_eq!(p.fit(7), 4);
+        assert_eq!(p.fit(8), 8);
+        assert_eq!(p.fit(100), 8);
+    }
+
+    #[test]
+    fn fit_respects_max_batch() {
+        let p = policy(2);
+        assert_eq!(p.fit(8), 2);
+    }
+
+    #[test]
+    fn one_is_always_supported() {
+        let p = BatchPolicy::new(4, Duration::ZERO, &[4]);
+        assert_eq!(p.fit(3), 1);
+    }
+
+    #[test]
+    fn split_keeps_order() {
+        let p = policy(8);
+        let (batch, rest) = p.split(vec![1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(batch, vec![1, 2, 3, 4]);
+        assert_eq!(rest, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn form_collects_waiting_items() {
+        let q = BoundedQueue::new(16);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        let p = policy(8);
+        let batch = p.form(&q).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]); // fit(5)=4
+        assert_eq!(q.len(), 1); // leftover back in queue
+        let batch2 = p.form(&q).unwrap();
+        assert_eq!(batch2, vec![4]);
+    }
+
+    #[test]
+    fn form_returns_none_on_closed_empty() {
+        let q = BoundedQueue::<u32>::new(4);
+        q.close();
+        assert_eq!(policy(4).form(&q), None);
+    }
+
+    #[test]
+    fn form_times_out_to_small_batch() {
+        let q = BoundedQueue::new(4);
+        q.try_push(9u32).unwrap();
+        let t0 = Instant::now();
+        let batch = policy(8).form(&q).unwrap();
+        assert_eq!(batch, vec![9]);
+        assert!(t0.elapsed() >= Duration::from_millis(4), "must wait the window");
+    }
+}

@@ -1,0 +1,254 @@
+//! The serving coordinator — L3's composition root.
+//!
+//! ```text
+//! submit(image) ──router──> worker queue (bounded, backpressured)
+//!                              │  dynamic batcher (size+timeout)
+//!                              ▼
+//!                       worker thread: engine.infer(batch)
+//!                              │
+//!                              ▼
+//!                 per-request Response via mpsc reply channel
+//! ```
+//!
+//! Invariants (tested in rust/tests/coordinator_props.rs):
+//! * every admitted request gets exactly one Response (success or error);
+//! * rejected requests are reported as rejections, never dropped silently;
+//! * FIFO within a worker queue;
+//! * batch sizes ∈ supported artifact sizes;
+//! * results are independent of batch packing.
+
+pub mod batcher;
+pub mod queue;
+pub mod router;
+pub mod worker;
+
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::metrics::Histogram;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+use batcher::BatchPolicy;
+use queue::BoundedQueue;
+use router::{RouteError, Router};
+use worker::{SharedStats, WorkerReport};
+
+/// One inference request (image already preprocessed to 227x227x3).
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// One inference response (top-k + latency breakdown).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub top1: usize,
+    pub top5: Vec<(usize, f32)>,
+    /// submit -> batch formed.
+    pub queue_ms: f64,
+    /// engine.infer wall time for the whole batch.
+    pub exec_ms: f64,
+    /// submit -> response.
+    pub total_ms: f64,
+    pub batch_size: usize,
+    pub worker: usize,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn error(id: u64, msg: &str) -> Response {
+        Response {
+            id,
+            top1: 0,
+            top5: Vec::new(),
+            queue_ms: 0.0,
+            exec_ms: 0.0,
+            total_ms: 0.0,
+            batch_size: 0,
+            worker: usize::MAX,
+            error: Some(msg.to_string()),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Submission failure modes (backpressure surface).
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// All worker queues full — retry later (the embedded device is saturated).
+    Overloaded,
+    /// Coordinator shutting down.
+    Closed,
+    /// Input had the wrong shape.
+    BadInput(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "overloaded"),
+            SubmitError::Closed => write!(f, "closed"),
+            SubmitError::BadInput(m) => write!(f, "bad input: {m}"),
+        }
+    }
+}
+
+/// Live stats snapshot.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub images: u64,
+    pub queued: usize,
+    pub latency_summary: (f64, f64, f64, f64, f64),
+    pub mean_batch: f64,
+}
+
+/// The running serving system.
+pub struct Coordinator {
+    router: Router<Request>,
+    workers: Vec<std::thread::JoinHandle<WorkerReport>>,
+    next_id: AtomicU64,
+    stats: Arc<SharedStats>,
+    input_hw: usize,
+}
+
+impl Coordinator {
+    /// Load manifest, spawn + warm all workers.  Returns only when every
+    /// worker is ready to serve (compilation excluded from request
+    /// latency) — or fails fast if any worker can't build its engine.
+    pub fn start(cfg: &Config) -> Result<Coordinator> {
+        let manifest = Manifest::load(&cfg.artifacts).context("loading manifest")?;
+        let supported: Vec<usize> = match cfg.engine {
+            crate::engine::EngineKind::AclStaged => manifest.batch_sizes.clone(),
+            crate::engine::EngineKind::AclFused => {
+                manifest.full.keys().copied().collect()
+            }
+            _ => vec![1],
+        };
+        let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
+
+        let queues: Vec<Arc<BoundedQueue<Request>>> = (0..cfg.workers)
+            .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
+            .collect();
+        let stats = Arc::new(SharedStats::default());
+        let (ready_tx, ready_rx) = mpsc::channel();
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for (i, q) in queues.iter().enumerate() {
+            workers.push(worker::spawn_worker(
+                i,
+                cfg.engine,
+                manifest.clone(),
+                q.clone(),
+                policy.clone(),
+                stats.clone(),
+                ready_tx.clone(),
+            ));
+        }
+        drop(ready_tx);
+
+        // Wait for all workers (fail fast on any engine build error).
+        for _ in 0..cfg.workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    for q in &queues {
+                        q.close();
+                    }
+                    bail!("worker failed to start: {e:#}");
+                }
+                Err(_) => bail!("worker exited before signalling readiness"),
+            }
+        }
+
+        crate::info!(
+            "coordinator",
+            "ready: engine={} workers={} max_batch={} supported={:?}",
+            cfg.engine.as_str(),
+            cfg.workers,
+            cfg.max_batch,
+            policy.supported
+        );
+
+        Ok(Coordinator {
+            router: Router::new(queues),
+            workers,
+            next_id: AtomicU64::new(1),
+            stats,
+            input_hw: manifest.input_hw,
+        })
+    }
+
+    /// Submit an image; returns the reply channel.
+    pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let want = [self.input_hw, self.input_hw, 3];
+        if image.shape() != want {
+            return Err(SubmitError::BadInput(format!(
+                "expected shape {:?}, got {:?}",
+                want,
+                image.shape()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        match self.router.route(req) {
+            Ok(_) => Ok(rx),
+            Err(RouteError::Overloaded(_)) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded)
+            }
+            Err(RouteError::Closed(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, image: Tensor) -> Result<Response> {
+        let rx = self
+            .submit(image)
+            .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+        rx.recv().context("worker dropped reply channel")
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        let lat = self.stats.latency.lock().unwrap();
+        let batch = self.stats.batch_sizes.lock().unwrap();
+        StatsSnapshot {
+            completed: self.stats.completed.load(Ordering::Relaxed),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            images: self.stats.images.load(Ordering::Relaxed),
+            queued: self.router.queued(),
+            latency_summary: lat.summary(),
+            mean_batch: batch.mean_ms(),
+        }
+    }
+
+    /// Latency histogram clone (bench reporting).
+    pub fn latency_histogram(&self) -> Histogram {
+        self.stats.latency.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown: drain queues, join workers, return their reports.
+    pub fn shutdown(self) -> Vec<WorkerReport> {
+        self.router.close_all();
+        self.workers
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    }
+}

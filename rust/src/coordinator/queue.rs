@@ -1,0 +1,198 @@
+//! Bounded MPMC queue with blocking pop — the admission-control primitive.
+//!
+//! Mutex + Condvar (no async runtime; DESIGN.md §Substitutions).  The
+//! bound is the backpressure mechanism: `try_push` on a full queue returns
+//! the item to the caller, who surfaces a rejection to the client instead
+//! of letting memory grow unboundedly on an embedded device.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity.min(1024)),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking push; `Full`/`Closed` hand the item back.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Return items to the *front* (batcher leftovers keep FIFO order).
+    /// Capacity is intentionally not enforced here: the items were already
+    /// admitted once.
+    pub fn push_front_bulk(&self, items: Vec<T>) {
+        let mut g = self.inner.lock().unwrap();
+        for item in items.into_iter().rev() {
+            g.items.push_front(item);
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop with timeout.  None on timeout, or on close once the
+    /// queue has drained (close is graceful: residual items still pop).
+    pub fn pop_wait(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _t) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    /// Blocking pop with no timeout (None only when closed + drained).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Drain up to `n` items without blocking.
+    pub fn drain_up_to(&self, n: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.items.len());
+        g.items.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Graceful close: existing items still drain; pushes fail; blocked
+    /// poppers wake.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_wait(Duration::from_millis(1)), Some(i));
+        }
+        assert_eq!(q.pop_wait(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_item_back() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+    }
+
+    #[test]
+    fn close_wakes_and_drains() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(PushError::Closed(8)));
+        // Residual item still pops, then None.
+        assert_eq!(q.pop_blocking(), Some(7));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn push_front_bulk_preserves_order() {
+        let q = BoundedQueue::new(10);
+        q.try_push(3).unwrap();
+        q.push_front_bulk(vec![1, 2]);
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert_eq!(q.pop_blocking(), Some(3));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let qc = q.clone();
+        let h = std::thread::spawn(move || qc.pop_wait(Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(42u32).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn pop_wait_times_out() {
+        let q = BoundedQueue::<u32>::new(1);
+        let t0 = Instant::now();
+        assert_eq!(q.pop_wait(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

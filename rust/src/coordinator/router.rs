@@ -1,0 +1,129 @@
+//! Request router: spreads admitted requests across worker queues.
+//!
+//! Round-robin with least-loaded fallback: the round-robin target is
+//! tried first; if its queue is full the router picks the shortest queue
+//! instead; only when *every* queue is full does the request bounce back
+//! to the client as backpressure (vllm-router-style admission).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::queue::{BoundedQueue, PushError};
+
+/// Routing outcome errors.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RouteError<T> {
+    /// All queues full — caller should surface a rejection.
+    Overloaded(T),
+    /// Shutting down.
+    Closed(T),
+}
+
+pub struct Router<T> {
+    queues: Vec<Arc<BoundedQueue<T>>>,
+    next: AtomicUsize,
+}
+
+impl<T> Router<T> {
+    pub fn new(queues: Vec<Arc<BoundedQueue<T>>>) -> Router<T> {
+        assert!(!queues.is_empty(), "router needs >= 1 queue");
+        Router {
+            queues,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn queues(&self) -> &[Arc<BoundedQueue<T>>] {
+        &self.queues
+    }
+
+    /// Route one request.  Returns the chosen queue index.
+    pub fn route(&self, item: T) -> Result<usize, RouteError<T>> {
+        let n = self.queues.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+
+        // 1) round-robin target
+        let mut item = match self.queues[start].try_push(item) {
+            Ok(()) => return Ok(start),
+            Err(PushError::Closed(it)) => return Err(RouteError::Closed(it)),
+            Err(PushError::Full(it)) => it,
+        };
+
+        // 2) least-loaded fallback over the remaining queues
+        let mut order: Vec<usize> = (0..n).filter(|&i| i != start).collect();
+        order.sort_by_key(|&i| self.queues[i].len());
+        for i in order {
+            item = match self.queues[i].try_push(item) {
+                Ok(()) => return Ok(i),
+                Err(PushError::Closed(it)) => return Err(RouteError::Closed(it)),
+                Err(PushError::Full(it)) => it,
+            };
+        }
+        Err(RouteError::Overloaded(item))
+    }
+
+    /// Total queued across all workers (load metric).
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn close_all(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, cap: usize) -> Router<u32> {
+        Router::new((0..n).map(|_| Arc::new(BoundedQueue::new(cap))).collect())
+    }
+
+    #[test]
+    fn round_robin_spreads() {
+        let r = mk(3, 8);
+        let mut hits = [0usize; 3];
+        for i in 0..9 {
+            hits[r.route(i).unwrap()] += 1;
+        }
+        assert_eq!(hits, [3, 3, 3]);
+    }
+
+    #[test]
+    fn full_target_falls_to_least_loaded() {
+        let r = mk(2, 2);
+        // Fill queue 0.
+        r.queues()[0].try_push(100).unwrap();
+        r.queues()[0].try_push(101).unwrap();
+        // Route four items; all must land in queue 1.
+        let mut q1 = 0;
+        for i in 0..2 {
+            let idx = r.route(i).unwrap();
+            if idx == 1 {
+                q1 += 1;
+            }
+        }
+        assert_eq!(q1, 2);
+    }
+
+    #[test]
+    fn overload_returns_item() {
+        let r = mk(2, 1);
+        r.route(1).unwrap();
+        r.route(2).unwrap();
+        match r.route(3) {
+            Err(RouteError::Overloaded(3)) => {}
+            other => panic!("expected Overloaded(3), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn closed_propagates() {
+        let r = mk(1, 4);
+        r.close_all();
+        assert!(matches!(r.route(9), Err(RouteError::Closed(9))));
+    }
+}

@@ -1,0 +1,163 @@
+//! Worker threads: each owns an engine replica (XLA handles are not Send,
+//! so the engine is built *inside* the thread) and drains its queue via
+//! the dynamic batcher.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::engine::{self, EngineKind};
+use crate::metrics::ledger::Ledger;
+use crate::metrics::Histogram;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+use super::batcher::BatchPolicy;
+use super::queue::BoundedQueue;
+use super::{Request, Response};
+
+/// What a worker hands back at shutdown.
+#[derive(Debug)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub batches: u64,
+    pub images: u64,
+    pub ledger: Ledger,
+    pub compile_ms: f64,
+}
+
+/// Shared live counters (cheap to bump on the hot path).
+#[derive(Default)]
+pub struct SharedStats {
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub images: AtomicU64,
+    pub latency: Mutex<Histogram>,
+    pub batch_sizes: Mutex<Histogram>,
+}
+
+pub fn spawn_worker(
+    worker: usize,
+    kind: EngineKind,
+    manifest: Manifest,
+    queue: Arc<BoundedQueue<Request>>,
+    policy: BatchPolicy,
+    stats: Arc<SharedStats>,
+    ready: mpsc::Sender<Result<()>>,
+) -> JoinHandle<WorkerReport> {
+    std::thread::Builder::new()
+        .name(format!("zuluko-worker-{worker}"))
+        .spawn(move || {
+            // Build + warm the engine before signalling readiness so the
+            // coordinator's callers never measure compilation.
+            let mut eng = match engine::build(kind, &manifest) {
+                Ok(mut e) => match e.warmup() {
+                    Ok(()) => {
+                        let _ = ready.send(Ok(()));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = ready.send(Err(err));
+                        return WorkerReport {
+                            worker,
+                            batches: 0,
+                            images: 0,
+                            ledger: Ledger::new(),
+                            compile_ms: 0.0,
+                        };
+                    }
+                },
+                Err(err) => {
+                    let _ = ready.send(Err(err));
+                    return WorkerReport {
+                        worker,
+                        batches: 0,
+                        images: 0,
+                        ledger: Ledger::new(),
+                        compile_ms: 0.0,
+                    };
+                }
+            };
+
+            let mut batches = 0u64;
+            let mut images = 0u64;
+
+            while let Some(reqs) = policy.form(&queue) {
+                let formed_at = Instant::now();
+                let refs: Vec<&Tensor> = reqs.iter().map(|r| &r.image).collect();
+                let batch = match Tensor::stack(&refs) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        fail_batch(&reqs, &format!("stack: {e}"));
+                        continue;
+                    }
+                };
+                let t0 = Instant::now();
+                let out = eng.infer(&batch);
+                let exec_ms = crate::util::ms(t0.elapsed());
+
+                match out.and_then(|o| o.unstack().map_err(Into::into)) {
+                    Ok(rows) => {
+                        let bsize = reqs.len();
+                        batches += 1;
+                        images += bsize as u64;
+                        stats
+                            .batch_sizes
+                            .lock()
+                            .unwrap()
+                            .record_ms(bsize as f64);
+                        for (req, row) in reqs.into_iter().zip(rows) {
+                            let total_ms =
+                                crate::util::ms(req.submitted.elapsed());
+                            let queue_ms = crate::util::ms(
+                                formed_at.duration_since(req.submitted),
+                            );
+                            let _ = req.reply.send(Response {
+                                id: req.id,
+                                top1: row.argmax(),
+                                top5: row.topk(5),
+                                queue_ms,
+                                exec_ms,
+                                total_ms,
+                                batch_size: bsize,
+                                worker,
+                                error: None,
+                            });
+                            stats.completed.fetch_add(1, Ordering::Relaxed);
+                            stats.images.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .latency
+                                .lock()
+                                .unwrap()
+                                .record_ms(total_ms);
+                        }
+                    }
+                    Err(e) => fail_batch_owned(reqs, &format!("infer: {e}")),
+                }
+            }
+
+            let compile_ms = 0.0; // engines expose this via acl; generic 0
+            WorkerReport {
+                worker,
+                batches,
+                images,
+                ledger: eng.ledger().clone(),
+                compile_ms,
+            }
+        })
+        .expect("spawn worker")
+}
+
+fn fail_batch(reqs: &[Request], msg: &str) {
+    for r in reqs {
+        let _ = r.reply.send(Response::error(r.id, msg));
+    }
+}
+
+fn fail_batch_owned(reqs: Vec<Request>, msg: &str) {
+    for r in &reqs {
+        let _ = r.reply.send(Response::error(r.id, msg));
+    }
+}

@@ -1,0 +1,194 @@
+//! The ACL engine — the paper's from-scratch inference engine.
+//!
+//! What makes it "from scratch" in this reproduction (mirroring the
+//! paper's ACL engine structure):
+//!
+//! * **Fused executables.**  Staged mode runs one executable per network
+//!   stage (conv1-block, each fire module with its trailing pool folded
+//!   in, the head); fused mode runs the *whole network* as one
+//!   executable.  No concatenate op exists anywhere — the fire kernel
+//!   writes expand branches into channel slices (L1).
+//! * **Weights resident.**  All parameters are XLA literals created once
+//!   at load; the request path only builds the input literal.
+//! * **Thin dispatch.**  The stage loop is a `for` over a pre-resolved
+//!   `Vec<Rc<Executable>>` — no name lookups, no graph walking, no
+//!   refcounted registry.  (Contrast with tf.rs, deliberately.)
+//!
+//! Probe mode is Staged with finer stage boundaries so the ledger can
+//! attribute time to the paper's group 1 / group 2 (Fig 3 breakdown).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::metrics::ledger::{Group, Ledger};
+use crate::runtime::{
+    literal_from_tensor, run_timed, tensor_from_literal, Manifest, Runtime,
+    StageEntry, WeightStore,
+};
+use crate::tensor::Tensor;
+
+/// Execution granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// One executable per serving stage (10 stages).
+    Staged,
+    /// One executable for the whole network.
+    Fused,
+    /// One executable per probe stage (15; Fig 3 breakdown granularity).
+    Probe,
+}
+
+/// A stage with its per-batch-size compiled executables and resolved
+/// weight literals (resolved once — no lookups on the hot path).
+struct CompiledStage {
+    name: String,
+    group: Group,
+    exes: BTreeMap<usize, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+pub struct AclEngine {
+    mode: Mode,
+    name: String,
+    stages: Vec<CompiledStage>,
+    /// Stage index -> resolved param literal indices into `weights`.
+    stage_params: Vec<Vec<String>>,
+    weights: WeightStore,
+    runtime: Runtime,
+    manifest: Manifest,
+    ledger: Ledger,
+    batch_sizes: Vec<usize>,
+}
+
+impl AclEngine {
+    pub fn new(manifest: &Manifest, mode: Mode) -> Result<AclEngine> {
+        let runtime = Runtime::cpu()?;
+        let weights = WeightStore::load(manifest)?;
+
+        let (entries, batch_sizes): (Vec<StageEntry>, Vec<usize>) = match mode {
+            Mode::Staged => (manifest.stages.clone(), manifest.batch_sizes.clone()),
+            Mode::Probe => (manifest.probe_stages.clone(), vec![1]),
+            Mode::Fused => (Vec::new(), manifest.full.keys().copied().collect()),
+        };
+
+        let mut stages = Vec::new();
+        let mut stage_params = Vec::new();
+        match mode {
+            Mode::Fused => {
+                let mut exes = BTreeMap::new();
+                for (&b, rel) in &manifest.full {
+                    exes.insert(b, runtime.load(&manifest.path(rel))?);
+                }
+                stages.push(CompiledStage {
+                    name: "full".into(),
+                    group: Group::Other,
+                    exes,
+                });
+                stage_params
+                    .push(manifest.params.iter().map(|p| p.name.clone()).collect());
+            }
+            _ => {
+                for st in &entries {
+                    let mut exes = BTreeMap::new();
+                    for (&b, rel) in &st.artifacts {
+                        if batch_sizes.contains(&b) {
+                            exes.insert(
+                                b,
+                                runtime.load(&manifest.path(rel)).with_context(
+                                    || format!("stage {} b{}", st.name, b),
+                                )?,
+                            );
+                        }
+                    }
+                    let group = st
+                        .group
+                        .as_deref()
+                        .map(Group::parse)
+                        .unwrap_or(Group::Other);
+                    stages.push(CompiledStage {
+                        name: st.name.clone(),
+                        group,
+                        exes,
+                    });
+                    stage_params.push(st.params.clone());
+                }
+            }
+        }
+
+        let name = match mode {
+            Mode::Staged => "acl",
+            Mode::Fused => "acl-fused",
+            Mode::Probe => "acl-probe",
+        };
+        Ok(AclEngine {
+            mode,
+            name: name.to_string(),
+            stages,
+            stage_params,
+            weights,
+            runtime,
+            manifest: manifest.clone(),
+            ledger: Ledger::new(),
+            batch_sizes,
+        })
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Total time this engine spent in XLA compilation (startup story).
+    pub fn compile_time(&self) -> std::time::Duration {
+        self.runtime.compile_time()
+    }
+}
+
+impl super::Engine for AclEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let b = *batch.shape().first().unwrap_or(&0);
+        if !self.batch_sizes.contains(&b) {
+            bail!(
+                "{}: no artifact for batch {b} (have {:?})",
+                self.name,
+                self.batch_sizes
+            );
+        }
+        let mut cur = literal_from_tensor(batch)?;
+        for (stage, params) in self.stages.iter().zip(&self.stage_params) {
+            let exe = stage
+                .exes
+                .get(&b)
+                .with_context(|| format!("stage {} missing b{b}", stage.name))?;
+            // Pre-resolved literals: params first, activation last (the
+            // lowering convention from aot.py).
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 1);
+            for p in params {
+                args.push(self.weights.literal(p)?);
+            }
+            args.push(&cur);
+            let (out, dt) = run_timed(exe, &args)
+                .with_context(|| format!("stage {}", stage.name))?;
+            self.ledger.record(&stage.name, stage.group, dt);
+            cur = out;
+        }
+        let probs = tensor_from_literal(&cur)?;
+        debug_assert_eq!(probs.shape(), &[b, self.manifest.num_classes]);
+        Ok(probs)
+    }
+
+    fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    fn ledger_mut(&mut self) -> &mut Ledger {
+        &mut self.ledger
+    }
+}

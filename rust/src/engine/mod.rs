@@ -1,0 +1,132 @@
+//! Execution engines — the paper's two protagonists plus the Fig 4 variant.
+//!
+//! * [`acl::AclEngine`] — the **from-scratch** engine: fused per-stage (or
+//!   single fully-fused) executables, weights resident, no concat ops, no
+//!   graph interpretation.  The paper's contribution.
+//! * [`tf::TfBaselineEngine`] — the **ported-framework** baseline: a
+//!   generic graph interpreter dispatching one executable per primitive
+//!   op through a dynamic tensor registry, materializing every
+//!   intermediate (including the fire-module concats).
+//! * [`quant::QuantEngine`] — the baseline with Fig 4's int8 graph surgery
+//!   (quantize / conv_q8 / dequantize+bias per conv).
+//!
+//! Both baselines run the *same* L1 Pallas kernels as the ACL engine, so
+//! measured deltas are pure engine structure (DESIGN.md §Substitutions).
+
+pub mod acl;
+pub mod graph_exec;
+pub mod quant;
+pub mod tf;
+
+use anyhow::Result;
+
+use crate::metrics::ledger::Ledger;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+/// A batch-in, probabilities-out inference engine.
+///
+/// `infer` takes `(B, 227, 227, 3)` and returns `(B, 1000)` softmax
+/// probabilities.  Engines are single-threaded by design (XLA handles are
+/// not Send); the coordinator gives each worker thread its own instance.
+pub trait Engine {
+    /// Short id: "acl", "acl-fused", "acl-probe", "tf", "quant".
+    fn name(&self) -> &str;
+
+    /// Batch sizes with compiled artifacts (1 always included).
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// Run one batch.
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor>;
+
+    /// Cumulative per-op/per-stage timing ledger (cleared by callers
+    /// between measurement windows).
+    fn ledger(&self) -> &Ledger;
+    fn ledger_mut(&mut self) -> &mut Ledger;
+
+    /// Compile + run everything once so later timings exclude compilation.
+    fn warmup(&mut self) -> Result<()> {
+        let hw = 227;
+        let x = Tensor::zeros(&[1, hw, hw, 3]);
+        self.infer(&x)?;
+        self.ledger_mut().clear();
+        Ok(())
+    }
+}
+
+/// Engine selector used by the CLI / config / benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// ACL, per-stage fused executables (default serving mode).
+    AclStaged,
+    /// ACL, one fully-fused executable per batch size.
+    AclFused,
+    /// ACL at probe granularity (Fig 3 group breakdown).
+    AclProbe,
+    /// TF-baseline op-by-op graph interpreter.
+    TfBaseline,
+    /// Quantized baseline (Fig 4).
+    Quant,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s {
+            "acl" | "acl-staged" => EngineKind::AclStaged,
+            "acl-fused" => EngineKind::AclFused,
+            "acl-probe" => EngineKind::AclProbe,
+            "tf" | "tf-baseline" => EngineKind::TfBaseline,
+            "quant" | "tf-quant" => EngineKind::Quant,
+            _ => anyhow::bail!(
+                "unknown engine '{s}' (acl|acl-fused|acl-probe|tf|quant)"
+            ),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::AclStaged => "acl",
+            EngineKind::AclFused => "acl-fused",
+            EngineKind::AclProbe => "acl-probe",
+            EngineKind::TfBaseline => "tf",
+            EngineKind::Quant => "quant",
+        }
+    }
+}
+
+/// Build an engine (fresh Runtime + WeightStore per instance; see trait
+/// docs for the threading rationale).
+pub fn build(kind: EngineKind, manifest: &Manifest) -> Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::AclStaged => {
+            Box::new(acl::AclEngine::new(manifest, acl::Mode::Staged)?)
+        }
+        EngineKind::AclFused => {
+            Box::new(acl::AclEngine::new(manifest, acl::Mode::Fused)?)
+        }
+        EngineKind::AclProbe => {
+            Box::new(acl::AclEngine::new(manifest, acl::Mode::Probe)?)
+        }
+        EngineKind::TfBaseline => Box::new(tf::TfBaselineEngine::new(manifest)?),
+        EngineKind::Quant => Box::new(quant::QuantEngine::new(manifest)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            EngineKind::AclStaged,
+            EngineKind::AclFused,
+            EngineKind::AclProbe,
+            EngineKind::TfBaseline,
+            EngineKind::Quant,
+        ] {
+            assert_eq!(EngineKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(EngineKind::parse("pytorch").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! The quantized baseline engine — Fig 4's experiment.
+//!
+//! Same generic graph interpreter as tf.rs, but over the quantized graph:
+//! every conv becomes `quantize -> conv_q8 -> dequantize+bias` (118 ops
+//! total vs the fp32 baseline's 66).  The ledger's `Quant` group collects
+//! exactly the re-quantize / de-quantize overhead the paper blames for the
+//! end-to-end slowdown; `Group1` collects the (cheaper) int8 convs.
+
+use anyhow::Result;
+
+use crate::metrics::ledger::Ledger;
+use crate::runtime::{
+    literal_from_tensor, tensor_from_literal, Manifest, Runtime, WeightStore,
+};
+use crate::tensor::Tensor;
+
+use super::graph_exec::{self, CompiledOp, ExecStats};
+
+pub struct QuantEngine {
+    ops: Vec<CompiledOp>,
+    weights: WeightStore,
+    #[allow(dead_code)] // owns the executables' client
+    runtime: Runtime,
+    ledger: Ledger,
+    num_classes: usize,
+    pub last_stats: ExecStats,
+}
+
+impl QuantEngine {
+    pub fn new(manifest: &Manifest) -> Result<QuantEngine> {
+        let runtime = Runtime::cpu()?;
+        let weights = WeightStore::load(manifest)?;
+        let ops = graph_exec::compile_graph(&runtime, manifest, &manifest.quant_ops)?;
+        Ok(QuantEngine {
+            ops,
+            weights,
+            runtime,
+            ledger: Ledger::new(),
+            num_classes: manifest.num_classes,
+            last_stats: ExecStats::default(),
+        })
+    }
+
+    pub fn ops_per_image(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+impl super::Engine for QuantEngine {
+    fn name(&self) -> &str {
+        "quant"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let images = if batch.shape().first() == Some(&1) {
+            vec![batch.clone()]
+        } else {
+            batch
+                .unstack()?
+                .into_iter()
+                .map(|t| {
+                    let mut shape = vec![1];
+                    shape.extend(t.shape());
+                    t.reshape(&shape.clone()).unwrap()
+                })
+                .collect()
+        };
+
+        let mut rows = Vec::with_capacity(images.len());
+        for img in &images {
+            let input = literal_from_tensor(img)?;
+            let (out, stats) = graph_exec::execute(
+                &self.ops,
+                &self.weights,
+                input,
+                1,
+                &mut self.ledger,
+            )?;
+            self.last_stats = stats;
+            rows.push(tensor_from_literal(&out)?);
+        }
+        let refs: Vec<&Tensor> = rows.iter().collect();
+        Tensor::stack(&refs)?.reshape(&[images.len(), self.num_classes])
+    }
+
+    fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    fn ledger_mut(&mut self) -> &mut Ledger {
+        &mut self.ledger
+    }
+}

@@ -1,0 +1,105 @@
+//! The TF-baseline engine — a miniature of the ported framework the paper
+//! measured against.
+//!
+//! Executes the SqueezeNet op graph (66 primitive ops, including the 8
+//! explicit fire-module concats) through the generic interpreter in
+//! graph_exec.rs.  Every op is its own executable dispatch; every edge is
+//! materialized; concat is a real copy.  The compute inside each op comes
+//! from the *same* Pallas kernels the ACL engine uses — measured deltas
+//! are engine structure only (the paper's "both use NEON" control).
+//!
+//! Batch handling: like a framework with a fixed batch-1 graph, batches
+//! are processed image-by-image (the paper also reports per-image
+//! latency).
+
+use anyhow::Result;
+
+use crate::metrics::ledger::Ledger;
+use crate::runtime::{
+    literal_from_tensor, tensor_from_literal, Manifest, Runtime, WeightStore,
+};
+use crate::tensor::Tensor;
+
+use super::graph_exec::{self, CompiledOp, ExecStats};
+
+pub struct TfBaselineEngine {
+    ops: Vec<CompiledOp>,
+    weights: WeightStore,
+    #[allow(dead_code)] // owns the executables' client
+    runtime: Runtime,
+    ledger: Ledger,
+    num_classes: usize,
+    pub last_stats: ExecStats,
+}
+
+impl TfBaselineEngine {
+    pub fn new(manifest: &Manifest) -> Result<TfBaselineEngine> {
+        let runtime = Runtime::cpu()?;
+        let weights = WeightStore::load(manifest)?;
+        let ops = graph_exec::compile_graph(&runtime, manifest, &manifest.ops)?;
+        Ok(TfBaselineEngine {
+            ops,
+            weights,
+            runtime,
+            ledger: Ledger::new(),
+            num_classes: manifest.num_classes,
+            last_stats: ExecStats::default(),
+        })
+    }
+
+    pub fn ops_per_image(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+impl super::Engine for TfBaselineEngine {
+    fn name(&self) -> &str {
+        "tf"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let images = if batch.shape().first() == Some(&1) {
+            vec![batch.clone()]
+        } else {
+            batch
+                .unstack()?
+                .into_iter()
+                .map(|t| {
+                    let mut shape = vec![1];
+                    shape.extend(t.shape());
+                    t.reshape(&shape.clone()).unwrap()
+                })
+                .collect()
+        };
+
+        let mut rows = Vec::with_capacity(images.len());
+        for img in &images {
+            let input = literal_from_tensor(img)?;
+            let (out, stats) = graph_exec::execute(
+                &self.ops,
+                &self.weights,
+                input,
+                1,
+                &mut self.ledger,
+            )?;
+            self.last_stats = stats;
+            rows.push(tensor_from_literal(&out)?);
+        }
+        let refs: Vec<&Tensor> = rows.iter().collect();
+        let stacked = Tensor::stack(&refs)?;
+        // rows are (1, C); stacked is (B, 1, C) -> (B, C).
+        stacked.reshape(&[images.len(), self.num_classes])
+    }
+
+    fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    fn ledger_mut(&mut self) -> &mut Ledger {
+        &mut self.ledger
+    }
+}

@@ -1,0 +1,55 @@
+//! # zuluko-infer
+//!
+//! A from-scratch embedded inference **serving engine**, reproducing
+//! *"Enabling Embedded Inference Engine with the ARM Compute Library: A
+//! Case Study"* (Sun, Liu, Gaudiot 2017) on a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the "ACL
+//!   building blocks" (conv, pool, softmax, the fused concat-free fire
+//!   module, int8 quantization).
+//! * **L2** — JAX SqueezeNet v1.0 (`python/compile/model.py`), AOT-lowered
+//!   to HLO-text artifacts.
+//! * **L3** — this crate: the serving coordinator (router, dynamic
+//!   batcher, worker pool, TCP server) with two execution backends:
+//!   the paper's from-scratch **ACL engine** (fused stages) and the
+//!   **TF-baseline engine** (op-by-op graph interpreter), plus the Fig 4
+//!   quantized variant.
+//!
+//! Python never runs on the request path; `make artifacts` runs it once.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod testkit;
+pub mod trace;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$ZULUKO_ARTIFACTS` or `./artifacts`
+/// (walking up from the current dir so tests work from target/).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("ZULUKO_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

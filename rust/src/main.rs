@@ -1,0 +1,178 @@
+//! `zuluko` — the embedded inference engine CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   serve      start the TCP serving frontend over the coordinator
+//!   infer      one-shot inference on a PPM file or synthetic image
+//!   bench      quick in-process latency benchmark of an engine
+//!   inspect    print manifest / artifact inventory
+//!
+//! Examples:
+//!   zuluko serve --engine acl --workers 1 --max-batch 8
+//!   zuluko infer --ppm frame.ppm --engine acl-fused
+//!   zuluko bench --engine tf --iters 10
+//!   zuluko inspect
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use zuluko::config::Config;
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::build;
+use zuluko::runtime::Manifest;
+use zuluko::server::Server;
+use zuluko::tensor::image::Image;
+use zuluko::tensor::Tensor;
+use zuluko::util::cli::Args;
+use zuluko::{info, util};
+
+const FLAGS: &[&str] = &[
+    // config flags
+    "config",
+    "artifacts",
+    "engine",
+    "workers",
+    "max-batch",
+    "batch-timeout-ms",
+    "queue-capacity",
+    "listen",
+    "log-level",
+    // command-specific
+    "ppm",
+    "seed",
+    "iters",
+    "warmup",
+    "top",
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(FLAGS).map_err(anyhow::Error::msg)?;
+    let cfg = Config::from_args(&args)?;
+    util::log::set_level(cfg.log_level);
+
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&cfg),
+        Some("infer") => cmd_infer(&cfg, &args),
+        Some("bench") => cmd_bench(&cfg, &args),
+        Some("inspect") => cmd_inspect(&cfg),
+        Some(other) => bail!("unknown subcommand '{other}' (serve|infer|bench|inspect)"),
+        None => {
+            eprintln!("usage: zuluko <serve|infer|bench|inspect> [flags]");
+            eprintln!("flags: {}", FLAGS.join(", "));
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    info!("main", "starting coordinator (engine={})", cfg.engine.as_str());
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let server = Server::start(coord.clone(), &cfg.listen)?;
+    info!("main", "serving on {} — Ctrl-C to stop", server.addr());
+    // Serve until killed; periodic stats line.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let s = coord.stats();
+        info!(
+            "main",
+            "completed={} rejected={} queued={} p50={:.1}ms",
+            s.completed,
+            s.rejected,
+            s.queued,
+            s.latency_summary.1
+        );
+    }
+}
+
+fn cmd_infer(cfg: &Config, args: &Args) -> Result<()> {
+    let image = match args.get("ppm") {
+        Some(path) => Image::load_ppm(std::path::Path::new(path))?,
+        None => {
+            let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
+            info!("main", "no --ppm given; using synthetic image seed={seed}");
+            Image::synthetic(227, 227, seed)
+        }
+    };
+    let input = image.to_input();
+
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let mut engine = build(cfg.engine, &manifest)?;
+    let t0 = std::time::Instant::now();
+    engine.warmup()?;
+    info!("main", "engine {} ready in {:.1}s", engine.name(),
+          t0.elapsed().as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    let probs = engine.infer(&input)?;
+    let dt = util::ms(t0.elapsed());
+
+    let row = probs.unstack()?.remove(0);
+    let k = args.get_usize("top", 5).map_err(anyhow::Error::msg)?;
+    println!("inference: {dt:.1} ms on {}", engine.name());
+    for (rank, (idx, p)) in row.topk(k).iter().enumerate() {
+        println!("  #{:<2} class {:<4} p={:.4}", rank + 1, idx, p);
+    }
+    Ok(())
+}
+
+fn cmd_bench(cfg: &Config, args: &Args) -> Result<()> {
+    let iters = args.get_usize("iters", 10).map_err(anyhow::Error::msg)?;
+    let warmup = args.get_usize("warmup", 2).map_err(anyhow::Error::msg)?;
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let mut engine = build(cfg.engine, &manifest)?;
+    engine.warmup()?;
+    let input = Tensor::random(&[1, 227, 227, 3], 7);
+
+    let stats = zuluko::bench::Bench::new(engine.name())
+        .warmup(warmup)
+        .iters(iters)
+        .run(|| {
+            engine.infer(&input).expect("infer");
+        });
+    println!("{}", zuluko::bench::Stats::HEADER);
+    println!("{}", stats.row());
+
+    let groups = engine.ledger().group_ms();
+    let total: f64 = groups.iter().sum();
+    if total > 0.0 {
+        println!(
+            "ledger: group1 {:.0}ms ({:.0}%), group2 {:.0}ms ({:.0}%), quant {:.0}ms",
+            groups[0],
+            groups[0] / total * 100.0,
+            groups[1],
+            groups[1] / total * 100.0,
+            groups[2]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(cfg: &Config) -> Result<()> {
+    let m = Manifest::load(&cfg.artifacts)
+        .with_context(|| format!("artifacts at {}", cfg.artifacts.display()))?;
+    println!("model: {} ({}x{}x{} -> {} classes)",
+             m.model, m.input_hw, m.input_hw, m.input_channels, m.num_classes);
+    println!("attenuation (dropout compensation): {}", m.attenuation);
+    let total: usize = m.params.iter().map(|p| p.nelems).sum();
+    println!("params: {} tensors, {} elems ({:.1} MB fp32, {:.1} MB int8)",
+             m.params.len(), total, total as f64 * 4.0 / 1e6,
+             m.params_q8.iter().map(|p| p.nelems).sum::<usize>() as f64 / 1e6);
+    println!("batch sizes: {:?}", m.batch_sizes);
+    println!("stages ({}):", m.stages.len());
+    for s in &m.stages {
+        println!("  {:>2} {:<8} {:?} -> {:?} [{} batch variants]",
+                 s.index, s.name, s.in_shape, s.out_shape, s.artifacts.len());
+    }
+    println!("probe stages: {}", m.probe_stages.len());
+    println!("baseline ops: {} fp32, {} quantized", m.ops.len(), m.quant_ops.len());
+    println!("golden: top1={} (q8 {})", m.golden.top1, m.golden.top1_q8);
+    println!("flops/image (conv only): {:.2} GFLOP",
+             zuluko::model::conv_flops(&m) as f64 / 1e9);
+    Ok(())
+}

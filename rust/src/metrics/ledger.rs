@@ -1,0 +1,163 @@
+//! Per-op timing ledger — the instrument behind the paper's Fig 3
+//! breakdown ("group 1: convolution, ReLU, concatenate; group 2: pooling
+//! and soft-max") and Fig 4's quant-overhead accounting.
+//!
+//! Engines record `(unit name, group, duration)` per executable launch;
+//! the ledger aggregates per unit and per group.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Fig 3 / Fig 4 op groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Group {
+    /// convolution + ReLU + concatenate
+    Group1,
+    /// pooling + soft-max (+ attenuation)
+    Group2,
+    /// quantize / dequantize overhead ops (Fig 4 only)
+    Quant,
+    /// dispatch & host work not attributable to an op
+    Other,
+}
+
+impl Group {
+    pub fn parse(s: &str) -> Group {
+        match s {
+            "group1" => Group::Group1,
+            "group2" => Group::Group2,
+            "quant" => Group::Quant,
+            _ => Group::Other,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Group::Group1 => "group1(conv/relu/concat)",
+            Group::Group2 => "group2(pool/softmax)",
+            Group::Quant => "quant(q/dq overhead)",
+            Group::Other => "other",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct UnitStat {
+    pub calls: u64,
+    pub total: Duration,
+}
+
+/// Aggregated per-op / per-group timings for one measurement window.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    units: BTreeMap<String, (Group, UnitStat)>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    pub fn record(&mut self, unit: &str, group: Group, d: Duration) {
+        let e = self
+            .units
+            .entry(unit.to_string())
+            .or_insert((group, UnitStat::default()));
+        e.1.calls += 1;
+        e.1.total += d;
+    }
+
+    pub fn clear(&mut self) {
+        self.units.clear();
+    }
+
+    /// Total time attributed to a group.
+    pub fn group_total(&self, g: Group) -> Duration {
+        self.units
+            .values()
+            .filter(|(gg, _)| *gg == g)
+            .map(|(_, s)| s.total)
+            .sum()
+    }
+
+    /// Total across all groups.
+    pub fn total(&self) -> Duration {
+        self.units.values().map(|(_, s)| s.total).sum()
+    }
+
+    /// Per-group totals in ms, ordered [group1, group2, quant, other].
+    pub fn group_ms(&self) -> [f64; 4] {
+        [
+            crate::util::ms(self.group_total(Group::Group1)),
+            crate::util::ms(self.group_total(Group::Group2)),
+            crate::util::ms(self.group_total(Group::Quant)),
+            crate::util::ms(self.group_total(Group::Other)),
+        ]
+    }
+
+    /// Per-unit rows (name, group, calls, total ms), insertion-agnostic
+    /// (sorted by name).
+    pub fn rows(&self) -> Vec<(String, Group, u64, f64)> {
+        self.units
+            .iter()
+            .map(|(k, (g, s))| (k.clone(), *g, s.calls, crate::util::ms(s.total)))
+            .collect()
+    }
+
+    /// Merge another window into this one.
+    pub fn merge(&mut self, other: &Ledger) {
+        for (k, (g, s)) in &other.units {
+            let e = self
+                .units
+                .entry(k.clone())
+                .or_insert((*g, UnitStat::default()));
+            e.1.calls += s.calls;
+            e.1.total += s.total;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_classification_totals() {
+        let mut l = Ledger::new();
+        l.record("conv1", Group::Group1, Duration::from_millis(10));
+        l.record("conv1", Group::Group1, Duration::from_millis(10));
+        l.record("pool1", Group::Group2, Duration::from_millis(3));
+        l.record("quantize", Group::Quant, Duration::from_millis(2));
+        assert_eq!(l.group_total(Group::Group1), Duration::from_millis(20));
+        assert_eq!(l.group_total(Group::Group2), Duration::from_millis(3));
+        assert_eq!(l.group_total(Group::Quant), Duration::from_millis(2));
+        assert_eq!(l.total(), Duration::from_millis(25));
+        let rows = l.rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].2, 2); // conv1 called twice
+    }
+
+    #[test]
+    fn parse_group_strings() {
+        assert_eq!(Group::parse("group1"), Group::Group1);
+        assert_eq!(Group::parse("group2"), Group::Group2);
+        assert_eq!(Group::parse("quant"), Group::Quant);
+        assert_eq!(Group::parse("???"), Group::Other);
+    }
+
+    #[test]
+    fn merge_windows() {
+        let mut a = Ledger::new();
+        a.record("x", Group::Group1, Duration::from_millis(1));
+        let mut b = Ledger::new();
+        b.record("x", Group::Group1, Duration::from_millis(2));
+        b.record("y", Group::Group2, Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.group_total(Group::Group1), Duration::from_millis(3));
+        assert_eq!(a.group_total(Group::Group2), Duration::from_millis(4));
+    }
+}

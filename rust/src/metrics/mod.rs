@@ -1,0 +1,199 @@
+//! Metrics substrate: latency histograms, counters, the per-op timing
+//! ledger (Fig 3 breakdown), and /proc system monitoring (Fig 3
+//! utilization).
+
+pub mod ledger;
+pub mod sysmon;
+
+use std::time::Duration;
+
+use crate::util::{mean, ms, percentile_sorted};
+
+/// Latency histogram with exact sample retention (bounded) + summary.
+///
+/// Serving runs are short (10^3..10^5 samples), so we keep raw samples up
+/// to a cap and degrade to reservoir sampling beyond it — exact percentiles
+/// for every experiment in this repo, bounded memory always.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    samples_ms: Vec<f64>,
+    cap: usize,
+    /// Total observations (may exceed samples_ms.len() once capped).
+    count: u64,
+    sum_ms: f64,
+    max_ms: f64,
+    /// xorshift state for reservoir replacement.
+    rng: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::with_cap(1 << 20)
+    }
+}
+
+impl Histogram {
+    pub fn with_cap(cap: usize) -> Histogram {
+        Histogram {
+            samples_ms: Vec::new(),
+            cap: cap.max(16),
+            count: 0,
+            sum_ms: 0.0,
+            max_ms: 0.0,
+            rng: 0x9E3779B97F4A7C15,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ms(ms(d));
+    }
+
+    pub fn record_ms(&mut self, v: f64) {
+        self.count += 1;
+        self.sum_ms += v;
+        self.max_ms = self.max_ms.max(v);
+        if self.samples_ms.len() < self.cap {
+            self.samples_ms.push(v);
+        } else {
+            // Reservoir: replace a random slot with probability cap/count.
+            self.rng ^= self.rng >> 12;
+            self.rng ^= self.rng << 25;
+            self.rng ^= self.rng >> 27;
+            let idx = (self.rng.wrapping_mul(0x2545F4914F6CDD1D) % self.count) as usize;
+            if idx < self.cap {
+                self.samples_ms[idx] = v;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&s, p)
+    }
+
+    /// (mean, p50, p95, p99, max) in ms — the standard report row.
+    pub fn summary(&self) -> (f64, f64, f64, f64, f64) {
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            self.mean_ms(),
+            percentile_sorted(&s, 50.0),
+            percentile_sorted(&s, 95.0),
+            percentile_sorted(&s, 99.0),
+            self.max_ms,
+        )
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        let pre_samples = other.samples_ms.len() as u64;
+        let pre_sum: f64 = other.samples_ms.iter().sum();
+        for &v in &other.samples_ms {
+            self.record_ms(v);
+        }
+        // record_ms counted only retained samples; correct to true totals.
+        self.count = self.count - pre_samples + other.count;
+        self.sum_ms = self.sum_ms - pre_sum + other.sum_ms;
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
+}
+
+/// Throughput window: requests + images over a wall-clock span.
+#[derive(Debug, Clone, Default)]
+pub struct Throughput {
+    pub requests: u64,
+    pub images: u64,
+    pub wall: Duration,
+}
+
+impl Throughput {
+    pub fn rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.requests as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn ips(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.images as f64 / self.wall.as_secs_f64()
+        }
+    }
+}
+
+/// Mean of a duration slice in ms (bench helper).
+pub fn mean_ms(xs: &[Duration]) -> f64 {
+    mean(&xs.iter().map(|d| ms(*d)).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_summary() {
+        let mut h = Histogram::default();
+        for v in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            h.record_ms(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_ms() - 22.0).abs() < 1e-9);
+        assert_eq!(h.percentile_ms(50.0), 3.0);
+        assert_eq!(h.max_ms(), 100.0);
+    }
+
+    #[test]
+    fn histogram_reservoir_keeps_count_exact() {
+        let mut h = Histogram::with_cap(16);
+        for i in 0..1000 {
+            h.record_ms(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.samples_ms.len(), 16);
+        assert!((h.mean_ms() - 499.5).abs() < 1e-9);
+        assert_eq!(h.max_ms(), 999.0);
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let mut a = Histogram::default();
+        a.record_ms(1.0);
+        let mut b = Histogram::default();
+        b.record_ms(3.0);
+        b.record_ms(5.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean_ms() - 3.0).abs() < 1e-9);
+        assert_eq!(a.max_ms(), 5.0);
+    }
+
+    #[test]
+    fn throughput_rates() {
+        let t = Throughput {
+            requests: 50,
+            images: 100,
+            wall: Duration::from_secs(2),
+        };
+        assert!((t.rps() - 25.0).abs() < 1e-9);
+        assert!((t.ips() - 50.0).abs() < 1e-9);
+    }
+}

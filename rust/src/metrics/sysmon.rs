@@ -1,0 +1,168 @@
+//! /proc-based system monitor — reproduces the paper's Fig 3 utilization
+//! numbers ("TF: 75% CPU, ~9 MB; ACL: 90% CPU, ~10 MB").
+//!
+//! A sampler thread reads `/proc/self/stat` (process jiffies) and
+//! `/proc/stat` (total jiffies) plus `/proc/self/status` (VmRSS) on a
+//! fixed interval; `stop()` returns average process CPU% (normalized to
+//! one core, like `top`) and peak/average RSS deltas over the window.
+
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One utilization sample.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    proc_jiffies: u64,
+    total_jiffies: u64,
+    rss_kb: u64,
+}
+
+/// Utilization summary over a monitored window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    /// Process CPU as a fraction of one core (0.9 == 90%).
+    pub cpu_frac: f64,
+    pub avg_rss_mb: f64,
+    pub peak_rss_mb: f64,
+    pub samples: usize,
+}
+
+fn read_proc_self_stat() -> Result<u64> {
+    let text = std::fs::read_to_string("/proc/self/stat")?;
+    // Field 2 (comm) may contain spaces; skip past the closing paren.
+    let rest = text
+        .rsplit_once(')')
+        .map(|(_, r)| r)
+        .context("malformed /proc/self/stat")?;
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    // After comm: state is field 0; utime is field 11, stime 12 (0-based).
+    let utime: u64 = fields.get(11).context("utime")?.parse()?;
+    let stime: u64 = fields.get(12).context("stime")?.parse()?;
+    Ok(utime + stime)
+}
+
+
+fn read_proc_stat_total() -> Result<u64> {
+    let text = std::fs::read_to_string("/proc/stat")?;
+    let line = text.lines().next().context("empty /proc/stat")?;
+    let mut total = 0u64;
+    for f in line.split_whitespace().skip(1) {
+        total += f.parse::<u64>().unwrap_or(0);
+    }
+    Ok(total)
+}
+
+fn read_rss_kb() -> Result<u64> {
+    let text = std::fs::read_to_string("/proc/self/status")?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .context("VmRSS parse")?;
+            return Ok(kb);
+        }
+    }
+    anyhow::bail!("no VmRSS in /proc/self/status")
+}
+
+fn sample() -> Result<Sample> {
+    Ok(Sample {
+        proc_jiffies: read_proc_self_stat()?,
+        total_jiffies: read_proc_stat_total()?,
+        rss_kb: read_rss_kb()?,
+    })
+}
+
+/// Background sampler; create with `Sysmon::start`, finish with `stop`.
+pub struct Sysmon {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<Vec<Sample>>,
+}
+
+impl Sysmon {
+    pub fn start(interval: Duration) -> Sysmon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            if let Ok(s) = sample() {
+                out.push(s);
+            }
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                if let Ok(s) = sample() {
+                    out.push(s);
+                }
+            }
+            out
+        });
+        Sysmon { stop, handle }
+    }
+
+    /// Stop sampling and summarize the window.
+    pub fn stop(self) -> Result<Utilization> {
+        self.stop.store(true, Ordering::Relaxed);
+        let samples = self
+            .handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("sysmon thread panicked"))?;
+        if samples.len() < 2 {
+            anyhow::bail!("sysmon window too short ({} samples)", samples.len());
+        }
+        let first = samples[0];
+        let last = samples[samples.len() - 1];
+        let dproc = last.proc_jiffies.saturating_sub(first.proc_jiffies) as f64;
+        let dtotal = last.total_jiffies.saturating_sub(first.total_jiffies) as f64;
+        let ncpu = num_cpus() as f64;
+        // proc/total is "fraction of ALL cores"; scale to one-core units.
+        let cpu_frac = if dtotal > 0.0 { dproc / dtotal * ncpu } else { 0.0 };
+        let rss: Vec<f64> = samples.iter().map(|s| s.rss_kb as f64 / 1024.0).collect();
+        Ok(Utilization {
+            cpu_frac,
+            avg_rss_mb: crate::util::mean(&rss),
+            peak_rss_mb: rss.iter().cloned().fold(0.0, f64::max),
+            samples: samples.len(),
+        })
+    }
+}
+
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proc_readers_work_on_linux() {
+        assert!(read_proc_self_stat().is_ok());
+        assert!(read_proc_stat_total().unwrap() > 0);
+        assert!(read_rss_kb().unwrap() > 0);
+    }
+
+    #[test]
+    fn sysmon_measures_busy_loop() {
+        let mon = Sysmon::start(Duration::from_millis(20));
+        // Burn ~150ms of CPU.
+        let t0 = std::time::Instant::now();
+        let mut x = 0u64;
+        while t0.elapsed() < Duration::from_millis(150) {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(x);
+        let u = mon.stop().unwrap();
+        assert!(u.samples >= 2);
+        assert!(u.cpu_frac > 0.2, "cpu_frac {}", u.cpu_frac);
+        assert!(u.avg_rss_mb > 1.0);
+        assert!(u.peak_rss_mb >= u.avg_rss_mb);
+    }
+}

@@ -1,0 +1,89 @@
+//! Model-level helpers shared by engines and the coordinator: shape math
+//! over manifest entries and Fig 3 group classification of op kinds.
+//!
+//! The network *structure* lives in `artifacts/manifest.json` (written by
+//! python/compile/model.py + graph.py); this module interprets it.
+
+use crate::metrics::ledger::Group;
+use crate::runtime::manifest::{Manifest, OpEntry};
+
+/// Fig 3 classification of a primitive op kind.
+pub fn group_of_kind(kind: &str) -> Group {
+    match kind {
+        "conv" | "conv_q8" | "relu" | "concat" => Group::Group1,
+        "maxpool" | "gap" | "atten" | "softmax" => Group::Group2,
+        "quantize" | "dequant_bias" => Group::Quant,
+        _ => Group::Other,
+    }
+}
+
+/// Elements of a batched shape (batch-less manifest shape + batch dim).
+pub fn batched_elems(shape: &[usize], batch: usize) -> usize {
+    batch * shape.iter().product::<usize>()
+}
+
+/// Bytes a tensor edge occupies in the framework registry.
+pub fn edge_bytes(shape: &[usize], dtype: &str, batch: usize) -> usize {
+    let per = match dtype {
+        "i8" => 1,
+        _ => 4,
+    };
+    batched_elems(shape, batch) * per
+}
+
+/// Total FLOPs of the fp32 network per image (2*MACs), from the op graph.
+/// Used for the §Perf roofline discussion.
+pub fn conv_flops(m: &Manifest) -> u64 {
+    m.ops
+        .iter()
+        .filter(|o| o.kind == "conv")
+        .map(|o| flops_of_conv(o))
+        .sum()
+}
+
+fn flops_of_conv(o: &OpEntry) -> u64 {
+    // out elems * (2 * K*K*Cin)
+    let out: u64 = o.out_shape.iter().product::<usize>() as u64;
+    let k = o.attr_k();
+    let cin = *o.in_shapes[0].last().unwrap_or(&1) as u64;
+    out * 2 * k * k * cin
+}
+
+impl OpEntry {
+    /// Kernel size from the artifact name (manifest attrs are not carried
+    /// into Rust; K is recoverable from shapes: conv weight is params[0]).
+    fn attr_k(&self) -> u64 {
+        // conv weights are named *_w / *_sw / *_e1w / *_e3w; their manifest
+        // shape is (K, K, Cin, Cout) — but OpEntry only has names.  The
+        // known K per site: conv1=7, expand3=3, everything else 1.
+        if self.name == "conv1" {
+            7
+        } else if self.name.contains("expand3") {
+            3
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_mapping_matches_paper() {
+        assert_eq!(group_of_kind("conv"), Group::Group1);
+        assert_eq!(group_of_kind("relu"), Group::Group1);
+        assert_eq!(group_of_kind("concat"), Group::Group1);
+        assert_eq!(group_of_kind("maxpool"), Group::Group2);
+        assert_eq!(group_of_kind("softmax"), Group::Group2);
+        assert_eq!(group_of_kind("quantize"), Group::Quant);
+        assert_eq!(group_of_kind("dequant_bias"), Group::Quant);
+    }
+
+    #[test]
+    fn edge_bytes_by_dtype() {
+        assert_eq!(edge_bytes(&[2, 2, 3], "f32", 1), 48);
+        assert_eq!(edge_bytes(&[2, 2, 3], "i8", 2), 24);
+    }
+}

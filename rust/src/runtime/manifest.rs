@@ -1,0 +1,362 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single contract between the build-time Python world
+//! and the runtime Rust world: parameter tables (with byte offsets into
+//! weights.bin), the ACL stage lists, the baseline op graph, quantization
+//! scales, and the golden-output index.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One fp32 parameter tensor's slot in weights.bin.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 *elements* from the start of weights.bin.
+    pub offset: usize,
+    pub nelems: usize,
+}
+
+/// One int8 parameter tensor's slot in weights_q8.bin.
+#[derive(Debug, Clone)]
+pub struct ParamQ8Entry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in bytes (i8 elements) from the start of weights_q8.bin.
+    pub offset: usize,
+    pub nelems: usize,
+    pub scale: f64,
+}
+
+/// One fused ACL stage (serving or probe granularity).
+#[derive(Debug, Clone)]
+pub struct StageEntry {
+    pub index: usize,
+    pub name: String,
+    pub params: Vec<String>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// Fig 3 group ("group1"/"group2") — probe stages only.
+    pub group: Option<String>,
+    /// batch size -> artifact relpath.
+    pub artifacts: BTreeMap<usize, String>,
+}
+
+/// One primitive op of the baseline (or quantized) graph.
+#[derive(Debug, Clone)]
+pub struct OpEntry {
+    pub index: usize,
+    pub name: String,
+    pub kind: String,
+    pub group: String,
+    pub inputs: Vec<String>,
+    pub params: Vec<String>,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub in_dtypes: Vec<String>,
+    pub out_shape: Vec<usize>,
+    pub out_dtype: String,
+    pub artifact: String,
+}
+
+/// Golden-output index for integration tests.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub input: String,
+    pub probs: String,
+    pub probs_q8: String,
+    pub stages: Vec<String>,
+    pub top1: usize,
+    pub top1_q8: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: String,
+    pub input_hw: usize,
+    pub input_channels: usize,
+    pub num_classes: usize,
+    pub attenuation: f64,
+    pub batch_sizes: Vec<usize>,
+    pub params: Vec<ParamEntry>,
+    pub params_q8: Vec<ParamQ8Entry>,
+    pub scales: BTreeMap<String, f64>,
+    pub stages: Vec<StageEntry>,
+    pub probe_stages: Vec<StageEntry>,
+    /// batch size -> fully-fused artifact relpath.
+    pub full: BTreeMap<usize, String>,
+    pub ops: Vec<OpEntry>,
+    pub quant_ops: Vec<OpEntry>,
+    pub golden: Golden,
+}
+
+fn parse_stage(j: &Json) -> Result<StageEntry> {
+    let mut artifacts = BTreeMap::new();
+    if let Some(m) = j.req("artifacts")?.as_obj() {
+        for (k, v) in m {
+            let b: usize = k.parse().context("artifact batch key")?;
+            artifacts.insert(
+                b,
+                v.as_str().context("artifact path")?.to_string(),
+            );
+        }
+    }
+    Ok(StageEntry {
+        index: j.usize_of("index")?,
+        name: j.str_of("name")?.to_string(),
+        params: string_vec(j.req("params")?)?,
+        in_shape: j.shape_of("in_shape")?,
+        out_shape: j.shape_of("out_shape")?,
+        group: j
+            .get("group")
+            .and_then(|g| g.as_str())
+            .map(|s| s.to_string()),
+        artifacts,
+    })
+}
+
+fn parse_op(j: &Json) -> Result<OpEntry> {
+    let in_shapes = j
+        .req("in_shapes")?
+        .as_arr()
+        .context("in_shapes")?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .context("in_shape")
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        })
+        .collect::<Result<Vec<Vec<usize>>>>()?;
+    Ok(OpEntry {
+        index: j.usize_of("index")?,
+        name: j.str_of("name")?.to_string(),
+        kind: j.str_of("kind")?.to_string(),
+        group: j.str_of("group")?.to_string(),
+        inputs: string_vec(j.req("inputs")?)?,
+        params: string_vec(j.req("params")?)?,
+        in_shapes,
+        in_dtypes: string_vec(j.req("in_dtypes")?)?,
+        out_shape: j.shape_of("out_shape")?,
+        out_dtype: j.str_of("out_dtype")?.to_string(),
+        artifact: j.str_of("artifact")?.to_string(),
+    })
+}
+
+fn string_vec(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()
+        .context("expected array of strings")?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(|s| s.to_string())
+                .context("expected string")
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let params = j
+            .req("params")?
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.str_of("name")?.to_string(),
+                    shape: p.shape_of("shape")?,
+                    offset: p.usize_of("offset")?,
+                    nelems: p.usize_of("nelems")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let params_q8 = j
+            .req("params_q8")?
+            .as_arr()
+            .context("params_q8")?
+            .iter()
+            .map(|p| {
+                Ok(ParamQ8Entry {
+                    name: p.str_of("name")?.to_string(),
+                    shape: p.shape_of("shape")?,
+                    offset: p.usize_of("offset")?,
+                    nelems: p.usize_of("nelems")?,
+                    scale: p.f64_of("scale")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut scales = BTreeMap::new();
+        if let Some(m) = j.req("scales")?.as_obj() {
+            for (k, v) in m {
+                scales.insert(k.clone(), v.as_f64().context("scale")?);
+            }
+        }
+
+        let stages = j
+            .req("stages")?
+            .as_arr()
+            .context("stages")?
+            .iter()
+            .map(parse_stage)
+            .collect::<Result<Vec<_>>>()?;
+        let probe_stages = j
+            .req("probe_stages")?
+            .as_arr()
+            .context("probe_stages")?
+            .iter()
+            .map(parse_stage)
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut full = BTreeMap::new();
+        if let Some(m) = j.req("full")?.as_obj() {
+            for (k, v) in m {
+                full.insert(
+                    k.parse::<usize>().context("full batch key")?,
+                    v.as_str().context("full path")?.to_string(),
+                );
+            }
+        }
+
+        let ops = j
+            .req("ops")?
+            .as_arr()
+            .context("ops")?
+            .iter()
+            .map(parse_op)
+            .collect::<Result<Vec<_>>>()?;
+        let quant_ops = j
+            .req("quant_ops")?
+            .as_arr()
+            .context("quant_ops")?
+            .iter()
+            .map(parse_op)
+            .collect::<Result<Vec<_>>>()?;
+
+        let g = j.req("golden")?;
+        let golden = Golden {
+            input: g.str_of("input")?.to_string(),
+            probs: g.str_of("probs")?.to_string(),
+            probs_q8: g.str_of("probs_q8")?.to_string(),
+            stages: string_vec(g.req("stages")?)?,
+            top1: g.usize_of("top1")?,
+            top1_q8: g.usize_of("top1_q8")?,
+        };
+
+        let m = Manifest {
+            root: root.to_path_buf(),
+            model: j.str_of("model")?.to_string(),
+            input_hw: j.usize_of("input_hw")?,
+            input_channels: j.usize_of("input_channels")?,
+            num_classes: j.usize_of("num_classes")?,
+            attenuation: j.f64_of("attenuation")?,
+            batch_sizes: j.shape_of("batch_sizes")?,
+            params,
+            params_q8,
+            scales,
+            stages,
+            probe_stages,
+            full,
+            ops,
+            quant_ops,
+            golden,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural sanity checks (fail fast at startup, not mid-request).
+    fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            bail!("manifest has no stages");
+        }
+        // Stage chain shapes must line up.
+        for w in self.stages.windows(2) {
+            if w[0].out_shape != w[1].in_shape {
+                bail!(
+                    "stage {} out {:?} != stage {} in {:?}",
+                    w[0].name,
+                    w[0].out_shape,
+                    w[1].name,
+                    w[1].in_shape
+                );
+            }
+        }
+        // Params referenced by stages/ops must exist in a table.
+        let known: std::collections::BTreeSet<&str> = self
+            .params
+            .iter()
+            .map(|p| p.name.as_str())
+            .chain(self.params_q8.iter().map(|p| p.name.as_str()))
+            .collect();
+        for s in self.stages.iter().chain(&self.probe_stages) {
+            for p in &s.params {
+                if !known.contains(p.as_str()) {
+                    bail!("stage {} references unknown param {}", s.name, p);
+                }
+            }
+        }
+        for o in self.ops.iter().chain(&self.quant_ops) {
+            for p in &o.params {
+                if !known.contains(p.as_str()) {
+                    bail!("op {} references unknown param {}", o.name, p);
+                }
+            }
+        }
+        // Op graph must be topologically ordered (producers before users).
+        for ops in [&self.ops, &self.quant_ops] {
+            let mut seen = std::collections::BTreeSet::new();
+            seen.insert("input".to_string());
+            for o in ops.iter() {
+                for i in &o.inputs {
+                    if !seen.contains(i) {
+                        bail!("op {} uses {} before it is produced", o.name, i);
+                    }
+                }
+                seen.insert(o.name.clone());
+            }
+        }
+        Ok(())
+    }
+
+    /// Absolute path of an artifact relpath.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamEntry> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("unknown param {name}"))
+    }
+
+    pub fn param_q8(&self, name: &str) -> Result<&ParamQ8Entry> {
+        self.params_q8
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("unknown q8 param {name}"))
+    }
+
+    /// Largest batch size with a fused artifact <= `n` (batcher helper).
+    pub fn best_batch(&self, n: usize) -> usize {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b <= n.max(1))
+            .max()
+            .unwrap_or(1)
+    }
+}

@@ -1,0 +1,95 @@
+//! Weight store: loads weights.bin / weights_q8.bin once and serves
+//! per-parameter `xla::Literal`s (and raw slices) to the engines.
+//!
+//! Literals are materialized eagerly at load time — the request path never
+//! touches the filesystem or re-encodes a weight (the paper's engine keeps
+//! weights resident the same way; 5 MB fp32 + 1.2 MB int8 ≈ the paper's
+//! ~10 MB memory story).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use super::manifest::Manifest;
+
+/// All parameters, resident as XLA literals keyed by name.
+pub struct WeightStore {
+    f32_lits: BTreeMap<String, xla::Literal>,
+    q8_lits: BTreeMap<String, xla::Literal>,
+    /// Raw fp32 copy kept for goldens/debug (cheap: one network).
+    f32_raw: BTreeMap<String, Vec<f32>>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let wpath = manifest.root.join("weights.bin");
+        let bytes = std::fs::read(&wpath)
+            .with_context(|| format!("reading {}", wpath.display()))?;
+        let total: usize = manifest.params.iter().map(|p| p.nelems).sum();
+        if bytes.len() != total * 4 {
+            bail!(
+                "weights.bin is {} bytes, manifest wants {}",
+                bytes.len(),
+                total * 4
+            );
+        }
+
+        let mut f32_lits = BTreeMap::new();
+        let mut f32_raw = BTreeMap::new();
+        for p in &manifest.params {
+            let lo = p.offset * 4;
+            let hi = lo + p.nelems * 4;
+            let chunk = &bytes[lo..hi];
+            let vals: Vec<f32> = chunk
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &p.shape,
+                chunk,
+            )
+            .with_context(|| format!("literal for {}", p.name))?;
+            f32_lits.insert(p.name.clone(), lit);
+            f32_raw.insert(p.name.clone(), vals);
+        }
+
+        let mut q8_lits = BTreeMap::new();
+        let qpath = manifest.root.join("weights_q8.bin");
+        if qpath.exists() {
+            let qbytes = std::fs::read(&qpath)
+                .with_context(|| format!("reading {}", qpath.display()))?;
+            for p in &manifest.params_q8 {
+                let chunk = &qbytes[p.offset..p.offset + p.nelems];
+                let lit = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    &p.shape,
+                    chunk,
+                )
+                .with_context(|| format!("q8 literal for {}", p.name))?;
+                q8_lits.insert(p.name.clone(), lit);
+            }
+        }
+
+        Ok(WeightStore {
+            f32_lits,
+            q8_lits,
+            f32_raw,
+        })
+    }
+
+    /// Literal for a parameter (fp32 table first, then q8 table).
+    pub fn literal(&self, name: &str) -> Result<&xla::Literal> {
+        self.f32_lits
+            .get(name)
+            .or_else(|| self.q8_lits.get(name))
+            .with_context(|| format!("no literal for param {name}"))
+    }
+
+    pub fn raw_f32(&self, name: &str) -> Option<&[f32]> {
+        self.f32_raw.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn total_f32_params(&self) -> usize {
+        self.f32_raw.values().map(|v| v.len()).sum()
+    }
+}

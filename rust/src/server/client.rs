@@ -1,0 +1,90 @@
+//! Line-protocol client — used by examples, the load generator, and the
+//! server integration test.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::util::json::Json;
+
+/// One parsed inference reply.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub id: u64,
+    pub ok: bool,
+    pub top1: usize,
+    pub total_ms: f64,
+    pub exec_ms: f64,
+    pub queue_ms: f64,
+    pub batch: usize,
+    pub error: Option<String>,
+}
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            bail!("server closed connection");
+        }
+        Json::parse(&reply).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let j = self.roundtrip(r#"{"cmd":"ping"}"#)?;
+        Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"cmd":"stats"}"#)
+    }
+
+    /// Infer on a seeded synthetic image.
+    pub fn infer_synthetic(&mut self, id: u64, seed: u64) -> Result<InferReply> {
+        let line = format!(r#"{{"id":{id},"image":{{"synthetic":{seed}}}}}"#);
+        let j = self.roundtrip(&line)?;
+        Ok(parse_reply(&j))
+    }
+
+    /// Infer on a PPM file (path as seen by the *server*).
+    pub fn infer_ppm(&mut self, id: u64, path: &str) -> Result<InferReply> {
+        let mut img = Json::obj();
+        img.set("ppm", path.into());
+        let mut o = Json::obj();
+        o.set("id", id.into()).set("image", img);
+        let j = self.roundtrip(&o.to_string())?;
+        Ok(parse_reply(&j))
+    }
+}
+
+fn parse_reply(j: &Json) -> InferReply {
+    InferReply {
+        id: j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        ok: j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false),
+        top1: j.get("top1").and_then(|v| v.as_usize()).unwrap_or(0),
+        total_ms: j.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        exec_ms: j.get("exec_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        queue_ms: j.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+        error: j
+            .get("error")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string()),
+    }
+}

@@ -1,0 +1,141 @@
+//! TCP serving frontend: newline-JSON protocol over the coordinator.
+//!
+//! Thread-per-connection with a hard connection cap (embedded budget);
+//! each connection handles requests sequentially but the coordinator
+//! batches *across* connections — that cross-request coalescing is where
+//! serving throughput comes from (E7).
+
+pub mod client;
+pub mod protocol;
+
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, SubmitError};
+use crate::tensor::image::Image;
+
+use protocol::{ClientMsg, ImageSpec};
+
+const MAX_CONNECTIONS: usize = 32;
+
+/// Running server handle.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: std::thread::JoinHandle<()>,
+}
+
+impl Server {
+    /// Bind and serve on a background accept thread.
+    pub fn start(coord: Arc<Coordinator>, listen: &str) -> Result<Server> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let conns = Arc::new(AtomicUsize::new(0));
+
+        let accept_thread = std::thread::Builder::new()
+            .name("zuluko-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            if conns.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
+                                crate::warn!("server", "rejecting {peer}: at connection cap");
+                                drop(stream);
+                                continue;
+                            }
+                            conns.fetch_add(1, Ordering::Relaxed);
+                            let coord = coord.clone();
+                            let conns = conns.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, &coord);
+                                conns.fetch_sub(1, Ordering::Relaxed);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            crate::error!("server", "accept: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+
+        crate::info!("server", "listening on {addr}");
+        Ok(Server {
+            addr,
+            stop,
+            accept_thread,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.accept_thread.join();
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match protocol::parse_request(&line) {
+            Err(e) => protocol::error_line(0, &format!("bad request: {e}")),
+            Ok(ClientMsg::Ping) => "{\"ok\":true,\"pong\":true}".to_string(),
+            Ok(ClientMsg::Stats) => protocol::stats_line(&coord.stats()),
+            Ok(ClientMsg::Infer { id, image }) => {
+                match load_image(&image) {
+                    Err(e) => protocol::error_line(id, &format!("image: {e}")),
+                    Ok(tensor) => match coord.submit(tensor) {
+                        Err(SubmitError::Overloaded) => {
+                            protocol::error_line(id, "overloaded")
+                        }
+                        Err(e) => protocol::error_line(id, &e.to_string()),
+                        Ok(rx) => match rx.recv() {
+                            Ok(mut resp) => {
+                                resp.id = id; // echo client id, not internal id
+                                protocol::response_line(&resp)
+                            }
+                            Err(_) => protocol::error_line(id, "worker gone"),
+                        },
+                    },
+                }
+            }
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn load_image(spec: &ImageSpec) -> Result<crate::tensor::Tensor> {
+    let img = match spec {
+        ImageSpec::Synthetic(seed) => Image::synthetic(227, 227, *seed),
+        ImageSpec::Ppm(path) => Image::load_ppm(std::path::Path::new(path))?,
+    };
+    // (1, H, W, C) -> (H, W, C): the coordinator stacks batches itself.
+    let t = img.to_input();
+    let hw = crate::tensor::image::INPUT_HW;
+    t.reshape(&[hw, hw, 3])
+}

@@ -1,0 +1,188 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Request (one line):
+//! ```json
+//! {"id": 7, "image": {"synthetic": 12345}}          // seeded test image
+//! {"id": 8, "image": {"ppm": "/path/frame.ppm"}}    // file on the device
+//! {"cmd": "stats"}                                  // live stats
+//! {"cmd": "ping"}
+//! ```
+//!
+//! Response (one line):
+//! ```json
+//! {"id":7,"ok":true,"top1":694,"top5":[[694,0.01],...],
+//!  "queue_ms":0.1,"exec_ms":212.4,"total_ms":231.0,"batch":2}
+//! {"id":8,"ok":false,"error":"overloaded"}
+//! ```
+//!
+//! Embedded-friendly: the device never receives bulk pixel data over the
+//! demo protocol (images are either on-device files or synthetic); an
+//! ingestion path would replace this transport without touching the
+//! coordinator.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Response;
+use crate::util::json::Json;
+
+/// Parsed client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    Infer { id: u64, image: ImageSpec },
+    Stats,
+    Ping,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ImageSpec {
+    Synthetic(u64),
+    Ppm(String),
+}
+
+pub fn parse_request(line: &str) -> Result<ClientMsg> {
+    let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "stats" => Ok(ClientMsg::Stats),
+            "ping" => Ok(ClientMsg::Ping),
+            other => bail!("unknown cmd {other}"),
+        };
+    }
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_f64())
+        .map(|f| f as u64)
+        .unwrap_or(0);
+    let img = j
+        .get("image")
+        .ok_or_else(|| anyhow::anyhow!("missing image"))?;
+    let image = if let Some(seed) = img.get("synthetic").and_then(|v| v.as_f64()) {
+        ImageSpec::Synthetic(seed as u64)
+    } else if let Some(p) = img.get("ppm").and_then(|v| v.as_str()) {
+        ImageSpec::Ppm(p.to_string())
+    } else {
+        bail!("image must have 'synthetic' or 'ppm'");
+    };
+    Ok(ClientMsg::Infer { id, image })
+}
+
+pub fn response_line(r: &Response) -> String {
+    let mut o = Json::obj();
+    o.set("id", r.id.into());
+    match &r.error {
+        Some(e) => {
+            o.set("ok", false.into()).set("error", e.as_str().into());
+        }
+        None => {
+            o.set("ok", true.into())
+                .set("top1", r.top1.into())
+                .set(
+                    "top5",
+                    Json::Arr(
+                        r.top5
+                            .iter()
+                            .map(|(i, p)| {
+                                Json::Arr(vec![(*i).into(), Json::Num(*p as f64)])
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("queue_ms", r.queue_ms.into())
+                .set("exec_ms", r.exec_ms.into())
+                .set("total_ms", r.total_ms.into())
+                .set("batch", r.batch_size.into())
+                .set("worker", r.worker.into());
+        }
+    }
+    o.to_string()
+}
+
+pub fn error_line(id: u64, msg: &str) -> String {
+    let mut o = Json::obj();
+    o.set("id", id.into())
+        .set("ok", false.into())
+        .set("error", msg.into());
+    o.to_string()
+}
+
+pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
+    let (mean, p50, p95, p99, max) = s.latency_summary;
+    let mut lat = Json::obj();
+    lat.set("mean_ms", mean.into())
+        .set("p50_ms", p50.into())
+        .set("p95_ms", p95.into())
+        .set("p99_ms", p99.into())
+        .set("max_ms", max.into());
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("completed", s.completed.into())
+        .set("rejected", s.rejected.into())
+        .set("images", s.images.into())
+        .set("queued", s.queued.into())
+        .set("mean_batch", s.mean_batch.into())
+        .set("latency", lat);
+    o.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_infer_synthetic() {
+        let m = parse_request(r#"{"id": 7, "image": {"synthetic": 42}}"#).unwrap();
+        assert_eq!(
+            m,
+            ClientMsg::Infer {
+                id: 7,
+                image: ImageSpec::Synthetic(42)
+            }
+        );
+    }
+
+    #[test]
+    fn parse_infer_ppm() {
+        let m = parse_request(r#"{"id":1,"image":{"ppm":"/tmp/x.ppm"}}"#).unwrap();
+        assert!(matches!(
+            m,
+            ClientMsg::Infer { image: ImageSpec::Ppm(_), .. }
+        ));
+    }
+
+    #[test]
+    fn parse_cmds() {
+        assert_eq!(parse_request(r#"{"cmd":"stats"}"#).unwrap(), ClientMsg::Stats);
+        assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), ClientMsg::Ping);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"id":1}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"image":{}}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_json() {
+        let r = Response {
+            id: 3,
+            top1: 694,
+            top5: vec![(694, 0.5), (1, 0.25)],
+            queue_ms: 0.5,
+            exec_ms: 100.0,
+            total_ms: 101.0,
+            batch_size: 2,
+            worker: 0,
+            error: None,
+        };
+        let line = response_line(&r);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.usize_of("top1").unwrap(), 694);
+        assert_eq!(j.usize_of("batch").unwrap(), 2);
+        let err = error_line(9, "overloaded");
+        let j = Json::parse(&err).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+    }
+}

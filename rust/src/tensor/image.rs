@@ -1,0 +1,172 @@
+//! Image I/O + preprocessing for the 227x227x3 input the paper serves.
+//!
+//! Supports binary PPM (P6) — the simplest real container — plus a
+//! deterministic synthetic-image generator for workloads without files.
+//! Preprocessing mirrors a typical embedded camera path: u8 RGB ->
+//! center-crop/nearest-resize to 227 -> scale to [-1, 1].
+
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+use super::Tensor;
+use crate::testkit::rng::Rng;
+
+pub const INPUT_HW: usize = 227;
+
+/// A decoded 8-bit RGB image (HWC).
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub rgb: Vec<u8>,
+}
+
+impl Image {
+    /// Deterministic synthetic image (workload generator input).
+    pub fn synthetic(width: usize, height: usize, seed: u64) -> Image {
+        let mut rng = Rng::new(seed ^ 0x1337_c0de);
+        let rgb = (0..width * height * 3)
+            .map(|_| (rng.next_u64() & 0xff) as u8)
+            .collect();
+        Image { width, height, rgb }
+    }
+
+    /// Parse a binary PPM (P6, maxval 255).
+    pub fn from_ppm(bytes: &[u8]) -> Result<Image> {
+        let mut pos = 0usize;
+        let mut fields: Vec<usize> = Vec::new();
+        // Header: "P6" <ws> width <ws> height <ws> maxval <single ws>
+        if !bytes.starts_with(b"P6") {
+            bail!("not a P6 ppm");
+        }
+        pos += 2;
+        while fields.len() < 3 {
+            // skip whitespace and comments
+            while pos < bytes.len() {
+                match bytes[pos] {
+                    b' ' | b'\t' | b'\r' | b'\n' => pos += 1,
+                    b'#' => {
+                        while pos < bytes.len() && bytes[pos] != b'\n' {
+                            pos += 1;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            let start = pos;
+            while pos < bytes.len() && bytes[pos].is_ascii_digit() {
+                pos += 1;
+            }
+            if start == pos {
+                bail!("bad ppm header");
+            }
+            let v: usize = std::str::from_utf8(&bytes[start..pos])?
+                .parse()
+                .context("ppm header int")?;
+            fields.push(v);
+        }
+        let (w, h, maxval) = (fields[0], fields[1], fields[2]);
+        if maxval != 255 {
+            bail!("only maxval 255 supported, got {maxval}");
+        }
+        pos += 1; // single whitespace after maxval
+        let need = w * h * 3;
+        if bytes.len() < pos + need {
+            bail!("ppm truncated: need {} data bytes, have {}", need, bytes.len() - pos);
+        }
+        Ok(Image {
+            width: w,
+            height: h,
+            rgb: bytes[pos..pos + need].to_vec(),
+        })
+    }
+
+    pub fn load_ppm(path: &Path) -> Result<Image> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_ppm(&bytes)
+    }
+
+    /// Write as binary PPM.
+    pub fn save_ppm(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "P6\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.rgb)?;
+        Ok(())
+    }
+
+    /// Preprocess to the network input: center-crop to square, nearest-
+    /// neighbour resize to 227x227, scale u8 -> [-1, 1] f32, NHWC (N=1).
+    pub fn to_input(&self) -> Tensor {
+        let side = self.width.min(self.height);
+        let x0 = (self.width - side) / 2;
+        let y0 = (self.height - side) / 2;
+        let mut data = Vec::with_capacity(INPUT_HW * INPUT_HW * 3);
+        for oy in 0..INPUT_HW {
+            let sy = y0 + oy * side / INPUT_HW;
+            for ox in 0..INPUT_HW {
+                let sx = x0 + ox * side / INPUT_HW;
+                let base = (sy * self.width + sx) * 3;
+                for c in 0..3 {
+                    let v = self.rgb[base + c] as f32;
+                    data.push(v / 127.5 - 1.0);
+                }
+            }
+        }
+        Tensor::new(&[1, INPUT_HW, INPUT_HW, 3], data).expect("input shape")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppm_roundtrip() {
+        let img = Image::synthetic(8, 6, 42);
+        let dir = std::env::temp_dir().join("zuluko_img_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ppm");
+        img.save_ppm(&path).unwrap();
+        let back = Image::load_ppm(&path).unwrap();
+        assert_eq!(back.width, 8);
+        assert_eq!(back.height, 6);
+        assert_eq!(back.rgb, img.rgb);
+    }
+
+    #[test]
+    fn ppm_with_comments() {
+        let mut bytes = b"P6\n# a comment\n2 1\n# another\n255\n".to_vec();
+        bytes.extend_from_slice(&[1, 2, 3, 4, 5, 6]);
+        let img = Image::from_ppm(&bytes).unwrap();
+        assert_eq!((img.width, img.height), (2, 1));
+        assert_eq!(img.rgb, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn ppm_rejects_truncated_and_bad_magic() {
+        assert!(Image::from_ppm(b"P5\n1 1\n255\nX").is_err());
+        let bytes = b"P6\n4 4\n255\n\x00".to_vec();
+        assert!(Image::from_ppm(&bytes).is_err());
+    }
+
+    #[test]
+    fn preprocess_shape_and_range() {
+        let img = Image::synthetic(300, 250, 7);
+        let t = img.to_input();
+        assert_eq!(t.shape(), &[1, INPUT_HW, INPUT_HW, 3]);
+        for &v in t.data() {
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn preprocess_exact_size_is_identity_sampling() {
+        let img = Image::synthetic(INPUT_HW, INPUT_HW, 9);
+        let t = img.to_input();
+        // pixel (0,0) channel 0 must map through the scale formula exactly
+        let expect = img.rgb[0] as f32 / 127.5 - 1.0;
+        assert_eq!(t.data()[0], expect);
+    }
+}

@@ -1,0 +1,251 @@
+//! NHWC host-side tensor substrate.
+//!
+//! The coordinator needs a small amount of host tensor plumbing —
+//! pre/post-processing, golden comparisons, batch packing — none of which
+//! justifies an ndarray dependency.  `Tensor` is a flat `Vec<f32>` plus a
+//! shape; the only operations implemented are the ones the request path
+//! actually uses, each written to be allocation-conscious.
+
+pub mod image;
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor with runtime shape (rank <= 4 in practice).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elems, data has {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift64*; see testkit::rng).
+    pub fn random(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = crate::testkit::rng::Rng::new(seed);
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Stack `items` (each shape S) into one (N, *S) batch tensor.
+    /// Single copy per item into a preallocated buffer.
+    pub fn stack(items: &[&Tensor]) -> Result<Tensor> {
+        let first = match items.first() {
+            Some(t) => t,
+            None => bail!("stack of zero tensors"),
+        };
+        let per = first.len();
+        let mut data = Vec::with_capacity(per * items.len());
+        for t in items {
+            if t.shape != first.shape {
+                bail!("stack shape mismatch: {:?} vs {:?}", t.shape, first.shape);
+            }
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = vec![items.len()];
+        shape.extend_from_slice(&first.shape);
+        Tensor::new(&shape, data)
+    }
+
+    /// Split a (N, *S) batch back into N tensors of shape S.
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        if self.shape.is_empty() {
+            bail!("unstack of scalar");
+        }
+        let n = self.shape[0];
+        let rest: Vec<usize> = self.shape[1..].to_vec();
+        let per: usize = rest.iter().product();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(Tensor {
+                shape: rest.clone(),
+                data: self.data[i * per..(i + 1) * per].to_vec(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Index of the maximum element (argmax over the flat data).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Top-k (index, value) pairs, descending.  k small; O(n·k).
+    pub fn topk(&self, k: usize) -> Vec<(usize, f32)> {
+        let mut out: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+        for (i, &v) in self.data.iter().enumerate() {
+            let pos = out.partition_point(|&(_, ov)| ov >= v);
+            if pos < k {
+                out.insert(pos, (i, v));
+                out.truncate(k);
+            }
+        }
+        out
+    }
+
+    /// max |a - b| and max relative error vs `other`.
+    pub fn max_abs_rel_diff(&self, other: &Tensor) -> Result<(f32, f32)> {
+        if self.shape != other.shape {
+            bail!("diff shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        let mut abs = 0f32;
+        let mut rel = 0f32;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            let d = (a - b).abs();
+            abs = abs.max(d);
+            let denom = a.abs().max(b.abs()).max(1e-12);
+            rel = rel.max(d / denom);
+        }
+        Ok((abs, rel))
+    }
+
+    /// Load a raw little-endian f32 file written by aot.py.
+    pub fn from_f32_file(path: &std::path::Path, shape: &[usize]) -> Result<Tensor> {
+        let bytes = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!(
+                "{}: expected {} bytes for shape {:?}, got {}",
+                path.display(),
+                n * 4,
+                shape,
+                bytes.len()
+            );
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::random(&[3, 2], 1);
+        let b = Tensor::random(&[3, 2], 2);
+        let s = Tensor::stack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 3, 2]);
+        let parts = s.unstack().unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatch() {
+        let a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        assert!(Tensor::stack(&[&a, &b]).is_err());
+        assert!(Tensor::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn argmax_and_topk() {
+        let t = Tensor::new(&[5], vec![0.1, 0.9, 0.3, 0.9, 0.0]).unwrap();
+        assert_eq!(t.argmax(), 1); // first max wins
+        let tk = t.topk(3);
+        assert_eq!(tk.len(), 3);
+        assert_eq!(tk[0].1, 0.9);
+        assert_eq!(tk[2], (2, 0.3));
+    }
+
+    #[test]
+    fn topk_k_larger_than_len() {
+        let t = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let tk = t.topk(5);
+        assert_eq!(tk.len(), 2);
+        assert_eq!(tk[0], (1, 2.0));
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[2], vec![1.1, 2.0]).unwrap();
+        let (abs, rel) = a.max_abs_rel_diff(&b).unwrap();
+        assert!((abs - 0.1).abs() < 1e-6);
+        assert!(rel > 0.0 && rel < 0.1);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(Tensor::random(&[4], 9), Tensor::random(&[4], 9));
+        assert_ne!(Tensor::random(&[4], 9), Tensor::random(&[4], 10));
+    }
+}

@@ -1,0 +1,5 @@
+//! Test substrate: deterministic PRNG + mini property-testing framework.
+//! (rand/proptest are not dependencies — DESIGN.md §Substitutions.)
+
+pub mod prop;
+pub mod rng;

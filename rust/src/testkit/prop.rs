@@ -1,0 +1,222 @@
+//! Mini property-testing framework (proptest is not a dependency).
+//!
+//! A property runs against N generated cases; on failure the input is
+//! shrunk greedily (halving / decrementing integer fields, shrinking
+//! vectors) before reporting.  Coordinator invariants (DESIGN.md §6) are
+//! tested with this in `rust/tests/`.
+//!
+//! ```ignore
+//! prop_check(100, 42, gen_vec_usize(0..50, 0..10), |case| {
+//!     // return Err(msg) to fail
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// A generator produces a case from an Rng; a shrinker yields smaller
+/// candidate cases.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `n` generated cases.  Panics with the (shrunk) failing
+/// case and message on failure.
+pub fn prop_check<G: Gen>(
+    n: usize,
+    seed: u64,
+    gen: G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = gen.generate(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Greedy shrink: repeatedly take the first shrink that still fails.
+            let mut cur = case;
+            let mut cur_msg = msg;
+            'outer: loop {
+                for cand in gen.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed on case {i} (shrunk): {cur:?}\n  reason: {cur_msg}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stock generators
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi] inclusive; shrinks toward lo.
+pub struct GenUsize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for GenUsize {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in [lo, hi); shrinks toward lo.
+pub struct GenF64 {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for GenF64 {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.lo {
+            vec![self.lo, self.lo + (*v - self.lo) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec of usizes; shrinks by halving length, then shrinking elements.
+pub struct GenVecUsize {
+    pub len_lo: usize,
+    pub len_hi: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for GenVecUsize {
+    type Value = Vec<usize>;
+    fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+        let len = rng.range(self.len_lo, self.len_hi);
+        (0..len).map(|_| rng.range(self.lo, self.hi)).collect()
+    }
+    fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if v.len() > self.len_lo {
+            out.push(v[..v.len() / 2.max(self.len_lo)].to_vec());
+            let mut one_less = v.clone();
+            one_less.pop();
+            out.push(one_less);
+        }
+        // Shrink first non-lo element.
+        if let Some(idx) = v.iter().position(|&e| e > self.lo) {
+            let mut smaller = v.clone();
+            smaller[idx] = self.lo;
+            out.push(smaller);
+        }
+        out.retain(|c| c.len() >= self.len_lo);
+        out
+    }
+}
+
+/// Pair generator from two independent generators.
+pub struct GenPair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for GenPair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check(200, 1, GenUsize { lo: 0, hi: 100 }, |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        prop_check(200, 2, GenUsize { lo: 0, hi: 100 }, |&v| {
+            if v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_minimal_counterexample() {
+        // Property "v < 37" fails minimally at 37; check the panic message
+        // carries the shrunk value.
+        let result = std::panic::catch_unwind(|| {
+            prop_check(500, 3, GenUsize { lo: 0, hi: 1000 }, |&v| {
+                if v < 37 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("37"), "expected minimal 37 in: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        prop_check(
+            100,
+            4,
+            GenVecUsize { len_lo: 1, len_hi: 8, lo: 2, hi: 5 },
+            |v| {
+                if v.is_empty() || v.len() > 8 {
+                    return Err(format!("len {}", v.len()));
+                }
+                if v.iter().any(|&e| !(2..=5).contains(&e)) {
+                    return Err("element out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Workload generator / trace replay — the load side of every serving
+//! experiment (E7/E8).
+//!
+//! Three arrival patterns:
+//! * `Poisson { rate }` — open-loop with exponential gaps (IoT sensor
+//!   fleet pushing frames);
+//! * `ClosedLoop { concurrency }` — N clients, next request on response
+//!   (the paper's own latency measurement loop is closed-loop with N=1);
+//! * `Burst { size, gap }` — camera-burst pattern, stresses the batcher.
+//!
+//! Traces are deterministic per seed and can be saved/loaded as JSON for
+//! replaying identical load across engines.
+
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+use crate::testkit::rng::Rng;
+use crate::util::json::Json;
+
+/// Arrival pattern.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    Poisson { rate: f64 },
+    ClosedLoop { concurrency: usize },
+    Burst { size: usize, gap: Duration },
+}
+
+/// A workload: arrivals + per-request image seeds.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub pattern: Pattern,
+    pub n_requests: usize,
+    pub seed: u64,
+    /// Arrival offsets from t0 (empty for closed-loop: arrivals are
+    /// response-driven).
+    pub arrivals: Vec<Duration>,
+    /// Seed for each request's synthetic image.
+    pub image_seeds: Vec<u64>,
+}
+
+impl Trace {
+    /// Generate a deterministic trace.
+    pub fn generate(pattern: Pattern, n_requests: usize, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let arrivals = match pattern {
+            Pattern::Poisson { rate } => {
+                let mut t = 0.0f64;
+                (0..n_requests)
+                    .map(|_| {
+                        t += rng.exp_gap_secs(rate);
+                        Duration::from_secs_f64(t)
+                    })
+                    .collect()
+            }
+            Pattern::ClosedLoop { .. } => Vec::new(),
+            Pattern::Burst { size, gap } => (0..n_requests)
+                .map(|i| gap * (i / size.max(1)) as u32)
+                .collect(),
+        };
+        let image_seeds = (0..n_requests).map(|_| rng.next_u64()).collect();
+        Trace {
+            pattern,
+            n_requests,
+            seed,
+            arrivals,
+            image_seeds,
+        }
+    }
+
+    /// Offered load in requests/sec (None for closed-loop).
+    pub fn offered_rps(&self) -> Option<f64> {
+        match self.pattern {
+            Pattern::Poisson { rate } => Some(rate),
+            Pattern::Burst { size, gap } => {
+                if gap.is_zero() {
+                    None
+                } else {
+                    Some(size as f64 / gap.as_secs_f64())
+                }
+            }
+            Pattern::ClosedLoop { .. } => None,
+        }
+    }
+
+    // ---- JSON persistence (replay identical load across engines) -------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self.pattern {
+            Pattern::Poisson { rate } => {
+                o.set("pattern", "poisson".into()).set("rate", rate.into());
+            }
+            Pattern::ClosedLoop { concurrency } => {
+                o.set("pattern", "closed".into())
+                    .set("concurrency", concurrency.into());
+            }
+            Pattern::Burst { size, gap } => {
+                o.set("pattern", "burst".into())
+                    .set("size", size.into())
+                    .set("gap_ms", (gap.as_secs_f64() * 1e3).into());
+            }
+        }
+        o.set("n_requests", self.n_requests.into())
+            .set("seed", self.seed.into())
+            .set(
+                "arrivals_ns",
+                // ns as f64 is exact below 2^53 ns (~104 days) — plenty.
+                Json::Arr(
+                    self.arrivals
+                        .iter()
+                        .map(|d| Json::Num(d.as_nanos() as f64))
+                        .collect(),
+                ),
+            )
+            .set(
+                "image_seeds",
+                // u64 doesn't fit f64 exactly; serialize as strings.
+                Json::Arr(
+                    self.image_seeds
+                        .iter()
+                        .map(|&s| Json::Str(s.to_string()))
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let pattern = match j.str_of("pattern").map_err(|e| anyhow::anyhow!("{e}"))? {
+            "poisson" => Pattern::Poisson {
+                rate: j.f64_of("rate").map_err(|e| anyhow::anyhow!("{e}"))?,
+            },
+            "closed" => Pattern::ClosedLoop {
+                concurrency: j
+                    .usize_of("concurrency")
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            },
+            "burst" => Pattern::Burst {
+                size: j.usize_of("size").map_err(|e| anyhow::anyhow!("{e}"))?,
+                gap: Duration::from_secs_f64(
+                    j.f64_of("gap_ms").map_err(|e| anyhow::anyhow!("{e}"))? / 1e3,
+                ),
+            },
+            other => bail!("unknown pattern {other}"),
+        };
+        let arrivals = j
+            .req("arrivals_ns")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .context("arrivals_ns")?
+            .iter()
+            .map(|v| Duration::from_nanos(v.as_f64().unwrap_or(0.0) as u64))
+            .collect();
+        let image_seeds = j
+            .req("image_seeds")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .context("image_seeds")?
+            .iter()
+            .map(|v| match v {
+                Json::Str(s) => s.parse().unwrap_or(0),
+                _ => v.as_f64().unwrap_or(0.0) as u64,
+            })
+            .collect();
+        Ok(Trace {
+            pattern,
+            n_requests: j
+                .usize_of("n_requests")
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+            seed: j.usize_of("seed").map_err(|e| anyhow::anyhow!("{e}"))? as u64,
+            arrivals,
+            image_seeds,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Trace::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_monotonic_and_rate_ish() {
+        let t = Trace::generate(Pattern::Poisson { rate: 100.0 }, 2000, 7);
+        assert_eq!(t.arrivals.len(), 2000);
+        for w in t.arrivals.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // Mean gap ~ 10ms within 20%.
+        let total = t.arrivals.last().unwrap().as_secs_f64();
+        let rate = 2000.0 / total;
+        assert!((rate - 100.0).abs() < 20.0, "observed rate {rate}");
+    }
+
+    #[test]
+    fn burst_pattern_groups_arrivals() {
+        let t = Trace::generate(
+            Pattern::Burst {
+                size: 4,
+                gap: Duration::from_millis(100),
+            },
+            8,
+            1,
+        );
+        assert_eq!(t.arrivals[0], t.arrivals[3]); // same burst
+        assert_eq!(t.arrivals[4], Duration::from_millis(100));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Trace::generate(Pattern::Poisson { rate: 10.0 }, 50, 3);
+        let b = Trace::generate(Pattern::Poisson { rate: 10.0 }, 50, 3);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.image_seeds, b.image_seeds);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for p in [
+            Pattern::Poisson { rate: 25.0 },
+            Pattern::ClosedLoop { concurrency: 4 },
+            Pattern::Burst {
+                size: 3,
+                gap: Duration::from_millis(50),
+            },
+        ] {
+            let t = Trace::generate(p, 20, 9);
+            let back = Trace::from_json(&t.to_json()).unwrap();
+            assert_eq!(back.pattern, t.pattern);
+            assert_eq!(back.arrivals, t.arrivals);
+            assert_eq!(back.image_seeds, t.image_seeds);
+        }
+    }
+
+    #[test]
+    fn offered_rps() {
+        assert_eq!(
+            Trace::generate(Pattern::Poisson { rate: 5.0 }, 1, 0).offered_rps(),
+            Some(5.0)
+        );
+        assert_eq!(
+            Trace::generate(Pattern::ClosedLoop { concurrency: 2 }, 1, 0)
+                .offered_rps(),
+            None
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (clap is deliberately not a dependency).
+//!
+//! Grammar: `zuluko <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted.  Unknown flags are an error, so typos
+//! fail loudly instead of being silently ignored.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, key-values, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+    /// Flags the program declares; used to reject unknown ones.
+    known: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `known` lists every accepted `--name` (value-taking or boolean).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        known: &[&'static str],
+    ) -> Result<Args, String> {
+        let mut args = Args {
+            known: known.to_vec(),
+            ..Args::default()
+        };
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if !args.known.contains(&key.as_str()) {
+                    return Err(format!("unknown flag --{key}"));
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // Take the next token as the value unless it looks
+                        // like another flag (boolean-style usage).
+                        match it.peek() {
+                            Some(n) if !n.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.flags.insert(key, val);
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known: &[&'static str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), known)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    const KNOWN: &[&'static str] = &["engine", "iters", "verbose", "rate"];
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(
+            v(&["bench", "--engine", "acl", "--iters=30", "img.ppm"]),
+            KNOWN,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("engine"), Some("acl"));
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 30);
+        assert_eq!(a.positional, vec!["img.ppm"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = Args::parse(v(&["serve", "--verbose", "--engine", "tf"]), KNOWN).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("engine"), Some("tf"));
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(Args::parse(v(&["x", "--nope"]), KNOWN).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_int() {
+        let a = Args::parse(v(&["x", "--iters", "abc"]), KNOWN).unwrap();
+        assert!(a.get_usize("iters", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(v(&["x"]), KNOWN).unwrap();
+        assert_eq!(a.get_usize("iters", 7).unwrap(), 7);
+        assert_eq!(a.get_or("engine", "acl"), "acl");
+        assert_eq!(a.get_f64("rate", 1.5).unwrap(), 1.5);
+    }
+}

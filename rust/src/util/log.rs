@@ -1,0 +1,103 @@
+//! Leveled stderr logger with monotonic timestamps.
+//!
+//! One static atomic level; `log!`-style macros expand to a level check and
+//! a single `eprintln!`, so disabled levels cost one atomic load on the
+//! request path (the paper's engine keeps the hot loop lean; so do we).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+/// Process start, for relative timestamps.
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since first log call (monotonic).
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(level: u8, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        ERROR => "ERROR",
+        WARN => "WARN ",
+        INFO => "INFO ",
+        _ => "DEBUG",
+    };
+    eprintln!("[{:9.3}] {} {}: {}", elapsed(), tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::INFO, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::WARN, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::ERROR, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::DEBUG, $target,
+                               format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(WARN);
+        assert!(enabled(ERROR));
+        assert!(enabled(WARN));
+        assert!(!enabled(INFO));
+        set_level(INFO);
+        assert!(enabled(INFO));
+        assert!(!enabled(DEBUG));
+    }
+
+    #[test]
+    fn elapsed_is_monotonic() {
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+}

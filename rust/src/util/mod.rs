@@ -1,0 +1,46 @@
+//! In-tree substrates a framework would normally import: JSON, CLI
+//! parsing, logging.  See DESIGN.md §Substitutions for why these are
+//! hand-rolled (bare-metal dependency policy, matching the paper).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+
+/// Duration -> milliseconds as f64 (the unit every report uses).
+pub fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Percentile by nearest-rank on a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentile() {
+        let mut xs = vec![4.0, 1.0, 3.0, 2.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 3.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 5.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+}

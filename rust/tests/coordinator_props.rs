@@ -1,0 +1,239 @@
+//! Property tests on coordinator invariants (DESIGN.md §6), using the
+//! in-tree testkit::prop framework.  These run against the queue/batcher/
+//! router primitives with plain payloads (no XLA needed — fast), plus one
+//! end-to-end packing-independence test against the real engine when
+//! artifacts exist.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use zuluko::coordinator::batcher::BatchPolicy;
+use zuluko::coordinator::queue::BoundedQueue;
+use zuluko::coordinator::router::{RouteError, Router};
+use zuluko::testkit::prop::{prop_check, Gen, GenPair, GenUsize, GenVecUsize};
+use zuluko::testkit::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------------
+
+struct GenPolicyAndLoad;
+
+impl Gen for GenPolicyAndLoad {
+    type Value = (usize, Vec<usize>); // (max_batch, queued item ids)
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let max_batch = rng.range(1, 12);
+        let n = rng.range(0, 30);
+        (max_batch, (0..n).collect())
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 1 {
+            out.push((v.0 - 1, v.1.clone()));
+        }
+        if !v.1.is_empty() {
+            out.push((v.0, v.1[..v.1.len() / 2].to_vec()));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_batch_size_always_supported_and_bounded() {
+    let supported = [1usize, 2, 4, 8];
+    prop_check(300, 11, GenPolicyAndLoad, |(max_batch, items)| {
+        let policy = BatchPolicy::new(*max_batch, Duration::ZERO, &supported);
+        let q = BoundedQueue::new(64);
+        for &i in items {
+            q.try_push(i).map_err(|_| "push failed".to_string())?;
+        }
+        if items.is_empty() {
+            return Ok(()); // form() would block; nothing to check
+        }
+        let batch = policy.form(&q).ok_or("no batch from non-empty queue")?;
+        if batch.is_empty() {
+            return Err("empty batch".into());
+        }
+        if batch.len() > *max_batch {
+            return Err(format!("batch {} > max {}", batch.len(), max_batch));
+        }
+        if !supported.contains(&batch.len()) {
+            return Err(format!("unsupported batch size {}", batch.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_preserved_across_batches() {
+    prop_check(200, 13, GenUsize { lo: 1, hi: 40 }, |&n| {
+        let policy = BatchPolicy::new(8, Duration::ZERO, &[1, 2, 4, 8]);
+        let q = BoundedQueue::new(64);
+        for i in 0..n {
+            q.try_push(i).map_err(|_| "push".to_string())?;
+        }
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            let batch = policy.form(&q).ok_or("closed")?;
+            seen.extend(batch);
+        }
+        let expect: Vec<usize> = (0..n).collect();
+        if seen != expect {
+            return Err(format!("order violated: {seen:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_request_lost_or_duplicated() {
+    prop_check(
+        200,
+        17,
+        GenPair(
+            GenUsize { lo: 1, hi: 10 },
+            GenVecUsize {
+                len_lo: 0,
+                len_hi: 50,
+                lo: 0,
+                hi: 1_000_000,
+            },
+        ),
+        |(max_batch, payloads)| {
+            let policy = BatchPolicy::new(*max_batch, Duration::ZERO, &[1, 2, 4, 8]);
+            let q = BoundedQueue::new(128);
+            for &p in payloads {
+                q.try_push(p).map_err(|_| "push".to_string())?;
+            }
+            let mut out = Vec::new();
+            while !q.is_empty() {
+                out.extend(policy.form(&q).ok_or("closed")?);
+            }
+            if out != *payloads {
+                return Err("lost/duplicated/reordered items".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Queue invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_queue_capacity_is_hard_bound() {
+    prop_check(
+        200,
+        19,
+        GenPair(GenUsize { lo: 1, hi: 16 }, GenUsize { lo: 0, hi: 64 }),
+        |(cap, pushes)| {
+            let q = BoundedQueue::new(*cap);
+            let mut accepted = 0;
+            for i in 0..*pushes {
+                if q.try_push(i).is_ok() {
+                    accepted += 1;
+                }
+            }
+            if accepted != (*pushes).min(*cap) {
+                return Err(format!(
+                    "accepted {accepted}, expected {}",
+                    (*pushes).min(*cap)
+                ));
+            }
+            if q.len() > *cap {
+                return Err("len exceeds capacity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Router invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_router_never_drops_silently() {
+    // Every routed item is either admitted to exactly one queue or returned
+    // via Overloaded; total conservation holds.
+    prop_check(
+        200,
+        23,
+        GenPair(
+            GenUsize { lo: 1, hi: 4 },
+            GenPair(GenUsize { lo: 1, hi: 8 }, GenUsize { lo: 0, hi: 64 }),
+        ),
+        |(workers, (cap, n))| {
+            let queues: Vec<Arc<BoundedQueue<usize>>> = (0..*workers)
+                .map(|_| Arc::new(BoundedQueue::new(*cap)))
+                .collect();
+            let router = Router::new(queues.clone());
+            let mut admitted = 0;
+            let mut rejected = 0;
+            for i in 0..*n {
+                match router.route(i) {
+                    Ok(_) => admitted += 1,
+                    Err(RouteError::Overloaded(item)) => {
+                        if item != i {
+                            return Err("wrong item bounced".into());
+                        }
+                        rejected += 1;
+                    }
+                    Err(RouteError::Closed(_)) => {
+                        return Err("unexpected close".into())
+                    }
+                }
+            }
+            let queued: usize = queues.iter().map(|q| q.len()).sum();
+            if admitted != queued {
+                return Err(format!("admitted {admitted} != queued {queued}"));
+            }
+            if admitted + rejected != *n {
+                return Err("conservation violated".into());
+            }
+            // Full rejection only when truly full.
+            if rejected > 0 && queued != workers * cap {
+                return Err("rejected while capacity remained".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: batch packing never changes results (needs artifacts)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packing_independence_on_real_engine() {
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use zuluko::engine::{build, EngineKind};
+    use zuluko::tensor::Tensor;
+
+    let m = zuluko::runtime::Manifest::load(&dir).unwrap();
+    let mut e = build(EngineKind::AclStaged, &m).unwrap();
+    let imgs: Vec<Tensor> = (0..4).map(|i| Tensor::random(&[227, 227, 3], i)).collect();
+
+    // One by one.
+    let mut solo = Vec::new();
+    for img in &imgs {
+        let mut s = vec![1usize];
+        s.extend(img.shape());
+        let b = img.clone().reshape(&s).unwrap();
+        solo.push(e.infer(&b).unwrap());
+    }
+    // Packed as a 4-batch.
+    let refs: Vec<&Tensor> = imgs.iter().collect();
+    let packed = e.infer(&Tensor::stack(&refs).unwrap()).unwrap();
+    for (i, row) in packed.unstack().unwrap().into_iter().enumerate() {
+        let row = row.reshape(&[1, 1000]).unwrap();
+        let (abs, _) = row.max_abs_rel_diff(&solo[i]).unwrap();
+        assert!(abs < 1e-4, "packing changed result for image {i}: {abs}");
+        assert_eq!(row.argmax(), solo[i].argmax());
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: every engine produces the oracle's answer.
+//!
+//! Fig 3's comparison is only meaningful if the ACL engine and the
+//! TF-baseline compute the *same function* — these tests pin all five
+//! engine variants to the JAX golden outputs.
+
+use zuluko::engine::{build, EngineKind};
+use zuluko::metrics::ledger::Group;
+use zuluko::runtime::Manifest;
+use zuluko::tensor::Tensor;
+
+fn setup() -> Option<(Manifest, Tensor, Tensor)> {
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    let m = Manifest::load(&dir).expect("manifest");
+    let input =
+        Tensor::from_f32_file(&m.path(&m.golden.input), &[1, 227, 227, 3]).unwrap();
+    let golden = Tensor::from_f32_file(&m.path(&m.golden.probs), &[1, 1000]).unwrap();
+    Some((m, input, golden))
+}
+
+fn check_engine(kind: EngineKind, tol: f32) {
+    let Some((m, input, golden)) = setup() else { return };
+    let mut e = build(kind, &m).expect("build engine");
+    let probs = e.infer(&input).expect("infer");
+    assert_eq!(probs.shape(), &[1, 1000]);
+    let (abs, _) = probs.max_abs_rel_diff(&golden).unwrap();
+    assert!(abs < tol, "{}: drift {abs} (tol {tol})", e.name());
+    assert_eq!(probs.argmax(), m.golden.top1, "{} top-1", e.name());
+    // Ledger must have recorded work.
+    assert!(!e.ledger().is_empty(), "{} ledger empty", e.name());
+}
+
+#[test]
+fn acl_staged_matches_golden() {
+    check_engine(EngineKind::AclStaged, 1e-3);
+}
+
+#[test]
+fn acl_fused_matches_golden() {
+    check_engine(EngineKind::AclFused, 1e-3);
+}
+
+#[test]
+fn acl_probe_matches_golden() {
+    check_engine(EngineKind::AclProbe, 1e-3);
+}
+
+#[test]
+fn tf_baseline_matches_golden() {
+    check_engine(EngineKind::TfBaseline, 1e-3);
+}
+
+#[test]
+fn quant_engine_matches_quant_golden() {
+    let Some((m, input, _)) = setup() else { return };
+    let golden_q8 =
+        Tensor::from_f32_file(&m.path(&m.golden.probs_q8), &[1, 1000]).unwrap();
+    let mut e = build(EngineKind::Quant, &m).unwrap();
+    let probs = e.infer(&input).unwrap();
+    let (abs, _) = probs.max_abs_rel_diff(&golden_q8).unwrap();
+    assert!(abs < 1e-3, "quant drift {abs}");
+    assert_eq!(probs.argmax(), m.golden.top1_q8);
+}
+
+#[test]
+fn quant_approximates_fp32_probs() {
+    // The 'trade accuracy for performance' bound: int8 probs stay close
+    // to fp32 probs on the golden image.
+    let Some((m, input, golden)) = setup() else { return };
+    let mut e = build(EngineKind::Quant, &m).unwrap();
+    let probs = e.infer(&input).unwrap();
+    let (abs, _) = probs.max_abs_rel_diff(&golden).unwrap();
+    assert!(abs < 0.05, "quantization error on probs too large: {abs}");
+    assert_eq!(probs.argmax(), m.golden.top1, "quantization flipped top-1");
+}
+
+#[test]
+fn engines_agree_pairwise() {
+    let Some((m, input, _)) = setup() else { return };
+    let mut acl = build(EngineKind::AclStaged, &m).unwrap();
+    let mut tf = build(EngineKind::TfBaseline, &m).unwrap();
+    let a = acl.infer(&input).unwrap();
+    let t = tf.infer(&input).unwrap();
+    let (abs, _) = a.max_abs_rel_diff(&t).unwrap();
+    assert!(abs < 1e-3, "acl vs tf drift {abs}");
+}
+
+#[test]
+fn tf_ledger_covers_all_groups_and_ops() {
+    let Some((m, input, _)) = setup() else { return };
+    let mut tf = build(EngineKind::TfBaseline, &m).unwrap();
+    tf.infer(&input).unwrap();
+    let l = tf.ledger();
+    let rows = l.rows();
+    assert_eq!(rows.len(), 66, "one ledger row per op");
+    assert!(l.group_total(Group::Group1) > std::time::Duration::ZERO);
+    assert!(l.group_total(Group::Group2) > std::time::Duration::ZERO);
+    assert_eq!(l.group_total(Group::Quant), std::time::Duration::ZERO);
+    // Concats exist in the baseline (the copies ACL eliminates).
+    assert_eq!(rows.iter().filter(|r| r.0.ends_with("_concat")).count(), 8);
+}
+
+#[test]
+fn quant_ledger_has_quant_overhead_group() {
+    let Some((m, input, _)) = setup() else { return };
+    let mut q = build(EngineKind::Quant, &m).unwrap();
+    q.infer(&input).unwrap();
+    let l = q.ledger();
+    assert_eq!(l.rows().len(), 118);
+    assert!(l.group_total(Group::Quant) > std::time::Duration::ZERO,
+            "quant overhead must be measured");
+}
+
+#[test]
+fn probe_ledger_group_split_covers_both() {
+    let Some((m, input, _)) = setup() else { return };
+    let mut e = build(EngineKind::AclProbe, &m).unwrap();
+    e.infer(&input).unwrap();
+    let l = e.ledger();
+    assert_eq!(l.rows().len(), 15);
+    assert!(l.group_total(Group::Group1) > std::time::Duration::ZERO);
+    assert!(l.group_total(Group::Group2) > std::time::Duration::ZERO);
+}
+
+#[test]
+fn acl_batch_sizes_all_work() {
+    let Some((m, input, golden)) = setup() else { return };
+    let mut e = build(EngineKind::AclStaged, &m).unwrap();
+    let single = input.clone().reshape(&[227, 227, 3]).unwrap();
+    for &b in &m.batch_sizes {
+        let refs: Vec<&Tensor> = (0..b).map(|_| &single).collect();
+        let batch = Tensor::stack(&refs).unwrap();
+        let probs = e.infer(&batch).unwrap();
+        assert_eq!(probs.shape(), &[b, 1000]);
+        for row in probs.unstack().unwrap() {
+            let row = row.reshape(&[1, 1000]).unwrap();
+            let (abs, _) = row.max_abs_rel_diff(&golden).unwrap();
+            assert!(abs < 1e-3, "b{b} row drift {abs}");
+        }
+    }
+}
+
+#[test]
+fn acl_rejects_unsupported_batch() {
+    let Some((m, _, _)) = setup() else { return };
+    let mut e = build(EngineKind::AclStaged, &m).unwrap();
+    let batch = Tensor::zeros(&[3, 227, 227, 3]); // 3 not in {1,2,4,8}
+    assert!(e.infer(&batch).is_err());
+}

@@ -1,0 +1,155 @@
+//! Integration: load AOT artifacts, execute on PJRT, compare to goldens.
+//!
+//! This is the correctness spine of the whole repro: if the HLO-text
+//! bridge, the weight store, or the stage chain drift from the JAX oracle,
+//! these tests catch it before any benchmark means anything.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use zuluko::runtime::{
+    literal_from_tensor, run_timed, tensor_from_literal, Manifest, Runtime, WeightStore,
+};
+use zuluko::tensor::Tensor;
+
+fn setup() -> Option<(Manifest, Runtime, WeightStore)> {
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first ({})", dir.display());
+        return None;
+    }
+    let m = Manifest::load(&dir).expect("manifest");
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let w = WeightStore::load(&m).expect("weights");
+    Some((m, rt, w))
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some((m, _, _)) = setup() else { return };
+    assert_eq!(m.model, "squeezenet-v1.0");
+    assert_eq!(m.input_hw, 227);
+    assert_eq!(m.num_classes, 1000);
+    assert_eq!(m.stages.len(), 10);
+    assert_eq!(m.probe_stages.len(), 15);
+    assert_eq!(m.ops.len(), 66);
+    assert_eq!(m.quant_ops.len(), 118);
+    // 1.24M params ≈ the paper's "~5 MB fp32" SqueezeNet.
+    let total: usize = m.params.iter().map(|p| p.nelems).sum();
+    assert!((1_200_000..1_300_000).contains(&total), "params {total}");
+}
+
+#[test]
+fn weights_load_with_expected_sizes() {
+    let Some((m, _, w)) = setup() else { return };
+    assert_eq!(w.total_f32_params(),
+               m.params.iter().map(|p| p.nelems).sum::<usize>());
+    // Spot-check a couple of shapes via literals.
+    let conv1 = w.literal("conv1_w").unwrap();
+    assert_eq!(conv1.element_count(), 7 * 7 * 3 * 96);
+    let q8 = w.literal("fire2_sw_q8").unwrap();
+    assert_eq!(q8.element_count(), 96 * 16);
+}
+
+#[test]
+fn stage_chain_reproduces_golden_probs() {
+    let Some((m, rt, w)) = setup() else { return };
+    let input = Tensor::from_f32_file(&m.path(&m.golden.input), &[1, 227, 227, 3])
+        .expect("golden input");
+    let mut cur = literal_from_tensor(&input).unwrap();
+
+    for st in &m.stages {
+        let art = st.artifacts.get(&1).expect("b1 artifact");
+        let exe = rt.load(&m.path(art)).expect("compile stage");
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        for p in &st.params {
+            args.push(w.literal(p).unwrap());
+        }
+        args.push(&cur);
+        let (out, _t) = run_timed(&exe, &args).expect("stage exec");
+        cur = out;
+    }
+
+    let probs = tensor_from_literal(&cur).unwrap();
+    assert_eq!(probs.shape(), &[1, 1000]);
+    let golden = Tensor::from_f32_file(&m.path(&m.golden.probs), &[1, 1000]).unwrap();
+    let (abs, _rel) = probs.max_abs_rel_diff(&golden).unwrap();
+    assert!(abs < 1e-3, "probs drift from oracle: max abs {abs}");
+    assert_eq!(probs.argmax(), m.golden.top1, "top-1 mismatch");
+
+    // Probabilities must sum to 1.
+    let sum: f32 = probs.data().iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "prob sum {sum}");
+}
+
+#[test]
+fn per_stage_outputs_match_stage_goldens() {
+    let Some((m, rt, w)) = setup() else { return };
+    let input = Tensor::from_f32_file(&m.path(&m.golden.input), &[1, 227, 227, 3]).unwrap();
+    let mut cur = literal_from_tensor(&input).unwrap();
+
+    for (st, gfile) in m.stages.iter().zip(&m.golden.stages) {
+        let exe = rt.load(&m.path(st.artifacts.get(&1).unwrap())).unwrap();
+        let mut args: Vec<&xla::Literal> = st
+            .params
+            .iter()
+            .map(|p| w.literal(p).unwrap())
+            .collect();
+        args.push(&cur);
+        let (out, _) = run_timed(&exe, &args).unwrap();
+
+        let got = tensor_from_literal(&out).unwrap();
+        let mut shape = vec![1usize];
+        shape.extend(&st.out_shape);
+        let want = Tensor::from_f32_file(&m.path(gfile), &shape)
+            .unwrap_or_else(|e| panic!("golden {gfile}: {e}"));
+        let (abs, _) = got.max_abs_rel_diff(&want).unwrap();
+        // fp32 kernel-vs-oracle accumulation-order tolerance, growing with
+        // depth; the softmax head renormalizes so the end stays tight.
+        assert!(abs < 2e-2, "stage {} drift {abs}", st.name);
+        cur = out;
+    }
+}
+
+#[test]
+fn fused_full_network_matches_staged() {
+    let Some((m, rt, w)) = setup() else { return };
+    let input = Tensor::from_f32_file(&m.path(&m.golden.input), &[1, 227, 227, 3]).unwrap();
+
+    let full = rt.load(&m.path(m.full.get(&1).unwrap())).unwrap();
+    let mut args: Vec<&xla::Literal> =
+        m.params.iter().map(|p| w.literal(&p.name).unwrap()).collect();
+    let inp = literal_from_tensor(&input).unwrap();
+    args.push(&inp);
+    let (out, _) = run_timed(&full, &args).unwrap();
+    let probs = tensor_from_literal(&out).unwrap();
+
+    let golden = Tensor::from_f32_file(&m.path(&m.golden.probs), &[1, 1000]).unwrap();
+    let (abs, _) = probs.max_abs_rel_diff(&golden).unwrap();
+    assert!(abs < 1e-3, "fused drift {abs}");
+    assert_eq!(probs.argmax(), m.golden.top1);
+}
+
+#[test]
+fn batch_variants_agree_with_batch1() {
+    let Some((m, rt, w)) = setup() else { return };
+    let img = Tensor::from_f32_file(&m.path(&m.golden.input), &[1, 227, 227, 3]).unwrap();
+    let single = img.clone().reshape(&[227, 227, 3]).unwrap();
+
+    // Pack the same image 4x; every row of the batch must match b1 output.
+    let batch = Tensor::stack(&[&single, &single, &single, &single]).unwrap();
+    let exe = rt.load(&m.path(m.full.get(&4).unwrap())).unwrap();
+    let mut args: Vec<&xla::Literal> =
+        m.params.iter().map(|p| w.literal(&p.name).unwrap()).collect();
+    let blit = literal_from_tensor(&batch).unwrap();
+    args.push(&blit);
+    let (out, _) = run_timed(&exe, &args).unwrap();
+    let probs = tensor_from_literal(&out).unwrap();
+    assert_eq!(probs.shape(), &[4, 1000]);
+
+    let golden = Tensor::from_f32_file(&m.path(&m.golden.probs), &[1, 1000]).unwrap();
+    for row in probs.unstack().unwrap() {
+        let row = row.reshape(&[1, 1000]).unwrap();
+        let (abs, _) = row.max_abs_rel_diff(&golden).unwrap();
+        assert!(abs < 1e-3, "batch row drift {abs}");
+    }
+}

@@ -1,0 +1,18 @@
+# Build-time entry points.  Python runs once here (L2 AOT lowering);
+# it never touches the Rust request path.
+
+.PHONY: artifacts artifacts-quick test-python test-rust
+
+# Lower every engine variant to HLO artifacts + manifest + weights.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+# Dev loop: batch-1 stages only, no op graphs.
+artifacts-quick:
+	cd python && python3 -m compile.aot --out ../artifacts --quick
+
+test-python:
+	cd python && python3 -m pytest tests -q
+
+test-rust:
+	cd rust && cargo test -q

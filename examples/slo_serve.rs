@@ -1,0 +1,124 @@
+//! SLO-aware serving demo (E9) — the policy layer end-to-end over TCP.
+//!
+//! Boots the adaptive coordinator (fp32 pool + int8 quant pool + response
+//! cache), then walks the whole policy surface with a real client:
+//!
+//! 1. a deadline-tagged request (`deadline_ms` + `priority` on the wire)
+//!    round-trips and reports which engine served it;
+//! 2. the *same* frame again hits the response cache (`"cached":true`,
+//!    `"engine":"cache"`) without touching an engine;
+//! 3. an impossible deadline is shed at admission with a structured
+//!    `"kind":"shed"` rejection carrying the prediction that doomed it;
+//! 4. `{"cmd":"policy"}` exposes per-pool predictions, cache stats, and
+//!    shed counters.
+//!
+//! ```bash
+//! cargo run --release --example slo_serve
+//! ```
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zuluko::config::Config;
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::EngineKind;
+use zuluko::server::client::Client;
+use zuluko::server::Server;
+
+fn main() -> Result<()> {
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP slo_serve: run `make artifacts` first");
+        return Ok(());
+    }
+
+    let mut cfg = Config {
+        engine: EngineKind::AclFused,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(25),
+        queue_capacity: 32,
+        ..Config::default()
+    };
+    cfg.policy.adaptive = true;
+    cfg.policy.quant_workers = 1;
+    cfg.policy.cache_capacity = 64;
+
+    println!("== E9: SLO-aware serving (adaptive={}, cache={}) ==",
+             cfg.policy.adaptive, cfg.policy.cache_capacity);
+    let t0 = Instant::now();
+    let coord = Arc::new(Coordinator::start(&cfg)?);
+    println!("coordinator ready in {:.1}s (both pools compiled + warm)",
+             t0.elapsed().as_secs_f64());
+    let server = Server::start(coord.clone(), "127.0.0.1:0")?;
+    let mut c = Client::connect(&server.addr().to_string())?;
+
+    // 1. Deadline-tagged request over the wire.
+    let r = c.infer_synthetic_slo(1, 12345, Some(60_000.0), Some("hi"))?;
+    anyhow::ensure!(r.ok, "deadline-tagged request failed: {:?}", r.error);
+    println!("\n#1 deadline=60000ms priority=hi -> ok, engine={} total={:.0}ms \
+              top1={}", r.engine, r.total_ms, r.top1);
+    anyhow::ensure!(!r.cached, "first frame must be a cold inference");
+
+    // 2. The same frame again: served from the response cache.
+    let r2 = c.infer_synthetic_slo(2, 12345, Some(60_000.0), None)?;
+    anyhow::ensure!(r2.ok, "repeat frame failed: {:?}", r2.error);
+    anyhow::ensure!(
+        r2.cached && r2.engine == "cache",
+        "expected a cache hit, got engine={} cached={}", r2.engine, r2.cached
+    );
+    anyhow::ensure!(r2.top1 == r.top1, "cache hit changed the answer");
+    println!("#2 same frame        -> cache hit, total={:.2}ms (cold was \
+              {:.0}ms), identical top1={}", r2.total_ms, r.total_ms, r2.top1);
+
+    // 3. An impossible deadline: structured shed, no engine time burned.
+    let r3 = c.infer_synthetic_slo(3, 999, Some(1.0), None)?;
+    anyhow::ensure!(!r3.ok, "1ms deadline should not be servable");
+    anyhow::ensure!(
+        r3.kind.as_deref() == Some("shed"),
+        "expected kind=shed, got {:?} ({:?})", r3.kind, r3.error
+    );
+    println!("#3 deadline=1ms      -> shed at admission: {}",
+             r3.error.as_deref().unwrap_or(""));
+
+    // 4. Policy introspection.
+    let p = c.policy()?;
+    println!("\n{{\"cmd\":\"policy\"}} ->");
+    if let Some(pools) = p.get("pools").and_then(|v| v.as_arr()) {
+        println!("| pool | workers | queued | predicted ms | samples |");
+        println!("|---|---|---|---|---|");
+        for pool in pools {
+            println!(
+                "| {} | {} | {} | {:.0} | {} |",
+                pool.str_of("engine").unwrap_or("?"),
+                pool.usize_of("workers").unwrap_or(0),
+                pool.usize_of("queued").unwrap_or(0),
+                pool.f64_of("predicted_ms").unwrap_or(0.0),
+                pool.usize_of("samples").unwrap_or(0),
+            );
+        }
+    }
+    if let Some(cache) = p.get("cache") {
+        println!(
+            "cache: {}h/{}m len={} cap={}",
+            cache.usize_of("hits").unwrap_or(0),
+            cache.usize_of("misses").unwrap_or(0),
+            cache.usize_of("len").unwrap_or(0),
+            cache.usize_of("capacity").unwrap_or(0),
+        );
+    }
+    println!(
+        "shed_predicted={} shed_expired={}",
+        p.usize_of("shed_predicted").unwrap_or(0),
+        p.usize_of("shed_expired").unwrap_or(0),
+    );
+
+    let s = coord.stats();
+    anyhow::ensure!(s.cache_hits >= 1, "stats should count the cache hit");
+    anyhow::ensure!(s.shed_predicted >= 1, "stats should count the shed");
+    println!("\nall policy paths exercised: route, cache hit, structured shed.");
+
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,296 @@
+//! E9 ablation: SLO attainment of fixed-engine serving vs the adaptive
+//! policy layer under a bursty trace (DESIGN.md §7).
+//!
+//! Core result is a deterministic discrete-event simulation driven by the
+//! *real* policy components (`LatencyPredictor` + `Selector`) over engine
+//! latency models drawn from the paper (Fig 3 ACL ≈ 320 ms/image, Fig 4
+//! int8 ≈ 110 ms/image), so it runs on any machine with no artifacts:
+//!
+//! * fixed-acl: one fp32 pool — collapses under 10 rps offered (capacity
+//!   ≈ 3 rps), nearly every deadline blown;
+//! * fixed-quant: one int8 pool — capacity ≈ 9 rps, so backlog grows a
+//!   little every burst and tight deadlines start missing;
+//! * adaptive: deadline-aware selection across both pools — tight
+//!   requests ride the int8 path, loose ones keep the fp32 path busy,
+//!   and requests no variant can serve are shed instead of executed late.
+//!
+//! A second section replays a short burst against the real coordinator
+//! when artifacts exist (skipped otherwise).
+//!
+//! Run: cargo bench --bench policy_slo [-- --quick]
+
+use std::time::Duration;
+
+use zuluko::bench::BenchArgs;
+use zuluko::engine::EngineKind;
+use zuluko::policy::{Decision, LatencyPredictor, PoolView, Selector, Slo};
+use zuluko::testkit::rng::Rng;
+use zuluko::trace::{Pattern, Trace};
+use zuluko::util::percentile_sorted;
+
+/// Per-pool queue slots (mirrors Config::queue_capacity scaled down).
+const CAP: usize = 8;
+/// Paper-derived per-image latency models, ms.
+const ACL_MS: f64 = 320.0;
+const QUANT_MS: f64 = 110.0;
+
+/// One synthetic request: arrival offset, deadline, and a latency jitter
+/// factor shared by every policy so all three replay identical load.
+struct Req {
+    at_ms: f64,
+    deadline_ms: f64,
+    jitter: f64,
+}
+
+/// Single-worker FIFO pool model: completion = max(arrival, tail) + exec.
+struct SimPool {
+    kind: EngineKind,
+    base_ms: f64,
+    completions: Vec<f64>,
+}
+
+impl SimPool {
+    fn new(kind: EngineKind, base_ms: f64) -> SimPool {
+        SimPool {
+            kind,
+            base_ms,
+            completions: Vec::new(),
+        }
+    }
+
+    fn queued(&self, now: f64) -> usize {
+        self.completions.iter().filter(|&&c| c > now).count()
+    }
+
+    fn run(&mut self, now: f64, exec_ms: f64) -> f64 {
+        let tail = self.completions.last().copied().unwrap_or(0.0);
+        let done = tail.max(now) + exec_ms;
+        self.completions.push(done);
+        done
+    }
+}
+
+#[derive(Default)]
+struct Outcome {
+    met: usize,
+    missed: usize,
+    shed: usize,
+    wasted_ms: f64,
+    served_lat_ms: Vec<f64>,
+}
+
+impl Outcome {
+    fn total(&self) -> usize {
+        self.met + self.missed + self.shed
+    }
+
+    fn attainment(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.total() as f64
+        }
+    }
+
+    fn row(&self, name: &str) -> String {
+        let mut lats = self.served_lat_ms.clone();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        format!(
+            "| {} | {:.1}% | {} | {} | {} | {:.0} | {:.0} |",
+            name,
+            self.attainment() * 100.0,
+            self.met,
+            self.missed,
+            self.shed,
+            percentile_sorted(&lats, 95.0),
+            self.wasted_ms
+        )
+    }
+}
+
+/// `fixed`: always use pool `i` (shed only when its queue is full).
+/// `None`: adaptive — the real Selector over the real predictor.
+fn run_sim(reqs: &[Req], fixed: Option<usize>) -> Outcome {
+    let mut pools = vec![
+        SimPool::new(EngineKind::AclStaged, ACL_MS),
+        SimPool::new(EngineKind::Quant, QUANT_MS),
+    ];
+    let pred = LatencyPredictor::new(0.3);
+    for p in &pools {
+        pred.seed(p.kind, 1, p.base_ms);
+    }
+    let sel = Selector::new(1.1, 1);
+
+    let mut out = Outcome::default();
+    for req in reqs {
+        let now = req.at_ms;
+        let choice = match fixed {
+            Some(i) => {
+                if pools[i].queued(now) >= CAP {
+                    None
+                } else {
+                    Some(i)
+                }
+            }
+            None => {
+                let views: Vec<PoolView> = pools
+                    .iter()
+                    .map(|p| PoolView {
+                        kind: p.kind,
+                        queued: p.queued(now),
+                        workers: 1,
+                        capacity: CAP,
+                    })
+                    .collect();
+                let slo = Slo::with_deadline_ms(req.deadline_ms);
+                match sel.choose(&pred, &views, &slo, Some(req.deadline_ms)) {
+                    Decision::Route { pool, .. } => Some(pool),
+                    Decision::Shed { .. } => None,
+                }
+            }
+        };
+        match choice {
+            None => out.shed += 1,
+            Some(i) => {
+                let exec_ms = pools[i].base_ms * req.jitter;
+                let done = pools[i].run(now, exec_ms);
+                pred.record(pools[i].kind, 1, exec_ms);
+                let lat = done - now;
+                out.served_lat_ms.push(lat);
+                if lat <= req.deadline_ms {
+                    out.met += 1;
+                } else {
+                    out.missed += 1;
+                    // Engine time burned on a reply the client gave up on.
+                    out.wasted_ms += exec_ms;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let args = BenchArgs::from_env(20);
+    let n = if args.quick { 25 } else { 100 };
+
+    // Bursty camera trace: 5 frames every 500 ms (10 rps offered — above
+    // either pool alone, below both together), deadline classes cycling
+    // tight / mid / loose.
+    let trace = Trace::generate(
+        Pattern::Burst {
+            size: 5,
+            gap: Duration::from_millis(500),
+        },
+        n,
+        42,
+    );
+    let mut rng = Rng::new(7);
+    let reqs: Vec<Req> = trace
+        .arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, at)| Req {
+            at_ms: at.as_secs_f64() * 1e3,
+            deadline_ms: match i % 3 {
+                0 => 150.0,
+                1 => 350.0,
+                _ => 1000.0,
+            },
+            jitter: rng.uniform(0.97, 1.03),
+        })
+        .collect();
+
+    println!("== E9: SLO attainment under bursts (n={n}, 5-per-500ms) ==");
+    println!("| policy | attainment | met | missed | shed | p95 ms | wasted ms |");
+    println!("|---|---|---|---|---|---|---|");
+    let acl = run_sim(&reqs, Some(0));
+    let quant = run_sim(&reqs, Some(1));
+    let adaptive = run_sim(&reqs, None);
+    println!("{}", acl.row("fixed-acl"));
+    println!("{}", quant.row("fixed-quant"));
+    println!("{}", adaptive.row("adaptive"));
+
+    println!(
+        "\nadaptive meets {} deadlines vs {} (fixed-quant) and {} (fixed-acl);",
+        adaptive.met, quant.met, acl.met
+    );
+    println!(
+        "sheds ({}) replace late executions, cutting wasted engine time to \
+         {:.0} ms (vs {:.0} / {:.0}).",
+        adaptive.shed, adaptive.wasted_ms, quant.wasted_ms, acl.wasted_ms
+    );
+    assert!(
+        adaptive.met > acl.met && adaptive.met > quant.met,
+        "adaptive ({}) must beat fixed-acl ({}) and fixed-quant ({})",
+        adaptive.met,
+        quant.met,
+        acl.met
+    );
+    assert!(
+        adaptive.wasted_ms <= quant.wasted_ms,
+        "adaptive should not waste more engine time than fixed-quant"
+    );
+
+    // ---- real coordinator replay (needs artifacts) ----------------------
+    let dir = zuluko::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\nSKIP live-coordinator section: run `make artifacts` first");
+        return;
+    }
+    run_live(args.quick);
+}
+
+/// Short live replay: one burst of deadline-tagged frames against the
+/// adaptive coordinator, reporting attainment + policy counters.
+fn run_live(quick: bool) {
+    use zuluko::config::Config;
+    use zuluko::coordinator::Coordinator;
+    use zuluko::tensor::Tensor;
+
+    let mut cfg = Config {
+        engine: EngineKind::AclFused,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(20),
+        queue_capacity: 16,
+        ..Config::default()
+    };
+    cfg.policy.adaptive = true;
+    cfg.policy.quant_workers = 1;
+    cfg.policy.cache_capacity = 32;
+
+    println!("\n== E9-live: adaptive coordinator, one deadline-tagged burst ==");
+    let coord = match Coordinator::start(&cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("SKIP live section (coordinator failed to start): {e:#}");
+            return;
+        }
+    };
+    let n = if quick { 6 } else { 12 };
+    let mut receivers = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..n {
+        let slo = Slo::with_deadline_ms(match i % 3 {
+            0 => 50.0, // tighter than any engine: shed at admission
+            _ => 60_000.0,
+        });
+        match coord.submit_with_slo(Tensor::random(&[227, 227, 3], i as u64), slo) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => shed += 1,
+        }
+    }
+    let mut ok = 0usize;
+    for rx in receivers {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let s = coord.stats();
+    println!(
+        "served={ok} shed={shed} cache={}h/{}m shed_predicted={}",
+        s.cache_hits, s.cache_misses, s.shed_predicted
+    );
+    coord.shutdown();
+}

@@ -11,6 +11,35 @@ use crate::engine::EngineKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
+/// SLO policy knobs (DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Run two engine pools (configured engine + int8 quant path) with
+    /// per-request adaptive selection.
+    pub adaptive: bool,
+    /// Workers in the quant pool when adaptive.
+    pub quant_workers: usize,
+    /// Response-cache entries (0 disables the cache).
+    pub cache_capacity: usize,
+    /// EWMA weight of the newest latency sample, in (0, 1].
+    pub ewma_alpha: f64,
+    /// Headroom multiplier on predictions before deadline admission
+    /// (>= 1; higher sheds earlier).
+    pub margin: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            adaptive: false,
+            quant_workers: 1,
+            cache_capacity: 0,
+            ewma_alpha: 0.2,
+            margin: 1.2,
+        }
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -31,6 +60,8 @@ pub struct Config {
     pub listen: String,
     /// Log level (0=error..3=debug).
     pub log_level: u8,
+    /// SLO policy layer knobs.
+    pub policy: PolicyConfig,
 }
 
 impl Default for Config {
@@ -44,6 +75,7 @@ impl Default for Config {
             queue_capacity: 64,
             listen: "127.0.0.1:7878".to_string(),
             log_level: crate::util::log::INFO,
+            policy: PolicyConfig::default(),
         }
     }
 }
@@ -84,6 +116,24 @@ impl Config {
         if let Some(v) = j.get("log_level").and_then(|v| v.as_usize()) {
             self.log_level = v as u8;
         }
+        // Policy knobs live under a nested "policy" object.
+        if let Some(p) = j.get("policy") {
+            if let Some(v) = p.get("adaptive").and_then(|v| v.as_bool()) {
+                self.policy.adaptive = v;
+            }
+            if let Some(v) = p.get("quant_workers").and_then(|v| v.as_usize()) {
+                self.policy.quant_workers = v;
+            }
+            if let Some(v) = p.get("cache_capacity").and_then(|v| v.as_usize()) {
+                self.policy.cache_capacity = v;
+            }
+            if let Some(v) = p.get("ewma_alpha").and_then(|v| v.as_f64()) {
+                self.policy.ewma_alpha = v;
+            }
+            if let Some(v) = p.get("margin").and_then(|v| v.as_f64()) {
+                self.policy.margin = v;
+            }
+        }
         Ok(())
     }
 
@@ -115,6 +165,21 @@ impl Config {
         self.log_level = a
             .get_usize("log-level", self.log_level as usize)
             .map_err(anyhow::Error::msg)? as u8;
+        if a.get("adaptive").is_some() {
+            self.policy.adaptive = a.get_bool("adaptive");
+        }
+        self.policy.quant_workers = a
+            .get_usize("quant-workers", self.policy.quant_workers)
+            .map_err(anyhow::Error::msg)?;
+        self.policy.cache_capacity = a
+            .get_usize("cache-capacity", self.policy.cache_capacity)
+            .map_err(anyhow::Error::msg)?;
+        self.policy.ewma_alpha = a
+            .get_f64("ewma-alpha", self.policy.ewma_alpha)
+            .map_err(anyhow::Error::msg)?;
+        self.policy.margin = a
+            .get_f64("margin", self.policy.margin)
+            .map_err(anyhow::Error::msg)?;
         Ok(())
     }
 
@@ -146,6 +211,26 @@ impl Config {
         if self.batch_timeout > Duration::from_secs(10) {
             bail!("batch_timeout > 10s is almost certainly a unit mistake");
         }
+        if !(self.policy.ewma_alpha > 0.0 && self.policy.ewma_alpha <= 1.0) {
+            bail!(
+                "ewma_alpha must be in (0, 1], got {}",
+                self.policy.ewma_alpha
+            );
+        }
+        if self.policy.margin < 1.0 {
+            bail!("margin must be >= 1.0, got {}", self.policy.margin);
+        }
+        if self.policy.adaptive {
+            if self.policy.quant_workers == 0 {
+                bail!("quant_workers must be >= 1 when adaptive");
+            }
+            if self.engine == EngineKind::Quant {
+                bail!(
+                    "adaptive mode pairs the configured engine with the \
+                     quant pool; --engine quant is redundant (pick acl/tf)"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -160,6 +245,11 @@ impl Config {
         "queue-capacity",
         "listen",
         "log-level",
+        "adaptive",
+        "quant-workers",
+        "cache-capacity",
+        "ewma-alpha",
+        "margin",
     ];
 }
 
@@ -202,6 +292,48 @@ mod tests {
         let c = Config::from_args(&a).unwrap();
         assert_eq!(c.engine, EngineKind::AclFused);
         assert_eq!(c.max_batch, 2);
+    }
+
+    #[test]
+    fn policy_knobs_from_json_and_cli() {
+        let j = Json::parse(
+            r#"{"policy":{"adaptive":true,"quant_workers":2,
+                "cache_capacity":64,"ewma_alpha":0.5,"margin":1.5}}"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert!(c.policy.adaptive);
+        assert_eq!(c.policy.quant_workers, 2);
+        assert_eq!(c.policy.cache_capacity, 64);
+        assert_eq!(c.policy.ewma_alpha, 0.5);
+        assert_eq!(c.policy.margin, 1.5);
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            ["serve", "--adaptive", "--cache-capacity", "16"]
+                .iter()
+                .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert!(c.policy.adaptive);
+        assert_eq!(c.policy.cache_capacity, 16);
+    }
+
+    #[test]
+    fn policy_validation() {
+        let mut c = Config::default();
+        c.policy.ewma_alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.policy.margin = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.policy.adaptive = true;
+        c.engine = EngineKind::Quant;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,21 +1,31 @@
 //! The serving coordinator — L3's composition root.
 //!
 //! ```text
-//! submit(image) ──router──> worker queue (bounded, backpressured)
-//!                              │  dynamic batcher (size+timeout)
-//!                              ▼
-//!                       worker thread: engine.infer(batch)
-//!                              │
-//!                              ▼
-//!                 per-request Response via mpsc reply channel
+//! submit(image, slo) ── cache ──hit──> immediate Response
+//!          │
+//!          ▼
+//!     selector (predicted completion vs deadline, per engine pool)
+//!          │                        └──none fits──> structured shed
+//!     ┌────┴─────┐
+//!     ▼          ▼
+//!  acl pool   quant pool      (each: router -> bounded worker queues)
+//!     │          │               deadline-ordered, expired shed
+//!     ▼          ▼
+//!  worker: engine.infer(batch) ── feeds predictor + response cache
+//!          │
+//!          ▼
+//!  per-request Response via mpsc reply channel
 //! ```
 //!
-//! Invariants (tested in rust/tests/coordinator_props.rs):
-//! * every admitted request gets exactly one Response (success or error);
-//! * rejected requests are reported as rejections, never dropped silently;
-//! * FIFO within a worker queue;
+//! Invariants (tested in rust/tests/coordinator_props.rs and
+//! rust/tests/policy_props.rs):
+//! * every admitted request gets exactly one Response (success, error,
+//!   or a structured deadline rejection) — never a silent drop;
+//! * rejected/shed requests are reported as rejections;
+//! * FIFO within a worker queue among equal urgency;
 //! * batch sizes ∈ supported artifact sizes;
-//! * results are independent of batch packing.
+//! * results are independent of batch packing;
+//! * cache hits are bit-identical to the cold inference that filled them.
 
 pub mod batcher;
 pub mod queue;
@@ -28,7 +38,12 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::config::Config;
+use crate::engine::EngineKind;
 use crate::metrics::Histogram;
+use crate::policy::{
+    self, image_key, CachedResult, Decision, PolicyCtx, PolicySnapshot,
+    PoolSnapshot, PoolView, Selector, Slo,
+};
 use crate::runtime::Manifest;
 use crate::tensor::Tensor;
 
@@ -42,6 +57,10 @@ pub struct Request {
     pub id: u64,
     pub image: Tensor,
     pub submitted: Instant,
+    /// Deadline + priority; default is best-effort.
+    pub slo: Slo,
+    /// Content hash for response-cache fill (None when caching is off).
+    pub cache_key: Option<u64>,
     pub reply: mpsc::Sender<Response>,
 }
 
@@ -59,6 +78,12 @@ pub struct Response {
     pub total_ms: f64,
     pub batch_size: usize,
     pub worker: usize,
+    /// Which engine served this ("cache" for a cache hit, "" on error).
+    pub engine: &'static str,
+    /// True when served from the response cache (no inference ran).
+    pub cached: bool,
+    /// Machine-matchable error class ("error", "shed"; "" when ok).
+    pub kind: &'static str,
     pub error: Option<String>,
 }
 
@@ -73,7 +98,37 @@ impl Response {
             total_ms: 0.0,
             batch_size: 0,
             worker: usize::MAX,
+            engine: "",
+            cached: false,
+            kind: "error",
             error: Some(msg.to_string()),
+        }
+    }
+
+    /// Structured rejection for an admitted request whose deadline passed
+    /// while it waited in queue (same machine-matchable kind as an
+    /// admission-time shed).
+    pub fn shed_expired(id: u64, msg: &str) -> Response {
+        Response {
+            kind: "shed",
+            ..Response::error(id, msg)
+        }
+    }
+
+    fn cache_hit(id: u64, hit: &CachedResult, total_ms: f64) -> Response {
+        Response {
+            id,
+            top1: hit.top1,
+            top5: hit.top5.clone(),
+            queue_ms: 0.0,
+            exec_ms: 0.0,
+            total_ms,
+            batch_size: 0,
+            worker: usize::MAX,
+            engine: "cache",
+            cached: true,
+            kind: "",
+            error: None,
         }
     }
 
@@ -82,11 +137,19 @@ impl Response {
     }
 }
 
-/// Submission failure modes (backpressure surface).
-#[derive(Debug, PartialEq, Eq)]
+/// Submission failure modes (backpressure + SLO surface).
+#[derive(Debug, PartialEq)]
 pub enum SubmitError {
     /// All worker queues full — retry later (the embedded device is saturated).
     Overloaded,
+    /// No engine variant is predicted to finish inside the deadline —
+    /// shed at admission instead of serving a doomed request.
+    Shed {
+        /// Best (smallest) margin-adjusted completion prediction, ms.
+        predicted_ms: f64,
+        /// The request's full deadline budget, ms.
+        deadline_ms: f64,
+    },
     /// Coordinator shutting down.
     Closed,
     /// Input had the wrong shape.
@@ -97,6 +160,14 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Overloaded => write!(f, "overloaded"),
+            SubmitError::Shed {
+                predicted_ms,
+                deadline_ms,
+            } => write!(
+                f,
+                "overloaded: predicted {predicted_ms:.0}ms exceeds \
+                 deadline {deadline_ms:.0}ms on every engine"
+            ),
             SubmitError::Closed => write!(f, "closed"),
             SubmitError::BadInput(m) => write!(f, "bad input: {m}"),
         }
@@ -112,59 +183,125 @@ pub struct StatsSnapshot {
     pub queued: usize,
     pub latency_summary: (f64, f64, f64, f64, f64),
     pub mean_batch: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Requests shed at admission by the SLO selector.
+    pub shed_predicted: u64,
+    /// Admitted requests shed in-queue after their deadline passed.
+    pub shed_expired: u64,
+}
+
+/// One engine pool: a router over per-worker bounded queues.
+struct Pool {
+    kind: EngineKind,
+    router: Router<Request>,
+    workers: usize,
+}
+
+impl Pool {
+    /// Admission-time snapshot for the selector / introspection.
+    fn view(&self) -> PoolView {
+        PoolView {
+            kind: self.kind,
+            queued: self.router.queued(),
+            workers: self.workers,
+            capacity: self.router.capacity(),
+        }
+    }
 }
 
 /// The running serving system.
 pub struct Coordinator {
-    router: Router<Request>,
-    workers: Vec<std::thread::JoinHandle<WorkerReport>>,
+    pools: Vec<Pool>,
+    worker_handles: Vec<std::thread::JoinHandle<WorkerReport>>,
+    selector: Selector,
+    ctx: Arc<PolicyCtx>,
+    adaptive: bool,
     next_id: AtomicU64,
     stats: Arc<SharedStats>,
     input_hw: usize,
 }
 
+/// Batch sizes a given engine kind has compiled artifacts for.
+fn supported_sizes(kind: EngineKind, manifest: &Manifest) -> Vec<usize> {
+    match kind {
+        EngineKind::AclStaged => manifest.batch_sizes.clone(),
+        EngineKind::AclFused => manifest.full.keys().copied().collect(),
+        _ => vec![1],
+    }
+}
+
 impl Coordinator {
-    /// Load manifest, spawn + warm all workers.  Returns only when every
-    /// worker is ready to serve (compilation excluded from request
+    /// Load manifest, spawn + warm all worker pools.  Returns only when
+    /// every worker is ready to serve (compilation excluded from request
     /// latency) — or fails fast if any worker can't build its engine.
+    ///
+    /// With `cfg.policy.adaptive`, two pools come up — the configured
+    /// engine (quality path) plus the int8 quant path — and the SLO
+    /// selector routes between them per request.
     pub fn start(cfg: &Config) -> Result<Coordinator> {
         let manifest = Manifest::load(&cfg.artifacts).context("loading manifest")?;
-        let supported: Vec<usize> = match cfg.engine {
-            crate::engine::EngineKind::AclStaged => manifest.batch_sizes.clone(),
-            crate::engine::EngineKind::AclFused => {
-                manifest.full.keys().copied().collect()
-            }
-            _ => vec![1],
-        };
-        let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
 
-        let queues: Vec<Arc<BoundedQueue<Request>>> = (0..cfg.workers)
-            .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
-            .collect();
+        let specs: Vec<(EngineKind, usize)> = if cfg.policy.adaptive {
+            vec![
+                (cfg.engine, cfg.workers),
+                (EngineKind::Quant, cfg.policy.quant_workers),
+            ]
+        } else {
+            vec![(cfg.engine, cfg.workers)]
+        };
+
+        let ctx = Arc::new(PolicyCtx::new(
+            cfg.policy.ewma_alpha,
+            cfg.policy.cache_capacity,
+        ));
+        for &(kind, _) in &specs {
+            ctx.predictor.seed(kind, 1, policy::default_prior_ms(kind));
+        }
+
         let stats = Arc::new(SharedStats::default());
         let (ready_tx, ready_rx) = mpsc::channel();
 
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for (i, q) in queues.iter().enumerate() {
-            workers.push(worker::spawn_worker(
-                i,
-                cfg.engine,
-                manifest.clone(),
-                q.clone(),
-                policy.clone(),
-                stats.clone(),
-                ready_tx.clone(),
-            ));
+        let mut pools = Vec::with_capacity(specs.len());
+        let mut worker_handles = Vec::new();
+        let mut worker_index = 0usize;
+        for (pool_index, &(kind, n_workers)) in specs.iter().enumerate() {
+            let supported = supported_sizes(kind, &manifest);
+            let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
+            let queues: Vec<Arc<BoundedQueue<Request>>> = (0..n_workers)
+                .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
+                .collect();
+            for q in &queues {
+                worker_handles.push(worker::spawn_worker(
+                    worker_index,
+                    kind,
+                    manifest.clone(),
+                    q.clone(),
+                    policy.clone(),
+                    stats.clone(),
+                    ctx.clone(),
+                    // Only the quality pool (specs[0]) fills the cache so
+                    // hits never downgrade accuracy to the int8 path.
+                    pool_index == 0,
+                    ready_tx.clone(),
+                ));
+                worker_index += 1;
+            }
+            pools.push(Pool {
+                kind,
+                router: Router::new(queues),
+                workers: n_workers,
+            });
         }
         drop(ready_tx);
 
         // Wait for all workers (fail fast on any engine build error).
-        for _ in 0..cfg.workers {
+        for _ in 0..worker_index {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
-                    for q in &queues {
-                        q.close();
+                    for p in &pools {
+                        p.router.close_all();
                     }
                     bail!("worker failed to start: {e:#}");
                 }
@@ -174,24 +311,41 @@ impl Coordinator {
 
         crate::info!(
             "coordinator",
-            "ready: engine={} workers={} max_batch={} supported={:?}",
-            cfg.engine.as_str(),
-            cfg.workers,
+            "ready: pools={:?} max_batch={} adaptive={} cache={}",
+            pools
+                .iter()
+                .map(|p| format!("{}x{}", p.kind.as_str(), p.workers))
+                .collect::<Vec<_>>(),
             cfg.max_batch,
-            policy.supported
+            cfg.policy.adaptive,
+            cfg.policy.cache_capacity
         );
 
         Ok(Coordinator {
-            router: Router::new(queues),
-            workers,
+            pools,
+            worker_handles,
+            selector: Selector::new(cfg.policy.margin, 1),
+            ctx,
+            adaptive: cfg.policy.adaptive,
             next_id: AtomicU64::new(1),
             stats,
             input_hw: manifest.input_hw,
         })
     }
 
-    /// Submit an image; returns the reply channel.
+    /// Submit a best-effort image; returns the reply channel.
     pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit_with_slo(image, Slo::default())
+    }
+
+    /// Submit with an SLO.  The cache is consulted first (a hit replies
+    /// immediately without touching an engine); otherwise the selector
+    /// routes to the best pool predicted to meet the deadline, or sheds.
+    pub fn submit_with_slo(
+        &self,
+        image: Tensor,
+        slo: Slo,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let want = [self.input_hw, self.input_hw, 3];
         if image.shape() != want {
             return Err(SubmitError::BadInput(format!(
@@ -200,14 +354,59 @@ impl Coordinator {
                 image.shape()
             )));
         }
+        let submitted = Instant::now();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+
+        // Response cache: repeated frames skip inference entirely.
+        let cache_key = if self.ctx.cache.enabled() {
+            let key = image_key(image.data());
+            if let Some(hit) = self.ctx.cache.get(key) {
+                let (tx, rx) = mpsc::channel();
+                let total_ms = crate::util::ms(submitted.elapsed());
+                let _ = tx.send(Response::cache_hit(id, &hit, total_ms));
+                self.stats.completed.fetch_add(1, Ordering::Relaxed);
+                self.stats.latency.lock().unwrap().record_ms(total_ms);
+                return Ok(rx);
+            }
+            Some(key)
+        } else {
+            None
+        };
+
+        let views: Vec<PoolView> = self.pools.iter().map(Pool::view).collect();
+        let budget_ms = slo.deadline_ms();
+        let decision =
+            self.selector
+                .choose(&self.ctx.predictor, &views, &slo, budget_ms);
+
+        let pool = match decision {
+            Decision::Route { pool, .. } => pool,
+            Decision::Shed { best_ms } => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let any_room = views.iter().any(|v| v.queued < v.capacity);
+                return Err(match (budget_ms, any_room) {
+                    (Some(deadline_ms), true) => {
+                        self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
+                        SubmitError::Shed {
+                            predicted_ms: best_ms,
+                            deadline_ms,
+                        }
+                    }
+                    _ => SubmitError::Overloaded,
+                });
+            }
+        };
+
         let (tx, rx) = mpsc::channel();
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             image,
-            submitted: Instant::now(),
+            submitted,
+            slo,
+            cache_key,
             reply: tx,
         };
-        match self.router.route(req) {
+        match self.pools[pool].router.route(req) {
             Ok(_) => Ok(rx),
             Err(RouteError::Overloaded(_)) => {
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
@@ -228,13 +427,45 @@ impl Coordinator {
     pub fn stats(&self) -> StatsSnapshot {
         let lat = self.stats.latency.lock().unwrap();
         let batch = self.stats.batch_sizes.lock().unwrap();
+        let cache = self.ctx.cache.stats();
         StatsSnapshot {
             completed: self.stats.completed.load(Ordering::Relaxed),
             rejected: self.stats.rejected.load(Ordering::Relaxed),
             images: self.stats.images.load(Ordering::Relaxed),
-            queued: self.router.queued(),
+            queued: self.pools.iter().map(|p| p.router.queued()).sum(),
             latency_summary: lat.summary(),
             mean_batch: batch.mean_ms(),
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            shed_predicted: self.ctx.shed_predicted_count(),
+            shed_expired: self.ctx.shed_expired_count(),
+        }
+    }
+
+    /// Policy-layer introspection (`{"cmd":"policy"}`).
+    pub fn policy_snapshot(&self) -> PolicySnapshot {
+        PolicySnapshot {
+            adaptive: self.adaptive,
+            pools: self
+                .pools
+                .iter()
+                .map(|p| {
+                    let view = p.view();
+                    PoolSnapshot {
+                        engine: p.kind.as_str(),
+                        workers: p.workers,
+                        queued: view.queued,
+                        capacity: view.capacity,
+                        predicted_ms: self
+                            .selector
+                            .predict_ms(&self.ctx.predictor, &view),
+                        samples: self.ctx.predictor.samples(p.kind),
+                    }
+                })
+                .collect(),
+            cache: self.ctx.cache.stats(),
+            shed_predicted: self.ctx.shed_predicted_count(),
+            shed_expired: self.ctx.shed_expired_count(),
         }
     }
 
@@ -245,8 +476,10 @@ impl Coordinator {
 
     /// Graceful shutdown: drain queues, join workers, return their reports.
     pub fn shutdown(self) -> Vec<WorkerReport> {
-        self.router.close_all();
-        self.workers
+        for p in &self.pools {
+            p.router.close_all();
+        }
+        self.worker_handles
             .into_iter()
             .map(|h| h.join().expect("worker panicked"))
             .collect()

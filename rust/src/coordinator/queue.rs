@@ -101,6 +101,14 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Stable-sort pending items by a key — the deadline-ordering hook
+    /// (policy::deadline::Urgency).  Stability preserves FIFO among
+    /// equal keys, so plain traffic is unaffected.
+    pub fn sort_pending_by_key<K: Ord>(&self, key: impl Fn(&T) -> K) {
+        let mut g = self.inner.lock().unwrap();
+        g.items.make_contiguous().sort_by_key(|t| key(t));
+    }
+
     /// Drain up to `n` items without blocking.
     pub fn drain_up_to(&self, n: usize) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
@@ -186,6 +194,21 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.try_push(42u32).unwrap();
         assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn sort_pending_is_stable() {
+        let q = BoundedQueue::new(10);
+        // (key, seq): equal keys must keep push order.
+        for item in [(1, 0), (0, 1), (1, 2), (0, 3)] {
+            q.try_push(item).unwrap();
+        }
+        q.sort_pending_by_key(|&(k, _)| k);
+        let mut seen = Vec::new();
+        while let Some(it) = q.pop_wait(Duration::from_millis(1)) {
+            seen.push(it);
+        }
+        assert_eq!(seen, vec![(0, 1), (0, 3), (1, 0), (1, 2)]);
     }
 
     #[test]

@@ -67,6 +67,12 @@ impl<T> Router<T> {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Total admission slots across all queues (the selector's
+    /// "pool full" bound).
+    pub fn capacity(&self) -> usize {
+        self.queues.iter().map(|q| q.capacity()).sum()
+    }
+
     pub fn close_all(&self) {
         for q in &self.queues {
             q.close();

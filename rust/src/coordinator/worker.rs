@@ -1,6 +1,14 @@
 //! Worker threads: each owns an engine replica (XLA handles are not Send,
 //! so the engine is built *inside* the thread) and drains its queue via
 //! the dynamic batcher.
+//!
+//! Policy duties on the request path (DESIGN.md §7): before forming a
+//! batch the pending queue is stable-sorted by urgency (priority, then
+//! deadline) and already-expired requests are shed with a structured
+//! rejection instead of burning engine time; after each batch the
+//! observed execution time feeds the shared latency predictor and —
+//! on the quality pool only — the per-request results fill the
+//! response cache.
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -11,12 +19,17 @@ use std::time::Instant;
 use crate::engine::{self, EngineKind};
 use crate::metrics::ledger::Ledger;
 use crate::metrics::Histogram;
+use crate::policy::{CachedResult, PolicyCtx, Urgency};
 use crate::runtime::Manifest;
 use crate::tensor::Tensor;
 
 use super::batcher::BatchPolicy;
 use super::queue::BoundedQueue;
 use super::{Request, Response};
+
+/// The reply sent for an admitted request whose deadline passed while it
+/// waited in queue (tested against in examples and policy_props).
+pub const DEADLINE_ERROR: &str = "deadline exceeded in queue";
 
 /// What a worker hands back at shutdown.
 #[derive(Debug)]
@@ -38,6 +51,7 @@ pub struct SharedStats {
     pub batch_sizes: Mutex<Histogram>,
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_worker(
     worker: usize,
     kind: EngineKind,
@@ -45,6 +59,11 @@ pub fn spawn_worker(
     queue: Arc<BoundedQueue<Request>>,
     policy: BatchPolicy,
     stats: Arc<SharedStats>,
+    ctx: Arc<PolicyCtx>,
+    // Only the quality pool fills the response cache: caching an int8
+    // result would let later fp32-entitled requests hit it (Fig 4
+    // accuracy loss through the back door).
+    fill_cache: bool,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<WorkerReport> {
     std::thread::Builder::new()
@@ -84,13 +103,41 @@ pub fn spawn_worker(
             let mut batches = 0u64;
             let mut images = 0u64;
 
-            while let Some(reqs) = policy.form(&queue) {
+            loop {
+                // Deadline-aware ordering: most urgent work first.
+                // Stable, so plain FIFO traffic is untouched.
+                queue.sort_pending_by_key(|r| Urgency::of(&r.slo, r.submitted));
+
+                let Some(reqs) = policy.form(&queue) else { break };
+
+                // Shed batch members whose deadline already passed —
+                // running them would waste engine time on a reply the
+                // client has given up on.  Never silent: each shed
+                // request gets a structured error response.
+                let now = Instant::now();
+                let (expired, live): (Vec<Request>, Vec<Request>) = reqs
+                    .into_iter()
+                    .partition(|r| r.slo.expired(r.submitted, now));
+                for r in &expired {
+                    ctx.shed_expired.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Response::shed_expired(r.id, DEADLINE_ERROR));
+                }
+                if live.is_empty() {
+                    continue;
+                }
+                // Shedding may leave a batch size without an artifact;
+                // re-split and return the tail to the queue front.
+                let (live, leftover) = policy.split(live);
+                if !leftover.is_empty() {
+                    queue.push_front_bulk(leftover);
+                }
+
                 let formed_at = Instant::now();
-                let refs: Vec<&Tensor> = reqs.iter().map(|r| &r.image).collect();
+                let refs: Vec<&Tensor> = live.iter().map(|r| &r.image).collect();
                 let batch = match Tensor::stack(&refs) {
                     Ok(b) => b,
                     Err(e) => {
-                        fail_batch(&reqs, &format!("stack: {e}"));
+                        fail_batch(&live, &format!("stack: {e}"));
                         continue;
                     }
                 };
@@ -100,29 +147,46 @@ pub fn spawn_worker(
 
                 match out.and_then(|o| o.unstack().map_err(Into::into)) {
                     Ok(rows) => {
-                        let bsize = reqs.len();
+                        let bsize = live.len();
                         batches += 1;
                         images += bsize as u64;
+                        ctx.predictor.record(kind, bsize, exec_ms);
                         stats
                             .batch_sizes
                             .lock()
                             .unwrap()
                             .record_ms(bsize as f64);
-                        for (req, row) in reqs.into_iter().zip(rows) {
+                        for (req, row) in live.into_iter().zip(rows) {
                             let total_ms =
                                 crate::util::ms(req.submitted.elapsed());
                             let queue_ms = crate::util::ms(
                                 formed_at.duration_since(req.submitted),
                             );
+                            let top1 = row.argmax();
+                            let top5 = row.topk(5);
+                            if fill_cache {
+                                if let Some(key) = req.cache_key {
+                                    ctx.cache.put(
+                                        key,
+                                        CachedResult {
+                                            top1,
+                                            top5: top5.clone(),
+                                        },
+                                    );
+                                }
+                            }
                             let _ = req.reply.send(Response {
                                 id: req.id,
-                                top1: row.argmax(),
-                                top5: row.topk(5),
+                                top1,
+                                top5,
                                 queue_ms,
                                 exec_ms,
                                 total_ms,
                                 batch_size: bsize,
                                 worker,
+                                engine: kind.as_str(),
+                                cached: false,
+                                kind: "",
                                 error: None,
                             });
                             stats.completed.fetch_add(1, Ordering::Relaxed);
@@ -134,7 +198,7 @@ pub fn spawn_worker(
                                 .record_ms(total_ms);
                         }
                     }
-                    Err(e) => fail_batch_owned(reqs, &format!("infer: {e}")),
+                    Err(e) => fail_batch_owned(live, &format!("infer: {e}")),
                 }
             }
 

@@ -54,8 +54,9 @@ pub trait Engine {
     }
 }
 
-/// Engine selector used by the CLI / config / benches.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Engine selector used by the CLI / config / benches.  `Ord`/`Hash`
+/// let the policy layer key predictor tables by engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum EngineKind {
     /// ACL, per-stage fused executables (default serving mode).
     AclStaged,

@@ -11,15 +11,18 @@
 //! * **L2** — JAX SqueezeNet v1.0 (`python/compile/model.py`), AOT-lowered
 //!   to HLO-text artifacts.
 //! * **L3** — this crate: the serving coordinator (router, dynamic
-//!   batcher, worker pool, TCP server) with two execution backends:
+//!   batcher, worker pools, TCP server) with two execution backends:
 //!   the paper's from-scratch **ACL engine** (fused stages) and the
 //!   **TF-baseline engine** (op-by-op graph interpreter), plus the Fig 4
-//!   quantized variant.
+//!   quantized variant — topped by an SLO-aware **policy layer**
+//!   (`policy`): per-request deadlines/priorities, an online latency
+//!   predictor, adaptive engine selection with load shedding, and a
+//!   content-addressed response cache.
 //!
 //! Python never runs on the request path; `make artifacts` runs it once.
 //!
-//! See DESIGN.md for the full system inventory and experiment index, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md for the full system inventory, the experiment index,
+//! and the substitution rationale (§Substitutions).
 
 pub mod bench;
 pub mod config;
@@ -27,6 +30,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

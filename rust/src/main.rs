@@ -36,6 +36,12 @@ const FLAGS: &[&str] = &[
     "queue-capacity",
     "listen",
     "log-level",
+    // policy layer
+    "adaptive",
+    "quant-workers",
+    "cache-capacity",
+    "ewma-alpha",
+    "margin",
     // command-specific
     "ppm",
     "seed",
@@ -71,7 +77,13 @@ fn run() -> Result<()> {
 }
 
 fn cmd_serve(cfg: &Config) -> Result<()> {
-    info!("main", "starting coordinator (engine={})", cfg.engine.as_str());
+    info!(
+        "main",
+        "starting coordinator (engine={} adaptive={} cache={})",
+        cfg.engine.as_str(),
+        cfg.policy.adaptive,
+        cfg.policy.cache_capacity
+    );
     let coord = Arc::new(Coordinator::start(cfg)?);
     let server = Server::start(coord.clone(), &cfg.listen)?;
     info!("main", "serving on {} — Ctrl-C to stop", server.addr());
@@ -81,11 +93,15 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         let s = coord.stats();
         info!(
             "main",
-            "completed={} rejected={} queued={} p50={:.1}ms",
+            "completed={} rejected={} queued={} p50={:.1}ms cache={}h/{}m shed={}+{}",
             s.completed,
             s.rejected,
             s.queued,
-            s.latency_summary.1
+            s.latency_summary.1,
+            s.cache_hits,
+            s.cache_misses,
+            s.shed_predicted,
+            s.shed_expired
         );
     }
 }

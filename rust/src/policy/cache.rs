@@ -1,0 +1,232 @@
+//! Bounded LRU response cache keyed on image content hash.
+//!
+//! Embedded vision streams repeat frames (static scenes, duplicated
+//! keyframes), so identical inputs are common; SqueezeNet inference is
+//! deterministic, so a repeated frame's classification can be served
+//! from memory bit-identically.  Keys are a 64-bit FNV-1a hash of the
+//! preprocessed f32 pixels — content addressing, so the hit path is
+//! independent of how the frame arrived (ppm path vs synthetic seed).
+//!
+//! Invariants (property-tested in rust/tests/policy_props.rs):
+//! * a hit returns exactly the inserted value (bit-identical top-5);
+//! * the cache never holds more than `capacity` entries;
+//! * eviction is least-recently-used (gets refresh recency).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The cacheable part of an inference response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedResult {
+    pub top1: usize,
+    pub top5: Vec<(usize, f32)>,
+}
+
+/// Cache statistics for `{"cmd":"policy"}`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+struct Lru {
+    capacity: usize,
+    tick: u64,
+    /// key -> (value, recency tick at last touch)
+    map: HashMap<u64, (CachedResult, u64)>,
+    /// recency tick -> key (oldest tick = LRU victim)
+    order: BTreeMap<u64, u64>,
+}
+
+impl Lru {
+    fn touch(&mut self, key: u64) {
+        let old_tick = match self.map.get(&key) {
+            Some((_, t)) => *t,
+            None => return,
+        };
+        self.order.remove(&old_tick);
+        self.tick += 1;
+        let t = self.tick;
+        self.order.insert(t, key);
+        if let Some(entry) = self.map.get_mut(&key) {
+            entry.1 = t;
+        }
+    }
+}
+
+/// Thread-safe bounded LRU cache.  `capacity == 0` disables caching
+/// (every lookup misses, inserts are dropped).
+pub struct ResponseCache {
+    inner: Mutex<Lru>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize) -> ResponseCache {
+        ResponseCache {
+            inner: Mutex::new(Lru {
+                capacity,
+                tick: 0,
+                map: HashMap::new(),
+                order: BTreeMap::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.lock().unwrap().capacity > 0
+    }
+
+    /// Look up a frame hash; a hit refreshes recency.
+    pub fn get(&self, key: u64) -> Option<CachedResult> {
+        let mut g = self.inner.lock().unwrap();
+        if g.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        match g.map.get(&key).map(|(v, _)| v.clone()) {
+            Some(v) => {
+                g.touch(key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a result, evicting the LRU entry when full.
+    pub fn put(&self, key: u64, value: CachedResult) {
+        let mut g = self.inner.lock().unwrap();
+        if g.capacity == 0 {
+            return;
+        }
+        if g.map.contains_key(&key) {
+            g.touch(key);
+            if let Some(entry) = g.map.get_mut(&key) {
+                entry.0 = value;
+            }
+            return;
+        }
+        while g.map.len() >= g.capacity {
+            // BTreeMap iteration is ascending: first entry is the LRU.
+            let victim = match g.order.iter().next() {
+                Some((&t, &k)) => (t, k),
+                None => break,
+            };
+            g.order.remove(&victim.0);
+            g.map.remove(&victim.1);
+        }
+        g.tick += 1;
+        let t = g.tick;
+        g.order.insert(t, key);
+        g.map.insert(key, (value, t));
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            len: g.map.len(),
+            capacity: g.capacity,
+        }
+    }
+}
+
+/// FNV-1a over the f32 bit patterns — the frame's content address.
+/// ~0.6 MB per 227x227x3 frame hashes in well under a millisecond, two
+/// orders of magnitude below an inference.
+pub fn image_key(pixels: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in pixels {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(top1: usize) -> CachedResult {
+        CachedResult {
+            top1,
+            top5: vec![(top1, 0.5), (top1 + 1, 0.25)],
+        }
+    }
+
+    #[test]
+    fn hit_returns_inserted_value() {
+        let c = ResponseCache::new(4);
+        assert_eq!(c.get(7), None);
+        c.put(7, result(694));
+        assert_eq!(c.get(7), Some(result(694)));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn capacity_is_a_hard_bound_with_lru_eviction() {
+        let c = ResponseCache::new(2);
+        c.put(1, result(1));
+        c.put(2, result(2));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.get(1).is_some());
+        c.put(3, result(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(1).is_some(), "recently used entry evicted");
+        assert_eq!(c.get(2), None, "LRU entry survived");
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_and_recency() {
+        let c = ResponseCache::new(2);
+        c.put(1, result(1));
+        c.put(2, result(2));
+        c.put(1, result(10)); // refresh: 2 is now LRU
+        c.put(3, result(3));
+        assert_eq!(c.get(1), Some(result(10)));
+        assert_eq!(c.get(2), None);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = ResponseCache::new(0);
+        c.put(1, result(1));
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.len(), 0);
+        assert!(!c.enabled());
+    }
+
+    #[test]
+    fn image_key_is_content_addressed() {
+        let a = vec![0.0f32, 1.0, 2.0];
+        let b = vec![0.0f32, 1.0, 2.0];
+        let cdat = vec![0.0f32, 1.0, 2.0001];
+        assert_eq!(image_key(&a), image_key(&b));
+        assert_ne!(image_key(&a), image_key(&cdat));
+        // -0.0 and 0.0 differ bitwise: distinct frames, distinct keys.
+        assert_ne!(image_key(&[0.0]), image_key(&[-0.0]));
+    }
+}

@@ -1,0 +1,201 @@
+//! Per-request SLOs: deadlines, priorities, and the urgency order the
+//! coordinator's queues use.
+//!
+//! The wire protocol carries `{"deadline_ms": 250, "priority": "hi"}`
+//! alongside the image; both are optional.  A request with no deadline
+//! never expires and sorts after every deadlined request of the same
+//! priority (deadlined work is the scarce kind — serve it first).
+//!
+//! Invariants (property-tested in rust/tests/policy_props.rs):
+//! * urgency order is total: hi < normal < lo, then earlier deadline
+//!   first, then no-deadline last;
+//! * a request only counts as expired once `now - submitted > deadline`;
+//! * shedding an expired request always produces a structured rejection
+//!   (enforced at the worker; see coordinator::worker).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// Request priority class (three levels are plenty for an embedded
+/// serving budget; ties break on deadline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Hi,
+    Normal,
+    Lo,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        Ok(match s {
+            "hi" | "high" => Priority::Hi,
+            "normal" | "mid" | "default" => Priority::Normal,
+            "lo" | "low" => Priority::Lo,
+            _ => bail!("unknown priority '{s}' (hi|normal|lo)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Hi => "hi",
+            Priority::Normal => "normal",
+            Priority::Lo => "lo",
+        }
+    }
+
+    /// Scheduling rank: lower serves first.
+    pub fn rank(&self) -> u8 {
+        match self {
+            Priority::Hi => 0,
+            Priority::Normal => 1,
+            Priority::Lo => 2,
+        }
+    }
+}
+
+/// The service-level objective attached to one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Completion budget measured from submission.  `None` = best-effort.
+    pub deadline: Option<Duration>,
+    pub priority: Priority,
+}
+
+impl Default for Slo {
+    fn default() -> Slo {
+        Slo {
+            deadline: None,
+            priority: Priority::Normal,
+        }
+    }
+}
+
+impl Slo {
+    pub fn with_deadline_ms(ms: f64) -> Slo {
+        Slo {
+            deadline: Some(Duration::from_secs_f64(ms / 1e3)),
+            priority: Priority::Normal,
+        }
+    }
+
+    pub fn deadline_ms(&self) -> Option<f64> {
+        self.deadline.map(|d| d.as_secs_f64() * 1e3)
+    }
+
+    /// Budget remaining at `now` for a request submitted at `submitted`,
+    /// in ms.  `None` when the request has no deadline.
+    pub fn remaining_ms(&self, submitted: Instant, now: Instant) -> Option<f64> {
+        self.deadline.map(|d| {
+            let spent = now.saturating_duration_since(submitted);
+            (d.as_secs_f64() - spent.as_secs_f64()) * 1e3
+        })
+    }
+
+    /// Has the deadline already passed?  Best-effort requests never
+    /// expire.
+    pub fn expired(&self, submitted: Instant, now: Instant) -> bool {
+        match self.deadline {
+            Some(d) => now.saturating_duration_since(submitted) > d,
+            None => false,
+        }
+    }
+}
+
+/// Absolute-deadline component of [`Urgency`].  Variant order is the
+/// sort order: a concrete deadline beats "no deadline".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum DeadlineKey {
+    At(Instant),
+    None,
+}
+
+/// Total urgency order for queue sorting: priority rank first, then
+/// absolute deadline (earliest first), no-deadline last.  Stable sorts
+/// preserve FIFO among equals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Urgency {
+    rank: u8,
+    deadline: DeadlineKey,
+}
+
+impl Urgency {
+    pub fn of(slo: &Slo, submitted: Instant) -> Urgency {
+        Urgency {
+            rank: slo.priority.rank(),
+            deadline: match slo.deadline {
+                Some(d) => DeadlineKey::At(submitted + d),
+                None => DeadlineKey::None,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_parse_roundtrip() {
+        for p in [Priority::Hi, Priority::Normal, Priority::Lo] {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(Priority::parse("high").unwrap(), Priority::Hi);
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn expiry_respects_deadline() {
+        let t0 = Instant::now();
+        let slo = Slo::with_deadline_ms(50.0);
+        assert!(!slo.expired(t0, t0));
+        assert!(!slo.expired(t0, t0 + Duration::from_millis(50)));
+        assert!(slo.expired(t0, t0 + Duration::from_millis(51)));
+        assert!(!Slo::default().expired(t0, t0 + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn remaining_budget() {
+        let t0 = Instant::now();
+        let slo = Slo::with_deadline_ms(100.0);
+        let r = slo.remaining_ms(t0, t0 + Duration::from_millis(40)).unwrap();
+        assert!((r - 60.0).abs() < 1.0, "remaining {r}");
+        assert_eq!(Slo::default().remaining_ms(t0, t0), None);
+    }
+
+    #[test]
+    fn urgency_total_order() {
+        let t0 = Instant::now();
+        let hi_late = Urgency::of(
+            &Slo {
+                deadline: Some(Duration::from_millis(500)),
+                priority: Priority::Hi,
+            },
+            t0,
+        );
+        let hi_soon = Urgency::of(
+            &Slo {
+                deadline: Some(Duration::from_millis(100)),
+                priority: Priority::Hi,
+            },
+            t0,
+        );
+        let normal_soon = Urgency::of(
+            &Slo {
+                deadline: Some(Duration::from_millis(1)),
+                priority: Priority::Normal,
+            },
+            t0,
+        );
+        let hi_best_effort = Urgency::of(
+            &Slo {
+                deadline: None,
+                priority: Priority::Hi,
+            },
+            t0,
+        );
+        assert!(hi_soon < hi_late);
+        assert!(hi_late < hi_best_effort);
+        assert!(hi_best_effort < normal_soon);
+    }
+}

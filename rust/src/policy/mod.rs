@@ -1,0 +1,103 @@
+//! SLO-aware serving policy — the decision layer between the server and
+//! the coordinator (DESIGN.md §7).
+//!
+//! The paper's thesis is that a from-scratch engine wins because it can
+//! exploit workload knowledge a generic framework cannot.  This module
+//! applies that idea above the engines: every request carries an
+//! optional deadline and priority ([`deadline`]), an online EWMA
+//! predictor tracks what each engine variant actually costs on this
+//! hardware ([`predictor`]), an adaptive selector routes each request to
+//! the cheapest variant that meets its SLO — or sheds it with a
+//! structured rejection ([`selector`]) — and a content-addressed LRU
+//! cache serves repeated frames without touching an engine at all
+//! ([`cache`]).
+//!
+//! ```text
+//! request {image, deadline, priority}
+//!    │
+//!    ├── cache.get(hash(image)) ──hit──> response (no inference)
+//!    ▼
+//! selector.choose(predictor, pool views, slo)
+//!    ├── Route(acl pool)    — accurate path fits the budget
+//!    ├── Route(quant pool)  — only the int8 path fits
+//!    └── Shed               — structured `overloaded` rejection
+//! ```
+//!
+//! The coordinator owns one [`PolicyCtx`] shared by its worker pools;
+//! workers feed the predictor and fill the cache, the submit path reads
+//! both.
+
+pub mod cache;
+pub mod deadline;
+pub mod predictor;
+pub mod selector;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use cache::{image_key, CacheStats, CachedResult, ResponseCache};
+pub use deadline::{Priority, Slo, Urgency};
+pub use predictor::{default_prior_ms, LatencyPredictor, PredictorRow};
+pub use selector::{Decision, PoolView, Selector};
+
+/// Shared policy state: predictor + cache + shed accounting.
+pub struct PolicyCtx {
+    pub predictor: LatencyPredictor,
+    pub cache: ResponseCache,
+    /// Requests shed at admission (no variant predicted to meet the SLO).
+    pub shed_predicted: AtomicU64,
+    /// Admitted requests shed in-queue after their deadline passed.
+    pub shed_expired: AtomicU64,
+}
+
+impl PolicyCtx {
+    pub fn new(ewma_alpha: f64, cache_capacity: usize) -> PolicyCtx {
+        PolicyCtx {
+            predictor: LatencyPredictor::new(ewma_alpha),
+            cache: ResponseCache::new(cache_capacity),
+            shed_predicted: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shed_predicted_count(&self) -> u64 {
+        self.shed_predicted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_expired_count(&self) -> u64 {
+        self.shed_expired.load(Ordering::Relaxed)
+    }
+}
+
+/// One pool's state in a [`PolicySnapshot`].
+#[derive(Debug, Clone)]
+pub struct PoolSnapshot {
+    pub engine: &'static str,
+    pub workers: usize,
+    pub queued: usize,
+    pub capacity: usize,
+    pub predicted_ms: f64,
+    pub samples: u64,
+}
+
+/// Everything `{"cmd":"policy"}` reports.
+#[derive(Debug, Clone)]
+pub struct PolicySnapshot {
+    pub adaptive: bool,
+    pub pools: Vec<PoolSnapshot>,
+    pub cache: CacheStats,
+    pub shed_predicted: u64,
+    pub shed_expired: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_counters_start_zero() {
+        let ctx = PolicyCtx::new(0.2, 8);
+        assert_eq!(ctx.shed_predicted_count(), 0);
+        assert_eq!(ctx.shed_expired_count(), 0);
+        assert!(ctx.cache.enabled());
+    }
+}

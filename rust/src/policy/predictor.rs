@@ -1,0 +1,211 @@
+//! Online latency predictor: an EWMA of observed engine execution time
+//! per (engine, batch size), fed by the workers after every batch.
+//!
+//! Following Marco et al. (adaptive model selection, 1911.04946), the
+//! predictor starts from paper-derived priors (Fig 3/4 single-image
+//! latencies) and converges onto the deployment's real numbers as
+//! samples arrive — thermal throttling, contention, and big.LITTLE
+//! placement all fold into the same moving average.  Predictions are
+//! deliberately simple (no queueing theory): completion ≈ backlog drain
+//! time + own batch execution, which is what the selector needs to
+//! compare against a deadline.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::engine::EngineKind;
+
+/// Paper-derived prior for one image, in ms (Fig 3: TF 420 → ACL 320;
+/// Fig 4: int8 ≈ 4x off the fp32 baseline on conv-bound stages).
+pub fn default_prior_ms(kind: EngineKind) -> f64 {
+    match kind {
+        EngineKind::AclStaged => 320.0,
+        EngineKind::AclFused => 300.0,
+        EngineKind::AclProbe => 340.0,
+        EngineKind::TfBaseline => 420.0,
+        EngineKind::Quant => 110.0,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ewma {
+    value_ms: f64,
+    samples: u64,
+}
+
+/// One predictor row, as exposed by `{"cmd":"policy"}`.
+#[derive(Debug, Clone)]
+pub struct PredictorRow {
+    pub engine: EngineKind,
+    pub batch: usize,
+    pub ewma_ms: f64,
+    pub samples: u64,
+}
+
+/// Thread-safe EWMA store.  Cheap: one short mutex hold per batch on the
+/// worker side and per admission on the selector side.
+pub struct LatencyPredictor {
+    alpha: f64,
+    cells: Mutex<BTreeMap<(EngineKind, usize), Ewma>>,
+}
+
+impl LatencyPredictor {
+    /// `alpha` is the EWMA weight of the newest sample, in (0, 1].
+    pub fn new(alpha: f64) -> LatencyPredictor {
+        LatencyPredictor {
+            alpha: alpha.clamp(1e-3, 1.0),
+            cells: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Seed a prior so the selector has something to reason with before
+    /// the first real sample (counted as zero samples).
+    pub fn seed(&self, engine: EngineKind, batch: usize, ms: f64) {
+        let mut g = self.cells.lock().unwrap();
+        g.entry((engine, batch.max(1))).or_insert(Ewma {
+            value_ms: ms.max(0.0),
+            samples: 0,
+        });
+    }
+
+    /// Record one observed batch execution time.
+    pub fn record(&self, engine: EngineKind, batch: usize, exec_ms: f64) {
+        if !exec_ms.is_finite() || exec_ms < 0.0 {
+            return;
+        }
+        let mut g = self.cells.lock().unwrap();
+        let cell = g.entry((engine, batch.max(1))).or_insert(Ewma {
+            value_ms: exec_ms,
+            samples: 0,
+        });
+        if cell.samples == 0 {
+            // First real sample replaces the prior outright.
+            cell.value_ms = exec_ms;
+        } else {
+            cell.value_ms = self.alpha * exec_ms + (1.0 - self.alpha) * cell.value_ms;
+        }
+        cell.samples += 1;
+    }
+
+    /// Predicted execution time for one batch of `batch` images.
+    ///
+    /// Lookup order: exact (engine, batch) bucket; else the nearest
+    /// recorded bucket for the engine scaled linearly by batch ratio
+    /// (sub-linear batching gains make this pessimistic — safe for
+    /// deadline admission); else the paper prior times `batch`.
+    pub fn batch_ms(&self, engine: EngineKind, batch: usize) -> f64 {
+        let batch = batch.max(1);
+        let g = self.cells.lock().unwrap();
+        if let Some(c) = g.get(&(engine, batch)) {
+            return c.value_ms;
+        }
+        let nearest = g
+            .iter()
+            .filter(|((k, _), _)| *k == engine)
+            .min_by_key(|((_, b), _)| b.abs_diff(batch));
+        match nearest {
+            Some(((_, b), c)) => c.value_ms * batch as f64 / *b as f64,
+            None => default_prior_ms(engine) * batch as f64,
+        }
+    }
+
+    /// Predicted per-image cost, from the `batch`-sized bucket.
+    pub fn per_image_ms(&self, engine: EngineKind, batch: usize) -> f64 {
+        self.batch_ms(engine, batch) / batch.max(1) as f64
+    }
+
+    /// Predicted completion time for a newly admitted request:
+    /// backlog drain (`queued_images` spread over `workers`) plus the
+    /// request's own batch execution.
+    pub fn completion_ms(
+        &self,
+        engine: EngineKind,
+        queued_images: usize,
+        workers: usize,
+        batch_hint: usize,
+    ) -> f64 {
+        let per = self.per_image_ms(engine, batch_hint);
+        let wait = per * queued_images as f64 / workers.max(1) as f64;
+        wait + self.batch_ms(engine, batch_hint)
+    }
+
+    /// Total real samples recorded for an engine (any batch size).
+    pub fn samples(&self, engine: EngineKind) -> u64 {
+        let g = self.cells.lock().unwrap();
+        g.iter()
+            .filter(|((k, _), _)| *k == engine)
+            .map(|(_, c)| c.samples)
+            .sum()
+    }
+
+    /// All rows, for introspection.
+    pub fn snapshot(&self) -> Vec<PredictorRow> {
+        let g = self.cells.lock().unwrap();
+        g.iter()
+            .map(|(&(engine, batch), c)| PredictorRow {
+                engine,
+                batch,
+                ewma_ms: c.value_ms,
+                samples: c.samples,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_replaces_prior() {
+        let p = LatencyPredictor::new(0.2);
+        p.seed(EngineKind::Quant, 1, 110.0);
+        assert_eq!(p.batch_ms(EngineKind::Quant, 1), 110.0);
+        p.record(EngineKind::Quant, 1, 80.0);
+        assert_eq!(p.batch_ms(EngineKind::Quant, 1), 80.0);
+    }
+
+    #[test]
+    fn ewma_converges_toward_new_level() {
+        let p = LatencyPredictor::new(0.5);
+        p.record(EngineKind::AclStaged, 1, 100.0);
+        for _ in 0..20 {
+            p.record(EngineKind::AclStaged, 1, 300.0);
+        }
+        let v = p.batch_ms(EngineKind::AclStaged, 1);
+        assert!((v - 300.0).abs() < 1.0, "ewma {v}");
+    }
+
+    #[test]
+    fn nearest_bucket_scales_linearly() {
+        let p = LatencyPredictor::new(0.2);
+        p.record(EngineKind::AclStaged, 2, 200.0);
+        // batch 4 has no bucket: scale the batch-2 EWMA by 4/2.
+        assert!((p.batch_ms(EngineKind::AclStaged, 4) - 400.0).abs() < 1e-9);
+        assert!((p.per_image_ms(EngineKind::AclStaged, 4) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn falls_back_to_paper_prior() {
+        let p = LatencyPredictor::new(0.2);
+        let v = p.batch_ms(EngineKind::TfBaseline, 1);
+        assert_eq!(v, default_prior_ms(EngineKind::TfBaseline));
+    }
+
+    #[test]
+    fn completion_includes_backlog() {
+        let p = LatencyPredictor::new(0.2);
+        p.record(EngineKind::Quant, 1, 100.0);
+        // 4 queued images over 2 workers = 200ms wait + 100ms own exec.
+        let c = p.completion_ms(EngineKind::Quant, 4, 2, 1);
+        assert!((c - 300.0).abs() < 1e-9, "completion {c}");
+    }
+
+    #[test]
+    fn ignores_garbage_samples() {
+        let p = LatencyPredictor::new(0.2);
+        p.record(EngineKind::Quant, 1, f64::NAN);
+        p.record(EngineKind::Quant, 1, -5.0);
+        assert_eq!(p.samples(EngineKind::Quant), 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Adaptive engine selection: route each request to the best engine
+//! variant that is predicted to meet its deadline, or shed it.
+//!
+//! Pools are ordered by result quality (fp32 ACL before the int8 quant
+//! path — Fig 4 trades accuracy for speed).  The selector walks that
+//! order and picks the first pool that (a) has queue room and (b) is
+//! predicted — with a safety margin — to complete the request inside
+//! its remaining budget.  Best-effort requests (no deadline) take the
+//! first pool with room.  When nothing fits, the decision is an explicit
+//! [`Decision::Shed`] carrying the best prediction, so the server can
+//! send a structured `overloaded` rejection instead of letting a doomed
+//! request burn engine time.
+//!
+//! Invariant (property-tested in rust/tests/policy_props.rs): the
+//! selector never routes a deadlined request to a pool whose margin-
+//! adjusted prediction exceeds the remaining budget while another pool's
+//! fits.
+
+use crate::engine::EngineKind;
+
+use super::deadline::Slo;
+use super::predictor::LatencyPredictor;
+
+/// What the selector needs to know about one engine pool at admission
+/// time.  Pools are presented in quality order (best first).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolView {
+    pub kind: EngineKind,
+    /// Requests currently queued across the pool's workers.
+    pub queued: usize,
+    pub workers: usize,
+    /// Total queue slots; `queued >= capacity` means the pool cannot
+    /// admit.
+    pub capacity: usize,
+}
+
+/// Routing decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Route to `pools[pool]`; `predicted_ms` is the margin-adjusted
+    /// completion estimate used for admission.
+    Route { pool: usize, predicted_ms: f64 },
+    /// No pool can admit the request inside its budget.  `best_ms` is
+    /// the smallest prediction seen (what the client would have gotten).
+    Shed { best_ms: f64 },
+}
+
+/// Stateless selection policy over a shared [`LatencyPredictor`].
+#[derive(Debug, Clone, Copy)]
+pub struct Selector {
+    /// Multiplier on predictions before comparing to the budget
+    /// (headroom for EWMA mis-prediction; >= 1).
+    pub margin: f64,
+    /// Batch size assumed for prediction (the batcher's typical size).
+    pub batch_hint: usize,
+}
+
+impl Selector {
+    pub fn new(margin: f64, batch_hint: usize) -> Selector {
+        Selector {
+            margin: margin.max(1.0),
+            batch_hint: batch_hint.max(1),
+        }
+    }
+
+    /// Margin-adjusted completion prediction for one pool.
+    pub fn predict_ms(&self, pred: &LatencyPredictor, pool: &PoolView) -> f64 {
+        pred.completion_ms(pool.kind, pool.queued, pool.workers, self.batch_hint)
+            * self.margin
+    }
+
+    /// Pick a pool for a request whose remaining budget is
+    /// `remaining_ms` (`None` = best-effort).  `pools` must be in
+    /// quality order.
+    pub fn choose(
+        &self,
+        pred: &LatencyPredictor,
+        pools: &[PoolView],
+        slo: &Slo,
+        remaining_ms: Option<f64>,
+    ) -> Decision {
+        let _ = slo; // priority shapes queue order, not engine choice
+        let mut best_ms = f64::INFINITY;
+        for (i, pool) in pools.iter().enumerate() {
+            if pool.queued >= pool.capacity {
+                continue;
+            }
+            let predicted_ms = self.predict_ms(pred, pool);
+            best_ms = best_ms.min(predicted_ms);
+            match remaining_ms {
+                // Deadlined: first (highest-quality) pool that fits.
+                Some(budget) => {
+                    if predicted_ms <= budget {
+                        return Decision::Route { pool: i, predicted_ms };
+                    }
+                }
+                // Best-effort: first pool with room.
+                None => return Decision::Route { pool: i, predicted_ms },
+            }
+        }
+        Decision::Shed {
+            best_ms: if best_ms.is_finite() { best_ms } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_pools(acl_queued: usize, quant_queued: usize) -> Vec<PoolView> {
+        vec![
+            PoolView {
+                kind: EngineKind::AclStaged,
+                queued: acl_queued,
+                workers: 1,
+                capacity: 8,
+            },
+            PoolView {
+                kind: EngineKind::Quant,
+                queued: quant_queued,
+                workers: 1,
+                capacity: 8,
+            },
+        ]
+    }
+
+    fn pred() -> LatencyPredictor {
+        let p = LatencyPredictor::new(0.2);
+        p.record(EngineKind::AclStaged, 1, 300.0);
+        p.record(EngineKind::Quant, 1, 100.0);
+        p
+    }
+
+    #[test]
+    fn loose_deadline_prefers_quality() {
+        let s = Selector::new(1.0, 1);
+        let d = s.choose(&pred(), &two_pools(0, 0), &Slo::default(), Some(1000.0));
+        assert!(matches!(d, Decision::Route { pool: 0, .. }), "{d:?}");
+    }
+
+    #[test]
+    fn tight_deadline_falls_to_fast_engine() {
+        let s = Selector::new(1.0, 1);
+        let d = s.choose(&pred(), &two_pools(0, 0), &Slo::default(), Some(150.0));
+        assert!(matches!(d, Decision::Route { pool: 1, .. }), "{d:?}");
+    }
+
+    #[test]
+    fn impossible_deadline_sheds_with_best_prediction() {
+        let s = Selector::new(1.0, 1);
+        match s.choose(&pred(), &two_pools(0, 0), &Slo::default(), Some(50.0)) {
+            Decision::Shed { best_ms } => assert!((best_ms - 100.0).abs() < 1e-9),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backlog_shifts_the_choice() {
+        // Quant with a deep backlog no longer fits; ACL does.
+        let s = Selector::new(1.0, 1);
+        let d = s.choose(&pred(), &two_pools(0, 7), &Slo::default(), Some(450.0));
+        assert!(matches!(d, Decision::Route { pool: 0, .. }), "{d:?}");
+    }
+
+    #[test]
+    fn full_pool_is_skipped_even_for_best_effort() {
+        let mut pools = two_pools(0, 0);
+        pools[0].queued = pools[0].capacity;
+        let s = Selector::new(1.0, 1);
+        let d = s.choose(&pred(), &pools, &Slo::default(), None);
+        assert!(matches!(d, Decision::Route { pool: 1, .. }), "{d:?}");
+    }
+
+    #[test]
+    fn everything_full_sheds() {
+        let mut pools = two_pools(0, 0);
+        pools[0].queued = pools[0].capacity;
+        pools[1].queued = pools[1].capacity;
+        let s = Selector::new(1.0, 1);
+        assert!(matches!(
+            s.choose(&pred(), &pools, &Slo::default(), None),
+            Decision::Shed { .. }
+        ));
+    }
+
+    #[test]
+    fn margin_adds_headroom() {
+        // 100ms prediction * 1.5 margin > 120ms budget -> shed.
+        let s = Selector::new(1.5, 1);
+        let pools = vec![PoolView {
+            kind: EngineKind::Quant,
+            queued: 0,
+            workers: 1,
+            capacity: 8,
+        }];
+        assert!(matches!(
+            s.choose(&pred(), &pools, &Slo::default(), Some(120.0)),
+            Decision::Shed { .. }
+        ));
+    }
+}

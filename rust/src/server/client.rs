@@ -17,6 +17,12 @@ pub struct InferReply {
     pub exec_ms: f64,
     pub queue_ms: f64,
     pub batch: usize,
+    /// Which engine served the request ("cache" for a cache hit).
+    pub engine: String,
+    /// True when served from the response cache.
+    pub cached: bool,
+    /// Machine-matchable error kind ("shed", "overloaded", ...).
+    pub kind: Option<String>,
     pub error: Option<String>,
 }
 
@@ -55,10 +61,38 @@ impl Client {
         self.roundtrip(r#"{"cmd":"stats"}"#)
     }
 
+    /// Policy-layer introspection (`{"cmd":"policy"}`).
+    pub fn policy(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"cmd":"policy"}"#)
+    }
+
     /// Infer on a seeded synthetic image.
     pub fn infer_synthetic(&mut self, id: u64, seed: u64) -> Result<InferReply> {
         let line = format!(r#"{{"id":{id},"image":{{"synthetic":{seed}}}}}"#);
         let j = self.roundtrip(&line)?;
+        Ok(parse_reply(&j))
+    }
+
+    /// Infer on a seeded synthetic image with an SLO (deadline and/or
+    /// priority).
+    pub fn infer_synthetic_slo(
+        &mut self,
+        id: u64,
+        seed: u64,
+        deadline_ms: Option<f64>,
+        priority: Option<&str>,
+    ) -> Result<InferReply> {
+        let mut img = Json::obj();
+        img.set("synthetic", seed.into());
+        let mut o = Json::obj();
+        o.set("id", id.into()).set("image", img);
+        if let Some(ms) = deadline_ms {
+            o.set("deadline_ms", ms.into());
+        }
+        if let Some(p) = priority {
+            o.set("priority", p.into());
+        }
+        let j = self.roundtrip(&o.to_string())?;
         Ok(parse_reply(&j))
     }
 
@@ -82,6 +116,16 @@ fn parse_reply(j: &Json) -> InferReply {
         exec_ms: j.get("exec_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
         queue_ms: j.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
         batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+        engine: j
+            .get("engine")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string(),
+        cached: j.get("cached").and_then(|v| v.as_bool()).unwrap_or(false),
+        kind: j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string()),
         error: j
             .get("error")
             .and_then(|v| v.as_str())

@@ -54,8 +54,16 @@ impl Server {
                             let coord = coord.clone();
                             let conns = conns.clone();
                             std::thread::spawn(move || {
+                                // Drop guard so the slot is released even if
+                                // the handler panics mid-connection.
+                                struct Slot(Arc<AtomicUsize>);
+                                impl Drop for Slot {
+                                    fn drop(&mut self) {
+                                        self.0.fetch_sub(1, Ordering::Relaxed);
+                                    }
+                                }
+                                let _slot = Slot(conns);
                                 let _ = handle_conn(stream, &coord);
-                                conns.fetch_sub(1, Ordering::Relaxed);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -102,16 +110,23 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             continue;
         }
         let reply = match protocol::parse_request(&line) {
-            Err(e) => protocol::error_line(0, &format!("bad request: {e}")),
+            Err(e) => {
+                protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}"))
+            }
             Ok(ClientMsg::Ping) => "{\"ok\":true,\"pong\":true}".to_string(),
             Ok(ClientMsg::Stats) => protocol::stats_line(&coord.stats()),
-            Ok(ClientMsg::Infer { id, image }) => {
+            Ok(ClientMsg::Policy) => protocol::policy_line(&coord.policy_snapshot()),
+            Ok(ClientMsg::Infer { id, image, slo }) => {
                 match load_image(&image) {
                     Err(e) => protocol::error_line(id, &format!("image: {e}")),
-                    Ok(tensor) => match coord.submit(tensor) {
+                    Ok(tensor) => match coord.submit_with_slo(tensor, slo) {
                         Err(SubmitError::Overloaded) => {
-                            protocol::error_line(id, "overloaded")
+                            protocol::error_line_kind(id, "overloaded", "overloaded")
                         }
+                        Err(SubmitError::Shed {
+                            predicted_ms,
+                            deadline_ms,
+                        }) => protocol::shed_line(id, predicted_ms, deadline_ms),
                         Err(e) => protocol::error_line(id, &e.to_string()),
                         Ok(rx) => match rx.recv() {
                             Ok(mut resp) => {

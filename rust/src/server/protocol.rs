@@ -4,15 +4,26 @@
 //! ```json
 //! {"id": 7, "image": {"synthetic": 12345}}          // seeded test image
 //! {"id": 8, "image": {"ppm": "/path/frame.ppm"}}    // file on the device
+//! {"id": 9, "image": {"synthetic": 1},
+//!  "deadline_ms": 250, "priority": "hi"}            // SLO-tagged request
 //! {"cmd": "stats"}                                  // live stats
+//! {"cmd": "policy"}                                 // policy introspection
 //! {"cmd": "ping"}
 //! ```
+//!
+//! `id` is mandatory and must be a non-negative integer: replies are
+//! matched to requests by id, so a silently-defaulted id could cross-wire
+//! routing on the client.  A missing/malformed id is a parse error and
+//! the server answers with a structured `bad_request` line.
 //!
 //! Response (one line):
 //! ```json
 //! {"id":7,"ok":true,"top1":694,"top5":[[694,0.01],...],
-//!  "queue_ms":0.1,"exec_ms":212.4,"total_ms":231.0,"batch":2}
-//! {"id":8,"ok":false,"error":"overloaded"}
+//!  "queue_ms":0.1,"exec_ms":212.4,"total_ms":231.0,"batch":2,
+//!  "engine":"acl","cached":false}
+//! {"id":8,"ok":false,"error":"overloaded","kind":"overloaded"}
+//! {"id":9,"ok":false,"error":"...","kind":"shed",
+//!  "predicted_ms":412.0,"deadline_ms":250.0}        // SLO shed
 //! ```
 //!
 //! Embedded-friendly: the device never receives bulk pixel data over the
@@ -23,13 +34,19 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::Response;
+use crate::policy::{PolicySnapshot, Priority, Slo};
 use crate::util::json::Json;
 
 /// Parsed client message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMsg {
-    Infer { id: u64, image: ImageSpec },
+    Infer {
+        id: u64,
+        image: ImageSpec,
+        slo: Slo,
+    },
     Stats,
+    Policy,
     Ping,
 }
 
@@ -44,15 +61,20 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "stats" => Ok(ClientMsg::Stats),
+            "policy" => Ok(ClientMsg::Policy),
             "ping" => Ok(ClientMsg::Ping),
             other => bail!("unknown cmd {other}"),
         };
     }
-    let id = j
-        .get("id")
-        .and_then(|v| v.as_f64())
-        .map(|f| f as u64)
-        .unwrap_or(0);
+    // id is mandatory: replies are matched by id, so defaulting it could
+    // cross-wire reply routing.
+    let id = match j.get("id") {
+        None => bail!("missing 'id' (a non-negative integer)"),
+        Some(v) => match v.as_usize() {
+            Some(n) => n as u64,
+            None => bail!("'id' must be a non-negative integer, got {v:?}"),
+        },
+    };
     let img = j
         .get("image")
         .ok_or_else(|| anyhow::anyhow!("missing image"))?;
@@ -63,7 +85,24 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
     } else {
         bail!("image must have 'synthetic' or 'ppm'");
     };
-    Ok(ClientMsg::Infer { id, image })
+    let mut slo = Slo::default();
+    if let Some(v) = j.get("deadline_ms") {
+        match v.as_f64() {
+            // Upper bound keeps Duration::from_secs_f64 from panicking on
+            // absurd values (1e9 ms ≈ 11.5 days is already "no deadline").
+            Some(ms) if ms > 0.0 && ms <= 1e9 => {
+                slo = Slo::with_deadline_ms(ms);
+            }
+            _ => bail!("'deadline_ms' must be in (0, 1e9] ms, got {v:?}"),
+        }
+    }
+    if let Some(v) = j.get("priority") {
+        match v.as_str() {
+            Some(s) => slo.priority = Priority::parse(s)?,
+            None => bail!("'priority' must be a string (hi|normal|lo)"),
+        }
+    }
+    Ok(ClientMsg::Infer { id, image, slo })
 }
 
 pub fn response_line(r: &Response) -> String {
@@ -71,7 +110,9 @@ pub fn response_line(r: &Response) -> String {
     o.set("id", r.id.into());
     match &r.error {
         Some(e) => {
-            o.set("ok", false.into()).set("error", e.as_str().into());
+            o.set("ok", false.into())
+                .set("kind", r.kind.into())
+                .set("error", e.as_str().into());
         }
         None => {
             o.set("ok", true.into())
@@ -91,17 +132,45 @@ pub fn response_line(r: &Response) -> String {
                 .set("exec_ms", r.exec_ms.into())
                 .set("total_ms", r.total_ms.into())
                 .set("batch", r.batch_size.into())
-                .set("worker", r.worker.into());
+                .set("worker", r.worker.into())
+                .set("engine", r.engine.into())
+                .set("cached", r.cached.into());
         }
     }
     o.to_string()
 }
 
 pub fn error_line(id: u64, msg: &str) -> String {
+    error_line_kind(id, "error", msg)
+}
+
+/// Structured error: `kind` is machine-matchable ("bad_request",
+/// "overloaded", "shed", ...), `error` is the human text.
+pub fn error_line_kind(id: u64, kind: &str, msg: &str) -> String {
     let mut o = Json::obj();
     o.set("id", id.into())
         .set("ok", false.into())
+        .set("kind", kind.into())
         .set("error", msg.into());
+    o.to_string()
+}
+
+/// Structured SLO shed: no engine variant was predicted to meet the
+/// request's deadline.  The human text is SubmitError::Shed's Display,
+/// so wire and library error messages cannot drift apart.
+pub fn shed_line(id: u64, predicted_ms: f64, deadline_ms: f64) -> String {
+    let msg = crate::coordinator::SubmitError::Shed {
+        predicted_ms,
+        deadline_ms,
+    }
+    .to_string();
+    let mut o = Json::obj();
+    o.set("id", id.into())
+        .set("ok", false.into())
+        .set("kind", "shed".into())
+        .set("error", msg.into())
+        .set("predicted_ms", predicted_ms.into())
+        .set("deadline_ms", deadline_ms.into());
     o.to_string()
 }
 
@@ -120,13 +189,51 @@ pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
         .set("images", s.images.into())
         .set("queued", s.queued.into())
         .set("mean_batch", s.mean_batch.into())
+        .set("cache_hits", s.cache_hits.into())
+        .set("cache_misses", s.cache_misses.into())
+        .set("shed_predicted", s.shed_predicted.into())
+        .set("shed_expired", s.shed_expired.into())
         .set("latency", lat);
+    o.to_string()
+}
+
+/// `{"cmd":"policy"}` reply: per-pool predictions + cache + shed counts.
+pub fn policy_line(p: &PolicySnapshot) -> String {
+    let pools = Json::Arr(
+        p.pools
+            .iter()
+            .map(|pool| {
+                let mut o = Json::obj();
+                o.set("engine", pool.engine.into())
+                    .set("workers", pool.workers.into())
+                    .set("queued", pool.queued.into())
+                    .set("capacity", pool.capacity.into())
+                    .set("predicted_ms", pool.predicted_ms.into())
+                    .set("samples", pool.samples.into());
+                o
+            })
+            .collect(),
+    );
+    let mut cache = Json::obj();
+    cache
+        .set("hits", p.cache.hits.into())
+        .set("misses", p.cache.misses.into())
+        .set("len", p.cache.len.into())
+        .set("capacity", p.cache.capacity.into());
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("adaptive", p.adaptive.into())
+        .set("pools", pools)
+        .set("cache", cache)
+        .set("shed_predicted", p.shed_predicted.into())
+        .set("shed_expired", p.shed_expired.into());
     o.to_string()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn parse_infer_synthetic() {
@@ -135,7 +242,8 @@ mod tests {
             m,
             ClientMsg::Infer {
                 id: 7,
-                image: ImageSpec::Synthetic(42)
+                image: ImageSpec::Synthetic(42),
+                slo: Slo::default(),
             }
         );
     }
@@ -150,9 +258,63 @@ mod tests {
     }
 
     #[test]
+    fn parse_slo_fields() {
+        let m = parse_request(
+            r#"{"id":7,"image":{"synthetic":1},"deadline_ms":250,"priority":"hi"}"#,
+        )
+        .unwrap();
+        match m {
+            ClientMsg::Infer { slo, .. } => {
+                assert_eq!(slo.deadline, Some(Duration::from_millis(250)));
+                assert_eq!(slo.priority, Priority::Hi);
+            }
+            other => panic!("expected infer, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_slo() {
+        assert!(parse_request(
+            r#"{"id":1,"image":{"synthetic":1},"deadline_ms":-5}"#
+        )
+        .is_err());
+        // Absurd deadlines are rejected rather than panicking the
+        // connection thread in Duration::from_secs_f64.
+        assert!(parse_request(
+            r#"{"id":1,"image":{"synthetic":1},"deadline_ms":1e30}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"id":1,"image":{"synthetic":1},"deadline_ms":"fast"}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"id":1,"image":{"synthetic":1},"priority":"urgent"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parse_requires_integer_id() {
+        // Missing id must not silently default to 0 — reply routing is
+        // keyed on it.
+        let e = parse_request(r#"{"image":{"synthetic":1}}"#).unwrap_err();
+        assert!(e.to_string().contains("id"), "{e}");
+        assert!(parse_request(r#"{"id":"seven","image":{"synthetic":1}}"#).is_err());
+        assert!(parse_request(r#"{"id":-3,"image":{"synthetic":1}}"#).is_err());
+        assert!(parse_request(r#"{"id":1.5,"image":{"synthetic":1}}"#).is_err());
+        // Integer-valued floats are fine (JSON has one number type).
+        assert!(parse_request(r#"{"id":7.0,"image":{"synthetic":1}}"#).is_ok());
+    }
+
+    #[test]
     fn parse_cmds() {
         assert_eq!(parse_request(r#"{"cmd":"stats"}"#).unwrap(), ClientMsg::Stats);
         assert_eq!(parse_request(r#"{"cmd":"ping"}"#).unwrap(), ClientMsg::Ping);
+        assert_eq!(
+            parse_request(r#"{"cmd":"policy"}"#).unwrap(),
+            ClientMsg::Policy
+        );
     }
 
     #[test]
@@ -174,6 +336,9 @@ mod tests {
             total_ms: 101.0,
             batch_size: 2,
             worker: 0,
+            engine: "acl",
+            cached: false,
+            kind: "",
             error: None,
         };
         let line = response_line(&r);
@@ -181,8 +346,28 @@ mod tests {
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.usize_of("top1").unwrap(), 694);
         assert_eq!(j.usize_of("batch").unwrap(), 2);
+        assert_eq!(j.str_of("engine").unwrap(), "acl");
+        assert_eq!(j.get("cached").unwrap().as_bool(), Some(false));
         let err = error_line(9, "overloaded");
         let j = Json::parse(&err).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn queue_expiry_response_carries_shed_kind() {
+        let r = Response::shed_expired(5, crate::coordinator::worker::DEADLINE_ERROR);
+        let j = Json::parse(&response_line(&r)).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.str_of("kind").unwrap(), "shed");
+        assert!(j.str_of("error").unwrap().contains("deadline"));
+    }
+
+    #[test]
+    fn shed_line_is_structured() {
+        let j = Json::parse(&shed_line(4, 412.0, 250.0)).unwrap();
+        assert_eq!(j.str_of("kind").unwrap(), "shed");
+        assert_eq!(j.f64_of("predicted_ms").unwrap(), 412.0);
+        assert_eq!(j.f64_of("deadline_ms").unwrap(), 250.0);
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
     }
 }

@@ -1,0 +1,468 @@
+//! Property tests on the SLO policy layer (DESIGN.md §7), using the
+//! in-tree testkit::prop framework.
+//!
+//! Pure properties (no artifacts needed — fast):
+//! * the selector never routes a deadlined request to a pool whose
+//!   margin-adjusted prediction exceeds the budget, and only sheds when
+//!   no pool with queue room fits;
+//! * the response cache is a true bounded LRU: hits return the exact
+//!   inserted bits, capacity is a hard bound;
+//! * the worker's shed-and-serve loop (urgency sort + expiry partition +
+//!   batch split) disposes of every admitted request exactly once —
+//!   nothing is silently dropped;
+//! * urgency sorting drains strictly by (priority, deadline) order.
+//!
+//! Plus coordinator-level end-to-end versions of the drop and
+//! cache-identity invariants against a real engine when artifacts exist.
+
+use std::time::{Duration, Instant};
+
+use zuluko::coordinator::batcher::BatchPolicy;
+use zuluko::coordinator::queue::BoundedQueue;
+use zuluko::engine::EngineKind;
+use zuluko::policy::{
+    CachedResult, Decision, LatencyPredictor, PoolView, Priority, ResponseCache,
+    Selector, Slo, Urgency,
+};
+use zuluko::testkit::prop::{prop_check, Gen};
+use zuluko::testkit::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Selector: never pick an engine predicted to blow the deadline when an
+// alternative fits; shed only when nothing fits.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct SelectorCase {
+    acl_ms: f64,
+    quant_ms: f64,
+    acl_queued: usize,
+    quant_queued: usize,
+    budget_ms: f64,
+    margin: f64,
+}
+
+struct GenSelectorCase;
+
+impl Gen for GenSelectorCase {
+    type Value = SelectorCase;
+    fn generate(&self, rng: &mut Rng) -> SelectorCase {
+        SelectorCase {
+            acl_ms: rng.uniform(50.0, 600.0),
+            quant_ms: rng.uniform(20.0, 300.0),
+            acl_queued: rng.range(0, 10),
+            quant_queued: rng.range(0, 10),
+            budget_ms: rng.uniform(10.0, 1200.0),
+            margin: rng.uniform(1.0, 1.5),
+        }
+    }
+    fn shrink(&self, v: &SelectorCase) -> Vec<SelectorCase> {
+        let mut out = Vec::new();
+        if v.acl_queued > 0 {
+            out.push(SelectorCase { acl_queued: 0, ..v.clone() });
+        }
+        if v.quant_queued > 0 {
+            out.push(SelectorCase { quant_queued: 0, ..v.clone() });
+        }
+        if v.margin > 1.0 {
+            out.push(SelectorCase { margin: 1.0, ..v.clone() });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_selector_admits_only_within_budget() {
+    prop_check(500, 29, GenSelectorCase, |case| {
+        let pred = LatencyPredictor::new(0.2);
+        pred.record(EngineKind::AclStaged, 1, case.acl_ms);
+        pred.record(EngineKind::Quant, 1, case.quant_ms);
+        let pools = vec![
+            PoolView {
+                kind: EngineKind::AclStaged,
+                queued: case.acl_queued,
+                workers: 1,
+                capacity: 8,
+            },
+            PoolView {
+                kind: EngineKind::Quant,
+                queued: case.quant_queued,
+                workers: 1,
+                capacity: 8,
+            },
+        ];
+        let sel = Selector::new(case.margin, 1);
+        let slo = Slo::with_deadline_ms(case.budget_ms);
+        let fits: Vec<bool> = pools
+            .iter()
+            .map(|p| {
+                p.queued < p.capacity && sel.predict_ms(&pred, p) <= case.budget_ms
+            })
+            .collect();
+        match sel.choose(&pred, &pools, &slo, Some(case.budget_ms)) {
+            Decision::Route { pool, predicted_ms } => {
+                if predicted_ms > case.budget_ms {
+                    return Err(format!(
+                        "routed to pool {pool} predicted {predicted_ms:.0}ms \
+                         over budget {:.0}ms",
+                        case.budget_ms
+                    ));
+                }
+                if !fits[pool] {
+                    return Err(format!("routed to non-fitting pool {pool}"));
+                }
+            }
+            Decision::Shed { .. } => {
+                if fits.iter().any(|&f| f) {
+                    return Err("shed while a pool fit the budget".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selector_prefers_quality_when_both_fit() {
+    prop_check(300, 31, GenSelectorCase, |case| {
+        let pred = LatencyPredictor::new(0.2);
+        pred.record(EngineKind::AclStaged, 1, case.acl_ms);
+        pred.record(EngineKind::Quant, 1, case.quant_ms);
+        let pools = vec![
+            PoolView {
+                kind: EngineKind::AclStaged,
+                queued: case.acl_queued,
+                workers: 1,
+                capacity: 8,
+            },
+            PoolView {
+                kind: EngineKind::Quant,
+                queued: case.quant_queued,
+                workers: 1,
+                capacity: 8,
+            },
+        ];
+        let sel = Selector::new(case.margin, 1);
+        let slo = Slo::with_deadline_ms(case.budget_ms);
+        let acl_fits = pools[0].queued < pools[0].capacity
+            && sel.predict_ms(&pred, &pools[0]) <= case.budget_ms;
+        if let Decision::Route { pool, .. } =
+            sel.choose(&pred, &pools, &slo, Some(case.budget_ms))
+        {
+            if acl_fits && pool != 0 {
+                return Err("skipped the quality pool although it fit".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cache: bounded LRU whose hits are bit-identical to what was inserted.
+// ---------------------------------------------------------------------------
+
+/// Deterministic value for a key so bit-identity is checkable anywhere.
+fn value_for(key: u64) -> CachedResult {
+    CachedResult {
+        top1: key as usize,
+        top5: (0..5)
+            .map(|i| (key as usize + i, (key as f32).sin() * 0.5 + i as f32))
+            .collect(),
+    }
+}
+
+fn bits_equal(a: &CachedResult, b: &CachedResult) -> bool {
+    a.top1 == b.top1
+        && a.top5.len() == b.top5.len()
+        && a.top5
+            .iter()
+            .zip(&b.top5)
+            .all(|((ci, cp), (di, dp))| ci == di && cp.to_bits() == dp.to_bits())
+}
+
+#[derive(Debug, Clone)]
+struct CacheOps {
+    capacity: usize,
+    /// (key, is_put) over a small key space to force collisions/evictions.
+    ops: Vec<(u64, bool)>,
+}
+
+struct GenCacheOps;
+
+impl Gen for GenCacheOps {
+    type Value = CacheOps;
+    fn generate(&self, rng: &mut Rng) -> CacheOps {
+        let capacity = rng.range(1, 6);
+        let n = rng.range(0, 60);
+        let ops = (0..n)
+            .map(|_| (rng.below(10) as u64, rng.chance(0.5)))
+            .collect();
+        CacheOps { capacity, ops }
+    }
+    fn shrink(&self, v: &CacheOps) -> Vec<CacheOps> {
+        let mut out = Vec::new();
+        if v.ops.len() > 1 {
+            out.push(CacheOps {
+                capacity: v.capacity,
+                ops: v.ops[..v.ops.len() / 2].to_vec(),
+            });
+            let mut one_less = v.ops.clone();
+            one_less.pop();
+            out.push(CacheOps {
+                capacity: v.capacity,
+                ops: one_less,
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_cache_hits_bit_identical_and_capacity_bounded() {
+    prop_check(400, 37, GenCacheOps, |case| {
+        let cache = ResponseCache::new(case.capacity);
+        for &(key, is_put) in &case.ops {
+            if is_put {
+                cache.put(key, value_for(key));
+            } else if let Some(hit) = cache.get(key) {
+                // Values are keyed deterministically, so any hit must be
+                // the exact bits that were inserted for this key.
+                if !bits_equal(&hit, &value_for(key)) {
+                    return Err(format!("hit for key {key} returned wrong bits"));
+                }
+            }
+            if cache.len() > case.capacity {
+                return Err(format!(
+                    "len {} exceeds capacity {}",
+                    cache.len(),
+                    case.capacity
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Worker loop shape: urgency sort + expiry shed + batch split disposes of
+// every admitted request exactly once.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct SloItem {
+    id: usize,
+    /// None = best-effort; Some(ms) = deadline from `submitted`.
+    deadline_ms: Option<f64>,
+    priority: Priority,
+}
+
+fn slo_of(item: &SloItem) -> Slo {
+    let mut slo = match item.deadline_ms {
+        Some(ms) => Slo::with_deadline_ms(ms),
+        None => Slo::default(),
+    };
+    slo.priority = item.priority;
+    slo
+}
+
+#[derive(Debug, Clone)]
+struct SloLoad {
+    max_batch: usize,
+    items: Vec<SloItem>,
+}
+
+struct GenSloLoad;
+
+impl Gen for GenSloLoad {
+    type Value = SloLoad;
+    fn generate(&self, rng: &mut Rng) -> SloLoad {
+        let max_batch = rng.range(1, 8);
+        let n = rng.range(0, 40);
+        let items = (0..n)
+            .map(|id| SloItem {
+                id,
+                // A third expired-on-arrival, a third tight, a third open.
+                deadline_ms: match rng.below(3) {
+                    0 => Some(1e-6), // effectively already expired
+                    1 => Some(rng.uniform(50.0, 500.0)),
+                    _ => None,
+                },
+                priority: match rng.below(3) {
+                    0 => Priority::Hi,
+                    1 => Priority::Normal,
+                    _ => Priority::Lo,
+                },
+            })
+            .collect();
+        SloLoad { max_batch, items }
+    }
+    fn shrink(&self, v: &SloLoad) -> Vec<SloLoad> {
+        let mut out = Vec::new();
+        if v.items.len() > 1 {
+            out.push(SloLoad {
+                max_batch: v.max_batch,
+                items: v.items[..v.items.len() / 2].to_vec(),
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_shed_and_serve_loop_never_drops_silently() {
+    prop_check(300, 41, GenSloLoad, |case| {
+        let policy = BatchPolicy::new(case.max_batch, Duration::ZERO, &[1, 2, 4, 8]);
+        let q = BoundedQueue::new(64);
+        let submitted = Instant::now();
+        for item in &case.items {
+            q.try_push(item.clone()).map_err(|_| "push failed".to_string())?;
+        }
+        // Mirror the worker loop: sort by urgency, form, partition expired
+        // (each gets an explicit rejection), split, serve the batch.
+        let mut served = Vec::new();
+        let mut shed = Vec::new();
+        while !q.is_empty() {
+            q.sort_pending_by_key(|it| Urgency::of(&slo_of(it), submitted));
+            let reqs = policy.form(&q).ok_or("no batch from non-empty queue")?;
+            let now = Instant::now();
+            let (expired, live): (Vec<SloItem>, Vec<SloItem>) = reqs
+                .into_iter()
+                .partition(|it| slo_of(it).expired(submitted, now));
+            shed.extend(expired.into_iter().map(|it| it.id));
+            if live.is_empty() {
+                continue;
+            }
+            let (batch, leftover) = policy.split(live);
+            if !leftover.is_empty() {
+                q.push_front_bulk(leftover);
+            }
+            served.extend(batch.into_iter().map(|it| it.id));
+        }
+        let mut all: Vec<usize> = served.iter().chain(shed.iter()).copied().collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..case.items.len()).collect();
+        if all != expect {
+            return Err(format!(
+                "disposition mismatch: served {served:?} shed {shed:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_urgency_sort_drains_in_priority_deadline_order() {
+    prop_check(300, 43, GenSloLoad, |case| {
+        let q = BoundedQueue::new(64);
+        let submitted = Instant::now();
+        for item in &case.items {
+            q.try_push(item.clone()).map_err(|_| "push failed".to_string())?;
+        }
+        q.sort_pending_by_key(|it| Urgency::of(&slo_of(it), submitted));
+        let mut last: Option<Urgency> = None;
+        while let Some(it) = q.pop_wait(Duration::from_millis(1)) {
+            let u = Urgency::of(&slo_of(&it), submitted);
+            if let Some(prev) = last {
+                if u < prev {
+                    return Err(format!("urgency order violated at id {}", it.id));
+                }
+            }
+            last = Some(u);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end versions against a real engine (skip without artifacts).
+// ---------------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    zuluko::artifacts_dir().join("manifest.json").exists()
+}
+
+fn e2e_config() -> zuluko::config::Config {
+    let mut cfg = zuluko::config::Config {
+        engine: EngineKind::AclFused,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(10),
+        queue_capacity: 32,
+        ..zuluko::config::Config::default()
+    };
+    cfg.policy.cache_capacity = 32;
+    cfg
+}
+
+#[test]
+fn admitted_requests_always_answered_under_slo_mix() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use zuluko::coordinator::Coordinator;
+    use zuluko::tensor::Tensor;
+
+    let coord = Coordinator::start(&e2e_config()).unwrap();
+    let mut rng = Rng::new(47);
+    let mut receivers = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..24 {
+        let slo = match rng.below(3) {
+            0 => Slo::with_deadline_ms(rng.uniform(1.0, 20.0)), // likely shed
+            1 => Slo::with_deadline_ms(60_000.0),               // always fits
+            _ => Slo::default(),                                // best-effort
+        };
+        match coord.submit_with_slo(Tensor::random(&[227, 227, 3], i), slo) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    // Every admitted request gets exactly one reply — ok, engine error,
+    // or the structured deadline rejection — never a hang or a drop.
+    let mut answered = 0usize;
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+        answered += 1;
+        if let Some(err) = &resp.error {
+            assert!(
+                err.contains("deadline"),
+                "unexpected error kind: {err}"
+            );
+        }
+    }
+    assert_eq!(answered + rejected, 24);
+    coord.shutdown();
+}
+
+#[test]
+fn cache_hit_bit_identical_to_cold_inference() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use zuluko::coordinator::Coordinator;
+    use zuluko::tensor::Tensor;
+
+    let coord = Coordinator::start(&e2e_config()).unwrap();
+    let frame = || Tensor::random(&[227, 227, 3], 4242);
+
+    let cold = coord.infer_blocking(frame()).unwrap();
+    assert!(cold.is_ok(), "{:?}", cold.error);
+    assert!(!cold.cached);
+
+    let warm = coord.infer_blocking(frame()).unwrap();
+    assert!(warm.is_ok(), "{:?}", warm.error);
+    assert!(warm.cached, "second identical frame should hit the cache");
+    assert_eq!(warm.engine, "cache");
+    assert_eq!(warm.top1, cold.top1);
+    assert_eq!(warm.top5.len(), cold.top5.len());
+    for ((ci, cp), (wi, wp)) in cold.top5.iter().zip(&warm.top5) {
+        assert_eq!(ci, wi);
+        assert_eq!(cp.to_bits(), wp.to_bits(), "cache hit not bit-identical");
+    }
+
+    let stats = coord.stats();
+    assert!(stats.cache_hits >= 1);
+    coord.shutdown();
+}

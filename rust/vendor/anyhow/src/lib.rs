@@ -1,0 +1,292 @@
+//! Vendored minimal reimplementation of the `anyhow` API surface this
+//! repository uses (DESIGN.md §Substitutions: builds must not touch a
+//! network, so the error crate is in-tree).
+//!
+//! Implemented: [`Error`], [`Result`], the [`Context`] extension trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  `Display` prints the outermost message; the alternate form
+//! (`{:#}`) prints the whole cause chain separated by `": "`, matching
+//! upstream anyhow closely enough for log lines and test assertions.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+    Context { msg: String, source: Box<Error> },
+}
+
+/// A dynamic error with an optional chain of context layers.
+///
+/// Deliberately does **not** implement `std::error::Error`, mirroring
+/// upstream anyhow: that is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    repr: Repr,
+}
+
+impl Error {
+    /// Wrap a concrete error type.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error {
+            repr: Repr::Boxed(Box::new(error)),
+        }
+    }
+
+    /// Build an error from any displayable message (used as
+    /// `map_err(anyhow::Error::msg)` for `String` errors).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            repr: Repr::Msg(message.to_string()),
+        }
+    }
+
+    /// Wrap this error in a new outermost context layer.
+    pub fn context<C>(self, context: C) -> Error
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        Error {
+            repr: Repr::Context {
+                msg: context.to_string(),
+                source: Box::new(self),
+            },
+        }
+    }
+
+    /// The cause chain, outermost message first.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = self;
+        loop {
+            match &cur.repr {
+                Repr::Msg(m) => {
+                    out.push(m.clone());
+                    return out;
+                }
+                Repr::Boxed(e) => {
+                    out.push(e.to_string());
+                    let mut src = e.source();
+                    while let Some(s) = src {
+                        out.push(s.to_string());
+                        src = s.source();
+                    }
+                    return out;
+                }
+                Repr::Context { msg, source } => {
+                    out.push(msg.clone());
+                    cur = source;
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        if f.alternate() {
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e: Error = Error::new(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+    }
+
+    #[test]
+    fn alternate_prints_chain() {
+        let e = Error::new(io_err())
+            .context("reading manifest")
+            .context("loading config");
+        assert_eq!(format!("{e:#}"), "loading config: reading manifest: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+
+        let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+}

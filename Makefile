@@ -1,7 +1,7 @@
 # Build-time entry points.  Python runs once here (L2 AOT lowering);
 # it never touches the Rust request path.
 
-.PHONY: artifacts artifacts-quick test-python test-rust
+.PHONY: artifacts artifacts-quick test-python test-rust bench-json bench-smoke
 
 # Lower every engine variant to HLO artifacts + manifest + weights.
 artifacts:
@@ -16,3 +16,14 @@ test-python:
 
 test-rust:
 	cd rust && cargo test -q
+
+# Perf trajectory: run the simulation benches (no artifacts needed) and
+# emit BENCH_3.json (allocs/request, bytes/request, throughput, p50/p99).
+bench-json:
+	cd rust && cargo bench --bench hot_path_alloc -- --json ../BENCH_3.json
+	cd rust && cargo bench --bench policy_slo -- --quick
+
+# One-iteration smoke of the simulation benches (CI).
+bench-smoke:
+	cd rust && cargo bench --bench hot_path_alloc -- --quick
+	cd rust && cargo bench --bench policy_slo -- --quick

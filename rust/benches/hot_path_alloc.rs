@@ -1,0 +1,337 @@
+//! E10 ablation: per-request heap allocation on the batched serving
+//! path — pooled arena vs. unpooled (same code, `pool.enabled=false`)
+//! vs. the legacy owned path (`Tensor::stack` / `unstack` / per-row
+//! `Vec`s).
+//!
+//! Core result is a deterministic simulation of the worker hot loop that
+//! needs no artifacts and no XLA: decode writes synthetic pixels into a
+//! (leased or fresh) input buffer, the content key is hashed over the
+//! borrowed pixels, the batch is assembled in place, an engine stand-in
+//! produces `(B, 1000)` scores from the batch buffer, and reply
+//! extraction mirrors the shipped worker — owned `topk(5)` per request
+//! plus a response-cache fill with a cloned `CachedResult`.  Heap
+//! traffic is counted by the `testkit::alloc::CountingAlloc` global-
+//! allocator shim, so the numbers are real allocator events, not
+//! estimates.  (Reply channels/sockets are outside the sim; they cost
+//! the same in every mode.)
+//!
+//! What each mode measures:
+//! * `pooled`   — the serving path as shipped: arena leases everywhere.
+//! * `unpooled` — identical code with the arena disabled; every lease is
+//!   a fresh allocation (the `--pool false` ablation flag).
+//! * `legacy`   — the pre-arena path for reference: owned decode
+//!   tensors, `Tensor::stack`, owned `unstack` rows.
+//!
+//! Acceptance gate (ISSUE 3): pooling must remove the pixel-plane
+//! allocations.  Asserted two ways: (1) allocated **bytes**/request
+//! drop >= 2x pooled vs unpooled (in practice >100x — the pooled
+//! buffers are the ~618 KB decode and ~2.4 MB batch allocations, while
+//! what remains is tens-of-bytes control-plane), and (2) allocation
+//! **events**/request drop by >= 1.0 absolute — exactly the decode
+//! lease (1/req) plus the batch lease (1/B per req) that the arena
+//! turns into hits.  Small per-request control-plane allocations
+//! (top-5 vec, cache clone) are identical in both modes by
+//! construction, so an event *ratio* would understate what pooling
+//! does; the bytes ratio and the absolute event delta state it
+//! exactly.
+//!
+//! Run: cargo bench --bench hot_path_alloc [-- --quick] [--json PATH]
+
+use std::time::Instant;
+
+use zuluko::bench::BenchArgs;
+use zuluko::metrics::Histogram;
+use zuluko::policy::{image_key, CachedResult, ResponseCache};
+use zuluko::tensor::{Lease, Tensor, TensorPool, TensorView};
+use zuluko::testkit::alloc::CountingAlloc;
+use zuluko::testkit::rng::Rng;
+use zuluko::util::json::Json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const HW: usize = 227;
+const PER: usize = HW * HW * 3;
+const CLASSES: usize = 1000;
+const BATCH: usize = 4;
+const CACHE_CAP: usize = 256;
+
+/// Synthetic "decode": fill the input buffer in place (models
+/// `Image::to_input_into` writing into a pooled lease).
+fn decode_into(buf: &mut [f32], rng: &mut Rng) {
+    for v in buf.iter_mut() {
+        *v = rng.uniform(-1.0, 1.0) as f32;
+    }
+}
+
+/// Engine stand-in: deterministic per-row scores from the batch buffer
+/// (`tensor_from_literal` allocates the output in the real path, so the
+/// scores vec is owned in every mode).
+fn fake_infer(batch: TensorView<'_>, scores: &mut [f32]) {
+    let b = batch.num_rows();
+    for slot in 0..b {
+        let row = batch.row(slot).data();
+        let s = row[0] + row[row.len() - 1];
+        for c in 0..CLASSES {
+            scores[slot * CLASSES + c] = s + c as f32 * 1e-3;
+        }
+    }
+}
+
+/// Reply extraction exactly as the shipped worker does it: owned top-5
+/// per request plus a cache fill with a cloned result.
+fn extract(row: TensorView<'_>, key: u64, cache: &ResponseCache, sink: &mut u64) {
+    let top1 = row.argmax();
+    let top5 = row.topk(5);
+    cache.put(
+        key,
+        CachedResult {
+            top1,
+            top5: top5.clone(),
+        },
+    );
+    *sink = sink.wrapping_add((top1 + top5[0].0) as u64);
+}
+
+struct ModeResult {
+    name: &'static str,
+    allocs_per_req: f64,
+    bytes_per_req: f64,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    sink: u64,
+}
+
+impl ModeResult {
+    fn row(&self) -> String {
+        format!(
+            "| {} | {:.2} | {:.0} | {:.0} | {:.3} | {:.3} |",
+            self.name,
+            self.allocs_per_req,
+            self.bytes_per_req,
+            self.rps,
+            self.p50_ms,
+            self.p99_ms
+        )
+    }
+
+    fn json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.into())
+            .set("allocs_per_req", self.allocs_per_req.into())
+            .set("bytes_per_req", self.bytes_per_req.into())
+            .set("throughput_rps", self.rps.into())
+            .set("p50_ms", self.p50_ms.into())
+            .set("p99_ms", self.p99_ms.into());
+        o
+    }
+}
+
+/// The zero-copy worker loop (pooled or unpooled is purely the arena
+/// flag — same code, same order of operations).
+fn run_arena_mode(name: &'static str, pooled: bool, warmup: usize, waves: usize) -> ModeResult {
+    let pool = TensorPool::with_mode(pooled, 16);
+    let cache = ResponseCache::new(CACHE_CAP);
+    let mut rng = Rng::new(7);
+    let mut images: Vec<(u64, Lease)> = Vec::with_capacity(BATCH);
+    let mut samples: Vec<f64> = Vec::with_capacity(waves * BATCH);
+    let bshape = [BATCH, HW, HW, 3];
+    let sshape = [BATCH, CLASSES];
+    let mut sink = 0u64;
+    let mut before = CountingAlloc::snapshot();
+    let mut t_start = Instant::now();
+
+    for wave in 0..warmup + waves {
+        if wave == warmup {
+            before = CountingAlloc::snapshot();
+            t_start = Instant::now();
+        }
+        let t0 = Instant::now();
+        // Decode each request straight into a leased input buffer, and
+        // hash the borrowed pixels for the response-cache key.
+        images.clear();
+        for _ in 0..BATCH {
+            let mut l = pool.lease(PER);
+            decode_into(&mut l, &mut rng);
+            let key = image_key(&l);
+            images.push((key, l));
+        }
+        // In-place batching: rows copied into one leased batch buffer.
+        let mut bbuf = pool.lease(BATCH * PER);
+        for (slot, (_, img)) in images.iter().enumerate() {
+            bbuf[slot * PER..(slot + 1) * PER].copy_from_slice(img);
+        }
+        // Owned engine output, like tensor_from_literal.
+        let mut scores = vec![0.0f32; BATCH * CLASSES];
+        fake_infer(TensorView::new(&bshape, &bbuf), &mut scores);
+        drop(bbuf);
+        // Reply extraction on borrowed output rows.
+        let sv = TensorView::new(&sshape, &scores);
+        for (slot, (key, _)) in images.iter().enumerate() {
+            extract(sv.row(slot), *key, &cache, &mut sink);
+        }
+        if wave >= warmup {
+            let ms = zuluko::util::ms(t0.elapsed());
+            for _ in 0..BATCH {
+                samples.push(ms);
+            }
+        }
+    }
+
+    finish(name, before, t_start, samples, waves, sink)
+}
+
+/// The pre-arena path: owned tensors end to end.
+fn run_legacy_mode(warmup: usize, waves: usize) -> ModeResult {
+    let cache = ResponseCache::new(CACHE_CAP);
+    let mut rng = Rng::new(7);
+    let mut images: Vec<(u64, Tensor)> = Vec::with_capacity(BATCH);
+    let mut samples: Vec<f64> = Vec::with_capacity(waves * BATCH);
+    let rshape = [HW, HW, 3];
+    let mut sink = 0u64;
+    let mut before = CountingAlloc::snapshot();
+    let mut t_start = Instant::now();
+
+    for wave in 0..warmup + waves {
+        if wave == warmup {
+            before = CountingAlloc::snapshot();
+            t_start = Instant::now();
+        }
+        let t0 = Instant::now();
+        images.clear();
+        for _ in 0..BATCH {
+            let mut data = vec![0.0f32; PER];
+            decode_into(&mut data, &mut rng);
+            let key = image_key(&data);
+            images.push((key, Tensor::new(&rshape, data).unwrap()));
+        }
+        let refs: Vec<&Tensor> = images.iter().map(|(_, t)| t).collect();
+        let batch = Tensor::stack(&refs).unwrap();
+        let mut scores = vec![0.0f32; BATCH * CLASSES];
+        fake_infer(batch.view(), &mut scores);
+        let st = Tensor::new(&[BATCH, CLASSES], scores).unwrap();
+        // Old extraction: one owned Vec per unstacked row.
+        for (row, (key, _)) in st.unstack().unwrap().iter().zip(images.iter()) {
+            extract(row.view(), *key, &cache, &mut sink);
+        }
+        if wave >= warmup {
+            let ms = zuluko::util::ms(t0.elapsed());
+            for _ in 0..BATCH {
+                samples.push(ms);
+            }
+        }
+    }
+
+    finish("legacy", before, t_start, samples, waves, sink)
+}
+
+fn finish(
+    name: &'static str,
+    before: (u64, u64),
+    t_start: Instant,
+    samples: Vec<f64>,
+    waves: usize,
+    sink: u64,
+) -> ModeResult {
+    let wall = t_start.elapsed();
+    let (allocs, bytes) = CountingAlloc::since(before);
+    let n_req = (waves * BATCH) as f64;
+    let mut h = Histogram::default();
+    for &s in &samples {
+        h.record_ms(s);
+    }
+    let (_, p50, _, p99, _) = h.summary();
+    ModeResult {
+        name,
+        allocs_per_req: allocs as f64 / n_req,
+        bytes_per_req: bytes as f64 / n_req,
+        rps: n_req / wall.as_secs_f64().max(1e-9),
+        p50_ms: p50,
+        p99_ms: p99,
+        sink,
+    }
+}
+
+fn json_path() -> Option<String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+}
+
+fn main() {
+    // `--iters` = measured batch waves per mode, `--warmup` = warmup
+    // waves; `--quick` clamps both for the CI smoke run.
+    let args = BenchArgs::from_env(96);
+    let waves = args.iters.max(1);
+    let warmup = args.warmup;
+
+    println!(
+        "== E10: per-request heap allocation, wire -> engine -> reply \
+         (batch={BATCH}, {} requests/mode) ==",
+        waves * BATCH
+    );
+    let pooled = run_arena_mode("pooled", true, warmup, waves);
+    let unpooled = run_arena_mode("unpooled", false, warmup, waves);
+    let legacy = run_legacy_mode(warmup, waves);
+
+    println!("| mode | allocs/req | bytes/req | req/s | p50 ms | p99 ms |");
+    println!("|---|---|---|---|---|---|");
+    println!("{}", pooled.row());
+    println!("{}", unpooled.row());
+    println!("{}", legacy.row());
+
+    // Same seed, same math: every mode must compute the same answers.
+    assert_eq!(pooled.sink, unpooled.sink, "modes diverged");
+    assert_eq!(pooled.sink, legacy.sink, "legacy path diverged");
+
+    let bytes_reduction = unpooled.bytes_per_req / pooled.bytes_per_req.max(1e-9);
+    let event_delta = unpooled.allocs_per_req - pooled.allocs_per_req;
+    println!(
+        "\npooled vs unpooled: {bytes_reduction:.1}x fewer allocated bytes per \
+         request; {event_delta:.2} fewer allocation events per request \
+         (the decode + batch leases)"
+    );
+    println!(
+        "pooled vs legacy:   {:.1}x fewer allocated bytes per request",
+        legacy.bytes_per_req / pooled.bytes_per_req.max(1e-9)
+    );
+
+    if let Some(path) = json_path() {
+        let mut cfg = Json::obj();
+        cfg.set("requests_per_mode", (waves * BATCH).into())
+            .set("batch", BATCH.into())
+            .set("input_elems", PER.into())
+            .set("cache_capacity", CACHE_CAP.into())
+            .set("quick", args.quick.into());
+        let mut o = Json::obj();
+        o.set("bench", "hot_path_alloc".into())
+            .set("experiment", "E10".into())
+            .set("config", cfg)
+            .set(
+                "modes",
+                Json::Arr(vec![pooled.json(), unpooled.json(), legacy.json()]),
+            )
+            .set("bytes_reduction_pooled_vs_unpooled", bytes_reduction.into())
+            .set("alloc_event_delta_per_req", event_delta.into());
+        std::fs::write(&path, format!("{}\n", o.to_string())).expect("write bench json");
+        println!("wrote {path}");
+    }
+
+    assert!(
+        bytes_reduction >= 2.0,
+        "pooling must at least halve allocated bytes/request \
+         (got {bytes_reduction:.2}x: pooled {:.0} B, unpooled {:.0} B)",
+        pooled.bytes_per_req,
+        unpooled.bytes_per_req
+    );
+    assert!(
+        event_delta >= 1.0,
+        "pooling must eliminate at least the per-request decode lease \
+         (delta {event_delta:.2}: pooled {:.2}, unpooled {:.2})",
+        pooled.allocs_per_req,
+        unpooled.allocs_per_req
+    );
+}

@@ -40,6 +40,30 @@ impl Default for PolicyConfig {
     }
 }
 
+/// Tensor-arena knobs (DESIGN.md §"Memory ownership on the hot path").
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Reuse request/batch buffers through the tensor pool.  `false` is
+    /// the allocation-ablation mode: identical code path, every lease
+    /// allocates fresh.
+    pub enabled: bool,
+    /// Default max retained buffers per size class (bound on pool
+    /// memory).  The coordinator's startup reservations may raise the
+    /// bound for specific classes: the decode class is reserved at
+    /// `queue_capacity` so a full admission queue of in-flight leases
+    /// still returns into the arena.
+    pub per_class_cap: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            enabled: true,
+            per_class_cap: 16,
+        }
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -62,6 +86,8 @@ pub struct Config {
     pub log_level: u8,
     /// SLO policy layer knobs.
     pub policy: PolicyConfig,
+    /// Hot-path buffer pool knobs.
+    pub pool: PoolConfig,
 }
 
 impl Default for Config {
@@ -76,6 +102,7 @@ impl Default for Config {
             listen: "127.0.0.1:7878".to_string(),
             log_level: crate::util::log::INFO,
             policy: PolicyConfig::default(),
+            pool: PoolConfig::default(),
         }
     }
 }
@@ -134,6 +161,15 @@ impl Config {
                 self.policy.margin = v;
             }
         }
+        // Pool knobs live under a nested "pool" object.
+        if let Some(p) = j.get("pool") {
+            if let Some(v) = p.get("enabled").and_then(|v| v.as_bool()) {
+                self.pool.enabled = v;
+            }
+            if let Some(v) = p.get("per_class_cap").and_then(|v| v.as_usize()) {
+                self.pool.per_class_cap = v;
+            }
+        }
         Ok(())
     }
 
@@ -180,6 +216,19 @@ impl Config {
         self.policy.margin = a
             .get_f64("margin", self.policy.margin)
             .map_err(anyhow::Error::msg)?;
+        // `--pool false` is the allocation-ablation switch.  Parsed
+        // strictly: silently disabling pooling on a typo would skew any
+        // benchmark or deployment that mistyped the flag.
+        if let Some(v) = a.get("pool") {
+            self.pool.enabled = match v {
+                "true" | "1" | "yes" => true,
+                "false" | "0" | "no" => false,
+                other => bail!("--pool expects true|false, got '{other}'"),
+            };
+        }
+        self.pool.per_class_cap = a
+            .get_usize("pool-cap", self.pool.per_class_cap)
+            .map_err(anyhow::Error::msg)?;
         Ok(())
     }
 
@@ -220,6 +269,9 @@ impl Config {
         if self.policy.margin < 1.0 {
             bail!("margin must be >= 1.0, got {}", self.policy.margin);
         }
+        if self.pool.per_class_cap == 0 {
+            bail!("pool per_class_cap must be >= 1 (use pool.enabled=false to disable)");
+        }
         if self.policy.adaptive {
             if self.policy.quant_workers == 0 {
                 bail!("quant_workers must be >= 1 when adaptive");
@@ -250,6 +302,8 @@ impl Config {
         "cache-capacity",
         "ewma-alpha",
         "margin",
+        "pool",
+        "pool-cap",
     ];
 }
 
@@ -333,6 +387,39 @@ mod tests {
         let mut c = Config::default();
         c.policy.adaptive = true;
         c.engine = EngineKind::Quant;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pool_knobs_from_json_and_cli() {
+        let j = Json::parse(r#"{"pool":{"enabled":false,"per_class_cap":4}}"#).unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert!(!c.pool.enabled);
+        assert_eq!(c.pool.per_class_cap, 4);
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            ["serve", "--pool", "false", "--pool-cap", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert!(!c.pool.enabled);
+        assert_eq!(c.pool.per_class_cap, 8);
+
+        // Typos must error, not silently flip into ablation mode.
+        let bad = Args::parse(
+            ["serve", "--pool", "ture"].iter().map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+
+        let mut c = Config::default();
+        c.pool.per_class_cap = 0;
         assert!(c.validate().is_err());
     }
 

@@ -10,7 +10,9 @@
 //! * returned batch size is always in `supported`;
 //! * batch ≤ max_batch;
 //! * leftovers keep their relative order;
-//! * a non-empty queue never yields an empty batch.
+//! * a non-empty queue never yields an empty batch;
+//! * the batch window never stretches past `timeout`, even when a
+//!   sustained burst keeps the fast-path drain busy.
 
 use std::time::{Duration, Instant};
 
@@ -69,6 +71,13 @@ impl BatchPolicy {
             let mut more = queue.drain_up_to(self.max_batch - items.len());
             if !more.is_empty() {
                 items.append(&mut more);
+                // A sustained burst must not extend the batch window: a
+                // queue that refills as fast as we drain would otherwise
+                // keep this loop in the fast path forever.  Check the
+                // deadline before re-draining.
+                if Instant::now() >= deadline {
+                    break;
+                }
                 continue;
             }
             let now = Instant::now();
@@ -146,6 +155,42 @@ mod tests {
         let q = BoundedQueue::<u32>::new(4);
         q.close();
         assert_eq!(policy(4).form(&q), None);
+    }
+
+    #[test]
+    fn sustained_burst_cannot_extend_window_past_timeout() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        // A producer refills the queue as fast as form() drains it; the
+        // old fast-path `continue` never re-checked the deadline, so the
+        // window stretched until max_batch filled.  With max_batch far
+        // above what the window can collect, form() must still return
+        // within (roughly) the timeout.
+        let q = Arc::new(BoundedQueue::new(1024));
+        let stop = Arc::new(AtomicBool::new(false));
+        let producer = {
+            let q = q.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 0u32;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = q.try_push(i);
+                    i = i.wrapping_add(1);
+                }
+            })
+        };
+        let p = BatchPolicy::new(1_000_000, Duration::from_millis(30), &[1, 2, 4, 8]);
+        let t0 = Instant::now();
+        let batch = p.form(&q).unwrap();
+        let elapsed = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        producer.join().unwrap();
+        assert!(!batch.is_empty());
+        assert!(
+            elapsed < Duration::from_millis(500),
+            "batch window stretched to {elapsed:?} under sustained load"
+        );
     }
 
     #[test]

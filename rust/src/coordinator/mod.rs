@@ -45,22 +45,27 @@ use crate::policy::{
     PoolSnapshot, PoolView, Selector, Slo,
 };
 use crate::runtime::Manifest;
-use crate::tensor::Tensor;
+use crate::tensor::{PoolStats, PooledTensor, Tensor, TensorPool};
 
 use batcher::BatchPolicy;
 use queue::BoundedQueue;
 use router::{RouteError, Router};
 use worker::{SharedStats, WorkerReport};
 
-/// One inference request (image already preprocessed to 227x227x3).
+/// One inference request (image already preprocessed to 227x227x3,
+/// living in a pooled lease so its buffer is recycled on completion).
 pub struct Request {
     pub id: u64,
-    pub image: Tensor,
+    pub image: PooledTensor,
     pub submitted: Instant,
     /// Deadline + priority; default is best-effort.
     pub slo: Slo,
     /// Content hash for response-cache fill (None when caching is off).
     pub cache_key: Option<u64>,
+    /// Pre-decode hash of the raw image spec (None when caching is off
+    /// or the spec isn't self-describing) — filled alongside
+    /// `cache_key` so repeat requests skip decode entirely.
+    pub wire_key: Option<u64>,
     pub reply: mpsc::Sender<Response>,
 }
 
@@ -189,6 +194,8 @@ pub struct StatsSnapshot {
     pub shed_predicted: u64,
     /// Admitted requests shed in-queue after their deadline passed.
     pub shed_expired: u64,
+    /// Tensor-arena counters (hit/miss/returned/dropped/buffers).
+    pub pool: PoolStats,
 }
 
 /// One engine pool: a router over per-worker bounded queues.
@@ -220,6 +227,7 @@ pub struct Coordinator {
     next_id: AtomicU64,
     stats: Arc<SharedStats>,
     input_hw: usize,
+    pool: TensorPool,
 }
 
 /// Batch sizes a given engine kind has compiled artifacts for.
@@ -262,11 +270,21 @@ impl Coordinator {
         let stats = Arc::new(SharedStats::default());
         let (ready_tx, ready_rx) = mpsc::channel();
 
+        // Tensor arena for the whole request path: decode buffers plus
+        // one batch buffer per compiled batch size, shelved at startup
+        // so the steady state never allocates pixels.
+        let input_len = manifest.input_hw * manifest.input_hw * 3;
+        let arena = TensorPool::with_mode(cfg.pool.enabled, cfg.pool.per_class_cap);
+        arena.prealloc(input_len, cfg.queue_capacity);
+
         let mut pools = Vec::with_capacity(specs.len());
         let mut worker_handles = Vec::new();
         let mut worker_index = 0usize;
         for (pool_index, &(kind, n_workers)) in specs.iter().enumerate() {
             let supported = supported_sizes(kind, &manifest);
+            for &b in supported.iter().filter(|&&b| b <= cfg.max_batch) {
+                arena.prealloc(b * input_len, n_workers);
+            }
             let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
             let queues: Vec<Arc<BoundedQueue<Request>>> = (0..n_workers)
                 .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
@@ -280,6 +298,7 @@ impl Coordinator {
                     policy.clone(),
                     stats.clone(),
                     ctx.clone(),
+                    arena.clone(),
                     // Only the quality pool (specs[0]) fills the cache so
                     // hits never downgrade accuracy to the int8 path.
                     pool_index == 0,
@@ -330,6 +349,7 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             stats,
             input_hw: manifest.input_hw,
+            pool: arena,
         })
     }
 
@@ -338,22 +358,45 @@ impl Coordinator {
         self.submit_with_slo(image, Slo::default())
     }
 
-    /// Submit with an SLO.  The cache is consulted first (a hit replies
-    /// immediately without touching an engine); otherwise the selector
-    /// routes to the best pool predicted to meet the deadline, or sheds.
+    /// Reject wrong-shaped inputs before they touch queues or the arena.
+    fn check_shape(&self, shape: &[usize]) -> Result<(), SubmitError> {
+        let want = [self.input_hw, self.input_hw, 3];
+        if shape != want {
+            return Err(SubmitError::BadInput(format!(
+                "expected shape {want:?}, got {shape:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Submit with an SLO (owned-tensor convenience: the buffer moves
+    /// into the arena's custody and is recycled on completion).
     pub fn submit_with_slo(
         &self,
         image: Tensor,
         slo: Slo,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        let want = [self.input_hw, self.input_hw, 3];
-        if image.shape() != want {
-            return Err(SubmitError::BadInput(format!(
-                "expected shape {:?}, got {:?}",
-                want,
-                image.shape()
-            )));
-        }
+        // Validate before adopting, so rejected odd-shaped tensors are
+        // never shelved into the arena's size classes.
+        self.check_shape(image.shape())?;
+        let image = PooledTensor::from_tensor(image, &self.pool);
+        self.submit_pooled(image, slo, None)
+    }
+
+    /// Zero-copy submission: the image already lives in a pooled lease
+    /// (the server decodes straight into one).  The cache is consulted
+    /// first (a hit replies immediately without touching an engine);
+    /// otherwise the selector routes to the best pool predicted to meet
+    /// the deadline, or sheds.  `wire_key` optionally keys the response
+    /// cache on the raw request bytes so a repeat of the same wire spec
+    /// skips decode entirely next time.
+    pub fn submit_pooled(
+        &self,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.check_shape(image.shape())?;
         let submitted = Instant::now();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
 
@@ -361,6 +404,12 @@ impl Coordinator {
         let cache_key = if self.ctx.cache.enabled() {
             let key = image_key(image.data());
             if let Some(hit) = self.ctx.cache.get(key) {
+                // Re-install the wire-key alias: it may have been
+                // LRU-evicted independently of the content entry, and
+                // this request never reaches a worker to restore it.
+                if let Some(wk) = wire_key {
+                    self.ctx.cache.put(wk, hit.clone());
+                }
                 let (tx, rx) = mpsc::channel();
                 let total_ms = crate::util::ms(submitted.elapsed());
                 let _ = tx.send(Response::cache_hit(id, &hit, total_ms));
@@ -404,6 +453,7 @@ impl Coordinator {
             submitted,
             slo,
             cache_key,
+            wire_key: wire_key.filter(|_| cache_key.is_some()),
             reply: tx,
         };
         match self.pools[pool].router.route(req) {
@@ -414,6 +464,30 @@ impl Coordinator {
             }
             Err(RouteError::Closed(_)) => Err(SubmitError::Closed),
         }
+    }
+
+    /// Response-cache lookup by an externally computed key — the
+    /// server's wire-key fast path.  A hit means the caller can skip
+    /// image decode entirely; a miss is not counted against the cache
+    /// (the post-decode content-key lookup counts once per request).
+    pub fn cached_response(&self, key: u64) -> Option<Response> {
+        if !self.ctx.cache.enabled() {
+            return None;
+        }
+        let t0 = Instant::now();
+        let hit = self.ctx.cache.peek(key)?;
+        // Measured, like the content-key hit path — cache hits are real
+        // requests with (near-zero) real latency.
+        let total_ms = crate::util::ms(t0.elapsed());
+        let resp = Response::cache_hit(0, &hit, total_ms);
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.stats.latency.lock().unwrap().record_ms(total_ms);
+        Some(resp)
+    }
+
+    /// The request path's tensor arena (decode buffers lease from here).
+    pub fn pool(&self) -> TensorPool {
+        self.pool.clone()
     }
 
     /// Convenience: submit and wait.
@@ -439,6 +513,7 @@ impl Coordinator {
             cache_misses: cache.misses,
             shed_predicted: self.ctx.shed_predicted_count(),
             shed_expired: self.ctx.shed_expired_count(),
+            pool: self.pool.stats(),
         }
     }
 

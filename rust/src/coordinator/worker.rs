@@ -9,6 +9,14 @@
 //! observed execution time feeds the shared latency predictor and —
 //! on the quality pool only — the per-request results fill the
 //! response cache.
+//!
+//! Memory duties (DESIGN.md §"Memory ownership on the hot path"): the
+//! batch is assembled *in place* into a buffer leased from the tensor
+//! arena — each request's pooled pixels are copied straight into their
+//! batch slot (no `Tensor::stack` allocation) — the engine reads it as
+//! a borrowed view, and reply extraction reads borrowed output rows
+//! (no `unstack` copies).  The lease returns to the arena on every
+//! exit path, including errors, because return is `Drop`.
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,7 +29,7 @@ use crate::metrics::ledger::Ledger;
 use crate::metrics::Histogram;
 use crate::policy::{CachedResult, PolicyCtx, Urgency};
 use crate::runtime::Manifest;
-use crate::tensor::Tensor;
+use crate::tensor::{TensorPool, TensorView};
 
 use super::batcher::BatchPolicy;
 use super::queue::BoundedQueue;
@@ -60,6 +68,7 @@ pub fn spawn_worker(
     policy: BatchPolicy,
     stats: Arc<SharedStats>,
     ctx: Arc<PolicyCtx>,
+    pool: TensorPool,
     // Only the quality pool fills the response cache: caching an int8
     // result would let later fp32-entitled requests hit it (Fig 4
     // accuracy loss through the back door).
@@ -133,21 +142,31 @@ pub fn spawn_worker(
                 }
 
                 let formed_at = Instant::now();
-                let refs: Vec<&Tensor> = live.iter().map(|r| &r.image).collect();
-                let batch = match Tensor::stack(&refs) {
-                    Ok(b) => b,
-                    Err(e) => {
-                        fail_batch(&live, &format!("stack: {e}"));
-                        continue;
-                    }
-                };
+                let bsize = live.len();
+                let per = live[0].image.len();
+                let row_shape = live[0].image.shape().to_vec();
+                if live.iter().any(|r| r.image.shape() != &row_shape[..]) {
+                    fail_batch(&live, "batch shape mismatch");
+                    continue;
+                }
+                // In-place batching: lease a batch buffer from the arena
+                // and copy each request's pooled pixels straight into
+                // their slot — the only copy between socket and engine.
+                let mut bshape = Vec::with_capacity(row_shape.len() + 1);
+                bshape.push(bsize);
+                bshape.extend_from_slice(&row_shape);
+                let mut bbuf = pool.lease(bsize * per);
+                for (slot, r) in live.iter().enumerate() {
+                    bbuf[slot * per..(slot + 1) * per]
+                        .copy_from_slice(r.image.data());
+                }
                 let t0 = Instant::now();
-                let out = eng.infer(&batch);
+                let out = eng.infer_view(TensorView::new(&bshape, &bbuf));
                 let exec_ms = crate::util::ms(t0.elapsed());
+                drop(bbuf); // back to the arena before reply fan-out
 
-                match out.and_then(|o| o.unstack().map_err(Into::into)) {
-                    Ok(rows) => {
-                        let bsize = live.len();
+                match out {
+                    Ok(probs) if probs.shape().first() == Some(&bsize) => {
                         batches += 1;
                         images += bsize as u64;
                         ctx.predictor.record(kind, bsize, exec_ms);
@@ -156,7 +175,11 @@ pub fn spawn_worker(
                             .lock()
                             .unwrap()
                             .record_ms(bsize as f64);
-                        for (req, row) in live.into_iter().zip(rows) {
+                        let pv = probs.view();
+                        for (slot, req) in live.into_iter().enumerate() {
+                            // Borrowed output row: argmax/top-5 read the
+                            // batch tensor in place (no unstack copy).
+                            let row = pv.row(slot);
                             let total_ms =
                                 crate::util::ms(req.submitted.elapsed());
                             let queue_ms = crate::util::ms(
@@ -165,14 +188,17 @@ pub fn spawn_worker(
                             let top1 = row.argmax();
                             let top5 = row.topk(5);
                             if fill_cache {
-                                if let Some(key) = req.cache_key {
-                                    ctx.cache.put(
-                                        key,
-                                        CachedResult {
-                                            top1,
-                                            top5: top5.clone(),
-                                        },
-                                    );
+                                // Fill under the content key, and alias
+                                // under the wire key so the next
+                                // identical raw request skips decode.
+                                let cached = CachedResult {
+                                    top1,
+                                    top5: top5.clone(),
+                                };
+                                for key in
+                                    req.cache_key.iter().chain(req.wire_key.iter())
+                                {
+                                    ctx.cache.put(*key, cached.clone());
                                 }
                             }
                             let _ = req.reply.send(Response {
@@ -198,6 +224,13 @@ pub fn spawn_worker(
                                 .record_ms(total_ms);
                         }
                     }
+                    Ok(probs) => fail_batch_owned(
+                        live,
+                        &format!(
+                            "infer: engine returned shape {:?} for batch {bsize}",
+                            probs.shape()
+                        ),
+                    ),
                     Err(e) => fail_batch_owned(live, &format!("infer: {e}")),
                 }
             }

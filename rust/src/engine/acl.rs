@@ -23,10 +23,10 @@ use std::rc::Rc;
 
 use crate::metrics::ledger::{Group, Ledger};
 use crate::runtime::{
-    literal_from_tensor, run_timed, tensor_from_literal, Manifest, Runtime,
+    literal_from_slice, run_timed, tensor_from_literal, Manifest, Runtime,
     StageEntry, WeightStore,
 };
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 
 /// Execution granularity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +153,10 @@ impl super::Engine for AclEngine {
     }
 
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        self.infer_view(batch.view())
+    }
+
+    fn infer_view(&mut self, batch: TensorView<'_>) -> Result<Tensor> {
         let b = *batch.shape().first().unwrap_or(&0);
         if !self.batch_sizes.contains(&b) {
             bail!(
@@ -161,7 +165,10 @@ impl super::Engine for AclEngine {
                 self.batch_sizes
             );
         }
-        let mut cur = literal_from_tensor(batch)?;
+        // Input literal straight from the borrowed slice; stages then
+        // pass literals hand to hand — no owned Tensor until the final
+        // probabilities come back.
+        let mut cur = literal_from_slice(batch.shape(), batch.data())?;
         for (stage, params) in self.stages.iter().zip(&self.stage_params) {
             let exe = stage
                 .exes

@@ -22,7 +22,7 @@ use anyhow::Result;
 
 use crate::metrics::ledger::Ledger;
 use crate::runtime::Manifest;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 
 /// A batch-in, probabilities-out inference engine.
 ///
@@ -38,6 +38,16 @@ pub trait Engine {
 
     /// Run one batch.
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor>;
+
+    /// Run one batch from a borrowed view — the zero-copy serving entry
+    /// point (the worker's batch lives in a pooled buffer it owns).
+    /// The default copies into an owned tensor; the in-tree engines
+    /// override it to build their input literals straight from the
+    /// borrowed slice.
+    fn infer_view(&mut self, batch: TensorView<'_>) -> Result<Tensor> {
+        let owned = batch.to_tensor();
+        self.infer(&owned)
+    }
 
     /// Cumulative per-op/per-stage timing ledger (cleared by callers
     /// between measurement windows).

@@ -16,9 +16,9 @@ use anyhow::Result;
 
 use crate::metrics::ledger::Ledger;
 use crate::runtime::{
-    literal_from_tensor, tensor_from_literal, Manifest, Runtime, WeightStore,
+    literal_from_slice, tensor_from_literal, Manifest, Runtime, WeightStore,
 };
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView};
 
 use super::graph_exec::{self, CompiledOp, ExecStats};
 
@@ -62,23 +62,24 @@ impl super::Engine for TfBaselineEngine {
     }
 
     fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
-        let images = if batch.shape().first() == Some(&1) {
-            vec![batch.clone()]
-        } else {
-            batch
-                .unstack()?
-                .into_iter()
-                .map(|t| {
-                    let mut shape = vec![1];
-                    shape.extend(t.shape());
-                    t.reshape(&shape.clone()).unwrap()
-                })
-                .collect()
-        };
+        self.infer_view(batch.view())
+    }
 
-        let mut rows = Vec::with_capacity(images.len());
-        for img in &images {
-            let input = literal_from_tensor(img)?;
+    fn infer_view(&mut self, batch: TensorView<'_>) -> Result<Tensor> {
+        if batch.shape().is_empty() {
+            anyhow::bail!("tf: scalar batch");
+        }
+        // Image-by-image like a fixed batch-1 framework graph, but each
+        // per-image literal is built from a borrowed row view — no
+        // clone, no unstack copies.
+        let n = batch.num_rows();
+        let mut rshape = Vec::with_capacity(batch.shape().len());
+        rshape.push(1);
+        rshape.extend_from_slice(&batch.shape()[1..]);
+        let mut data = Vec::with_capacity(n * self.num_classes);
+        for i in 0..n {
+            let row = batch.row(i);
+            let input = literal_from_slice(&rshape, row.data())?;
             let (out, stats) = graph_exec::execute(
                 &self.ops,
                 &self.weights,
@@ -87,12 +88,10 @@ impl super::Engine for TfBaselineEngine {
                 &mut self.ledger,
             )?;
             self.last_stats = stats;
-            rows.push(tensor_from_literal(&out)?);
+            // Each output is (1, C); append its row into the (B, C) pack.
+            data.extend_from_slice(tensor_from_literal(&out)?.data());
         }
-        let refs: Vec<&Tensor> = rows.iter().collect();
-        let stacked = Tensor::stack(&refs)?;
-        // rows are (1, C); stacked is (B, 1, C) -> (B, C).
-        stacked.reshape(&[images.len(), self.num_classes])
+        Tensor::new(&[n, self.num_classes], data)
     }
 
     fn ledger(&self) -> &Ledger {

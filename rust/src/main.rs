@@ -42,6 +42,9 @@ const FLAGS: &[&str] = &[
     "cache-capacity",
     "ewma-alpha",
     "margin",
+    // tensor arena
+    "pool",
+    "pool-cap",
     // command-specific
     "ppm",
     "seed",
@@ -93,7 +96,8 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         let s = coord.stats();
         info!(
             "main",
-            "completed={} rejected={} queued={} p50={:.1}ms cache={}h/{}m shed={}+{}",
+            "completed={} rejected={} queued={} p50={:.1}ms cache={}h/{}m \
+             shed={}+{} pool={}h/{}m",
             s.completed,
             s.rejected,
             s.queued,
@@ -101,7 +105,9 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             s.cache_hits,
             s.cache_misses,
             s.shed_predicted,
-            s.shed_expired
+            s.shed_expired,
+            s.pool.hits,
+            s.pool.misses
         );
     }
 }

@@ -85,9 +85,23 @@ impl ResponseCache {
 
     /// Look up a frame hash; a hit refreshes recency.
     pub fn get(&self, key: u64) -> Option<CachedResult> {
+        self.lookup(key, true)
+    }
+
+    /// Like [`get`] but a miss is not counted — used by layered key
+    /// probes (wire key before decode, content key after) so one request
+    /// never counts two misses.  Hits count and refresh recency as
+    /// usual.
+    pub fn peek(&self, key: u64) -> Option<CachedResult> {
+        self.lookup(key, false)
+    }
+
+    fn lookup(&self, key: u64, count_miss: bool) -> Option<CachedResult> {
         let mut g = self.inner.lock().unwrap();
         if g.capacity == 0 {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            if count_miss {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+            }
             return None;
         }
         match g.map.get(&key).map(|(v, _)| v.clone()) {
@@ -97,7 +111,9 @@ impl ResponseCache {
                 Some(v)
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                if count_miss {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                }
                 None
             }
         }
@@ -150,18 +166,35 @@ impl ResponseCache {
     }
 }
 
-/// FNV-1a over the f32 bit patterns — the frame's content address.
-/// ~0.6 MB per 227x227x3 frame hashes in well under a millisecond, two
-/// orders of magnitude below an inference.
-pub fn image_key(pixels: &[f32]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for v in pixels {
-        for b in v.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
     }
     h
+}
+
+/// FNV-1a over the f32 bit patterns — the frame's content address.
+/// ~0.6 MB per 227x227x3 frame hashes in well under a millisecond, two
+/// orders of magnitude below an inference.  Operates on borrowed data
+/// (a pooled lease or view), never a clone.
+pub fn image_key(pixels: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for v in pixels {
+        h = fnv1a(h, &v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// FNV-1a over raw bytes — the pre-decode wire key (hash of the request's
+/// image spec).  Wire keys and content keys share one table; the inputs
+/// live in disjoint domains (tagged spec bytes vs ~0.6 MB pixel streams),
+/// so 64-bit collisions between them are as unlikely as any FNV pair.
+pub fn bytes_key(bytes: &[u8]) -> u64 {
+    fnv1a(FNV_OFFSET, bytes)
 }
 
 #[cfg(test)]
@@ -217,6 +250,31 @@ mod tests {
         assert_eq!(c.get(1), None);
         assert_eq!(c.len(), 0);
         assert!(!c.enabled());
+    }
+
+    #[test]
+    fn peek_counts_hits_but_not_misses() {
+        let c = ResponseCache::new(2);
+        assert_eq!(c.peek(1), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        c.put(1, result(5));
+        assert_eq!(c.peek(1), Some(result(5)));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        // peek refreshes recency like get.
+        c.put(2, result(2));
+        c.peek(1);
+        c.put(3, result(3));
+        assert!(c.get(1).is_some());
+        assert_eq!(c.get(2), None, "LRU victim should have been 2");
+    }
+
+    #[test]
+    fn bytes_key_is_stable_and_distinct() {
+        assert_eq!(bytes_key(b"s:42"), bytes_key(b"s:42"));
+        assert_ne!(bytes_key(b"s:42"), bytes_key(b"s:43"));
+        assert_ne!(bytes_key(b""), bytes_key(b"\x00"));
     }
 
     #[test]

@@ -104,21 +104,27 @@ pub fn run_timed(
 /// every target we run on is little-endian, so the f32 slice *is* the
 /// byte layout XLA wants — reinterpret it in place and skip the copy.
 pub fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
-    let data = t.data();
+    literal_from_slice(t.shape(), t.data())
+}
+
+/// Borrowed-slice variant: builds the input literal straight from a
+/// pooled batch buffer / tensor view, so the serving path never
+/// round-trips through an owned `Tensor` to reach the engine.
+pub fn literal_from_slice(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     // Safety: f32 has no invalid bit patterns as bytes; alignment of u8 is
     // 1; length is exact.  Little-endian layout is asserted at compile
     // time below for portability honesty.
     #[cfg(not(target_endian = "little"))]
-    compile_error!("literal_from_tensor assumes little-endian f32 layout");
+    compile_error!("literal_from_slice assumes little-endian f32 layout");
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
     xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
-        t.shape(),
+        shape,
         bytes,
     )
-    .context("literal_from_tensor")
+    .context("literal_from_slice")
 }
 
 /// literal (f32 array of any rank) -> tensor.

@@ -29,6 +29,9 @@ pub struct InferReply {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Reused reply-line buffer (one warm allocation per client, not one
+    /// per request).
+    replybuf: String,
 }
 
 impl Client {
@@ -39,17 +42,18 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            replybuf: String::new(),
         })
     }
 
     fn roundtrip(&mut self, line: &str) -> Result<Json> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
-        let mut reply = String::new();
-        if self.reader.read_line(&mut reply)? == 0 {
+        self.replybuf.clear();
+        if self.reader.read_line(&mut self.replybuf)? == 0 {
             bail!("server closed connection");
         }
-        Json::parse(&reply).map_err(|e| anyhow::anyhow!("{e}"))
+        Json::parse(&self.replybuf).map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     pub fn ping(&mut self) -> Result<bool> {

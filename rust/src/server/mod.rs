@@ -15,7 +15,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, SubmitError};
-use crate::tensor::image::Image;
+use crate::tensor::image::{Image, INPUT_HW};
+use crate::tensor::{PooledTensor, TensorPool};
 
 use protocol::{ClientMsg, ImageSpec};
 
@@ -100,6 +101,7 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
+    let pool = coord.pool();
     let mut line = String::new();
     loop {
         line.clear();
@@ -117,24 +119,40 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             Ok(ClientMsg::Stats) => protocol::stats_line(&coord.stats()),
             Ok(ClientMsg::Policy) => protocol::policy_line(&coord.policy_snapshot()),
             Ok(ClientMsg::Infer { id, image, slo }) => {
-                match load_image(&image) {
-                    Err(e) => protocol::error_line(id, &format!("image: {e}")),
-                    Ok(tensor) => match coord.submit_with_slo(tensor, slo) {
-                        Err(SubmitError::Overloaded) => {
-                            protocol::error_line_kind(id, "overloaded", "overloaded")
-                        }
-                        Err(SubmitError::Shed {
-                            predicted_ms,
-                            deadline_ms,
-                        }) => protocol::shed_line(id, predicted_ms, deadline_ms),
-                        Err(e) => protocol::error_line(id, &e.to_string()),
-                        Ok(rx) => match rx.recv() {
-                            Ok(mut resp) => {
-                                resp.id = id; // echo client id, not internal id
-                                protocol::response_line(&resp)
+                // Wire-key fast path: a repeat of the same raw image
+                // spec is answered from the response cache before any
+                // pixel is decoded.
+                let wire_key = protocol::wire_key(&image);
+                match wire_key.and_then(|k| coord.cached_response(k)) {
+                    Some(mut resp) => {
+                        resp.id = id;
+                        protocol::response_line(&resp)
+                    }
+                    None => match load_image(&image, &pool) {
+                        Err(e) => protocol::error_line(id, &format!("image: {e}")),
+                        Ok(tensor) => {
+                            match coord.submit_pooled(tensor, slo, wire_key) {
+                                Err(SubmitError::Overloaded) => {
+                                    protocol::error_line_kind(
+                                        id,
+                                        "overloaded",
+                                        "overloaded",
+                                    )
+                                }
+                                Err(SubmitError::Shed {
+                                    predicted_ms,
+                                    deadline_ms,
+                                }) => protocol::shed_line(id, predicted_ms, deadline_ms),
+                                Err(e) => protocol::error_line(id, &e.to_string()),
+                                Ok(rx) => match rx.recv() {
+                                    Ok(mut resp) => {
+                                        resp.id = id; // echo client id, not internal id
+                                        protocol::response_line(&resp)
+                                    }
+                                    Err(_) => protocol::error_line(id, "worker gone"),
+                                },
                             }
-                            Err(_) => protocol::error_line(id, "worker gone"),
-                        },
+                        }
                     },
                 }
             }
@@ -144,13 +162,16 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     }
 }
 
-fn load_image(spec: &ImageSpec) -> Result<crate::tensor::Tensor> {
+/// Decode straight into a pooled lease — steady-state decode allocates
+/// no pixel buffers (the synthetic/ppm byte staging still does; pixels
+/// are the hot part).
+fn load_image(spec: &ImageSpec, pool: &TensorPool) -> Result<PooledTensor> {
     let img = match spec {
         ImageSpec::Synthetic(seed) => Image::synthetic(227, 227, *seed),
         ImageSpec::Ppm(path) => Image::load_ppm(std::path::Path::new(path))?,
     };
-    // (1, H, W, C) -> (H, W, C): the coordinator stacks batches itself.
-    let t = img.to_input();
-    let hw = crate::tensor::image::INPUT_HW;
-    t.reshape(&[hw, hw, 3])
+    let mut buf = pool.lease(INPUT_HW * INPUT_HW * 3);
+    img.to_input_into(&mut buf);
+    // (H, W, C): the coordinator packs batches itself.
+    PooledTensor::new(&[INPUT_HW, INPUT_HW, 3], buf)
 }

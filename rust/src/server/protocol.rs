@@ -56,6 +56,29 @@ pub enum ImageSpec {
     Ppm(String),
 }
 
+/// Pre-decode cache key: a stable hash of the raw image spec, computed
+/// *before* any pixel work so a repeated request can be answered from
+/// the response cache without decoding at all.  Only self-describing
+/// specs are keyed — a synthetic seed fully determines the pixels, but
+/// a ppm path's file can change on disk between requests, so ppm
+/// requests fall through to the post-decode content-hash path.
+///
+/// Cost: a wire-keyed frame occupies *two* LRU slots (content key +
+/// wire alias), so a stream of distinct wire-keyed frames holds about
+/// `cache_capacity / 2` residents.  Size `--cache-capacity` for ~2
+/// entries per distinct frame when wire-keyed traffic dominates.
+pub fn wire_key(spec: &ImageSpec) -> Option<u64> {
+    match spec {
+        ImageSpec::Synthetic(seed) => {
+            let mut bytes = [0u8; 9];
+            bytes[0] = b's'; // domain tag vs. future spec kinds
+            bytes[1..].copy_from_slice(&seed.to_le_bytes());
+            Some(crate::policy::bytes_key(&bytes))
+        }
+        ImageSpec::Ppm(_) => None,
+    }
+}
+
 pub fn parse_request(line: &str) -> Result<ClientMsg> {
     let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
@@ -194,6 +217,13 @@ pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
         .set("shed_predicted", s.shed_predicted.into())
         .set("shed_expired", s.shed_expired.into())
         .set("latency", lat);
+    let mut pool = Json::obj();
+    pool.set("hits", s.pool.hits.into())
+        .set("misses", s.pool.misses.into())
+        .set("returned", s.pool.returned.into())
+        .set("dropped", s.pool.dropped.into())
+        .set("buffers", s.pool.buffers.into());
+    o.set("pool", pool);
     o.to_string()
 }
 
@@ -305,6 +335,17 @@ mod tests {
         assert!(parse_request(r#"{"id":1.5,"image":{"synthetic":1}}"#).is_err());
         // Integer-valued floats are fine (JSON has one number type).
         assert!(parse_request(r#"{"id":7.0,"image":{"synthetic":1}}"#).is_ok());
+    }
+
+    #[test]
+    fn wire_key_only_for_self_describing_specs() {
+        let a = wire_key(&ImageSpec::Synthetic(42));
+        let b = wire_key(&ImageSpec::Synthetic(42));
+        let c = wire_key(&ImageSpec::Synthetic(43));
+        assert!(a.is_some());
+        assert_eq!(a, b, "same seed must key identically");
+        assert_ne!(a, c, "different seeds must not collide");
+        assert_eq!(wire_key(&ImageSpec::Ppm("/tmp/x.ppm".into())), None);
     }
 
     #[test]

@@ -99,10 +99,21 @@ impl Image {
     /// Preprocess to the network input: center-crop to square, nearest-
     /// neighbour resize to 227x227, scale u8 -> [-1, 1] f32, NHWC (N=1).
     pub fn to_input(&self) -> Tensor {
+        let mut data = vec![0.0f32; INPUT_HW * INPUT_HW * 3];
+        self.to_input_into(&mut data);
+        Tensor::new(&[1, INPUT_HW, INPUT_HW, 3], data).expect("input shape")
+    }
+
+    /// Preprocess into a caller-provided buffer — the zero-copy serving
+    /// path hands a pooled lease here so steady-state decode allocates
+    /// nothing.  `out` must hold exactly 227*227*3 elements; every slot
+    /// is overwritten.
+    pub fn to_input_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), INPUT_HW * INPUT_HW * 3, "decode buffer size");
         let side = self.width.min(self.height);
         let x0 = (self.width - side) / 2;
         let y0 = (self.height - side) / 2;
-        let mut data = Vec::with_capacity(INPUT_HW * INPUT_HW * 3);
+        let mut w = 0usize;
         for oy in 0..INPUT_HW {
             let sy = y0 + oy * side / INPUT_HW;
             for ox in 0..INPUT_HW {
@@ -110,11 +121,11 @@ impl Image {
                 let base = (sy * self.width + sx) * 3;
                 for c in 0..3 {
                     let v = self.rgb[base + c] as f32;
-                    data.push(v / 127.5 - 1.0);
+                    out[w] = v / 127.5 - 1.0;
+                    w += 1;
                 }
             }
         }
-        Tensor::new(&[1, INPUT_HW, INPUT_HW, 3], data).expect("input shape")
     }
 }
 

@@ -7,6 +7,11 @@
 //! actually uses, each written to be allocation-conscious.
 
 pub mod image;
+pub mod pool;
+pub mod view;
+
+pub use pool::{Lease, PoolStats, PooledTensor, TensorPool};
+pub use view::TensorView;
 
 use anyhow::{bail, Result};
 
@@ -124,30 +129,21 @@ impl Tensor {
         Ok(out)
     }
 
-    /// Index of the maximum element (argmax over the flat data).
-    pub fn argmax(&self) -> usize {
-        let mut best = 0;
-        let mut bv = f32::NEG_INFINITY;
-        for (i, &v) in self.data.iter().enumerate() {
-            if v > bv {
-                bv = v;
-                best = i;
-            }
-        }
-        best
+    /// Borrow as a [`TensorView`] — the zero-copy handle the serving
+    /// path reads rows/reductions through.
+    pub fn view(&self) -> view::TensorView<'_> {
+        view::TensorView::new(&self.shape, &self.data)
     }
 
-    /// Top-k (index, value) pairs, descending.  k small; O(n·k).
+    /// Index of the maximum element (NaN order defined in [`view`]).
+    pub fn argmax(&self) -> usize {
+        view::argmax(&self.data)
+    }
+
+    /// Top-k (index, value) pairs, descending — bounded min-heap,
+    /// O(n log k) (NaN order defined in [`view`]).
     pub fn topk(&self, k: usize) -> Vec<(usize, f32)> {
-        let mut out: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
-        for (i, &v) in self.data.iter().enumerate() {
-            let pos = out.partition_point(|&(_, ov)| ov >= v);
-            if pos < k {
-                out.insert(pos, (i, v));
-                out.truncate(k);
-            }
-        }
-        out
+        view::topk(&self.data, k)
     }
 
     /// max |a - b| and max relative error vs `other`.

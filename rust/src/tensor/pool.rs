@@ -1,0 +1,473 @@
+//! Tensor arena: size-classed, bounded buffer pool with RAII leases.
+//!
+//! Every request used to heap-allocate its pixels several times between
+//! socket and reply (decode `Vec`, `Tensor::stack`'s batch `Vec`, one
+//! `Vec` per `unstack` row).  The pool turns the steady state into
+//! *reuse*: decode writes into a leased buffer, workers assemble batches
+//! into a leased batch buffer, and every lease returns to its size class
+//! on drop — including panic and error unwinds, because return is `Drop`.
+//!
+//! [`TensorPool`] is a cheap handle (an `Arc` inside); clone it freely
+//! across the coordinator, connection handlers, and workers.
+//!
+//! Invariants (tested in rust/tests/pool_props.rs):
+//! * a dropped lease always returns its buffer to the pool (unless the
+//!   size class is at its retention bound, in which case the buffer is
+//!   freed and counted as `dropped`).  A class's bound is
+//!   `per_class_cap` unless a startup [`TensorPool::prealloc`]
+//!   reservation explicitly raised it (the decode class is reserved at
+//!   queue depth);
+//! * leased buffers always have exactly the requested length;
+//! * the pool is safe under concurrent lease/return from worker threads;
+//! * with pooling disabled (`--pool false`, the ablation mode) every
+//!   lease is a fresh allocation and drops free normally — the serving
+//!   path is identical either way.
+//!
+//! Buffer contents are **unspecified** on lease (stale data from the
+//! previous user): every caller fully overwrites before reading, which
+//! is what lets reuse skip a zeroing pass.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::view::TensorView;
+use super::Tensor;
+
+/// Pool counters for stats/introspection.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Leases served from a pooled buffer (no allocation).
+    pub hits: u64,
+    /// Leases that had to allocate (cold class, exhausted class, or
+    /// pooling disabled).
+    pub misses: u64,
+    /// Buffers accepted back on lease drop.
+    pub returned: u64,
+    /// Buffers freed on drop because their class was at the bound.
+    pub dropped: u64,
+    /// Buffers currently shelved across all classes.
+    pub buffers: usize,
+}
+
+/// One size class: its shelved buffers and its retention bound.  The
+/// bound starts at the pool-wide `per_class_cap` and can be raised by
+/// an explicit [`TensorPool::prealloc`] reservation (e.g. the decode
+/// class is reserved at queue depth so a full admission queue of
+/// in-flight leases still returns into the arena instead of churning
+/// the allocator).
+struct Shelf {
+    cap: usize,
+    bufs: Vec<Vec<f32>>,
+}
+
+/// Size class table: element count -> shelf.
+struct Shelves {
+    classes: HashMap<usize, Shelf>,
+}
+
+/// Hard bound on the number of size classes the pool will retain.  The
+/// serving path uses a handful (one input size + one per compiled batch
+/// size); `adopt` can see arbitrary caller sizes, and without this cap
+/// a stream of odd-sized buffers would grow the class table — and the
+/// retained memory — without bound.  Returns into unseen classes beyond
+/// the cap are freed and counted as `dropped`.
+const MAX_CLASSES: usize = 64;
+
+struct PoolInner {
+    shelves: Mutex<Shelves>,
+    per_class_cap: usize,
+    enabled: bool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returned: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Thread-safe buffer pool handle (clone = share).
+#[derive(Clone)]
+pub struct TensorPool {
+    inner: Arc<PoolInner>,
+}
+
+impl fmt::Debug for TensorPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TensorPool")
+            .field("enabled", &self.inner.enabled)
+            .field("per_class_cap", &self.inner.per_class_cap)
+            .field("shelved", &self.shelved())
+            .finish()
+    }
+}
+
+impl TensorPool {
+    /// Enabled pool retaining up to `per_class_cap` buffers per size
+    /// class.
+    pub fn new(per_class_cap: usize) -> TensorPool {
+        Self::with_mode(true, per_class_cap)
+    }
+
+    /// `enabled = false` is the ablation mode: every lease allocates and
+    /// every drop frees, with identical call-site code.
+    pub fn with_mode(enabled: bool, per_class_cap: usize) -> TensorPool {
+        TensorPool {
+            inner: Arc::new(PoolInner {
+                shelves: Mutex::new(Shelves {
+                    classes: HashMap::new(),
+                }),
+                per_class_cap: per_class_cap.max(1),
+                enabled,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                returned: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A pool that never retains anything (convenience for tests/tools).
+    pub fn disabled() -> TensorPool {
+        Self::with_mode(false, 1)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled
+    }
+
+    /// Lease a buffer of exactly `n` elements.  Contents are unspecified
+    /// — the caller must fully overwrite before reading.
+    pub fn lease(&self, n: usize) -> Lease {
+        if self.inner.enabled {
+            let reused = {
+                let mut g = self.inner.shelves.lock().unwrap();
+                g.classes.get_mut(&n).and_then(|shelf| shelf.bufs.pop())
+            };
+            if let Some(buf) = reused {
+                debug_assert_eq!(buf.len(), n);
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                return Lease {
+                    buf,
+                    pool: Some(self.clone()),
+                };
+            }
+        }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        Lease {
+            buf: vec![0.0; n],
+            pool: if self.inner.enabled {
+                Some(self.clone())
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Wrap an existing buffer as a lease so it joins the pool on drop
+    /// (recycles tensors handed in by library callers).
+    pub fn adopt(&self, buf: Vec<f32>) -> Lease {
+        Lease {
+            buf,
+            pool: if self.inner.enabled {
+                Some(self.clone())
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Reserve `count` buffers of `n` elements ahead of time (startup,
+    /// so the steady state never allocates).  An explicit reservation
+    /// raises this class's retention bound to `count` when that exceeds
+    /// the pool-wide `per_class_cap` — e.g. the decode class is
+    /// reserved at queue depth, otherwise a full admission queue of
+    /// in-flight leases would overflow the default bound and churn the
+    /// allocator on exactly the load pooling targets.
+    pub fn prealloc(&self, n: usize, count: usize) {
+        if !self.inner.enabled || n == 0 {
+            return;
+        }
+        let mut g = self.inner.shelves.lock().unwrap();
+        let default_cap = self.inner.per_class_cap;
+        let shelf = g.classes.entry(n).or_insert_with(|| Shelf {
+            cap: default_cap,
+            bufs: Vec::new(),
+        });
+        shelf.cap = shelf.cap.max(count);
+        while shelf.bufs.len() < count {
+            shelf.bufs.push(vec![0.0; n]);
+        }
+    }
+
+    /// Return a buffer to its size class (drop path; never panics even
+    /// if the shelf mutex was poisoned by an unrelated panic).
+    fn give(&self, buf: Vec<f32>) {
+        if !self.inner.enabled || buf.is_empty() {
+            return;
+        }
+        let n = buf.len();
+        let Ok(mut g) = self.inner.shelves.lock() else {
+            return;
+        };
+        if !g.classes.contains_key(&n) && g.classes.len() >= MAX_CLASSES {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let default_cap = self.inner.per_class_cap;
+        let shelf = g.classes.entry(n).or_insert_with(|| Shelf {
+            cap: default_cap,
+            bufs: Vec::new(),
+        });
+        if shelf.bufs.len() < shelf.cap {
+            shelf.bufs.push(buf);
+            self.inner.returned.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Buffers currently shelved across all classes.
+    pub fn shelved(&self) -> usize {
+        self.inner
+            .shelves
+            .lock()
+            .map(|g| g.classes.values().map(|s| s.bufs.len()).sum())
+            .unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            returned: self.inner.returned.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+            buffers: self.shelved(),
+        }
+    }
+}
+
+/// RAII handle on a pooled buffer: derefs to `[f32]`, returns the buffer
+/// to its pool on drop (or frees it when pooling is disabled).
+pub struct Lease {
+    buf: Vec<f32>,
+    pool: Option<TensorPool>,
+}
+
+impl fmt::Debug for Lease {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Lease")
+            .field("len", &self.buf.len())
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl Lease {
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Detach from the pool: the buffer becomes a plain `Vec` and will
+    /// not be returned.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        self.pool = None;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Deref for Lease {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for Lease {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.give(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+/// A shape on top of a leased buffer — the pooled request/batch carrier.
+/// API mirrors `Tensor` for the methods the serving path uses.
+#[derive(Debug)]
+pub struct PooledTensor {
+    shape: Vec<usize>,
+    buf: Lease,
+}
+
+impl PooledTensor {
+    pub fn new(shape: &[usize], buf: Lease) -> Result<PooledTensor> {
+        let n: usize = shape.iter().product();
+        if n != buf.len() {
+            bail!(
+                "shape {:?} wants {} elems, lease has {}",
+                shape,
+                n,
+                buf.len()
+            );
+        }
+        Ok(PooledTensor {
+            shape: shape.to_vec(),
+            buf,
+        })
+    }
+
+    /// Move an owned tensor into the pool's custody: no copy now, and
+    /// its buffer is recycled once the request completes.
+    pub fn from_tensor(t: Tensor, pool: &TensorPool) -> PooledTensor {
+        let shape = t.shape().to_vec();
+        let buf = pool.adopt(t.into_data());
+        PooledTensor { shape, buf }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.buf
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView::new(&self.shape, &self.buf)
+    }
+
+    /// Copy out to an owned tensor (compat shim for non-hot-path code).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(&self.shape, self.buf.to_vec()).expect("pooled shape")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_returns_on_drop_and_is_reused() {
+        let pool = TensorPool::new(4);
+        {
+            let mut l = pool.lease(8);
+            l[0] = 7.0;
+            assert_eq!(l.len(), 8);
+        }
+        let s = pool.stats();
+        assert_eq!((s.misses, s.returned, s.buffers), (1, 1, 1));
+        // Same class leases the shelved buffer back (stale contents).
+        let l = pool.lease(8);
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(l.len(), 8);
+    }
+
+    #[test]
+    fn class_bound_is_hard() {
+        let pool = TensorPool::new(2);
+        let leases: Vec<Lease> = (0..5).map(|_| pool.lease(4)).collect();
+        drop(leases);
+        let s = pool.stats();
+        assert_eq!(s.buffers, 2);
+        assert_eq!(s.returned, 2);
+        assert_eq!(s.dropped, 3);
+    }
+
+    #[test]
+    fn class_count_is_bounded() {
+        let pool = TensorPool::new(2);
+        for n in 1..=(MAX_CLASSES + 8) {
+            drop(pool.lease(n));
+        }
+        let s = pool.stats();
+        assert_eq!(s.buffers, MAX_CLASSES);
+        assert_eq!(s.dropped as usize, 8);
+        // Established classes still accept returns.
+        drop(pool.lease(1));
+        assert_eq!(pool.stats().returned as usize, MAX_CLASSES + 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_retains() {
+        let pool = TensorPool::disabled();
+        drop(pool.lease(16));
+        let s = pool.stats();
+        assert_eq!((s.buffers, s.returned, s.misses), (0, 0, 1));
+        assert!(!pool.enabled());
+    }
+
+    #[test]
+    fn prealloc_reserves_and_raises_class_bound() {
+        let pool = TensorPool::new(3);
+        pool.prealloc(10, 8);
+        assert_eq!(pool.shelved(), 8, "reservation may exceed default cap");
+        // Prealloc'd buffers serve as hits, and the raised bound holds
+        // a full reservation's worth of returns.
+        let leases: Vec<Lease> = (0..8).map(|_| pool.lease(10)).collect();
+        assert_eq!(pool.stats().hits, 8);
+        drop(leases);
+        let s = pool.stats();
+        assert_eq!((s.returned, s.dropped, s.buffers), (8, 0, 8));
+        // Un-reserved classes still bound at the pool default.
+        let extra: Vec<Lease> = (0..5).map(|_| pool.lease(20)).collect();
+        drop(extra);
+        assert_eq!(pool.stats().dropped, 2);
+    }
+
+    #[test]
+    fn into_vec_detaches() {
+        let pool = TensorPool::new(4);
+        let v = pool.lease(6).into_vec();
+        assert_eq!(v.len(), 6);
+        assert_eq!(pool.stats().returned, 0);
+        assert_eq!(pool.shelved(), 0);
+    }
+
+    #[test]
+    fn pooled_tensor_checks_shape_and_views() {
+        let pool = TensorPool::new(4);
+        assert!(PooledTensor::new(&[2, 4], pool.lease(7)).is_err());
+        let mut pt = PooledTensor::new(&[2, 3], pool.lease(6)).unwrap();
+        for (i, v) in pt.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(pt.view().row(1).data(), &[3.0, 4.0, 5.0]);
+        assert_eq!(pt.to_tensor().shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn from_tensor_recycles_caller_buffers() {
+        let pool = TensorPool::new(4);
+        let t = Tensor::random(&[3, 2], 1);
+        let want = t.data().to_vec();
+        let pt = PooledTensor::from_tensor(t, &pool);
+        assert_eq!(pt.data(), &want[..]);
+        drop(pt);
+        assert_eq!(pool.stats().returned, 1);
+        assert_eq!(pool.stats().buffers, 1);
+    }
+}

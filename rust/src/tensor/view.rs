@@ -1,0 +1,278 @@
+//! Borrowed tensor views — the zero-copy half of the hot path.
+//!
+//! A [`TensorView`] is a shape + `&[f32]` pair: batch rows, reply
+//! extraction, `argmax`/`topk`, and cache-key hashing all operate on
+//! borrowed data instead of cloning a `Vec` per request (the old
+//! `unstack` path allocated one `Vec<f32>` per batch member just to
+//! read 5 numbers out of it).
+//!
+//! The reductions live here as free functions over `&[f32]` so `Tensor`,
+//! `PooledTensor`, and `TensorView` share one implementation — and one
+//! explicitly defined NaN order:
+//!
+//! * NaN sorts **below every number**: a NaN score never wins `argmax`
+//!   and only appears in `topk` when fewer than `k` non-NaN entries
+//!   exist;
+//! * equal values tie-break toward the **lower index** (first occurrence
+//!   wins, matching the historical behaviour of both functions).
+
+use std::cmp::Ordering;
+
+use super::Tensor;
+
+/// Borrowed row-major f32 tensor (shape + data slices).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    shape: &'a [usize],
+    data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    /// `shape` must describe exactly `data.len()` elements.
+    pub fn new(shape: &'a [usize], data: &'a [f32]) -> TensorView<'a> {
+        debug_assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "view shape {shape:?} vs {} elems",
+            data.len()
+        );
+        TensorView { shape, data }
+    }
+
+    pub fn shape(&self) -> &'a [usize] {
+        self.shape
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Leading-dimension size (0 for a scalar view).
+    pub fn num_rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    /// Row `i` of a `(N, *S)` view as a borrowed `S`-shaped view — the
+    /// zero-copy replacement for `Tensor::unstack`.
+    pub fn row(&self, i: usize) -> TensorView<'a> {
+        assert!(!self.shape.is_empty(), "row() on scalar view");
+        let rest = &self.shape[1..];
+        let per: usize = rest.iter().product();
+        TensorView {
+            shape: rest,
+            data: &self.data[i * per..(i + 1) * per],
+        }
+    }
+
+    /// Copy out to an owned tensor (compat shim; the hot path never
+    /// calls this).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(self.shape, self.data.to_vec()).expect("view shape")
+    }
+
+    /// Index of the maximum element (see module docs for NaN order).
+    pub fn argmax(&self) -> usize {
+        argmax(self.data)
+    }
+
+    /// Top-k `(index, value)` pairs, descending.
+    pub fn topk(&self, k: usize) -> Vec<(usize, f32)> {
+        topk(self.data, k)
+    }
+}
+
+/// Total descending order on `(index, value)`: higher value first, NaN
+/// below every number, equal values broken by lower index.  Returns
+/// whether `a` outranks `b`.
+fn outranks(a: (usize, f32), b: (usize, f32)) -> bool {
+    match cmp_val(a.1, b.1) {
+        Ordering::Greater => true,
+        Ordering::Less => false,
+        Ordering::Equal => a.0 < b.0,
+    }
+}
+
+/// Value comparison with NaN pinned below -inf (NaN == NaN).
+fn cmp_val(x: f32, y: f32) -> Ordering {
+    match (x.is_nan(), y.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => x.partial_cmp(&y).expect("non-NaN compare"),
+    }
+}
+
+/// Index of the maximum element; 0 for an empty or all-NaN slice
+/// (matching the old `Tensor::argmax`).
+pub fn argmax(data: &[f32]) -> usize {
+    let mut best = 0usize;
+    for i in 1..data.len() {
+        if outranks((i, data[i]), (best, data[best])) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-k `(index, value)` pairs in descending order — O(n log k) via a
+/// bounded min-heap (replaces the old O(n·k) sorted-insert).  The heap
+/// root is always the *worst* kept entry, so each new element costs one
+/// comparison against it and only heap work when it displaces something.
+pub fn topk(data: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut out = Vec::with_capacity(k.min(data.len()));
+    topk_into(data, k, &mut out);
+    out
+}
+
+/// [`topk`] writing into a caller-provided buffer (cleared first) — the
+/// zero-allocation variant for hot loops that reuse a scratch vec.
+pub fn topk_into(data: &[f32], k: usize, out: &mut Vec<(usize, f32)>) {
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    for (i, &v) in data.iter().enumerate() {
+        let e = (i, v);
+        if out.len() < k {
+            out.push(e);
+            sift_up(out, out.len() - 1);
+        } else if outranks(e, out[0]) {
+            out[0] = e;
+            sift_down(out, 0);
+        }
+    }
+    out.sort_by(|&a, &b| {
+        if outranks(a, b) {
+            Ordering::Less
+        } else if outranks(b, a) {
+            Ordering::Greater
+        } else {
+            Ordering::Equal
+        }
+    });
+}
+
+/// Restore the min-heap (root = worst under `outranks`) after a push.
+fn sift_up(h: &mut [(usize, f32)], mut i: usize) {
+    while i > 0 {
+        let p = (i - 1) / 2;
+        if outranks(h[p], h[i]) {
+            h.swap(i, p);
+            i = p;
+        } else {
+            break;
+        }
+    }
+}
+
+/// Restore the min-heap after replacing the root.
+fn sift_down(h: &mut [(usize, f32)], mut i: usize) {
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut worst = i;
+        if l < h.len() && outranks(h[worst], h[l]) {
+            worst = l;
+        }
+        if r < h.len() && outranks(h[worst], h[r]) {
+            worst = r;
+        }
+        if worst == i {
+            break;
+        }
+        h.swap(i, worst);
+        i = worst;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_rows_match_unstack() {
+        let t = Tensor::random(&[3, 4, 5], 11);
+        let rows = t.unstack().unwrap();
+        let v = t.view();
+        assert_eq!(v.num_rows(), 3);
+        for (i, owned) in rows.iter().enumerate() {
+            let row = v.row(i);
+            assert_eq!(row.shape(), owned.shape());
+            assert_eq!(row.data(), owned.data());
+        }
+    }
+
+    #[test]
+    fn view_reductions_match_tensor() {
+        let t = Tensor::random(&[64], 3);
+        assert_eq!(t.view().argmax(), t.argmax());
+        assert_eq!(t.view().topk(7), t.topk(7));
+    }
+
+    #[test]
+    fn topk_matches_reference_sort() {
+        let t = Tensor::random(&[200], 5);
+        for k in [0, 1, 5, 199, 200, 300] {
+            let got = topk(t.data(), k);
+            let mut want: Vec<(usize, f32)> =
+                t.data().iter().copied().enumerate().collect();
+            want.sort_by(|&a, &b| {
+                cmp_val(b.1, a.1).then(a.0.cmp(&b.0))
+            });
+            want.truncate(k);
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn nan_never_wins() {
+        let data = [f32::NAN, 0.5, f32::NAN, 0.9, 0.1];
+        assert_eq!(argmax(&data), 3);
+        let tk = topk(&data, 3);
+        assert_eq!(tk[0], (3, 0.9));
+        assert_eq!(tk[1], (1, 0.5));
+        assert_eq!(tk[2], (4, 0.1));
+        // NaNs only surface when there aren't k real numbers.
+        let tk5 = topk(&data, 5);
+        assert_eq!(tk5.len(), 5);
+        assert!(tk5[3].1.is_nan() && tk5[4].1.is_nan());
+        assert_eq!((tk5[3].0, tk5[4].0), (0, 2), "NaN ties break by index");
+    }
+
+    #[test]
+    fn all_nan_argmax_is_zero() {
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn ties_prefer_lower_index() {
+        let data = [0.3, 0.9, 0.9, 0.3];
+        assert_eq!(argmax(&data), 1);
+        assert_eq!(topk(&data, 4), vec![(1, 0.9), (2, 0.9), (0, 0.3), (3, 0.3)]);
+    }
+
+    #[test]
+    fn topk_into_reuses_scratch() {
+        let mut scratch = Vec::with_capacity(4);
+        topk_into(&[3.0, 1.0, 2.0], 2, &mut scratch);
+        assert_eq!(scratch, vec![(0, 3.0), (2, 2.0)]);
+        let cap = scratch.capacity();
+        topk_into(&[5.0, 9.0], 2, &mut scratch);
+        assert_eq!(scratch, vec![(1, 9.0), (0, 5.0)]);
+        assert_eq!(scratch.capacity(), cap, "scratch must not reallocate");
+    }
+
+    #[test]
+    fn topk_zero_and_oversized_k() {
+        assert!(topk(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(topk(&[1.0, 2.0], 9), vec![(1, 2.0), (0, 1.0)]);
+    }
+}

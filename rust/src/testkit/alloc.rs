@@ -1,0 +1,92 @@
+//! Counting global-allocator shim for allocation ablations.
+//!
+//! A thin wrapper over the system allocator that counts allocation
+//! events and bytes through two relaxed atomics.  Benches that want to
+//! measure allocations install it per-binary:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc::new();
+//! ...
+//! let before = CountingAlloc::snapshot();
+//! hot_path();
+//! let (allocs, bytes) = CountingAlloc::since(before);
+//! ```
+//!
+//! Deallocations are uncounted (free is cheap and symmetric); `realloc`
+//! counts as one event with the *new* size, which slightly overstates
+//! growth-heavy code — fine for an ablation that compares two modes
+//! under the same accounting.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Counting wrapper over [`std::alloc::System`].
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc
+    }
+
+    /// Cumulative (allocation events, bytes requested) so far.
+    pub fn snapshot() -> (u64, u64) {
+        (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
+    }
+
+    /// Delta since an earlier [`snapshot`](CountingAlloc::snapshot).
+    pub fn since(before: (u64, u64)) -> (u64, u64) {
+        let (a, b) = Self::snapshot();
+        (a.saturating_sub(before.0), b.saturating_sub(before.1))
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        CountingAlloc::new()
+    }
+}
+
+// Safety: delegates every operation to `System`; the counters are
+// relaxed atomics with no allocation of their own.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The allocator isn't installed in lib tests (that would tax every
+    // test); counters just start at zero and snapshots are monotonic.
+    #[test]
+    fn snapshots_are_monotonic() {
+        let a = CountingAlloc::snapshot();
+        let b = CountingAlloc::snapshot();
+        assert!(b.0 >= a.0 && b.1 >= a.1);
+        assert_eq!(CountingAlloc::since(b).0, CountingAlloc::snapshot().0 - b.0);
+    }
+}

@@ -1,5 +1,7 @@
-//! Test substrate: deterministic PRNG + mini property-testing framework.
+//! Test substrate: deterministic PRNG, mini property-testing framework,
+//! and a counting-allocator shim for allocation ablations.
 //! (rand/proptest are not dependencies — DESIGN.md §Substitutions.)
 
+pub mod alloc;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,274 @@
+//! Property tests for the tensor arena (DESIGN.md §"Memory ownership on
+//! the hot path"): leases always come home (including across panics),
+//! the per-class bound is hard, the pool survives concurrent worker
+//! traffic, and the zero-copy view path is observationally identical to
+//! the old owned `unstack` path.
+
+use std::panic::AssertUnwindSafe;
+
+use zuluko::tensor::{view, PooledTensor, Tensor, TensorPool};
+use zuluko::testkit::prop::{prop_check, Gen, GenPair, GenUsize};
+use zuluko::testkit::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Lease lifecycle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_lease_returns_on_drop() {
+    prop_check(
+        100,
+        31,
+        GenPair(GenUsize { lo: 1, hi: 8 }, GenUsize { lo: 1, hi: 20 }),
+        |(cap, n)| {
+            let pool = TensorPool::new(*cap);
+            for _ in 0..*n {
+                let _l = pool.lease(16);
+            }
+            let s = pool.stats();
+            // Sequential lease/drop: after the first miss every lease is
+            // a hit on the same returned buffer.
+            if s.returned != *n as u64 {
+                return Err(format!("returned {} of {n} leases", s.returned));
+            }
+            if s.buffers != 1 {
+                return Err(format!("expected 1 shelved buffer, got {}", s.buffers));
+            }
+            if s.hits + s.misses != *n as u64 {
+                return Err("lease accounting mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lease_returns_to_pool_across_panic() {
+    let pool = TensorPool::new(4);
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let _lease = pool.lease(32);
+        panic!("request handler blew up");
+    }));
+    assert!(result.is_err(), "panic must propagate");
+    let s = pool.stats();
+    assert_eq!(s.returned, 1, "unwind must return the lease");
+    assert_eq!(s.buffers, 1);
+    // And the recovered buffer is immediately reusable.
+    let l = pool.lease(32);
+    assert_eq!(l.len(), 32);
+    assert_eq!(pool.stats().hits, 1);
+}
+
+#[test]
+fn pooled_tensor_returns_its_buffer_on_error_paths() {
+    let pool = TensorPool::new(4);
+    // Shape mismatch: PooledTensor::new fails, but the lease it consumed
+    // still comes home via Drop.
+    assert!(PooledTensor::new(&[3, 3], pool.lease(8)).is_err());
+    assert_eq!(pool.stats().returned, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_class_bound_is_hard_under_random_traffic() {
+    struct GenTraffic;
+    impl Gen for GenTraffic {
+        // (cap, ops): op = (size_class_selector, hold_or_drop)
+        type Value = (usize, Vec<usize>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let cap = rng.range(1, 6);
+            let n = rng.range(0, 60);
+            (cap, (0..n).map(|_| rng.below(6)).collect())
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out = Vec::new();
+            if !v.1.is_empty() {
+                out.push((v.0, v.1[..v.1.len() / 2].to_vec()));
+            }
+            if v.0 > 1 {
+                out.push((v.0 - 1, v.1.clone()));
+            }
+            out
+        }
+    }
+
+    const CLASSES: [usize; 3] = [8, 64, 256];
+    prop_check(150, 37, GenTraffic, |(cap, ops)| {
+        let pool = TensorPool::new(*cap);
+        let mut held = Vec::new();
+        for &op in ops {
+            if op < CLASSES.len() {
+                held.push(pool.lease(CLASSES[op]));
+            } else if !held.is_empty() {
+                held.remove(held.len() / 2);
+            }
+        }
+        drop(held);
+        let s = pool.stats();
+        let bound = cap * CLASSES.len();
+        if s.buffers > bound {
+            return Err(format!("{} shelved > bound {bound}", s.buffers));
+        }
+        if s.returned + s.dropped != s.hits + s.misses {
+            return Err("every lease must be returned or dropped".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Concurrency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_lease_return_is_safe_and_bounded() {
+    let pool = TensorPool::new(4);
+    let classes = [128usize, 512, 2048];
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for i in 0..300 {
+                    let n = classes[rng.below(classes.len())];
+                    let mut l = pool.lease(n);
+                    // Touch the buffer like a real decode would.
+                    l[0] = i as f32;
+                    l[n - 1] = t as f32;
+                    assert_eq!(l.len(), n);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = pool.stats();
+    assert_eq!(s.hits + s.misses, 1200);
+    assert!(
+        s.buffers <= 4 * classes.len(),
+        "shelved {} buffers above bound",
+        s.buffers
+    );
+    assert_eq!(s.returned + s.dropped, 1200);
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy views == owned unstack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn view_rows_equal_owned_unstack() {
+    prop_check(
+        100,
+        41,
+        GenPair(GenUsize { lo: 1, hi: 6 }, GenUsize { lo: 1, hi: 40 }),
+        |(rows, per)| {
+            let t = Tensor::random(&[*rows, *per], (*rows * 1000 + *per) as u64);
+            let owned = t.unstack().map_err(|e| e.to_string())?;
+            let v = t.view();
+            if v.num_rows() != *rows {
+                return Err("num_rows mismatch".into());
+            }
+            for (i, o) in owned.iter().enumerate() {
+                let row = v.row(i);
+                if row.shape() != o.shape() || row.data() != o.data() {
+                    return Err(format!("row {i} differs from owned unstack"));
+                }
+                if row.argmax() != o.argmax() || row.topk(5) != o.topk(5) {
+                    return Err(format!("row {i} reductions differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pooled_batch_assembly_matches_tensor_stack() {
+    // The worker's in-place batching (rows copied into a leased batch
+    // buffer) must produce exactly the bytes Tensor::stack used to.
+    let pool = TensorPool::new(4);
+    let imgs: Vec<Tensor> = (0..3).map(|i| Tensor::random(&[4, 5], i)).collect();
+    let refs: Vec<&Tensor> = imgs.iter().collect();
+    let stacked = Tensor::stack(&refs).unwrap();
+
+    let per = imgs[0].len();
+    let mut bbuf = pool.lease(3 * per);
+    for (slot, img) in imgs.iter().enumerate() {
+        bbuf[slot * per..(slot + 1) * per].copy_from_slice(img.data());
+    }
+    assert_eq!(&bbuf[..], stacked.data());
+
+    let bshape = [3usize, 4, 5];
+    let v = view::TensorView::new(&bshape, &bbuf);
+    for i in 0..3 {
+        assert_eq!(v.row(i).data(), imgs[i].data());
+    }
+}
+
+#[test]
+fn topk_reference_equivalence_with_nans() {
+    struct GenScores;
+    impl Gen for GenScores {
+        type Value = (Vec<usize>, usize); // (value codes, k)
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let n = rng.range(0, 50);
+            // Small code space forces ties; code 7 becomes NaN.
+            ((0..n).map(|_| rng.below(8)).collect(), rng.range(0, 12))
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out = Vec::new();
+            if !v.0.is_empty() {
+                out.push((v.0[..v.0.len() / 2].to_vec(), v.1));
+            }
+            if v.1 > 0 {
+                out.push((v.0.clone(), v.1 - 1));
+            }
+            out
+        }
+    }
+
+    prop_check(300, 43, GenScores, |(codes, k)| {
+        let data: Vec<f32> = codes
+            .iter()
+            .map(|&c| if c == 7 { f32::NAN } else { c as f32 })
+            .collect();
+        let got = view::topk(&data, *k);
+        // Reference: total order (value desc, NaN last, index asc).
+        let mut want: Vec<(usize, f32)> = data.iter().copied().enumerate().collect();
+        want.sort_by(|&(ai, av), &(bi, bv)| {
+            let an = av.is_nan();
+            let bn = bv.is_nan();
+            match (an, bn) {
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (true, true) => ai.cmp(&bi),
+                (false, false) => {
+                    bv.partial_cmp(&av).unwrap().then(ai.cmp(&bi))
+                }
+            }
+        });
+        want.truncate(*k);
+        // NaN != NaN, so compare via bits.
+        if got.len() != want.len() {
+            return Err(format!("len {} vs {}", got.len(), want.len()));
+        }
+        for (g, w) in got.iter().zip(&want) {
+            if g.0 != w.0 || g.1.to_bits() != w.1.to_bits() {
+                return Err(format!("got {got:?} want {want:?}"));
+            }
+        }
+        // And argmax agrees with topk(1) when there is any entry.
+        if !data.is_empty() {
+            let top1 = view::topk(&data, 1)[0].0;
+            if view::argmax(&data) != top1 {
+                return Err("argmax disagrees with topk(1)".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,7 +1,8 @@
 # Build-time entry points.  Python runs once here (L2 AOT lowering);
 # it never touches the Rust request path.
 
-.PHONY: artifacts artifacts-quick test-python test-rust bench-json bench-smoke
+.PHONY: artifacts artifacts-quick test-python test-rust bench-json \
+        bench-smoke bench-baseline bench-gate
 
 # Lower every engine variant to HLO artifacts + manifest + weights.
 artifacts:
@@ -18,12 +19,26 @@ test-rust:
 	cd rust && cargo test -q
 
 # Perf trajectory: run the simulation benches (no artifacts needed) and
-# emit BENCH_3.json (allocs/request, bytes/request, throughput, p50/p99).
+# emit $(BENCH_OUT) (allocs/request, bytes/request, throughput, p50/p99).
+# Parameterized so each PR's trajectory file is explicit — the old
+# hardcoded name silently clobbered earlier trajectories.
+BENCH_OUT ?= BENCH_4.json
 bench-json:
-	cd rust && cargo bench --bench hot_path_alloc -- --json ../BENCH_3.json
+	cd rust && cargo bench --bench hot_path_alloc -- --json ../$(BENCH_OUT)
 	cd rust && cargo bench --bench policy_slo -- --quick
 
 # One-iteration smoke of the simulation benches (CI).
 bench-smoke:
 	cd rust && cargo bench --bench hot_path_alloc -- --quick
 	cd rust && cargo bench --bench policy_slo -- --quick
+
+# Seed/refresh the committed perf baseline (run on a quiet machine).
+bench-baseline:
+	$(MAKE) bench-json BENCH_OUT=tools/bench_baseline.json
+
+# CI perf-regression gate: fail if the current trajectory regresses
+# >20% vs the committed baseline (no-op with a notice until a baseline
+# is committed — see tools/bench_gate.rs).
+bench-gate:
+	cd rust && cargo run --release --bin bench_gate -- \
+		../tools/bench_baseline.json ../$(BENCH_OUT)

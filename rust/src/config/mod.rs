@@ -64,6 +64,91 @@ impl Default for PoolConfig {
     }
 }
 
+/// Multi-model registry knobs (DESIGN.md §8).
+///
+/// Empty `models` means single-model mode: one model named
+/// [`RegistryConfig::SINGLE_MODEL`] served from `Config::artifacts`
+/// (full backward compatibility — requests without a `model` field
+/// behave exactly as before the registry existed).
+#[derive(Debug, Clone, Default)]
+pub struct RegistryConfig {
+    /// Registered models in declaration order: (name, artifacts dir).
+    pub models: Vec<(String, PathBuf)>,
+    /// Which model serves requests that carry no `model` field.
+    /// `None` is only valid for 0–1 registered models (validate()
+    /// refuses to guess among several: JSON sources don't preserve
+    /// declaration order, so "first" would mean "alphabetical").
+    pub default_model: Option<String>,
+    /// Build + warm every model's engine pools at startup instead of
+    /// lazily on first request (trades startup time for first-request
+    /// latency).
+    pub preload: bool,
+}
+
+impl RegistryConfig {
+    /// Name of the implicit model in single-model mode.
+    pub const SINGLE_MODEL: &'static str = "default";
+
+    /// Register or replace a model (CLI `--model name=path` overrides a
+    /// models.json entry of the same name).
+    pub fn upsert(&mut self, name: &str, path: PathBuf) {
+        match self.models.iter_mut().find(|(n, _)| n == name) {
+            Some(slot) => slot.1 = path,
+            None => self.models.push((name.to_string(), path)),
+        }
+    }
+
+    /// The effective default model name.
+    pub fn effective_default(&self) -> &str {
+        if let Some(d) = &self.default_model {
+            return d;
+        }
+        self.models
+            .first()
+            .map(|(n, _)| n.as_str())
+            .unwrap_or(Self::SINGLE_MODEL)
+    }
+
+    /// Load a `models.json` index:
+    /// `{"default": "name", "preload": true, "models": {"name": "path"}}`.
+    /// Relative paths resolve against the index file's directory.
+    pub fn load_index(path: &Path) -> Result<RegistryConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading models index {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let base = path.parent().unwrap_or(Path::new("."));
+        let mut reg = RegistryConfig::default();
+        let models = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "models index {} needs a \"models\" object of name -> path",
+                    path.display()
+                )
+            })?;
+        for (name, v) in models {
+            let p = v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("model '{name}': path must be a string")
+            })?;
+            let p = Path::new(p);
+            let abs = if p.is_absolute() {
+                p.to_path_buf()
+            } else {
+                base.join(p)
+            };
+            reg.upsert(name, abs);
+        }
+        if let Some(d) = j.get("default").and_then(|v| v.as_str()) {
+            reg.default_model = Some(d.to_string());
+        }
+        if let Some(p) = j.get("preload").and_then(|v| v.as_bool()) {
+            reg.preload = p;
+        }
+        Ok(reg)
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -88,6 +173,8 @@ pub struct Config {
     pub policy: PolicyConfig,
     /// Hot-path buffer pool knobs.
     pub pool: PoolConfig,
+    /// Multi-model registry knobs.
+    pub registry: RegistryConfig,
 }
 
 impl Default for Config {
@@ -103,6 +190,7 @@ impl Default for Config {
             log_level: crate::util::log::INFO,
             policy: PolicyConfig::default(),
             pool: PoolConfig::default(),
+            registry: RegistryConfig::default(),
         }
     }
 }
@@ -170,6 +258,24 @@ impl Config {
                 self.pool.per_class_cap = v;
             }
         }
+        // Registry knobs live under a nested "registry" object with the
+        // same shape as a models.json index.
+        if let Some(r) = j.get("registry") {
+            if let Some(models) = r.get("models").and_then(|m| m.as_obj()) {
+                for (name, v) in models {
+                    match v.as_str() {
+                        Some(p) => self.registry.upsert(name, PathBuf::from(p)),
+                        None => bail!("registry model '{name}': path must be a string"),
+                    }
+                }
+            }
+            if let Some(d) = r.get("default").and_then(|v| v.as_str()) {
+                self.registry.default_model = Some(d.to_string());
+            }
+            if let Some(p) = r.get("preload").and_then(|v| v.as_bool()) {
+                self.registry.preload = p;
+            }
+        }
         Ok(())
     }
 
@@ -229,6 +335,35 @@ impl Config {
         self.pool.per_class_cap = a
             .get_usize("pool-cap", self.pool.per_class_cap)
             .map_err(anyhow::Error::msg)?;
+        // Registry: `--models index.json` loads a whole index, then
+        // repeated `--model name=path` flags add/override entries.
+        if let Some(p) = a.get("models") {
+            let idx = RegistryConfig::load_index(Path::new(p))?;
+            for (name, path) in idx.models {
+                self.registry.upsert(&name, path);
+            }
+            if idx.default_model.is_some() {
+                self.registry.default_model = idx.default_model;
+            }
+            if idx.preload {
+                self.registry.preload = true;
+            }
+        }
+        for spec in a.get_all("model") {
+            let (name, path) = spec.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--model expects name=path, got '{spec}'")
+            })?;
+            if name.is_empty() || path.is_empty() {
+                bail!("--model expects name=path, got '{spec}'");
+            }
+            self.registry.upsert(name, PathBuf::from(path));
+        }
+        if let Some(d) = a.get("default-model") {
+            self.registry.default_model = Some(d.to_string());
+        }
+        if a.get("preload-models").is_some() {
+            self.registry.preload = a.get_bool("preload-models");
+        }
         Ok(())
     }
 
@@ -283,6 +418,39 @@ impl Config {
                 );
             }
         }
+        // Registry: names must be non-empty and the default must exist.
+        for (name, _) in &self.registry.models {
+            if name.is_empty() {
+                bail!("registry model names must be non-empty");
+            }
+        }
+        if let Some(d) = &self.registry.default_model {
+            let known = self.registry.models.iter().any(|(n, _)| n == d);
+            // In single-model mode only the implicit name is addressable.
+            let single_ok = self.registry.models.is_empty()
+                && d == RegistryConfig::SINGLE_MODEL;
+            if !known && !single_ok {
+                bail!(
+                    "default model '{d}' is not among the registered models \
+                     ({:?})",
+                    self.registry
+                        .models
+                        .iter()
+                        .map(|(n, _)| n.as_str())
+                        .collect::<Vec<_>>()
+                );
+            }
+        } else if self.registry.models.len() > 1 {
+            // JSON objects don't preserve declaration order (the parser
+            // is a BTreeMap), so "first registered" would silently mean
+            // "alphabetically first" for models.json users.  Make
+            // multi-model deployments say which model is the default.
+            bail!(
+                "a registry with {} models needs an explicit default \
+                 (\"default\" in models.json / --default-model)",
+                self.registry.models.len()
+            );
+        }
         Ok(())
     }
 
@@ -304,6 +472,10 @@ impl Config {
         "margin",
         "pool",
         "pool-cap",
+        "model",
+        "models",
+        "default-model",
+        "preload-models",
     ];
 }
 
@@ -421,6 +593,113 @@ mod tests {
         let mut c = Config::default();
         c.pool.per_class_cap = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn registry_knobs_from_json_and_cli() {
+        let j = Json::parse(
+            r#"{"registry":{"default":"b","preload":true,
+                "models":{"a":"/m/a","b":"/m/b"}}}"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.registry.models.len(), 2);
+        assert_eq!(c.registry.effective_default(), "b");
+        assert!(c.registry.preload);
+        c.validate().unwrap();
+
+        // Repeated --model flags register in order; later same-name
+        // flags override; --default-model picks the default.
+        let a = Args::parse(
+            [
+                "serve",
+                "--model",
+                "a=/m/a",
+                "--model",
+                "b=/m/b",
+                "--model",
+                "a=/m/a2",
+                "--default-model",
+                "a",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.registry.models.len(), 2);
+        assert_eq!(c.registry.models[0], ("a".to_string(), "/m/a2".into()));
+        assert_eq!(c.registry.effective_default(), "a");
+
+        // Malformed --model specs fail loudly.
+        for bad in ["ab", "=path", "name="] {
+            let a = Args::parse(
+                ["serve", "--model", bad].iter().map(|s| s.to_string()),
+                Config::FLAGS,
+            )
+            .unwrap();
+            assert!(Config::from_args(&a).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn multi_model_registry_requires_explicit_default() {
+        // JSON objects don't preserve order, so "first wins" would be
+        // "alphabetical wins" for models.json users — refuse to guess.
+        let mut c = Config::default();
+        c.registry.upsert("b", "/m/b".into());
+        c.registry.upsert("a", "/m/a".into());
+        assert!(c.validate().is_err());
+        c.registry.default_model = Some("b".to_string());
+        c.validate().unwrap();
+        // One model needs no explicit default.
+        let mut c = Config::default();
+        c.registry.upsert("only", "/m/only".into());
+        c.validate().unwrap();
+        assert_eq!(c.registry.effective_default(), "only");
+    }
+
+    #[test]
+    fn registry_default_must_be_registered() {
+        let mut c = Config::default();
+        c.registry.upsert("a", "/m/a".into());
+        c.registry.default_model = Some("nope".to_string());
+        assert!(c.validate().is_err());
+        c.registry.default_model = Some("a".to_string());
+        c.validate().unwrap();
+        // Single-model mode: only the implicit name is addressable.
+        let mut c = Config::default();
+        c.registry.default_model = Some("custom".to_string());
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.registry.default_model =
+            Some(RegistryConfig::SINGLE_MODEL.to_string());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn models_index_loads_with_relative_paths() {
+        let dir = std::env::temp_dir()
+            .join(format!("zuluko_cfg_index_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let idx = dir.join("models.json");
+        std::fs::write(
+            &idx,
+            r#"{"default":"x","models":{"x":"artifacts-x","y":"/abs/y"}}"#,
+        )
+        .unwrap();
+        let reg = RegistryConfig::load_index(&idx).unwrap();
+        assert_eq!(reg.default_model.as_deref(), Some("x"));
+        let x = reg.models.iter().find(|(n, _)| n == "x").unwrap();
+        assert_eq!(x.1, dir.join("artifacts-x"));
+        let y = reg.models.iter().find(|(n, _)| n == "y").unwrap();
+        assert_eq!(y.1, PathBuf::from("/abs/y"));
+        // An index without a "models" object is an error, not an empty
+        // registry.
+        std::fs::write(&idx, r#"{"default":"x"}"#).unwrap();
+        assert!(RegistryConfig::load_index(&idx).is_err());
     }
 
     #[test]

@@ -1,59 +1,61 @@
 //! The serving coordinator — L3's composition root.
 //!
 //! ```text
-//! submit(image, slo) ── cache ──hit──> immediate Response
+//! submit(model?, image, slo)
+//!          │
+//!          ▼
+//!   registry.resolve(model) ──unknown──> structured UnknownModel reject
+//!          │                             (never a default-model fallback)
+//!          ▼  GenerationLease (RAII pin on one model generation)
+//!     per-model cache ──hit──> immediate Response
 //!          │
 //!          ▼
 //!     selector (predicted completion vs deadline, per engine pool)
 //!          │                        └──none fits──> structured shed
 //!     ┌────┴─────┐
 //!     ▼          ▼
-//!  acl pool   quant pool      (each: router -> bounded worker queues)
-//!     │          │               deadline-ordered, expired shed
+//!  acl pool   quant pool      (each: router -> bounded worker queues,
+//!     │          │             keyed per (model, engine) generation)
 //!     ▼          ▼
 //!  worker: engine.infer(batch) ── feeds predictor + response cache
 //!          │
 //!          ▼
-//!  per-request Response via mpsc reply channel
+//!  per-request Response (carries the model name) via mpsc reply channel
 //! ```
 //!
-//! Invariants (tested in rust/tests/coordinator_props.rs and
-//! rust/tests/policy_props.rs):
+//! Invariants (tested in rust/tests/coordinator_props.rs,
+//! rust/tests/policy_props.rs, and rust/tests/registry_props.rs):
 //! * every admitted request gets exactly one Response (success, error,
 //!   or a structured deadline rejection) — never a silent drop;
 //! * rejected/shed requests are reported as rejections;
 //! * FIFO within a worker queue among equal urgency;
 //! * batch sizes ∈ supported artifact sizes;
 //! * results are independent of batch packing;
-//! * cache hits are bit-identical to the cold inference that filled them.
+//! * cache hits are bit-identical to the cold inference that filled them;
+//! * cache hits never cross models or weight generations;
+//! * a hot reload never drops an in-flight request (old generation
+//!   drains before its engines/pooled tensors are released).
 
 pub mod batcher;
 pub mod queue;
 pub mod router;
 pub mod worker;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::config::Config;
-use crate::engine::EngineKind;
 use crate::metrics::Histogram;
-use crate::policy::{
-    self, image_key, CachedResult, Decision, PolicyCtx, PolicySnapshot,
-    PoolSnapshot, PoolView, Selector, Slo,
-};
-use crate::runtime::Manifest;
+use crate::policy::{CachedResult, ModelPolicySnapshot, PolicySnapshot, Slo};
+use crate::registry::{GenerationLease, ModelRegistry, ReloadReport};
 use crate::tensor::{PoolStats, PooledTensor, Tensor, TensorPool};
 
-use batcher::BatchPolicy;
-use queue::BoundedQueue;
-use router::{RouteError, Router};
 use worker::{SharedStats, WorkerReport};
 
-/// One inference request (image already preprocessed to 227x227x3,
-/// living in a pooled lease so its buffer is recycled on completion).
+/// One inference request (image already preprocessed, living in a
+/// pooled lease so its buffer is recycled on completion).
 pub struct Request {
     pub id: u64,
     pub image: PooledTensor,
@@ -85,6 +87,8 @@ pub struct Response {
     pub worker: usize,
     /// Which engine served this ("cache" for a cache hit, "" on error).
     pub engine: &'static str,
+    /// Which registry model served this ("" on pre-resolution errors).
+    pub model: Arc<str>,
     /// True when served from the response cache (no inference ran).
     pub cached: bool,
     /// Machine-matchable error class ("error", "shed"; "" when ok).
@@ -104,6 +108,7 @@ impl Response {
             batch_size: 0,
             worker: usize::MAX,
             engine: "",
+            model: Arc::from(""),
             cached: false,
             kind: "error",
             error: Some(msg.to_string()),
@@ -120,7 +125,7 @@ impl Response {
         }
     }
 
-    fn cache_hit(id: u64, hit: &CachedResult, total_ms: f64) -> Response {
+    pub(crate) fn cache_hit(id: u64, hit: &CachedResult, total_ms: f64) -> Response {
         Response {
             id,
             top1: hit.top1,
@@ -131,6 +136,7 @@ impl Response {
             batch_size: 0,
             worker: usize::MAX,
             engine: "cache",
+            model: Arc::from(""),
             cached: true,
             kind: "",
             error: None,
@@ -142,7 +148,7 @@ impl Response {
     }
 }
 
-/// Submission failure modes (backpressure + SLO surface).
+/// Submission failure modes (backpressure + SLO + registry surface).
 #[derive(Debug, PartialEq)]
 pub enum SubmitError {
     /// All worker queues full — retry later (the embedded device is saturated).
@@ -155,10 +161,17 @@ pub enum SubmitError {
         /// The request's full deadline budget, ms.
         deadline_ms: f64,
     },
-    /// Coordinator shutting down.
+    /// Coordinator shutting down (or the addressed generation was
+    /// retired mid-swap — callers may re-resolve and retry once).
     Closed,
     /// Input had the wrong shape.
     BadInput(String),
+    /// The request addressed a model the registry does not know.  A
+    /// structured reject — never a silent fallback to the default model.
+    UnknownModel(String),
+    /// The model is registered but its generation could not be built
+    /// (bad artifacts, engine build failure).
+    ModelUnavailable { model: String, reason: String },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -175,8 +188,32 @@ impl std::fmt::Display for SubmitError {
             ),
             SubmitError::Closed => write!(f, "closed"),
             SubmitError::BadInput(m) => write!(f, "bad input: {m}"),
+            SubmitError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            SubmitError::ModelUnavailable { model, reason } => {
+                write!(f, "model '{model}' unavailable: {reason}")
+            }
         }
     }
+}
+
+/// Per-model row in a [`StatsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct ModelStatsSnapshot {
+    pub model: String,
+    /// Generation currently serving (0 = none; a failed reload never
+    /// shows up here — only published generations count).
+    pub generation: u64,
+    /// Whether engine pools are currently built for this model.
+    pub loaded: bool,
+    /// Whether this is the default model (serves `model`-less requests).
+    pub is_default: bool,
+    pub completed: u64,
+    pub images: u64,
+    pub rejected: u64,
+    /// Current generation's response-cache hits/misses (0 when unloaded;
+    /// resets on reload — new weights mean a cold cache).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Live stats snapshot.
@@ -194,303 +231,158 @@ pub struct StatsSnapshot {
     pub shed_predicted: u64,
     /// Admitted requests shed in-queue after their deadline passed.
     pub shed_expired: u64,
-    /// Tensor-arena counters (hit/miss/returned/dropped/buffers).
+    /// Tensor-arena counters (hit/miss/returned/dropped/buffers),
+    /// summed across loaded model generations.
     pub pool: PoolStats,
+    /// Per-model breakdown, in registry order.
+    pub models: Vec<ModelStatsSnapshot>,
 }
 
-/// One engine pool: a router over per-worker bounded queues.
-struct Pool {
-    kind: EngineKind,
-    router: Router<Request>,
-    workers: usize,
-}
-
-impl Pool {
-    /// Admission-time snapshot for the selector / introspection.
-    fn view(&self) -> PoolView {
-        PoolView {
-            kind: self.kind,
-            queued: self.router.queued(),
-            workers: self.workers,
-            capacity: self.router.capacity(),
-        }
-    }
-}
-
-/// The running serving system.
+/// The running serving system: a model registry fronted by one submit
+/// surface.  Single-model deployments see exactly the pre-registry
+/// behavior (one implicit model named `default`).
 pub struct Coordinator {
-    pools: Vec<Pool>,
-    worker_handles: Vec<std::thread::JoinHandle<WorkerReport>>,
-    selector: Selector,
-    ctx: Arc<PolicyCtx>,
-    adaptive: bool,
-    next_id: AtomicU64,
+    registry: ModelRegistry,
     stats: Arc<SharedStats>,
-    input_hw: usize,
-    pool: TensorPool,
-}
-
-/// Batch sizes a given engine kind has compiled artifacts for.
-fn supported_sizes(kind: EngineKind, manifest: &Manifest) -> Vec<usize> {
-    match kind {
-        EngineKind::AclStaged => manifest.batch_sizes.clone(),
-        EngineKind::AclFused => manifest.full.keys().copied().collect(),
-        _ => vec![1],
-    }
+    next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Load manifest, spawn + warm all worker pools.  Returns only when
-    /// every worker is ready to serve (compilation excluded from request
-    /// latency) — or fails fast if any worker can't build its engine.
-    ///
-    /// With `cfg.policy.adaptive`, two pools come up — the configured
-    /// engine (quality path) plus the int8 quant path — and the SLO
-    /// selector routes between them per request.
+    /// Build the registry and eagerly load the default model (fail fast
+    /// on engine build errors, exactly like the pre-registry startup).
+    /// Other registered models build lazily on first request unless
+    /// `registry.preload` asks for all of them up front.
     pub fn start(cfg: &Config) -> Result<Coordinator> {
-        let manifest = Manifest::load(&cfg.artifacts).context("loading manifest")?;
-
-        let specs: Vec<(EngineKind, usize)> = if cfg.policy.adaptive {
-            vec![
-                (cfg.engine, cfg.workers),
-                (EngineKind::Quant, cfg.policy.quant_workers),
-            ]
-        } else {
-            vec![(cfg.engine, cfg.workers)]
-        };
-
-        let ctx = Arc::new(PolicyCtx::new(
-            cfg.policy.ewma_alpha,
-            cfg.policy.cache_capacity,
-        ));
-        for &(kind, _) in &specs {
-            ctx.predictor.seed(kind, 1, policy::default_prior_ms(kind));
-        }
-
         let stats = Arc::new(SharedStats::default());
-        let (ready_tx, ready_rx) = mpsc::channel();
-
-        // Tensor arena for the whole request path: decode buffers plus
-        // one batch buffer per compiled batch size, shelved at startup
-        // so the steady state never allocates pixels.
-        let input_len = manifest.input_hw * manifest.input_hw * 3;
-        let arena = TensorPool::with_mode(cfg.pool.enabled, cfg.pool.per_class_cap);
-        arena.prealloc(input_len, cfg.queue_capacity);
-
-        let mut pools = Vec::with_capacity(specs.len());
-        let mut worker_handles = Vec::new();
-        let mut worker_index = 0usize;
-        for (pool_index, &(kind, n_workers)) in specs.iter().enumerate() {
-            let supported = supported_sizes(kind, &manifest);
-            for &b in supported.iter().filter(|&&b| b <= cfg.max_batch) {
-                arena.prealloc(b * input_len, n_workers);
-            }
-            let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
-            let queues: Vec<Arc<BoundedQueue<Request>>> = (0..n_workers)
-                .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
-                .collect();
-            for q in &queues {
-                worker_handles.push(worker::spawn_worker(
-                    worker_index,
-                    kind,
-                    manifest.clone(),
-                    q.clone(),
-                    policy.clone(),
-                    stats.clone(),
-                    ctx.clone(),
-                    arena.clone(),
-                    // Only the quality pool (specs[0]) fills the cache so
-                    // hits never downgrade accuracy to the int8 path.
-                    pool_index == 0,
-                    ready_tx.clone(),
-                ));
-                worker_index += 1;
-            }
-            pools.push(Pool {
-                kind,
-                router: Router::new(queues),
-                workers: n_workers,
-            });
-        }
-        drop(ready_tx);
-
-        // Wait for all workers (fail fast on any engine build error).
-        for _ in 0..worker_index {
-            match ready_rx.recv() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    for p in &pools {
-                        p.router.close_all();
-                    }
-                    bail!("worker failed to start: {e:#}");
-                }
-                Err(_) => bail!("worker exited before signalling readiness"),
-            }
-        }
+        let registry = ModelRegistry::new(cfg.clone(), stats.clone())?;
+        registry.preload(!cfg.registry.preload)?;
 
         crate::info!(
             "coordinator",
-            "ready: pools={:?} max_batch={} adaptive={} cache={}",
-            pools
-                .iter()
-                .map(|p| format!("{}x{}", p.kind.as_str(), p.workers))
-                .collect::<Vec<_>>(),
-            cfg.max_batch,
-            cfg.policy.adaptive,
-            cfg.policy.cache_capacity
+            "ready: models={:?} default='{}' preload={}",
+            registry.names(),
+            registry.default_model(),
+            cfg.registry.preload
         );
 
         Ok(Coordinator {
-            pools,
-            worker_handles,
-            selector: Selector::new(cfg.policy.margin, 1),
-            ctx,
-            adaptive: cfg.policy.adaptive,
-            next_id: AtomicU64::new(1),
+            registry,
             stats,
-            input_hw: manifest.input_hw,
-            pool: arena,
+            next_id: AtomicU64::new(1),
         })
     }
 
-    /// Submit a best-effort image; returns the reply channel.
+    /// Pin a generation of `model` (`None` = default model) for one
+    /// request.  Unknown names are a structured reject; first use of a
+    /// lazily-registered model builds + warms its pools here.
+    pub fn lease(&self, model: Option<&str>) -> Result<GenerationLease, SubmitError> {
+        self.registry.resolve(model)
+    }
+
+    /// Registered model names in registry order.
+    pub fn model_names(&self) -> Vec<&str> {
+        self.registry.names()
+    }
+
+    pub fn default_model(&self) -> &str {
+        self.registry.default_model()
+    }
+
+    /// Atomic hot reload of `model` (`None` = default): build + warm a
+    /// fresh generation, swap it in, drain the old one in the
+    /// background.  In-flight requests finish on the old generation.
+    pub fn reload(&self, model: Option<&str>) -> Result<ReloadReport> {
+        self.registry.reload(model)
+    }
+
+    /// Submit a best-effort image to the default model.
     pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<Response>, SubmitError> {
         self.submit_with_slo(image, Slo::default())
     }
 
-    /// Reject wrong-shaped inputs before they touch queues or the arena.
-    fn check_shape(&self, shape: &[usize]) -> Result<(), SubmitError> {
-        let want = [self.input_hw, self.input_hw, 3];
-        if shape != want {
-            return Err(SubmitError::BadInput(format!(
-                "expected shape {want:?}, got {shape:?}"
-            )));
-        }
-        Ok(())
-    }
-
-    /// Submit with an SLO (owned-tensor convenience: the buffer moves
-    /// into the arena's custody and is recycled on completion).
+    /// Submit to the default model with an SLO (owned-tensor
+    /// convenience: the buffer moves into the arena's custody and is
+    /// recycled on completion).
     pub fn submit_with_slo(
         &self,
         image: Tensor,
         slo: Slo,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        // Validate before adopting, so rejected odd-shaped tensors are
-        // never shelved into the arena's size classes.
-        self.check_shape(image.shape())?;
-        let image = PooledTensor::from_tensor(image, &self.pool);
-        self.submit_pooled(image, slo, None)
+        self.submit_model(None, image, slo)
     }
 
-    /// Zero-copy submission: the image already lives in a pooled lease
-    /// (the server decodes straight into one).  The cache is consulted
-    /// first (a hit replies immediately without touching an engine);
-    /// otherwise the selector routes to the best pool predicted to meet
-    /// the deadline, or sheds.  `wire_key` optionally keys the response
-    /// cache on the raw request bytes so a repeat of the same wire spec
-    /// skips decode entirely next time.
+    /// Submit an owned tensor to a named model (`None` = default).
+    ///
+    /// `Err(Closed)` can surface transiently when the addressed
+    /// generation is retired by a concurrent hot reload between resolve
+    /// and route; callers that own their input (like the TCP server,
+    /// which re-decodes) simply resubmit — the retry lands on the fresh
+    /// generation.
+    pub fn submit_model(
+        &self,
+        model: Option<&str>,
+        image: Tensor,
+        slo: Slo,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let lease = self.lease(model)?;
+        // Validate before adopting, so rejected odd-shaped tensors are
+        // never shelved into the arena's size classes.
+        let want = [lease.input_hw(), lease.input_hw(), 3];
+        if image.shape() != want {
+            return Err(SubmitError::BadInput(format!(
+                "expected shape {want:?}, got {:?}",
+                image.shape()
+            )));
+        }
+        let pooled = PooledTensor::from_tensor(image, &lease.arena());
+        self.submit_on(&lease, pooled, slo, None)
+    }
+
+    /// Zero-copy submission to the default model (the image already
+    /// lives in a pooled lease; the server decodes straight into one).
     pub fn submit_pooled(
         &self,
         image: PooledTensor,
         slo: Slo,
         wire_key: Option<u64>,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        self.check_shape(image.shape())?;
-        let submitted = Instant::now();
+        let lease = self.lease(None)?;
+        self.submit_on(&lease, image, slo, wire_key)
+    }
+
+    /// Zero-copy submission onto an already-leased generation — the
+    /// server's model-aware path (it needs the lease first anyway, to
+    /// decode into the right arena).
+    pub fn submit_on(
+        &self,
+        lease: &GenerationLease,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-
-        // Response cache: repeated frames skip inference entirely.
-        let cache_key = if self.ctx.cache.enabled() {
-            let key = image_key(image.data());
-            if let Some(hit) = self.ctx.cache.get(key) {
-                // Re-install the wire-key alias: it may have been
-                // LRU-evicted independently of the content entry, and
-                // this request never reaches a worker to restore it.
-                if let Some(wk) = wire_key {
-                    self.ctx.cache.put(wk, hit.clone());
-                }
-                let (tx, rx) = mpsc::channel();
-                let total_ms = crate::util::ms(submitted.elapsed());
-                let _ = tx.send(Response::cache_hit(id, &hit, total_ms));
-                self.stats.completed.fetch_add(1, Ordering::Relaxed);
-                self.stats.latency.lock().unwrap().record_ms(total_ms);
-                return Ok(rx);
-            }
-            Some(key)
-        } else {
-            None
-        };
-
-        let views: Vec<PoolView> = self.pools.iter().map(Pool::view).collect();
-        let budget_ms = slo.deadline_ms();
-        let decision =
-            self.selector
-                .choose(&self.ctx.predictor, &views, &slo, budget_ms);
-
-        let pool = match decision {
-            Decision::Route { pool, .. } => pool,
-            Decision::Shed { best_ms } => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                let any_room = views.iter().any(|v| v.queued < v.capacity);
-                return Err(match (budget_ms, any_room) {
-                    (Some(deadline_ms), true) => {
-                        self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
-                        SubmitError::Shed {
-                            predicted_ms: best_ms,
-                            deadline_ms,
-                        }
-                    }
-                    _ => SubmitError::Overloaded,
-                });
-            }
-        };
-
-        let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id,
-            image,
-            submitted,
-            slo,
-            cache_key,
-            wire_key: wire_key.filter(|_| cache_key.is_some()),
-            reply: tx,
-        };
-        match self.pools[pool].router.route(req) {
-            Ok(_) => Ok(rx),
-            Err(RouteError::Overloaded(_)) => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Overloaded)
-            }
-            Err(RouteError::Closed(_)) => Err(SubmitError::Closed),
-        }
+        lease.submit_pooled(id, image, slo, wire_key)
     }
 
-    /// Response-cache lookup by an externally computed key — the
-    /// server's wire-key fast path.  A hit means the caller can skip
-    /// image decode entirely; a miss is not counted against the cache
-    /// (the post-decode content-key lookup counts once per request).
+    /// Response-cache lookup by an externally computed key on the
+    /// default model — the server's wire-key fast path (see
+    /// [`crate::registry::Generation::cached_response`]).
     pub fn cached_response(&self, key: u64) -> Option<Response> {
-        if !self.ctx.cache.enabled() {
-            return None;
-        }
-        let t0 = Instant::now();
-        let hit = self.ctx.cache.peek(key)?;
-        // Measured, like the content-key hit path — cache hits are real
-        // requests with (near-zero) real latency.
-        let total_ms = crate::util::ms(t0.elapsed());
-        let resp = Response::cache_hit(0, &hit, total_ms);
-        self.stats.completed.fetch_add(1, Ordering::Relaxed);
-        self.stats.latency.lock().unwrap().record_ms(total_ms);
-        Some(resp)
+        let lease = self.lease(None).ok()?;
+        lease.cached_response(key)
     }
 
-    /// The request path's tensor arena (decode buffers lease from here).
+    /// The default model's tensor arena (decode buffers lease from here).
     pub fn pool(&self) -> TensorPool {
-        self.pool.clone()
+        match self.lease(None) {
+            Ok(lease) => lease.arena(),
+            // Default model is eagerly loaded at start; this arm is
+            // unreachable in practice but must not panic.
+            Err(_) => TensorPool::disabled(),
+        }
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit to the default model and wait.
     pub fn infer_blocking(&self, image: Tensor) -> Result<Response> {
         let rx = self
             .submit(image)
@@ -501,46 +393,116 @@ impl Coordinator {
     pub fn stats(&self) -> StatsSnapshot {
         let lat = self.stats.latency.lock().unwrap();
         let batch = self.stats.batch_sizes.lock().unwrap();
-        let cache = self.ctx.cache.stats();
+        let default = self.registry.default_model().to_string();
+
+        let mut queued = 0usize;
+        let mut cache_hits = 0u64;
+        let mut cache_misses = 0u64;
+        let mut shed_predicted = 0u64;
+        let mut shed_expired = 0u64;
+        let mut pool = PoolStats::default();
+        let mut models = Vec::new();
+        for entry in self.registry.entries() {
+            let gen = if entry.loaded() {
+                self.registry.resolve(Some(entry.name())).ok()
+            } else {
+                None
+            };
+            let (hits, misses) = match &gen {
+                Some(g) => {
+                    queued += g.queued();
+                    let c = g.ctx().cache.stats();
+                    shed_predicted += g.ctx().shed_predicted_count();
+                    shed_expired += g.ctx().shed_expired_count();
+                    let p = g.arena().stats();
+                    pool.hits += p.hits;
+                    pool.misses += p.misses;
+                    pool.returned += p.returned;
+                    pool.dropped += p.dropped;
+                    pool.buffers += p.buffers;
+                    (c.hits, c.misses)
+                }
+                None => (0, 0),
+            };
+            cache_hits += hits;
+            cache_misses += misses;
+            models.push(ModelStatsSnapshot {
+                model: entry.name().to_string(),
+                // The generation actually serving — NOT the issued
+                // counter, which a failed reload bumps without ever
+                // publishing (an operator must not read a reload as
+                // applied when the old weights still serve).
+                generation: gen.as_ref().map(|g| g.generation()).unwrap_or(0),
+                loaded: gen.is_some(),
+                is_default: entry.name() == default,
+                completed: entry.counters().completed.load(Ordering::Relaxed),
+                images: entry.counters().images.load(Ordering::Relaxed),
+                rejected: entry.counters().rejected.load(Ordering::Relaxed),
+                cache_hits: hits,
+                cache_misses: misses,
+            });
+        }
+
         StatsSnapshot {
             completed: self.stats.completed.load(Ordering::Relaxed),
             rejected: self.stats.rejected.load(Ordering::Relaxed),
             images: self.stats.images.load(Ordering::Relaxed),
-            queued: self.pools.iter().map(|p| p.router.queued()).sum(),
+            queued,
             latency_summary: lat.summary(),
             mean_batch: batch.mean_ms(),
-            cache_hits: cache.hits,
-            cache_misses: cache.misses,
-            shed_predicted: self.ctx.shed_predicted_count(),
-            shed_expired: self.ctx.shed_expired_count(),
-            pool: self.pool.stats(),
+            cache_hits,
+            cache_misses,
+            shed_predicted,
+            shed_expired,
+            pool,
+            models,
         }
     }
 
-    /// Policy-layer introspection (`{"cmd":"policy"}`).
+    /// Policy-layer introspection (`{"cmd":"policy"}`): the default
+    /// model's pools at the top level (wire compatibility), plus one
+    /// row per registered model.
     pub fn policy_snapshot(&self) -> PolicySnapshot {
+        let mut models = Vec::new();
+        for entry in self.registry.entries() {
+            let loaded = entry.loaded();
+            let gen = if loaded {
+                self.registry.resolve(Some(entry.name())).ok()
+            } else {
+                None
+            };
+            models.push(match gen {
+                Some(g) => ModelPolicySnapshot {
+                    model: entry.name().to_string(),
+                    generation: g.generation(),
+                    loaded: true,
+                    pools: g.pool_snapshots(),
+                    cache: g.ctx().cache.stats(),
+                    shed_predicted: g.ctx().shed_predicted_count(),
+                    shed_expired: g.ctx().shed_expired_count(),
+                },
+                None => ModelPolicySnapshot {
+                    model: entry.name().to_string(),
+                    // No generation is serving (0) — see stats(): the
+                    // issued counter would misreport failed reloads.
+                    generation: 0,
+                    loaded: false,
+                    pools: Vec::new(),
+                    cache: Default::default(),
+                    shed_predicted: 0,
+                    shed_expired: 0,
+                },
+            });
+        }
+        let default = self.registry.default_model();
+        let default_row = models.iter().find(|m| m.model == default);
         PolicySnapshot {
-            adaptive: self.adaptive,
-            pools: self
-                .pools
-                .iter()
-                .map(|p| {
-                    let view = p.view();
-                    PoolSnapshot {
-                        engine: p.kind.as_str(),
-                        workers: p.workers,
-                        queued: view.queued,
-                        capacity: view.capacity,
-                        predicted_ms: self
-                            .selector
-                            .predict_ms(&self.ctx.predictor, &view),
-                        samples: self.ctx.predictor.samples(p.kind),
-                    }
-                })
-                .collect(),
-            cache: self.ctx.cache.stats(),
-            shed_predicted: self.ctx.shed_predicted_count(),
-            shed_expired: self.ctx.shed_expired_count(),
+            adaptive: self.registry.config().policy.adaptive,
+            pools: default_row.map(|m| m.pools.clone()).unwrap_or_default(),
+            cache: default_row.map(|m| m.cache).unwrap_or_default(),
+            shed_predicted: models.iter().map(|m| m.shed_predicted).sum(),
+            shed_expired: models.iter().map(|m| m.shed_expired).sum(),
+            models,
         }
     }
 
@@ -549,14 +511,9 @@ impl Coordinator {
         self.stats.latency.lock().unwrap().clone()
     }
 
-    /// Graceful shutdown: drain queues, join workers, return their reports.
+    /// Graceful shutdown: drain queues, join workers (including
+    /// reload-retired generations'), return their reports.
     pub fn shutdown(self) -> Vec<WorkerReport> {
-        for p in &self.pools {
-            p.router.close_all();
-        }
-        self.worker_handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
+        self.registry.shutdown()
     }
 }

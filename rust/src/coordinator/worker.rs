@@ -17,6 +17,12 @@
 //! a borrowed view, and reply extraction reads borrowed output rows
 //! (no `unstack` copies).  The lease returns to the arena on every
 //! exit path, including errors, because return is `Drop`.
+//!
+//! Registry duties (DESIGN.md §8): a worker belongs to one model
+//! generation.  Its queue, arena, and policy ctx are that generation's;
+//! every reply carries the model name so isolation is observable on the
+//! wire; per-model counters (shared across the model's generations) are
+//! bumped alongside the process-wide aggregates.
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,6 +34,7 @@ use crate::engine::{self, EngineKind};
 use crate::metrics::ledger::Ledger;
 use crate::metrics::Histogram;
 use crate::policy::{CachedResult, PolicyCtx, Urgency};
+use crate::registry::ModelCounters;
 use crate::runtime::Manifest;
 use crate::tensor::{TensorPool, TensorView};
 
@@ -59,25 +66,50 @@ pub struct SharedStats {
     pub batch_sizes: Mutex<Histogram>,
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Everything one worker thread needs — bundled so a seat is one value,
+/// not a dozen positional arguments.
+pub struct WorkerSeat {
+    /// Process-unique worker index (spans pools within a generation).
+    pub index: usize,
+    pub kind: EngineKind,
+    /// Model this worker's generation serves (echoed in every reply).
+    pub model: Arc<str>,
+    pub manifest: Manifest,
+    pub queue: Arc<BoundedQueue<Request>>,
+    pub policy: BatchPolicy,
+    /// Process-wide aggregates.
+    pub stats: Arc<SharedStats>,
+    /// Per-model counters (survive hot reloads).
+    pub counters: Arc<ModelCounters>,
+    /// This generation's policy state (predictor + response cache).
+    pub ctx: Arc<PolicyCtx>,
+    pub arena: TensorPool,
+    /// Only the quality pool fills the response cache: caching an int8
+    /// result would let later fp32-entitled requests hit it (Fig 4
+    /// accuracy loss through the back door).
+    pub fill_cache: bool,
+}
+
 pub fn spawn_worker(
-    worker: usize,
-    kind: EngineKind,
-    manifest: Manifest,
-    queue: Arc<BoundedQueue<Request>>,
-    policy: BatchPolicy,
-    stats: Arc<SharedStats>,
-    ctx: Arc<PolicyCtx>,
-    pool: TensorPool,
-    // Only the quality pool fills the response cache: caching an int8
-    // result would let later fp32-entitled requests hit it (Fig 4
-    // accuracy loss through the back door).
-    fill_cache: bool,
+    seat: WorkerSeat,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<WorkerReport> {
     std::thread::Builder::new()
-        .name(format!("zuluko-worker-{worker}"))
+        .name(format!("zuluko-worker-{}-{}", seat.model, seat.index))
         .spawn(move || {
+            let WorkerSeat {
+                index: worker,
+                kind,
+                model,
+                manifest,
+                queue,
+                policy,
+                stats,
+                counters,
+                ctx,
+                arena: pool,
+                fill_cache,
+            } = seat;
             // Build + warm the engine before signalling readiness so the
             // coordinator's callers never measure compilation.
             let mut eng = match engine::build(kind, &manifest) {
@@ -129,7 +161,9 @@ pub fn spawn_worker(
                     .partition(|r| r.slo.expired(r.submitted, now));
                 for r in &expired {
                     ctx.shed_expired.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply.send(Response::shed_expired(r.id, DEADLINE_ERROR));
+                    let mut resp = Response::shed_expired(r.id, DEADLINE_ERROR);
+                    resp.model = model.clone();
+                    let _ = r.reply.send(resp);
                 }
                 if live.is_empty() {
                     continue;
@@ -146,7 +180,7 @@ pub fn spawn_worker(
                 let per = live[0].image.len();
                 let row_shape = live[0].image.shape().to_vec();
                 if live.iter().any(|r| r.image.shape() != &row_shape[..]) {
-                    fail_batch(&live, "batch shape mismatch");
+                    fail_batch(&model, &live, "batch shape mismatch");
                     continue;
                 }
                 // In-place batching: lease a batch buffer from the arena
@@ -211,12 +245,15 @@ pub fn spawn_worker(
                                 batch_size: bsize,
                                 worker,
                                 engine: kind.as_str(),
+                                model: model.clone(),
                                 cached: false,
                                 kind: "",
                                 error: None,
                             });
                             stats.completed.fetch_add(1, Ordering::Relaxed);
                             stats.images.fetch_add(1, Ordering::Relaxed);
+                            counters.completed.fetch_add(1, Ordering::Relaxed);
+                            counters.images.fetch_add(1, Ordering::Relaxed);
                             stats
                                 .latency
                                 .lock()
@@ -224,14 +261,15 @@ pub fn spawn_worker(
                                 .record_ms(total_ms);
                         }
                     }
-                    Ok(probs) => fail_batch_owned(
-                        live,
+                    Ok(probs) => fail_batch(
+                        &model,
+                        &live,
                         &format!(
                             "infer: engine returned shape {:?} for batch {bsize}",
                             probs.shape()
                         ),
                     ),
-                    Err(e) => fail_batch_owned(live, &format!("infer: {e}")),
+                    Err(e) => fail_batch(&model, &live, &format!("infer: {e}")),
                 }
             }
 
@@ -247,14 +285,10 @@ pub fn spawn_worker(
         .expect("spawn worker")
 }
 
-fn fail_batch(reqs: &[Request], msg: &str) {
+fn fail_batch(model: &Arc<str>, reqs: &[Request], msg: &str) {
     for r in reqs {
-        let _ = r.reply.send(Response::error(r.id, msg));
-    }
-}
-
-fn fail_batch_owned(reqs: Vec<Request>, msg: &str) {
-    for r in &reqs {
-        let _ = r.reply.send(Response::error(r.id, msg));
+        let mut resp = Response::error(r.id, msg);
+        resp.model = model.clone();
+        let _ = r.reply.send(resp);
     }
 }

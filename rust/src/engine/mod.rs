@@ -16,6 +16,7 @@
 pub mod acl;
 pub mod graph_exec;
 pub mod quant;
+pub mod sim;
 pub mod tf;
 
 use anyhow::Result;
@@ -78,6 +79,10 @@ pub enum EngineKind {
     TfBaseline,
     /// Quantized baseline (Fig 4).
     Quant,
+    /// Deterministic simulation engine: no artifacts, output is a pure
+    /// function of (model name, pixels).  The registry / serving test
+    /// backend — see engine::sim.
+    Sim,
 }
 
 impl EngineKind {
@@ -88,8 +93,9 @@ impl EngineKind {
             "acl-probe" => EngineKind::AclProbe,
             "tf" | "tf-baseline" => EngineKind::TfBaseline,
             "quant" | "tf-quant" => EngineKind::Quant,
+            "sim" => EngineKind::Sim,
             _ => anyhow::bail!(
-                "unknown engine '{s}' (acl|acl-fused|acl-probe|tf|quant)"
+                "unknown engine '{s}' (acl|acl-fused|acl-probe|tf|quant|sim)"
             ),
         })
     }
@@ -101,6 +107,7 @@ impl EngineKind {
             EngineKind::AclProbe => "acl-probe",
             EngineKind::TfBaseline => "tf",
             EngineKind::Quant => "quant",
+            EngineKind::Sim => "sim",
         }
     }
 }
@@ -120,6 +127,7 @@ pub fn build(kind: EngineKind, manifest: &Manifest) -> Result<Box<dyn Engine>> {
         }
         EngineKind::TfBaseline => Box::new(tf::TfBaselineEngine::new(manifest)?),
         EngineKind::Quant => Box::new(quant::QuantEngine::new(manifest)?),
+        EngineKind::Sim => Box::new(sim::SimEngine::new(manifest)?),
     })
 }
 
@@ -135,6 +143,7 @@ mod tests {
             EngineKind::AclProbe,
             EngineKind::TfBaseline,
             EngineKind::Quant,
+            EngineKind::Sim,
         ] {
             assert_eq!(EngineKind::parse(k.as_str()).unwrap(), k);
         }

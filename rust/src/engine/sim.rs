@@ -1,0 +1,181 @@
+//! Deterministic simulation engine — the registry/serving test backend.
+//!
+//! Every real engine needs compiled HLO artifacts, which means CI (and
+//! any box without the Python AOT toolchain) cannot exercise the serving
+//! stack end-to-end.  `SimEngine` closes that gap: it is a full
+//! [`Engine`] that needs only a manifest (no artifact files, no XLA),
+//! runs in microseconds, and produces output that is a pure function of
+//! *(model name, input pixels)* — so a test can prove a reply came from
+//! the model it addressed, which is exactly the multi-model isolation
+//! property the registry must uphold.
+//!
+//! The output contract (see [`expected_top1`]): the winning class is
+//! `(fnv(model) ^ fnv(pixels)) % num_classes`.  Two registry models with
+//! different names classify the same frame differently, so any reply
+//! crossing — a cache hit leaking across models, a request routed to the
+//! wrong pool — shows up as a wrong `top1`, not as a silent pass.
+//!
+//! A small fixed per-image busy-wait stands in for compute so batching,
+//! deadline, and reload-under-load behavior have real time to interleave
+//! against (pure zero-cost inference would make "in-flight during
+//! reload" an unhittable window).
+
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+use crate::metrics::ledger::Ledger;
+use crate::policy::{bytes_key, image_key};
+use crate::runtime::Manifest;
+use crate::tensor::{Tensor, TensorView};
+
+/// Simulated per-image execution cost.  Long enough that a burst keeps
+/// requests genuinely in flight, short enough that tests stay fast.
+pub const SIM_EXEC_PER_IMAGE: Duration = Duration::from_micros(300);
+
+/// The class the sim engine assigns to `pixels` when served under
+/// `model` — the oracle tests compare replies against.
+pub fn expected_top1(model: &str, pixels: &[f32], num_classes: usize) -> usize {
+    let h = bytes_key(model.as_bytes()) ^ image_key(pixels);
+    (h % num_classes.max(1) as u64) as usize
+}
+
+pub struct SimEngine {
+    model: String,
+    num_classes: usize,
+    input_hw: usize,
+    batch_sizes: Vec<usize>,
+    ledger: Ledger,
+}
+
+impl SimEngine {
+    pub fn new(manifest: &Manifest) -> Result<SimEngine> {
+        Ok(SimEngine {
+            model: manifest.model.clone(),
+            num_classes: manifest.num_classes.max(1),
+            input_hw: manifest.input_hw,
+            batch_sizes: if manifest.batch_sizes.is_empty() {
+                vec![1]
+            } else {
+                manifest.batch_sizes.clone()
+            },
+            ledger: Ledger::new(),
+        })
+    }
+}
+
+impl super::Engine for SimEngine {
+    fn name(&self) -> &str {
+        "sim"
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn infer(&mut self, batch: &Tensor) -> Result<Tensor> {
+        self.infer_view(batch.view())
+    }
+
+    fn infer_view(&mut self, batch: TensorView<'_>) -> Result<Tensor> {
+        let want = [self.input_hw, self.input_hw, 3];
+        if batch.shape().len() != 4 || batch.shape()[1..] != want {
+            bail!(
+                "sim: expected shape [B, {}, {}, 3], got {:?}",
+                self.input_hw,
+                self.input_hw,
+                batch.shape()
+            );
+        }
+        let b = batch.num_rows();
+        let mut scores = vec![0.0f32; b * self.num_classes];
+        for slot in 0..b {
+            let row = batch.row(slot);
+            let top1 = expected_top1(&self.model, row.data(), self.num_classes);
+            let out = &mut scores[slot * self.num_classes..(slot + 1) * self.num_classes];
+            // A deterministic distribution with an unambiguous winner and
+            // a stable runner-up, so top-5 extraction is exercised too.
+            let floor = 0.05 / self.num_classes as f32;
+            out.fill(floor);
+            out[top1] = 0.9;
+            out[(top1 + 1) % self.num_classes] = 0.04;
+            // Busy-wait the simulated compute (sleep granularity on CI
+            // runners is too coarse for a 300µs budget).
+            let t0 = Instant::now();
+            while t0.elapsed() < SIM_EXEC_PER_IMAGE {
+                std::hint::spin_loop();
+            }
+        }
+        Tensor::new(&[b, self.num_classes], scores)
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        let hw = self.input_hw;
+        let x = Tensor::zeros(&[1, hw, hw, 3]);
+        self.infer(&x)?;
+        self.ledger.clear();
+        Ok(())
+    }
+
+    fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    fn ledger_mut(&mut self) -> &mut Ledger {
+        &mut self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Engine;
+
+    fn manifest_like(model: &str) -> Manifest {
+        // SimEngine only reads these fields; build a Manifest by hand via
+        // the testkit synthetic writer to stay honest to the load path.
+        let dir = std::env::temp_dir().join(format!(
+            "zuluko_sim_unit_{}_{}",
+            model,
+            std::process::id()
+        ));
+        crate::testkit::manifest::write_synthetic(&dir, model, 1000, 227, &[1, 2, 4])
+            .unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn output_matches_oracle_and_differs_by_model() {
+        let ma = manifest_like("alpha");
+        let mb = manifest_like("beta");
+        let mut a = SimEngine::new(&ma).unwrap();
+        let mut b = SimEngine::new(&mb).unwrap();
+        let x = Tensor::random(&[2, 227, 227, 3], 9);
+        let pa = a.infer(&x).unwrap();
+        let pb = b.infer(&x).unwrap();
+        assert_eq!(pa.shape(), &[2, 1000]);
+        for slot in 0..2 {
+            let row = x.view().row(slot);
+            let ea = expected_top1("alpha", row.data(), 1000);
+            let eb = expected_top1("beta", row.data(), 1000);
+            assert_eq!(pa.view().row(slot).argmax(), ea);
+            assert_eq!(pb.view().row(slot).argmax(), eb);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_shape() {
+        let m = manifest_like("gamma");
+        let mut e = SimEngine::new(&m).unwrap();
+        assert!(e.infer(&Tensor::zeros(&[1, 100, 100, 3])).is_err());
+        assert!(e.infer(&Tensor::zeros(&[227, 227, 3])).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let m = manifest_like("delta");
+        let x = Tensor::random(&[1, 227, 227, 3], 4);
+        let p1 = SimEngine::new(&m).unwrap().infer(&x).unwrap();
+        let p2 = SimEngine::new(&m).unwrap().infer(&x).unwrap();
+        assert_eq!(p1.data(), p2.data());
+    }
+}

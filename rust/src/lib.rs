@@ -31,6 +31,7 @@ pub mod engine;
 pub mod metrics;
 pub mod model;
 pub mod policy;
+pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

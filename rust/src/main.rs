@@ -8,9 +8,21 @@
 //!
 //! Examples:
 //!   zuluko serve --engine acl --workers 1 --max-batch 8
+//!   zuluko serve --model main=artifacts --model exp=artifacts-exp \
+//!                --default-model main          # multi-model registry
+//!   zuluko serve --models models.json          # registry from an index
 //!   zuluko infer --ppm frame.ppm --engine acl-fused
 //!   zuluko bench --engine tf --iters 10
 //!   zuluko inspect
+//!
+//! Registry flags (DESIGN.md §8): `--model name=path` registers one
+//! model (repeatable); `--models index.json` loads a whole index of the
+//! shape `{"default":"name","preload":false,"models":{"name":"path"}}`;
+//! `--default-model` picks which model serves requests without a
+//! `model` field; `--preload-models` warms every model at startup
+//! instead of on first request.  Clients address a model with
+//! `{"id":1,"image":{...},"model":"name"}` and hot-reload one with
+//! `{"cmd":"reload","model":"name"}`.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -45,6 +57,11 @@ const FLAGS: &[&str] = &[
     // tensor arena
     "pool",
     "pool-cap",
+    // model registry
+    "model",
+    "models",
+    "default-model",
+    "preload-models",
     // command-specific
     "ppm",
     "seed",
@@ -82,10 +99,23 @@ fn run() -> Result<()> {
 fn cmd_serve(cfg: &Config) -> Result<()> {
     info!(
         "main",
-        "starting coordinator (engine={} adaptive={} cache={})",
+        "starting coordinator (engine={} adaptive={} cache={} models={})",
         cfg.engine.as_str(),
         cfg.policy.adaptive,
-        cfg.policy.cache_capacity
+        cfg.policy.cache_capacity,
+        if cfg.registry.models.is_empty() {
+            "single".to_string()
+        } else {
+            format!(
+                "{:?} default='{}'",
+                cfg.registry
+                    .models
+                    .iter()
+                    .map(|(n, _)| n.as_str())
+                    .collect::<Vec<_>>(),
+                cfg.registry.effective_default()
+            )
+        }
     );
     let coord = Arc::new(Coordinator::start(cfg)?);
     let server = Server::start(coord.clone(), &cfg.listen)?;

@@ -84,14 +84,17 @@ impl Histogram {
 
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let mut s = self.samples_ms.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a poisoned timer source) must
+        // not panic the stats path mid-serve; NaNs sort above every
+        // real sample and show up in the max, not as a crash.
+        s.sort_by(f64::total_cmp);
         percentile_sorted(&s, p)
     }
 
     /// (mean, p50, p95, p99, max) in ms — the standard report row.
     pub fn summary(&self) -> (f64, f64, f64, f64, f64) {
         let mut s = self.samples_ms.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         (
             self.mean_ms(),
             percentile_sorted(&s, 50.0),
@@ -171,6 +174,26 @@ mod tests {
         assert_eq!(h.samples_ms.len(), 16);
         assert!((h.mean_ms() - 499.5).abs() < 1e-9);
         assert_eq!(h.max_ms(), 999.0);
+    }
+
+    #[test]
+    fn nan_sample_never_panics_percentiles() {
+        // A NaN latency sample in the ledger used to panic the
+        // partial_cmp().unwrap() sort inside summary()/percentile_ms().
+        let mut h = Histogram::default();
+        for v in [1.0, f64::NAN, 3.0, 2.0] {
+            h.record_ms(v);
+        }
+        let p50 = h.percentile_ms(50.0);
+        assert!(p50.is_finite(), "finite percentile from mixed samples");
+        let (_, p50s, p95, _, _) = h.summary();
+        assert_eq!(p50, p50s);
+        // NaN sorts above every real sample (total_cmp order), so high
+        // percentiles may be NaN — but they must never panic.
+        let _ = p95;
+        let mut all_nan = Histogram::default();
+        all_nan.record_ms(f64::NAN);
+        let _ = all_nan.summary();
     }
 
     #[test]

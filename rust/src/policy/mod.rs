@@ -23,9 +23,11 @@
 //!    └── Shed               — structured `overloaded` rejection
 //! ```
 //!
-//! The coordinator owns one [`PolicyCtx`] shared by its worker pools;
-//! workers feed the predictor and fill the cache, the submit path reads
-//! both.
+//! Each model *generation* owns one [`PolicyCtx`] shared by its worker
+//! pools (DESIGN.md §8): workers feed the predictor and fill the cache,
+//! the submit path reads both, and because the ctx is per-generation a
+//! cache hit or latency estimate can never cross models or weight
+//! generations.
 
 pub mod cache;
 pub mod deadline;
@@ -79,7 +81,27 @@ pub struct PoolSnapshot {
     pub samples: u64,
 }
 
-/// Everything `{"cmd":"policy"}` reports.
+/// One registered model's policy state in a [`PolicySnapshot`] —
+/// predictor-backed pool views plus the per-generation cache and shed
+/// counters.  Policy state is structurally namespaced by model: each
+/// model generation owns its own [`PolicyCtx`], so rows never share a
+/// predictor or cache (DESIGN.md §8).
+#[derive(Debug, Clone)]
+pub struct ModelPolicySnapshot {
+    pub model: String,
+    /// Generation currently serving (0 = none).
+    pub generation: u64,
+    /// False for lazily-registered models nobody has addressed yet.
+    pub loaded: bool,
+    pub pools: Vec<PoolSnapshot>,
+    pub cache: CacheStats,
+    pub shed_predicted: u64,
+    pub shed_expired: u64,
+}
+
+/// Everything `{"cmd":"policy"}` reports.  The top-level `pools`/`cache`
+/// fields mirror the default model (wire compatibility with the
+/// pre-registry protocol); `models` carries the full per-model table.
 #[derive(Debug, Clone)]
 pub struct PolicySnapshot {
     pub adaptive: bool,
@@ -87,6 +109,7 @@ pub struct PolicySnapshot {
     pub cache: CacheStats,
     pub shed_predicted: u64,
     pub shed_expired: u64,
+    pub models: Vec<ModelPolicySnapshot>,
 }
 
 #[cfg(test)]

@@ -24,6 +24,9 @@ pub fn default_prior_ms(kind: EngineKind) -> f64 {
         EngineKind::AclProbe => 340.0,
         EngineKind::TfBaseline => 420.0,
         EngineKind::Quant => 110.0,
+        // Simulation engine: effectively free (engine::sim's fixed
+        // per-image busy-wait).
+        EngineKind::Sim => 1.0,
     }
 }
 

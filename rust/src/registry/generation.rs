@@ -1,0 +1,432 @@
+//! One immutable serving generation of one model: engine pools, worker
+//! threads, tensor arena, and per-generation policy state.
+//!
+//! A generation is built *cold* (load manifest → spawn workers → warm
+//! engines, failing fast on any build error) and only then published by
+//! the registry, so requests never observe a half-warmed model.  After a
+//! hot reload retires it, the generation drains gracefully:
+//!
+//! * its queues close (graceful: residual items still pop), so every
+//!   request already admitted is served by the *old* weights;
+//! * worker threads exit — dropping their engines — only after the
+//!   drain, and [`Generation::retire`] joins them;
+//! * the `Generation` itself (arena handle, policy ctx, manifest) is
+//!   kept alive by `Arc` until the last [`super::GenerationLease`]
+//!   drops, and `Drop` re-runs `retire` as an idempotent backstop.
+//!
+//! Policy state is **per generation** on purpose: a reload means new
+//! weights, and a response cache or latency EWMA carried across weights
+//! would serve stale classifications / stale predictions.  Cache keys
+//! therefore can never cross models *or* generations.
+
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::router::{RouteError, Router};
+use crate::coordinator::worker::{self, SharedStats, WorkerReport, WorkerSeat};
+use crate::coordinator::{Request, Response, SubmitError};
+use crate::engine::EngineKind;
+use crate::policy::{
+    self, image_key, Decision, PolicyCtx, PoolSnapshot, PoolView, Selector, Slo,
+};
+use crate::runtime::Manifest;
+use crate::tensor::{PooledTensor, TensorPool};
+
+use super::ModelCounters;
+
+/// One engine pool: a router over per-worker bounded queues.
+struct EnginePool {
+    kind: EngineKind,
+    router: Router<Request>,
+    workers: usize,
+}
+
+impl EnginePool {
+    /// Admission-time snapshot for the selector / introspection.
+    fn view(&self) -> PoolView {
+        PoolView {
+            kind: self.kind,
+            queued: self.router.queued(),
+            workers: self.workers,
+            capacity: self.router.capacity(),
+        }
+    }
+}
+
+/// Batch sizes a given engine kind has compiled artifacts for.
+fn supported_sizes(kind: EngineKind, manifest: &Manifest) -> Vec<usize> {
+    match kind {
+        EngineKind::AclStaged | EngineKind::Sim => manifest.batch_sizes.clone(),
+        EngineKind::AclFused => manifest.full.keys().copied().collect(),
+        _ => vec![1],
+    }
+}
+
+/// One warmed serving generation of one model (see module docs).
+pub struct Generation {
+    model: Arc<str>,
+    generation: u64,
+    input_hw: usize,
+    pools: Vec<EnginePool>,
+    /// Taken (not just borrowed) by `retire`, so shutdown and the
+    /// drop-backstop can both run without double-joining.
+    handles: Mutex<Vec<JoinHandle<WorkerReport>>>,
+    selector: Selector,
+    ctx: Arc<PolicyCtx>,
+    arena: TensorPool,
+    /// Process-wide aggregates (survive reloads; shared across models).
+    stats: Arc<SharedStats>,
+    /// Per-model counters (survive reloads; shared across generations).
+    counters: Arc<ModelCounters>,
+    /// Wall time spent building + warming every worker's engine.
+    warm_ms: f64,
+}
+
+impl Generation {
+    /// Load the manifest at `artifacts`, spawn + warm all worker pools.
+    /// Returns only when every worker is ready to serve — or fails fast
+    /// if any worker can't build its engine.  Nothing is published until
+    /// this returns, which is what makes reloads atomic.
+    pub(super) fn start(
+        model: Arc<str>,
+        generation: u64,
+        artifacts: &std::path::Path,
+        cfg: &Config,
+        stats: Arc<SharedStats>,
+        counters: Arc<ModelCounters>,
+    ) -> Result<Generation> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(artifacts)
+            .with_context(|| format!("loading manifest for model '{model}'"))?;
+
+        // With `cfg.policy.adaptive`, two pools come up — the configured
+        // engine (quality path) plus the int8 quant path — and the SLO
+        // selector routes between them per request.
+        let specs: Vec<(EngineKind, usize)> = if cfg.policy.adaptive {
+            vec![
+                (cfg.engine, cfg.workers),
+                (EngineKind::Quant, cfg.policy.quant_workers),
+            ]
+        } else {
+            vec![(cfg.engine, cfg.workers)]
+        };
+
+        let ctx = Arc::new(PolicyCtx::new(
+            cfg.policy.ewma_alpha,
+            cfg.policy.cache_capacity,
+        ));
+        for &(kind, _) in &specs {
+            ctx.predictor.seed(kind, 1, policy::default_prior_ms(kind));
+        }
+
+        let (ready_tx, ready_rx) = mpsc::channel();
+
+        // Tensor arena for this model's request path: decode buffers plus
+        // one batch buffer per compiled batch size, shelved at startup so
+        // the steady state never allocates pixels.
+        let input_len = manifest.input_hw * manifest.input_hw * 3;
+        let arena = TensorPool::with_mode(cfg.pool.enabled, cfg.pool.per_class_cap);
+        arena.prealloc(input_len, cfg.queue_capacity);
+
+        let mut pools = Vec::with_capacity(specs.len());
+        let mut handles = Vec::new();
+        let mut worker_index = 0usize;
+        for (pool_index, &(kind, n_workers)) in specs.iter().enumerate() {
+            let supported = supported_sizes(kind, &manifest);
+            for &b in supported.iter().filter(|&&b| b <= cfg.max_batch) {
+                arena.prealloc(b * input_len, n_workers);
+            }
+            let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
+            let queues: Vec<Arc<BoundedQueue<Request>>> = (0..n_workers)
+                .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
+                .collect();
+            for q in &queues {
+                handles.push(worker::spawn_worker(
+                    WorkerSeat {
+                        index: worker_index,
+                        kind,
+                        model: model.clone(),
+                        manifest: manifest.clone(),
+                        queue: q.clone(),
+                        policy: policy.clone(),
+                        stats: stats.clone(),
+                        counters: counters.clone(),
+                        ctx: ctx.clone(),
+                        arena: arena.clone(),
+                        // Only the quality pool (specs[0]) fills the cache
+                        // so hits never downgrade accuracy to the int8
+                        // path.
+                        fill_cache: pool_index == 0,
+                    },
+                    ready_tx.clone(),
+                ));
+                worker_index += 1;
+            }
+            pools.push(EnginePool {
+                kind,
+                router: Router::new(queues),
+                workers: n_workers,
+            });
+        }
+        drop(ready_tx);
+
+        // Wait for all workers (fail fast on any engine build error).
+        for _ in 0..worker_index {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    for p in &pools {
+                        p.router.close_all();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    bail!("model '{model}': worker failed to start: {e:#}");
+                }
+                Err(_) => {
+                    bail!("model '{model}': worker exited before signalling readiness")
+                }
+            }
+        }
+
+        let warm_ms = crate::util::ms(t0.elapsed());
+        crate::info!(
+            "registry",
+            "model '{}' gen {} ready in {:.0}ms: pools={:?} max_batch={}",
+            model,
+            generation,
+            warm_ms,
+            pools
+                .iter()
+                .map(|p| format!("{}x{}", p.kind.as_str(), p.workers))
+                .collect::<Vec<_>>(),
+            cfg.max_batch,
+        );
+
+        Ok(Generation {
+            model,
+            generation,
+            input_hw: manifest.input_hw,
+            pools,
+            handles: Mutex::new(handles),
+            selector: Selector::new(cfg.policy.margin, 1),
+            ctx,
+            arena,
+            stats,
+            counters,
+            warm_ms,
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Monotonic per-model generation number (1 = first load).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn input_hw(&self) -> usize {
+        self.input_hw
+    }
+
+    /// Wall time spent building + warming this generation's engines.
+    pub fn warm_ms(&self) -> f64 {
+        self.warm_ms
+    }
+
+    /// This model's tensor arena (decode buffers lease from here).
+    pub fn arena(&self) -> TensorPool {
+        self.arena.clone()
+    }
+
+    /// This generation's policy state (per-model predictor + cache).
+    pub fn ctx(&self) -> &Arc<PolicyCtx> {
+        &self.ctx
+    }
+
+    /// Requests queued across this generation's pools.
+    pub fn queued(&self) -> usize {
+        self.pools.iter().map(|p| p.router.queued()).sum()
+    }
+
+    /// Reject wrong-shaped inputs before they touch queues or the arena.
+    fn check_shape(&self, shape: &[usize]) -> Result<(), SubmitError> {
+        let want = [self.input_hw, self.input_hw, 3];
+        if shape != want {
+            return Err(SubmitError::BadInput(format!(
+                "expected shape {want:?}, got {shape:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    fn count_rejected(&self) {
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn cache_hit_response(&self, id: u64, hit: &policy::CachedResult, total_ms: f64) -> Response {
+        let mut r = Response::cache_hit(id, hit, total_ms);
+        r.model = self.model.clone();
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.counters.completed.fetch_add(1, Ordering::Relaxed);
+        self.stats.latency.lock().unwrap().record_ms(total_ms);
+        r
+    }
+
+    /// Response-cache lookup by an externally computed key — the
+    /// server's wire-key fast path.  A hit means the caller can skip
+    /// image decode entirely; a miss is not counted against the cache
+    /// (the post-decode content-key lookup counts once per request).
+    /// Keys live in this generation's cache only, so a hit can never
+    /// cross models or weight generations.
+    pub fn cached_response(&self, key: u64) -> Option<Response> {
+        if !self.ctx.cache.enabled() {
+            return None;
+        }
+        let t0 = Instant::now();
+        let hit = self.ctx.cache.peek(key)?;
+        // Measured, like the content-key hit path — cache hits are real
+        // requests with (near-zero) real latency.
+        let total_ms = crate::util::ms(t0.elapsed());
+        Some(self.cache_hit_response(0, &hit, total_ms))
+    }
+
+    /// Zero-copy submission onto this generation: the image already
+    /// lives in a pooled lease (ideally from [`Generation::arena`]).
+    /// The cache is consulted first (a hit replies immediately without
+    /// touching an engine); otherwise the selector routes to the best
+    /// pool predicted to meet the deadline, or sheds.  `wire_key`
+    /// optionally keys the response cache on the raw request bytes so a
+    /// repeat of the same wire spec skips decode entirely next time.
+    pub fn submit_pooled(
+        &self,
+        id: u64,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.check_shape(image.shape())?;
+        let submitted = Instant::now();
+
+        // Response cache: repeated frames skip inference entirely.
+        let cache_key = if self.ctx.cache.enabled() {
+            let key = image_key(image.data());
+            if let Some(hit) = self.ctx.cache.get(key) {
+                // Re-install the wire-key alias: it may have been
+                // LRU-evicted independently of the content entry, and
+                // this request never reaches a worker to restore it.
+                if let Some(wk) = wire_key {
+                    self.ctx.cache.put(wk, hit.clone());
+                }
+                let (tx, rx) = mpsc::channel();
+                let total_ms = crate::util::ms(submitted.elapsed());
+                let _ = tx.send(self.cache_hit_response(id, &hit, total_ms));
+                return Ok(rx);
+            }
+            Some(key)
+        } else {
+            None
+        };
+
+        let views: Vec<PoolView> = self.pools.iter().map(EnginePool::view).collect();
+        let budget_ms = slo.deadline_ms();
+        let decision = self
+            .selector
+            .choose(&self.ctx.predictor, &views, &slo, budget_ms);
+
+        let pool = match decision {
+            Decision::Route { pool, .. } => pool,
+            Decision::Shed { best_ms } => {
+                self.count_rejected();
+                let any_room = views.iter().any(|v| v.queued < v.capacity);
+                return Err(match (budget_ms, any_room) {
+                    (Some(deadline_ms), true) => {
+                        self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
+                        SubmitError::Shed {
+                            predicted_ms: best_ms,
+                            deadline_ms,
+                        }
+                    }
+                    _ => SubmitError::Overloaded,
+                });
+            }
+        };
+
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id,
+            image,
+            submitted,
+            slo,
+            cache_key,
+            wire_key: wire_key.filter(|_| cache_key.is_some()),
+            reply: tx,
+        };
+        match self.pools[pool].router.route(req) {
+            Ok(_) => Ok(rx),
+            Err(RouteError::Overloaded(_)) => {
+                self.count_rejected();
+                Err(SubmitError::Overloaded)
+            }
+            // Retired mid-swap: the caller re-resolves the model and
+            // retries on the fresh generation (no rejection counted —
+            // the request was never refused, just redirected).
+            Err(RouteError::Closed(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Per-pool policy snapshot rows (`{"cmd":"policy"}`).
+    pub fn pool_snapshots(&self) -> Vec<PoolSnapshot> {
+        self.pools
+            .iter()
+            .map(|p| {
+                let view = p.view();
+                PoolSnapshot {
+                    engine: p.kind.as_str(),
+                    workers: p.workers,
+                    queued: view.queued,
+                    capacity: view.capacity,
+                    predicted_ms: self.selector.predict_ms(&self.ctx.predictor, &view),
+                    samples: self.ctx.predictor.samples(p.kind),
+                }
+            })
+            .collect()
+    }
+
+    /// Close queues (graceful: admitted requests still drain) and join
+    /// every worker.  Idempotent — the second caller joins nothing.
+    /// In-flight requests are all answered before this returns, because
+    /// workers only exit once their queue is closed *and* empty.
+    pub(super) fn retire(&self) -> Vec<WorkerReport> {
+        for p in &self.pools {
+            p.router.close_all();
+        }
+        let handles: Vec<JoinHandle<WorkerReport>> =
+            std::mem::take(&mut *self.handles.lock().unwrap());
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    }
+}
+
+impl Drop for Generation {
+    /// Backstop for generations dropped without an explicit retire (the
+    /// last lease on a reloaded-away generation going out of scope):
+    /// close + drain + join so engines and pooled tensors are released
+    /// exactly when the last lease ends, never before a queued request
+    /// was answered.  Workers never hold a lease on their own
+    /// generation, so this join cannot be a self-join.
+    fn drop(&mut self) {
+        let _ = self.retire();
+    }
+}

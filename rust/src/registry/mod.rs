@@ -1,0 +1,430 @@
+//! Multi-model serving registry (DESIGN.md §8).
+//!
+//! The runtime used to be hard-wired to exactly one
+//! `artifacts/manifest.json`.  The registry lifts that to N named models
+//! — each its own manifest + weights dir, discovered from a
+//! `models.json` index or repeated `--model name=path` flags — with:
+//!
+//! * **lazy per-model engine pools**: a model's [`Generation`] (pools +
+//!   warmed workers + arena + policy state) is built on first request,
+//!   or eagerly with `registry.preload`;
+//! * **atomic hot reload**: [`ModelRegistry::reload`] builds and warms a
+//!   *new* generation from disk, then swaps one `Arc` — requests
+//!   resolving the model concurrently get either the old or the new
+//!   generation, never a half-warmed one;
+//! * **RAII generation leases**: [`GenerationLease`] (a wrapped `Arc`)
+//!   pins a generation for the duration of a request, so a retired
+//!   generation's pooled tensors and engines drop only after its last
+//!   lease ends and its queues have drained — in-flight requests always
+//!   finish on the generation that admitted them;
+//! * **structural policy namespacing**: each generation owns its own
+//!   predictor + response cache, so a cache hit can never cross models
+//!   (content hashes collide across models by construction — same
+//!   pixels, different weights) nor weight generations.
+//!
+//! Unknown model names are a structured reject
+//! ([`SubmitError::UnknownModel`]), never a silent fallback to the
+//! default model.
+
+pub mod generation;
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::ops::Deref;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::config::{Config, RegistryConfig};
+use crate::coordinator::worker::{SharedStats, WorkerReport};
+use crate::coordinator::SubmitError;
+
+pub use generation::Generation;
+
+/// Per-model serving counters.  Owned by the [`ModelEntry`], not the
+/// generation, so they survive hot reloads.
+#[derive(Debug, Default)]
+pub struct ModelCounters {
+    pub completed: AtomicU64,
+    pub images: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+/// RAII guard pinning one model generation for the duration of a
+/// request.  Holding the lease guarantees the generation's arena,
+/// engines, and policy state outlive the request even if the model is
+/// hot-reloaded concurrently; dropping the last lease of a retired
+/// generation releases all of it (after the queue drain — see
+/// [`Generation`]'s drop docs).
+pub struct GenerationLease {
+    inner: Arc<Generation>,
+}
+
+impl Deref for GenerationLease {
+    type Target = Generation;
+    fn deref(&self) -> &Generation {
+        &self.inner
+    }
+}
+
+/// What a completed [`ModelRegistry::reload`] reports.
+#[derive(Debug, Clone)]
+pub struct ReloadReport {
+    pub model: String,
+    /// The new generation number now serving.
+    pub generation: u64,
+    /// Wall time spent building + warming the new generation (the old
+    /// one kept serving throughout).
+    pub warm_ms: f64,
+}
+
+/// One registered model: artifact location, lifetime counters, and the
+/// current generation slot.
+pub struct ModelEntry {
+    name: Arc<str>,
+    artifacts: PathBuf,
+    counters: Arc<ModelCounters>,
+    /// Generation numbers issued so far (1 = first load).
+    generations: AtomicU64,
+    /// The published generation; `None` until first use (lazy build).
+    current: RwLock<Option<Arc<Generation>>>,
+    /// Serializes builds and reloads for this model; never held while
+    /// serving (reads of `current` don't take it), so the old
+    /// generation keeps serving during a warm-up.
+    build_lock: Mutex<()>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn artifacts(&self) -> &std::path::Path {
+        &self.artifacts
+    }
+
+    pub fn counters(&self) -> &ModelCounters {
+        &self.counters
+    }
+
+    /// Generation currently published (0 = never loaded).
+    pub fn generation_number(&self) -> u64 {
+        self.generations.load(Ordering::Relaxed)
+    }
+
+    pub fn loaded(&self) -> bool {
+        self.current.read().unwrap().is_some()
+    }
+
+    fn current(&self) -> Option<Arc<Generation>> {
+        self.current.read().unwrap().clone()
+    }
+}
+
+/// The model table: name -> entry, plus the config needed to build
+/// generations on demand.
+pub struct ModelRegistry {
+    cfg: Config,
+    entries: BTreeMap<String, Arc<ModelEntry>>,
+    default_model: String,
+    stats: Arc<SharedStats>,
+    /// Worker reports from generations retired by hot reloads, folded
+    /// into the shutdown report.
+    retired: Arc<Mutex<Vec<WorkerReport>>>,
+    /// The background drain threads reload() spawns — joined at
+    /// shutdown so no retired generation is still draining (and no
+    /// report is lost) when shutdown returns.
+    retire_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl ModelRegistry {
+    /// Build the table from config.  No generations are constructed here
+    /// (see [`ModelRegistry::preload`] / lazy resolution); this only
+    /// validates the shape of the registry itself.
+    pub fn new(cfg: Config, stats: Arc<SharedStats>) -> Result<ModelRegistry> {
+        let specs: Vec<(String, PathBuf)> = if cfg.registry.models.is_empty() {
+            vec![(
+                RegistryConfig::SINGLE_MODEL.to_string(),
+                cfg.artifacts.clone(),
+            )]
+        } else {
+            cfg.registry.models.clone()
+        };
+        let default_model = if cfg.registry.models.is_empty() {
+            RegistryConfig::SINGLE_MODEL.to_string()
+        } else {
+            cfg.registry.effective_default().to_string()
+        };
+
+        let mut entries = BTreeMap::new();
+        for (name, artifacts) in specs {
+            let entry = Arc::new(ModelEntry {
+                name: Arc::from(name.as_str()),
+                artifacts,
+                counters: Arc::new(ModelCounters::default()),
+                generations: AtomicU64::new(0),
+                current: RwLock::new(None),
+                build_lock: Mutex::new(()),
+            });
+            if entries.insert(name.clone(), entry).is_some() {
+                bail!("duplicate model name '{name}' in registry");
+            }
+        }
+        if !entries.contains_key(&default_model) {
+            bail!("default model '{default_model}' is not registered");
+        }
+
+        Ok(ModelRegistry {
+            cfg,
+            entries,
+            default_model,
+            stats,
+            retired: Arc::new(Mutex::new(Vec::new())),
+            retire_threads: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// The config generations are built from.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Registered model names, in table order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Arc<ModelEntry>> {
+        self.entries.get(name)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &Arc<ModelEntry>> {
+        self.entries.values()
+    }
+
+    /// Resolve a model name (`None` = default) to a leased generation,
+    /// building it on first use.  Unknown names are a structured reject
+    /// — never a fallback to the default model.
+    pub fn resolve(&self, model: Option<&str>) -> Result<GenerationLease, SubmitError> {
+        let name = model.unwrap_or(&self.default_model);
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| SubmitError::UnknownModel(name.to_string()))?;
+        if let Some(g) = entry.current() {
+            return Ok(GenerationLease { inner: g });
+        }
+        self.build_current(entry).map_err(|e| SubmitError::ModelUnavailable {
+            model: name.to_string(),
+            reason: format!("{e:#}"),
+        })
+    }
+
+    /// First-use build under the entry's build lock (double-checked so
+    /// concurrent first requests build once and share the result).
+    fn build_current(&self, entry: &Arc<ModelEntry>) -> Result<GenerationLease> {
+        let _build = entry.build_lock.lock().unwrap();
+        if let Some(g) = entry.current() {
+            return Ok(GenerationLease { inner: g });
+        }
+        let gen_no = entry.generations.fetch_add(1, Ordering::Relaxed) + 1;
+        let built = Arc::new(Generation::start(
+            entry.name.clone(),
+            gen_no,
+            &entry.artifacts,
+            &self.cfg,
+            self.stats.clone(),
+            entry.counters.clone(),
+        )?);
+        *entry.current.write().unwrap() = Some(built.clone());
+        Ok(GenerationLease { inner: built })
+    }
+
+    /// Eagerly build every registered model's pools (startup preload, or
+    /// just the default model when `default_only`).
+    pub fn preload(&self, default_only: bool) -> Result<()> {
+        if default_only {
+            self.resolve(None)
+                .map_err(|e| anyhow::anyhow!("preloading default model: {e}"))?;
+            return Ok(());
+        }
+        for name in self.entries.keys() {
+            self.resolve(Some(name))
+                .map_err(|e| anyhow::anyhow!("preloading model '{name}': {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Atomic hot reload: build + warm a fresh generation from the
+    /// model's artifacts dir, publish it with one `Arc` swap, and drain
+    /// the old generation on a background thread.  In-flight requests
+    /// finish on the old generation; its engines and pooled tensors are
+    /// released only once its queues have drained and the last lease
+    /// ends.  On build failure the old generation keeps serving
+    /// untouched.
+    pub fn reload(&self, model: Option<&str>) -> Result<ReloadReport> {
+        let name = model.unwrap_or(&self.default_model);
+        let entry = self
+            .entries
+            .get(name)
+            .with_context(|| format!("unknown model '{name}'"))?;
+
+        let _build = entry.build_lock.lock().unwrap();
+        let gen_no = entry.generations.fetch_add(1, Ordering::Relaxed) + 1;
+        let fresh = Arc::new(Generation::start(
+            entry.name.clone(),
+            gen_no,
+            &entry.artifacts,
+            &self.cfg,
+            self.stats.clone(),
+            entry.counters.clone(),
+        )?);
+        let warm_ms = fresh.warm_ms();
+        let old = entry.current.write().unwrap().replace(fresh);
+
+        if let Some(old) = old {
+            let sink = self.retired.clone();
+            // Drain off the caller's thread: retire() blocks until the
+            // old queues are empty (every admitted request answered).
+            // The handle is kept so shutdown() can join the drain.
+            let handle = std::thread::Builder::new()
+                .name(format!("zuluko-retire-{name}"))
+                .spawn(move || {
+                    let reports = old.retire();
+                    sink.lock().unwrap().extend(reports);
+                    drop(old);
+                })
+                .expect("spawn retire thread");
+            self.retire_threads.lock().unwrap().push(handle);
+        }
+
+        Ok(ReloadReport {
+            model: name.to_string(),
+            generation: gen_no,
+            warm_ms,
+        })
+    }
+
+    /// Close every generation, join every worker — including the
+    /// background drains of reload-retired generations — and return all
+    /// worker reports.  When this returns, every admitted request has
+    /// been answered and no generation is still draining.
+    pub fn shutdown(&self) -> Vec<WorkerReport> {
+        let mut reports = Vec::new();
+        for entry in self.entries.values() {
+            let taken = entry.current.write().unwrap().take();
+            if let Some(g) = taken {
+                reports.extend(g.retire());
+                // `g` may still be leased elsewhere; dropping our Arc is
+                // enough — retire() already joined the workers.
+            }
+        }
+        let drains: Vec<_> =
+            std::mem::take(&mut *self.retire_threads.lock().unwrap());
+        for h in drains {
+            let _ = h.join();
+        }
+        reports.extend(self.retired.lock().unwrap().drain(..));
+        reports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+
+    fn synth_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "zuluko_registry_unit_{tag}_{}",
+            std::process::id()
+        ));
+        crate::testkit::manifest::write_synthetic(&dir, tag, 100, 227, &[1, 2])
+            .unwrap();
+        dir
+    }
+
+    fn sim_cfg(models: &[(&str, PathBuf)]) -> Config {
+        let mut cfg = Config {
+            engine: EngineKind::Sim,
+            workers: 1,
+            max_batch: 2,
+            queue_capacity: 8,
+            ..Config::default()
+        };
+        for (n, p) in models {
+            cfg.registry.upsert(n, p.clone());
+        }
+        cfg
+    }
+
+    #[test]
+    fn single_model_mode_registers_the_implicit_default() {
+        let cfg = Config::default();
+        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        assert_eq!(reg.default_model(), RegistryConfig::SINGLE_MODEL);
+        assert_eq!(reg.names(), vec![RegistryConfig::SINGLE_MODEL]);
+        assert!(!reg.entry(RegistryConfig::SINGLE_MODEL).unwrap().loaded());
+    }
+
+    #[test]
+    fn unknown_model_is_a_structured_reject() {
+        let cfg = sim_cfg(&[("a", synth_dir("a"))]);
+        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        match reg.resolve(Some("nope")) {
+            Err(SubmitError::UnknownModel(m)) => assert_eq!(m, "nope"),
+            other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+        }
+        // And never a silent fallback: the default model stays unloaded.
+        assert!(!reg.entry("a").unwrap().loaded());
+    }
+
+    #[test]
+    fn lazy_build_then_reload_bumps_generation() {
+        let cfg = sim_cfg(&[("a", synth_dir("lazyreload"))]);
+        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        assert_eq!(reg.entry("a").unwrap().generation_number(), 0);
+        let lease = reg.resolve(Some("a")).unwrap();
+        assert_eq!(lease.generation(), 1);
+        let report = reg.reload(Some("a")).unwrap();
+        assert_eq!(report.generation, 2);
+        // The old lease still works structurally (model name intact),
+        // and the new resolution sees the new generation.
+        assert_eq!(lease.model(), "a");
+        let fresh = reg.resolve(Some("a")).unwrap();
+        assert_eq!(fresh.generation(), 2);
+        drop(lease);
+        let reports = reg.shutdown();
+        // Exactly two single-worker generations served: the reloaded-away
+        // gen 1 (drain joined by shutdown) and the live gen 2.
+        assert_eq!(reports.len(), 2);
+    }
+
+    #[test]
+    fn unavailable_artifacts_fail_without_poisoning_the_entry() {
+        let missing = std::env::temp_dir().join(format!(
+            "zuluko_registry_missing_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&missing);
+        let cfg = sim_cfg(&[("ghost", missing.clone())]);
+        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        match reg.resolve(Some("ghost")) {
+            Err(SubmitError::ModelUnavailable { model, .. }) => {
+                assert_eq!(model, "ghost")
+            }
+            other => panic!("expected ModelUnavailable, got {:?}", other.map(|_| ())),
+        }
+        // Artifacts appear later -> the same entry builds fine.
+        crate::testkit::manifest::write_synthetic(&missing, "ghost", 10, 227, &[1])
+            .unwrap();
+        let lease = reg.resolve(Some("ghost")).unwrap();
+        assert_eq!(lease.generation(), 2, "failed build burned generation 1");
+        drop(lease);
+        reg.shutdown();
+    }
+}

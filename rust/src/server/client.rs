@@ -19,6 +19,8 @@ pub struct InferReply {
     pub batch: usize,
     /// Which engine served the request ("cache" for a cache hit).
     pub engine: String,
+    /// Which registry model served the request ("" on errors).
+    pub model: String,
     /// True when served from the response cache.
     pub cached: bool,
     /// Machine-matchable error kind ("shed", "overloaded", ...).
@@ -77,6 +79,40 @@ impl Client {
         Ok(parse_reply(&j))
     }
 
+    /// Infer on a seeded synthetic image, addressed to a registry model
+    /// (`None` = the server's default model).
+    pub fn infer_synthetic_model(
+        &mut self,
+        id: u64,
+        seed: u64,
+        model: Option<&str>,
+    ) -> Result<InferReply> {
+        let mut img = Json::obj();
+        img.set("synthetic", seed.into());
+        let mut o = Json::obj();
+        o.set("id", id.into()).set("image", img);
+        if let Some(m) = model {
+            o.set("model", m.into());
+        }
+        let j = self.roundtrip(&o.to_string())?;
+        Ok(parse_reply(&j))
+    }
+
+    /// Registry listing (`{"cmd":"models"}`).
+    pub fn models(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"cmd":"models"}"#)
+    }
+
+    /// Hot reload a model's artifacts (`None` = default model).
+    pub fn reload(&mut self, model: Option<&str>) -> Result<Json> {
+        let mut o = Json::obj();
+        o.set("cmd", "reload".into());
+        if let Some(m) = model {
+            o.set("model", m.into());
+        }
+        self.roundtrip(&o.to_string())
+    }
+
     /// Infer on a seeded synthetic image with an SLO (deadline and/or
     /// priority).
     pub fn infer_synthetic_slo(
@@ -122,6 +158,11 @@ fn parse_reply(j: &Json) -> InferReply {
         batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
         engine: j
             .get("engine")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string(),
+        model: j
+            .get("model")
             .and_then(|v| v.as_str())
             .unwrap_or("")
             .to_string(),

@@ -15,7 +15,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, SubmitError};
-use crate::tensor::image::{Image, INPUT_HW};
+use crate::policy::Slo;
+use crate::tensor::image::Image;
 use crate::tensor::{PooledTensor, TensorPool};
 
 use protocol::{ClientMsg, ImageSpec};
@@ -101,7 +102,6 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let pool = coord.pool();
     let mut line = String::new();
     loop {
         line.clear();
@@ -118,60 +118,99 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             Ok(ClientMsg::Ping) => "{\"ok\":true,\"pong\":true}".to_string(),
             Ok(ClientMsg::Stats) => protocol::stats_line(&coord.stats()),
             Ok(ClientMsg::Policy) => protocol::policy_line(&coord.policy_snapshot()),
-            Ok(ClientMsg::Infer { id, image, slo }) => {
-                // Wire-key fast path: a repeat of the same raw image
-                // spec is answered from the response cache before any
-                // pixel is decoded.
-                let wire_key = protocol::wire_key(&image);
-                match wire_key.and_then(|k| coord.cached_response(k)) {
-                    Some(mut resp) => {
-                        resp.id = id;
-                        protocol::response_line(&resp)
-                    }
-                    None => match load_image(&image, &pool) {
-                        Err(e) => protocol::error_line(id, &format!("image: {e}")),
-                        Ok(tensor) => {
-                            match coord.submit_pooled(tensor, slo, wire_key) {
-                                Err(SubmitError::Overloaded) => {
-                                    protocol::error_line_kind(
-                                        id,
-                                        "overloaded",
-                                        "overloaded",
-                                    )
-                                }
-                                Err(SubmitError::Shed {
-                                    predicted_ms,
-                                    deadline_ms,
-                                }) => protocol::shed_line(id, predicted_ms, deadline_ms),
-                                Err(e) => protocol::error_line(id, &e.to_string()),
-                                Ok(rx) => match rx.recv() {
-                                    Ok(mut resp) => {
-                                        resp.id = id; // echo client id, not internal id
-                                        protocol::response_line(&resp)
-                                    }
-                                    Err(_) => protocol::error_line(id, "worker gone"),
-                                },
-                            }
-                        }
-                    },
-                }
+            Ok(ClientMsg::Models) => {
+                protocol::models_line(coord.default_model(), &coord.stats().models)
             }
+            Ok(ClientMsg::Reload { model }) => match coord.reload(model.as_deref()) {
+                Ok(report) => protocol::reload_line(&report),
+                Err(e) => {
+                    protocol::error_line_kind(0, "reload_failed", &format!("{e:#}"))
+                }
+            },
+            Ok(ClientMsg::Infer {
+                id,
+                image,
+                slo,
+                model,
+            }) => infer_reply(coord, id, model.as_deref(), &image, slo),
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
     }
 }
 
+/// One inference request end-to-end: resolve the model (structured
+/// reject on unknown names — never a default fallback), consult the
+/// per-model wire-key cache, decode into the model's arena, submit.
+///
+/// A hot reload can retire the resolved generation between resolve and
+/// route (`SubmitError::Closed`); one re-resolve + re-decode retries on
+/// the fresh generation so the client never sees the swap.
+fn infer_reply(
+    coord: &Coordinator,
+    id: u64,
+    model: Option<&str>,
+    image: &ImageSpec,
+    slo: Slo,
+) -> String {
+    const ATTEMPTS: usize = 2;
+    for attempt in 0..ATTEMPTS {
+        let lease = match coord.lease(model) {
+            Ok(l) => l,
+            Err(e @ SubmitError::UnknownModel(_)) => {
+                return protocol::error_line_kind(id, "unknown_model", &e.to_string())
+            }
+            Err(e @ SubmitError::ModelUnavailable { .. }) => {
+                return protocol::error_line_kind(id, "model_unavailable", &e.to_string())
+            }
+            Err(e) => return protocol::error_line(id, &e.to_string()),
+        };
+        // Wire-key fast path: a repeat of the same raw image spec is
+        // answered from this model's response cache before any pixel is
+        // decoded.  Per-model caches make the key collision-free across
+        // models by construction.
+        let wire_key = protocol::wire_key(image);
+        if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
+            resp.id = id;
+            return protocol::response_line(&resp);
+        }
+        let tensor = match load_image(image, lease.input_hw(), &lease.arena()) {
+            Err(e) => return protocol::error_line(id, &format!("image: {e}")),
+            Ok(t) => t,
+        };
+        return match coord.submit_on(&lease, tensor, slo, wire_key) {
+            Err(SubmitError::Closed) if attempt + 1 < ATTEMPTS => continue,
+            Err(SubmitError::Overloaded) => {
+                protocol::error_line_kind(id, "overloaded", "overloaded")
+            }
+            Err(SubmitError::Shed {
+                predicted_ms,
+                deadline_ms,
+            }) => protocol::shed_line(id, predicted_ms, deadline_ms),
+            Err(e) => protocol::error_line(id, &e.to_string()),
+            Ok(rx) => match rx.recv() {
+                Ok(mut resp) => {
+                    resp.id = id; // echo client id, not internal id
+                    protocol::response_line(&resp)
+                }
+                Err(_) => protocol::error_line(id, "worker gone"),
+            },
+        };
+    }
+    protocol::error_line(id, "closed")
+}
+
 /// Decode straight into a pooled lease — steady-state decode allocates
 /// no pixel buffers (the synthetic/ppm byte staging still does; pixels
-/// are the hot part).
-fn load_image(spec: &ImageSpec, pool: &TensorPool) -> Result<PooledTensor> {
+/// are the hot part).  The lease comes from the *addressed model's*
+/// arena at that model's input size.
+fn load_image(spec: &ImageSpec, hw: usize, pool: &TensorPool) -> Result<PooledTensor> {
     let img = match spec {
-        ImageSpec::Synthetic(seed) => Image::synthetic(227, 227, *seed),
+        ImageSpec::Synthetic(seed) => Image::synthetic(hw, hw, *seed),
         ImageSpec::Ppm(path) => Image::load_ppm(std::path::Path::new(path))?,
     };
-    let mut buf = pool.lease(INPUT_HW * INPUT_HW * 3);
-    img.to_input_into(&mut buf);
+    let mut buf = pool.lease(hw * hw * 3);
+    img.to_input_into_sized(&mut buf, hw);
     // (H, W, C): the coordinator packs batches itself.
-    PooledTensor::new(&[INPUT_HW, INPUT_HW, 3], buf)
+    PooledTensor::new(&[hw, hw, 3], buf)
 }

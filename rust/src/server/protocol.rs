@@ -6,10 +6,18 @@
 //! {"id": 8, "image": {"ppm": "/path/frame.ppm"}}    // file on the device
 //! {"id": 9, "image": {"synthetic": 1},
 //!  "deadline_ms": 250, "priority": "hi"}            // SLO-tagged request
+//! {"id": 10, "image": {"synthetic": 1},
+//!  "model": "squeezenet-v2"}                        // registry-addressed
 //! {"cmd": "stats"}                                  // live stats
 //! {"cmd": "policy"}                                 // policy introspection
+//! {"cmd": "models"}                                 // registry listing
+//! {"cmd": "reload", "model": "squeezenet-v2"}       // hot reload
 //! {"cmd": "ping"}
 //! ```
+//!
+//! `model` is optional: absent means the default model; an unknown name
+//! is a structured `"kind":"unknown_model"` reject — never a silent
+//! fallback to the default model.
 //!
 //! `id` is mandatory and must be a non-negative integer: replies are
 //! matched to requests by id, so a silently-defaulted id could cross-wire
@@ -44,9 +52,15 @@ pub enum ClientMsg {
         id: u64,
         image: ImageSpec,
         slo: Slo,
+        /// Registry model to serve this request (None = default model).
+        model: Option<String>,
     },
     Stats,
     Policy,
+    /// Registry listing: names, generations, load state.
+    Models,
+    /// Hot reload a model's artifacts (None = default model).
+    Reload { model: Option<String> },
     Ping,
 }
 
@@ -79,12 +93,29 @@ pub fn wire_key(spec: &ImageSpec) -> Option<u64> {
     }
 }
 
+/// Parse an optional `"model"` field: absent -> None (default model);
+/// present but not a non-empty string -> parse error (a malformed model
+/// must never silently become "the default model").
+fn parse_model(j: &Json) -> Result<Option<String>> {
+    match j.get("model") {
+        None => Ok(None),
+        Some(v) => match v.as_str() {
+            Some(s) if !s.is_empty() => Ok(Some(s.to_string())),
+            _ => bail!("'model' must be a non-empty string, got {v:?}"),
+        },
+    }
+}
+
 pub fn parse_request(line: &str) -> Result<ClientMsg> {
     let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "stats" => Ok(ClientMsg::Stats),
             "policy" => Ok(ClientMsg::Policy),
+            "models" => Ok(ClientMsg::Models),
+            "reload" => Ok(ClientMsg::Reload {
+                model: parse_model(&j)?,
+            }),
             "ping" => Ok(ClientMsg::Ping),
             other => bail!("unknown cmd {other}"),
         };
@@ -125,7 +156,13 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
             None => bail!("'priority' must be a string (hi|normal|lo)"),
         }
     }
-    Ok(ClientMsg::Infer { id, image, slo })
+    let model = parse_model(&j)?;
+    Ok(ClientMsg::Infer {
+        id,
+        image,
+        slo,
+        model,
+    })
 }
 
 pub fn response_line(r: &Response) -> String {
@@ -157,6 +194,7 @@ pub fn response_line(r: &Response) -> String {
                 .set("batch", r.batch_size.into())
                 .set("worker", r.worker.into())
                 .set("engine", r.engine.into())
+                .set("model", (&*r.model).into())
                 .set("cached", r.cached.into());
         }
     }
@@ -224,13 +262,52 @@ pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
         .set("dropped", s.pool.dropped.into())
         .set("buffers", s.pool.buffers.into());
     o.set("pool", pool);
+    o.set(
+        "models",
+        Json::Arr(s.models.iter().map(model_stats_obj).collect()),
+    );
     o.to_string()
 }
 
-/// `{"cmd":"policy"}` reply: per-pool predictions + cache + shed counts.
-pub fn policy_line(p: &PolicySnapshot) -> String {
-    let pools = Json::Arr(
-        p.pools
+fn model_stats_obj(m: &crate::coordinator::ModelStatsSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("model", m.model.as_str().into())
+        .set("generation", m.generation.into())
+        .set("loaded", m.loaded.into())
+        .set("default", m.is_default.into())
+        .set("completed", m.completed.into())
+        .set("images", m.images.into())
+        .set("rejected", m.rejected.into())
+        .set("cache_hits", m.cache_hits.into())
+        .set("cache_misses", m.cache_misses.into());
+    o
+}
+
+/// `{"cmd":"models"}` reply: the registry listing.
+pub fn models_line(default_model: &str, models: &[crate::coordinator::ModelStatsSnapshot]) -> String {
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("default", default_model.into())
+        .set(
+            "models",
+            Json::Arr(models.iter().map(model_stats_obj).collect()),
+        );
+    o.to_string()
+}
+
+/// `{"cmd":"reload"}` success reply.
+pub fn reload_line(r: &crate::registry::ReloadReport) -> String {
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("model", r.model.as_str().into())
+        .set("generation", r.generation.into())
+        .set("warm_ms", r.warm_ms.into());
+    o.to_string()
+}
+
+fn pools_arr(pools: &[crate::policy::PoolSnapshot]) -> Json {
+    Json::Arr(
+        pools
             .iter()
             .map(|pool| {
                 let mut o = Json::obj();
@@ -243,20 +320,47 @@ pub fn policy_line(p: &PolicySnapshot) -> String {
                 o
             })
             .collect(),
+    )
+}
+
+fn cache_obj(c: &crate::policy::CacheStats) -> Json {
+    let mut o = Json::obj();
+    o.set("hits", c.hits.into())
+        .set("misses", c.misses.into())
+        .set("len", c.len.into())
+        .set("capacity", c.capacity.into());
+    o
+}
+
+/// `{"cmd":"policy"}` reply: per-pool predictions + cache + shed counts.
+/// Top-level `pools`/`cache` mirror the default model; `models` is the
+/// full per-model table (each row its own pools/cache — policy state is
+/// namespaced by model).
+pub fn policy_line(p: &PolicySnapshot) -> String {
+    let models = Json::Arr(
+        p.models
+            .iter()
+            .map(|m| {
+                let mut o = Json::obj();
+                o.set("model", m.model.as_str().into())
+                    .set("generation", m.generation.into())
+                    .set("loaded", m.loaded.into())
+                    .set("pools", pools_arr(&m.pools))
+                    .set("cache", cache_obj(&m.cache))
+                    .set("shed_predicted", m.shed_predicted.into())
+                    .set("shed_expired", m.shed_expired.into());
+                o
+            })
+            .collect(),
     );
-    let mut cache = Json::obj();
-    cache
-        .set("hits", p.cache.hits.into())
-        .set("misses", p.cache.misses.into())
-        .set("len", p.cache.len.into())
-        .set("capacity", p.cache.capacity.into());
     let mut o = Json::obj();
     o.set("ok", true.into())
         .set("adaptive", p.adaptive.into())
-        .set("pools", pools)
-        .set("cache", cache)
+        .set("pools", pools_arr(&p.pools))
+        .set("cache", cache_obj(&p.cache))
         .set("shed_predicted", p.shed_predicted.into())
-        .set("shed_expired", p.shed_expired.into());
+        .set("shed_expired", p.shed_expired.into())
+        .set("models", models);
     o.to_string()
 }
 
@@ -274,8 +378,47 @@ mod tests {
                 id: 7,
                 image: ImageSpec::Synthetic(42),
                 slo: Slo::default(),
+                model: None,
             }
         );
+    }
+
+    #[test]
+    fn parse_model_field() {
+        let m = parse_request(
+            r#"{"id":7,"image":{"synthetic":42},"model":"squeezenet-v2"}"#,
+        )
+        .unwrap();
+        match m {
+            ClientMsg::Infer { model, .. } => {
+                assert_eq!(model.as_deref(), Some("squeezenet-v2"))
+            }
+            other => panic!("expected infer, got {other:?}"),
+        }
+        // Malformed model must be a parse error, never a silent default.
+        assert!(parse_request(r#"{"id":1,"image":{"synthetic":1},"model":7}"#)
+            .is_err());
+        assert!(parse_request(r#"{"id":1,"image":{"synthetic":1},"model":""}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn parse_reload_and_models_cmds() {
+        assert_eq!(
+            parse_request(r#"{"cmd":"models"}"#).unwrap(),
+            ClientMsg::Models
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"reload"}"#).unwrap(),
+            ClientMsg::Reload { model: None }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"reload","model":"b"}"#).unwrap(),
+            ClientMsg::Reload {
+                model: Some("b".to_string())
+            }
+        );
+        assert!(parse_request(r#"{"cmd":"reload","model":3}"#).is_err());
     }
 
     #[test]
@@ -378,6 +521,7 @@ mod tests {
             batch_size: 2,
             worker: 0,
             engine: "acl",
+            model: std::sync::Arc::from("squeezenet"),
             cached: false,
             kind: "",
             error: None,
@@ -388,6 +532,7 @@ mod tests {
         assert_eq!(j.usize_of("top1").unwrap(), 694);
         assert_eq!(j.usize_of("batch").unwrap(), 2);
         assert_eq!(j.str_of("engine").unwrap(), "acl");
+        assert_eq!(j.str_of("model").unwrap(), "squeezenet");
         assert_eq!(j.get("cached").unwrap().as_bool(), Some(false));
         let err = error_line(9, "overloaded");
         let j = Json::parse(&err).unwrap();

@@ -109,15 +109,24 @@ impl Image {
     /// nothing.  `out` must hold exactly 227*227*3 elements; every slot
     /// is overwritten.
     pub fn to_input_into(&self, out: &mut [f32]) {
-        assert_eq!(out.len(), INPUT_HW * INPUT_HW * 3, "decode buffer size");
+        self.to_input_into_sized(out, INPUT_HW);
+    }
+
+    /// Like [`Image::to_input_into`] but for an arbitrary square input
+    /// size — registry models declare their own `input_hw` in the
+    /// manifest, so the server decodes at whatever size the addressed
+    /// model wants.  `out` must hold exactly `hw*hw*3` elements.
+    pub fn to_input_into_sized(&self, out: &mut [f32], hw: usize) {
+        assert!(hw > 0, "decode size must be positive");
+        assert_eq!(out.len(), hw * hw * 3, "decode buffer size");
         let side = self.width.min(self.height);
         let x0 = (self.width - side) / 2;
         let y0 = (self.height - side) / 2;
         let mut w = 0usize;
-        for oy in 0..INPUT_HW {
-            let sy = y0 + oy * side / INPUT_HW;
-            for ox in 0..INPUT_HW {
-                let sx = x0 + ox * side / INPUT_HW;
+        for oy in 0..hw {
+            let sy = y0 + oy * side / hw;
+            for ox in 0..hw {
+                let sx = x0 + ox * side / hw;
                 let base = (sy * self.width + sx) * 3;
                 for c in 0..3 {
                     let v = self.rgb[base + c] as f32;

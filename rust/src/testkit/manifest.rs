@@ -1,0 +1,97 @@
+//! Synthetic manifest writer: a minimal, valid `manifest.json` so the
+//! serving stack (registry, coordinator, sim engine) can be exercised
+//! end-to-end without the Python AOT toolchain or any HLO artifacts.
+//!
+//! The written manifest passes `Manifest::load`'s structural validation
+//! (one stage, empty param/op tables, empty golden index) and carries
+//! exactly what the sim engine and the coordinator read: `model`,
+//! `input_hw`, `num_classes`, `batch_sizes`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write `<dir>/manifest.json` describing a synthetic model named
+/// `model` with the given class count, square input size, and compiled
+/// batch sizes.  Creates `dir` if needed; overwrites an existing
+/// manifest (that is the point for hot-reload tests).
+pub fn write_synthetic(
+    dir: &Path,
+    model: &str,
+    num_classes: usize,
+    input_hw: usize,
+    batch_sizes: &[usize],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let sizes = batch_sizes
+        .iter()
+        .map(|b| b.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    // Built by hand rather than through util::json so the output shape is
+    // obvious at a glance; keys mirror python/compile/aot.py's manifest.
+    let text = format!(
+        r#"{{
+  "model": "{model}",
+  "input_hw": {input_hw},
+  "input_channels": 3,
+  "num_classes": {num_classes},
+  "attenuation": 1.0,
+  "batch_sizes": [{sizes}],
+  "params": [],
+  "params_q8": [],
+  "scales": {{}},
+  "stages": [
+    {{
+      "index": 0,
+      "name": "sim",
+      "params": [],
+      "in_shape": [{input_hw}, {input_hw}, 3],
+      "out_shape": [{num_classes}],
+      "artifacts": {{}}
+    }}
+  ],
+  "probe_stages": [],
+  "full": {{}},
+  "ops": [],
+  "quant_ops": [],
+  "golden": {{
+    "input": "",
+    "probs": "",
+    "probs_q8": "",
+    "stages": [],
+    "top1": 0,
+    "top1_q8": 0
+  }}
+}}
+"#
+    );
+    std::fs::write(dir.join("manifest.json"), text)
+        .with_context(|| format!("writing {}", dir.join("manifest.json").display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn synthetic_manifest_loads_and_validates() {
+        let dir = std::env::temp_dir().join(format!(
+            "zuluko_testkit_manifest_{}",
+            std::process::id()
+        ));
+        write_synthetic(&dir, "synth-a", 1000, 227, &[1, 2, 4]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "synth-a");
+        assert_eq!(m.input_hw, 227);
+        assert_eq!(m.num_classes, 1000);
+        assert_eq!(m.batch_sizes, vec![1, 2, 4]);
+        assert!(m.params.is_empty());
+        // Overwrite in place (the hot-reload path).
+        write_synthetic(&dir, "synth-b", 10, 227, &[1]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "synth-b");
+        assert_eq!(m.num_classes, 10);
+    }
+}

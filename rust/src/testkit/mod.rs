@@ -3,5 +3,6 @@
 //! (rand/proptest are not dependencies — DESIGN.md §Substitutions.)
 
 pub mod alloc;
+pub mod manifest;
 pub mod prop;
 pub mod rng;

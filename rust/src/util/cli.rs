@@ -7,10 +7,14 @@
 use std::collections::BTreeMap;
 
 /// Parsed command line: subcommand, flags, key-values, positionals.
+///
+/// A flag may be given more than once; [`Args::get`] returns the last
+/// occurrence (override semantics) and [`Args::get_all`] returns every
+/// occurrence in order (list semantics, e.g. repeated `--model`).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     pub positional: Vec<String>,
     /// Flags the program declares; used to reject unknown ones.
     known: Vec<&'static str>,
@@ -48,7 +52,7 @@ impl Args {
                         }
                     }
                 };
-                args.flags.insert(key, val);
+                args.flags.entry(key).or_default().push(val);
             } else if args.subcommand.is_none() && args.positional.is_empty() {
                 args.subcommand = Some(a);
             } else {
@@ -63,8 +67,21 @@ impl Args {
         Self::parse(std::env::args().skip(1), known)
     }
 
+    /// Last occurrence of `--key` (CLI override semantics).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of `--key`, in command-line order (for
+    /// repeatable flags like `--model name=path`).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -133,6 +150,18 @@ mod tests {
     fn rejects_bad_int() {
         let a = Args::parse(v(&["x", "--iters", "abc"]), KNOWN).unwrap();
         assert!(a.get_usize("iters", 1).is_err());
+    }
+
+    #[test]
+    fn repeated_flag_keeps_all_and_get_returns_last() {
+        let a = Args::parse(
+            v(&["serve", "--engine", "acl", "--engine", "tf"]),
+            KNOWN,
+        )
+        .unwrap();
+        assert_eq!(a.get("engine"), Some("tf"));
+        assert_eq!(a.get_all("engine"), vec!["acl", "tf"]);
+        assert!(a.get_all("iters").is_empty());
     }
 
     #[test]

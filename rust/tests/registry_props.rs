@@ -1,0 +1,446 @@
+//! Registry invariants (DESIGN.md §8), end-to-end over the sim engine —
+//! no artifacts or XLA needed, so these run everywhere including CI:
+//!
+//! * an unknown model is a structured reject, never a silent fallback
+//!   to the default model;
+//! * two models served concurrently in one process never cross replies
+//!   (every reply carries its model's name and the sim oracle's top1);
+//! * response-cache hits are per-model: the same bytes sent to two
+//!   models make two cache entries with different answers;
+//! * a hot reload under sustained load loses zero in-flight requests;
+//! * concurrent reload + serve holds the invariants under the
+//!   panic-safety harness (a panicking case is a failing case, not a
+//!   poisoned test process).
+//!
+//! The sim engine's contract (engine::sim): top1 is a pure function of
+//! (model name, pixels), so "reply crossed models" is directly
+//! observable as a wrong class.
+
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use zuluko::config::Config;
+use zuluko::coordinator::{Coordinator, SubmitError};
+use zuluko::engine::sim::expected_top1;
+use zuluko::engine::EngineKind;
+use zuluko::policy::Slo;
+use zuluko::server::client::Client;
+use zuluko::server::Server;
+use zuluko::tensor::image::Image;
+use zuluko::tensor::Tensor;
+use zuluko::testkit::prop::{prop_check, Gen};
+use zuluko::testkit::rng::Rng;
+
+const HW: usize = 227;
+const CLASSES: usize = 1000;
+
+/// A fresh synthetic-model artifacts dir.  Tags are unique per test so
+/// concurrently running tests never touch each other's manifests.
+fn model_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "zuluko_registry_props_{tag}_{}",
+        std::process::id()
+    ));
+    zuluko::testkit::manifest::write_synthetic(&dir, tag, CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    dir
+}
+
+/// Two sim models, first one default.
+fn two_model_cfg(a: &str, b: &str, cache: usize) -> Config {
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(5),
+        queue_capacity: 32,
+        ..Config::default()
+    };
+    cfg.policy.cache_capacity = cache;
+    cfg.registry.upsert(a, model_dir(a));
+    cfg.registry.upsert(b, model_dir(b));
+    cfg.registry.default_model = Some(a.to_string());
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Exactly the pixels the server decodes for `{"synthetic": seed}`.
+fn frame_pixels(seed: u64) -> Vec<f32> {
+    let img = Image::synthetic(HW, HW, seed);
+    let mut buf = vec![0.0f32; HW * HW * 3];
+    img.to_input_into(&mut buf);
+    buf
+}
+
+fn frame_tensor(seed: u64) -> Tensor {
+    Tensor::new(&[HW, HW, 3], frame_pixels(seed)).unwrap()
+}
+
+/// Tear down server + coordinator like server_e2e does: wait for
+/// connection handlers to release their Arc clones, then shutdown.
+fn stop_all(server: Server, mut coord: Arc<Coordinator>) {
+    server.stop();
+    let coord = loop {
+        match Arc::try_unwrap(coord) {
+            Ok(c) => break c,
+            Err(arc) => {
+                coord = arc;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_model_rejected_not_defaulted() {
+    let coord = Arc::new(Coordinator::start(&two_model_cfg("ua", "ub", 0)).unwrap());
+
+    // Library surface: structured UnknownModel, not a default route.
+    match coord.submit_model(Some("nope"), frame_tensor(1), Slo::default()) {
+        Err(SubmitError::UnknownModel(m)) => assert_eq!(m, "nope"),
+        Err(other) => panic!("expected UnknownModel, got {other:?}"),
+        Ok(_) => panic!("unknown model was silently served"),
+    }
+
+    // Wire surface: structured `unknown_model` kind, connection stays up.
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&server.addr().to_string()).unwrap();
+    let r = c.infer_synthetic_model(1, 42, Some("nope")).unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.kind.as_deref(), Some("unknown_model"));
+
+    // Absent model field = default model, by name.
+    let r = c.infer_synthetic_model(2, 42, None).unwrap();
+    assert!(r.ok, "default-model request failed: {:?}", r.error);
+    assert_eq!(r.model, "ua");
+    assert_eq!(r.top1, expected_top1("ua", &frame_pixels(42), CLASSES));
+
+    drop(c);
+    stop_all(server, coord);
+}
+
+/// Acceptance e2e: two models in one process, hammered concurrently
+/// with the *same* seeds, must never cross replies — and their caches
+/// must be disjoint (same bytes -> two entries, two answers).
+#[test]
+fn two_models_serve_concurrently_without_crossing() {
+    let coord = Arc::new(Coordinator::start(&two_model_cfg("xa", "xb", 64)).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    const SEEDS: u64 = 12;
+    const THREADS_PER_MODEL: usize = 2;
+    let mut handles = Vec::new();
+    for model in ["xa", "xb"] {
+        for t in 0..THREADS_PER_MODEL {
+            let addr = addr.clone();
+            let model = model.to_string();
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for i in 0..SEEDS {
+                    let seed = 5000 + i; // same seeds for both models
+                    let id = t as u64 * 10_000 + i;
+                    let r = c.infer_synthetic_model(id, seed, Some(model.as_str())).unwrap();
+                    assert!(r.ok, "{model} seed {seed}: {:?}", r.error);
+                    assert_eq!(r.id, id);
+                    assert_eq!(r.model, model, "reply crossed models");
+                    let want = expected_top1(&model, &frame_pixels(seed), CLASSES);
+                    assert_eq!(
+                        r.top1, want,
+                        "{model} seed {seed}: wrong class — a reply or \
+                         cache entry crossed models"
+                    );
+                }
+            }));
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Same bytes, two models -> two live cache entries, two answers.
+    let mut c = Client::connect(&addr).unwrap();
+    let ra = c.infer_synthetic_model(900, 5000, Some("xa")).unwrap();
+    let rb = c.infer_synthetic_model(901, 5000, Some("xb")).unwrap();
+    assert!(ra.cached, "repeat frame should hit xa's cache");
+    assert!(rb.cached, "repeat frame should hit xb's cache");
+    assert_eq!(ra.top1, expected_top1("xa", &frame_pixels(5000), CLASSES));
+    assert_eq!(rb.top1, expected_top1("xb", &frame_pixels(5000), CLASSES));
+
+    let policy = c.policy().unwrap();
+    let models = policy.get("models").and_then(|m| m.as_arr()).unwrap();
+    assert_eq!(models.len(), 2);
+    for m in models {
+        let name = m.str_of("model").unwrap();
+        let len = m.get("cache").unwrap().usize_of("len").unwrap();
+        assert!(len >= 1, "model {name} cache is empty — entries collapsed");
+    }
+
+    drop(c);
+    stop_all(server, coord);
+}
+
+#[test]
+fn per_model_cache_isolation_same_bytes_two_entries() {
+    let coord = Coordinator::start(&two_model_cfg("ca", "cb", 64)).unwrap();
+    let want_a = expected_top1("ca", &frame_pixels(7), CLASSES);
+    let want_b = expected_top1("cb", &frame_pixels(7), CLASSES);
+
+    let submit = |model: &str| {
+        coord
+            .submit_model(Some(model), frame_tensor(7), Slo::default())
+            .unwrap()
+            .recv()
+            .unwrap()
+    };
+
+    let ra = submit("ca");
+    let rb = submit("cb");
+    assert!(!ra.cached && !rb.cached, "cold path must run inference");
+    assert_eq!(ra.top1, want_a);
+    assert_eq!(rb.top1, want_b);
+
+    // Warm path: each model hits its own entry with its own answer.
+    let ra2 = submit("ca");
+    let rb2 = submit("cb");
+    assert!(ra2.cached && rb2.cached, "repeat frames must hit the cache");
+    assert_eq!(ra2.top1, want_a, "ca cache entry crossed models");
+    assert_eq!(rb2.top1, want_b, "cb cache entry crossed models");
+
+    let snap = coord.policy_snapshot();
+    assert_eq!(snap.models.len(), 2);
+    for m in &snap.models {
+        assert!(m.loaded);
+        assert!(
+            m.cache.len >= 1,
+            "model {} holds no cache entry — same-bytes requests collapsed \
+             into one cross-model entry",
+            m.model
+        );
+        assert!(m.cache.hits >= 1, "model {} never hit", m.model);
+    }
+
+    coord.shutdown();
+}
+
+/// Acceptance e2e: hot reload under sustained two-model load.  Every
+/// request sent gets a correct, same-model reply; reloads bump the
+/// generation; nothing is dropped or crossed while generations swap.
+#[test]
+fn hot_reload_under_load_loses_no_inflight_requests() {
+    let mut cfg = two_model_cfg("ra", "rb", 0);
+    // Preload both models so the generation arithmetic below is
+    // deterministic (lazy first-touch could otherwise race the reloads).
+    cfg.registry.preload = true;
+    let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for model in ["ra", "rb"] {
+        for t in 0..2u64 {
+            let addr = addr.clone();
+            let model = model.to_string();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || -> u64 {
+                let mut c = Client::connect(&addr).unwrap();
+                let mut sent = 0u64;
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Distinct seeds: cache is off, every request must
+                    // reach an engine (real in-flight work).
+                    let seed = (t << 32) | i;
+                    let r = c.infer_synthetic_model(i, seed, Some(model.as_str())).unwrap();
+                    assert!(
+                        r.ok,
+                        "{model} lost a request during reload: {:?} ({:?})",
+                        r.error, r.kind
+                    );
+                    assert_eq!(r.model, model, "reply crossed models");
+                    assert_eq!(
+                        r.top1,
+                        expected_top1(&model, &frame_pixels(seed), CLASSES),
+                        "{model}: wrong class during reload"
+                    );
+                    sent += 1;
+                    i += 1;
+                }
+                sent
+            }));
+        }
+    }
+
+    // Reload both models repeatedly while the load runs.
+    let mut admin = Client::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    for round in 0..3 {
+        for model in ["ra", "rb"] {
+            let j = admin.reload(Some(model)).unwrap();
+            assert_eq!(
+                j.get("ok").and_then(|v| v.as_bool()),
+                Some(true),
+                "reload {model} round {round} failed: {j:?}"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(40));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let sent: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(sent > 0, "load generator sent nothing — test proved nothing");
+
+    // Generations moved: initial load = gen 1, plus 3 reloads each.
+    let stats = admin.stats().unwrap();
+    let models = stats.get("models").and_then(|m| m.as_arr()).unwrap();
+    for m in models {
+        assert_eq!(m.usize_of("generation").unwrap(), 4, "{m:?}");
+        assert_eq!(m.usize_of("rejected").unwrap(), 0, "requests rejected");
+    }
+
+    drop(admin);
+    stop_all(server, coord);
+}
+
+#[test]
+fn reload_failure_keeps_old_generation_serving() {
+    let cfg = two_model_cfg("fa", "fb", 0);
+    let dir_b = model_dir("fb"); // same path the registry uses
+    let coord = Coordinator::start(&cfg).unwrap();
+
+    // Load fb, then corrupt its manifest on disk.
+    let r = coord
+        .submit_model(Some("fb"), frame_tensor(3), Slo::default())
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(r.is_ok());
+    std::fs::write(dir_b.join("manifest.json"), "not json").unwrap();
+
+    // Reload fails fast...
+    assert!(coord.reload(Some("fb")).is_err());
+    // ...and the old generation keeps serving, untouched.
+    let r = coord
+        .submit_model(Some("fb"), frame_tensor(4), Slo::default())
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(r.is_ok(), "old generation died with the failed reload");
+    assert_eq!(r.top1, expected_top1("fb", &frame_pixels(4), CLASSES));
+
+    // Fixed artifacts reload cleanly.
+    zuluko::testkit::manifest::write_synthetic(&dir_b, "fb", CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    let report = coord.reload(Some("fb")).unwrap();
+    assert!(report.generation >= 3, "failed attempt must not stall numbering");
+
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Property: concurrent reload + serve, under the panic-safety harness.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct ReloadCase {
+    requests: usize,
+    reload_every: usize,
+    seed: u64,
+}
+
+struct GenReloadCase;
+
+impl Gen for GenReloadCase {
+    type Value = ReloadCase;
+    fn generate(&self, rng: &mut Rng) -> ReloadCase {
+        ReloadCase {
+            requests: rng.range(4, 16),
+            reload_every: rng.range(1, 6),
+            seed: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &ReloadCase) -> Vec<ReloadCase> {
+        let mut out = Vec::new();
+        if v.requests > 4 {
+            out.push(ReloadCase {
+                requests: v.requests / 2,
+                ..v.clone()
+            });
+        }
+        if v.reload_every > 1 {
+            out.push(ReloadCase {
+                reload_every: 1,
+                ..v.clone()
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_concurrent_reload_and_serve_never_drops_or_crosses() {
+    // One coordinator shared across cases would hide per-case state;
+    // each case builds its own (sim engines make this cheap).
+    prop_check(6, 41, GenReloadCase, |case| {
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let coord =
+                Coordinator::start(&two_model_cfg("pa", "pb", 8)).unwrap();
+            let models = ["pa", "pb"];
+            for i in 0..case.requests {
+                let model = models[i % 2];
+                if i % case.reload_every == 0 {
+                    coord.reload(Some(model)).map_err(|e| format!("reload: {e}"))?;
+                }
+                let seed = case.seed ^ (i as u64);
+                // A reload can retire the resolved generation between
+                // resolve and route; Closed is the documented transient
+                // — re-resolving must succeed.
+                let mut rx = None;
+                for _ in 0..3 {
+                    match coord.submit_model(
+                        Some(model),
+                        frame_tensor(seed),
+                        Slo::default(),
+                    ) {
+                        Ok(r) => {
+                            rx = Some(r);
+                            break;
+                        }
+                        Err(SubmitError::Closed) => continue,
+                        Err(e) => return Err(format!("submit: {e}")),
+                    }
+                }
+                let rx = rx.ok_or("submit kept hitting Closed")?;
+                // Every admitted request must get exactly one reply.
+                let resp = rx
+                    .recv()
+                    .map_err(|_| "admitted request dropped".to_string())?;
+                if !resp.is_ok() {
+                    return Err(format!("request failed: {:?}", resp.error));
+                }
+                if &*resp.model != model {
+                    return Err(format!(
+                        "reply crossed models: wanted {model}, got {}",
+                        resp.model
+                    ));
+                }
+                let want = expected_top1(model, &frame_pixels(seed), CLASSES);
+                if resp.top1 != want {
+                    return Err(format!(
+                        "{model}: top1 {} != expected {want}",
+                        resp.top1
+                    ));
+                }
+            }
+            coord.shutdown();
+            Ok(())
+        }));
+        match result {
+            Ok(inner) => inner,
+            Err(_) => Err("panicked during concurrent reload + serve".into()),
+        }
+    });
+}

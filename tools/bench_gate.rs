@@ -1,0 +1,273 @@
+//! CI perf-regression gate over the bench trajectory JSON.
+//!
+//! Compares a current `make bench-json` output (BENCH_4.json, written by
+//! rust/benches/hot_path_alloc.rs) against a committed baseline and
+//! fails the job when the shipped serving path regresses:
+//!
+//! * `allocs_per_req` (deterministic counting-allocator events) may not
+//!   grow more than the threshold (default 20%) — plus a small absolute
+//!   slack so a 0.10 -> 0.13 jitter on a near-zero baseline is not a
+//!   "30% regression";
+//! * `p99_ms` may not grow more than the threshold *and* more than an
+//!   absolute floor (timing percentiles are noisy on shared CI runners;
+//!   a 0.02ms -> 0.03ms wobble is not a regression).
+//!
+//! Usage:
+//!   bench_gate <baseline.json> <current.json> [--max-regress 0.20]
+//!              [--require-baseline]
+//!
+//! A missing baseline passes with a notice (first run of a fresh
+//! trajectory) unless `--require-baseline` is given.  Exit code 1 on any
+//! violation, with one explanatory line per violation.
+//!
+//! Seed/refresh the baseline with `make bench-baseline` on a quiet
+//! machine, then commit `tools/bench_baseline.json`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use zuluko::util::json::Json;
+
+/// Gate thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct GateOpts {
+    /// Max allowed relative growth (0.20 = +20%).
+    pub max_regress: f64,
+    /// Absolute slack for alloc events/request (counting jitter).
+    pub alloc_abs_slack: f64,
+    /// Absolute floor below which p99 growth is considered noise, ms.
+    pub p99_abs_floor_ms: f64,
+}
+
+impl Default for GateOpts {
+    fn default() -> GateOpts {
+        GateOpts {
+            max_regress: 0.20,
+            alloc_abs_slack: 0.5,
+            p99_abs_floor_ms: 0.2,
+        }
+    }
+}
+
+/// One metric row pulled from a bench JSON's `modes` array.
+#[derive(Debug, Clone)]
+struct Mode {
+    allocs_per_req: f64,
+    p99_ms: f64,
+}
+
+fn mode(doc: &Json, name: &str) -> Option<Mode> {
+    let modes = doc.get("modes")?.as_arr()?;
+    let m = modes
+        .iter()
+        .find(|m| m.get("name").and_then(|n| n.as_str()) == Some(name))?;
+    Some(Mode {
+        allocs_per_req: m.get("allocs_per_req")?.as_f64()?,
+        p99_ms: m.get("p99_ms")?.as_f64()?,
+    })
+}
+
+/// Compare baseline vs current; returns human-readable violations
+/// (empty = gate passes).  Pure so the gate itself is unit-testable —
+/// the acceptance check "fails on an injected >20% regression" lives in
+/// the tests below.
+pub fn gate(baseline: &Json, current: &Json, opts: GateOpts) -> Vec<String> {
+    let mut violations = Vec::new();
+    // The shipped serving path is the pooled mode; that is the one the
+    // gate protects.  (unpooled/legacy are ablation references.)
+    let (base, cur) = match (mode(baseline, "pooled"), mode(current, "pooled")) {
+        (Some(b), Some(c)) => (b, c),
+        (b, c) => {
+            violations.push(format!(
+                "missing 'pooled' mode row (baseline: {}, current: {})",
+                if b.is_some() { "ok" } else { "absent" },
+                if c.is_some() { "ok" } else { "absent" },
+            ));
+            return violations;
+        }
+    };
+
+    let alloc_limit =
+        base.allocs_per_req * (1.0 + opts.max_regress) + opts.alloc_abs_slack;
+    if cur.allocs_per_req > alloc_limit {
+        violations.push(format!(
+            "allocs/request regressed: {:.2} -> {:.2} (limit {:.2} = \
+             baseline +{:.0}% +{:.1} slack)",
+            base.allocs_per_req,
+            cur.allocs_per_req,
+            alloc_limit,
+            opts.max_regress * 100.0,
+            opts.alloc_abs_slack,
+        ));
+    }
+
+    let p99_rel_limit = base.p99_ms * (1.0 + opts.max_regress);
+    if cur.p99_ms > p99_rel_limit && cur.p99_ms - base.p99_ms > opts.p99_abs_floor_ms {
+        violations.push(format!(
+            "p99 latency regressed: {:.3}ms -> {:.3}ms (limit {:.3}ms = \
+             baseline +{:.0}%, noise floor {:.1}ms)",
+            base.p99_ms,
+            cur.p99_ms,
+            p99_rel_limit,
+            opts.max_regress * 100.0,
+            opts.p99_abs_floor_ms,
+        ));
+    }
+
+    violations
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut positional: Vec<String> = Vec::new();
+    let mut opts = GateOpts::default();
+    let mut require_baseline = false;
+    let mut i = 0usize;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--max-regress" => {
+                match argv.get(i + 1).and_then(|v| v.parse::<f64>().ok()) {
+                    Some(v) if v > 0.0 => opts.max_regress = v,
+                    _ => {
+                        eprintln!("--max-regress expects a positive number");
+                        return ExitCode::FAILURE;
+                    }
+                }
+                i += 2;
+            }
+            "--require-baseline" => {
+                require_baseline = true;
+                i += 1;
+            }
+            flag if flag.starts_with("--") => {
+                eprintln!("bench_gate: unknown flag {flag}");
+                return ExitCode::FAILURE;
+            }
+            _ => {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let (baseline_path, current_path) = match positional.as_slice() {
+        [b, c] => (b.as_str(), c.as_str()),
+        _ => {
+            eprintln!(
+                "usage: bench_gate <baseline.json> <current.json> \
+                 [--max-regress 0.20] [--require-baseline]"
+            );
+            return ExitCode::FAILURE;
+        }
+    };
+
+    if !Path::new(baseline_path).exists() {
+        if require_baseline {
+            eprintln!("bench_gate: baseline {baseline_path} missing (required)");
+            return ExitCode::FAILURE;
+        }
+        println!(
+            "bench_gate: no baseline at {baseline_path} — gate passes with a \
+             notice.  Seed one with `make bench-baseline` and commit it to \
+             arm the gate."
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let (baseline, current) = match (load(baseline_path), load(current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (b, c) => {
+            for e in [b.err(), c.err()].into_iter().flatten() {
+                eprintln!("bench_gate: {e}");
+            }
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let violations = gate(&baseline, &current, opts);
+    if violations.is_empty() {
+        println!(
+            "bench_gate: OK — pooled path within {:.0}% of baseline \
+             ({baseline_path} vs {current_path})",
+            opts.max_regress * 100.0
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("bench_gate: FAIL — {v}");
+        }
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(allocs: f64, p99: f64) -> Json {
+        let text = format!(
+            r#"{{"bench":"hot_path_alloc","modes":[
+                {{"name":"pooled","allocs_per_req":{allocs},
+                  "bytes_per_req":100.0,"throughput_rps":1000.0,
+                  "p50_ms":1.0,"p99_ms":{p99}}},
+                {{"name":"unpooled","allocs_per_req":9.0,
+                  "bytes_per_req":3000000.0,"throughput_rps":900.0,
+                  "p50_ms":1.2,"p99_ms":2.0}}]}}"#
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn passes_when_within_threshold() {
+        let base = doc(5.0, 10.0);
+        let cur = doc(5.5, 11.0); // +10%
+        assert!(gate(&base, &cur, GateOpts::default()).is_empty());
+    }
+
+    #[test]
+    fn fails_on_injected_alloc_regression_over_20pct() {
+        let base = doc(5.0, 10.0);
+        let cur = doc(7.0, 10.0); // +40% allocs/request
+        let v = gate(&base, &cur, GateOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("allocs/request"), "{v:?}");
+    }
+
+    #[test]
+    fn fails_on_p99_regression_over_20pct() {
+        let base = doc(5.0, 10.0);
+        let cur = doc(5.0, 13.0); // +30% and > noise floor
+        let v = gate(&base, &cur, GateOpts::default());
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("p99"), "{v:?}");
+    }
+
+    #[test]
+    fn tiny_absolute_wobbles_are_not_regressions() {
+        // Near-zero baselines: +30% relative but microscopic absolute.
+        let base = doc(0.1, 0.02);
+        let cur = doc(0.13, 0.03);
+        assert!(gate(&base, &cur, GateOpts::default()).is_empty());
+    }
+
+    #[test]
+    fn missing_pooled_mode_is_a_violation() {
+        let base = doc(5.0, 10.0);
+        let empty = Json::parse(r#"{"modes":[]}"#).unwrap();
+        let v = gate(&base, &empty, GateOpts::default());
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("missing 'pooled'"));
+    }
+
+    #[test]
+    fn improvements_always_pass() {
+        let base = doc(5.0, 10.0);
+        let cur = doc(1.0, 2.0);
+        assert!(gate(&base, &cur, GateOpts::default()).is_empty());
+    }
+}

@@ -2,7 +2,7 @@
 # it never touches the Rust request path.
 
 .PHONY: artifacts artifacts-quick test-python test-rust bench-json \
-        bench-smoke bench-baseline bench-gate
+        bench-smoke bench-baseline bench-gate stress
 
 # Lower every engine variant to HLO artifacts + manifest + weights.
 artifacts:
@@ -22,7 +22,7 @@ test-rust:
 # emit $(BENCH_OUT) (allocs/request, bytes/request, throughput, p50/p99).
 # Parameterized so each PR's trajectory file is explicit — the old
 # hardcoded name silently clobbered earlier trajectories.
-BENCH_OUT ?= BENCH_4.json
+BENCH_OUT ?= BENCH_5.json
 bench-json:
 	cd rust && cargo bench --bench hot_path_alloc -- --json ../$(BENCH_OUT)
 	cd rust && cargo bench --bench policy_slo -- --quick
@@ -37,8 +37,16 @@ bench-baseline:
 	$(MAKE) bench-json BENCH_OUT=tools/bench_baseline.json
 
 # CI perf-regression gate: fail if the current trajectory regresses
-# >20% vs the committed baseline (no-op with a notice until a baseline
-# is committed — see tools/bench_gate.rs).
+# >20% vs the committed baseline.  GATE_FLAGS passes extra flags
+# through (CI sets --require-baseline after self-seeding, so the gate
+# is always enforcing there — see tools/bench_gate.rs).
+GATE_FLAGS ?=
 bench-gate:
 	cd rust && cargo run --release --bin bench_gate -- \
-		../tools/bench_baseline.json ../$(BENCH_OUT)
+		../tools/bench_baseline.json ../$(BENCH_OUT) $(GATE_FLAGS)
+
+# E12 local repro: skewed 3-model traffic against the sim engine on the
+# shared worker runtime (asserts fixed thread count, zero losses, and
+# bounded cold-model p99 — see EXPERIMENTS.md E12).
+stress:
+	cd rust && cargo run --release --example sched_stress

@@ -1,0 +1,222 @@
+//! E12 — skewed-traffic scheduler stress (sim engine, no artifacts).
+//!
+//! Three registry models share the fixed worker runtime while traffic
+//! is deliberately skewed: `hot` is saturated by closed-loop producers,
+//! `warm` trickles, and `cold` sends occasional deadlined requests.
+//! The run reports, per model, completed/p50/p99, plus worker occupancy
+//! and the final thread accounting — the live demonstration of the
+//! acceptance criteria:
+//!
+//! * total worker threads == the configured runtime size (not
+//!   2 × models × workers), before *and* after a mid-run hot reload;
+//! * the reload drain loses no in-flight request;
+//! * the cold model's p99 stays bounded (its deadlines hold) while the
+//!   hot model saturates — weighted fair share + EDF override at work.
+//!
+//! Run: cargo run --release --example sched_stress [-- --quick]
+//!      (or `make stress`)
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use zuluko::config::Config;
+use zuluko::coordinator::{Coordinator, SubmitError};
+use zuluko::engine::EngineKind;
+use zuluko::policy::Slo;
+use zuluko::tensor::Tensor;
+use zuluko::util::percentile_sorted;
+
+const HW: usize = 32;
+const CLASSES: usize = 100;
+const RUNTIME_WORKERS: usize = 2;
+const COLD_DEADLINE_MS: f64 = 500.0;
+
+fn model_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "zuluko_sched_stress_{tag}_{}",
+        std::process::id()
+    ));
+    zuluko::testkit::manifest::write_synthetic(&dir, tag, CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    dir
+}
+
+fn zuluko_threads() -> usize {
+    zuluko::testkit::sched::threads_named("zuluko-")
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let run_for = if quick {
+        Duration::from_millis(800)
+    } else {
+        Duration::from_secs(3)
+    };
+
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: RUNTIME_WORKERS,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        queue_capacity: 32,
+        ..Config::default()
+    };
+    for m in ["hot", "warm", "cold"] {
+        cfg.registry.upsert(m, model_dir(m));
+    }
+    cfg.registry.default_model = Some("hot".to_string());
+    cfg.registry.preload = true;
+    // Skew the fair share too: cold is twice as important per byte of
+    // backlog as hot — visible in the occupancy split under saturation.
+    cfg.registry.set_weight("cold", 2.0);
+    cfg.validate().unwrap();
+
+    println!("== E12: skewed-traffic shared-runtime stress ==");
+    println!(
+        "3 sim models, runtime_workers={RUNTIME_WORKERS}, window {run_for:?}\n"
+    );
+
+    let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+    let threads_serving = zuluko_threads();
+    println!(
+        "threads: {threads_serving} zuluko threads for 3 models \
+         (pre-runtime layout would hold {})",
+        3 * RUNTIME_WORKERS
+    );
+    assert_eq!(
+        threads_serving, RUNTIME_WORKERS,
+        "worker threads must equal the configured runtime size"
+    );
+
+    type LatMap = std::collections::HashMap<&'static str, Vec<f64>>;
+    let stop = Arc::new(AtomicBool::new(false));
+    let lat: Arc<Mutex<LatMap>> = Arc::new(Mutex::new(LatMap::new()));
+    let dropped = Arc::new(AtomicU64::new(0));
+
+    let mut handles = Vec::new();
+    // hot: 3 closed-loop saturating producers, best-effort.
+    // warm: 1 producer with a small think time.
+    // cold: 1 producer, deadlined, long think time.
+    let roles: &[(&'static str, usize, u64, Option<f64>)] = &[
+        ("hot", 3, 0, None),
+        ("warm", 1, 3, None),
+        ("cold", 1, 10, Some(COLD_DEADLINE_MS)),
+    ];
+    for &(model, producers, think_ms, deadline) in roles {
+        for p in 0..producers {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            let lat = lat.clone();
+            let dropped = dropped.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let slo = match deadline {
+                        Some(ms) => Slo::with_deadline_ms(ms),
+                        None => Slo::default(),
+                    };
+                    let img = Tensor::random(&[HW, HW, 3], ((p as u64) << 32) | i);
+                    i += 1;
+                    match coord.submit_model(Some(model), img, slo) {
+                        Ok(rx) => match rx.recv() {
+                            Ok(r) if r.is_ok() => {
+                                lat.lock().unwrap().entry(model).or_default().push(r.total_ms);
+                            }
+                            Ok(_) => {
+                                dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(SubmitError::Overloaded) => std::thread::yield_now(),
+                        // Reload race: the resolved generation retired
+                        // between resolve and admit — re-resolve next
+                        // iteration lands on the fresh one.
+                        Err(SubmitError::Closed) => continue,
+                        Err(e) => panic!("{model}: {e}"),
+                    }
+                    if think_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(think_ms));
+                    }
+                }
+            }));
+        }
+    }
+
+    // Mid-run: hot-reload the hot model under full pressure.  The drain
+    // must not drop an in-flight request or grow the fleet.
+    std::thread::sleep(run_for / 2);
+    let report = coord.reload(Some("hot")).unwrap();
+    println!(
+        "mid-run reload: hot -> gen {} ({:.0}ms warm, under saturation)",
+        report.generation, report.warm_ms
+    );
+    std::thread::sleep(run_for / 2);
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    println!("\n| model | completed | p50 ms | p99 ms |");
+    println!("|-------|-----------|--------|--------|");
+    let lat = Arc::try_unwrap(lat).unwrap().into_inner().unwrap();
+    let mut cold_p99 = 0.0;
+    for &(model, ..) in roles {
+        let mut xs = lat.get(model).cloned().unwrap_or_default();
+        xs.sort_by(f64::total_cmp);
+        let p50 = percentile_sorted(&xs, 50.0);
+        let p99 = percentile_sorted(&xs, 99.0);
+        if model == "cold" {
+            cold_p99 = p99;
+        }
+        println!("| {model} | {} | {p50:.2} | {p99:.2} |", xs.len());
+    }
+
+    let stats = coord.stats();
+    println!("\nworker occupancy:");
+    for w in &stats.workers {
+        println!(
+            "  worker {}: batches={} images={} busy={:.0}%",
+            w.worker,
+            w.batches,
+            w.images,
+            w.busy_frac * 100.0
+        );
+    }
+    println!("queue depths at stop:");
+    for q in &stats.queues {
+        println!(
+            "  {}@g{}/{}: queued={} inflight={} weight={}",
+            q.model, q.generation, q.engine, q.queued, q.inflight, q.weight
+        );
+    }
+
+    // Let the reload drain settle, then check the acceptance criteria.
+    let t0 = Instant::now();
+    while zuluko_threads() > RUNTIME_WORKERS && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let threads_after = zuluko_threads();
+    let lost = dropped.load(Ordering::Relaxed);
+    println!(
+        "\nthreads after reload drain: {threads_after} (want {RUNTIME_WORKERS}) \
+         | failed/dropped replies: {lost} | cold p99: {cold_p99:.2}ms \
+         (deadline {COLD_DEADLINE_MS:.0}ms)"
+    );
+    assert_eq!(threads_after, RUNTIME_WORKERS, "reload drain grew the fleet");
+    assert_eq!(lost, 0, "requests were lost under reload + saturation");
+    assert!(
+        cold_p99 > 0.0 && cold_p99 < COLD_DEADLINE_MS,
+        "cold p99 {cold_p99:.2}ms not bounded — starvation"
+    );
+    println!("PASS: fixed fleet, zero losses, cold deadlines held.");
+
+    match Arc::try_unwrap(coord) {
+        Ok(c) => {
+            c.shutdown();
+        }
+        Err(_) => panic!("coordinator still referenced"),
+    }
+}

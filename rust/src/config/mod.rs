@@ -14,10 +14,13 @@ use crate::util::json::Json;
 /// SLO policy knobs (DESIGN.md §7).
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
-    /// Run two engine pools (configured engine + int8 quant path) with
+    /// Run two engine queues (configured engine + int8 quant path) with
     /// per-request adaptive selection.
     pub adaptive: bool,
-    /// Workers in the quant pool when adaptive.
+    /// Legacy knob from the per-pool-worker era: the shared runtime
+    /// serves every queue from one fixed fleet, so this no longer
+    /// allocates threads.  Parsed and validated for config
+    /// compatibility; ignored by the scheduler.
     pub quant_workers: usize,
     /// Response-cache entries (0 disables the cache).
     pub cache_capacity: usize,
@@ -83,6 +86,11 @@ pub struct RegistryConfig {
     /// lazily on first request (trades startup time for first-request
     /// latency).
     pub preload: bool,
+    /// Per-model fair-share weights for the shared worker runtime
+    /// (models.json `"weights"` / `--model-weight name=w`).  A model
+    /// absent here weighs 1.0; under saturation each backlogged model
+    /// receives service proportional to its weight.
+    pub weights: Vec<(String, f64)>,
 }
 
 impl RegistryConfig {
@@ -96,6 +104,39 @@ impl RegistryConfig {
             Some(slot) => slot.1 = path,
             None => self.models.push((name.to_string(), path)),
         }
+    }
+
+    /// Apply a `"weights"` JSON object (name -> number) — shared by the
+    /// config file's `registry` section and a models.json index so the
+    /// two sources can't drift.
+    pub fn apply_weights_json(&mut self, ws: &Json) -> Result<()> {
+        let obj = ws.as_obj().ok_or_else(|| {
+            anyhow::anyhow!("registry \"weights\" must be an object of name -> number")
+        })?;
+        for (name, v) in obj {
+            match v.as_f64() {
+                Some(w) => self.set_weight(name, w),
+                None => bail!("weight for model '{name}' must be a number"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Set or replace a model's scheduler weight.
+    pub fn set_weight(&mut self, name: &str, weight: f64) {
+        match self.weights.iter_mut().find(|(n, _)| n == name) {
+            Some(slot) => slot.1 = weight,
+            None => self.weights.push((name.to_string(), weight)),
+        }
+    }
+
+    /// The shared-runtime fair-share weight for `name` (1.0 default).
+    pub fn weight_for(&self, name: &str) -> f64 {
+        self.weights
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, w)| *w)
+            .unwrap_or(1.0)
     }
 
     /// The effective default model name.
@@ -145,6 +186,9 @@ impl RegistryConfig {
         if let Some(p) = j.get("preload").and_then(|v| v.as_bool()) {
             reg.preload = p;
         }
+        if let Some(ws) = j.get("weights") {
+            reg.apply_weights_json(ws)?;
+        }
         Ok(reg)
     }
 }
@@ -156,14 +200,25 @@ pub struct Config {
     pub artifacts: PathBuf,
     /// Which engine backend serves requests.
     pub engine: EngineKind,
-    /// Worker threads (each owns an engine replica).
+    /// Size of the shared worker runtime: a fixed, process-wide fleet
+    /// of threads serving every (model, engine) queue — NOT a per-pool
+    /// count.  Defaults to the detected core count (clamped ≥ 1); set
+    /// via `--workers` / `--runtime-workers`.
     pub workers: usize,
+    /// Byte budget (in MB) of each runtime worker's engine-replica LRU
+    /// cache — bounds resident weights when one worker serves many
+    /// models.  A single replica larger than the budget is kept alone.
+    pub replica_cache_mb: usize,
     /// Dynamic batcher: max images per batch (must have an artifact).
     pub max_batch: usize,
     /// Dynamic batcher: how long to wait for a batch to fill.
     pub batch_timeout: Duration,
-    /// Admission queue capacity (requests beyond this are rejected —
-    /// backpressure instead of unbounded memory).
+    /// Admission queue capacity **per (model, engine) queue** —
+    /// requests beyond this are rejected (backpressure instead of
+    /// unbounded memory).  Pre-runtime versions kept one queue per
+    /// pool worker, so effective buffering was `workers ×` this;
+    /// the shared runtime has exactly one queue per (model, engine),
+    /// making this the precise admission bound.
     pub queue_capacity: usize,
     /// TCP listen address for `zuluko serve`.
     pub listen: String,
@@ -182,7 +237,10 @@ impl Default for Config {
         Config {
             artifacts: crate::artifacts_dir(),
             engine: EngineKind::AclStaged,
-            workers: 1,
+            // Work-conserving shared runtime: one worker per detected
+            // core (the embedded budget the scheduler divides), never 0.
+            workers: crate::metrics::sysmon::num_cpus().max(1),
+            replica_cache_mb: 128,
             max_batch: 8,
             batch_timeout: Duration::from_millis(20),
             queue_capacity: 64,
@@ -215,6 +273,14 @@ impl Config {
         }
         if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
             self.workers = v;
+        }
+        // `runtime_workers` is the explicit name for the same knob
+        // (the shared runtime's fleet size); it wins over `workers`.
+        if let Some(v) = j.get("runtime_workers").and_then(|v| v.as_usize()) {
+            self.workers = v;
+        }
+        if let Some(v) = j.get("replica_cache_mb").and_then(|v| v.as_usize()) {
+            self.replica_cache_mb = v;
         }
         if let Some(v) = j.get("max_batch").and_then(|v| v.as_usize()) {
             self.max_batch = v;
@@ -275,6 +341,9 @@ impl Config {
             if let Some(p) = r.get("preload").and_then(|v| v.as_bool()) {
                 self.registry.preload = p;
             }
+            if let Some(ws) = r.get("weights") {
+                self.registry.apply_weights_json(ws)?;
+            }
         }
         Ok(())
     }
@@ -288,6 +357,14 @@ impl Config {
             self.engine = EngineKind::parse(v)?;
         }
         self.workers = a.get_usize("workers", self.workers).map_err(anyhow::Error::msg)?;
+        // --runtime-workers: explicit alias for the shared-runtime
+        // fleet size (wins over --workers when both are given).
+        self.workers = a
+            .get_usize("runtime-workers", self.workers)
+            .map_err(anyhow::Error::msg)?;
+        self.replica_cache_mb = a
+            .get_usize("replica-cache-mb", self.replica_cache_mb)
+            .map_err(anyhow::Error::msg)?;
         self.max_batch = a
             .get_usize("max-batch", self.max_batch)
             .map_err(anyhow::Error::msg)?;
@@ -348,6 +425,9 @@ impl Config {
             if idx.preload {
                 self.registry.preload = true;
             }
+            for (name, w) in idx.weights {
+                self.registry.set_weight(&name, w);
+            }
         }
         for spec in a.get_all("model") {
             let (name, path) = spec.split_once('=').ok_or_else(|| {
@@ -357,6 +437,18 @@ impl Config {
                 bail!("--model expects name=path, got '{spec}'");
             }
             self.registry.upsert(name, PathBuf::from(path));
+        }
+        for spec in a.get_all("model-weight") {
+            let (name, w) = spec.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--model-weight expects name=weight, got '{spec}'")
+            })?;
+            let w: f64 = w.parse().map_err(|_| {
+                anyhow::anyhow!("--model-weight expects name=weight, got '{spec}'")
+            })?;
+            if name.is_empty() {
+                bail!("--model-weight expects name=weight, got '{spec}'");
+            }
+            self.registry.set_weight(name, w);
         }
         if let Some(d) = a.get("default-model") {
             self.registry.default_model = Some(d.to_string());
@@ -381,6 +473,9 @@ impl Config {
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 {
             bail!("workers must be >= 1");
+        }
+        if self.replica_cache_mb == 0 {
+            bail!("replica_cache_mb must be >= 1");
         }
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
@@ -424,6 +519,20 @@ impl Config {
                 bail!("registry model names must be non-empty");
             }
         }
+        // Scheduler weights: positive, finite, and addressed at a
+        // registered model (a typo'd weight silently weighing nothing
+        // would defeat the operator's intent).
+        for (name, w) in &self.registry.weights {
+            if !w.is_finite() || *w <= 0.0 {
+                bail!("model weight for '{name}' must be finite and > 0, got {w}");
+            }
+            let known = self.registry.models.iter().any(|(n, _)| n == name)
+                || (self.registry.models.is_empty()
+                    && name == RegistryConfig::SINGLE_MODEL);
+            if !known {
+                bail!("model weight for '{name}': no such registered model");
+            }
+        }
         if let Some(d) = &self.registry.default_model {
             let known = self.registry.models.iter().any(|(n, _)| n == d);
             // In single-model mode only the implicit name is addressable.
@@ -460,6 +569,8 @@ impl Config {
         "artifacts",
         "engine",
         "workers",
+        "runtime-workers",
+        "replica-cache-mb",
         "max-batch",
         "batch-timeout-ms",
         "queue-capacity",
@@ -474,6 +585,7 @@ impl Config {
         "pool-cap",
         "model",
         "models",
+        "model-weight",
         "default-model",
         "preload-models",
     ];
@@ -700,6 +812,129 @@ mod tests {
         // registry.
         std::fs::write(&idx, r#"{"default":"x"}"#).unwrap();
         assert!(RegistryConfig::load_index(&idx).is_err());
+    }
+
+    #[test]
+    fn workers_default_to_core_count() {
+        let c = Config::default();
+        assert_eq!(c.workers, crate::metrics::sysmon::num_cpus().max(1));
+        assert!(c.workers >= 1);
+    }
+
+    #[test]
+    fn runtime_knobs_from_json_and_cli() {
+        let j = Json::parse(r#"{"workers":2,"runtime_workers":3,"replica_cache_mb":64}"#)
+            .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        // runtime_workers is the explicit alias and wins.
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.replica_cache_mb, 64);
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            ["serve", "--runtime-workers", "5", "--replica-cache-mb", "32"]
+                .iter()
+                .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.workers, 5);
+        assert_eq!(c.replica_cache_mb, 32);
+
+        let mut c = Config::default();
+        c.replica_cache_mb = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn model_weights_from_json_cli_and_index() {
+        let j = Json::parse(
+            r#"{"registry":{"default":"a","models":{"a":"/m/a","b":"/m/b"},
+                "weights":{"a":3.0}}}"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.registry.weight_for("a"), 3.0);
+        assert_eq!(c.registry.weight_for("b"), 1.0, "absent weight defaults to 1");
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            [
+                "serve",
+                "--model",
+                "a=/m/a",
+                "--model-weight",
+                "a=2.5",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.registry.weight_for("a"), 2.5);
+
+        // models.json index carries weights too.
+        let dir = std::env::temp_dir()
+            .join(format!("zuluko_cfg_weights_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let idx = dir.join("models.json");
+        std::fs::write(
+            &idx,
+            r#"{"default":"x","models":{"x":"ax","y":"ay"},"weights":{"y":0.5}}"#,
+        )
+        .unwrap();
+        let reg = RegistryConfig::load_index(&idx).unwrap();
+        assert_eq!(reg.weight_for("y"), 0.5);
+        assert_eq!(reg.weight_for("x"), 1.0);
+
+        // ...and the `--models index.json` CLI path must carry them
+        // through to the effective config, not just parse them.
+        let a = Args::parse(
+            ["serve", "--models", idx.to_str().unwrap()]
+                .iter()
+                .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.registry.weight_for("y"), 0.5, "--models dropped weights");
+        assert_eq!(c.registry.weight_for("x"), 1.0);
+    }
+
+    #[test]
+    fn model_weight_validation_rejects_nonsense() {
+        // Non-positive / non-finite weights fail.
+        let mut c = Config::default();
+        c.registry.upsert("a", "/m/a".into());
+        c.registry.set_weight("a", 0.0);
+        assert!(c.validate().is_err());
+        c.registry.set_weight("a", f64::NAN);
+        assert!(c.validate().is_err());
+        c.registry.set_weight("a", 2.0);
+        c.validate().unwrap();
+        // A weight for an unregistered model is an error, not a no-op.
+        c.registry.set_weight("ghost", 1.5);
+        assert!(c.validate().is_err());
+        // Single-model mode: only the implicit name is weightable.
+        let mut c = Config::default();
+        c.registry.set_weight(RegistryConfig::SINGLE_MODEL, 2.0);
+        c.validate().unwrap();
+        let mut c = Config::default();
+        c.registry.set_weight("other", 2.0);
+        assert!(c.validate().is_err());
+        // Malformed --model-weight specs fail loudly.
+        for bad in ["a", "=2", "a=", "a=fast"] {
+            let a = Args::parse(
+                ["serve", "--model-weight", bad].iter().map(|s| s.to_string()),
+                Config::FLAGS,
+            )
+            .unwrap();
+            assert!(Config::from_args(&a).is_err(), "accepted '{bad}'");
+        }
     }
 
     #[test]

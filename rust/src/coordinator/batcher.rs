@@ -64,8 +64,46 @@ impl BatchPolicy {
     /// None when the queue is closed and drained.
     pub fn form<T>(&self, queue: &BoundedQueue<T>) -> Option<Vec<T>> {
         let first = queue.pop_blocking()?;
+        self.fill(queue, first, self.timeout, self.timeout, &mut || true)
+    }
+
+    /// Form one batch, waiting at most `first_wait` for the first item
+    /// (a scheduler pick can race another worker to an emptied queue,
+    /// so the first pop must not block forever) and holding the batch
+    /// window open at most `window` — the shared runtime's entry point.
+    /// A contended caller passes `window == 0` so a hot queue's
+    /// coalescing never delays a cold queue's turn; an uncontended one
+    /// passes a `slice` smaller than the window plus a `keep_open`
+    /// re-check, so a window opened while the fleet was idle closes
+    /// early when another queue becomes backlogged mid-window — without
+    /// this, a single-worker fleet coalescing one model's trickle would
+    /// sit out the full window while another model's deadlined request
+    /// expired (the contended/uncontended decision is otherwise frozen
+    /// at pick time).
+    pub fn form_adaptive<T>(
+        &self,
+        queue: &BoundedQueue<T>,
+        first_wait: Duration,
+        window: Duration,
+        slice: Duration,
+        mut keep_open: impl FnMut() -> bool,
+    ) -> Option<Vec<T>> {
+        let first = queue.pop_wait(first_wait)?;
+        self.fill(queue, first, window, slice, &mut keep_open)
+    }
+
+    /// Shared tail: grow `first` into a batch within `window`, shrink to
+    /// a supported size, return leftovers to the queue front.
+    fn fill<T>(
+        &self,
+        queue: &BoundedQueue<T>,
+        first: T,
+        window: Duration,
+        slice: Duration,
+        keep_open: &mut impl FnMut() -> bool,
+    ) -> Option<Vec<T>> {
         let mut items = vec![first];
-        let deadline = Instant::now() + self.timeout;
+        let deadline = Instant::now() + window;
         while items.len() < self.max_batch {
             // Fast path: grab whatever is already waiting.
             let mut more = queue.drain_up_to(self.max_batch - items.len());
@@ -84,9 +122,17 @@ impl BatchPolicy {
             if now >= deadline {
                 break;
             }
-            match queue.pop_wait(deadline - now) {
+            if !keep_open() {
+                break; // another queue became backlogged — stop coalescing
+            }
+            let wait = (deadline - now).min(slice);
+            match queue.pop_wait(wait) {
                 Some(item) => items.push(item),
-                None => break, // timeout or closed
+                // A closed, drained queue has nothing left to wait for;
+                // otherwise a slice timeout loops back to re-check the
+                // window and keep_open.
+                None if queue.is_closed() => break,
+                None => continue,
             }
         }
         let (batch, rest) = self.split(items);
@@ -191,6 +237,45 @@ mod tests {
             elapsed < Duration::from_millis(500),
             "batch window stretched to {elapsed:?} under sustained load"
         );
+    }
+
+    #[test]
+    fn form_adaptive_bounds_first_wait_window_and_keep_open() {
+        // Empty queue: returns None after ~first_wait, never blocks.
+        let q = BoundedQueue::<u32>::new(8);
+        let p = policy(8);
+        let first_wait = Duration::from_millis(10);
+        let t0 = Instant::now();
+        assert_eq!(
+            p.form_adaptive(&q, first_wait, Duration::ZERO, Duration::ZERO, || true),
+            None
+        );
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        // Zero window: takes what's there, no coalescing wait.
+        for i in 0..3 {
+            q.try_push(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = p
+            .form_adaptive(&q, first_wait, Duration::ZERO, Duration::ZERO, || true)
+            .unwrap();
+        assert!(!batch.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        // keep_open() == false closes a long window at the next slice
+        // instead of waiting it out.
+        q.try_push(9).unwrap();
+        let t0 = Instant::now();
+        let batch = p
+            .form_adaptive(
+                &q,
+                first_wait,
+                Duration::from_secs(2),
+                Duration::from_millis(1),
+                || false,
+            )
+            .unwrap();
+        assert_eq!(batch, vec![9]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]

@@ -10,41 +10,50 @@
 //!     per-model cache ──hit──> immediate Response
 //!          │
 //!          ▼
-//!     selector (predicted completion vs deadline, per engine pool)
+//!     selector (predicted completion vs deadline, per engine queue)
 //!          │                        └──none fits──> structured shed
 //!     ┌────┴─────┐
 //!     ▼          ▼
-//!  acl pool   quant pool      (each: router -> bounded worker queues,
-//!     │          │             keyed per (model, engine) generation)
-//!     ▼          ▼
-//!  worker: engine.infer(batch) ── feeds predictor + response cache
+//!  acl queue  quant queue      (one bounded queue per (model, engine)
+//!     │          │              generation, registered with the
+//!     └────┬─────┘              process-wide scheduler)
+//!          ▼
+//!  shared worker runtime: a FIXED fleet of threads (default = core
+//!  count) pulls the next queue by deadline urgency then weighted fair
+//!  share, executes the batch on an LRU-cached engine replica, feeds
+//!  the generation's predictor + response cache
 //!          │
 //!          ▼
 //!  per-request Response (carries the model name) via mpsc reply channel
 //! ```
 //!
 //! Invariants (tested in rust/tests/coordinator_props.rs,
-//! rust/tests/policy_props.rs, and rust/tests/registry_props.rs):
+//! rust/tests/policy_props.rs, rust/tests/registry_props.rs, and
+//! rust/tests/scheduler_props.rs):
 //! * every admitted request gets exactly one Response (success, error,
 //!   or a structured deadline rejection) — never a silent drop;
 //! * rejected/shed requests are reported as rejections;
-//! * FIFO within a worker queue among equal urgency;
+//! * FIFO within a queue among equal urgency;
 //! * batch sizes ∈ supported artifact sizes;
 //! * results are independent of batch packing;
 //! * cache hits are bit-identical to the cold inference that filled them;
 //! * cache hits never cross models or weight generations;
 //! * a hot reload never drops an in-flight request (old generation
-//!   drains before its engines/pooled tensors are released).
+//!   drains before its pooled tensors / worker replicas are released);
+//! * total worker threads equal the configured runtime size regardless
+//!   of model count or concurrent reloads, and a saturating hot model
+//!   cannot starve a cold model's deadlined requests.
 
 pub mod batcher;
 pub mod queue;
 pub mod router;
+pub mod scheduler;
 pub mod worker;
 
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::metrics::Histogram;
@@ -52,10 +61,12 @@ use crate::policy::{CachedResult, ModelPolicySnapshot, PolicySnapshot, Slo};
 use crate::registry::{GenerationLease, ModelRegistry, ReloadReport};
 use crate::tensor::{PoolStats, PooledTensor, Tensor, TensorPool};
 
+use scheduler::{QueueDepthRow, Runtime, WorkerOccupancyRow};
 use worker::{SharedStats, WorkerReport};
 
 /// One inference request (image already preprocessed, living in a
 /// pooled lease so its buffer is recycled on completion).
+#[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub image: PooledTensor,
@@ -236,30 +247,64 @@ pub struct StatsSnapshot {
     pub pool: PoolStats,
     /// Per-model breakdown, in registry order.
     pub models: Vec<ModelStatsSnapshot>,
+    /// Shared-runtime worker occupancy, one row per runtime worker.
+    pub workers: Vec<WorkerOccupancyRow>,
+    /// Scheduler queue depths, one row per live (model, engine) queue.
+    pub queues: Vec<QueueDepthRow>,
 }
 
-/// The running serving system: a model registry fronted by one submit
-/// surface.  Single-model deployments see exactly the pre-registry
-/// behavior (one implicit model named `default`).
+/// The running serving system: the shared worker runtime plus a model
+/// registry fronted by one submit surface.  Single-model deployments
+/// see exactly the pre-registry behavior (one implicit model named
+/// `default`).
 pub struct Coordinator {
     registry: ModelRegistry,
     stats: Arc<SharedStats>,
+    runtime: Runtime,
     next_id: AtomicU64,
 }
 
 impl Coordinator {
-    /// Build the registry and eagerly load the default model (fail fast
-    /// on engine build errors, exactly like the pre-registry startup).
-    /// Other registered models build lazily on first request unless
-    /// `registry.preload` asks for all of them up front.
+    /// Spawn the shared worker runtime (a fixed fleet of
+    /// `cfg.workers` threads — default: detected core count), build
+    /// the registry, and eagerly load the default model (fail fast on
+    /// engine build errors).  Other registered models build lazily on
+    /// first request unless `registry.preload` asks for all of them up
+    /// front.  Model count never changes the thread count: generations
+    /// only register queues.
     pub fn start(cfg: &Config) -> Result<Coordinator> {
         let stats = Arc::new(SharedStats::default());
-        let registry = ModelRegistry::new(cfg.clone(), stats.clone())?;
-        registry.preload(!cfg.registry.preload)?;
+        // A queued deadline due within ~2 batch windows preempts fair
+        // share — late enough that batching still coalesces, early
+        // enough that the EDF override fires before expiry.
+        let urgency_window = (cfg.batch_timeout * 2).max(Duration::from_millis(20));
+        let runtime = Runtime::start(
+            cfg.workers,
+            cfg.replica_cache_mb.saturating_mul(1 << 20),
+            urgency_window,
+            stats.clone(),
+        );
+        // Startup failures must not leak the worker fleet (tests build
+        // coordinators in-process; detached idle threads add up).
+        let registry = match ModelRegistry::new(cfg.clone(), stats.clone(), runtime.handle()) {
+            Ok(r) => r,
+            Err(e) => {
+                runtime.shutdown();
+                return Err(e);
+            }
+        };
+        if let Err(e) = registry.preload(!cfg.registry.preload) {
+            registry.shutdown();
+            runtime.shutdown();
+            return Err(e);
+        }
 
         crate::info!(
             "coordinator",
-            "ready: models={:?} default='{}' preload={}",
+            "ready: runtime_workers={} replica_cache={}MB models={:?} \
+             default='{}' preload={}",
+            runtime.workers(),
+            cfg.replica_cache_mb,
             registry.names(),
             registry.default_model(),
             cfg.registry.preload
@@ -268,6 +313,7 @@ impl Coordinator {
         Ok(Coordinator {
             registry,
             stats,
+            runtime,
             next_id: AtomicU64::new(1),
         })
     }
@@ -315,9 +361,9 @@ impl Coordinator {
     ///
     /// `Err(Closed)` can surface transiently when the addressed
     /// generation is retired by a concurrent hot reload between resolve
-    /// and route; callers that own their input (like the TCP server,
-    /// which re-decodes) simply resubmit — the retry lands on the fresh
-    /// generation.
+    /// and route; callers simply resubmit — the retry lands on the
+    /// fresh generation (the TCP server reuses the already-decoded
+    /// pixels via [`Coordinator::submit_on_reclaim`]).
     pub fn submit_model(
         &self,
         model: Option<&str>,
@@ -362,6 +408,21 @@ impl Coordinator {
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         lease.submit_pooled(id, image, slo, wire_key)
+    }
+
+    /// Like [`Coordinator::submit_on`], but on failure the decoded
+    /// pixels come back with the error (when recoverable) so a
+    /// reload-race `Closed` retry can resubmit the same tensor to the
+    /// fresh generation without re-decoding the image.
+    pub fn submit_on_reclaim(
+        &self,
+        lease: &GenerationLease,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>, (SubmitError, Option<PooledTensor>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        lease.submit_pooled_reclaim(id, image, slo, wire_key)
     }
 
     /// Response-cache lookup by an externally computed key on the
@@ -456,6 +517,8 @@ impl Coordinator {
             shed_expired,
             pool,
             models,
+            workers: self.runtime.occupancy(),
+            queues: self.runtime.scheduler().queue_rows(),
         }
     }
 
@@ -511,9 +574,11 @@ impl Coordinator {
         self.stats.latency.lock().unwrap().clone()
     }
 
-    /// Graceful shutdown: drain queues, join workers (including
-    /// reload-retired generations'), return their reports.
+    /// Graceful shutdown: retire every generation (close + drain its
+    /// queues — including reload-retired ones still draining), then
+    /// stop the shared runtime and join its fixed worker fleet.
     pub fn shutdown(self) -> Vec<WorkerReport> {
-        self.registry.shutdown()
+        self.registry.shutdown();
+        self.runtime.shutdown()
     }
 }

@@ -109,6 +109,14 @@ impl<T> BoundedQueue<T> {
         g.items.make_contiguous().sort_by_key(|t| key(t));
     }
 
+    /// Minimum of `f` over pending items, ignoring `None`s — the
+    /// scheduler's earliest-deadline peek (EDF override).  O(n) under
+    /// the lock; queues are admission-bounded so n is small.
+    pub fn min_pending_map<K: Ord>(&self, f: impl Fn(&T) -> Option<K>) -> Option<K> {
+        let g = self.inner.lock().unwrap();
+        g.items.iter().filter_map(|t| f(t)).min()
+    }
+
     /// Drain up to `n` items without blocking.
     pub fn drain_up_to(&self, n: usize) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
@@ -209,6 +217,17 @@ mod tests {
             seen.push(it);
         }
         assert_eq!(seen, vec![(0, 1), (0, 3), (1, 0), (1, 2)]);
+    }
+
+    #[test]
+    fn min_pending_map_ignores_nones() {
+        let q = BoundedQueue::new(8);
+        for item in [(None::<u32>, 0u32), (Some(5), 1), (Some(3), 2), (None, 3)] {
+            q.try_push(item).unwrap();
+        }
+        assert_eq!(q.min_pending_map(|&(k, _)| k), Some(3));
+        let empty = BoundedQueue::<(Option<u32>, u32)>::new(4);
+        assert_eq!(empty.min_pending_map(|&(k, _)| k), None);
     }
 
     #[test]

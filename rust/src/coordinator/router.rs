@@ -1,81 +1,105 @@
-//! Request router: spreads admitted requests across worker queues.
+//! Admission ports: a generation's submit-side handle on its scheduled
+//! queues.
 //!
-//! Round-robin with least-loaded fallback: the round-robin target is
-//! tried first; if its queue is full the router picks the shortest queue
-//! instead; only when *every* queue is full does the request bounce back
-//! to the client as backpressure (vllm-router-style admission).
+//! The pre-runtime router spread requests across per-worker queues
+//! (workers were pinned, so load balancing happened at admission).
+//! Under the shared runtime (DESIGN.md §4) there is exactly **one**
+//! bounded queue per (model, engine) and the balancing moved to the
+//! scheduler's pick side — admission only has to enforce backpressure
+//! and wake a worker.  `EnginePort` is that surface: `admit` pushes
+//! onto the queue through the scheduler (so the notify can never be
+//! forgotten) and maps queue-full / queue-closed onto the same
+//! [`RouteError`] contract the selector path always handled.
+//!
+//! Invariants (tested here and in rust/tests/coordinator_props.rs):
+//! * conservation: every admitted request is in the queue exactly once;
+//!   every refused request comes back to the caller inside the error;
+//! * `Overloaded` only when the queue is truly at capacity;
+//! * `Closed` propagates a retiring generation (callers re-resolve).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use super::queue::{BoundedQueue, PushError};
+use crate::policy::PoolView;
 
-/// Routing outcome errors.
+use super::queue::PushError;
+use super::scheduler::{Scheduler, WorkSource};
+use super::Request;
+
+/// Admission outcome errors (same contract as the old router).
 #[derive(Debug, PartialEq, Eq)]
 pub enum RouteError<T> {
-    /// All queues full — caller should surface a rejection.
+    /// Queue full — caller should surface a rejection.
     Overloaded(T),
-    /// Shutting down.
+    /// Generation retiring / shutting down.
     Closed(T),
 }
 
-pub struct Router<T> {
-    queues: Vec<Arc<BoundedQueue<T>>>,
-    next: AtomicUsize,
+/// One engine's admission port within a generation: the (model, engine)
+/// queue plus the scheduler that serves it.
+pub struct EnginePort {
+    source: Arc<WorkSource>,
+    scheduler: Arc<Scheduler>,
 }
 
-impl<T> Router<T> {
-    pub fn new(queues: Vec<Arc<BoundedQueue<T>>>) -> Router<T> {
-        assert!(!queues.is_empty(), "router needs >= 1 queue");
-        Router {
-            queues,
-            next: AtomicUsize::new(0),
+impl EnginePort {
+    pub fn new(source: Arc<WorkSource>, scheduler: Arc<Scheduler>) -> EnginePort {
+        EnginePort { source, scheduler }
+    }
+
+    pub fn source(&self) -> &Arc<WorkSource> {
+        &self.source
+    }
+
+    pub fn kind(&self) -> crate::engine::EngineKind {
+        self.source.key.engine
+    }
+
+    /// Admit one request: push + worker wake-up, or hand it back.
+    pub fn admit(&self, req: Request) -> Result<(), RouteError<Request>> {
+        match self.scheduler.submit(&self.source, req) {
+            Ok(()) => Ok(()),
+            Err(PushError::Full(r)) => Err(RouteError::Overloaded(r)),
+            Err(PushError::Closed(r)) => Err(RouteError::Closed(r)),
         }
     }
 
-    pub fn queues(&self) -> &[Arc<BoundedQueue<T>>] {
-        &self.queues
-    }
-
-    /// Route one request.  Returns the chosen queue index.
-    pub fn route(&self, item: T) -> Result<usize, RouteError<T>> {
-        let n = self.queues.len();
-        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
-
-        // 1) round-robin target
-        let mut item = match self.queues[start].try_push(item) {
-            Ok(()) => return Ok(start),
-            Err(PushError::Closed(it)) => return Err(RouteError::Closed(it)),
-            Err(PushError::Full(it)) => it,
-        };
-
-        // 2) least-loaded fallback over the remaining queues
-        let mut order: Vec<usize> = (0..n).filter(|&i| i != start).collect();
-        order.sort_by_key(|&i| self.queues[i].len());
-        for i in order {
-            item = match self.queues[i].try_push(item) {
-                Ok(()) => return Ok(i),
-                Err(PushError::Closed(it)) => return Err(RouteError::Closed(it)),
-                Err(PushError::Full(it)) => it,
-            };
-        }
-        Err(RouteError::Overloaded(item))
-    }
-
-    /// Total queued across all workers (load metric).
     pub fn queued(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.source.queue.len()
     }
 
-    /// Total admission slots across all queues (the selector's
-    /// "pool full" bound).
     pub fn capacity(&self) -> usize {
-        self.queues.iter().map(|q| q.capacity()).sum()
+        self.source.queue.capacity()
     }
 
-    pub fn close_all(&self) {
-        for q in &self.queues {
-            q.close();
+    /// Close the queue (graceful: residual items still drain through
+    /// the runtime, served by this generation's weights).
+    pub fn close(&self) {
+        self.source.queue.close();
+        // Wake workers so residual items drain promptly.
+        self.scheduler.notify_all();
+    }
+
+    /// Selector-facing snapshot.  `fleet` is the shared runtime's
+    /// total worker count; the reported `workers` is this queue's
+    /// *fair share* of it under current contention (≥ 1), so the
+    /// completion prediction doesn't assume every queue drains with
+    /// the whole fleet at once.
+    pub fn view(&self, fleet: usize) -> PoolView {
+        let share = self.scheduler.fair_share(fleet, &self.source.key);
+        self.view_with(share)
+    }
+
+    /// Like [`EnginePort::view`] with a precomputed worker share — the
+    /// submit path computes the fair share once per request instead of
+    /// taking the scheduler lock once per port (a generation's ports
+    /// share its model weight, so their shares differ only by the
+    /// sibling queue's own momentary contention).
+    pub fn view_with(&self, share: usize) -> PoolView {
+        PoolView {
+            kind: self.source.key.engine,
+            queued: self.queued(),
+            workers: share,
+            capacity: self.capacity(),
         }
     }
 }
@@ -83,53 +107,51 @@ impl<T> Router<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineKind;
+    use crate::testkit::sched::{dummy_request, sim_source};
+    use std::time::Duration;
 
-    fn mk(n: usize, cap: usize) -> Router<u32> {
-        Router::new((0..n).map(|_| Arc::new(BoundedQueue::new(cap))).collect())
+    fn port(cap: usize) -> (EnginePort, Arc<Scheduler>) {
+        let source = sim_source("rt", 1.0, cap);
+        let scheduler = Arc::new(Scheduler::new(Duration::from_millis(50)));
+        scheduler.register(source.clone());
+        (EnginePort::new(source, scheduler.clone()), scheduler)
+    }
+
+    fn req(id: u64) -> Request {
+        dummy_request(id, None)
     }
 
     #[test]
-    fn round_robin_spreads() {
-        let r = mk(3, 8);
-        let mut hits = [0usize; 3];
-        for i in 0..9 {
-            hits[r.route(i).unwrap()] += 1;
-        }
-        assert_eq!(hits, [3, 3, 3]);
-    }
-
-    #[test]
-    fn full_target_falls_to_least_loaded() {
-        let r = mk(2, 2);
-        // Fill queue 0.
-        r.queues()[0].try_push(100).unwrap();
-        r.queues()[0].try_push(101).unwrap();
-        // Route four items; all must land in queue 1.
-        let mut q1 = 0;
-        for i in 0..2 {
-            let idx = r.route(i).unwrap();
-            if idx == 1 {
-                q1 += 1;
-            }
-        }
-        assert_eq!(q1, 2);
-    }
-
-    #[test]
-    fn overload_returns_item() {
-        let r = mk(2, 1);
-        r.route(1).unwrap();
-        r.route(2).unwrap();
-        match r.route(3) {
-            Err(RouteError::Overloaded(3)) => {}
-            other => panic!("expected Overloaded(3), got {other:?}"),
+    fn admits_until_full_then_bounces_the_item() {
+        let (p, _s) = port(2);
+        p.admit(req(1)).unwrap();
+        p.admit(req(2)).unwrap();
+        assert_eq!(p.queued(), 2);
+        match p.admit(req(3)) {
+            Err(RouteError::Overloaded(r)) => assert_eq!(r.id, 3),
+            other => panic!("expected Overloaded, got {other:?}"),
         }
     }
 
     #[test]
-    fn closed_propagates() {
-        let r = mk(1, 4);
-        r.close_all();
-        assert!(matches!(r.route(9), Err(RouteError::Closed(9))));
+    fn closed_propagates_with_the_item() {
+        let (p, _s) = port(4);
+        p.close();
+        match p.admit(req(9)) {
+            Err(RouteError::Closed(r)) => assert_eq!(r.id, 9),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn view_reports_queue_and_fleet() {
+        let (p, _s) = port(8);
+        p.admit(req(1)).unwrap();
+        let v = p.view(3);
+        assert_eq!(v.kind, EngineKind::Sim);
+        assert_eq!(v.queued, 1);
+        assert_eq!(v.workers, 3);
+        assert_eq!(v.capacity, 8);
     }
 }

@@ -1,0 +1,1068 @@
+//! Weighted-fair scheduler over all live (model, engine) queues — the
+//! core of the shared worker runtime (DESIGN.md §4).
+//!
+//! Before this refactor every model generation owned worker threads per
+//! engine pool, so N models cost ~2N×`workers` threads on a 4-core SoC
+//! while a traffic-skewed model left other models' workers idle.  Now a
+//! **fixed** set of runtime workers (default = detected core count)
+//! pulls from this scheduler, which picks the next (model, generation,
+//! engine) queue to serve:
+//!
+//! 1. **Deadline override (EDF)**: if any non-empty queue holds a
+//!    request whose absolute deadline falls inside the urgency window,
+//!    the queue with the earliest such deadline is served first — a hot
+//!    model cannot starve a cold model's deadlined requests.
+//! 2. **Stride scheduling** otherwise: each queue accrues `pass` time
+//!    at rate `images served / weight`; the backlogged queue with the
+//!    lowest pass is served next, so service converges to the
+//!    per-model weight ratio (weighted fair), and an idle queue that
+//!    wakes up is clamped to the current minimum pass instead of
+//!    replaying its idle time as a burst.
+//!
+//! The scheduler is also the **drain authority**: a retiring generation
+//! closes its queues (graceful: residual items still pop — served by
+//! the *old* weights) and [`Scheduler::wait_drained`] blocks until the
+//! queue is closed, empty, *and* has zero in-flight batches, then
+//! removes it from the table.  No worker threads are spawned or joined
+//! per generation anymore; drain is a queue-state condition.
+//!
+//! Scale note: every pick scans the backlogged queues' pending items
+//! for the EDF peek (O(total queued) under the one scheduler mutex,
+//! which admission and charge also take).  At this repo's embedded
+//! envelope — a handful of models, queues bounded at `queue_capacity`
+//! — that is noise next to per-image inference cost; a deployment with
+//! dozens of deep queues would want a cached per-queue min-deadline
+//! maintained at push/pop instead.
+//!
+//! Invariants (tested here and in rust/tests/scheduler_props.rs):
+//! * a pick never returns a closed *and* empty queue, but a closed
+//!   non-empty queue is still served (reload drains answer everything);
+//! * service proportions converge to queue weights under saturation;
+//! * a queue is only deregistered once closed + empty + no in-flight
+//!   batch (its arena/engines stay safe to use until then);
+//! * the replica-cache byte bound is hard under eviction: retained
+//!   bytes never exceed max(budget, the single entry just inserted).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::EngineKind;
+use crate::policy::PolicyCtx;
+use crate::registry::ModelCounters;
+use crate::runtime::Manifest;
+use crate::tensor::TensorPool;
+
+use super::batcher::BatchPolicy;
+use super::queue::{BoundedQueue, PushError};
+use super::Request;
+
+/// Identity of one scheduled queue.  The generation number is part of
+/// the key so a reloading model's old and new queues (and the worker
+/// replica caches keyed on this) never alias.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct QueueKey {
+    pub model: Arc<str>,
+    pub generation: u64,
+    pub engine: EngineKind,
+}
+
+impl std::fmt::Display for QueueKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@g{}/{}", self.model, self.generation, self.engine.as_str())
+    }
+}
+
+/// Everything a runtime worker needs to execute a batch for one
+/// generation — shared by that generation's work sources.  This is what
+/// replaced the per-generation `WorkerSeat`: the worker is no longer
+/// seated, it visits.
+pub struct ExecCtx {
+    pub model: Arc<str>,
+    pub generation: u64,
+    /// Replica blueprint: workers build engines from this inside their
+    /// own thread (XLA handles are not `Send`).
+    pub manifest: Manifest,
+    /// This model's tensor arena (batch buffers lease from here).
+    pub arena: TensorPool,
+    /// Per-generation policy state (predictor + response cache).
+    pub ctx: Arc<PolicyCtx>,
+    /// Per-model counters (survive reloads).
+    pub counters: Arc<ModelCounters>,
+}
+
+/// One schedulable (model, generation, engine) queue.
+pub struct WorkSource {
+    pub key: QueueKey,
+    pub queue: Arc<BoundedQueue<Request>>,
+    pub policy: BatchPolicy,
+    /// Weighted-fair share (per-model config weight; 1.0 default).
+    pub weight: f64,
+    /// Only the quality pool fills the response cache (DESIGN.md §7).
+    pub fill_cache: bool,
+    pub exec: Arc<ExecCtx>,
+    /// Batches currently being executed by workers.  Incremented
+    /// *before* the first pop of a batch so drain can never observe
+    /// "queue empty" while a batch is mid-flight.
+    inflight: AtomicUsize,
+}
+
+impl WorkSource {
+    pub fn new(
+        key: QueueKey,
+        queue: Arc<BoundedQueue<Request>>,
+        policy: BatchPolicy,
+        weight: f64,
+        fill_cache: bool,
+        exec: Arc<ExecCtx>,
+    ) -> WorkSource {
+        WorkSource {
+            key,
+            queue,
+            policy,
+            weight: if weight.is_finite() && weight > 0.0 { weight } else { 1.0 },
+            fill_cache,
+            exec,
+            inflight: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+/// RAII in-flight marker: taken by a worker before it pops a batch from
+/// a source, released (with a drain wake-up) when the batch is fully
+/// replied — including panic unwinds, so a dying worker can not wedge a
+/// drain forever.
+pub struct InflightGuard {
+    source: Arc<WorkSource>,
+    scheduler: Arc<Scheduler>,
+}
+
+impl InflightGuard {
+    pub fn new(source: Arc<WorkSource>, scheduler: Arc<Scheduler>) -> InflightGuard {
+        source.inflight.fetch_add(1, Ordering::AcqRel);
+        InflightGuard { source, scheduler }
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.source.inflight.fetch_sub(1, Ordering::AcqRel);
+        // Wake drain waiters.  Locked so the decrement can't slip
+        // between a drain waiter's inflight check and its wait.
+        let _g = self.scheduler.inner.lock().unwrap();
+        self.scheduler.drain_cv.notify_all();
+    }
+}
+
+/// What [`Scheduler::next`] hands a worker.
+pub enum Pick {
+    /// Serve this source.  `contended` = other queues also have pending
+    /// work, so the worker should close its batch window immediately
+    /// (work-conserving: never idle-wait while other models wait).
+    Work {
+        source: Arc<WorkSource>,
+        contended: bool,
+    },
+    /// Timed out with nothing to do (worker housekeeping tick).
+    Idle,
+    /// Scheduler closed and every queue fully drained — exit.
+    Shutdown,
+}
+
+/// One row of `{"cmd":"stats"}` scheduler introspection.
+#[derive(Debug, Clone)]
+pub struct QueueDepthRow {
+    pub model: String,
+    pub engine: &'static str,
+    pub generation: u64,
+    pub queued: usize,
+    pub capacity: usize,
+    pub weight: f64,
+    pub inflight: usize,
+    pub closed: bool,
+}
+
+struct Slot {
+    source: Arc<WorkSource>,
+    /// Stride-scheduling virtual time: images served / weight.
+    pass: f64,
+    /// Whether the queue was backlogged at the last pick scan.  The
+    /// empty→non-empty edge is where the stride join-clamp applies.
+    active: bool,
+}
+
+struct SchedInner {
+    slots: Vec<Slot>,
+    closed: bool,
+    /// Scheduler-wide virtual time: the pass of the most recently
+    /// chosen queue.  A queue that wakes from idle is clamped up to
+    /// this at its join edge, so an idle spell banks no fair-share
+    /// credit (and a long-busy queue is never locked out of the EDF
+    /// override by a waking queue's stale low pass).
+    vtime: f64,
+}
+
+/// The shared-runtime scheduler (one per process, inside the
+/// coordinator's `Runtime`).
+pub struct Scheduler {
+    inner: Mutex<SchedInner>,
+    /// Workers wait here for work (submit/register/close wake it).
+    cv: Condvar,
+    /// Drain waiters wait here (in-flight completions wake it).  A
+    /// separate condvar so an admission `notify_one` can never be
+    /// consumed by a drain waiter whose condition is unmet, leaving
+    /// the request unserved until an idle tick.
+    drain_cv: Condvar,
+    /// A queued deadline due within this window preempts fair-share
+    /// order (EDF override).
+    urgency_window: Duration,
+    /// Bumped whenever the queue table changes (see
+    /// [`Scheduler::table_epoch`]).
+    table_epoch: std::sync::atomic::AtomicU64,
+}
+
+impl Scheduler {
+    pub fn new(urgency_window: Duration) -> Scheduler {
+        Scheduler {
+            inner: Mutex::new(SchedInner {
+                slots: Vec::new(),
+                closed: false,
+                vtime: 0.0,
+            }),
+            cv: Condvar::new(),
+            drain_cv: Condvar::new(),
+            urgency_window,
+            table_epoch: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Register a generation's queue.  Its pass starts at the current
+    /// virtual time so it cannot burst ahead of established queues.
+    pub fn register(&self, source: Arc<WorkSource>) {
+        let mut g = self.inner.lock().unwrap();
+        let pass = g.vtime;
+        g.slots.push(Slot {
+            source,
+            pass,
+            active: false,
+        });
+        drop(g);
+        self.table_epoch.fetch_add(1, Ordering::AcqRel);
+        self.cv.notify_all();
+    }
+
+    /// Admission: push onto the source's queue and wake a worker.
+    /// `Full`/`Closed` hand the request back to the caller (the
+    /// generation maps them onto `SubmitError`).
+    pub fn submit(
+        &self,
+        source: &WorkSource,
+        req: Request,
+    ) -> Result<(), PushError<Request>> {
+        source.queue.try_push(req)?;
+        // Notify under the scheduler mutex: queue state lives under the
+        // queue's own lock, so a bare notify could land between a
+        // worker's empty-check and its wait (lost wakeup → the request
+        // idles until the next tick).  Holding the mutex serializes the
+        // notify against check-then-wait.
+        let _g = self.inner.lock().unwrap();
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pick for a worker thread.  Serves closed queues while
+    /// they still hold residual items (reload drain), skips them once
+    /// empty.
+    pub fn next(&self, idle_after: Duration) -> Pick {
+        let deadline = Instant::now() + idle_after;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(pick) = Self::pick(&mut g, self.urgency_window) {
+                return pick;
+            }
+            if g.closed && g.slots.iter().all(|s| s.source.queue.is_empty()) {
+                // Leave residual drains to inflight guards; workers can
+                // exit once nothing is poppable anywhere.
+                return Pick::Shutdown;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pick::Idle;
+            }
+            let (ng, _t) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    fn pick(g: &mut SchedInner, urgency_window: Duration) -> Option<Pick> {
+        // Join-clamp at the empty→non-empty edge: a queue that wakes
+        // from idle starts at the scheduler's virtual time instead of
+        // replaying its idle spell as banked credit (which would let a
+        // waking burst monopolize the fleet until its stale-low pass
+        // caught up, starving every busy queue — including out of the
+        // EDF override, whose slack is measured against the minimum).
+        let vtime = g.vtime;
+        for s in g.slots.iter_mut() {
+            let backlogged = !s.source.queue.is_empty();
+            if backlogged && !s.active {
+                s.active = true;
+                s.pass = s.pass.max(vtime);
+            } else if !backlogged {
+                s.active = false;
+            }
+        }
+        let candidates: Vec<usize> = g
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active)
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let contended = candidates.len() > 1;
+        let base = candidates
+            .iter()
+            .map(|&i| g.slots[i].pass)
+            .fold(f64::INFINITY, f64::min);
+
+        // EDF override: earliest at-risk absolute deadline wins — but
+        // only while the urgent queue hasn't already consumed more than
+        // a few batches beyond its fair share (`EDF_PASS_SLACK`).
+        // Unbounded, a stream of tight-deadline requests on one model
+        // could weaponize the override to starve best-effort queues;
+        // bounded, deadlines win short-term and fairness wins sustained
+        // (overload demand beyond fair share sheds, as it should).
+        const EDF_PASS_SLACK: f64 = 16.0;
+        let now = Instant::now();
+        let horizon = now + urgency_window;
+        let urgent = candidates
+            .iter()
+            .filter(|&&i| g.slots[i].pass - base <= EDF_PASS_SLACK)
+            .filter_map(|&i| {
+                g.slots[i]
+                    .source
+                    .queue
+                    .min_pending_map(|r: &Request| r.slo.deadline.map(|d| r.submitted + d))
+                    .filter(|&at| at <= horizon)
+                    .map(|at| (at, i))
+            })
+            .min_by_key(|&(at, _)| at);
+        let chosen = match urgent {
+            Some((_, i)) => i,
+            None => {
+                // Stride: lowest pass among backlogged queues.
+                *candidates
+                    .iter()
+                    .min_by(|&&a, &&b| g.slots[a].pass.total_cmp(&g.slots[b].pass))
+                    .unwrap()
+            }
+        };
+        // Advance virtual time to the served queue's pass (monotonic;
+        // an EDF pick can be at most EDF_PASS_SLACK ahead of base, so
+        // joins never get penalized by more than the slack).
+        let slot_pass = g.slots[chosen].pass;
+        g.vtime = g.vtime.max(slot_pass);
+        Some(Pick::Work {
+            source: g.slots[chosen].source.clone(),
+            contended,
+        })
+    }
+
+    /// Charge `images` of service against a source's fair share.
+    pub fn charge(&self, key: &QueueKey, images: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(slot) = g.slots.iter_mut().find(|s| &s.source.key == key) {
+            slot.pass += images as f64 / slot.source.weight;
+        }
+    }
+
+    /// Any *other* queue currently backlogged?  A worker holding an
+    /// uncontended batch window open re-checks this between waits so a
+    /// queue that wakes mid-window closes the window within one slice
+    /// instead of waiting out the full coalescing timeout.
+    pub fn pending_elsewhere(&self, key: &QueueKey) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.slots
+            .iter()
+            .any(|s| &s.source.key != key && !s.source.queue.is_empty())
+    }
+
+    /// Monotonic epoch of the queue table (bumped on register and on
+    /// drain-removal).  Workers gate their per-batch dead-replica sweep
+    /// on it so steady-state serving doesn't pay an `is_live` lock per
+    /// cached replica per batch.
+    pub fn table_epoch(&self) -> u64 {
+        self.table_epoch.load(Ordering::Acquire)
+    }
+
+    /// This queue's fair share of a `fleet`-sized worker pool, in
+    /// whole workers (≥ 1): fleet × weight / Σ weights over *contended*
+    /// queues (backlogged or mid-batch, always counting `key` itself).
+    /// The selector uses this as a queue's drain-parallelism bound —
+    /// assuming the whole fleet per queue would double-count capacity
+    /// across models and admit doomed deadlined requests.
+    pub fn fair_share(&self, fleet: usize, key: &QueueKey) -> usize {
+        let g = self.inner.lock().unwrap();
+        let mut total = 0.0f64;
+        let mut own = 1.0f64;
+        for s in &g.slots {
+            let contended = !s.source.queue.is_empty() || s.source.inflight() > 0;
+            if &s.source.key == key {
+                own = s.source.weight;
+                total += s.source.weight;
+            } else if contended {
+                total += s.source.weight;
+            }
+        }
+        if total <= 0.0 {
+            return fleet.max(1);
+        }
+        (((fleet as f64) * own / total).floor() as usize).clamp(1, fleet.max(1))
+    }
+
+    /// Is this queue still in the table?  Workers use it to evict
+    /// replica-cache entries of fully retired generations.
+    pub fn is_live(&self, key: &QueueKey) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.slots.iter().any(|s| &s.source.key == key)
+    }
+
+    /// Block until `key`'s queue is closed, empty, and has no batch in
+    /// flight, then remove it from the table.  Returns immediately if
+    /// the key was never registered / already removed.  This is what a
+    /// generation's retire waits on instead of joining threads.
+    pub fn wait_drained(&self, key: &QueueKey) {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let Some(idx) = g.slots.iter().position(|s| &s.source.key == key) else {
+                return;
+            };
+            let s = &g.slots[idx].source;
+            if s.queue.is_closed() && s.queue.is_empty() && s.inflight() == 0 {
+                g.slots.remove(idx);
+                drop(g);
+                self.table_epoch.fetch_add(1, Ordering::AcqRel);
+                // Wake workers: the candidate set changed (and during
+                // shutdown, the all-drained exit condition may now hold).
+                self.cv.notify_all();
+                return;
+            }
+            // Drain waiters have their own condvar so they can never
+            // consume a worker's work-available notification.
+            let (ng, _t) = self
+                .drain_cv
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap();
+            g = ng;
+        }
+    }
+
+    /// Per-queue depth rows for `{"cmd":"stats"}`.
+    pub fn queue_rows(&self) -> Vec<QueueDepthRow> {
+        let g = self.inner.lock().unwrap();
+        g.slots
+            .iter()
+            .map(|s| QueueDepthRow {
+                model: s.source.key.model.to_string(),
+                engine: s.source.key.engine.as_str(),
+                generation: s.source.key.generation,
+                queued: s.source.queue.len(),
+                capacity: s.source.queue.capacity(),
+                weight: s.source.weight,
+                inflight: s.source.inflight(),
+                closed: s.source.queue.is_closed(),
+            })
+            .collect()
+    }
+
+    /// Global shutdown: workers exit once every queue is drained.
+    /// Queues themselves are closed by their generations' retire.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Wake every worker.  Locked for the same lost-wakeup reason as
+    /// [`Scheduler::submit`]: callers mutate queue state outside this
+    /// mutex (batcher leftovers, queue close).
+    pub(super) fn notify_all(&self) {
+        let _g = self.inner.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replica cache: byte-bounded LRU of engine replicas, one per worker.
+// ---------------------------------------------------------------------------
+
+/// Estimate of the resident bytes one engine replica of `kind` costs
+/// (weights dominate; int8 engines hold the q8 table, fp32 engines the
+/// fp32 table; a fixed slack covers executables and scratch).
+pub fn replica_bytes(kind: EngineKind, manifest: &Manifest) -> usize {
+    const SLACK: usize = 1 << 20; // executables, literals, scratch
+    let fp32: usize = manifest.params.iter().map(|p| p.nelems * 4).sum();
+    let q8: usize = manifest.params_q8.iter().map(|p| p.nelems).sum();
+    match kind {
+        EngineKind::Quant => q8 + SLACK,
+        EngineKind::Sim => SLACK,
+        _ => fp32 + SLACK,
+    }
+}
+
+struct CacheEntry<T> {
+    key: QueueKey,
+    value: T,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// A worker-private, memory-bounded LRU of engine replicas keyed by
+/// (model, generation, engine).  Generic over the stored value so the
+/// byte-bound invariant is property-testable without engines.
+///
+/// The bound is **hard under eviction**: after any insert, retained
+/// bytes ≤ max(budget, bytes of the entry just inserted) — a single
+/// oversized replica is kept alone (the worker must make progress), but
+/// never together with anything else.
+pub struct ReplicaCache<T> {
+    budget: usize,
+    entries: Vec<CacheEntry<T>>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl<T> ReplicaCache<T> {
+    pub fn new(budget_bytes: usize) -> ReplicaCache<T> {
+        ReplicaCache {
+            budget: budget_bytes.max(1),
+            entries: Vec::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Borrow a cached replica without touching recency or the
+    /// hit/miss counters — for re-borrowing an entry the caller just
+    /// inserted or already counted (a second counting `get` would
+    /// inflate the hit rate exactly when the cache thrashes).
+    pub fn get_quiet(&mut self, key: &QueueKey) -> Option<&mut T> {
+        self.entries
+            .iter_mut()
+            .find(|e| &e.key == key)
+            .map(|e| &mut e.value)
+    }
+
+    /// Borrow a cached replica, bumping its recency.
+    pub fn get(&mut self, key: &QueueKey) -> Option<&mut T> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.iter_mut().find(|e| &e.key == key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits += 1;
+                Some(&mut e.value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (replacing any same-key entry), then evict LRU entries —
+    /// never the one just inserted — until the byte bound holds.
+    /// Returns the evicted values so callers can fold their state
+    /// (engine ledgers) into reports instead of silently losing it in
+    /// exactly the cache-thrash configurations worth observing.
+    pub fn insert(&mut self, key: QueueKey, value: T, bytes: usize) -> Vec<T> {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut evicted: Vec<T> = Vec::new();
+        if let Some(i) = self.entries.iter().position(|e| e.key == key) {
+            evicted.push(self.entries.remove(i).value);
+        }
+        self.entries.push(CacheEntry {
+            key: key.clone(),
+            value,
+            bytes,
+            last_used: tick,
+        });
+        while self.total_bytes() > self.budget && self.entries.len() > 1 {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.key != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            match lru {
+                Some(i) => {
+                    evicted.push(self.entries.remove(i).value);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// Drop entries whose key no longer satisfies `live` (retired
+    /// generations), returning the evicted values so callers can fold
+    /// their state (e.g. engine ledgers) into reports.
+    pub fn evict_dead(&mut self, live: impl Fn(&QueueKey) -> bool) -> Vec<T> {
+        let mut dead = Vec::new();
+        let mut kept = Vec::new();
+        for e in self.entries.drain(..) {
+            if live(&e.key) {
+                kept.push(e);
+            } else {
+                dead.push(e.value);
+            }
+        }
+        self.evictions += dead.len() as u64;
+        self.entries = kept;
+        dead
+    }
+
+    /// Drain everything (worker exit).
+    pub fn drain(&mut self) -> Vec<T> {
+        self.entries.drain(..).map(|e| e.value).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime: the fixed worker fleet + occupancy accounting.
+// ---------------------------------------------------------------------------
+
+/// Per-worker live counters (occupancy for `{"cmd":"stats"}`).
+#[derive(Default)]
+pub struct WorkerSlot {
+    pub batches: std::sync::atomic::AtomicU64,
+    pub images: std::sync::atomic::AtomicU64,
+    pub busy_us: std::sync::atomic::AtomicU64,
+}
+
+/// One row of worker-occupancy introspection.
+#[derive(Debug, Clone)]
+pub struct WorkerOccupancyRow {
+    pub worker: usize,
+    pub batches: u64,
+    pub images: u64,
+    /// Fraction of wall time since runtime start spent serving batches.
+    pub busy_frac: f64,
+}
+
+/// Cloneable handle the registry/generations use to reach the runtime.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    pub scheduler: Arc<Scheduler>,
+    /// Fixed worker-fleet size (the selector's drain-rate bound).
+    pub workers: usize,
+}
+
+/// The shared worker runtime: a fixed fleet of threads over one
+/// scheduler.  Spawned once by the coordinator; generations only
+/// register/deregister queues.
+pub struct Runtime {
+    handle: RuntimeHandle,
+    slots: Arc<Vec<WorkerSlot>>,
+    started: Instant,
+    handles: Mutex<Vec<std::thread::JoinHandle<super::worker::WorkerReport>>>,
+}
+
+impl Runtime {
+    /// Spawn `workers` runtime threads (clamped ≥ 1).
+    pub fn start(
+        workers: usize,
+        replica_cache_bytes: usize,
+        urgency_window: Duration,
+        stats: Arc<super::worker::SharedStats>,
+    ) -> Runtime {
+        let workers = workers.max(1);
+        let scheduler = Arc::new(Scheduler::new(urgency_window));
+        let slots: Arc<Vec<WorkerSlot>> =
+            Arc::new((0..workers).map(|_| WorkerSlot::default()).collect());
+        let mut handles = Vec::with_capacity(workers);
+        for index in 0..workers {
+            handles.push(super::worker::spawn_runtime_worker(
+                super::worker::RuntimeWorker {
+                    index,
+                    scheduler: scheduler.clone(),
+                    stats: stats.clone(),
+                    slots: slots.clone(),
+                    replica_cache_bytes,
+                },
+            ));
+        }
+        Runtime {
+            handle: RuntimeHandle { scheduler, workers },
+            slots,
+            started: Instant::now(),
+            handles: Mutex::new(handles),
+        }
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handle.workers
+    }
+
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.handle.scheduler
+    }
+
+    /// Worker-occupancy rows for `{"cmd":"stats"}`.
+    pub fn occupancy(&self) -> Vec<WorkerOccupancyRow> {
+        let wall_us = self.started.elapsed().as_micros().max(1) as f64;
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(worker, s)| WorkerOccupancyRow {
+                worker,
+                batches: s.batches.load(Ordering::Relaxed),
+                images: s.images.load(Ordering::Relaxed),
+                busy_frac: (s.busy_us.load(Ordering::Relaxed) as f64 / wall_us).min(1.0),
+            })
+            .collect()
+    }
+
+    /// Close the scheduler and join every worker.  Call only after the
+    /// registry has retired (drained) all generations.  A worker that
+    /// died panicking is logged and skipped rather than re-panicking —
+    /// this same path runs from `Drop`, where a second panic aborts.
+    pub fn shutdown(self) -> Vec<super::worker::WorkerReport> {
+        self.shutdown_impl()
+        // `self` drops here; Drop re-runs shutdown_impl, which finds
+        // the scheduler already closed and no handles left — a no-op.
+    }
+
+    fn shutdown_impl(&self) -> Vec<super::worker::WorkerReport> {
+        self.handle.scheduler.close();
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        handles
+            .into_iter()
+            .filter_map(|h| match h.join() {
+                Ok(report) => Some(report),
+                Err(_) => {
+                    crate::error!("runtime", "a runtime worker panicked; report lost");
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+impl Drop for Runtime {
+    /// Backstop for coordinators dropped without an explicit shutdown
+    /// (a test unwinding mid-body, an embedder's early-error return):
+    /// without this, the fixed fleet would leak as detached threads
+    /// spinning on idle ticks forever.  Generations drop before the
+    /// runtime (field order in `Coordinator`), so their drains still
+    /// see live workers.
+    fn drop(&mut self) {
+        let _ = self.shutdown_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::sched::{dummy_request, sim_source};
+
+    fn test_source(model: &str, weight: f64, cap: usize) -> Arc<WorkSource> {
+        sim_source(model, weight, cap)
+    }
+
+    fn test_request(deadline_ms: Option<f64>) -> Request {
+        dummy_request(0, deadline_ms)
+    }
+
+    fn drain_one(s: &Arc<WorkSource>) -> usize {
+        s.queue.drain_up_to(1).len()
+    }
+
+    #[test]
+    fn stride_service_tracks_weights() {
+        let sched = Scheduler::new(Duration::from_millis(50));
+        let heavy = test_source("heavy", 3.0, 256);
+        let light = test_source("light", 1.0, 256);
+        sched.register(heavy.clone());
+        sched.register(light.clone());
+
+        // Keep both backlogged; serve 400 singles via the scheduler.
+        let mut served = [0usize; 2];
+        for _ in 0..400 {
+            while heavy.queue.len() < 4 {
+                sched.submit(&heavy, test_request(None)).unwrap();
+            }
+            while light.queue.len() < 4 {
+                sched.submit(&light, test_request(None)).unwrap();
+            }
+            match sched.next(Duration::from_millis(10)) {
+                Pick::Work { source, .. } => {
+                    let n = drain_one(&source);
+                    sched.charge(&source.key, n);
+                    if source.key.model.as_ref() == "heavy" {
+                        served[0] += n;
+                    } else {
+                        served[1] += n;
+                    }
+                }
+                _ => panic!("expected work"),
+            }
+        }
+        let ratio = served[0] as f64 / served[1].max(1) as f64;
+        assert!(
+            (2.0..=4.5).contains(&ratio),
+            "service ratio {ratio:.2} (heavy {} / light {}) strays from 3:1",
+            served[0],
+            served[1]
+        );
+    }
+
+    #[test]
+    fn waking_queue_banks_no_idle_credit() {
+        let sched = Scheduler::new(Duration::from_millis(50));
+        let busy = test_source("busy", 1.0, 256);
+        let lazy = test_source("lazy", 1.0, 256);
+        sched.register(busy.clone());
+        sched.register(lazy.clone());
+
+        // Serve 50 images from busy while lazy idles (its pass stays
+        // stale-low; virtual time advances with busy).
+        for _ in 0..50 {
+            while busy.queue.len() < 2 {
+                sched.submit(&busy, test_request(None)).unwrap();
+            }
+            match sched.next(Duration::from_millis(10)) {
+                Pick::Work { source, .. } => {
+                    assert_eq!(source.key.model.as_ref(), "busy");
+                    let n = drain_one(&source);
+                    sched.charge(&source.key, n);
+                }
+                _ => panic!("expected work"),
+            }
+        }
+
+        // Lazy wakes with a sustained burst: the join-clamp must bring
+        // its pass up to virtual time so it SHARES the fleet instead of
+        // monopolizing it for 50 images of banked idle "credit".
+        let mut served = [0usize; 2]; // [busy, lazy]
+        for _ in 0..20 {
+            while busy.queue.len() < 2 {
+                sched.submit(&busy, test_request(None)).unwrap();
+            }
+            while lazy.queue.len() < 2 {
+                sched.submit(&lazy, test_request(None)).unwrap();
+            }
+            match sched.next(Duration::from_millis(10)) {
+                Pick::Work { source, .. } => {
+                    let n = drain_one(&source);
+                    sched.charge(&source.key, n);
+                    if source.key.model.as_ref() == "busy" {
+                        served[0] += n;
+                    } else {
+                        served[1] += n;
+                    }
+                }
+                _ => panic!("expected work"),
+            }
+        }
+        assert!(served[0] >= 6, "busy starved by a waking queue: {served:?}");
+        assert!(served[1] >= 6, "waking queue starved: {served:?}");
+
+        // The long-busy queue's deadlines stay EDF-eligible: its pass
+        // sits within the slack of the clamped-up base.
+        sched.submit(&busy, test_request(Some(20.0))).unwrap();
+        while lazy.queue.len() < 2 {
+            sched.submit(&lazy, test_request(None)).unwrap();
+        }
+        match sched.next(Duration::from_millis(10)) {
+            Pick::Work { source, .. } => {
+                assert_eq!(source.key.model.as_ref(), "busy")
+            }
+            _ => panic!("expected work"),
+        }
+    }
+
+    #[test]
+    fn fair_share_splits_fleet_by_contention_and_weight() {
+        let sched = Scheduler::new(Duration::from_millis(50));
+        let a = test_source("fsa", 1.0, 8);
+        let b = test_source("fsb", 3.0, 8);
+        sched.register(a.clone());
+        sched.register(b.clone());
+        // Nothing contended: a queue gets the whole fleet.
+        assert_eq!(sched.fair_share(4, &a.key), 4);
+        // Both backlogged: split by weight (1:3 of 4 workers → 1 and 3).
+        sched.submit(&a, test_request(None)).unwrap();
+        sched.submit(&b, test_request(None)).unwrap();
+        assert_eq!(sched.fair_share(4, &a.key), 1);
+        assert_eq!(sched.fair_share(4, &b.key), 3);
+        // Never below one worker, never above the fleet.
+        assert_eq!(sched.fair_share(1, &a.key), 1);
+        // Unknown key defaults to weight 1 against the contended set.
+        let ghost = QueueKey {
+            model: Arc::from("ghost"),
+            generation: 9,
+            engine: EngineKind::Sim,
+        };
+        assert!(sched.fair_share(4, &ghost) >= 1);
+    }
+
+    #[test]
+    fn edf_override_preempts_fair_share() {
+        let sched = Scheduler::new(Duration::from_millis(100));
+        let hot = test_source("hot", 1.0, 256);
+        let cold = test_source("cold", 1.0, 256);
+        sched.register(hot.clone());
+        sched.register(cold.clone());
+        for _ in 0..8 {
+            sched.submit(&hot, test_request(None)).unwrap();
+        }
+        // Cold's single request has a deadline inside the urgency
+        // window: it must be picked first despite hot's backlog.
+        sched.submit(&cold, test_request(Some(20.0))).unwrap();
+        match sched.next(Duration::from_millis(10)) {
+            Pick::Work { source, contended } => {
+                assert_eq!(source.key.model.as_ref(), "cold");
+                assert!(contended);
+            }
+            _ => panic!("expected work"),
+        }
+    }
+
+    #[test]
+    fn closed_nonempty_queue_still_served_then_drains() {
+        let sched = Scheduler::new(Duration::from_millis(50));
+        let s = test_source("draining", 1.0, 8);
+        sched.register(s.clone());
+        sched.submit(&s, test_request(None)).unwrap();
+        s.queue.close();
+        // Residual item is still pickable (reload drain semantics).
+        match sched.next(Duration::from_millis(10)) {
+            Pick::Work { source, .. } => {
+                assert_eq!(drain_one(&source), 1);
+                sched.charge(&source.key, 1);
+            }
+            _ => panic!("closed non-empty queue must still be served"),
+        }
+        // Now closed + empty + no inflight: wait_drained removes it.
+        sched.wait_drained(&s.key);
+        assert!(!sched.is_live(&s.key));
+        // Idempotent for unknown keys.
+        sched.wait_drained(&s.key);
+    }
+
+    #[test]
+    fn wait_drained_blocks_on_inflight() {
+        let sched = Arc::new(Scheduler::new(Duration::from_millis(50)));
+        let s = test_source("inflight", 1.0, 8);
+        sched.register(s.clone());
+        s.queue.close();
+        let guard = InflightGuard::new(s.clone(), sched.clone());
+        let (sched2, key) = (sched.clone(), s.key.clone());
+        let waiter = std::thread::spawn(move || {
+            sched2.wait_drained(&key);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!waiter.is_finished(), "drain completed with a batch in flight");
+        drop(guard);
+        waiter.join().unwrap();
+        assert!(!sched.is_live(&s.key));
+    }
+
+    #[test]
+    fn close_shuts_down_idle_pick() {
+        let sched = Scheduler::new(Duration::from_millis(50));
+        let s = test_source("bye", 1.0, 8);
+        sched.register(s.clone());
+        sched.close();
+        assert!(matches!(sched.next(Duration::from_millis(5)), Pick::Shutdown));
+    }
+
+    #[test]
+    fn idle_pick_times_out() {
+        let sched = Scheduler::new(Duration::from_millis(50));
+        let t0 = Instant::now();
+        assert!(matches!(sched.next(Duration::from_millis(20)), Pick::Idle));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn replica_cache_lru_and_byte_bound() {
+        let key = |m: &str| QueueKey {
+            model: Arc::from(m),
+            generation: 1,
+            engine: EngineKind::Sim,
+        };
+        let mut c: ReplicaCache<u32> = ReplicaCache::new(100);
+        c.insert(key("a"), 1, 40);
+        c.insert(key("b"), 2, 40);
+        assert_eq!(c.total_bytes(), 80);
+        // Touch a so b is the LRU victim — and the evicted value comes
+        // back to the caller (ledger folding), never silently dropped.
+        assert_eq!(c.get(&key("a")), Some(&mut 1));
+        assert_eq!(c.insert(key("c"), 3, 40), vec![2]);
+        assert_eq!(c.total_bytes(), 80);
+        assert!(c.get(&key("b")).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&key("a")).is_some());
+        // An oversized entry is kept alone — never with company — and
+        // both displaced values are handed back (LRU first).
+        assert_eq!(c.insert(key("d"), 4, 500), vec![3, 1]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.total_bytes(), 500);
+        // A small entry next to the oversized LRU restores the bound by
+        // evicting the giant.
+        c.insert(key("e"), 5, 10);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.total_bytes(), 10);
+        // evict_dead removes retired keys, returning their values.
+        c.insert(key("f"), 6, 20);
+        assert_eq!(c.len(), 2);
+        let dead = c.evict_dead(|k| k.model.as_ref() == "f");
+        assert_eq!(dead, vec![5]);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&key("f")).is_some());
+    }
+
+    #[test]
+    fn replica_bytes_scales_by_kind() {
+        let dir = std::env::temp_dir().join(format!(
+            "zuluko_sched_bytes_{}",
+            std::process::id()
+        ));
+        crate::testkit::manifest::write_synthetic(&dir, "m", 10, 8, &[1]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let fp32 = replica_bytes(EngineKind::AclStaged, &m);
+        let q8 = replica_bytes(EngineKind::Quant, &m);
+        let sim = replica_bytes(EngineKind::Sim, &m);
+        assert!(fp32 >= sim);
+        assert!(q8 >= sim || m.params_q8.is_empty());
+    }
+}

@@ -1,59 +1,81 @@
-//! Worker threads: each owns an engine replica (XLA handles are not Send,
-//! so the engine is built *inside* the thread) and drains its queue via
-//! the dynamic batcher.
+//! Runtime worker threads: the fixed, process-wide worker fleet behind
+//! the shared scheduler (DESIGN.md §4).
 //!
-//! Policy duties on the request path (DESIGN.md §7): before forming a
-//! batch the pending queue is stable-sorted by urgency (priority, then
-//! deadline) and already-expired requests are shed with a structured
-//! rejection instead of burning engine time; after each batch the
-//! observed execution time feeds the shared latency predictor and —
-//! on the quality pool only — the per-request results fill the
-//! response cache.
+//! A worker is no longer pinned to one (model, engine) pool.  Each
+//! iteration it asks the scheduler for the next queue to serve
+//! (deadline-urgent first, then weighted fair share), forms a batch
+//! from *that* queue, and executes it on an engine replica from its
+//! private, byte-bounded LRU cache.  XLA handles are not `Send`, so
+//! replicas are still built inside the worker thread — the cache is
+//! what makes switching models cheap and bounds resident weights
+//! (`replica_cache_mb`).
 //!
-//! Memory duties (DESIGN.md §"Memory ownership on the hot path"): the
-//! batch is assembled *in place* into a buffer leased from the tensor
-//! arena — each request's pooled pixels are copied straight into their
-//! batch slot (no `Tensor::stack` allocation) — the engine reads it as
-//! a borrowed view, and reply extraction reads borrowed output rows
-//! (no `unstack` copies).  The lease returns to the arena on every
-//! exit path, including errors, because return is `Drop`.
+//! Policy duties on the request path (DESIGN.md §7) are unchanged:
+//! before forming a batch the pending queue is stable-sorted by urgency
+//! (priority, then deadline) and already-expired requests are shed with
+//! a structured rejection; after each batch the observed execution time
+//! feeds the generation's latency predictor and — on the quality queue
+//! only — the per-request results fill the response cache.
 //!
-//! Registry duties (DESIGN.md §8): a worker belongs to one model
-//! generation.  Its queue, arena, and policy ctx are that generation's;
-//! every reply carries the model name so isolation is observable on the
-//! wire; per-model counters (shared across the model's generations) are
-//! bumped alongside the process-wide aggregates.
+//! Memory duties (DESIGN.md §7.5) are unchanged: the batch is assembled
+//! in place into a buffer leased from the *generation's* arena, the
+//! engine reads it as a borrowed view, and reply extraction reads
+//! borrowed output rows.  The lease returns on every exit path.
+//!
+//! Drain duties (DESIGN.md §8): an [`InflightGuard`] is taken *before*
+//! the first pop of a batch, so a retiring generation's
+//! `wait_drained` can never observe "queue empty" while a batch is
+//! mid-flight.  Closed queues are still served while they hold residual
+//! items — a reload drain answers everything on the old weights.
 
-use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::engine::{self, EngineKind};
+use crate::engine::{self, Engine};
 use crate::metrics::ledger::Ledger;
 use crate::metrics::Histogram;
-use crate::policy::{CachedResult, PolicyCtx, Urgency};
-use crate::registry::ModelCounters;
-use crate::runtime::Manifest;
-use crate::tensor::{TensorPool, TensorView};
+use crate::policy::{CachedResult, Urgency};
+use crate::tensor::TensorView;
 
-use super::batcher::BatchPolicy;
-use super::queue::BoundedQueue;
+use super::scheduler::{
+    replica_bytes, InflightGuard, Pick, ReplicaCache, Scheduler, WorkSource,
+    WorkerSlot,
+};
 use super::{Request, Response};
 
 /// The reply sent for an admitted request whose deadline passed while it
 /// waited in queue (tested against in examples and policy_props).
 pub const DEADLINE_ERROR: &str = "deadline exceeded in queue";
 
-/// What a worker hands back at shutdown.
+/// How long a worker waits for the first item of a batch after a pick
+/// (covers the race where another worker drained the picked queue).
+const FIRST_POP_WAIT: Duration = Duration::from_millis(2);
+
+/// Granularity at which an uncontended batch window re-checks whether
+/// another queue became backlogged (bounds the cross-queue latency a
+/// coalescing worker can add on a small fleet).
+const WINDOW_SLICE: Duration = Duration::from_millis(2);
+
+/// Idle housekeeping tick (dead-replica eviction between work).
+const IDLE_TICK: Duration = Duration::from_millis(200);
+
+/// What a runtime worker hands back at shutdown.
 #[derive(Debug)]
 pub struct WorkerReport {
     pub worker: usize,
     pub batches: u64,
     pub images: u64,
+    /// Merged ledgers of every engine replica this worker built.
     pub ledger: Ledger,
+    /// Total wall time spent building + warming replicas.
     pub compile_ms: f64,
+    /// Replica-cache traffic: hits avoid a rebuild, misses pay one,
+    /// evictions measure byte-budget pressure (`replica_cache_mb`).
+    pub replica_hits: u64,
+    pub replica_misses: u64,
+    pub replica_evictions: u64,
 }
 
 /// Shared live counters (cheap to bump on the hot path).
@@ -66,223 +88,284 @@ pub struct SharedStats {
     pub batch_sizes: Mutex<Histogram>,
 }
 
-/// Everything one worker thread needs — bundled so a seat is one value,
-/// not a dozen positional arguments.
-pub struct WorkerSeat {
-    /// Process-unique worker index (spans pools within a generation).
+/// Everything one runtime worker thread needs.
+pub struct RuntimeWorker {
     pub index: usize,
-    pub kind: EngineKind,
-    /// Model this worker's generation serves (echoed in every reply).
-    pub model: Arc<str>,
-    pub manifest: Manifest,
-    pub queue: Arc<BoundedQueue<Request>>,
-    pub policy: BatchPolicy,
-    /// Process-wide aggregates.
+    pub scheduler: Arc<Scheduler>,
     pub stats: Arc<SharedStats>,
-    /// Per-model counters (survive hot reloads).
-    pub counters: Arc<ModelCounters>,
-    /// This generation's policy state (predictor + response cache).
-    pub ctx: Arc<PolicyCtx>,
-    pub arena: TensorPool,
-    /// Only the quality pool fills the response cache: caching an int8
-    /// result would let later fp32-entitled requests hit it (Fig 4
-    /// accuracy loss through the back door).
-    pub fill_cache: bool,
+    /// Per-worker occupancy slots (index `index` is this worker's).
+    pub slots: Arc<Vec<WorkerSlot>>,
+    /// Byte budget for this worker's engine-replica LRU.
+    pub replica_cache_bytes: usize,
 }
 
-pub fn spawn_worker(
-    seat: WorkerSeat,
-    ready: mpsc::Sender<Result<()>>,
-) -> JoinHandle<WorkerReport> {
+pub fn spawn_runtime_worker(w: RuntimeWorker) -> JoinHandle<WorkerReport> {
     std::thread::Builder::new()
-        .name(format!("zuluko-worker-{}-{}", seat.model, seat.index))
-        .spawn(move || {
-            let WorkerSeat {
-                index: worker,
-                kind,
-                model,
-                manifest,
-                queue,
-                policy,
-                stats,
-                counters,
-                ctx,
-                arena: pool,
-                fill_cache,
-            } = seat;
-            // Build + warm the engine before signalling readiness so the
-            // coordinator's callers never measure compilation.
-            let mut eng = match engine::build(kind, &manifest) {
-                Ok(mut e) => match e.warmup() {
-                    Ok(()) => {
-                        let _ = ready.send(Ok(()));
-                        e
+        .name(format!("zuluko-runtime-{}", w.index))
+        .spawn(move || run_worker(w))
+        .expect("spawn runtime worker")
+}
+
+fn run_worker(w: RuntimeWorker) -> WorkerReport {
+    let mut cache: ReplicaCache<Box<dyn Engine>> =
+        ReplicaCache::new(w.replica_cache_bytes);
+    let mut ledger = Ledger::new();
+    let mut batches = 0u64;
+    let mut images = 0u64;
+    let mut compile_ms = 0.0f64;
+    let mut seen_epoch = w.scheduler.table_epoch();
+
+    loop {
+        match w.scheduler.next(IDLE_TICK) {
+            Pick::Shutdown => break,
+            Pick::Idle => {
+                for dead in cache.evict_dead(|k| w.scheduler.is_live(k)) {
+                    ledger.merge(dead.ledger());
+                }
+            }
+            Pick::Work { source, contended } => {
+                // Inflight is marked before any pop so a concurrent
+                // drain can never miss this batch.
+                let _inflight = InflightGuard::new(source.clone(), w.scheduler.clone());
+                let (b, i, busy) = serve_one(
+                    &w,
+                    &source,
+                    contended,
+                    &mut cache,
+                    &mut compile_ms,
+                    &mut ledger,
+                );
+                batches += b;
+                images += i;
+                let slot = &w.slots[w.index];
+                slot.batches.fetch_add(b, Ordering::Relaxed);
+                slot.images.fetch_add(i, Ordering::Relaxed);
+                slot.busy_us.fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
+                // Retired generations' replicas are dead weight in the
+                // byte budget — evict them promptly, not just on idle.
+                // Gated on the table epoch so steady-state serving pays
+                // nothing for the rare-retire case.
+                let epoch = w.scheduler.table_epoch();
+                if epoch != seen_epoch {
+                    seen_epoch = epoch;
+                    for dead in cache.evict_dead(|k| w.scheduler.is_live(k)) {
+                        ledger.merge(dead.ledger());
                     }
-                    Err(err) => {
-                        let _ = ready.send(Err(err));
-                        return WorkerReport {
-                            worker,
-                            batches: 0,
-                            images: 0,
-                            ledger: Ledger::new(),
-                            compile_ms: 0.0,
-                        };
-                    }
-                },
-                Err(err) => {
-                    let _ = ready.send(Err(err));
-                    return WorkerReport {
-                        worker,
-                        batches: 0,
-                        images: 0,
-                        ledger: Ledger::new(),
-                        compile_ms: 0.0,
+                }
+            }
+        }
+    }
+
+    for eng in cache.drain() {
+        ledger.merge(eng.ledger());
+    }
+    WorkerReport {
+        worker: w.index,
+        batches,
+        images,
+        ledger,
+        compile_ms,
+        replica_hits: cache.hits,
+        replica_misses: cache.misses,
+        replica_evictions: cache.evictions,
+    }
+}
+
+/// Borrow (or build + warm) the engine replica for `source`'s queue.
+/// Replicas evicted for byte pressure fold their ledgers into the
+/// worker's report instead of vanishing.
+fn replica<'a>(
+    cache: &'a mut ReplicaCache<Box<dyn Engine>>,
+    source: &WorkSource,
+    compile_ms: &mut f64,
+    ledger: &mut Ledger,
+) -> anyhow::Result<&'a mut Box<dyn Engine>> {
+    if cache.get(&source.key).is_none() {
+        let t0 = Instant::now();
+        let mut eng = engine::build(source.key.engine, &source.exec.manifest)?;
+        eng.warmup()?;
+        *compile_ms += crate::util::ms(t0.elapsed());
+        let bytes = replica_bytes(source.key.engine, &source.exec.manifest);
+        for old in cache.insert(source.key.clone(), eng, bytes) {
+            ledger.merge(old.ledger());
+        }
+    }
+    // Quiet re-borrow: the hit/miss was already counted above — a
+    // counting get here would report ~50% hits on a 100%-thrash cache.
+    Ok(cache.get_quiet(&source.key).expect("replica just inserted"))
+}
+
+/// Serve one batch from `source`.  Returns (batches, images, busy)
+/// where busy is the wall time spent *serving* — measured from batch
+/// formation, so the coalescing window and the first-pop wait don't
+/// count an idle fleet as busy.
+fn serve_one(
+    w: &RuntimeWorker,
+    source: &Arc<WorkSource>,
+    contended: bool,
+    cache: &mut ReplicaCache<Box<dyn Engine>>,
+    compile_ms: &mut f64,
+    ledger: &mut Ledger,
+) -> (u64, u64, Duration) {
+    let queue = &source.queue;
+    let exec = &source.exec;
+    let model = &exec.model;
+
+    // Deadline-aware ordering: most urgent work first.  Stable, so
+    // plain FIFO traffic is untouched.
+    queue.sort_pending_by_key(|r| Urgency::of(&r.slo, r.submitted));
+
+    // Work-conserving batch window: when other queues are waiting, take
+    // what is already here instead of holding the window open — and an
+    // uncontended window is re-checked every slice so a queue that
+    // becomes backlogged mid-window (a deadlined request on an
+    // otherwise idle fleet) closes it early instead of waiting out the
+    // full coalescing timeout.
+    let window = if contended {
+        Duration::ZERO
+    } else {
+        source.policy.timeout
+    };
+    let Some(reqs) = source.policy.form_adaptive(
+        queue,
+        FIRST_POP_WAIT,
+        window,
+        WINDOW_SLICE,
+        || !w.scheduler.pending_elsewhere(&source.key),
+    ) else {
+        return (0, 0, Duration::ZERO); // raced empty, or closed + drained
+    };
+    let busy_from = Instant::now();
+    // The batcher's shrink-to-supported-size may have pushed leftovers
+    // back to the queue front without passing the scheduler's submit
+    // path — wake idle workers so a (possibly deadlined) leftover never
+    // languishes behind this worker's inference.
+    if !queue.is_empty() {
+        w.scheduler.notify_all();
+    }
+
+    // Shed batch members whose deadline already passed — never silent.
+    let now = Instant::now();
+    let (expired, live): (Vec<Request>, Vec<Request>) = reqs
+        .into_iter()
+        .partition(|r| r.slo.expired(r.submitted, now));
+    for r in &expired {
+        exec.ctx.shed_expired.fetch_add(1, Ordering::Relaxed);
+        let mut resp = Response::shed_expired(r.id, DEADLINE_ERROR);
+        resp.model = model.clone();
+        let _ = r.reply.send(resp);
+    }
+    if live.is_empty() {
+        w.scheduler.charge(&source.key, expired.len().max(1));
+        return (0, 0, busy_from.elapsed());
+    }
+    // Shedding may leave a batch size without an artifact; re-split and
+    // return the tail to the queue front.
+    let (live, leftover) = source.policy.split(live);
+    if !leftover.is_empty() {
+        queue.push_front_bulk(leftover);
+        // The leftovers bypassed the scheduler's submit path — wake
+        // idle workers so they never languish while this worker is
+        // busy with the batch it kept.
+        w.scheduler.notify_all();
+    }
+
+    let formed_at = Instant::now();
+    let bsize = live.len();
+    let per = live[0].image.len();
+    let row_shape = live[0].image.shape().to_vec();
+    if live.iter().any(|r| r.image.shape() != &row_shape[..]) {
+        fail_batch(model, &live, "batch shape mismatch");
+        w.scheduler.charge(&source.key, bsize);
+        return (0, 0, busy_from.elapsed());
+    }
+
+    // In-place batching: lease a batch buffer from this generation's
+    // arena and copy each request's pooled pixels straight into their
+    // slot — the only copy between socket and engine.
+    let mut bshape = Vec::with_capacity(row_shape.len() + 1);
+    bshape.push(bsize);
+    bshape.extend_from_slice(&row_shape);
+    let mut bbuf = exec.arena.lease(bsize * per);
+    for (slot, r) in live.iter().enumerate() {
+        bbuf[slot * per..(slot + 1) * per].copy_from_slice(r.image.data());
+    }
+
+    let eng = match replica(cache, source, compile_ms, ledger) {
+        Ok(e) => e,
+        Err(e) => {
+            drop(bbuf);
+            fail_batch(model, &live, &format!("engine build: {e:#}"));
+            w.scheduler.charge(&source.key, bsize);
+            return (0, 0, busy_from.elapsed());
+        }
+    };
+    let t0 = Instant::now();
+    let out = eng.infer_view(TensorView::new(&bshape, &bbuf));
+    let exec_ms = crate::util::ms(t0.elapsed());
+    drop(bbuf); // back to the arena before reply fan-out
+
+    let mut served = (0u64, 0u64);
+    match out {
+        Ok(probs) if probs.shape().first() == Some(&bsize) => {
+            served = (1, bsize as u64);
+            exec.ctx.predictor.record(source.key.engine, bsize, exec_ms);
+            w.stats.batch_sizes.lock().unwrap().record_ms(bsize as f64);
+            let pv = probs.view();
+            for (slot, req) in live.into_iter().enumerate() {
+                // Borrowed output row: argmax/top-5 read the batch
+                // tensor in place (no unstack copy).
+                let row = pv.row(slot);
+                let total_ms = crate::util::ms(req.submitted.elapsed());
+                let queue_ms = crate::util::ms(formed_at.duration_since(req.submitted));
+                let top1 = row.argmax();
+                let top5 = row.topk(5);
+                if source.fill_cache {
+                    // Fill under the content key, and alias under the
+                    // wire key so the next identical raw request skips
+                    // decode.
+                    let cached = CachedResult {
+                        top1,
+                        top5: top5.clone(),
                     };
-                }
-            };
-
-            let mut batches = 0u64;
-            let mut images = 0u64;
-
-            loop {
-                // Deadline-aware ordering: most urgent work first.
-                // Stable, so plain FIFO traffic is untouched.
-                queue.sort_pending_by_key(|r| Urgency::of(&r.slo, r.submitted));
-
-                let Some(reqs) = policy.form(&queue) else { break };
-
-                // Shed batch members whose deadline already passed —
-                // running them would waste engine time on a reply the
-                // client has given up on.  Never silent: each shed
-                // request gets a structured error response.
-                let now = Instant::now();
-                let (expired, live): (Vec<Request>, Vec<Request>) = reqs
-                    .into_iter()
-                    .partition(|r| r.slo.expired(r.submitted, now));
-                for r in &expired {
-                    ctx.shed_expired.fetch_add(1, Ordering::Relaxed);
-                    let mut resp = Response::shed_expired(r.id, DEADLINE_ERROR);
-                    resp.model = model.clone();
-                    let _ = r.reply.send(resp);
-                }
-                if live.is_empty() {
-                    continue;
-                }
-                // Shedding may leave a batch size without an artifact;
-                // re-split and return the tail to the queue front.
-                let (live, leftover) = policy.split(live);
-                if !leftover.is_empty() {
-                    queue.push_front_bulk(leftover);
-                }
-
-                let formed_at = Instant::now();
-                let bsize = live.len();
-                let per = live[0].image.len();
-                let row_shape = live[0].image.shape().to_vec();
-                if live.iter().any(|r| r.image.shape() != &row_shape[..]) {
-                    fail_batch(&model, &live, "batch shape mismatch");
-                    continue;
-                }
-                // In-place batching: lease a batch buffer from the arena
-                // and copy each request's pooled pixels straight into
-                // their slot — the only copy between socket and engine.
-                let mut bshape = Vec::with_capacity(row_shape.len() + 1);
-                bshape.push(bsize);
-                bshape.extend_from_slice(&row_shape);
-                let mut bbuf = pool.lease(bsize * per);
-                for (slot, r) in live.iter().enumerate() {
-                    bbuf[slot * per..(slot + 1) * per]
-                        .copy_from_slice(r.image.data());
-                }
-                let t0 = Instant::now();
-                let out = eng.infer_view(TensorView::new(&bshape, &bbuf));
-                let exec_ms = crate::util::ms(t0.elapsed());
-                drop(bbuf); // back to the arena before reply fan-out
-
-                match out {
-                    Ok(probs) if probs.shape().first() == Some(&bsize) => {
-                        batches += 1;
-                        images += bsize as u64;
-                        ctx.predictor.record(kind, bsize, exec_ms);
-                        stats
-                            .batch_sizes
-                            .lock()
-                            .unwrap()
-                            .record_ms(bsize as f64);
-                        let pv = probs.view();
-                        for (slot, req) in live.into_iter().enumerate() {
-                            // Borrowed output row: argmax/top-5 read the
-                            // batch tensor in place (no unstack copy).
-                            let row = pv.row(slot);
-                            let total_ms =
-                                crate::util::ms(req.submitted.elapsed());
-                            let queue_ms = crate::util::ms(
-                                formed_at.duration_since(req.submitted),
-                            );
-                            let top1 = row.argmax();
-                            let top5 = row.topk(5);
-                            if fill_cache {
-                                // Fill under the content key, and alias
-                                // under the wire key so the next
-                                // identical raw request skips decode.
-                                let cached = CachedResult {
-                                    top1,
-                                    top5: top5.clone(),
-                                };
-                                for key in
-                                    req.cache_key.iter().chain(req.wire_key.iter())
-                                {
-                                    ctx.cache.put(*key, cached.clone());
-                                }
-                            }
-                            let _ = req.reply.send(Response {
-                                id: req.id,
-                                top1,
-                                top5,
-                                queue_ms,
-                                exec_ms,
-                                total_ms,
-                                batch_size: bsize,
-                                worker,
-                                engine: kind.as_str(),
-                                model: model.clone(),
-                                cached: false,
-                                kind: "",
-                                error: None,
-                            });
-                            stats.completed.fetch_add(1, Ordering::Relaxed);
-                            stats.images.fetch_add(1, Ordering::Relaxed);
-                            counters.completed.fetch_add(1, Ordering::Relaxed);
-                            counters.images.fetch_add(1, Ordering::Relaxed);
-                            stats
-                                .latency
-                                .lock()
-                                .unwrap()
-                                .record_ms(total_ms);
-                        }
+                    for key in req.cache_key.iter().chain(req.wire_key.iter()) {
+                        exec.ctx.cache.put(*key, cached.clone());
                     }
-                    Ok(probs) => fail_batch(
-                        &model,
-                        &live,
-                        &format!(
-                            "infer: engine returned shape {:?} for batch {bsize}",
-                            probs.shape()
-                        ),
-                    ),
-                    Err(e) => fail_batch(&model, &live, &format!("infer: {e}")),
                 }
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    top1,
+                    top5,
+                    queue_ms,
+                    exec_ms,
+                    total_ms,
+                    batch_size: bsize,
+                    worker: w.index,
+                    engine: source.key.engine.as_str(),
+                    model: model.clone(),
+                    cached: false,
+                    kind: "",
+                    error: None,
+                });
+                w.stats.completed.fetch_add(1, Ordering::Relaxed);
+                w.stats.images.fetch_add(1, Ordering::Relaxed);
+                exec.counters.completed.fetch_add(1, Ordering::Relaxed);
+                exec.counters.images.fetch_add(1, Ordering::Relaxed);
+                w.stats.latency.lock().unwrap().record_ms(total_ms);
             }
-
-            let compile_ms = 0.0; // engines expose this via acl; generic 0
-            WorkerReport {
-                worker,
-                batches,
-                images,
-                ledger: eng.ledger().clone(),
-                compile_ms,
-            }
-        })
-        .expect("spawn worker")
+        }
+        Ok(probs) => fail_batch(
+            model,
+            &live,
+            &format!(
+                "infer: engine returned shape {:?} for batch {bsize}",
+                probs.shape()
+            ),
+        ),
+        Err(e) => fail_batch(model, &live, &format!("infer: {e}")),
+    }
+    w.scheduler.charge(&source.key, bsize);
+    (served.0, served.1, busy_from.elapsed())
 }
 
 fn fail_batch(model: &Arc<str>, reqs: &[Request], msg: &str) {

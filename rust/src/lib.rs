@@ -10,8 +10,10 @@
 //!   module, int8 quantization).
 //! * **L2** — JAX SqueezeNet v1.0 (`python/compile/model.py`), AOT-lowered
 //!   to HLO-text artifacts.
-//! * **L3** — this crate: the serving coordinator (router, dynamic
-//!   batcher, worker pools, TCP server) with two execution backends:
+//! * **L3** — this crate: the serving coordinator (a shared worker
+//!   runtime — fixed thread fleet over a weighted-fair scheduler of all
+//!   (model, engine) queues — dynamic batcher, TCP server) with two
+//!   execution backends:
 //!   the paper's from-scratch **ACL engine** (fused stages) and the
 //!   **TF-baseline engine** (op-by-op graph interpreter), plus the Fig 4
 //!   quantized variant — topped by an SLO-aware **policy layer**

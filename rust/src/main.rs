@@ -7,22 +7,30 @@
 //!   inspect    print manifest / artifact inventory
 //!
 //! Examples:
-//!   zuluko serve --engine acl --workers 1 --max-batch 8
+//!   zuluko serve --engine acl --runtime-workers 4 --max-batch 8
 //!   zuluko serve --model main=artifacts --model exp=artifacts-exp \
 //!                --default-model main          # multi-model registry
 //!   zuluko serve --models models.json          # registry from an index
+//!   zuluko serve --models models.json --model-weight main=3 \
+//!                --replica-cache-mb 64         # weighted shared runtime
 //!   zuluko infer --ppm frame.ppm --engine acl-fused
 //!   zuluko bench --engine tf --iters 10
 //!   zuluko inspect
 //!
 //! Registry flags (DESIGN.md §8): `--model name=path` registers one
 //! model (repeatable); `--models index.json` loads a whole index of the
-//! shape `{"default":"name","preload":false,"models":{"name":"path"}}`;
-//! `--default-model` picks which model serves requests without a
-//! `model` field; `--preload-models` warms every model at startup
-//! instead of on first request.  Clients address a model with
-//! `{"id":1,"image":{...},"model":"name"}` and hot-reload one with
-//! `{"cmd":"reload","model":"name"}`.
+//! shape `{"default":"name","preload":false,"models":{"name":"path"},
+//! "weights":{"name":2.0}}`; `--default-model` picks which model serves
+//! requests without a `model` field; `--preload-models` warms every
+//! model at startup instead of on first request.  Clients address a
+//! model with `{"id":1,"image":{...},"model":"name"}` and hot-reload
+//! one with `{"cmd":"reload","model":"name"}`.
+//!
+//! Shared runtime flags (DESIGN.md §4): `--runtime-workers N` sizes the
+//! fixed worker fleet (default: detected core count; `--workers` is the
+//! legacy spelling), `--replica-cache-mb` bounds each worker's resident
+//! engine replicas, `--model-weight name=w` skews the fair-share
+//! scheduler (repeatable).
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -37,38 +45,18 @@ use zuluko::tensor::Tensor;
 use zuluko::util::cli::Args;
 use zuluko::{info, util};
 
-const FLAGS: &[&str] = &[
-    // config flags
-    "config",
-    "artifacts",
-    "engine",
-    "workers",
-    "max-batch",
-    "batch-timeout-ms",
-    "queue-capacity",
-    "listen",
-    "log-level",
-    // policy layer
-    "adaptive",
-    "quant-workers",
-    "cache-capacity",
-    "ewma-alpha",
-    "margin",
-    // tensor arena
-    "pool",
-    "pool-cap",
-    // model registry
-    "model",
-    "models",
-    "default-model",
-    "preload-models",
-    // command-specific
-    "ppm",
-    "seed",
-    "iters",
-    "warmup",
-    "top",
-];
+/// Command-specific flags on top of [`Config::FLAGS`] (the config
+/// flags live in one place so a new config knob can't be forgotten
+/// here and fail `Args::parse` as unknown).
+const EXTRA_FLAGS: &[&str] = &["ppm", "seed", "iters", "warmup", "top"];
+
+fn known_flags() -> Vec<&'static str> {
+    Config::FLAGS
+        .iter()
+        .chain(EXTRA_FLAGS.iter())
+        .copied()
+        .collect()
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -78,7 +66,8 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(FLAGS).map_err(anyhow::Error::msg)?;
+    let flags = known_flags();
+    let args = Args::from_env(&flags).map_err(anyhow::Error::msg)?;
     let cfg = Config::from_args(&args)?;
     util::log::set_level(cfg.log_level);
 
@@ -90,7 +79,7 @@ fn run() -> Result<()> {
         Some(other) => bail!("unknown subcommand '{other}' (serve|infer|bench|inspect)"),
         None => {
             eprintln!("usage: zuluko <serve|infer|bench|inspect> [flags]");
-            eprintln!("flags: {}", FLAGS.join(", "));
+            eprintln!("flags: {}", flags.join(", "));
             Ok(())
         }
     }

@@ -23,11 +23,14 @@
 //!    └── Shed               — structured `overloaded` rejection
 //! ```
 //!
-//! Each model *generation* owns one [`PolicyCtx`] shared by its worker
-//! pools (DESIGN.md §8): workers feed the predictor and fill the cache,
-//! the submit path reads both, and because the ctx is per-generation a
-//! cache hit or latency estimate can never cross models or weight
-//! generations.
+//! Each model *generation* owns one [`PolicyCtx`] shared by its engine
+//! queues (DESIGN.md §8): the shared runtime's workers feed the
+//! predictor and fill the cache after each batch they execute for that
+//! generation, the submit path reads both, and because the ctx is
+//! per-generation a cache hit or latency estimate can never cross
+//! models or weight generations.  Predictor keys stay (engine, batch)
+//! *within* a generation's ctx — the shared runtime changes who
+//! executes, not how policy state is namespaced.
 
 pub mod cache;
 pub mod deadline;
@@ -70,10 +73,15 @@ impl PolicyCtx {
     }
 }
 
-/// One pool's state in a [`PolicySnapshot`].
+/// One engine queue's state in a [`PolicySnapshot`].
 #[derive(Debug, Clone)]
 pub struct PoolSnapshot {
     pub engine: &'static str,
+    /// This queue's current weighted fair share of the shared worker
+    /// fleet (≥ 1; equals the whole fleet only when no other queue is
+    /// contended) — the drain-parallelism bound the selector's
+    /// completion prediction uses.  Workers are no longer owned per
+    /// pool.
     pub workers: usize,
     pub queued: usize,
     pub capacity: usize,

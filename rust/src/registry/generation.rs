@@ -1,37 +1,45 @@
-//! One immutable serving generation of one model: engine pools, worker
-//! threads, tensor arena, and per-generation policy state.
+//! One immutable serving generation of one model: scheduled queues, a
+//! tensor arena, and per-generation policy state.  **No threads** — the
+//! shared worker runtime (coordinator::scheduler) executes every
+//! generation's work on a fixed process-wide fleet.
 //!
-//! A generation is built *cold* (load manifest → spawn workers → warm
-//! engines, failing fast on any build error) and only then published by
-//! the registry, so requests never observe a half-warmed model.  After a
+//! A generation is built *cold* (load manifest → probe-build + warm one
+//! replica per engine kind, failing fast on any build error → register
+//! its queues with the scheduler) and only then published by the
+//! registry, so requests never observe an unbuildable model.  After a
 //! hot reload retires it, the generation drains gracefully:
 //!
 //! * its queues close (graceful: residual items still pop), so every
-//!   request already admitted is served by the *old* weights;
-//! * worker threads exit — dropping their engines — only after the
-//!   drain, and [`Generation::retire`] joins them;
+//!   request already admitted is served by the *old* weights — runtime
+//!   workers keep serving closed non-empty queues;
+//! * [`Generation::retire`] waits on the scheduler's drain condition
+//!   (queue closed + empty + zero in-flight batches) and then
+//!   deregisters the queues — no thread joins anywhere;
 //! * the `Generation` itself (arena handle, policy ctx, manifest) is
 //!   kept alive by `Arc` until the last [`super::GenerationLease`]
-//!   drops, and `Drop` re-runs `retire` as an idempotent backstop.
+//!   drops, and `Drop` re-runs `retire` as an idempotent backstop;
+//! * worker-side engine replicas of a retired generation are evicted
+//!   from the per-worker replica caches once its queues leave the
+//!   scheduler table.
 //!
 //! Policy state is **per generation** on purpose: a reload means new
 //! weights, and a response cache or latency EWMA carried across weights
 //! would serve stale classifications / stale predictions.  Cache keys
 //! therefore can never cross models *or* generations.
 
-use anyhow::{bail, Context, Result};
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::JoinHandle;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::config::Config;
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::queue::BoundedQueue;
-use crate::coordinator::router::{RouteError, Router};
-use crate::coordinator::worker::{self, SharedStats, WorkerReport, WorkerSeat};
+use crate::coordinator::router::{EnginePort, RouteError};
+use crate::coordinator::scheduler::{ExecCtx, QueueKey, RuntimeHandle, WorkSource};
+use crate::coordinator::worker::SharedStats;
 use crate::coordinator::{Request, Response, SubmitError};
-use crate::engine::EngineKind;
+use crate::engine::{self, EngineKind};
 use crate::policy::{
     self, image_key, Decision, PolicyCtx, PoolSnapshot, PoolView, Selector, Slo,
 };
@@ -39,25 +47,6 @@ use crate::runtime::Manifest;
 use crate::tensor::{PooledTensor, TensorPool};
 
 use super::ModelCounters;
-
-/// One engine pool: a router over per-worker bounded queues.
-struct EnginePool {
-    kind: EngineKind,
-    router: Router<Request>,
-    workers: usize,
-}
-
-impl EnginePool {
-    /// Admission-time snapshot for the selector / introspection.
-    fn view(&self) -> PoolView {
-        PoolView {
-            kind: self.kind,
-            queued: self.router.queued(),
-            workers: self.workers,
-            capacity: self.router.capacity(),
-        }
-    }
-}
 
 /// Batch sizes a given engine kind has compiled artifacts for.
 fn supported_sizes(kind: EngineKind, manifest: &Manifest) -> Vec<usize> {
@@ -73,10 +62,9 @@ pub struct Generation {
     model: Arc<str>,
     generation: u64,
     input_hw: usize,
-    pools: Vec<EnginePool>,
-    /// Taken (not just borrowed) by `retire`, so shutdown and the
-    /// drop-backstop can both run without double-joining.
-    handles: Mutex<Vec<JoinHandle<WorkerReport>>>,
+    /// Admission ports, in quality order (quality engine first).
+    ports: Vec<EnginePort>,
+    runtime: RuntimeHandle,
     selector: Selector,
     ctx: Arc<PolicyCtx>,
     arena: TensorPool,
@@ -84,20 +72,34 @@ pub struct Generation {
     stats: Arc<SharedStats>,
     /// Per-model counters (survive reloads; shared across generations).
     counters: Arc<ModelCounters>,
-    /// Wall time spent building + warming every worker's engine.
+    /// Wall time spent probe-building + warming one replica per engine
+    /// kind (artifact validation; see `start`).
     warm_ms: f64,
+    retired: AtomicBool,
 }
 
 impl Generation {
-    /// Load the manifest at `artifacts`, spawn + warm all worker pools.
-    /// Returns only when every worker is ready to serve — or fails fast
-    /// if any worker can't build its engine.  Nothing is published until
-    /// this returns, which is what makes reloads atomic.
+    /// Load the manifest at `artifacts`, validate it by building and
+    /// warming one engine replica per configured kind on this thread
+    /// (then dropping it — replicas are rebuilt inside runtime workers,
+    /// where they can live, because XLA handles are not `Send`), and
+    /// register the generation's queues with the shared scheduler.
+    /// Returns only when the model is proven servable — or fails fast —
+    /// which is what keeps reloads atomic: nothing is published before
+    /// this returns.
+    ///
+    /// Tradeoff vs. the per-generation-workers era: the probe proves
+    /// buildability but each runtime worker still pays one inline
+    /// replica build on its first batch for this generation (DESIGN.md
+    /// §4 "Known tradeoff") — deadline shedding stays structured
+    /// throughout, and `warm_ms` measures the probe, not per-worker
+    /// readiness.
     pub(super) fn start(
         model: Arc<str>,
         generation: u64,
         artifacts: &std::path::Path,
         cfg: &Config,
+        runtime: RuntimeHandle,
         stats: Arc<SharedStats>,
         counters: Arc<ModelCounters>,
     ) -> Result<Generation> {
@@ -105,107 +107,97 @@ impl Generation {
         let manifest = Manifest::load(artifacts)
             .with_context(|| format!("loading manifest for model '{model}'"))?;
 
-        // With `cfg.policy.adaptive`, two pools come up — the configured
-        // engine (quality path) plus the int8 quant path — and the SLO
-        // selector routes between them per request.
-        let specs: Vec<(EngineKind, usize)> = if cfg.policy.adaptive {
-            vec![
-                (cfg.engine, cfg.workers),
-                (EngineKind::Quant, cfg.policy.quant_workers),
-            ]
+        // With `cfg.policy.adaptive`, two queues come up — the
+        // configured engine (quality path) plus the int8 quant path —
+        // and the SLO selector routes between them per request.
+        let kinds: Vec<EngineKind> = if cfg.policy.adaptive {
+            vec![cfg.engine, EngineKind::Quant]
         } else {
-            vec![(cfg.engine, cfg.workers)]
+            vec![cfg.engine]
         };
+
+        // Probe-build: prove every engine kind builds + warms before
+        // anything is published.  The probe replica is dropped — it
+        // validated the artifacts; serving replicas are built inside
+        // the runtime workers' threads on first batch.
+        for &kind in &kinds {
+            let mut probe = engine::build(kind, &manifest).with_context(|| {
+                format!("model '{model}': building {} probe", kind.as_str())
+            })?;
+            probe.warmup().with_context(|| {
+                format!("model '{model}': warming {} probe", kind.as_str())
+            })?;
+        }
 
         let ctx = Arc::new(PolicyCtx::new(
             cfg.policy.ewma_alpha,
             cfg.policy.cache_capacity,
         ));
-        for &(kind, _) in &specs {
+        for &kind in &kinds {
             ctx.predictor.seed(kind, 1, policy::default_prior_ms(kind));
         }
 
-        let (ready_tx, ready_rx) = mpsc::channel();
-
-        // Tensor arena for this model's request path: decode buffers plus
-        // one batch buffer per compiled batch size, shelved at startup so
-        // the steady state never allocates pixels.
+        // Tensor arena for this model's request path: decode buffers
+        // plus batch buffers per compiled batch size, shelved at startup
+        // so the steady state never allocates pixels.  Batch classes are
+        // reserved at the runtime fleet size — at most that many batches
+        // can be in flight at once.
         let input_len = manifest.input_hw * manifest.input_hw * 3;
         let arena = TensorPool::with_mode(cfg.pool.enabled, cfg.pool.per_class_cap);
         arena.prealloc(input_len, cfg.queue_capacity);
 
-        let mut pools = Vec::with_capacity(specs.len());
-        let mut handles = Vec::new();
-        let mut worker_index = 0usize;
-        for (pool_index, &(kind, n_workers)) in specs.iter().enumerate() {
+        let weight = cfg.registry.weight_for(&model);
+        let exec = Arc::new(ExecCtx {
+            model: model.clone(),
+            generation,
+            manifest: manifest.clone(),
+            arena: arena.clone(),
+            ctx: ctx.clone(),
+            counters: counters.clone(),
+        });
+
+        let mut ports = Vec::with_capacity(kinds.len());
+        for (i, &kind) in kinds.iter().enumerate() {
             let supported = supported_sizes(kind, &manifest);
             for &b in supported.iter().filter(|&&b| b <= cfg.max_batch) {
-                arena.prealloc(b * input_len, n_workers);
+                // Warm a couple of batch buffers per class — NOT one
+                // per runtime worker: at most `workers` batch leases
+                // exist process-wide across ALL models, so an eager
+                // fleet-sized reservation per (model, kind, class)
+                // would multiply resident memory N-models-fold.  Rare
+                // bursts beyond the warm count allocate once and then
+                // shelve under the pool's per-class retention cap.
+                arena.prealloc(b * input_len, runtime.workers.min(2));
             }
             let policy = BatchPolicy::new(cfg.max_batch, cfg.batch_timeout, &supported);
-            let queues: Vec<Arc<BoundedQueue<Request>>> = (0..n_workers)
-                .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity)))
-                .collect();
-            for q in &queues {
-                handles.push(worker::spawn_worker(
-                    WorkerSeat {
-                        index: worker_index,
-                        kind,
-                        model: model.clone(),
-                        manifest: manifest.clone(),
-                        queue: q.clone(),
-                        policy: policy.clone(),
-                        stats: stats.clone(),
-                        counters: counters.clone(),
-                        ctx: ctx.clone(),
-                        arena: arena.clone(),
-                        // Only the quality pool (specs[0]) fills the cache
-                        // so hits never downgrade accuracy to the int8
-                        // path.
-                        fill_cache: pool_index == 0,
-                    },
-                    ready_tx.clone(),
-                ));
-                worker_index += 1;
-            }
-            pools.push(EnginePool {
-                kind,
-                router: Router::new(queues),
-                workers: n_workers,
-            });
-        }
-        drop(ready_tx);
-
-        // Wait for all workers (fail fast on any engine build error).
-        for _ in 0..worker_index {
-            match ready_rx.recv() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    for p in &pools {
-                        p.router.close_all();
-                    }
-                    for h in handles {
-                        let _ = h.join();
-                    }
-                    bail!("model '{model}': worker failed to start: {e:#}");
-                }
-                Err(_) => {
-                    bail!("model '{model}': worker exited before signalling readiness")
-                }
-            }
+            let source = Arc::new(WorkSource::new(
+                QueueKey {
+                    model: model.clone(),
+                    generation,
+                    engine: kind,
+                },
+                Arc::new(BoundedQueue::new(cfg.queue_capacity)),
+                policy,
+                weight,
+                // Only the quality queue (kinds[0]) fills the response
+                // cache so hits never downgrade accuracy to the int8
+                // path.
+                i == 0,
+                exec.clone(),
+            ));
+            runtime.scheduler.register(source.clone());
+            ports.push(EnginePort::new(source, runtime.scheduler.clone()));
         }
 
         let warm_ms = crate::util::ms(t0.elapsed());
         crate::info!(
             "registry",
-            "model '{}' gen {} ready in {:.0}ms: pools={:?} max_batch={}",
+            "model '{}' gen {} ready in {:.0}ms: queues={:?} weight={} max_batch={}",
             model,
             generation,
             warm_ms,
-            pools
-                .iter()
-                .map(|p| format!("{}x{}", p.kind.as_str(), p.workers))
-                .collect::<Vec<_>>(),
+            kinds.iter().map(|k| k.as_str()).collect::<Vec<_>>(),
+            weight,
             cfg.max_batch,
         );
 
@@ -213,14 +205,15 @@ impl Generation {
             model,
             generation,
             input_hw: manifest.input_hw,
-            pools,
-            handles: Mutex::new(handles),
+            ports,
+            runtime,
             selector: Selector::new(cfg.policy.margin, 1),
             ctx,
             arena,
             stats,
             counters,
             warm_ms,
+            retired: AtomicBool::new(false),
         })
     }
 
@@ -237,7 +230,8 @@ impl Generation {
         self.input_hw
     }
 
-    /// Wall time spent building + warming this generation's engines.
+    /// Wall time spent validating (probe-building + warming) this
+    /// generation's engines.
     pub fn warm_ms(&self) -> f64 {
         self.warm_ms
     }
@@ -252,9 +246,9 @@ impl Generation {
         &self.ctx
     }
 
-    /// Requests queued across this generation's pools.
+    /// Requests queued across this generation's queues.
     pub fn queued(&self) -> usize {
-        self.pools.iter().map(|p| p.router.queued()).sum()
+        self.ports.iter().map(EnginePort::queued).sum()
     }
 
     /// Reject wrong-shaped inputs before they touch queues or the arena.
@@ -300,13 +294,9 @@ impl Generation {
         Some(self.cache_hit_response(0, &hit, total_ms))
     }
 
-    /// Zero-copy submission onto this generation: the image already
-    /// lives in a pooled lease (ideally from [`Generation::arena`]).
-    /// The cache is consulted first (a hit replies immediately without
-    /// touching an engine); otherwise the selector routes to the best
-    /// pool predicted to meet the deadline, or sheds.  `wire_key`
-    /// optionally keys the response cache on the raw request bytes so a
-    /// repeat of the same wire spec skips decode entirely next time.
+    /// Zero-copy submission onto this generation — see
+    /// [`Generation::submit_pooled_reclaim`]; this wrapper discards the
+    /// reclaimed image for callers that don't retry.
     pub fn submit_pooled(
         &self,
         id: u64,
@@ -314,7 +304,31 @@ impl Generation {
         slo: Slo,
         wire_key: Option<u64>,
     ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        self.check_shape(image.shape())?;
+        self.submit_pooled_reclaim(id, image, slo, wire_key).map_err(|(e, _img)| e)
+    }
+
+    /// Zero-copy submission onto this generation: the image already
+    /// lives in a pooled lease (ideally from [`Generation::arena`]).
+    /// The cache is consulted first (a hit replies immediately without
+    /// touching an engine); otherwise the selector routes to the best
+    /// engine queue predicted to meet the deadline, or sheds.
+    /// `wire_key` optionally keys the response cache on the raw request
+    /// bytes so a repeat of the same wire spec skips decode next time.
+    ///
+    /// On `Closed` (this generation retired mid-swap) the decoded image
+    /// is handed back alongside the error so the caller can re-resolve
+    /// and resubmit the *same pixels* to the fresh generation without
+    /// re-decoding.
+    pub fn submit_pooled_reclaim(
+        &self,
+        id: u64,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>, (SubmitError, Option<PooledTensor>)> {
+        if let Err(e) = self.check_shape(image.shape()) {
+            return Err((e, Some(image)));
+        }
         let submitted = Instant::now();
 
         // Response cache: repeated frames skip inference entirely.
@@ -337,27 +351,35 @@ impl Generation {
             None
         };
 
-        let views: Vec<PoolView> = self.pools.iter().map(EnginePool::view).collect();
+        // One fair-share computation (one scheduler lock) serves every
+        // port's view on this hot path.
+        let share = self
+            .runtime
+            .scheduler
+            .fair_share(self.runtime.workers, &self.ports[0].source().key);
+        let views: Vec<PoolView> =
+            self.ports.iter().map(|p| p.view_with(share)).collect();
         let budget_ms = slo.deadline_ms();
-        let decision = self
-            .selector
-            .choose(&self.ctx.predictor, &views, &slo, budget_ms);
+        let decision = self.selector.choose(&self.ctx.predictor, &views, &slo, budget_ms);
 
-        let pool = match decision {
+        let port = match decision {
             Decision::Route { pool, .. } => pool,
             Decision::Shed { best_ms } => {
                 self.count_rejected();
                 let any_room = views.iter().any(|v| v.queued < v.capacity);
-                return Err(match (budget_ms, any_room) {
-                    (Some(deadline_ms), true) => {
-                        self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
-                        SubmitError::Shed {
-                            predicted_ms: best_ms,
-                            deadline_ms,
+                return Err((
+                    match (budget_ms, any_room) {
+                        (Some(deadline_ms), true) => {
+                            self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
+                            SubmitError::Shed {
+                                predicted_ms: best_ms,
+                                deadline_ms,
+                            }
                         }
-                    }
-                    _ => SubmitError::Overloaded,
-                });
+                        _ => SubmitError::Overloaded,
+                    },
+                    Some(image),
+                ));
             }
         };
 
@@ -371,62 +393,68 @@ impl Generation {
             wire_key: wire_key.filter(|_| cache_key.is_some()),
             reply: tx,
         };
-        match self.pools[pool].router.route(req) {
+        match self.ports[port].admit(req) {
             Ok(_) => Ok(rx),
-            Err(RouteError::Overloaded(_)) => {
+            Err(RouteError::Overloaded(r)) => {
                 self.count_rejected();
-                Err(SubmitError::Overloaded)
+                Err((SubmitError::Overloaded, Some(r.image)))
             }
             // Retired mid-swap: the caller re-resolves the model and
-            // retries on the fresh generation (no rejection counted —
-            // the request was never refused, just redirected).
-            Err(RouteError::Closed(_)) => Err(SubmitError::Closed),
+            // retries on the fresh generation with the reclaimed image
+            // (no rejection counted — the request was never refused,
+            // just redirected).
+            Err(RouteError::Closed(r)) => Err((SubmitError::Closed, Some(r.image))),
         }
     }
 
-    /// Per-pool policy snapshot rows (`{"cmd":"policy"}`).
+    /// Per-queue policy snapshot rows (`{"cmd":"policy"}`).  `workers`
+    /// reports this queue's current fair share of the shared fleet —
+    /// the drain-parallelism bound the selector's prediction uses.
     pub fn pool_snapshots(&self) -> Vec<PoolSnapshot> {
-        self.pools
+        self.ports
             .iter()
             .map(|p| {
-                let view = p.view();
+                let view = p.view(self.runtime.workers);
                 PoolSnapshot {
-                    engine: p.kind.as_str(),
-                    workers: p.workers,
+                    engine: p.kind().as_str(),
+                    workers: view.workers,
                     queued: view.queued,
                     capacity: view.capacity,
                     predicted_ms: self.selector.predict_ms(&self.ctx.predictor, &view),
-                    samples: self.ctx.predictor.samples(p.kind),
+                    samples: self.ctx.predictor.samples(p.kind()),
                 }
             })
             .collect()
     }
 
-    /// Close queues (graceful: admitted requests still drain) and join
-    /// every worker.  Idempotent — the second caller joins nothing.
-    /// In-flight requests are all answered before this returns, because
-    /// workers only exit once their queue is closed *and* empty.
-    pub(super) fn retire(&self) -> Vec<WorkerReport> {
-        for p in &self.pools {
-            p.router.close_all();
+    /// Close this generation's queues (graceful: admitted requests
+    /// still drain through the runtime workers on the *old* weights),
+    /// wait for the drain condition (closed + empty + zero in-flight
+    /// batches), and deregister the queues from the scheduler.
+    /// Idempotent — the second caller returns immediately.  In-flight
+    /// requests are all answered before this returns.
+    pub(super) fn retire(&self) {
+        if self.retired.swap(true, Ordering::AcqRel) {
+            return;
         }
-        let handles: Vec<JoinHandle<WorkerReport>> =
-            std::mem::take(&mut *self.handles.lock().unwrap());
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
+        for p in &self.ports {
+            p.close();
+        }
+        for p in &self.ports {
+            self.runtime.scheduler.wait_drained(&p.source().key);
+        }
     }
 }
 
 impl Drop for Generation {
     /// Backstop for generations dropped without an explicit retire (the
     /// last lease on a reloaded-away generation going out of scope):
-    /// close + drain + join so engines and pooled tensors are released
-    /// exactly when the last lease ends, never before a queued request
-    /// was answered.  Workers never hold a lease on their own
-    /// generation, so this join cannot be a self-join.
+    /// close + drain + deregister so worker replica caches release this
+    /// generation's engines and its pooled tensors retire exactly when
+    /// the last lease ends, never before a queued request was answered.
+    /// Runtime workers never hold a lease, so this wait cannot deadlock
+    /// on itself.
     fn drop(&mut self) {
-        let _ = self.retire();
+        self.retire();
     }
 }

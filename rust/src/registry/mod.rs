@@ -5,18 +5,19 @@
 //! — each its own manifest + weights dir, discovered from a
 //! `models.json` index or repeated `--model name=path` flags — with:
 //!
-//! * **lazy per-model engine pools**: a model's [`Generation`] (pools +
-//!   warmed workers + arena + policy state) is built on first request,
-//!   or eagerly with `registry.preload`;
-//! * **atomic hot reload**: [`ModelRegistry::reload`] builds and warms a
-//!   *new* generation from disk, then swaps one `Arc` — requests
-//!   resolving the model concurrently get either the old or the new
-//!   generation, never a half-warmed one;
+//! * **lazy per-model generations**: a model's [`Generation`] (scheduled
+//!   queues + arena + policy state — no threads; the shared worker
+//!   runtime executes everything) is built on first request, or eagerly
+//!   with `registry.preload`;
+//! * **atomic hot reload**: [`ModelRegistry::reload`] builds and
+//!   validates a *new* generation from disk, then swaps one `Arc` —
+//!   requests resolving the model concurrently get either the old or
+//!   the new generation, never an unproven one;
 //! * **RAII generation leases**: [`GenerationLease`] (a wrapped `Arc`)
 //!   pins a generation for the duration of a request, so a retired
-//!   generation's pooled tensors and engines drop only after its last
-//!   lease ends and its queues have drained — in-flight requests always
-//!   finish on the generation that admitted them;
+//!   generation's pooled tensors drop only after its last lease ends
+//!   and its queues have drained — in-flight requests always finish on
+//!   the generation that admitted them;
 //! * **structural policy namespacing**: each generation owns its own
 //!   predictor + response cache, so a cache hit can never cross models
 //!   (content hashes collide across models by construction — same
@@ -36,7 +37,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::{Config, RegistryConfig};
-use crate::coordinator::worker::{SharedStats, WorkerReport};
+use crate::coordinator::scheduler::RuntimeHandle;
+use crate::coordinator::worker::SharedStats;
 use crate::coordinator::SubmitError;
 
 pub use generation::Generation;
@@ -51,11 +53,11 @@ pub struct ModelCounters {
 }
 
 /// RAII guard pinning one model generation for the duration of a
-/// request.  Holding the lease guarantees the generation's arena,
-/// engines, and policy state outlive the request even if the model is
-/// hot-reloaded concurrently; dropping the last lease of a retired
-/// generation releases all of it (after the queue drain — see
-/// [`Generation`]'s drop docs).
+/// request.  Holding the lease guarantees the generation's arena and
+/// policy state outlive the request even if the model is hot-reloaded
+/// concurrently; dropping the last lease of a retired generation
+/// releases all of it (after the queue drain — see [`Generation`]'s
+/// drop docs).
 pub struct GenerationLease {
     inner: Arc<Generation>,
 }
@@ -73,8 +75,8 @@ pub struct ReloadReport {
     pub model: String,
     /// The new generation number now serving.
     pub generation: u64,
-    /// Wall time spent building + warming the new generation (the old
-    /// one kept serving throughout).
+    /// Wall time spent building + validating the new generation (the
+    /// old one kept serving throughout).
     pub warm_ms: f64,
 }
 
@@ -121,19 +123,19 @@ impl ModelEntry {
     }
 }
 
-/// The model table: name -> entry, plus the config needed to build
-/// generations on demand.
+/// The model table: name -> entry, plus the config and runtime handle
+/// needed to build generations on demand.
 pub struct ModelRegistry {
     cfg: Config,
     entries: BTreeMap<String, Arc<ModelEntry>>,
     default_model: String,
     stats: Arc<SharedStats>,
-    /// Worker reports from generations retired by hot reloads, folded
-    /// into the shutdown report.
-    retired: Arc<Mutex<Vec<WorkerReport>>>,
-    /// The background drain threads reload() spawns — joined at
-    /// shutdown so no retired generation is still draining (and no
-    /// report is lost) when shutdown returns.
+    /// Handle on the shared worker runtime: generations register their
+    /// queues here; nobody spawns threads below this point.
+    runtime: RuntimeHandle,
+    /// Background drain waiters spawned by reload() — joined at
+    /// shutdown so no retired generation is still draining when
+    /// shutdown returns.
     retire_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -141,7 +143,11 @@ impl ModelRegistry {
     /// Build the table from config.  No generations are constructed here
     /// (see [`ModelRegistry::preload`] / lazy resolution); this only
     /// validates the shape of the registry itself.
-    pub fn new(cfg: Config, stats: Arc<SharedStats>) -> Result<ModelRegistry> {
+    pub fn new(
+        cfg: Config,
+        stats: Arc<SharedStats>,
+        runtime: RuntimeHandle,
+    ) -> Result<ModelRegistry> {
         let specs: Vec<(String, PathBuf)> = if cfg.registry.models.is_empty() {
             vec![(
                 RegistryConfig::SINGLE_MODEL.to_string(),
@@ -179,7 +185,7 @@ impl ModelRegistry {
             entries,
             default_model,
             stats,
-            retired: Arc::new(Mutex::new(Vec::new())),
+            runtime,
             retire_threads: Mutex::new(Vec::new()),
         })
     }
@@ -237,6 +243,7 @@ impl ModelRegistry {
             gen_no,
             &entry.artifacts,
             &self.cfg,
+            self.runtime.clone(),
             self.stats.clone(),
             entry.counters.clone(),
         )?);
@@ -244,8 +251,8 @@ impl ModelRegistry {
         Ok(GenerationLease { inner: built })
     }
 
-    /// Eagerly build every registered model's pools (startup preload, or
-    /// just the default model when `default_only`).
+    /// Eagerly build every registered model's generation (startup
+    /// preload, or just the default model when `default_only`).
     pub fn preload(&self, default_only: bool) -> Result<()> {
         if default_only {
             self.resolve(None)
@@ -259,13 +266,15 @@ impl ModelRegistry {
         Ok(())
     }
 
-    /// Atomic hot reload: build + warm a fresh generation from the
+    /// Atomic hot reload: build + validate a fresh generation from the
     /// model's artifacts dir, publish it with one `Arc` swap, and drain
-    /// the old generation on a background thread.  In-flight requests
-    /// finish on the old generation; its engines and pooled tensors are
-    /// released only once its queues have drained and the last lease
-    /// ends.  On build failure the old generation keeps serving
-    /// untouched.
+    /// the old generation on a background waiter.  In-flight requests
+    /// finish on the old generation; its pooled tensors (and the
+    /// workers' cached engine replicas for it) are released only once
+    /// its queues have drained and the last lease ends.  No worker
+    /// threads are spawned: the same fixed runtime serves old and new
+    /// queues side by side during the drain.  On build failure the old
+    /// generation keeps serving untouched.
     pub fn reload(&self, model: Option<&str>) -> Result<ReloadReport> {
         let name = model.unwrap_or(&self.default_model);
         let entry = self
@@ -280,6 +289,7 @@ impl ModelRegistry {
             gen_no,
             &entry.artifacts,
             &self.cfg,
+            self.runtime.clone(),
             self.stats.clone(),
             entry.counters.clone(),
         )?);
@@ -287,18 +297,17 @@ impl ModelRegistry {
         let old = entry.current.write().unwrap().replace(fresh);
 
         if let Some(old) = old {
-            let sink = self.retired.clone();
             // Drain off the caller's thread: retire() blocks until the
-            // old queues are empty (every admitted request answered).
-            // The handle is kept so shutdown() can join the drain.
+            // old queues are closed, empty, and batch-free (every
+            // admitted request answered by the old weights).  The
+            // handle is kept so shutdown() can join the waiter.
             let handle = std::thread::Builder::new()
                 .name(format!("zuluko-retire-{name}"))
                 .spawn(move || {
-                    let reports = old.retire();
-                    sink.lock().unwrap().extend(reports);
+                    old.retire();
                     drop(old);
                 })
-                .expect("spawn retire thread");
+                .expect("spawn retire waiter");
             self.retire_threads.lock().unwrap().push(handle);
         }
 
@@ -309,34 +318,33 @@ impl ModelRegistry {
         })
     }
 
-    /// Close every generation, join every worker — including the
-    /// background drains of reload-retired generations — and return all
-    /// worker reports.  When this returns, every admitted request has
-    /// been answered and no generation is still draining.
-    pub fn shutdown(&self) -> Vec<WorkerReport> {
-        let mut reports = Vec::new();
+    /// Retire every generation (close queues, wait for the runtime to
+    /// drain them, deregister) — including the background drains of
+    /// reload-retired generations.  When this returns, every admitted
+    /// request has been answered and no generation is still draining;
+    /// the caller may then shut the shared runtime down.
+    pub fn shutdown(&self) {
         for entry in self.entries.values() {
             let taken = entry.current.write().unwrap().take();
             if let Some(g) = taken {
-                reports.extend(g.retire());
+                g.retire();
                 // `g` may still be leased elsewhere; dropping our Arc is
-                // enough — retire() already joined the workers.
+                // enough — retire() already drained the queues.
             }
         }
-        let drains: Vec<_> =
-            std::mem::take(&mut *self.retire_threads.lock().unwrap());
+        let drains: Vec<_> = std::mem::take(&mut *self.retire_threads.lock().unwrap());
         for h in drains {
             let _ = h.join();
         }
-        reports.extend(self.retired.lock().unwrap().drain(..));
-        reports
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::Scheduler;
     use crate::engine::EngineKind;
+    use std::time::Duration;
 
     fn synth_dir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!(
@@ -362,10 +370,22 @@ mod tests {
         cfg
     }
 
+    /// A runtime handle with no worker threads: registry unit tests
+    /// never submit requests, and an empty queue drains trivially.
+    fn idle_runtime() -> RuntimeHandle {
+        RuntimeHandle {
+            scheduler: Arc::new(Scheduler::new(Duration::from_millis(50))),
+            workers: 1,
+        }
+    }
+
+    fn registry(cfg: Config) -> ModelRegistry {
+        ModelRegistry::new(cfg, Arc::new(SharedStats::default()), idle_runtime()).unwrap()
+    }
+
     #[test]
     fn single_model_mode_registers_the_implicit_default() {
-        let cfg = Config::default();
-        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        let reg = registry(Config::default());
         assert_eq!(reg.default_model(), RegistryConfig::SINGLE_MODEL);
         assert_eq!(reg.names(), vec![RegistryConfig::SINGLE_MODEL]);
         assert!(!reg.entry(RegistryConfig::SINGLE_MODEL).unwrap().loaded());
@@ -373,8 +393,7 @@ mod tests {
 
     #[test]
     fn unknown_model_is_a_structured_reject() {
-        let cfg = sim_cfg(&[("a", synth_dir("a"))]);
-        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        let reg = registry(sim_cfg(&[("a", synth_dir("a"))]));
         match reg.resolve(Some("nope")) {
             Err(SubmitError::UnknownModel(m)) => assert_eq!(m, "nope"),
             other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
@@ -385,11 +404,12 @@ mod tests {
 
     #[test]
     fn lazy_build_then_reload_bumps_generation() {
-        let cfg = sim_cfg(&[("a", synth_dir("lazyreload"))]);
-        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        let reg = registry(sim_cfg(&[("a", synth_dir("lazyreload"))]));
         assert_eq!(reg.entry("a").unwrap().generation_number(), 0);
         let lease = reg.resolve(Some("a")).unwrap();
         assert_eq!(lease.generation(), 1);
+        // Generation 1 registered exactly one queue (sim, non-adaptive).
+        assert_eq!(reg.runtime.scheduler.queue_rows().len(), 1);
         let report = reg.reload(Some("a")).unwrap();
         assert_eq!(report.generation, 2);
         // The old lease still works structurally (model name intact),
@@ -398,10 +418,10 @@ mod tests {
         let fresh = reg.resolve(Some("a")).unwrap();
         assert_eq!(fresh.generation(), 2);
         drop(lease);
-        let reports = reg.shutdown();
-        // Exactly two single-worker generations served: the reloaded-away
-        // gen 1 (drain joined by shutdown) and the live gen 2.
-        assert_eq!(reports.len(), 2);
+        reg.shutdown();
+        // Every queue drained + deregistered: the scheduler table is
+        // empty — the drain condition replaced thread joins.
+        assert_eq!(reg.runtime.scheduler.queue_rows().len(), 0);
     }
 
     #[test]
@@ -411,8 +431,7 @@ mod tests {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&missing);
-        let cfg = sim_cfg(&[("ghost", missing.clone())]);
-        let reg = ModelRegistry::new(cfg, Arc::new(SharedStats::default())).unwrap();
+        let reg = registry(sim_cfg(&[("ghost", missing.clone())]));
         match reg.resolve(Some("ghost")) {
             Err(SubmitError::ModelUnavailable { model, .. }) => {
                 assert_eq!(model, "ghost")

@@ -144,8 +144,12 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
 /// per-model wire-key cache, decode into the model's arena, submit.
 ///
 /// A hot reload can retire the resolved generation between resolve and
-/// route (`SubmitError::Closed`); one re-resolve + re-decode retries on
-/// the fresh generation so the client never sees the swap.
+/// route (`SubmitError::Closed`); the retry re-resolves and resubmits
+/// the **already-decoded pixels** (handed back by
+/// [`Coordinator::submit_on_reclaim`]) to the fresh generation —
+/// decode runs again only in the rare case where the reload changed
+/// the model's input size, so the swap stays invisible to the client
+/// without paying a second decode.
 fn infer_reply(
     coord: &Coordinator,
     id: u64,
@@ -154,6 +158,7 @@ fn infer_reply(
     slo: Slo,
 ) -> String {
     const ATTEMPTS: usize = 2;
+    let mut decoded: Option<PooledTensor> = None;
     for attempt in 0..ATTEMPTS {
         let lease = match coord.lease(model) {
             Ok(l) => l,
@@ -174,20 +179,32 @@ fn infer_reply(
             resp.id = id;
             return protocol::response_line(&resp);
         }
-        let tensor = match load_image(image, lease.input_hw(), &lease.arena()) {
-            Err(e) => return protocol::error_line(id, &format!("image: {e}")),
-            Ok(t) => t,
+        // Reuse the pixels reclaimed from a Closed first attempt when
+        // they still fit the (possibly re-sized) fresh generation.
+        let hw = lease.input_hw();
+        let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
+            Some(t) => t,
+            None => match load_image(image, hw, &lease.arena()) {
+                Err(e) => return protocol::error_line(id, &format!("image: {e}")),
+                Ok(t) => t,
+            },
         };
-        return match coord.submit_on(&lease, tensor, slo, wire_key) {
-            Err(SubmitError::Closed) if attempt + 1 < ATTEMPTS => continue,
-            Err(SubmitError::Overloaded) => {
+        return match coord.submit_on_reclaim(&lease, tensor, slo, wire_key) {
+            Err((SubmitError::Closed, img)) if attempt + 1 < ATTEMPTS => {
+                decoded = img;
+                continue;
+            }
+            Err((SubmitError::Overloaded, _)) => {
                 protocol::error_line_kind(id, "overloaded", "overloaded")
             }
-            Err(SubmitError::Shed {
-                predicted_ms,
-                deadline_ms,
-            }) => protocol::shed_line(id, predicted_ms, deadline_ms),
-            Err(e) => protocol::error_line(id, &e.to_string()),
+            Err((
+                SubmitError::Shed {
+                    predicted_ms,
+                    deadline_ms,
+                },
+                _,
+            )) => protocol::shed_line(id, predicted_ms, deadline_ms),
+            Err((e, _)) => protocol::error_line(id, &e.to_string()),
             Ok(rx) => match rx.recv() {
                 Ok(mut resp) => {
                     resp.id = id; // echo client id, not internal id

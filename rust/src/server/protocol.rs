@@ -266,6 +266,45 @@ pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
         "models",
         Json::Arr(s.models.iter().map(model_stats_obj).collect()),
     );
+    // Scheduler health (DESIGN.md §4): per-worker occupancy and
+    // per-(model, engine) queue depth, so a trajectory artifact can see
+    // a starving queue or an idle fleet at a glance.
+    o.set(
+        "workers",
+        Json::Arr(
+            s.workers
+                .iter()
+                .map(|w| {
+                    let mut o = Json::obj();
+                    o.set("worker", w.worker.into())
+                        .set("batches", w.batches.into())
+                        .set("images", w.images.into())
+                        .set("busy_frac", w.busy_frac.into());
+                    o
+                })
+                .collect(),
+        ),
+    );
+    o.set(
+        "queues",
+        Json::Arr(
+            s.queues
+                .iter()
+                .map(|q| {
+                    let mut o = Json::obj();
+                    o.set("model", q.model.as_str().into())
+                        .set("engine", q.engine.into())
+                        .set("generation", q.generation.into())
+                        .set("queued", q.queued.into())
+                        .set("capacity", q.capacity.into())
+                        .set("weight", q.weight.into())
+                        .set("inflight", q.inflight.into())
+                        .set("closed", q.closed.into());
+                    o
+                })
+                .collect(),
+        ),
+    );
     o.to_string()
 }
 

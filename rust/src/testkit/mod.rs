@@ -6,3 +6,4 @@ pub mod alloc;
 pub mod manifest;
 pub mod prop;
 pub mod rng;
+pub mod sched;

@@ -1,0 +1,97 @@
+//! Shared scheduler-level test fixtures: a synthetic-manifest
+//! [`ExecCtx`], a sim [`WorkSource`], and a dummy [`Request`] — used by
+//! the scheduler/router unit tests and `tests/coordinator_props.rs` so
+//! the (brand-new, still-evolving) `WorkSource`/`ExecCtx` shapes have
+//! one constructor to keep in sync instead of three copies.
+//!
+//! These fixtures never execute an engine: requests carry a tiny 1×1×3
+//! tensor and the manifest describes an 8×8 sim model, which is enough
+//! for admission, scheduling, and drain logic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::scheduler::{ExecCtx, QueueKey, WorkSource};
+use crate::coordinator::Request;
+use crate::engine::EngineKind;
+use crate::policy::{PolicyCtx, Slo};
+use crate::registry::ModelCounters;
+use crate::runtime::Manifest;
+use crate::tensor::{PooledTensor, TensorPool};
+
+/// Unique per-fixture suffix: two tests reusing a model name must not
+/// race on the same manifest file (fs::write is not atomic).
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// An [`ExecCtx`] over a fresh synthetic sim manifest (8×8 input, 10
+/// classes, batch sizes [1, 2, 4]; pooling disabled, cache disabled).
+pub fn sim_exec(model: &str, generation: u64) -> Arc<ExecCtx> {
+    let dir = std::env::temp_dir().join(format!(
+        "zuluko_fixture_{model}_{generation}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    crate::testkit::manifest::write_synthetic(&dir, model, 10, 8, &[1, 2, 4])
+        .unwrap();
+    Arc::new(ExecCtx {
+        model: Arc::from(model),
+        generation,
+        manifest: Manifest::load(&dir).unwrap(),
+        arena: TensorPool::disabled(),
+        ctx: Arc::new(PolicyCtx::new(0.2, 0)),
+        counters: Arc::new(ModelCounters::default()),
+    })
+}
+
+/// A generation-1 sim [`WorkSource`] over a fresh bounded queue of
+/// `cap` slots (max_batch 4, zero batch window, fills the cache).
+pub fn sim_source(model: &str, weight: f64, cap: usize) -> Arc<WorkSource> {
+    Arc::new(WorkSource::new(
+        QueueKey {
+            model: Arc::from(model),
+            generation: 1,
+            engine: EngineKind::Sim,
+        },
+        Arc::new(BoundedQueue::new(cap)),
+        BatchPolicy::new(4, Duration::ZERO, &[1, 2, 4]),
+        weight,
+        true,
+        sim_exec(model, 1),
+    ))
+}
+
+/// Count live threads of this process whose name starts with `prefix`
+/// (Linux /proc; the serving stack is Linux-first — see
+/// metrics::sysmon).  Counting by name isolates the measurement from
+/// the caller's own threads.  Note the kernel truncates comm to 15
+/// chars, so prefixes must stay shorter than that (e.g.
+/// "zuluko-runtime-0" reads back as "zuluko-runtime-").
+pub fn threads_named(prefix: &str) -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .unwrap()
+        .filter_map(|t| std::fs::read_to_string(t.ok()?.path().join("comm")).ok())
+        .filter(|name| name.trim_end().starts_with(prefix))
+        .count()
+}
+
+/// A dummy request (1×1×3 pixels, reply receiver discarded).  Only the
+/// id and SLO matter to the scheduling layer under test.
+pub fn dummy_request(id: u64, deadline_ms: Option<f64>) -> Request {
+    let pool = TensorPool::disabled();
+    let (tx, _rx) = mpsc::channel();
+    Request {
+        id,
+        image: PooledTensor::new(&[1, 1, 3], pool.lease(3)).unwrap(),
+        submitted: Instant::now(),
+        slo: match deadline_ms {
+            Some(ms) => Slo::with_deadline_ms(ms),
+            None => Slo::default(),
+        },
+        cache_key: None,
+        wire_key: None,
+        reply: tx,
+    }
+}

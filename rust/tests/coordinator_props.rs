@@ -9,9 +9,12 @@ use std::time::Duration;
 
 use zuluko::coordinator::batcher::BatchPolicy;
 use zuluko::coordinator::queue::BoundedQueue;
-use zuluko::coordinator::router::{RouteError, Router};
+use zuluko::coordinator::router::{EnginePort, RouteError};
+use zuluko::coordinator::scheduler::Scheduler;
+use zuluko::coordinator::Request;
 use zuluko::testkit::prop::{prop_check, Gen, GenPair, GenUsize, GenVecUsize};
 use zuluko::testkit::rng::Rng;
+use zuluko::testkit::sched::{dummy_request, sim_source};
 
 // ---------------------------------------------------------------------------
 // Batcher invariants
@@ -150,33 +153,44 @@ fn prop_queue_capacity_is_hard_bound() {
 }
 
 // ---------------------------------------------------------------------------
-// Router invariants
+// Admission-port invariants (the shared runtime's submit surface)
 // ---------------------------------------------------------------------------
 
+/// An admission port over a fresh (model, engine) queue of `cap` slots
+/// (fixtures shared via testkit::sched — one constructor to evolve).
+fn test_port(tag: &str, cap: usize) -> EnginePort {
+    let source = sim_source(tag, 1.0, cap);
+    let scheduler = Arc::new(Scheduler::new(Duration::from_millis(50)));
+    scheduler.register(source.clone());
+    EnginePort::new(source, scheduler)
+}
+
+fn test_request(id: u64) -> Request {
+    dummy_request(id, None)
+}
+
 #[test]
-fn prop_router_never_drops_silently() {
-    // Every routed item is either admitted to exactly one queue or returned
-    // via Overloaded; total conservation holds.
+fn prop_admission_never_drops_silently() {
+    // Every submitted request is either admitted to the queue or comes
+    // back to the caller inside the error; total conservation holds and
+    // rejection only happens at true capacity.
     prop_check(
-        200,
+        100,
         23,
-        GenPair(
-            GenUsize { lo: 1, hi: 4 },
-            GenPair(GenUsize { lo: 1, hi: 8 }, GenUsize { lo: 0, hi: 64 }),
-        ),
-        |(workers, (cap, n))| {
-            let queues: Vec<Arc<BoundedQueue<usize>>> = (0..*workers)
-                .map(|_| Arc::new(BoundedQueue::new(*cap)))
-                .collect();
-            let router = Router::new(queues.clone());
-            let mut admitted = 0;
-            let mut rejected = 0;
+        GenPair(GenUsize { lo: 1, hi: 8 }, GenUsize { lo: 0, hi: 24 }),
+        |(cap, n)| {
+            let port = test_port("conserve", *cap);
+            let mut admitted = 0usize;
+            let mut rejected = 0usize;
             for i in 0..*n {
-                match router.route(i) {
-                    Ok(_) => admitted += 1,
-                    Err(RouteError::Overloaded(item)) => {
-                        if item != i {
-                            return Err("wrong item bounced".into());
+                match port.admit(test_request(i as u64)) {
+                    Ok(()) => admitted += 1,
+                    Err(RouteError::Overloaded(r)) => {
+                        if r.id != i as u64 {
+                            return Err("wrong request bounced".into());
+                        }
+                        if port.queued() < port.capacity() {
+                            return Err("rejected while capacity remained".into());
                         }
                         rejected += 1;
                     }
@@ -185,20 +199,31 @@ fn prop_router_never_drops_silently() {
                     }
                 }
             }
-            let queued: usize = queues.iter().map(|q| q.len()).sum();
-            if admitted != queued {
-                return Err(format!("admitted {admitted} != queued {queued}"));
+            if admitted != port.queued() {
+                return Err(format!(
+                    "admitted {admitted} != queued {}",
+                    port.queued()
+                ));
             }
             if admitted + rejected != *n {
                 return Err("conservation violated".into());
             }
-            // Full rejection only when truly full.
-            if rejected > 0 && queued != workers * cap {
-                return Err("rejected while capacity remained".into());
-            }
             Ok(())
         },
     );
+}
+
+#[test]
+fn closed_port_bounces_with_the_request() {
+    let port = test_port("closed", 4);
+    port.admit(test_request(1)).unwrap();
+    port.close();
+    match port.admit(test_request(2)) {
+        Err(RouteError::Closed(r)) => assert_eq!(r.id, 2),
+        other => panic!("expected Closed, got {other:?}"),
+    }
+    // Residual item survives the close (graceful drain).
+    assert_eq!(port.queued(), 1);
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,412 @@
+//! Shared-runtime invariants (DESIGN.md §4), end-to-end over the sim
+//! engine — no artifacts or XLA needed, so these run everywhere
+//! including CI:
+//!
+//! * the worker-thread count equals the configured runtime size — it
+//!   does not scale with model count, and hot reloads do not spawn a
+//!   second thread army;
+//! * a saturating hot model cannot starve a cold model's deadlined
+//!   requests (EDF override + weighted fair share): the cold model's
+//!   requests all complete inside their deadlines with bounded p99;
+//! * every admitted request still gets exactly one response under the
+//!   shared runtime, across models and mixed SLOs;
+//! * the replica-cache byte bound is hard under eviction: after any
+//!   operation sequence, retained bytes never exceed
+//!   max(budget, the single entry just inserted).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use zuluko::config::Config;
+use zuluko::coordinator::scheduler::{QueueKey, ReplicaCache};
+use zuluko::coordinator::{Coordinator, SubmitError};
+use zuluko::engine::EngineKind;
+use zuluko::policy::Slo;
+use zuluko::tensor::Tensor;
+use zuluko::testkit::prop::{prop_check, Gen};
+use zuluko::testkit::rng::Rng;
+use zuluko::testkit::sched::threads_named;
+use zuluko::util::percentile_sorted;
+
+/// Small input so test tensors are cheap (the sim engine takes any hw).
+const HW: usize = 32;
+const CLASSES: usize = 100;
+
+fn model_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "zuluko_sched_props_{tag}_{}",
+        std::process::id()
+    ));
+    zuluko::testkit::manifest::write_synthetic(&dir, tag, CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    dir
+}
+
+fn multi_model_cfg(models: &[&str], workers: usize) -> Config {
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        queue_capacity: 16,
+        ..Config::default()
+    };
+    for m in models {
+        cfg.registry.upsert(m, model_dir(m));
+    }
+    cfg.registry.default_model = Some(models[0].to_string());
+    cfg.registry.preload = true;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn frame(seed: u64) -> Tensor {
+    Tensor::random(&[HW, HW, 3], seed)
+}
+
+/// Tests that spawn coordinators run serially so thread accounting (and
+/// CPU-sensitive latency bounds) never see a sibling test's fleet.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// "zuluko-runtime-N" truncated at the kernel's 15-char comm limit.
+const RUNTIME_PREFIX: &str = "zuluko-runtime";
+/// Any thread this crate spawns (runtime workers, retire waiters, ...).
+const ANY_PREFIX: &str = "zuluko-";
+
+/// Wait until the `prefix`-named thread count settles to `want`
+/// (transient retire waiters exit asynchronously after a drain).
+fn settles_to(prefix: &str, want: usize, within: Duration) -> bool {
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < within {
+        if threads_named(prefix) == want {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    threads_named(prefix) == want
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: fixed thread budget, regardless of model count / reloads.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thread_count_equals_runtime_size_across_models_and_reloads() {
+    let _serial = serial();
+    const RUNTIME: usize = 2;
+    assert!(
+        settles_to(ANY_PREFIX, 0, Duration::from_secs(5)),
+        "a previous test leaked zuluko threads"
+    );
+    let coord = Coordinator::start(&multi_model_cfg(&["ta", "tb", "tc"], RUNTIME)).unwrap();
+
+    // Three preloaded models, yet exactly RUNTIME worker threads — not
+    // 2 × models × workers.
+    assert_eq!(
+        threads_named(RUNTIME_PREFIX),
+        RUNTIME,
+        "worker threads must not scale with model count"
+    );
+
+    // Serve something on every model so replicas exist, then reload
+    // every model: the drain must not spawn a second thread army (one
+    // transient retire waiter per reload is allowed, but it exits).
+    for m in ["ta", "tb", "tc"] {
+        let r = coord
+            .submit_model(Some(m), frame(7), Slo::default())
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(r.is_ok(), "{m}: {:?}", r.error);
+    }
+    for m in ["ta", "tb", "tc"] {
+        coord.reload(Some(m)).unwrap();
+    }
+    // The worker fleet never grew, and the transient retire waiters
+    // (the only extra threads a reload may briefly hold) exit with the
+    // drain — no second thread army.
+    assert_eq!(threads_named(RUNTIME_PREFIX), RUNTIME);
+    assert!(
+        settles_to(ANY_PREFIX, RUNTIME, Duration::from_secs(5)),
+        "threads did not settle back to the runtime size after reloads: \
+         {} zuluko threads (want {RUNTIME})",
+        threads_named(ANY_PREFIX)
+    );
+
+    // Old generations drained: every model still answers, on gen 2.
+    for m in ["ta", "tb", "tc"] {
+        let r = coord
+            .submit_model(Some(m), frame(8), Slo::default())
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(r.is_ok(), "{m} died after reload: {:?}", r.error);
+    }
+    let stats = coord.stats();
+    for row in &stats.models {
+        assert_eq!(row.generation, 2, "{}", row.model);
+    }
+    // Scheduler health is visible: occupancy rows match the fleet, and
+    // only live generations' queues remain.
+    assert_eq!(stats.workers.len(), RUNTIME);
+    assert!(stats.queues.iter().all(|q| q.generation == 2));
+
+    coord.shutdown();
+    assert!(
+        settles_to(ANY_PREFIX, 0, Duration::from_secs(5)),
+        "shutdown leaked threads: {} zuluko threads remain",
+        threads_named(ANY_PREFIX)
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: a saturating hot model cannot starve a cold model.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_model_cannot_starve_cold_deadlines() {
+    let _serial = serial();
+    let coord = Arc::new(Coordinator::start(&multi_model_cfg(&["hot", "cold"], 2)).unwrap());
+
+    // Saturate the hot model from two producers (best-effort requests,
+    // replies dropped — only pressure matters).
+    let stop = Arc::new(AtomicBool::new(false));
+    let producers: Vec<_> = (0..2)
+        .map(|p| {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let img = frame(1000 + p);
+                let mut sent = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match coord.submit_model(Some("hot"), img.clone(), Slo::default()) {
+                        Ok(rx) => {
+                            drop(rx);
+                            sent += 1;
+                        }
+                        Err(SubmitError::Overloaded) => {
+                            std::thread::yield_now();
+                        }
+                        Err(e) => panic!("hot submit: {e}"),
+                    }
+                }
+                sent
+            })
+        })
+        .collect();
+
+    // Give the producers a head start so the hot queue is saturated.
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Cold model: sequential deadlined requests.  Under the shared
+    // runtime every one must complete inside its (generous) deadline —
+    // the starvation failure mode is a timeout/shed here.
+    const COLD_REQS: usize = 40;
+    const DEADLINE_MS: f64 = 500.0;
+    let mut latencies = Vec::with_capacity(COLD_REQS);
+    for i in 0..COLD_REQS {
+        let rx = coord
+            .submit_model(
+                Some("cold"),
+                frame(2000 + i as u64),
+                Slo::with_deadline_ms(DEADLINE_MS),
+            )
+            .expect("cold submit must admit (its queue is its own)");
+        let r = rx.recv().expect("cold request dropped");
+        assert!(
+            r.is_ok(),
+            "cold request {i} starved under hot load: {:?} ({})",
+            r.error,
+            r.kind
+        );
+        latencies.push(r.total_ms);
+    }
+    stop.store(true, Ordering::Relaxed);
+    let hot_sent: u64 = producers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(hot_sent > 0, "hot producers sent nothing — test proved nothing");
+
+    latencies.sort_by(f64::total_cmp);
+    let p99 = percentile_sorted(&latencies, 99.0);
+    assert!(
+        p99 < DEADLINE_MS,
+        "cold p99 {p99:.1}ms not bounded under hot saturation"
+    );
+
+    let coord = Arc::try_unwrap(coord).ok().expect("producers joined");
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Property: exactly one response per admitted request, mixed SLOs.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct MixCase {
+    requests: usize,
+    seed: u64,
+}
+
+struct GenMixCase;
+
+impl Gen for GenMixCase {
+    type Value = MixCase;
+    fn generate(&self, rng: &mut Rng) -> MixCase {
+        MixCase {
+            requests: rng.range(4, 24),
+            seed: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, v: &MixCase) -> Vec<MixCase> {
+        if v.requests > 4 {
+            vec![MixCase {
+                requests: v.requests / 2,
+                ..v.clone()
+            }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_exactly_one_response_per_admitted_request() {
+    let _serial = serial();
+    let coord = Coordinator::start(&multi_model_cfg(&["pa", "pb"], 2)).unwrap();
+    prop_check(8, 37, GenMixCase, |case| {
+        let mut receivers = Vec::new();
+        let mut rng = Rng::new(case.seed | 1);
+        for i in 0..case.requests {
+            let model = if i % 2 == 0 { "pa" } else { "pb" };
+            let slo = match rng.range(0, 3) {
+                0 => Slo::default(),
+                1 => Slo::with_deadline_ms(500.0),
+                // Tight but feasible for the sim engine; may shed at
+                // admission (Err — not admitted) or expire in queue
+                // (one structured response) — both legal.
+                _ => Slo::with_deadline_ms(2.0),
+            };
+            match coord.submit_model(Some(model), frame(rng.next_u64()), slo) {
+                Ok(rx) => receivers.push((i, rx)),
+                Err(SubmitError::Shed { .. } | SubmitError::Overloaded) => {}
+                Err(e) => return Err(format!("submit {i}: {e}")),
+            }
+        }
+        for (i, rx) in receivers {
+            // Exactly one response...
+            let first = rx
+                .recv_timeout(Duration::from_secs(10))
+                .map_err(|_| format!("request {i} got no response"))?;
+            if first.kind == "shed" && first.error.is_none() {
+                return Err(format!("request {i}: shed without error text"));
+            }
+            // ...and never a second (the worker drops its sender after
+            // the reply; a duplicate would sit in the channel).
+            std::thread::sleep(Duration::from_millis(1));
+            if rx.try_recv().is_ok() {
+                return Err(format!("request {i} got two responses"));
+            }
+        }
+        Ok(())
+    });
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Property: the replica-cache byte bound is hard under eviction.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum CacheOp {
+    Insert { key: u8, bytes: usize },
+    Get { key: u8 },
+}
+
+#[derive(Debug, Clone)]
+struct CacheCase {
+    budget: usize,
+    ops: Vec<CacheOp>,
+}
+
+struct GenCacheCase;
+
+impl Gen for GenCacheCase {
+    type Value = CacheCase;
+    fn generate(&self, rng: &mut Rng) -> CacheCase {
+        let budget = rng.range(50, 400);
+        let n = rng.range(1, 60);
+        let ops = (0..n)
+            .map(|_| {
+                if rng.range(0, 4) == 0 {
+                    CacheOp::Get {
+                        key: rng.range(0, 6) as u8,
+                    }
+                } else {
+                    CacheOp::Insert {
+                        key: rng.range(0, 6) as u8,
+                        bytes: rng.range(1, 500),
+                    }
+                }
+            })
+            .collect();
+        CacheCase { budget, ops }
+    }
+    fn shrink(&self, v: &CacheCase) -> Vec<CacheCase> {
+        if v.ops.len() > 1 {
+            vec![CacheCase {
+                budget: v.budget,
+                ops: v.ops[..v.ops.len() / 2].to_vec(),
+            }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+fn qkey(k: u8) -> QueueKey {
+    QueueKey {
+        model: Arc::from(format!("m{k}").as_str()),
+        generation: 1,
+        engine: EngineKind::Sim,
+    }
+}
+
+#[test]
+fn prop_replica_cache_byte_bound_is_hard() {
+    prop_check(300, 43, GenCacheCase, |case| {
+        let mut cache: ReplicaCache<u64> = ReplicaCache::new(case.budget);
+        for (step, op) in case.ops.iter().enumerate() {
+            match op {
+                CacheOp::Insert { key, bytes } => {
+                    cache.insert(qkey(*key), step as u64, *bytes);
+                    let limit = case.budget.max(*bytes);
+                    if cache.total_bytes() > limit {
+                        return Err(format!(
+                            "step {step}: {} bytes retained, bound {limit} \
+                             (budget {}, inserted {bytes})",
+                            cache.total_bytes(),
+                            case.budget
+                        ));
+                    }
+                    // An over-budget single entry must be alone.
+                    if *bytes > case.budget && cache.len() != 1 {
+                        return Err(format!(
+                            "step {step}: oversized entry kept company \
+                             (len {})",
+                            cache.len()
+                        ));
+                    }
+                }
+                CacheOp::Get { key } => {
+                    let _ = cache.get(&qkey(*key));
+                }
+            }
+        }
+        Ok(())
+    });
+}

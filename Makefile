@@ -2,7 +2,8 @@
 # it never touches the Rust request path.
 
 .PHONY: artifacts artifacts-quick test-python test-rust bench-json \
-        bench-smoke bench-baseline bench-gate stress
+        bench-smoke bench-baseline bench-gate stress stress-conn \
+        stress-conn-ablation
 
 # Lower every engine variant to HLO artifacts + manifest + weights.
 artifacts:
@@ -50,3 +51,14 @@ bench-gate:
 # bounded cold-model p99 — see EXPERIMENTS.md E12).
 stress:
 	cd rust && cargo run --release --example sched_stress
+
+# E13 local repro: thousands of concurrent pipelined connections against
+# the epoll reactor (asserts a fixed IO thread count, zero request loss,
+# and overlapped in-flight requests — see EXPERIMENTS.md E13).
+stress-conn:
+	cd rust && cargo run --release --example conn_stress
+
+# E13 A/B baseline: the same barrage against the thread-per-connection
+# ablation plane (expect process threads ≈ connection count).
+stress-conn-ablation:
+	cd rust && cargo run --release --example conn_stress -- --conn-plane threads

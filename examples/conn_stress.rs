@@ -1,0 +1,245 @@
+//! E13 — connection-plane stress (sim engine, no artifacts).
+//!
+//! Holds ~1000+ concurrent pipelined connections against one server and
+//! demonstrates the event plane's acceptance criteria live:
+//!
+//! * serving-side thread count is a small fixed constant (io_threads +
+//!   acceptor + the worker runtime), independent of connection count —
+//!   the pre-reactor plane needed one OS thread per connection and was
+//!   hard-capped at 32 sockets;
+//! * zero request loss: every request written gets exactly one reply
+//!   with its own id echoed, across every connection;
+//! * pipelining: requests per connection are written back-to-back
+//!   before any reply is read, and the server's observed per-connection
+//!   in-flight depth exceeds 1.
+//!
+//! `--conn-plane threads` runs the same barrage against the
+//! thread-per-connection ablation baseline for the E13 A/B (expect the
+//! process thread count to scale with connections).
+//!
+//! Run: cargo run --release --example conn_stress [-- --quick]
+//!      (or `make stress-conn`; CI runs the --quick smoke)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use zuluko::config::{Config, ConnPlane, ServerConfig};
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::EngineKind;
+use zuluko::server::{sys, Server};
+use zuluko::testkit::sched::threads_named;
+use zuluko::util::json::Json;
+
+const HW: usize = 16;
+const CLASSES: usize = 100;
+const IO_THREADS: usize = 2;
+const RUNTIME_WORKERS: usize = 2;
+const DRIVERS: usize = 8;
+
+fn model_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("zuluko_conn_stress_{}", std::process::id()));
+    zuluko::testkit::manifest::write_synthetic(&dir, "m", CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    dir
+}
+
+fn process_threads() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let plane = match args.iter().position(|a| a == "--conn-plane") {
+        Some(i) => ConnPlane::parse(args.get(i + 1).map(String::as_str).unwrap_or(""))
+            .expect("--conn-plane event|threads"),
+        None => ConnPlane::Event,
+    };
+    let (mut conns, reqs_per_conn) = if quick { (1000, 2) } else { (2000, 4) };
+
+    // Each held connection costs two fds (client end + server end, same
+    // process).  Raise RLIMIT_NOFILE and scale down if the hard limit
+    // refuses — never fail the smoke over an environment cap.
+    let want = (2 * conns + 512) as u64;
+    match sys::raise_nofile_limit(want) {
+        Ok(limit) if limit < want => {
+            conns = ((limit.saturating_sub(512)) / 2) as usize;
+            println!("fd limit {limit}: scaling down to {conns} connections");
+        }
+        Ok(_) => {}
+        Err(e) => println!("raise_nofile_limit: {e} (continuing as-is)"),
+    }
+
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: RUNTIME_WORKERS,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        // The whole barrage is written before any reply is read, so the
+        // admission queue must hold every in-flight request at once —
+        // this run measures the connection plane, not shed behavior.
+        queue_capacity: conns * reqs_per_conn,
+        ..Config::default()
+    };
+    cfg.registry.upsert("m", model_dir());
+    cfg.registry.default_model = Some("m".to_string());
+    cfg.registry.preload = true;
+    cfg.server = ServerConfig {
+        conn_plane: plane,
+        io_threads: IO_THREADS,
+        max_connections: conns + 64,
+        ..ServerConfig::default()
+    };
+    cfg.validate().unwrap();
+
+    println!("== E13: connection-plane stress ==");
+    println!(
+        "plane={plane} conns={conns} reqs/conn={reqs_per_conn} \
+         io_threads={IO_THREADS} runtime_workers={RUNTIME_WORKERS}\n"
+    );
+
+    let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+    let server = Server::start_with(coord.clone(), "127.0.0.1:0", &cfg.server).unwrap();
+    let addr = server.addr();
+    let threads_idle = process_threads();
+
+    // Drivers connect their shard and write every request (pipelined:
+    // no reply is read until all connections hold their full burst),
+    // then park at the barrier so main can observe the peak.
+    let hold = Arc::new(Barrier::new(DRIVERS + 1));
+    let go_read = Arc::new(Barrier::new(DRIVERS + 1));
+    let lost = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for d in 0..DRIVERS {
+        let shard = conns / DRIVERS + usize::from(d < conns % DRIVERS);
+        let (hold, go_read, lost) = (hold.clone(), go_read.clone(), lost.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut held = Vec::with_capacity(shard);
+            for c in 0..shard {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(60)))
+                    .unwrap();
+                let mut w = stream.try_clone().unwrap();
+                let mut burst = String::new();
+                for k in 0..reqs_per_conn {
+                    let seed = ((d as u64) << 40) | ((c as u64) << 8) | k as u64;
+                    burst.push_str(&format!(
+                        "{{\"id\":{k},\"image\":{{\"synthetic\":{seed}}}}}\n"
+                    ));
+                }
+                w.write_all(burst.as_bytes()).expect("write burst");
+                held.push(BufReader::new(stream));
+            }
+            hold.wait();
+            go_read.wait();
+            // Collect replies: every id 0..reqs_per_conn exactly once.
+            for reader in &mut held {
+                let mut seen = vec![false; reqs_per_conn];
+                for _ in 0..reqs_per_conn {
+                    let mut line = String::new();
+                    match reader.read_line(&mut line) {
+                        Ok(n) if n > 0 => {}
+                        _ => {
+                            lost.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
+                    let ok = Json::parse(&line)
+                        .ok()
+                        .filter(|j| {
+                            j.get("ok").and_then(|v| v.as_bool()) == Some(true)
+                        })
+                        .and_then(|j| j.usize_of("id").ok())
+                        .filter(|&id| id < reqs_per_conn && !seen[id]);
+                    match ok {
+                        Some(id) => seen[id] = true,
+                        None => {
+                            lost.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }));
+    }
+
+    // Peak: every connection open and loaded, before any reply drains.
+    hold.wait();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while server.conn_snapshot().connections < conns && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let peak = server.conn_snapshot();
+    let io = threads_named("zuluko-io-");
+    let acceptors = threads_named("zuluko-accept");
+    let threads_peak = process_threads();
+    println!(
+        "peak: {} connections held | zuluko-io threads: {io} | \
+         acceptors: {acceptors} | process threads: {threads_idle} idle -> \
+         {threads_peak} loaded",
+        peak.connections
+    );
+    go_read.wait();
+
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let total = (conns * reqs_per_conn) as u64;
+    let final_snap = server.conn_snapshot();
+    let lost = lost.load(Ordering::Relaxed);
+    println!(
+        "\n{total} requests over {conns} conns in {:.2}s ({:.0} req/s) | \
+         lost: {lost} | peak per-conn in-flight: {} | backpressure pauses: {}",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64(),
+        final_snap.peak_conn_in_flight,
+        final_snap.backpressure_events,
+    );
+
+    assert_eq!(lost, 0, "request loss under connection stress");
+    assert_eq!(peak.connections, conns, "not all connections were admitted");
+    if plane == ConnPlane::Event {
+        assert_eq!(
+            io, IO_THREADS,
+            "event plane IO fleet must stay fixed under load"
+        );
+        assert!(
+            threads_peak < threads_idle + 16,
+            "event plane grew threads with connections \
+             ({threads_idle} -> {threads_peak} for {conns} conns)"
+        );
+        assert!(
+            final_snap.peak_conn_in_flight >= 2,
+            "pipelining never overlapped requests in flight"
+        );
+        println!(
+            "PASS: {conns} conns on {IO_THREADS} io threads, zero loss, \
+             pipelining verified."
+        );
+    } else {
+        println!(
+            "PASS (ablation): threads plane served {conns} conns with zero \
+             loss using ~1 thread per connection ({threads_peak} process \
+             threads at peak vs {threads_idle} idle)."
+        );
+    }
+
+    server.stop();
+    let mut coord = coord;
+    let coord = loop {
+        match Arc::try_unwrap(coord) {
+            Ok(c) => break c,
+            Err(arc) => {
+                coord = arc;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    coord.shutdown();
+}

@@ -193,6 +193,73 @@ impl RegistryConfig {
     }
 }
 
+/// Which connection-plane architecture `zuluko serve` runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConnPlane {
+    /// Epoll reactor: fixed IO thread set multiplexing non-blocking
+    /// connections with async worker completions (the default).
+    #[default]
+    Event,
+    /// Thread-per-connection ablation baseline (E13): one blocking OS
+    /// thread per socket, as before the reactor existed.
+    Threads,
+}
+
+impl ConnPlane {
+    pub fn parse(s: &str) -> Result<ConnPlane> {
+        match s {
+            "event" => Ok(ConnPlane::Event),
+            "threads" => Ok(ConnPlane::Threads),
+            other => bail!("--conn-plane expects event|threads, got '{other}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ConnPlane::Event => "event",
+            ConnPlane::Threads => "threads",
+        }
+    }
+}
+
+impl std::fmt::Display for ConnPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Connection-plane knobs for `zuluko serve` (DESIGN.md §"Connection
+/// plane").
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub conn_plane: ConnPlane,
+    /// Event plane: IO threads multiplexing the connection set.  Two
+    /// saturate the newline-JSON protocol well past 10k connections;
+    /// the knob exists for the E13 scaling axis.
+    pub io_threads: usize,
+    /// Open-connection cap.  Beyond it, new sockets get a structured
+    /// `at_capacity` line and close.  (The threads plane spends one OS
+    /// thread per connection — size accordingly for ablation runs.)
+    pub max_connections: usize,
+    /// Per-request line budget in bytes; longer lines are a structured
+    /// `bad_request` reject + close (OOM-DoS bound).
+    pub max_line_bytes: usize,
+    /// Evict connections idle this long (0 disables; event plane only).
+    pub idle_timeout_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            conn_plane: ConnPlane::Event,
+            io_threads: 2,
+            max_connections: 1024,
+            max_line_bytes: 64 * 1024,
+            idle_timeout_ms: 60_000,
+        }
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -230,6 +297,8 @@ pub struct Config {
     pub pool: PoolConfig,
     /// Multi-model registry knobs.
     pub registry: RegistryConfig,
+    /// Connection-plane knobs for `zuluko serve`.
+    pub server: ServerConfig,
 }
 
 impl Default for Config {
@@ -249,6 +318,7 @@ impl Default for Config {
             policy: PolicyConfig::default(),
             pool: PoolConfig::default(),
             registry: RegistryConfig::default(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -322,6 +392,24 @@ impl Config {
             }
             if let Some(v) = p.get("per_class_cap").and_then(|v| v.as_usize()) {
                 self.pool.per_class_cap = v;
+            }
+        }
+        // Connection-plane knobs live under a nested "server" object.
+        if let Some(s) = j.get("server") {
+            if let Some(v) = s.get("conn_plane").and_then(|v| v.as_str()) {
+                self.server.conn_plane = ConnPlane::parse(v)?;
+            }
+            if let Some(v) = s.get("io_threads").and_then(|v| v.as_usize()) {
+                self.server.io_threads = v;
+            }
+            if let Some(v) = s.get("max_connections").and_then(|v| v.as_usize()) {
+                self.server.max_connections = v;
+            }
+            if let Some(v) = s.get("max_line_bytes").and_then(|v| v.as_usize()) {
+                self.server.max_line_bytes = v;
+            }
+            if let Some(v) = s.get("idle_timeout_ms").and_then(|v| v.as_usize()) {
+                self.server.idle_timeout_ms = v as u64;
             }
         }
         // Registry knobs live under a nested "registry" object with the
@@ -412,6 +500,22 @@ impl Config {
         self.pool.per_class_cap = a
             .get_usize("pool-cap", self.pool.per_class_cap)
             .map_err(anyhow::Error::msg)?;
+        // Connection plane.
+        if let Some(v) = a.get("conn-plane") {
+            self.server.conn_plane = ConnPlane::parse(v)?;
+        }
+        self.server.io_threads = a
+            .get_usize("io-threads", self.server.io_threads)
+            .map_err(anyhow::Error::msg)?;
+        self.server.max_connections = a
+            .get_usize("max-connections", self.server.max_connections)
+            .map_err(anyhow::Error::msg)?;
+        self.server.max_line_bytes = a
+            .get_usize("max-line-bytes", self.server.max_line_bytes)
+            .map_err(anyhow::Error::msg)?;
+        self.server.idle_timeout_ms = a
+            .get_usize("idle-timeout-ms", self.server.idle_timeout_ms as usize)
+            .map_err(anyhow::Error::msg)? as u64;
         // Registry: `--models index.json` loads a whole index, then
         // repeated `--model name=path` flags add/override entries.
         if let Some(p) = a.get("models") {
@@ -502,6 +606,20 @@ impl Config {
         if self.pool.per_class_cap == 0 {
             bail!("pool per_class_cap must be >= 1 (use pool.enabled=false to disable)");
         }
+        if self.server.io_threads == 0 {
+            bail!("io_threads must be >= 1");
+        }
+        if self.server.max_connections == 0 {
+            bail!("max_connections must be >= 1");
+        }
+        // A budget below one small JSON request can't carry the
+        // protocol; it's a unit mistake, not a tighter bound.
+        if self.server.max_line_bytes < 256 {
+            bail!(
+                "max_line_bytes must be >= 256, got {}",
+                self.server.max_line_bytes
+            );
+        }
         if self.policy.adaptive {
             if self.policy.quant_workers == 0 {
                 bail!("quant_workers must be >= 1 when adaptive");
@@ -588,6 +706,11 @@ impl Config {
         "model-weight",
         "default-model",
         "preload-models",
+        "conn-plane",
+        "io-threads",
+        "max-connections",
+        "max-line-bytes",
+        "idle-timeout-ms",
     ];
 }
 
@@ -935,6 +1058,85 @@ mod tests {
             .unwrap();
             assert!(Config::from_args(&a).is_err(), "accepted '{bad}'");
         }
+    }
+
+    #[test]
+    fn server_knobs_from_json_and_cli() {
+        let j = Json::parse(
+            r#"{"server":{"conn_plane":"threads","io_threads":4,
+                "max_connections":5000,"max_line_bytes":4096,
+                "idle_timeout_ms":0}}"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.server.conn_plane, ConnPlane::Threads);
+        assert_eq!(c.server.io_threads, 4);
+        assert_eq!(c.server.max_connections, 5000);
+        assert_eq!(c.server.max_line_bytes, 4096);
+        assert_eq!(c.server.idle_timeout_ms, 0);
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            [
+                "serve",
+                "--conn-plane",
+                "event",
+                "--io-threads",
+                "3",
+                "--max-connections",
+                "2000",
+                "--max-line-bytes",
+                "512",
+                "--idle-timeout-ms",
+                "30000",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.server.conn_plane, ConnPlane::Event);
+        assert_eq!(c.server.io_threads, 3);
+        assert_eq!(c.server.max_connections, 2000);
+        assert_eq!(c.server.max_line_bytes, 512);
+        assert_eq!(c.server.idle_timeout_ms, 30_000);
+
+        // A typo'd plane must error, never silently fall back.
+        let bad = Args::parse(
+            ["serve", "--conn-plane", "evnt"].iter().map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn server_validation_rejects_nonsense() {
+        let mut c = Config::default();
+        c.server.io_threads = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.server.max_connections = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.server.max_line_bytes = 64;
+        assert!(c.validate().is_err());
+        // idle_timeout_ms 0 is valid: it disables eviction.
+        let mut c = Config::default();
+        c.server.idle_timeout_ms = 0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn conn_plane_parses_and_displays() {
+        assert_eq!(ConnPlane::parse("event").unwrap(), ConnPlane::Event);
+        assert_eq!(ConnPlane::parse("threads").unwrap(), ConnPlane::Threads);
+        assert!(ConnPlane::parse("epoll").is_err());
+        assert_eq!(ConnPlane::Event.to_string(), "event");
+        assert_eq!(ConnPlane::Threads.to_string(), "threads");
+        assert_eq!(ConnPlane::default(), ConnPlane::Event);
     }
 
     #[test]

@@ -79,7 +79,116 @@ pub struct Request {
     /// or the spec isn't self-describing) — filled alongside
     /// `cache_key` so repeat requests skip decode entirely.
     pub wire_key: Option<u64>,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: ReplySink,
+}
+
+/// Routing key for an async completion: which connection to wake and
+/// which *client-assigned* request id to stamp on the response line
+/// (the coordinator's internal ids never reach the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompletionToken {
+    pub conn: u64,
+    pub request: u64,
+}
+
+/// Where async completions land.  The event-driven server implements
+/// this over its per-IO-thread completion queue + eventfd wake; the
+/// coordinator only ever sees the trait, so the dependency points
+/// server -> coordinator, never back.
+///
+/// `complete` is called from runtime worker threads (and from the
+/// submit path on cache hits) — implementations must be cheap and
+/// never block on the IO loop they wake.
+pub trait CompletionSink: Send + Sync {
+    fn complete(&self, token: CompletionToken, resp: Response);
+}
+
+enum SinkInner {
+    /// Synchronous callers: the classic per-request mpsc channel
+    /// (`rx.recv()` blocks the calling thread — library surface,
+    /// examples, benches, the threads-plane server).
+    Channel(mpsc::Sender<Response>),
+    /// Asynchronous callers: the response is pushed to a completion
+    /// queue keyed by (connection, client request id) and the IO loop
+    /// is woken — one connection can have many requests in flight.
+    Completion {
+        sink: Arc<dyn CompletionSink>,
+        token: CompletionToken,
+    },
+}
+
+/// Exactly-one-reply carrier for an admitted request.
+///
+/// The channel variant inherits mpsc semantics: dropping the sender
+/// unsent makes `rx.recv()` fail, which callers already surface as
+/// "worker gone".  The completion variant has no receiver to observe a
+/// drop, so `Drop` delivers a structured error completion instead —
+/// an admitted async request can never vanish silently, even if a
+/// queue is torn down with requests still inside.
+pub struct ReplySink {
+    inner: SinkInner,
+    sent: std::sync::atomic::AtomicBool,
+}
+
+impl ReplySink {
+    pub fn channel(tx: mpsc::Sender<Response>) -> ReplySink {
+        ReplySink {
+            inner: SinkInner::Channel(tx),
+            sent: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    pub fn completion(sink: Arc<dyn CompletionSink>, token: CompletionToken) -> ReplySink {
+        ReplySink {
+            inner: SinkInner::Completion { sink, token },
+            sent: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Suppress the drop backstop without delivering anything — used on
+    /// admission-failure paths where the caller still owns the error
+    /// and reports it itself (a backstop completion here would be a
+    /// double reply).
+    pub fn disarm(&self) {
+        self.sent.store(true, Ordering::Release);
+    }
+
+    /// Deliver the response (first call wins; later calls are dropped
+    /// so a double-send bug can never double-complete a connection).
+    pub fn send(&self, resp: Response) {
+        if self.sent.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        match &self.inner {
+            SinkInner::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            SinkInner::Completion { sink, token } => sink.complete(*token, resp),
+        }
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if self.sent.load(Ordering::Acquire) {
+            return;
+        }
+        if let SinkInner::Completion { sink, token } = &self.inner {
+            // Mirror the channel variant's "worker gone" recv error.
+            sink.complete(*token, Response::error(token.request, "worker gone"));
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplySink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            SinkInner::Channel(_) => write!(f, "ReplySink::Channel"),
+            SinkInner::Completion { token, .. } => {
+                write!(f, "ReplySink::Completion({token:?})")
+            }
+        }
+    }
 }
 
 /// One inference response (top-k + latency breakdown).
@@ -425,6 +534,27 @@ impl Coordinator {
         lease.submit_pooled_reclaim(id, image, slo, wire_key)
     }
 
+    /// Asynchronous submission: instead of handing back a receiver to
+    /// block on, the eventual [`Response`] is delivered through `reply`
+    /// (a [`ReplySink`], usually the event-driven server's completion
+    /// queue).  `Ok(())` guarantees exactly one delivery — immediately
+    /// for a cache hit, from a runtime worker otherwise, and from the
+    /// sink's drop backstop if the request is torn down mid-flight.
+    /// `Err` means nothing was delivered; recoverable errors hand the
+    /// decoded pixels back for a reload-race retry, exactly like
+    /// [`Coordinator::submit_on_reclaim`].
+    pub fn submit_on_sink(
+        &self,
+        lease: &GenerationLease,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+        reply: ReplySink,
+    ) -> Result<(), (SubmitError, Option<PooledTensor>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        lease.submit_sink_reclaim(id, image, slo, wire_key, reply)
+    }
+
     /// Response-cache lookup by an externally computed key on the
     /// default model — the server's wire-key fast path (see
     /// [`crate::registry::Generation::cached_response`]).
@@ -580,5 +710,90 @@ impl Coordinator {
     pub fn shutdown(self) -> Vec<WorkerReport> {
         self.registry.shutdown();
         self.runtime.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Exactly-once semantics of [`ReplySink`] — the contract the event
+    //! plane's pipelining rests on: an admitted request delivers exactly
+    //! one completion; a disarmed sink delivers zero; a dropped-unsent
+    //! completion sink delivers a structured "worker gone" backstop.
+
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Captures every completion it receives.
+    struct Capture(Mutex<Vec<(CompletionToken, Response)>>);
+
+    impl Capture {
+        fn new() -> Arc<Capture> {
+            Arc::new(Capture(Mutex::new(Vec::new())))
+        }
+        fn got(&self) -> Vec<(CompletionToken, Response)> {
+            self.0.lock().unwrap().clone()
+        }
+    }
+
+    impl CompletionSink for Capture {
+        fn complete(&self, token: CompletionToken, resp: Response) {
+            self.0.lock().unwrap().push((token, resp));
+        }
+    }
+
+    fn token() -> CompletionToken {
+        CompletionToken { conn: 7, request: 42 }
+    }
+
+    #[test]
+    fn completion_sink_delivers_exactly_once() {
+        let cap = Capture::new();
+        let sink = ReplySink::completion(cap.clone(), token());
+        sink.send(Response::error(42, "first"));
+        sink.send(Response::error(42, "second")); // dropped, not delivered
+        drop(sink); // backstop must not fire after a send
+        let got = cap.got();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, token());
+        assert_eq!(got[0].1.error.as_deref(), Some("first"));
+    }
+
+    #[test]
+    fn completion_sink_drop_backstop_reports_worker_gone() {
+        let cap = Capture::new();
+        drop(ReplySink::completion(cap.clone(), token()));
+        let got = cap.got();
+        assert_eq!(got.len(), 1, "dropped-unsent sink must deliver a backstop");
+        assert_eq!(got[0].1.id, 42, "backstop echoes the client request id");
+        assert_eq!(got[0].1.error.as_deref(), Some("worker gone"));
+    }
+
+    #[test]
+    fn disarmed_sink_delivers_nothing() {
+        let cap = Capture::new();
+        let sink = ReplySink::completion(cap.clone(), token());
+        sink.disarm();
+        sink.send(Response::error(42, "late")); // disarm wins: already "sent"
+        drop(sink);
+        assert!(cap.got().is_empty(), "disarmed sink must stay silent");
+    }
+
+    #[test]
+    fn channel_sink_drop_makes_recv_fail() {
+        let (tx, rx) = mpsc::channel();
+        drop(ReplySink::channel(tx));
+        // The channel variant's backstop is mpsc's own disconnect error,
+        // which callers surface as "worker gone".
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn channel_sink_sends_once() {
+        let (tx, rx) = mpsc::channel();
+        let sink = ReplySink::channel(tx);
+        sink.send(Response::error(1, "only"));
+        sink.send(Response::error(1, "extra"));
+        assert_eq!(rx.recv().unwrap().error.as_deref(), Some("only"));
+        assert!(rx.recv().is_err(), "second send must have been dropped");
     }
 }

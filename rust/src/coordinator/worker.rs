@@ -253,7 +253,7 @@ fn serve_one(
         exec.ctx.shed_expired.fetch_add(1, Ordering::Relaxed);
         let mut resp = Response::shed_expired(r.id, DEADLINE_ERROR);
         resp.model = model.clone();
-        let _ = r.reply.send(resp);
+        r.reply.send(resp);
     }
     if live.is_empty() {
         w.scheduler.charge(&source.key, expired.len().max(1));
@@ -332,7 +332,7 @@ fn serve_one(
                         exec.ctx.cache.put(*key, cached.clone());
                     }
                 }
-                let _ = req.reply.send(Response {
+                req.reply.send(Response {
                     id: req.id,
                     top1,
                     top5,
@@ -372,6 +372,6 @@ fn fail_batch(model: &Arc<str>, reqs: &[Request], msg: &str) {
     for r in reqs {
         let mut resp = Response::error(r.id, msg);
         resp.model = model.clone();
-        let _ = r.reply.send(resp);
+        r.reply.send(resp);
     }
 }

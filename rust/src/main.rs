@@ -31,6 +31,14 @@
 //! legacy spelling), `--replica-cache-mb` bounds each worker's resident
 //! engine replicas, `--model-weight name=w` skews the fair-share
 //! scheduler (repeatable).
+//!
+//! Connection-plane flags (DESIGN.md §"Connection plane"):
+//! `--conn-plane event|threads` picks the epoll reactor (default) or
+//! the thread-per-connection ablation baseline; `--io-threads N` sizes
+//! the reactor's IO set; `--max-connections` caps open sockets
+//! (structured `at_capacity` reject beyond it); `--max-line-bytes`
+//! bounds a request line; `--idle-timeout-ms` evicts idle connections
+//! (0 disables).
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -107,16 +115,24 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         }
     );
     let coord = Arc::new(Coordinator::start(cfg)?);
-    let server = Server::start(coord.clone(), &cfg.listen)?;
-    info!("main", "serving on {} — Ctrl-C to stop", server.addr());
+    let server = Server::start_with(coord.clone(), &cfg.listen, &cfg.server)?;
+    info!(
+        "main",
+        "serving on {} — conn-plane={} io-threads={} max-connections={} — Ctrl-C to stop",
+        server.addr(),
+        cfg.server.conn_plane,
+        cfg.server.io_threads,
+        cfg.server.max_connections
+    );
     // Serve until killed; periodic stats line.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let s = coord.stats();
+        let c = server.conn_snapshot();
         info!(
             "main",
             "completed={} rejected={} queued={} p50={:.1}ms cache={}h/{}m \
-             shed={}+{} pool={}h/{}m",
+             shed={}+{} pool={}h/{}m conns={} in-flight={}",
             s.completed,
             s.rejected,
             s.queued,
@@ -126,7 +142,9 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             s.shed_predicted,
             s.shed_expired,
             s.pool.hits,
-            s.pool.misses
+            s.pool.misses,
+            c.connections,
+            c.in_flight
         );
     }
 }

@@ -38,7 +38,7 @@ use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::router::{EnginePort, RouteError};
 use crate::coordinator::scheduler::{ExecCtx, QueueKey, RuntimeHandle, WorkSource};
 use crate::coordinator::worker::SharedStats;
-use crate::coordinator::{Request, Response, SubmitError};
+use crate::coordinator::{ReplySink, Request, Response, SubmitError};
 use crate::engine::{self, EngineKind};
 use crate::policy::{
     self, image_key, Decision, PolicyCtx, PoolSnapshot, PoolView, Selector, Slo,
@@ -307,6 +307,21 @@ impl Generation {
         self.submit_pooled_reclaim(id, image, slo, wire_key).map_err(|(e, _img)| e)
     }
 
+    /// Channel-flavored wrapper over [`Generation::submit_sink_reclaim`]
+    /// for synchronous callers: the reply arrives on the returned
+    /// receiver (a cache hit is already in it by the time this returns).
+    pub fn submit_pooled_reclaim(
+        &self,
+        id: u64,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+    ) -> Result<mpsc::Receiver<Response>, (SubmitError, Option<PooledTensor>)> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_sink_reclaim(id, image, slo, wire_key, ReplySink::channel(tx))
+            .map(|_| rx)
+    }
+
     /// Zero-copy submission onto this generation: the image already
     /// lives in a pooled lease (ideally from [`Generation::arena`]).
     /// The cache is consulted first (a hit replies immediately without
@@ -315,18 +330,26 @@ impl Generation {
     /// `wire_key` optionally keys the response cache on the raw request
     /// bytes so a repeat of the same wire spec skips decode next time.
     ///
+    /// `Ok(())` means exactly one [`Response`] reaches `reply` —
+    /// immediately on a cache hit, from a runtime worker otherwise, or
+    /// from the sink's drop backstop if the queue is torn down with the
+    /// request inside.  `Err` means nothing was delivered (the sink is
+    /// disarmed): the caller owns the structured error.
+    ///
     /// On `Closed` (this generation retired mid-swap) the decoded image
     /// is handed back alongside the error so the caller can re-resolve
     /// and resubmit the *same pixels* to the fresh generation without
     /// re-decoding.
-    pub fn submit_pooled_reclaim(
+    pub fn submit_sink_reclaim(
         &self,
         id: u64,
         image: PooledTensor,
         slo: Slo,
         wire_key: Option<u64>,
-    ) -> Result<mpsc::Receiver<Response>, (SubmitError, Option<PooledTensor>)> {
+        reply: ReplySink,
+    ) -> Result<(), (SubmitError, Option<PooledTensor>)> {
         if let Err(e) = self.check_shape(image.shape()) {
+            reply.disarm();
             return Err((e, Some(image)));
         }
         let submitted = Instant::now();
@@ -341,10 +364,9 @@ impl Generation {
                 if let Some(wk) = wire_key {
                     self.ctx.cache.put(wk, hit.clone());
                 }
-                let (tx, rx) = mpsc::channel();
                 let total_ms = crate::util::ms(submitted.elapsed());
-                let _ = tx.send(self.cache_hit_response(id, &hit, total_ms));
-                return Ok(rx);
+                reply.send(self.cache_hit_response(id, &hit, total_ms));
+                return Ok(());
             }
             Some(key)
         } else {
@@ -366,6 +388,7 @@ impl Generation {
             Decision::Route { pool, .. } => pool,
             Decision::Shed { best_ms } => {
                 self.count_rejected();
+                reply.disarm();
                 let any_room = views.iter().any(|v| v.queued < v.capacity);
                 return Err((
                     match (budget_ms, any_room) {
@@ -383,7 +406,6 @@ impl Generation {
             }
         };
 
-        let (tx, rx) = mpsc::channel();
         let req = Request {
             id,
             image,
@@ -391,19 +413,23 @@ impl Generation {
             slo,
             cache_key,
             wire_key: wire_key.filter(|_| cache_key.is_some()),
-            reply: tx,
+            reply,
         };
         match self.ports[port].admit(req) {
-            Ok(_) => Ok(rx),
+            Ok(_) => Ok(()),
             Err(RouteError::Overloaded(r)) => {
                 self.count_rejected();
+                r.reply.disarm();
                 Err((SubmitError::Overloaded, Some(r.image)))
             }
             // Retired mid-swap: the caller re-resolves the model and
             // retries on the fresh generation with the reclaimed image
             // (no rejection counted — the request was never refused,
             // just redirected).
-            Err(RouteError::Closed(r)) => Err((SubmitError::Closed, Some(r.image))),
+            Err(RouteError::Closed(r)) => {
+                r.reply.disarm();
+                Err((SubmitError::Closed, Some(r.image)))
+            }
         }
     }
 

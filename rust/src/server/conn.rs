@@ -1,0 +1,442 @@
+//! Connection-plane plumbing shared by both serving planes: pooled
+//! byte buffers, bounded newline framing over partial reads, a write
+//! buffer with backpressure watermarks, and the accept-error backoff
+//! policy.  Everything here is pure state-machine code — no sockets —
+//! so the invariants the reactor leans on are unit-testable without a
+//! kernel in the loop.
+
+use std::io;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Pool of reusable byte buffers for connection read/write state.
+/// Ten thousand connections each holding two `Vec`s would otherwise
+/// churn the allocator on every connect/disconnect cycle; the pool
+/// bounds retention (`retain` buffers) so an idle server shrinks back.
+pub struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    retain: usize,
+    init_capacity: usize,
+    outstanding: AtomicUsize,
+}
+
+/// Occupancy snapshot for `{"cmd":"stats"}`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BufPoolStats {
+    /// Buffers sitting in the free list.
+    pub free: usize,
+    /// Buffers currently held by live connections.
+    pub outstanding: usize,
+}
+
+impl BufPool {
+    pub fn new(retain: usize, init_capacity: usize) -> BufPool {
+        BufPool {
+            free: Mutex::new(Vec::new()),
+            retain,
+            init_capacity,
+            outstanding: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn take(&self) -> Vec<u8> {
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+        self.free
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(self.init_capacity))
+    }
+
+    pub fn put(&self, mut buf: Vec<u8>) {
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        buf.clear();
+        // A buffer that ballooned (one huge request) is not worth
+        // retaining — keeping it would pin the high-water mark forever.
+        if buf.capacity() > self.init_capacity * 8 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.retain {
+            free.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> BufPoolStats {
+        BufPoolStats {
+            free: self.free.lock().unwrap().len(),
+            outstanding: self.outstanding.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Framing error: the client exceeded the per-line byte budget.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Oversize {
+    /// Bytes accumulated when the bound tripped.
+    pub seen: usize,
+}
+
+/// Drain every complete newline-terminated line out of `rbuf`, leaving
+/// any trailing partial line in place for the next read.
+///
+/// Enforces `max_line_bytes` two ways: a *complete* line longer than
+/// the bound, or a newline-less residue that has already outgrown it
+/// (the streaming-OOM case), both return [`Oversize`] — the caller
+/// answers `bad_request` and closes.  Lines are lossily UTF-8 decoded;
+/// invalid bytes simply fail JSON parsing downstream, which keeps the
+/// error path uniform (a structured reject, not a dropped connection).
+pub fn drain_lines(rbuf: &mut Vec<u8>, max_line_bytes: usize) -> Result<Vec<String>, Oversize> {
+    let mut lines = Vec::new();
+    let mut start = 0usize;
+    while let Some(pos) = rbuf[start..].iter().position(|&b| b == b'\n') {
+        let end = start + pos;
+        if end - start > max_line_bytes {
+            return Err(Oversize { seen: end - start });
+        }
+        let line = String::from_utf8_lossy(&rbuf[start..end]).into_owned();
+        lines.push(line);
+        start = end + 1;
+    }
+    if rbuf.len() - start > max_line_bytes {
+        return Err(Oversize {
+            seen: rbuf.len() - start,
+        });
+    }
+    rbuf.drain(..start);
+    Ok(lines)
+}
+
+/// Buffered writer for a non-blocking socket with watermark-based
+/// backpressure.
+///
+/// Replies are appended whole; `flush` pushes as much as the socket
+/// accepts and reports whether bytes remain (the caller then arms
+/// EPOLLOUT).  When the backlog crosses `high` the connection should
+/// stop *reading* (a pipelining client that never drains replies must
+/// not grow this buffer without bound); reading resumes once the
+/// backlog falls to `high / 4`.
+pub struct WriteBuf {
+    buf: Vec<u8>,
+    start: usize,
+    high: usize,
+}
+
+impl WriteBuf {
+    pub fn new(buf: Vec<u8>, high: usize) -> WriteBuf {
+        WriteBuf {
+            buf,
+            start: 0,
+            high,
+        }
+    }
+
+    /// Append one reply line (the newline is added here so callers
+    /// can't forget it).
+    pub fn push_line(&mut self, line: &str) {
+        self.buf.extend_from_slice(line.as_bytes());
+        self.buf.push(b'\n');
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Above the high watermark: pause reads on this connection.
+    pub fn over_high(&self) -> bool {
+        self.pending() > self.high
+    }
+
+    /// At/below the low watermark: a paused connection may read again.
+    pub fn under_low(&self) -> bool {
+        self.pending() <= self.high / 4
+    }
+
+    /// Write as much as the socket will take.  `Ok(true)` means fully
+    /// drained; `Ok(false)` means the socket is full (arm EPOLLOUT and
+    /// retry on writability).
+    pub fn flush(&mut self, w: &mut impl io::Write) -> io::Result<bool> {
+        while self.start < self.buf.len() {
+            match w.write(&self.buf[self.start..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket accepted 0 bytes",
+                    ))
+                }
+                Ok(n) => self.start += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    self.compact();
+                    return Ok(false);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.start = 0;
+        Ok(true)
+    }
+
+    /// Reclaim the consumed prefix once it dominates the buffer, so a
+    /// long-lived slow reader doesn't hold its entire reply history.
+    fn compact(&mut self) {
+        if self.start > 4096 && self.start * 2 >= self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    /// Hand the backing buffer back (for pool return on close).
+    pub fn into_buf(mut self) -> Vec<u8> {
+        self.buf.clear();
+        self.buf
+    }
+}
+
+/// Backoff policy for transient `accept()` failures.
+///
+/// The pre-reactor server `break`ed out of its accept loop on any
+/// error, so one EMFILE burst (fd pressure from the very connections
+/// being served) permanently killed accepting while established
+/// connections lived on — a silent half-dead server.  Every accept
+/// error is now survivable: transient ones (fd exhaustion, aborted
+/// handshakes, signals) sleep an escalating-but-capped interval and
+/// retry; even unrecognized errors only log-and-retry, because a
+/// listener that stops accepting is strictly worse than one that
+/// retries a weird errno.
+pub struct AcceptBackoff {
+    step: u32,
+}
+
+impl AcceptBackoff {
+    const BASE_MS: u64 = 1;
+    const CAP_MS: u64 = 500;
+
+    pub fn new() -> AcceptBackoff {
+        AcceptBackoff { step: 0 }
+    }
+
+    /// Is this error kind an expected under-pressure transient?
+    /// (EMFILE/ENFILE surface as `Other`/`Uncategorized` through std,
+    /// so classification is by raw errno.)
+    pub fn transient(e: &io::Error) -> bool {
+        // EMFILE=24 ENFILE=23 ENOMEM=12 ECONNABORTED=103 EINTR=4
+        // EPROTO=71 (Linux errno values; this module is linux-only).
+        matches!(e.raw_os_error(), Some(24 | 23 | 12 | 103 | 4 | 71))
+            || matches!(
+                e.kind(),
+                io::ErrorKind::ConnectionAborted
+                    | io::ErrorKind::Interrupted
+                    | io::ErrorKind::WouldBlock
+            )
+    }
+
+    /// Next sleep before retrying: 1ms, 2ms, 4ms, ... capped at 500ms.
+    pub fn next_delay(&mut self) -> Duration {
+        let ms = (Self::BASE_MS << self.step.min(16)).min(Self::CAP_MS);
+        self.step = self.step.saturating_add(1);
+        Duration::from_millis(ms)
+    }
+
+    /// A successful accept ends the incident: start fresh next time.
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+}
+
+impl Default for AcceptBackoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- framing ------------------------------------------------------------
+
+    #[test]
+    fn drains_complete_lines_keeps_partial_tail() {
+        let mut b = b"{\"a\":1}\n{\"b\":2}\n{\"part".to_vec();
+        let lines = drain_lines(&mut b, 1024).unwrap();
+        assert_eq!(lines, vec!["{\"a\":1}", "{\"b\":2}"]);
+        assert_eq!(b, b"{\"part");
+        // The tail completes on the next read.
+        b.extend_from_slice(b"ial\":3}\n");
+        let lines = drain_lines(&mut b, 1024).unwrap();
+        assert_eq!(lines, vec!["{\"partial\":3}"]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn oversize_newlineless_stream_is_rejected() {
+        // The OOM-DoS shape: bytes forever, never a newline.
+        let mut b = vec![b'x'; 100];
+        let err = drain_lines(&mut b, 64).unwrap_err();
+        assert_eq!(err.seen, 100);
+    }
+
+    #[test]
+    fn oversize_complete_line_is_rejected_too() {
+        // A newline *within* the read chunk must not smuggle an
+        // over-budget line past the bound.
+        let mut b = vec![b'y'; 100];
+        b.push(b'\n');
+        b.extend_from_slice(b"{\"ok\":1}\n");
+        assert!(drain_lines(&mut b, 64).is_err());
+    }
+
+    #[test]
+    fn line_exactly_at_bound_passes() {
+        let mut b = vec![b'z'; 64];
+        b.push(b'\n');
+        let lines = drain_lines(&mut b, 64).unwrap();
+        assert_eq!(lines[0].len(), 64);
+    }
+
+    #[test]
+    fn invalid_utf8_becomes_a_parseable_reject_not_a_panic() {
+        let mut b = vec![0xFF, 0xFE, b'\n'];
+        let lines = drain_lines(&mut b, 64).unwrap();
+        assert_eq!(lines.len(), 1);
+        assert!(crate::server::protocol::parse_request(&lines[0]).is_err());
+    }
+
+    // -- write buffer -------------------------------------------------------
+
+    /// Writer that accepts `quota` bytes then reports WouldBlock, like
+    /// a socket whose send buffer filled.
+    struct Throttled {
+        out: Vec<u8>,
+        quota: usize,
+    }
+
+    impl io::Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.quota == 0 {
+                return Err(io::ErrorKind::WouldBlock.into());
+            }
+            let n = buf.len().min(self.quota);
+            self.quota -= n;
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn partial_write_parks_then_resumes() {
+        let mut wb = WriteBuf::new(Vec::new(), 1 << 20);
+        wb.push_line("hello");
+        wb.push_line("world");
+        let mut w = Throttled {
+            out: Vec::new(),
+            quota: 7,
+        };
+        assert!(!wb.flush(&mut w).unwrap(), "socket full: must report undrained");
+        assert_eq!(w.out, b"hello\nw");
+        assert_eq!(wb.pending(), 5);
+        // Socket drains (EPOLLOUT): the rest goes out, buffer resets.
+        w.quota = usize::MAX;
+        assert!(wb.flush(&mut w).unwrap());
+        assert_eq!(w.out, b"hello\nworld\n");
+        assert!(wb.is_empty());
+    }
+
+    #[test]
+    fn watermarks_pause_and_resume() {
+        let mut wb = WriteBuf::new(Vec::new(), 100);
+        assert!(!wb.over_high());
+        assert!(wb.under_low());
+        wb.push_line(&"x".repeat(150));
+        assert!(wb.over_high(), "151 pending > 100 high");
+        assert!(!wb.under_low());
+        // Drain to 20 pending: 20 <= 25 (high/4) resumes reads.
+        let mut w = Throttled {
+            out: Vec::new(),
+            quota: 131,
+        };
+        assert!(!wb.flush(&mut w).unwrap());
+        assert_eq!(wb.pending(), 20);
+        assert!(!wb.over_high());
+        assert!(wb.under_low());
+    }
+
+    #[test]
+    fn compaction_reclaims_consumed_prefix() {
+        let mut wb = WriteBuf::new(Vec::new(), 1 << 20);
+        wb.push_line(&"a".repeat(10_000));
+        let mut w = Throttled {
+            out: Vec::new(),
+            quota: 9_000,
+        };
+        assert!(!wb.flush(&mut w).unwrap());
+        // 9000 consumed of 10001: compaction dropped the dead prefix.
+        assert_eq!(wb.pending(), 1_001);
+        assert_eq!(wb.start, 0);
+        assert_eq!(wb.buf.len(), 1_001);
+    }
+
+    // -- accept backoff -----------------------------------------------------
+
+    #[test]
+    fn backoff_escalates_caps_and_resets() {
+        let mut b = AcceptBackoff::new();
+        assert_eq!(b.next_delay(), Duration::from_millis(1));
+        assert_eq!(b.next_delay(), Duration::from_millis(2));
+        assert_eq!(b.next_delay(), Duration::from_millis(4));
+        for _ in 0..20 {
+            assert!(b.next_delay() <= Duration::from_millis(500), "cap holds");
+        }
+        assert_eq!(b.next_delay(), Duration::from_millis(500));
+        b.reset();
+        assert_eq!(b.next_delay(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn emfile_and_friends_classify_as_transient() {
+        // The regression scenario: EMFILE during fd pressure must be
+        // survivable, not fatal (the old loop `break`ed on it).
+        for errno in [24, 23, 12, 103, 4] {
+            let e = io::Error::from_raw_os_error(errno);
+            assert!(AcceptBackoff::transient(&e), "errno {errno} must be transient");
+        }
+        assert!(AcceptBackoff::transient(&io::ErrorKind::Interrupted.into()));
+        // Unknown errors are NOT classified transient (they log louder)
+        // — but the accept loop still never exits on them.
+        assert!(!AcceptBackoff::transient(&io::Error::from_raw_os_error(13)));
+    }
+
+    #[test]
+    fn bufpool_reuses_and_bounds_retention() {
+        let p = BufPool::new(2, 64);
+        let a = p.take();
+        let b = p.take();
+        let c = p.take();
+        assert_eq!(p.stats().outstanding, 3);
+        p.put(a);
+        p.put(b);
+        p.put(c); // third exceeds retain=2: dropped
+        let s = p.stats();
+        assert_eq!(s.free, 2);
+        assert_eq!(s.outstanding, 0);
+        // Ballooned buffers are not retained.
+        let mut big = p.take();
+        big.resize(64 * 16, 0);
+        let cap = big.capacity();
+        assert!(cap > 64 * 8);
+        p.put(big);
+        assert!(p.stats().free <= 2);
+        let reused = p.take();
+        assert!(reused.capacity() < cap, "ballooned buffer must not come back");
+    }
+}

@@ -1,227 +1,177 @@
 //! TCP serving frontend: newline-JSON protocol over the coordinator.
 //!
-//! Thread-per-connection with a hard connection cap (embedded budget);
-//! each connection handles requests sequentially but the coordinator
-//! batches *across* connections — that cross-request coalescing is where
-//! serving throughput comes from (E7).
+//! Two connection planes behind one [`Server`] facade:
+//!
+//! - **event** (default): an epoll reactor — one acceptor plus a small
+//!   fixed IO thread set multiplexing thousands of non-blocking
+//!   connections, with per-connection request pipelining, pooled
+//!   buffers, write backpressure, and async worker completions
+//!   ([`reactor`]).  Thread count is independent of connection count.
+//! - **threads** (`--conn-plane threads`): the pre-reactor
+//!   thread-per-connection architecture, kept as the E13 ablation
+//!   baseline ([`threads`]).
+//!
+//! Either way the coordinator batches *across* connections — that
+//! cross-request coalescing is where serving throughput comes from
+//! (E7); the connection plane decides how many sockets can feed it.
 
 pub mod client;
+pub mod conn;
 pub mod protocol;
+pub mod reactor;
+pub mod sys;
+pub mod threads;
 
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, SubmitError};
-use crate::policy::Slo;
+use crate::config::{ConnPlane, ServerConfig};
+use crate::coordinator::Coordinator;
 use crate::tensor::image::Image;
 use crate::tensor::{PooledTensor, TensorPool};
 
-use protocol::{ClientMsg, ImageSpec};
+use protocol::ImageSpec;
 
-const MAX_CONNECTIONS: usize = 32;
+/// Connection-plane counters shared by both planes (a subset applies
+/// to each; the threads plane has no buffer pool or pause machinery).
+#[derive(Default)]
+pub struct ConnStats {
+    /// Currently-open connections.
+    pub connections: AtomicUsize,
+    /// Connections accepted over the server's lifetime.
+    pub accepted: AtomicU64,
+    /// Connections answered `at_capacity` and closed at the cap.
+    pub rejected_at_capacity: AtomicU64,
+    /// Requests rejected for exceeding `max_line_bytes`.
+    pub oversize_rejected: AtomicU64,
+    /// Times a connection's reads were paused because its write
+    /// backlog crossed the high watermark.
+    pub backpressure_events: AtomicU64,
+    /// Connections evicted by the idle timeout.
+    pub idle_evicted: AtomicU64,
+    /// Inference requests submitted and not yet answered (event plane).
+    pub in_flight: AtomicUsize,
+    /// Highest per-connection in-flight depth observed (pipelining).
+    pub peak_conn_in_flight: AtomicUsize,
+    /// Async completions delivered (event plane).
+    pub completions: AtomicU64,
+}
+
+impl ConnStats {
+    pub fn snapshot(
+        &self,
+        plane: &'static str,
+        io_threads: usize,
+        pool: conn::BufPoolStats,
+    ) -> ConnPlaneSnapshot {
+        ConnPlaneSnapshot {
+            plane,
+            io_threads,
+            connections: self.connections.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected_at_capacity: self.rejected_at_capacity.load(Ordering::Relaxed),
+            oversize_rejected: self.oversize_rejected.load(Ordering::Relaxed),
+            backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+            idle_evicted: self.idle_evicted.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            peak_conn_in_flight: self.peak_conn_in_flight.load(Ordering::Relaxed),
+            completions: self.completions.load(Ordering::Relaxed),
+            buffers_free: pool.free,
+            buffers_outstanding: pool.outstanding,
+        }
+    }
+}
+
+/// Point-in-time connection-plane state for `{"cmd":"stats"}`.
+#[derive(Debug, Clone, Copy)]
+pub struct ConnPlaneSnapshot {
+    pub plane: &'static str,
+    pub io_threads: usize,
+    pub connections: usize,
+    pub accepted: u64,
+    pub rejected_at_capacity: u64,
+    pub oversize_rejected: u64,
+    pub backpressure_events: u64,
+    pub idle_evicted: u64,
+    pub in_flight: usize,
+    pub peak_conn_in_flight: usize,
+    pub completions: u64,
+    pub buffers_free: usize,
+    pub buffers_outstanding: usize,
+}
+
+enum Plane {
+    Event(reactor::Reactor),
+    Threads(threads::ThreadsPlane),
+}
 
 /// Running server handle.
 pub struct Server {
     addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: std::thread::JoinHandle<()>,
+    plane: Plane,
 }
 
 impl Server {
-    /// Bind and serve on a background accept thread.
+    /// Bind and serve with default connection-plane settings (event
+    /// plane).  Kept source-compatible for tests and examples.
     pub fn start(coord: Arc<Coordinator>, listen: &str) -> Result<Server> {
-        let listener = TcpListener::bind(listen)
-            .with_context(|| format!("binding {listen}"))?;
+        Self::start_with(coord, listen, &ServerConfig::default())
+    }
+
+    /// Bind and serve with explicit connection-plane configuration.
+    pub fn start_with(
+        coord: Arc<Coordinator>,
+        listen: &str,
+        cfg: &ServerConfig,
+    ) -> Result<Server> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let conns = Arc::new(AtomicUsize::new(0));
-
-        let accept_thread = std::thread::Builder::new()
-            .name("zuluko-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, peer)) => {
-                            if conns.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
-                                crate::warn!("server", "rejecting {peer}: at connection cap");
-                                drop(stream);
-                                continue;
-                            }
-                            conns.fetch_add(1, Ordering::Relaxed);
-                            let coord = coord.clone();
-                            let conns = conns.clone();
-                            std::thread::spawn(move || {
-                                // Drop guard so the slot is released even if
-                                // the handler panics mid-connection.
-                                struct Slot(Arc<AtomicUsize>);
-                                impl Drop for Slot {
-                                    fn drop(&mut self) {
-                                        self.0.fetch_sub(1, Ordering::Relaxed);
-                                    }
-                                }
-                                let _slot = Slot(conns);
-                                let _ = handle_conn(stream, &coord);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(e) => {
-                            crate::error!("server", "accept: {e}");
-                            break;
-                        }
-                    }
-                }
-            })
-            .expect("spawn accept thread");
-
-        crate::info!("server", "listening on {addr}");
-        Ok(Server {
-            addr,
-            stop,
-            accept_thread,
-        })
+        let plane = match cfg.conn_plane {
+            ConnPlane::Event => {
+                Plane::Event(reactor::Reactor::start(coord, listener, cfg)?)
+            }
+            ConnPlane::Threads => {
+                Plane::Threads(threads::ThreadsPlane::start(coord, listener, cfg)?)
+            }
+        };
+        crate::info!("server", "listening on {addr} ({} plane)", cfg.conn_plane);
+        Ok(Server { addr, plane })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// Connection-plane counters (what `{"cmd":"stats"}` reports under
+    /// `"conn"`), exposed for tests and stress drivers.
+    pub fn conn_snapshot(&self) -> ConnPlaneSnapshot {
+        match &self.plane {
+            Plane::Event(r) => r.snapshot(),
+            Plane::Threads(t) => t.snapshot(),
+        }
+    }
+
     pub fn stop(self) {
-        self.stop.store(true, Ordering::Relaxed);
-        let _ = self.accept_thread.join();
-    }
-}
-
-fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match self.plane {
+            Plane::Event(r) => r.stop(),
+            Plane::Threads(t) => t.stop(),
         }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match protocol::parse_request(&line) {
-            Err(e) => {
-                protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}"))
-            }
-            Ok(ClientMsg::Ping) => "{\"ok\":true,\"pong\":true}".to_string(),
-            Ok(ClientMsg::Stats) => protocol::stats_line(&coord.stats()),
-            Ok(ClientMsg::Policy) => protocol::policy_line(&coord.policy_snapshot()),
-            Ok(ClientMsg::Models) => {
-                protocol::models_line(coord.default_model(), &coord.stats().models)
-            }
-            Ok(ClientMsg::Reload { model }) => match coord.reload(model.as_deref()) {
-                Ok(report) => protocol::reload_line(&report),
-                Err(e) => {
-                    protocol::error_line_kind(0, "reload_failed", &format!("{e:#}"))
-                }
-            },
-            Ok(ClientMsg::Infer {
-                id,
-                image,
-                slo,
-                model,
-            }) => infer_reply(coord, id, model.as_deref(), &image, slo),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
     }
-}
-
-/// One inference request end-to-end: resolve the model (structured
-/// reject on unknown names — never a default fallback), consult the
-/// per-model wire-key cache, decode into the model's arena, submit.
-///
-/// A hot reload can retire the resolved generation between resolve and
-/// route (`SubmitError::Closed`); the retry re-resolves and resubmits
-/// the **already-decoded pixels** (handed back by
-/// [`Coordinator::submit_on_reclaim`]) to the fresh generation —
-/// decode runs again only in the rare case where the reload changed
-/// the model's input size, so the swap stays invisible to the client
-/// without paying a second decode.
-fn infer_reply(
-    coord: &Coordinator,
-    id: u64,
-    model: Option<&str>,
-    image: &ImageSpec,
-    slo: Slo,
-) -> String {
-    const ATTEMPTS: usize = 2;
-    let mut decoded: Option<PooledTensor> = None;
-    for attempt in 0..ATTEMPTS {
-        let lease = match coord.lease(model) {
-            Ok(l) => l,
-            Err(e @ SubmitError::UnknownModel(_)) => {
-                return protocol::error_line_kind(id, "unknown_model", &e.to_string())
-            }
-            Err(e @ SubmitError::ModelUnavailable { .. }) => {
-                return protocol::error_line_kind(id, "model_unavailable", &e.to_string())
-            }
-            Err(e) => return protocol::error_line(id, &e.to_string()),
-        };
-        // Wire-key fast path: a repeat of the same raw image spec is
-        // answered from this model's response cache before any pixel is
-        // decoded.  Per-model caches make the key collision-free across
-        // models by construction.
-        let wire_key = protocol::wire_key(image);
-        if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
-            resp.id = id;
-            return protocol::response_line(&resp);
-        }
-        // Reuse the pixels reclaimed from a Closed first attempt when
-        // they still fit the (possibly re-sized) fresh generation.
-        let hw = lease.input_hw();
-        let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
-            Some(t) => t,
-            None => match load_image(image, hw, &lease.arena()) {
-                Err(e) => return protocol::error_line(id, &format!("image: {e}")),
-                Ok(t) => t,
-            },
-        };
-        return match coord.submit_on_reclaim(&lease, tensor, slo, wire_key) {
-            Err((SubmitError::Closed, img)) if attempt + 1 < ATTEMPTS => {
-                decoded = img;
-                continue;
-            }
-            Err((SubmitError::Overloaded, _)) => {
-                protocol::error_line_kind(id, "overloaded", "overloaded")
-            }
-            Err((
-                SubmitError::Shed {
-                    predicted_ms,
-                    deadline_ms,
-                },
-                _,
-            )) => protocol::shed_line(id, predicted_ms, deadline_ms),
-            Err((e, _)) => protocol::error_line(id, &e.to_string()),
-            Ok(rx) => match rx.recv() {
-                Ok(mut resp) => {
-                    resp.id = id; // echo client id, not internal id
-                    protocol::response_line(&resp)
-                }
-                Err(_) => protocol::error_line(id, "worker gone"),
-            },
-        };
-    }
-    protocol::error_line(id, "closed")
 }
 
 /// Decode straight into a pooled lease — steady-state decode allocates
 /// no pixel buffers (the synthetic/ppm byte staging still does; pixels
 /// are the hot part).  The lease comes from the *addressed model's*
 /// arena at that model's input size.
-fn load_image(spec: &ImageSpec, hw: usize, pool: &TensorPool) -> Result<PooledTensor> {
+pub(crate) fn load_image(
+    spec: &ImageSpec,
+    hw: usize,
+    pool: &TensorPool,
+) -> Result<PooledTensor> {
     let img = match spec {
         ImageSpec::Synthetic(seed) => Image::synthetic(hw, hw, *seed),
         ImageSpec::Ppm(path) => Image::load_ppm(std::path::Path::new(path))?,

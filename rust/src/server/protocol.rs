@@ -236,6 +236,38 @@ pub fn shed_line(id: u64, predicted_ms: f64, deadline_ms: f64) -> String {
 }
 
 pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
+    stats_obj(s).to_string()
+}
+
+/// Stats reply with the connection-plane section the serving planes
+/// attach: current connections, in-flight pipeline depth, buffer-pool
+/// occupancy, and backpressure/eviction counters.
+pub fn stats_line_with(
+    s: &crate::coordinator::StatsSnapshot,
+    conn: &super::ConnPlaneSnapshot,
+) -> String {
+    let mut o = stats_obj(s);
+    let mut c = Json::obj();
+    c.set("plane", conn.plane.into())
+        .set("io_threads", conn.io_threads.into())
+        .set("connections", conn.connections.into())
+        .set("accepted", conn.accepted.into())
+        .set("rejected_at_capacity", conn.rejected_at_capacity.into())
+        .set("oversize_rejected", conn.oversize_rejected.into())
+        .set("backpressure_events", conn.backpressure_events.into())
+        .set("idle_evicted", conn.idle_evicted.into())
+        .set("in_flight", conn.in_flight.into())
+        .set("peak_conn_in_flight", conn.peak_conn_in_flight.into())
+        .set("completions", conn.completions.into());
+    let mut bufs = Json::obj();
+    bufs.set("free", conn.buffers_free.into())
+        .set("outstanding", conn.buffers_outstanding.into());
+    c.set("buffers", bufs);
+    o.set("conn", c);
+    o.to_string()
+}
+
+fn stats_obj(s: &crate::coordinator::StatsSnapshot) -> Json {
     let (mean, p50, p95, p99, max) = s.latency_summary;
     let mut lat = Json::obj();
     lat.set("mean_ms", mean.into())
@@ -305,7 +337,7 @@ pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
                 .collect(),
         ),
     );
-    o.to_string()
+    o
 }
 
 fn model_stats_obj(m: &crate::coordinator::ModelStatsSnapshot) -> Json {

@@ -1,0 +1,761 @@
+//! Event-driven connection plane: one acceptor + a small fixed set of
+//! IO threads multiplexing thousands of non-blocking connections over
+//! epoll (DESIGN.md §"Connection plane").
+//!
+//! Ownership model:
+//! - The **acceptor** owns the listening socket.  It never blocks and
+//!   never exits on an accept error (see [`AcceptBackoff`]); beyond the
+//!   connection cap it answers a structured `at_capacity` line before
+//!   closing.  Accepted sockets are handed round-robin to an IO lane.
+//! - Each **IO thread** owns one epoll instance plus every connection
+//!   assigned to its lane: read buffers, write buffers, in-flight
+//!   counts.  No connection state is ever touched by two threads.
+//! - **Worker replies** never touch a socket: the coordinator's
+//!   [`ReplySink`] serializes the response on the worker thread and
+//!   pushes the finished line onto the owning lane's completion queue,
+//!   waking that lane's eventfd.  The IO thread writes it out on its
+//!   next turn — `(connection, request id)` in the [`CompletionToken`]
+//!   is the only routing state.
+//!
+//! Backpressure invariant: a connection whose write backlog crosses the
+//! high watermark stops being *read* until the backlog drains below
+//! high/4, so a client that pipelines requests but never drains replies
+//! bounds its own memory footprint instead of the server's.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServerConfig;
+use crate::coordinator::{
+    CompletionSink, CompletionToken, Coordinator, ReplySink, SubmitError,
+};
+use crate::policy::Slo;
+
+use super::conn::{drain_lines, AcceptBackoff, BufPool, WriteBuf};
+use super::protocol::{self, ClientMsg, ImageSpec};
+use super::sys::{
+    self, Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
+    EPOLLRDHUP,
+};
+use super::{ConnPlaneSnapshot, ConnStats};
+
+/// Lane index lives in the token's top bits so a completion can find
+/// its owning IO thread without a lookup table.
+const LANE_SHIFT: u32 = 40;
+/// Epoll token of a lane's wake eventfd (never a valid conn token:
+/// conn serials are masked below the lane bits).
+const TOKEN_WAKE: u64 = u64::MAX;
+/// Write backlog (bytes) beyond which a connection stops being read.
+const WBUF_HIGH: usize = 256 * 1024;
+/// Per-readiness-event read budget: chunks read before yielding to
+/// other connections on the same lane (fairness under a firehose).
+const READ_CHUNKS_PER_EVENT: usize = 16;
+
+/// A finished reply line routed back to a connection.
+struct Done {
+    conn: u64,
+    line: String,
+    /// Inference completions maintain the global in-flight gauge;
+    /// command completions (reload) only settle the connection.
+    infer: bool,
+}
+
+/// One IO thread's mailbox: new connections from the acceptor and
+/// finished reply lines from workers, both signalled on one eventfd.
+struct Lane {
+    inbox: Mutex<Vec<(u64, TcpStream)>>,
+    done: Mutex<Vec<Done>>,
+    wake: EventFd,
+}
+
+/// State shared by the acceptor, the IO threads, and — through
+/// [`CompletionSink`] — every in-flight request's reply path.
+pub(super) struct Shared {
+    stop: std::sync::atomic::AtomicBool,
+    stats: ConnStats,
+    pool: BufPool,
+    lanes: Vec<Lane>,
+    accept_wake: EventFd,
+    io_threads: usize,
+    max_connections: usize,
+    max_line_bytes: usize,
+    idle_timeout: Option<Duration>,
+}
+
+impl Shared {
+    fn lane_of(&self, conn: u64) -> &Lane {
+        &self.lanes[((conn >> LANE_SHIFT) as usize) % self.lanes.len()]
+    }
+
+    fn push_done(&self, conn: u64, line: String, infer: bool) {
+        let lane = self.lane_of(conn);
+        lane.done.lock().unwrap().push(Done { conn, line, infer });
+        lane.wake.signal();
+    }
+
+    pub(super) fn snapshot(&self) -> ConnPlaneSnapshot {
+        self.stats.snapshot("event", self.io_threads, self.pool.stats())
+    }
+}
+
+impl CompletionSink for Shared {
+    /// Runs on the completing thread (a runtime worker, or whoever
+    /// drops an undelivered request): serialize there, so the IO loop
+    /// only ever copies finished bytes.
+    fn complete(&self, token: CompletionToken, resp: crate::coordinator::Response) {
+        let mut resp = resp;
+        resp.id = token.request; // echo the client-assigned id
+        self.push_done(token.conn, protocol::response_line(&resp), true);
+    }
+}
+
+/// Running event plane: acceptor + IO threads, stopped via [`stop`].
+pub struct Reactor {
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Take ownership of an already-bound non-blocking listener and
+    /// start serving on `cfg.io_threads` IO lanes.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        listener: TcpListener,
+        cfg: &ServerConfig,
+    ) -> Result<Reactor> {
+        let io_threads = cfg.io_threads.max(1);
+        let mut lanes = Vec::with_capacity(io_threads);
+        for _ in 0..io_threads {
+            lanes.push(Lane {
+                inbox: Mutex::new(Vec::new()),
+                done: Mutex::new(Vec::new()),
+                wake: EventFd::new().context("creating lane eventfd")?,
+            });
+        }
+        let shared = Arc::new(Shared {
+            stop: std::sync::atomic::AtomicBool::new(false),
+            stats: ConnStats::default(),
+            // Two buffers per connection; retain enough for a busy
+            // churn cycle without pinning 10k conns' worth of memory.
+            pool: BufPool::new(256, 4096),
+            lanes,
+            accept_wake: EventFd::new().context("creating accept eventfd")?,
+            io_threads,
+            max_connections: cfg.max_connections,
+            max_line_bytes: cfg.max_line_bytes,
+            idle_timeout: match cfg.idle_timeout_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+        });
+
+        let mut threads = Vec::with_capacity(io_threads + 1);
+        for idx in 0..io_threads {
+            let shared = shared.clone();
+            let coord = coord.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("zuluko-io-{idx}"))
+                    .spawn(move || io_loop(idx, shared, coord))
+                    .context("spawning io thread")?,
+            );
+        }
+        let shared2 = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("zuluko-accept".into())
+                .spawn(move || accept_loop(shared2, listener))
+                .context("spawning accept thread")?,
+        );
+        Ok(Reactor { shared, threads })
+    }
+
+    pub fn snapshot(&self) -> ConnPlaneSnapshot {
+        self.shared.snapshot()
+    }
+
+    pub fn stop(self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.accept_wake.signal();
+        for lane in &self.shared.lanes {
+            lane.wake.signal();
+        }
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptor
+// ---------------------------------------------------------------------------
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    const T_LISTENER: u64 = 0;
+    const T_STOP: u64 = 1;
+    let epoll = match Epoll::new() {
+        Ok(e) => e,
+        Err(e) => {
+            crate::error!("server", "acceptor epoll: {e}");
+            return;
+        }
+    };
+    if epoll.add(listener.as_raw_fd(), EPOLLIN, T_LISTENER).is_err()
+        || epoll.add(shared.accept_wake.raw(), EPOLLIN, T_STOP).is_err()
+    {
+        crate::error!("server", "acceptor epoll registration failed");
+        return;
+    }
+    let mut backoff = AcceptBackoff::new();
+    let mut next_lane = 0usize;
+    let mut serial = 0u64;
+    let mut events = [EpollEvent::zeroed(); 8];
+    while !shared.stop.load(Ordering::Acquire) {
+        if epoll.wait(&mut events, 500).is_err() {
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        // Drain the accept queue; on error back off but NEVER exit —
+        // a listener that stops accepting is a silently half-dead
+        // server (the pre-reactor loop `break`ed here on EMFILE).
+        loop {
+            match sys::accept_nonblocking(listener.as_raw_fd()) {
+                Ok(Some(stream)) => {
+                    backoff.reset();
+                    admit(&shared, stream, &mut next_lane, &mut serial);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    let delay = backoff.next_delay();
+                    if AcceptBackoff::transient(&e) {
+                        crate::warn!(
+                            "server",
+                            "accept: {e} — backing off {delay:?}"
+                        );
+                    } else {
+                        crate::error!(
+                            "server",
+                            "accept: unexpected {e} — backing off {delay:?} and retrying"
+                        );
+                    }
+                    std::thread::sleep(delay);
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn admit(
+    shared: &Arc<Shared>,
+    mut stream: TcpStream,
+    next_lane: &mut usize,
+    serial: &mut u64,
+) {
+    if shared.stats.connections.load(Ordering::Relaxed) >= shared.max_connections {
+        shared
+            .stats
+            .rejected_at_capacity
+            .fetch_add(1, Ordering::Relaxed);
+        // Structured reject so a load generator can tell shed-at-socket
+        // from network failure.  Best effort: the socket is fresh and
+        // non-blocking, so one short write almost always fits.
+        let mut line = protocol::error_line_kind(
+            0,
+            "at_capacity",
+            "connection limit reached",
+        )
+        .into_bytes();
+        line.push(b'\n');
+        let _ = stream.write_all(&line);
+        return; // drop closes
+    }
+    shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+    shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+    *serial += 1;
+    let token =
+        ((*next_lane as u64) << LANE_SHIFT) | (*serial & ((1u64 << LANE_SHIFT) - 1));
+    let lane = &shared.lanes[*next_lane];
+    lane.inbox.lock().unwrap().push((token, stream));
+    lane.wake.signal();
+    *next_lane = (*next_lane + 1) % shared.lanes.len();
+}
+
+// ---------------------------------------------------------------------------
+// IO threads
+// ---------------------------------------------------------------------------
+
+/// Per-connection state, owned exclusively by one IO thread.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: WriteBuf,
+    /// Requests submitted on this connection whose reply line has not
+    /// yet been queued (inference in workers + commands in flight).
+    pending: usize,
+    last_activity: Instant,
+    /// Currently-registered epoll interest mask.
+    interest: u32,
+    read_paused: bool,
+    /// Half-closed or errored: flush what's owed, then close.
+    closing: bool,
+}
+
+fn io_loop(idx: usize, shared: Arc<Shared>, coord: Arc<Coordinator>) {
+    let epoll = match Epoll::new() {
+        Ok(e) => e,
+        Err(e) => {
+            crate::error!("server", "io-{idx} epoll: {e}");
+            return;
+        }
+    };
+    let lane = &shared.lanes[idx];
+    if epoll.add(lane.wake.raw(), EPOLLIN, TOKEN_WAKE).is_err() {
+        crate::error!("server", "io-{idx} wake registration failed");
+        return;
+    }
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut events = vec![EpollEvent::zeroed(); 512];
+    let mut last_sweep = Instant::now();
+    let timeout_ms = match shared.idle_timeout {
+        Some(d) => ((d.as_millis() / 4) as i32).clamp(10, 500),
+        None => 500,
+    };
+    loop {
+        let n = match epoll.wait(&mut events, timeout_ms) {
+            Ok(n) => n,
+            Err(e) => {
+                crate::error!("server", "io-{idx} epoll_wait: {e}");
+                break;
+            }
+        };
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        for ev in &events[..n] {
+            let (mask, token) = ev.parts();
+            if token == TOKEN_WAKE {
+                lane.wake.drain();
+                let fresh: Vec<_> = lane.inbox.lock().unwrap().drain(..).collect();
+                for (tok, stream) in fresh {
+                    register_conn(&epoll, &shared, &mut conns, tok, stream);
+                }
+                let done: Vec<Done> = lane.done.lock().unwrap().drain(..).collect();
+                for d in done {
+                    deliver(&epoll, &shared, &mut conns, d);
+                }
+            } else {
+                handle_event(&epoll, &shared, &coord, &mut conns, token, mask);
+            }
+        }
+        if let Some(idle) = shared.idle_timeout {
+            if last_sweep.elapsed() >= Duration::from_millis(timeout_ms as u64) {
+                sweep_idle(&epoll, &shared, &mut conns, idle);
+                last_sweep = Instant::now();
+            }
+        }
+    }
+    // Teardown: close everything this lane owns.
+    let tokens: Vec<u64> = conns.keys().copied().collect();
+    for t in tokens {
+        close_conn(&epoll, &shared, &mut conns, t);
+    }
+}
+
+fn register_conn(
+    epoll: &Epoll,
+    shared: &Arc<Shared>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+    stream: TcpStream,
+) {
+    stream.set_nodelay(true).ok();
+    let interest = EPOLLIN | EPOLLRDHUP;
+    if let Err(e) = epoll.add(stream.as_raw_fd(), interest, token) {
+        crate::warn!("server", "register conn: {e}");
+        shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+        return;
+    }
+    conns.insert(
+        token,
+        Conn {
+            stream,
+            rbuf: shared.pool.take(),
+            wbuf: WriteBuf::new(shared.pool.take(), WBUF_HIGH),
+            pending: 0,
+            last_activity: Instant::now(),
+            interest,
+            read_paused: false,
+            closing: false,
+        },
+    );
+}
+
+fn close_conn(
+    epoll: &Epoll,
+    shared: &Arc<Shared>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+) {
+    if let Some(mut c) = conns.remove(&token) {
+        let _ = epoll.del(c.stream.as_raw_fd());
+        // Discard unread input (bounded — the socket is non-blocking):
+        // closing with bytes still queued makes the kernel send RST,
+        // which can destroy reply lines (the oversize reject, a final
+        // response) still sitting in the client's receive queue.
+        let mut scratch = [0u8; 4096];
+        for _ in 0..64 {
+            match c.stream.read(&mut scratch) {
+                Ok(n) if n > 0 => continue,
+                _ => break,
+            }
+        }
+        shared.pool.put(c.rbuf);
+        shared.pool.put(c.wbuf.into_buf());
+        shared.stats.connections.fetch_sub(1, Ordering::Relaxed);
+        // In-flight replies addressed here are dropped on delivery;
+        // the ReplySink already fired, so nothing leaks.
+    }
+}
+
+/// Flush, reconcile epoll interest with buffer/pause state, and close
+/// if this connection is done.  The one place interest transitions
+/// happen, so the invariants stay in a single spot.
+fn settle(
+    epoll: &Epoll,
+    shared: &Arc<Shared>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+) {
+    let close_now = match conns.get_mut(&token) {
+        None => return,
+        Some(c) => {
+            if !c.wbuf.is_empty() && c.wbuf.flush(&mut c.stream).is_err() {
+                true
+            } else {
+                // Backpressure transitions (count each pause once).
+                if !c.read_paused && c.wbuf.over_high() {
+                    c.read_paused = true;
+                    shared
+                        .stats
+                        .backpressure_events
+                        .fetch_add(1, Ordering::Relaxed);
+                } else if c.read_paused && c.wbuf.under_low() {
+                    c.read_paused = false;
+                }
+                if c.closing && c.wbuf.is_empty() && c.pending == 0 {
+                    true
+                } else {
+                    let mut want = 0u32;
+                    if !c.read_paused && !c.closing {
+                        want |= EPOLLIN | EPOLLRDHUP;
+                    }
+                    if !c.wbuf.is_empty() {
+                        want |= EPOLLOUT;
+                    }
+                    if want != c.interest
+                        && epoll.modify(c.stream.as_raw_fd(), want, token).is_ok()
+                    {
+                        c.interest = want;
+                    }
+                    false
+                }
+            }
+        }
+    };
+    if close_now {
+        close_conn(epoll, shared, conns, token);
+    }
+}
+
+fn deliver(
+    epoll: &Epoll,
+    shared: &Arc<Shared>,
+    conns: &mut HashMap<u64, Conn>,
+    d: Done,
+) {
+    if d.infer {
+        shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+        shared.stats.completions.fetch_add(1, Ordering::Relaxed);
+    }
+    let Some(c) = conns.get_mut(&d.conn) else {
+        return; // connection closed while the request was in flight
+    };
+    c.pending = c.pending.saturating_sub(1);
+    c.last_activity = Instant::now();
+    c.wbuf.push_line(&d.line);
+    settle(epoll, shared, conns, d.conn);
+}
+
+fn handle_event(
+    epoll: &Epoll,
+    shared: &Arc<Shared>,
+    coord: &Arc<Coordinator>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+    mask: u32,
+) {
+    if !conns.contains_key(&token) {
+        return; // raced with a close earlier in this batch
+    }
+    if mask & (EPOLLERR | EPOLLHUP) != 0 {
+        close_conn(epoll, shared, conns, token);
+        return;
+    }
+    if mask & (EPOLLIN | EPOLLRDHUP) != 0 {
+        if !on_readable(shared, coord, conns, token) {
+            close_conn(epoll, shared, conns, token);
+            return;
+        }
+    }
+    settle(epoll, shared, conns, token);
+}
+
+/// Read and process everything currently available.  Returns false if
+/// the connection must be closed immediately (IO error).
+fn on_readable(
+    shared: &Arc<Shared>,
+    coord: &Arc<Coordinator>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+) -> bool {
+    let c = match conns.get_mut(&token) {
+        Some(c) => c,
+        None => return true,
+    };
+    if c.read_paused || c.closing {
+        return true;
+    }
+    let mut chunk = [0u8; 16 * 1024];
+    let mut got_bytes = false;
+    for _ in 0..READ_CHUNKS_PER_EVENT {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => {
+                // Client finished sending (EOF/half-close): answer what
+                // is owed, then close.
+                c.closing = true;
+                break;
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&chunk[..n]);
+                got_bytes = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if got_bytes {
+        c.last_activity = Instant::now();
+    }
+    let lines = match drain_lines(&mut c.rbuf, shared.max_line_bytes) {
+        Ok(lines) => lines,
+        Err(over) => {
+            shared
+                .stats
+                .oversize_rejected
+                .fetch_add(1, Ordering::Relaxed);
+            c.wbuf.push_line(&protocol::error_line_kind(
+                0,
+                "bad_request",
+                &format!(
+                    "request line exceeds {} bytes (got {}+)",
+                    shared.max_line_bytes, over.seen
+                ),
+            ));
+            c.closing = true;
+            c.rbuf.clear();
+            return true;
+        }
+    };
+    for line in lines {
+        process_line(shared, coord, conns, token, &line);
+        if !conns.contains_key(&token) {
+            return true; // closed mid-batch
+        }
+    }
+    true
+}
+
+/// Dispatch one request line.  Commands answer inline; inference and
+/// reload go async — the reply line arrives through the lane's
+/// completion queue, which is what lets one connection keep many
+/// requests in flight (pipelining).
+fn process_line(
+    shared: &Arc<Shared>,
+    coord: &Arc<Coordinator>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+    line: &str,
+) {
+    if line.trim().is_empty() {
+        return;
+    }
+    let parsed = protocol::parse_request(line);
+    let c = match conns.get_mut(&token) {
+        Some(c) => c,
+        None => return,
+    };
+    match parsed {
+        Err(e) => c.wbuf.push_line(&protocol::error_line_kind(
+            0,
+            "bad_request",
+            &format!("bad request: {e}"),
+        )),
+        Ok(ClientMsg::Ping) => c.wbuf.push_line("{\"ok\":true,\"pong\":true}"),
+        Ok(ClientMsg::Stats) => {
+            let line =
+                protocol::stats_line_with(&coord.stats(), &shared.snapshot());
+            c.wbuf.push_line(&line);
+        }
+        Ok(ClientMsg::Policy) => {
+            c.wbuf.push_line(&protocol::policy_line(&coord.policy_snapshot()))
+        }
+        Ok(ClientMsg::Models) => c.wbuf.push_line(&protocol::models_line(
+            coord.default_model(),
+            &coord.stats().models,
+        )),
+        Ok(ClientMsg::Reload { model }) => {
+            // Reload compiles engines — far too slow for the IO loop.
+            // Run it on its own thread and route the result through the
+            // completion queue like any other async reply.
+            c.pending += 1;
+            let coord = coord.clone();
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                let line = match coord.reload(model.as_deref()) {
+                    Ok(report) => protocol::reload_line(&report),
+                    Err(e) => protocol::error_line_kind(
+                        0,
+                        "reload_failed",
+                        &format!("{e:#}"),
+                    ),
+                };
+                shared.push_done(token, line, false);
+            });
+        }
+        Ok(ClientMsg::Infer {
+            id,
+            image,
+            slo,
+            model,
+        }) => match submit_infer(shared, coord, token, id, model.as_deref(), &image, slo)
+        {
+            Some(reply) => c.wbuf.push_line(&reply),
+            None => {
+                c.pending += 1;
+                shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .stats
+                    .peak_conn_in_flight
+                    .fetch_max(c.pending, Ordering::Relaxed);
+            }
+        },
+    }
+}
+
+/// Async twin of the threads-plane `infer_reply`: resolve, consult the
+/// wire-key cache, decode into the model's arena, submit with a
+/// completion sink.  `Some(line)` is an immediate reply (cache hit or
+/// structured reject — the sink was disarmed); `None` means the request
+/// is in flight and exactly one completion will follow.
+fn submit_infer(
+    shared: &Arc<Shared>,
+    coord: &Coordinator,
+    conn: u64,
+    id: u64,
+    model: Option<&str>,
+    image: &ImageSpec,
+    slo: Slo,
+) -> Option<String> {
+    const ATTEMPTS: usize = 2;
+    let mut decoded: Option<crate::tensor::PooledTensor> = None;
+    for attempt in 0..ATTEMPTS {
+        let lease = match coord.lease(model) {
+            Ok(l) => l,
+            Err(e @ SubmitError::UnknownModel(_)) => {
+                return Some(protocol::error_line_kind(
+                    id,
+                    "unknown_model",
+                    &e.to_string(),
+                ))
+            }
+            Err(e @ SubmitError::ModelUnavailable { .. }) => {
+                return Some(protocol::error_line_kind(
+                    id,
+                    "model_unavailable",
+                    &e.to_string(),
+                ))
+            }
+            Err(e) => return Some(protocol::error_line(id, &e.to_string())),
+        };
+        let wire_key = protocol::wire_key(image);
+        if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
+            resp.id = id;
+            return Some(protocol::response_line(&resp));
+        }
+        let hw = lease.input_hw();
+        let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
+            Some(t) => t,
+            None => match super::load_image(image, hw, &lease.arena()) {
+                Err(e) => return Some(protocol::error_line(id, &format!("image: {e}"))),
+                Ok(t) => t,
+            },
+        };
+        let sink = ReplySink::completion(
+            shared.clone() as Arc<dyn CompletionSink>,
+            CompletionToken { conn, request: id },
+        );
+        return match coord.submit_on_sink(&lease, tensor, slo, wire_key, sink) {
+            Ok(()) => None,
+            // Retired mid-swap: resubmit the already-decoded pixels to
+            // the fresh generation (the disarmed sink delivered
+            // nothing, so a fresh sink on attempt 2 is exactly-once).
+            Err((SubmitError::Closed, img)) if attempt + 1 < ATTEMPTS => {
+                decoded = img;
+                continue;
+            }
+            Err((SubmitError::Overloaded, _)) => {
+                Some(protocol::error_line_kind(id, "overloaded", "overloaded"))
+            }
+            Err((
+                SubmitError::Shed {
+                    predicted_ms,
+                    deadline_ms,
+                },
+                _,
+            )) => Some(protocol::shed_line(id, predicted_ms, deadline_ms)),
+            Err((e, _)) => Some(protocol::error_line(id, &e.to_string())),
+        };
+    }
+    Some(protocol::error_line(id, "closed"))
+}
+
+fn sweep_idle(
+    epoll: &Epoll,
+    shared: &Arc<Shared>,
+    conns: &mut HashMap<u64, Conn>,
+    idle: Duration,
+) {
+    let evict: Vec<u64> = conns
+        .iter()
+        .filter(|(_, c)| {
+            c.pending == 0 && c.wbuf.is_empty() && c.last_activity.elapsed() >= idle
+        })
+        .map(|(t, _)| *t)
+        .collect();
+    for token in evict {
+        shared.stats.idle_evicted.fetch_add(1, Ordering::Relaxed);
+        close_conn(epoll, shared, conns, token);
+    }
+}

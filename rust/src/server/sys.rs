@@ -1,0 +1,297 @@
+//! Raw Linux syscall surface for the event-driven connection plane.
+//!
+//! The offline/vendored build rules out the `libc`/`mio` crates, so the
+//! handful of readiness primitives the reactor needs — `epoll`,
+//! `eventfd`, `accept4`, `setrlimit` — are declared here directly
+//! against the C runtime std already links.  Everything is wrapped in
+//! small RAII types ([`Epoll`], [`EventFd`]) so the reactor itself
+//! contains no `unsafe`.
+//!
+//! Linux-only by design: the paper's target (and CI) is a Linux
+//! embedded board; there is no portability layer to maintain.
+
+use std::io;
+use std::net::TcpStream;
+use std::os::raw::{c_int, c_uint, c_void};
+use std::os::unix::io::{FromRawFd, RawFd};
+
+// -- epoll event masks (uapi/linux/eventpoll.h) -----------------------------
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+const SOCK_NONBLOCK: c_int = 0o4000;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+
+const RLIMIT_NOFILE: c_int = 7;
+
+/// Kernel epoll event record.  x86-64 packs it to match the 32-bit
+/// layout (the one ABI quirk of epoll); every other arch uses natural
+/// alignment.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+
+    /// Copy out of a possibly-packed struct (direct field reads of a
+    /// packed struct are UB-adjacent on references; go through a copy).
+    pub fn parts(&self) -> (u32, u64) {
+        let e = *self;
+        (e.events, e.data)
+    }
+}
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout_ms: c_int,
+    ) -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn accept4(
+        sockfd: c_int,
+        addr: *mut c_void,
+        addrlen: *mut u32,
+        flags: c_int,
+    ) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+}
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// An epoll instance (closed on drop).
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent {
+            events,
+            data: token,
+        };
+        cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) }).map(|_| ())
+    }
+
+    /// Register `fd` with interest `events`; readiness reports carry
+    /// `token` back in [`EpollEvent::data`].
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Replace `fd`'s interest set (token may change too).
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    pub fn del(&self, fd: RawFd) -> io::Result<()> {
+        // The event argument is ignored for DEL on modern kernels but
+        // must be non-null on pre-2.6.9 ones; pass one unconditionally.
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness, filling `events`.  Returns the number of
+    /// ready entries; a signal interruption reads as zero events.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        let n = unsafe {
+            epoll_wait(
+                self.fd,
+                events.as_mut_ptr(),
+                events.len() as c_int,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(n as usize)
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+/// A non-blocking eventfd: the reactor's cross-thread doorbell.
+/// `signal()` from any thread makes the owning epoll loop's `wait`
+/// return; the loop then `drain()`s it back to zero.
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(EventFd { fd })
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Ring the doorbell (best effort: a full counter already wakes).
+    pub fn signal(&self) {
+        let one: u64 = 1;
+        unsafe { write(self.fd, (&one as *const u64).cast(), 8) };
+    }
+
+    /// Reset the counter so the next `signal` re-arms readiness.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        unsafe { read(self.fd, (&mut buf as *mut u64).cast(), 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// Doorbell fds cross threads by design; they carry no thread-local state.
+unsafe impl Send for EventFd {}
+unsafe impl Sync for EventFd {}
+
+/// One non-blocking `accept4` on a listening socket.
+/// `Ok(Some)` hands back an already-non-blocking stream, `Ok(None)`
+/// means no pending connection (EAGAIN), `Err` is a real accept error
+/// for the caller's backoff policy.
+pub fn accept_nonblocking(listener_fd: RawFd) -> io::Result<Option<TcpStream>> {
+    let fd = unsafe {
+        accept4(
+            listener_fd,
+            std::ptr::null_mut(),
+            std::ptr::null_mut(),
+            SOCK_NONBLOCK | SOCK_CLOEXEC,
+        )
+    };
+    if fd >= 0 {
+        return Ok(Some(unsafe { TcpStream::from_raw_fd(fd) }));
+    }
+    let e = io::Error::last_os_error();
+    if e.kind() == io::ErrorKind::WouldBlock {
+        return Ok(None);
+    }
+    Err(e)
+}
+
+/// Raise the process fd soft limit toward `want` (clamped at the hard
+/// limit).  Returns the effective soft limit.  Needed by the E13
+/// stress driver: thousands of sockets blow through the default 1024.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) })?;
+    if lim.cur >= want {
+        return Ok(lim.cur);
+    }
+    let new = Rlimit {
+        cur: want.min(lim.max),
+        max: lim.max,
+    };
+    cvt(unsafe { setrlimit(RLIMIT_NOFILE, &new) })?;
+    Ok(new.cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_signal_wakes_epoll_and_drain_rearms() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), EPOLLIN, 42).unwrap();
+
+        let mut out = [EpollEvent::zeroed(); 4];
+        // Nothing signalled: zero-timeout wait sees nothing.
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+
+        ev.signal();
+        let n = ep.wait(&mut out, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (events, token) = out[0].parts();
+        assert_eq!(token, 42);
+        assert!(events & EPOLLIN != 0);
+
+        // Level-triggered: still readable until drained.
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 1);
+        ev.drain();
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn epoll_tracks_interest_modification() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), EPOLLIN, 1).unwrap();
+        ev.signal();
+        let mut out = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 1);
+        // Drop read interest: readiness stops being reported.
+        ep.modify(ev.raw(), 0, 1).unwrap();
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+        // Restore it: the level-triggered readable state comes back.
+        ep.modify(ev.raw(), EPOLLIN, 7).unwrap();
+        let n = ep.wait(&mut out, 0).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(out[0].parts().1, 7);
+        ep.del(ev.raw()).unwrap();
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable_and_monotone() {
+        let cur = raise_nofile_limit(0).unwrap();
+        assert!(cur > 0);
+        // Raising toward the current value is a no-op, never an error.
+        assert!(raise_nofile_limit(cur).unwrap() >= cur);
+    }
+}

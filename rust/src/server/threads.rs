@@ -1,0 +1,323 @@
+//! Thread-per-connection fallback plane (`--conn-plane threads`).
+//!
+//! Kept as the E13 ablation baseline: identical protocol and
+//! coordinator path as the event plane, but one OS thread per
+//! connection and a blocking `recv()` per request — the architecture
+//! the reactor replaced.  The satellite fixes land here too (accept
+//! backoff instead of a fatal break, bounded request lines, structured
+//! `at_capacity` rejects), so the ablation measures the *connection
+//! plane* and not unrelated bug fixes.
+
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::config::ServerConfig;
+use crate::coordinator::{Coordinator, SubmitError};
+use crate::policy::Slo;
+use crate::tensor::PooledTensor;
+
+use super::conn::AcceptBackoff;
+use super::protocol::{self, ClientMsg, ImageSpec};
+use super::{ConnPlaneSnapshot, ConnStats};
+
+/// Running thread-per-connection plane.
+pub struct ThreadsPlane {
+    stats: Arc<ConnStats>,
+    stop: Arc<AtomicBool>,
+    accept_thread: std::thread::JoinHandle<()>,
+}
+
+impl ThreadsPlane {
+    pub fn start(
+        coord: Arc<Coordinator>,
+        listener: TcpListener,
+        cfg: &ServerConfig,
+    ) -> Result<ThreadsPlane> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ConnStats::default());
+        let max_connections = cfg.max_connections;
+        let max_line_bytes = cfg.max_line_bytes;
+        let (stop2, stats2) = (stop.clone(), stats.clone());
+
+        let accept_thread = std::thread::Builder::new()
+            .name("zuluko-accept".into())
+            .spawn(move || {
+                let mut backoff = AcceptBackoff::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, peer)) => {
+                            backoff.reset();
+                            if stats2.connections.load(Ordering::Relaxed)
+                                >= max_connections
+                            {
+                                stats2
+                                    .rejected_at_capacity
+                                    .fetch_add(1, Ordering::Relaxed);
+                                crate::warn!(
+                                    "server",
+                                    "rejecting {peer}: at connection cap"
+                                );
+                                // Structured reject, not a silent drop.
+                                let mut line = protocol::error_line_kind(
+                                    0,
+                                    "at_capacity",
+                                    "connection limit reached",
+                                )
+                                .into_bytes();
+                                line.push(b'\n');
+                                let _ = stream.write_all(&line);
+                                continue;
+                            }
+                            stats2.connections.fetch_add(1, Ordering::Relaxed);
+                            stats2.accepted.fetch_add(1, Ordering::Relaxed);
+                            let coord = coord.clone();
+                            let stats3 = stats2.clone();
+                            std::thread::spawn(move || {
+                                // Drop guard so the slot is released even
+                                // if the handler panics mid-connection.
+                                struct Slot(Arc<ConnStats>);
+                                impl Drop for Slot {
+                                    fn drop(&mut self) {
+                                        self.0
+                                            .connections
+                                            .fetch_sub(1, Ordering::Relaxed);
+                                    }
+                                }
+                                let _slot = Slot(stats3.clone());
+                                let _ = handle_conn(
+                                    stream,
+                                    &coord,
+                                    &stats3,
+                                    max_line_bytes,
+                                );
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            // Transient fd pressure (EMFILE & friends) or
+                            // anything else: log, back off, keep accepting.
+                            // The old loop `break`ed here, permanently
+                            // killing the listener.
+                            let delay = backoff.next_delay();
+                            if AcceptBackoff::transient(&e) {
+                                crate::warn!(
+                                    "server",
+                                    "accept: {e} — backing off {delay:?}"
+                                );
+                            } else {
+                                crate::error!(
+                                    "server",
+                                    "accept: unexpected {e} — backing off {delay:?} and retrying"
+                                );
+                            }
+                            std::thread::sleep(delay);
+                        }
+                    }
+                }
+            })
+            .context("spawning accept thread")?;
+
+        Ok(ThreadsPlane {
+            stats,
+            stop,
+            accept_thread,
+        })
+    }
+
+    pub fn snapshot(&self) -> ConnPlaneSnapshot {
+        self.stats
+            .snapshot("threads", 0, super::conn::BufPoolStats::default())
+    }
+
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.accept_thread.join();
+    }
+}
+
+enum LineRead {
+    Line,
+    Eof,
+    Oversize,
+}
+
+/// `read_line` with a byte budget: a client streaming bytes without a
+/// newline gets cut off at `max + 1` instead of growing the buffer
+/// without bound (the OOM-DoS the unbounded version allowed).
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let n = reader
+        .by_ref()
+        .take(max as u64 + 1)
+        .read_until(b'\n', buf)?;
+    if n == 0 {
+        return Ok(LineRead::Eof);
+    }
+    if buf.last() != Some(&b'\n') && buf.len() > max {
+        return Ok(LineRead::Oversize);
+    }
+    Ok(LineRead::Line)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stats: &ConnStats,
+    max_line_bytes: usize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut raw = Vec::new();
+    loop {
+        let line = match read_bounded_line(&mut reader, &mut raw, max_line_bytes)? {
+            LineRead::Eof => return Ok(()), // client closed
+            LineRead::Oversize => {
+                stats.oversize_rejected.fetch_add(1, Ordering::Relaxed);
+                let reply = protocol::error_line_kind(
+                    0,
+                    "bad_request",
+                    &format!("request line exceeds {max_line_bytes} bytes"),
+                );
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+                // Discard what the client already sent (briefly, bounded)
+                // before closing: close-with-unread-data sends RST, which
+                // can destroy the reject line still in the client's
+                // receive queue.
+                let _ = reader
+                    .get_ref()
+                    .set_read_timeout(Some(std::time::Duration::from_millis(100)));
+                let mut scratch = [0u8; 4096];
+                for _ in 0..256 {
+                    match reader.read(&mut scratch) {
+                        Ok(n) if n > 0 => continue,
+                        _ => break,
+                    }
+                }
+                return Ok(()); // close: the rest of the stream is garbage
+            }
+            LineRead::Line => String::from_utf8_lossy(&raw).into_owned(),
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match protocol::parse_request(&line) {
+            Err(e) => {
+                protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}"))
+            }
+            Ok(ClientMsg::Ping) => "{\"ok\":true,\"pong\":true}".to_string(),
+            Ok(ClientMsg::Stats) => protocol::stats_line_with(
+                &coord.stats(),
+                &stats.snapshot("threads", 0, super::conn::BufPoolStats::default()),
+            ),
+            Ok(ClientMsg::Policy) => protocol::policy_line(&coord.policy_snapshot()),
+            Ok(ClientMsg::Models) => {
+                protocol::models_line(coord.default_model(), &coord.stats().models)
+            }
+            Ok(ClientMsg::Reload { model }) => match coord.reload(model.as_deref()) {
+                Ok(report) => protocol::reload_line(&report),
+                Err(e) => {
+                    protocol::error_line_kind(0, "reload_failed", &format!("{e:#}"))
+                }
+            },
+            Ok(ClientMsg::Infer {
+                id,
+                image,
+                slo,
+                model,
+            }) => infer_reply(coord, id, model.as_deref(), &image, slo),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+/// One inference request end-to-end, blocking this connection's thread
+/// on the reply channel (the behavior the event plane's completion
+/// queue replaces).  Resolve the model (structured reject on unknown
+/// names — never a default fallback), consult the per-model wire-key
+/// cache, decode into the model's arena, submit.
+///
+/// A hot reload can retire the resolved generation between resolve and
+/// route (`SubmitError::Closed`); the retry re-resolves and resubmits
+/// the **already-decoded pixels** (handed back by
+/// [`Coordinator::submit_on_reclaim`]) to the fresh generation —
+/// decode runs again only in the rare case where the reload changed
+/// the model's input size, so the swap stays invisible to the client
+/// without paying a second decode.
+fn infer_reply(
+    coord: &Coordinator,
+    id: u64,
+    model: Option<&str>,
+    image: &ImageSpec,
+    slo: Slo,
+) -> String {
+    const ATTEMPTS: usize = 2;
+    let mut decoded: Option<PooledTensor> = None;
+    for attempt in 0..ATTEMPTS {
+        let lease = match coord.lease(model) {
+            Ok(l) => l,
+            Err(e @ SubmitError::UnknownModel(_)) => {
+                return protocol::error_line_kind(id, "unknown_model", &e.to_string())
+            }
+            Err(e @ SubmitError::ModelUnavailable { .. }) => {
+                return protocol::error_line_kind(id, "model_unavailable", &e.to_string())
+            }
+            Err(e) => return protocol::error_line(id, &e.to_string()),
+        };
+        // Wire-key fast path: a repeat of the same raw image spec is
+        // answered from this model's response cache before any pixel is
+        // decoded.  Per-model caches make the key collision-free across
+        // models by construction.
+        let wire_key = protocol::wire_key(image);
+        if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
+            resp.id = id;
+            return protocol::response_line(&resp);
+        }
+        // Reuse the pixels reclaimed from a Closed first attempt when
+        // they still fit the (possibly re-sized) fresh generation.
+        let hw = lease.input_hw();
+        let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
+            Some(t) => t,
+            None => match super::load_image(image, hw, &lease.arena()) {
+                Err(e) => return protocol::error_line(id, &format!("image: {e}")),
+                Ok(t) => t,
+            },
+        };
+        return match coord.submit_on_reclaim(&lease, tensor, slo, wire_key) {
+            Err((SubmitError::Closed, img)) if attempt + 1 < ATTEMPTS => {
+                decoded = img;
+                continue;
+            }
+            Err((SubmitError::Overloaded, _)) => {
+                protocol::error_line_kind(id, "overloaded", "overloaded")
+            }
+            Err((
+                SubmitError::Shed {
+                    predicted_ms,
+                    deadline_ms,
+                },
+                _,
+            )) => protocol::shed_line(id, predicted_ms, deadline_ms),
+            Err((e, _)) => protocol::error_line(id, &e.to_string()),
+            Ok(rx) => match rx.recv() {
+                Ok(mut resp) => {
+                    resp.id = id; // echo client id, not internal id
+                    protocol::response_line(&resp)
+                }
+                Err(_) => protocol::error_line(id, "worker gone"),
+            },
+        };
+    }
+    protocol::error_line(id, "closed")
+}

@@ -92,6 +92,6 @@ pub fn dummy_request(id: u64, deadline_ms: Option<f64>) -> Request {
         },
         cache_key: None,
         wire_key: None,
-        reply: tx,
+        reply: crate::coordinator::ReplySink::channel(tx),
     }
 }

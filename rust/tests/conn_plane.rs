@@ -1,0 +1,441 @@
+//! Connection-plane invariants (DESIGN.md §"Connection plane"), over
+//! the sim engine — no artifacts needed, so these run everywhere
+//! including CI:
+//!
+//! * one connection can pipeline many requests and every one is
+//!   answered exactly once with its own id and its own answer;
+//! * a client that floods requests but never drains replies trips
+//!   write backpressure (reads pause, its memory footprint is bounded)
+//!   without starving other connections, and recovers once it drains;
+//! * idle connections are evicted by the idle timeout;
+//! * the connection cap answers a structured `at_capacity` line and
+//!   the slot is reusable after a close;
+//! * an oversize request line is a structured `bad_request` + close on
+//!   both planes (the threads plane must hold the same contract — it
+//!   is the E13 ablation baseline, not a second protocol);
+//! * the event plane's thread count is independent of connection
+//!   count (the whole point of the reactor).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zuluko::config::{Config, ConnPlane, ServerConfig};
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::sim::expected_top1;
+use zuluko::engine::EngineKind;
+use zuluko::server::client::Client;
+use zuluko::server::Server;
+use zuluko::tensor::image::Image;
+use zuluko::testkit::sched::threads_named;
+use zuluko::util::json::Json;
+
+const HW: usize = 64;
+const CLASSES: usize = 100;
+const MODEL: &str = "m";
+
+/// A fresh synthetic-model artifacts dir, unique per test.
+fn model_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("zuluko_conn_plane_{tag}_{}", std::process::id()));
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    dir
+}
+
+/// One sim model behind a small shared runtime.
+fn sim_cfg(tag: &str) -> Config {
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(5),
+        queue_capacity: 64,
+        ..Config::default()
+    };
+    cfg.registry.upsert(MODEL, model_dir(tag));
+    cfg.registry.default_model = Some(MODEL.to_string());
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn start(tag: &str, server: ServerConfig) -> (Server, Arc<Coordinator>) {
+    let mut cfg = sim_cfg(tag);
+    cfg.server = server;
+    cfg.validate().unwrap();
+    let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+    let s = Server::start_with(coord.clone(), "127.0.0.1:0", &cfg.server).unwrap();
+    (s, coord)
+}
+
+/// Exactly the pixels the server decodes for `{"synthetic": seed}`.
+fn frame_pixels(seed: u64) -> Vec<f32> {
+    let img = Image::synthetic(HW, HW, seed);
+    let mut buf = vec![0.0f32; HW * HW * 3];
+    img.to_input_into(&mut buf);
+    buf
+}
+
+/// Tear down server + coordinator: wait for server threads to release
+/// their Arc clones, then shutdown.
+fn stop_all(server: Server, mut coord: Arc<Coordinator>) {
+    server.stop();
+    let coord = loop {
+        match Arc::try_unwrap(coord) {
+            Ok(c) => break c,
+            Err(arc) => {
+                coord = arc;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    coord.shutdown();
+}
+
+fn wait_until(timeout: Duration, mut ok: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    ok()
+}
+
+#[test]
+fn pipelined_requests_all_answered_exactly_once() {
+    let (server, coord) = start("pipeline", ServerConfig::default());
+    let addr = server.addr();
+
+    const N: u64 = 32;
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+
+    // Write every request before reading a single reply: this only
+    // completes if the server keeps reading and answering out of a
+    // completion queue instead of one blocking recv per request.
+    let mut burst = String::new();
+    for id in 0..N {
+        burst.push_str(&format!(
+            "{{\"id\":{id},\"image\":{{\"synthetic\":{}}}}}\n",
+            1000 + id
+        ));
+    }
+    w.write_all(burst.as_bytes()).unwrap();
+
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..N {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "early EOF");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.get("ok").and_then(|v| v.as_bool()),
+            Some(true),
+            "got: {line}"
+        );
+        let id = j.usize_of("id").unwrap() as u64;
+        // Each reply carries its own request's answer (sim's top1 is a
+        // pure function of the pixels): replies never cross requests.
+        assert_eq!(
+            j.usize_of("top1").unwrap(),
+            expected_top1(MODEL, &frame_pixels(1000 + id), CLASSES),
+            "reply {id} carries another request's result"
+        );
+        assert!(seen.insert(id), "id {id} answered twice");
+    }
+    assert_eq!(seen.len(), N as usize);
+
+    let snap = server.conn_snapshot();
+    assert_eq!(snap.completions, N, "every request went through the sink");
+    assert!(
+        snap.peak_conn_in_flight >= 2,
+        "burst of {N} never overlapped in flight (peak {})",
+        snap.peak_conn_in_flight
+    );
+
+    // The stats line reports the connection plane.
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let stats = c.stats().unwrap();
+    let conn = stats.get("conn").expect("stats line has a conn section");
+    assert_eq!(conn.get("plane").and_then(|v| v.as_str()), Some("event"));
+    assert!(conn.usize_of("accepted").unwrap() >= 2);
+
+    drop((reader, w, c));
+    stop_all(server, coord);
+}
+
+#[test]
+fn slow_reader_hits_backpressure_without_starving_others() {
+    let (server, coord) = start("backpressure", ServerConfig::default());
+    let addr = server.addr();
+
+    // Flood stats requests (each reply is ~1 KB) and read nothing: the
+    // replies must pile into this connection's write buffer until the
+    // high watermark pauses its reads.  Sized so total reply bytes far
+    // exceed what the kernel's socket buffers could silently absorb.
+    const N: usize = 12_000;
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let burst = "{\"cmd\":\"stats\"}\n".repeat(N);
+    w.write_all(burst.as_bytes()).unwrap();
+
+    assert!(
+        wait_until(Duration::from_secs(20), || {
+            server.conn_snapshot().backpressure_events >= 1
+        }),
+        "flooded connection never tripped backpressure: {:?}",
+        server.conn_snapshot()
+    );
+
+    // A second connection stays responsive while the first is parked.
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    assert!(c.ping().unwrap());
+    let r = c.infer_synthetic(1, 99).unwrap();
+    assert!(r.ok, "other connection starved: {:?}", r.error);
+
+    // Drain the flood: every reply arrives (nothing was dropped under
+    // pressure), and the connection reads again afterwards.
+    for i in 0..N {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "reply {i}/{N} missing"
+        );
+        assert!(line.contains("\"ok\":true"), "reply {i}: {line}");
+    }
+    w.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "reads never resumed after drain");
+
+    drop((reader, w, c));
+    stop_all(server, coord);
+}
+
+#[test]
+fn idle_timeout_evicts_quiet_connections() {
+    let (server, coord) = start(
+        "idle",
+        ServerConfig {
+            idle_timeout_ms: 200,
+            ..ServerConfig::default()
+        },
+    );
+
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+
+    // Prove the connection is live, then go quiet.
+    w.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"));
+
+    // The server must close us: read returns EOF, not a timeout.
+    line.clear();
+    let n = reader.read_line(&mut line).expect("expected EOF, got error");
+    assert_eq!(n, 0, "expected eviction, got: {line}");
+    assert!(server.conn_snapshot().idle_evicted >= 1);
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            server.conn_snapshot().connections == 0
+        }),
+        "evicted connection still counted"
+    );
+
+    drop((reader, w));
+    stop_all(server, coord);
+}
+
+#[test]
+fn connection_cap_is_a_structured_reject_and_slots_recycle() {
+    let (server, coord) = start(
+        "cap",
+        ServerConfig {
+            max_connections: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let addr = server.addr().to_string();
+
+    let mut c1 = Client::connect(&addr).unwrap();
+    let mut c2 = Client::connect(&addr).unwrap();
+    assert!(c1.ping().unwrap());
+    assert!(c2.ping().unwrap());
+
+    // Third connection: structured at_capacity line, then close — a
+    // load generator can tell shed-at-socket from network failure.
+    let over = TcpStream::connect(server.addr()).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(over);
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(
+        j.get("kind").and_then(|v| v.as_str()),
+        Some("at_capacity"),
+        "got: {line}"
+    );
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "must close after reject");
+    assert!(server.conn_snapshot().rejected_at_capacity >= 1);
+
+    // Close one admitted connection; its slot must become reusable.
+    drop(c1);
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            server.conn_snapshot().connections <= 1
+        }),
+        "closed connection never released its slot"
+    );
+    let mut c3 = Client::connect(&addr).unwrap();
+    assert!(c3.ping().unwrap(), "freed slot not reusable");
+
+    drop((c2, c3, reader));
+    stop_all(server, coord);
+}
+
+/// Oversize contract shared by both planes: structured `bad_request`
+/// naming the limit, then close — never an unbounded buffer, never a
+/// silent drop.
+fn assert_oversize_contract(addr: &str, max_line_bytes: usize) {
+    // A complete line over the limit.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let mut big = vec![b'a'; max_line_bytes + 64];
+    big.push(b'\n');
+    w.write_all(&big).unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0);
+    assert!(line.contains("bad_request"), "got: {line}");
+    assert!(line.contains("exceeds"), "got: {line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "must close");
+
+    // A newline-less stream past the limit: the reject must fire
+    // without waiting for a terminator that never comes.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    w.write_all(&vec![b'b'; max_line_bytes + 1]).unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "no reject line");
+    assert!(line.contains("bad_request"), "got: {line}");
+}
+
+#[test]
+fn oversize_line_rejected_event_plane() {
+    let max = 512;
+    let (server, coord) = start(
+        "oversize_event",
+        ServerConfig {
+            max_line_bytes: max,
+            ..ServerConfig::default()
+        },
+    );
+    assert_oversize_contract(&server.addr().to_string(), max);
+    assert!(server.conn_snapshot().oversize_rejected >= 2);
+    stop_all(server, coord);
+}
+
+#[test]
+fn threads_plane_holds_the_same_wire_contract() {
+    // The E13 ablation baseline must behave identically at the protocol
+    // level: same replies, same structured rejects — so an A/B run
+    // measures the connection plane, not accidental behavior drift.
+    let max = 512;
+    let (server, coord) = start(
+        "oversize_threads",
+        ServerConfig {
+            conn_plane: ConnPlane::Threads,
+            max_line_bytes: max,
+            ..ServerConfig::default()
+        },
+    );
+    let addr = server.addr().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.ping().unwrap());
+    let r = c.infer_synthetic(5, 77).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.top1, expected_top1(MODEL, &frame_pixels(77), CLASSES));
+    let stats = c.stats().unwrap();
+    let conn = stats.get("conn").expect("threads plane reports conn too");
+    assert_eq!(conn.get("plane").and_then(|v| v.as_str()), Some("threads"));
+
+    assert_oversize_contract(&addr, max);
+    assert!(server.conn_snapshot().oversize_rejected >= 2);
+
+    drop(c);
+    stop_all(server, coord);
+}
+
+#[test]
+fn event_plane_thread_count_independent_of_connections() {
+    let (server, coord) = start(
+        "fleet",
+        ServerConfig {
+            io_threads: 2,
+            max_connections: 512,
+            ..ServerConfig::default()
+        },
+    );
+    let addr = server.addr();
+
+    // Hold 200 concurrent connections, each serving a round-trip.
+    const CONNS: usize = 200;
+    let mut held = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        w.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "conn {i} lost");
+        assert!(line.contains("pong"), "conn {i}: {line}");
+        held.push((reader, w));
+    }
+    assert_eq!(server.conn_snapshot().connections, CONNS);
+
+    // Thread count stays a small constant — not one per connection.
+    // (Other tests in this process run their own 2-thread reactors
+    // concurrently, so bound rather than demand exact equality; 200
+    // thread-per-conn handlers would blow far past this.)
+    let io = threads_named("zuluko-io-");
+    assert!(io >= 2, "our 2 io threads must exist (saw {io})");
+    assert!(
+        io < CONNS / 4,
+        "io thread count grew with connections ({io} for {CONNS} conns)"
+    );
+    assert!(threads_named("zuluko-accept") >= 1);
+
+    drop(held);
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            server.conn_snapshot().connections == 0
+        }),
+        "connections not released on close: {}",
+        server.conn_snapshot().connections
+    );
+    stop_all(server, coord);
+}

@@ -1,0 +1,53 @@
+#!/usr/bin/env sh
+# Seed tools/bench_baseline.json from a CI bench artifact.
+#
+# The perf-regression gate (tools/bench_gate.rs, `make bench-gate`)
+# compares each run's trajectory against the committed baseline.  The
+# baseline must come from a CI runner measurement — never hand-write
+# numbers, and never commit one measured on a noisy dev laptop, or the
+# gate compares apples to oranges and either flaps or goes blind.
+#
+# Usage:
+#   tools/seed_baseline.sh <run-id>   # pull the bench-baseline-seed
+#                                     # artifact from that CI run
+#   tools/seed_baseline.sh            # latest run on the current branch
+#
+# Requires the GitHub CLI (`gh`) authenticated against the repo.
+# After running, review the diff and commit tools/bench_baseline.json.
+
+set -eu
+
+cd "$(dirname "$0")/.."
+
+if ! command -v gh >/dev/null 2>&1; then
+    echo "error: this helper needs the GitHub CLI (gh)" >&2
+    exit 1
+fi
+
+RUN_ID="${1:-}"
+if [ -z "$RUN_ID" ]; then
+    BRANCH="$(git rev-parse --abbrev-ref HEAD)"
+    RUN_ID="$(gh run list --workflow ci --branch "$BRANCH" \
+        --status success --limit 1 --json databaseId \
+        --jq '.[0].databaseId' || true)"
+    if [ -z "$RUN_ID" ] || [ "$RUN_ID" = "null" ]; then
+        echo "error: no successful ci run found on branch '$BRANCH'" >&2
+        exit 1
+    fi
+fi
+
+echo "downloading bench-baseline-seed from run $RUN_ID ..."
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+gh run download "$RUN_ID" --name bench-baseline-seed --dir "$TMP"
+
+# The artifact contains bench_baseline.json (see .github/workflows/ci.yml).
+SEED="$(find "$TMP" -name '*.json' | head -n 1)"
+if [ -z "$SEED" ]; then
+    echo "error: artifact from run $RUN_ID holds no json" >&2
+    exit 1
+fi
+cp "$SEED" tools/bench_baseline.json
+echo "wrote tools/bench_baseline.json from CI run $RUN_ID:"
+head -n 5 tools/bench_baseline.json
+echo "... review and commit it to make the gate enforcing across PRs."

@@ -19,23 +19,29 @@ test-python:
 test-rust:
 	cd rust && cargo test -q
 
-# Perf trajectory: run the simulation benches (no artifacts needed) and
-# emit $(BENCH_OUT) (allocs/request, bytes/request, throughput, p50/p99).
-# Parameterized so each PR's trajectory file is explicit — the old
-# hardcoded name silently clobbered earlier trajectories.
-BENCH_OUT ?= BENCH_5.json
+# Perf trajectory: run the simulation benches (no artifacts needed).
+# $(BENCH_OUT) is this PR's headline trajectory (E14 tracing overhead,
+# self-gating at <=5% p99 / <=5% allocs per request); $(GATE_OUT) is the
+# hot-path alloc trajectory the cross-PR regression gate compares
+# against tools/bench_baseline.json.  Parameterized so each PR's
+# trajectory file is explicit — a hardcoded name would silently clobber
+# earlier trajectories.
+BENCH_OUT ?= BENCH_7.json
+GATE_OUT ?= bench_hot_path.json
 bench-json:
-	cd rust && cargo bench --bench hot_path_alloc -- --json ../$(BENCH_OUT)
+	cd rust && cargo bench --bench trace_overhead -- --json ../$(BENCH_OUT)
+	cd rust && cargo bench --bench hot_path_alloc -- --json ../$(GATE_OUT)
 	cd rust && cargo bench --bench policy_slo -- --quick
 
 # One-iteration smoke of the simulation benches (CI).
 bench-smoke:
+	cd rust && cargo bench --bench trace_overhead -- --quick
 	cd rust && cargo bench --bench hot_path_alloc -- --quick
 	cd rust && cargo bench --bench policy_slo -- --quick
 
 # Seed/refresh the committed perf baseline (run on a quiet machine).
 bench-baseline:
-	$(MAKE) bench-json BENCH_OUT=tools/bench_baseline.json
+	$(MAKE) bench-json GATE_OUT=tools/bench_baseline.json
 
 # CI perf-regression gate: fail if the current trajectory regresses
 # >20% vs the committed baseline.  GATE_FLAGS passes extra flags
@@ -44,7 +50,7 @@ bench-baseline:
 GATE_FLAGS ?=
 bench-gate:
 	cd rust && cargo run --release --bin bench_gate -- \
-		../tools/bench_baseline.json ../$(BENCH_OUT) $(GATE_FLAGS)
+		../tools/bench_baseline.json ../$(GATE_OUT) $(GATE_FLAGS)
 
 # E12 local repro: skewed 3-model traffic against the sim engine on the
 # shared worker runtime (asserts fixed thread count, zero losses, and

@@ -1,0 +1,164 @@
+//! Observability plane demo (DESIGN.md §10) — request-lifecycle tracing
+//! and the unified metrics export, end-to-end over TCP on the sim
+//! engine (no artifacts needed):
+//!
+//! 1. serve a burst with `--trace-sample-rate 1.0`: every request's
+//!    eight-stage timeline is retained in the lock-free trace rings;
+//! 2. `{"cmd":"metrics"}` returns one line merging every subsystem —
+//!    per-stage latency histograms, trace counters, conn plane, process
+//!    health (`"proc"` from /proc);
+//! 3. `{"cmd":"trace","n":K}` returns the last K timelines with
+//!    ms-offset marks and classification flags;
+//! 4. an impossible deadline is shed at admission and lands in the
+//!    always-capture slow log with a `shed_predicted` flag — anomalies
+//!    are retained even when sampling would have dropped them.
+//!
+//! ```bash
+//! cargo run --release --example obs_demo
+//! ```
+
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+use zuluko::config::Config;
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::EngineKind;
+use zuluko::obs::STAGE_NAMES;
+use zuluko::server::client::Client;
+use zuluko::server::Server;
+use zuluko::util::json::Json;
+
+const MODEL: &str = "demo";
+const HW: usize = 64;
+
+fn print_span(span: &Json) {
+    let Some(marks) = span.get("marks") else {
+        return;
+    };
+    let flags = span
+        .get("flags")
+        .and_then(|v| v.as_arr())
+        .map(|fs| {
+            fs.iter()
+                .filter_map(|f| f.as_str())
+                .collect::<Vec<_>>()
+                .join(",")
+        })
+        .unwrap_or_default();
+    let timeline = STAGE_NAMES
+        .iter()
+        .filter_map(|name| marks.f64_of(name).ok().map(|v| format!("{name}@{v:.3}")))
+        .collect::<Vec<_>>()
+        .join(" → ");
+    println!(
+        "  id={} total={:.3}ms [{}]\n    {}",
+        span.usize_of("id").unwrap_or(0),
+        span.f64_of("total_ms").unwrap_or(0.0),
+        flags,
+        timeline
+    );
+}
+
+fn main() -> Result<()> {
+    // A synthetic sim model: runnable on any machine, CI included.
+    let dir = std::env::temp_dir().join(format!("zuluko_obs_demo_{}", std::process::id()));
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, 100, HW, &[1, 2, 4])?;
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: 2,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        queue_capacity: 64,
+        ..Config::default()
+    };
+    cfg.registry.upsert(MODEL, dir);
+    cfg.registry.default_model = Some(MODEL.to_string());
+    // Retain every timeline for the demo (production default is 0.01),
+    // and enable the response cache so a repeat frame shows a
+    // `cache_hit` timeline.
+    cfg.obs.trace_sample_rate = 1.0;
+    cfg.policy.cache_capacity = 64;
+    cfg.validate()?;
+
+    println!(
+        "== observability demo (sample rate {}, ring {}, slow log {}) ==",
+        cfg.obs.trace_sample_rate, cfg.obs.trace_ring, cfg.obs.slow_log
+    );
+    let coord = Arc::new(Coordinator::start(&cfg)?);
+    let server = Server::start_with(coord.clone(), "127.0.0.1:0", &cfg.server)?;
+    let mut c = Client::connect(&server.addr().to_string())?;
+
+    // 1. A traced burst (distinct frames), plus one repeat for a
+    //    cache-hit timeline.
+    const N: u64 = 24;
+    for i in 0..N {
+        let r = c.infer_synthetic(i, 9000 + i)?;
+        anyhow::ensure!(r.ok, "request {i} failed: {:?}", r.error);
+    }
+    let hit = c.infer_synthetic(N, 9000)?;
+    anyhow::ensure!(hit.ok && hit.cached, "repeat frame should hit the cache");
+
+    // 2. An impossible deadline: shed at admission, always captured.
+    let shed = c.infer_synthetic_slo(N + 1, 31337, Some(0.05), None)?;
+    anyhow::ensure!(!shed.ok, "a 50µs deadline should be shed");
+    println!(
+        "\nshed request -> kind={:?} ({})",
+        shed.kind,
+        shed.error.as_deref().unwrap_or("")
+    );
+
+    // 3. The unified metrics line.
+    let m = c.metrics()?;
+    println!("\n{{\"cmd\":\"metrics\"}} ->");
+    if let Some(stages) = m.get("stages").and_then(|v| v.as_arr()) {
+        println!("| stage | count | p50 ms | p99 ms |");
+        println!("|---|---|---|---|");
+        for row in stages {
+            println!(
+                "| {} | {} | {:.3} | {:.3} |",
+                row.str_of("stage").unwrap_or("?"),
+                row.usize_of("count").unwrap_or(0),
+                row.f64_of("p50_ms").unwrap_or(0.0),
+                row.f64_of("p99_ms").unwrap_or(0.0),
+            );
+        }
+    }
+    if let Some(t) = m.get("trace") {
+        println!(
+            "trace: begun={} completed={} recorded={} anomalies={} \
+             flush_mean={:.3}ms",
+            t.usize_of("begun").unwrap_or(0),
+            t.usize_of("completed").unwrap_or(0),
+            t.usize_of("recorded").unwrap_or(0),
+            t.usize_of("anomalies").unwrap_or(0),
+            t.f64_of("flush_mean_ms").unwrap_or(0.0),
+        );
+    }
+    if let Some(p) = m.get("proc") {
+        println!(
+            "proc: rss={:.1}MB cpu={:.2}s uptime={:.1}s fds={}",
+            p.f64_of("rss_mb").unwrap_or(0.0),
+            p.f64_of("cpu_s").unwrap_or(0.0),
+            p.f64_of("uptime_s").unwrap_or(0.0),
+            p.usize_of("open_fds").unwrap_or(0),
+        );
+    }
+
+    // 4. Retained timelines + the anomaly slow log.
+    let tr = c.trace(3)?;
+    println!("\n{{\"cmd\":\"trace\",\"n\":3}} -> last timelines:");
+    for span in tr.get("traces").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        print_span(span);
+    }
+    println!("slow log (always-captured anomalies):");
+    let slow = tr.get("slow").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    anyhow::ensure!(!slow.is_empty(), "the shed request must be in the slow log");
+    for span in slow {
+        print_span(span);
+    }
+
+    println!("\ntracing, metrics merge, and anomaly capture all round-tripped.");
+    server.stop();
+    Ok(())
+}

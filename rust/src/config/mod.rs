@@ -260,6 +260,31 @@ impl Default for ServerConfig {
     }
 }
 
+/// Observability knobs (DESIGN.md §10): request-lifecycle tracing and
+/// the unified metrics plane.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Head-sampling rate in [0, 1]: the fraction of requests whose
+    /// span timeline is recorded into the trace rings.  0 keeps tracing
+    /// compiled in but records nothing; anomalies (shed, deadline
+    /// missed, slowest tail) are always captured regardless.
+    pub trace_sample_rate: f64,
+    /// Capacity of each per-worker/per-IO-lane trace ring, in spans.
+    pub trace_ring: usize,
+    /// Capacity of the always-capture anomaly slow log, in spans.
+    pub slow_log: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace_sample_rate: 0.01,
+            trace_ring: 1024,
+            slow_log: 256,
+        }
+    }
+}
+
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -299,6 +324,8 @@ pub struct Config {
     pub registry: RegistryConfig,
     /// Connection-plane knobs for `zuluko serve`.
     pub server: ServerConfig,
+    /// Request-lifecycle tracing knobs.
+    pub obs: ObsConfig,
 }
 
 impl Default for Config {
@@ -319,6 +346,7 @@ impl Default for Config {
             pool: PoolConfig::default(),
             registry: RegistryConfig::default(),
             server: ServerConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -410,6 +438,18 @@ impl Config {
             }
             if let Some(v) = s.get("idle_timeout_ms").and_then(|v| v.as_usize()) {
                 self.server.idle_timeout_ms = v as u64;
+            }
+        }
+        // Tracing knobs live under a nested "obs" object.
+        if let Some(o) = j.get("obs") {
+            if let Some(v) = o.get("trace_sample_rate").and_then(|v| v.as_f64()) {
+                self.obs.trace_sample_rate = v;
+            }
+            if let Some(v) = o.get("trace_ring").and_then(|v| v.as_usize()) {
+                self.obs.trace_ring = v;
+            }
+            if let Some(v) = o.get("slow_log").and_then(|v| v.as_usize()) {
+                self.obs.slow_log = v;
             }
         }
         // Registry knobs live under a nested "registry" object with the
@@ -516,6 +556,16 @@ impl Config {
         self.server.idle_timeout_ms = a
             .get_usize("idle-timeout-ms", self.server.idle_timeout_ms as usize)
             .map_err(anyhow::Error::msg)? as u64;
+        // Tracing.
+        self.obs.trace_sample_rate = a
+            .get_f64("trace-sample-rate", self.obs.trace_sample_rate)
+            .map_err(anyhow::Error::msg)?;
+        self.obs.trace_ring = a
+            .get_usize("trace-ring", self.obs.trace_ring)
+            .map_err(anyhow::Error::msg)?;
+        self.obs.slow_log = a
+            .get_usize("slow-log", self.obs.slow_log)
+            .map_err(anyhow::Error::msg)?;
         // Registry: `--models index.json` loads a whole index, then
         // repeated `--model name=path` flags add/override entries.
         if let Some(p) = a.get("models") {
@@ -620,6 +670,18 @@ impl Config {
                 self.server.max_line_bytes
             );
         }
+        if !(0.0..=1.0).contains(&self.obs.trace_sample_rate) {
+            bail!(
+                "trace_sample_rate must be in [0, 1], got {}",
+                self.obs.trace_sample_rate
+            );
+        }
+        if self.obs.trace_ring == 0 {
+            bail!("trace_ring must be >= 1 (use trace_sample_rate 0 to disable)");
+        }
+        if self.obs.slow_log == 0 {
+            bail!("slow_log must be >= 1");
+        }
         if self.policy.adaptive {
             if self.policy.quant_workers == 0 {
                 bail!("quant_workers must be >= 1 when adaptive");
@@ -711,6 +773,9 @@ impl Config {
         "max-connections",
         "max-line-bytes",
         "idle-timeout-ms",
+        "trace-sample-rate",
+        "trace-ring",
+        "slow-log",
     ];
 }
 
@@ -1127,6 +1192,54 @@ mod tests {
         let mut c = Config::default();
         c.server.idle_timeout_ms = 0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn obs_knobs_from_json_and_cli() {
+        let j = Json::parse(
+            r#"{"obs":{"trace_sample_rate":0.5,"trace_ring":64,"slow_log":16}}"#,
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.obs.trace_sample_rate, 0.5);
+        assert_eq!(c.obs.trace_ring, 64);
+        assert_eq!(c.obs.slow_log, 16);
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            [
+                "serve",
+                "--trace-sample-rate",
+                "0",
+                "--trace-ring",
+                "32",
+                "--slow-log",
+                "8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.obs.trace_sample_rate, 0.0);
+        assert_eq!(c.obs.trace_ring, 32);
+        assert_eq!(c.obs.slow_log, 8);
+
+        // Rates outside [0, 1] and zero-capacity rings fail validation.
+        let mut c = Config::default();
+        c.obs.trace_sample_rate = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.obs.trace_sample_rate = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.obs.trace_ring = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.obs.slow_log = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

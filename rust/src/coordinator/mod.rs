@@ -57,6 +57,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::metrics::Histogram;
+use crate::obs::{ObsCounters, ObsHub, Span, StageRow, STAGES};
 use crate::policy::{CachedResult, ModelPolicySnapshot, PolicySnapshot, Slo};
 use crate::registry::{GenerationLease, ModelRegistry, ReloadReport};
 use crate::tensor::{PoolStats, PooledTensor, Tensor, TensorPool};
@@ -80,6 +81,10 @@ pub struct Request {
     /// `cache_key` so repeat requests skip decode entirely.
     pub wire_key: Option<u64>,
     pub reply: ReplySink,
+    /// Lifecycle timeline (DESIGN.md §10): stage marks stamped as the
+    /// request crosses the planes, carried inline so stamping never
+    /// locks or allocates.
+    pub span: Span,
 }
 
 /// Routing key for an async completion: which connection to wake and
@@ -214,6 +219,10 @@ pub struct Response {
     /// Machine-matchable error class ("error", "shed"; "" when ok).
     pub kind: &'static str,
     pub error: Option<String>,
+    /// The request's lifecycle timeline, carried back so the connection
+    /// plane can stamp `reply_flushed` and hand the finished span to
+    /// the hub.  `None` on pre-admission errors (nothing was traced).
+    pub span: Option<Span>,
 }
 
 impl Response {
@@ -232,6 +241,7 @@ impl Response {
             cached: false,
             kind: "error",
             error: Some(msg.to_string()),
+            span: None,
         }
     }
 
@@ -260,6 +270,7 @@ impl Response {
             cached: true,
             kind: "",
             error: None,
+            span: None,
         }
     }
 
@@ -337,7 +348,7 @@ pub struct ModelStatsSnapshot {
 }
 
 /// Live stats snapshot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
     pub completed: u64,
     pub rejected: u64,
@@ -362,6 +373,29 @@ pub struct StatsSnapshot {
     pub queues: Vec<QueueDepthRow>,
 }
 
+/// Per-model stage-latency rows in a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct ModelStageRows {
+    pub model: String,
+    pub stages: Vec<StageRow>,
+}
+
+/// The `{"cmd":"metrics"}` payload: every subsystem's counters in one
+/// snapshot — the full [`StatsSnapshot`] (scheduler queues, workers,
+/// caches, pools, shed counters) plus the per-stage latency breakdown
+/// (merged across models via [`Histogram::merge`], and per model) and
+/// the tracing hub's own counters.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub stats: StatsSnapshot,
+    /// Stage-latency rows merged across every loaded model.
+    pub stages: Vec<StageRow>,
+    /// Per-model stage-latency rows, in registry order.
+    pub model_stages: Vec<ModelStageRows>,
+    /// Tracing-plane counters (sampling, rings, anomalies).
+    pub obs: ObsCounters,
+}
+
 /// The running serving system: the shared worker runtime plus a model
 /// registry fronted by one submit surface.  Single-model deployments
 /// see exactly the pre-registry behavior (one implicit model named
@@ -382,7 +416,18 @@ impl Coordinator {
     /// front.  Model count never changes the thread count: generations
     /// only register queues.
     pub fn start(cfg: &Config) -> Result<Coordinator> {
-        let stats = Arc::new(SharedStats::default());
+        let stats = Arc::new(SharedStats {
+            // One trace ring per runtime worker plus one per IO lane:
+            // every completion path writes to "its" ring without
+            // contending with the others.
+            obs: Arc::new(ObsHub::new(
+                cfg.obs.trace_sample_rate,
+                cfg.obs.trace_ring,
+                cfg.obs.slow_log,
+                cfg.workers + cfg.server.io_threads,
+            )),
+            ..SharedStats::default()
+        });
         // A queued deadline due within ~2 batch windows preempts fair
         // share — late enough that batching still coalesces, early
         // enough that the EDF override fires before expiry.
@@ -551,8 +596,41 @@ impl Coordinator {
         wire_key: Option<u64>,
         reply: ReplySink,
     ) -> Result<(), (SubmitError, Option<PooledTensor>)> {
+        let span = self.stats.obs.begin();
+        self.submit_on_sink_traced(lease, image, slo, wire_key, reply, span)
+    }
+
+    /// [`Coordinator::submit_on_sink`] with a caller-begun [`Span`] —
+    /// the server planes stamp `accepted`/`parsed` at the socket before
+    /// submitting, so the timeline covers the connection plane too.
+    pub fn submit_on_sink_traced(
+        &self,
+        lease: &GenerationLease,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+        reply: ReplySink,
+        span: Span,
+    ) -> Result<(), (SubmitError, Option<PooledTensor>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        lease.submit_sink_reclaim(id, image, slo, wire_key, reply)
+        lease.submit_sink_traced(id, image, slo, wire_key, reply, span)
+    }
+
+    /// [`Coordinator::submit_on_reclaim`] with a caller-begun [`Span`]
+    /// (the threads plane's traced path).
+    pub fn submit_on_reclaim_traced(
+        &self,
+        lease: &GenerationLease,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+        span: Span,
+    ) -> Result<mpsc::Receiver<Response>, (SubmitError, Option<PooledTensor>)> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        lease
+            .submit_sink_traced(id, image, slo, wire_key, ReplySink::channel(tx), span)
+            .map(|()| rx)
     }
 
     /// Response-cache lookup by an externally computed key on the
@@ -702,6 +780,45 @@ impl Coordinator {
     /// Latency histogram clone (bench reporting).
     pub fn latency_histogram(&self) -> Histogram {
         self.stats.latency.lock().unwrap().clone()
+    }
+
+    /// The tracing hub (span epoch, rings, slow log) — the server
+    /// planes begin and complete spans through this.
+    pub fn obs(&self) -> &Arc<ObsHub> {
+        &self.stats.obs
+    }
+
+    /// The unified metrics snapshot behind `{"cmd":"metrics"}`: the
+    /// full stats snapshot plus per-stage latency histograms (merged
+    /// across loaded models via [`Histogram::merge`]) and tracing
+    /// counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let stats = self.stats();
+        let mut merged: Vec<Histogram> =
+            (0..STAGES).map(|_| Histogram::with_cap(4096)).collect();
+        let mut model_stages = Vec::new();
+        for entry in self.registry.entries() {
+            if !entry.loaded() {
+                continue;
+            }
+            let Ok(g) = self.registry.resolve(Some(entry.name())) else {
+                continue;
+            };
+            let hists = g.stage_histograms();
+            for (acc, h) in merged.iter_mut().zip(hists.iter()) {
+                acc.merge(h);
+            }
+            model_stages.push(ModelStageRows {
+                model: entry.name().to_string(),
+                stages: crate::obs::rows_of(&hists),
+            });
+        }
+        MetricsSnapshot {
+            stats,
+            stages: crate::obs::rows_of(&merged),
+            model_stages,
+            obs: self.stats.obs.counters(),
+        }
     }
 
     /// Graceful shutdown: retire every generation (close + drain its

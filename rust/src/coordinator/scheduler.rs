@@ -89,6 +89,10 @@ pub struct ExecCtx {
     pub ctx: Arc<PolicyCtx>,
     /// Per-model counters (survive reloads).
     pub counters: Arc<ModelCounters>,
+    /// Per-generation stage-latency histograms (DESIGN.md §10): workers
+    /// record each served batch's span deltas here; `{"cmd":"metrics"}`
+    /// merges them across models.
+    pub stage_hist: Arc<crate::obs::StageHist>,
 }
 
 /// One schedulable (model, generation, engine) queue.

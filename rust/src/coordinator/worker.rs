@@ -36,8 +36,10 @@ use std::time::{Duration, Instant};
 use crate::engine::{self, Engine};
 use crate::metrics::ledger::Ledger;
 use crate::metrics::Histogram;
+use crate::obs::{flag, ObsHub, Stage};
 use crate::policy::{CachedResult, Urgency};
 use crate::tensor::TensorView;
+use crate::util::log::{suppressed_note, SHED_LOG};
 
 use super::scheduler::{
     replica_bytes, InflightGuard, Pick, ReplicaCache, Scheduler, WorkSource,
@@ -86,6 +88,10 @@ pub struct SharedStats {
     pub images: AtomicU64,
     pub latency: Mutex<Histogram>,
     pub batch_sizes: Mutex<Histogram>,
+    /// The tracing hub (DESIGN.md §10).  Lives here so the admission
+    /// path, the workers, and the server planes — which all already
+    /// share these stats — stamp spans against one epoch.
+    pub obs: Arc<ObsHub>,
 }
 
 /// Everything one runtime worker thread needs.
@@ -226,7 +232,7 @@ fn serve_one(
     } else {
         source.policy.timeout
     };
-    let Some(reqs) = source.policy.form_adaptive(
+    let Some(mut reqs) = source.policy.form_adaptive(
         queue,
         FIRST_POP_WAIT,
         window,
@@ -236,6 +242,11 @@ fn serve_one(
         return (0, 0, Duration::ZERO); // raced empty, or closed + drained
     };
     let busy_from = Instant::now();
+    let hub = &w.stats.obs;
+    let dequeued_ns = hub.now_ns();
+    for r in &mut reqs {
+        r.span.set(Stage::Dequeued, dequeued_ns);
+    }
     // The batcher's shrink-to-supported-size may have pushed leftovers
     // back to the queue front without passing the scheduler's submit
     // path — wake idle workers so a (possibly deadlined) leftover never
@@ -249,19 +260,34 @@ fn serve_one(
     let (expired, live): (Vec<Request>, Vec<Request>) = reqs
         .into_iter()
         .partition(|r| r.slo.expired(r.submitted, now));
-    for r in &expired {
+    let n_expired = expired.len();
+    for mut r in expired {
         exec.ctx.shed_expired.fetch_add(1, Ordering::Relaxed);
+        r.span.flags |= flag::SHED_EXPIRED;
         let mut resp = Response::shed_expired(r.id, DEADLINE_ERROR);
         resp.model = model.clone();
+        resp.span = Some(r.span);
         r.reply.send(resp);
     }
+    if n_expired > 0 {
+        // Token-bucket limited: a saturated queue sheds in bulk, and an
+        // unthrottled warn per batch would make the logger part of the
+        // overload.
+        if let Some(sup) = SHED_LOG.allow() {
+            crate::warn!(
+                "worker",
+                "shed {n_expired} expired request(s) on '{model}'{}",
+                suppressed_note(sup)
+            );
+        }
+    }
     if live.is_empty() {
-        w.scheduler.charge(&source.key, expired.len().max(1));
+        w.scheduler.charge(&source.key, n_expired.max(1));
         return (0, 0, busy_from.elapsed());
     }
     // Shedding may leave a batch size without an artifact; re-split and
     // return the tail to the queue front.
-    let (live, leftover) = source.policy.split(live);
+    let (mut live, leftover) = source.policy.split(live);
     if !leftover.is_empty() {
         queue.push_front_bulk(leftover);
         // The leftovers bypassed the scheduler's submit path — wake
@@ -271,6 +297,10 @@ fn serve_one(
     }
 
     let formed_at = Instant::now();
+    let formed_ns = hub.now_ns();
+    for r in &mut live {
+        r.span.set(Stage::BatchFormed, formed_ns);
+    }
     let bsize = live.len();
     let per = live[0].image.len();
     let row_shape = live[0].image.shape().to_vec();
@@ -300,10 +330,16 @@ fn serve_one(
             return (0, 0, busy_from.elapsed());
         }
     };
+    let infer_start_ns = hub.now_ns();
     let t0 = Instant::now();
     let out = eng.infer_view(TensorView::new(&bshape, &bbuf));
     let exec_ms = crate::util::ms(t0.elapsed());
+    let infer_done_ns = hub.now_ns();
     drop(bbuf); // back to the arena before reply fan-out
+    for r in &mut live {
+        r.span.set(Stage::InferStart, infer_start_ns);
+        r.span.set(Stage::InferDone, infer_done_ns);
+    }
 
     let mut served = (0u64, 0u64);
     match out {
@@ -311,6 +347,9 @@ fn serve_one(
             served = (1, bsize as u64);
             exec.ctx.predictor.record(source.key.engine, bsize, exec_ms);
             w.stats.batch_sizes.lock().unwrap().record_ms(bsize as f64);
+            // Per-model stage attribution: one lock for the whole batch,
+            // off the per-request path (DESIGN.md §10).
+            exec.stage_hist.record_batch(live.iter().map(|r| r.span));
             let pv = probs.view();
             for (slot, req) in live.into_iter().enumerate() {
                 // Borrowed output row: argmax/top-5 read the batch
@@ -346,6 +385,7 @@ fn serve_one(
                     cached: false,
                     kind: "",
                     error: None,
+                    span: Some(req.span),
                 });
                 w.stats.completed.fetch_add(1, Ordering::Relaxed);
                 w.stats.images.fetch_add(1, Ordering::Relaxed);
@@ -372,6 +412,7 @@ fn fail_batch(model: &Arc<str>, reqs: &[Request], msg: &str) {
     for r in reqs {
         let mut resp = Response::error(r.id, msg);
         resp.model = model.clone();
+        resp.span = Some(r.span);
         r.reply.send(resp);
     }
 }

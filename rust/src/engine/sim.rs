@@ -32,6 +32,13 @@ use crate::tensor::{Tensor, TensorView};
 /// requests genuinely in flight, short enough that tests stay fast.
 pub const SIM_EXEC_PER_IMAGE: Duration = Duration::from_micros(300);
 
+/// Env override for the per-image busy-wait, read at replica build time
+/// (`SimEngine::new`), in microseconds.  Tests that need a *slow*
+/// engine (e.g. forcing a deadline miss after admission predicted a
+/// fast one — see `tests/obs_e2e.rs`) set this after warmup so only
+/// replicas built from that point on are inflated.
+pub const SIM_EXEC_ENV: &str = "ZULUKO_SIM_EXEC_US";
+
 /// The class the sim engine assigns to `pixels` when served under
 /// `model` — the oracle tests compare replies against.
 pub fn expected_top1(model: &str, pixels: &[f32], num_classes: usize) -> usize {
@@ -44,11 +51,17 @@ pub struct SimEngine {
     num_classes: usize,
     input_hw: usize,
     batch_sizes: Vec<usize>,
+    exec_per_image: Duration,
     ledger: Ledger,
 }
 
 impl SimEngine {
     pub fn new(manifest: &Manifest) -> Result<SimEngine> {
+        let exec_per_image = std::env::var(SIM_EXEC_ENV)
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_micros)
+            .unwrap_or(SIM_EXEC_PER_IMAGE);
         Ok(SimEngine {
             model: manifest.model.clone(),
             num_classes: manifest.num_classes.max(1),
@@ -58,6 +71,7 @@ impl SimEngine {
             } else {
                 manifest.batch_sizes.clone()
             },
+            exec_per_image,
             ledger: Ledger::new(),
         })
     }
@@ -101,7 +115,7 @@ impl super::Engine for SimEngine {
             // Busy-wait the simulated compute (sleep granularity on CI
             // runners is too coarse for a 300µs budget).
             let t0 = Instant::now();
-            while t0.elapsed() < SIM_EXEC_PER_IMAGE {
+            while t0.elapsed() < self.exec_per_image {
                 std::hint::spin_loop();
             }
         }

@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod policy;
 pub mod registry;
 pub mod runtime;

@@ -138,6 +138,64 @@ pub fn num_cpus() -> usize {
         .unwrap_or(1)
 }
 
+/// One-shot process snapshot for the `"proc"` stats section: point-in-
+/// time RSS, cumulative CPU seconds (user+system, all cores), process
+/// uptime, and open file descriptors.  Unlike [`Sysmon`] this needs no
+/// window — it is cheap enough to serve inline on a `{"cmd":"stats"}`
+/// request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProcSnapshot {
+    pub rss_mb: f64,
+    /// Cumulative CPU time consumed by the process, in seconds.
+    pub cpu_s: f64,
+    /// Seconds since the process started.
+    pub uptime_s: f64,
+    /// Open file descriptors (connections + artifacts + pipes).
+    pub open_fds: usize,
+}
+
+fn read_proc_uptime_s() -> Result<f64> {
+    // /proc/self/stat field 21 (0-based, post-comm field 19) is
+    // starttime in jiffies since boot; system uptime comes from
+    // /proc/uptime.  Difference = process uptime.
+    let text = std::fs::read_to_string("/proc/self/stat")?;
+    let rest = text
+        .rsplit_once(')')
+        .map(|(_, r)| r)
+        .context("malformed /proc/self/stat")?;
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let start_jiffies: f64 = fields.get(19).context("starttime")?.parse()?;
+    let boot_s: f64 = std::fs::read_to_string("/proc/uptime")?
+        .split_whitespace()
+        .next()
+        .context("empty /proc/uptime")?
+        .parse()?;
+    Ok((boot_s - start_jiffies / jiffies_per_sec()).max(0.0))
+}
+
+/// Kernel clock-tick rate.  `sysconf(_SC_CLK_TCK)` is 100 on every
+/// mainstream Linux config; hardcoding avoids a libc dependency.
+fn jiffies_per_sec() -> f64 {
+    100.0
+}
+
+fn count_open_fds() -> usize {
+    std::fs::read_dir("/proc/self/fd")
+        .map(|d| d.count().saturating_sub(1)) // the read_dir fd itself
+        .unwrap_or(0)
+}
+
+/// Take a [`ProcSnapshot`] now.  Errors only if /proc is unreadable
+/// (non-Linux), in which case callers should omit the section.
+pub fn proc_snapshot() -> Result<ProcSnapshot> {
+    Ok(ProcSnapshot {
+        rss_mb: read_rss_kb()? as f64 / 1024.0,
+        cpu_s: read_proc_self_stat()? as f64 / jiffies_per_sec(),
+        uptime_s: read_proc_uptime_s()?,
+        open_fds: count_open_fds(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +205,16 @@ mod tests {
         assert!(read_proc_self_stat().is_ok());
         assert!(read_proc_stat_total().unwrap() > 0);
         assert!(read_rss_kb().unwrap() > 0);
+    }
+
+    #[test]
+    fn proc_snapshot_is_sane() {
+        let p = proc_snapshot().unwrap();
+        assert!(p.rss_mb > 1.0, "rss {}", p.rss_mb);
+        assert!(p.cpu_s >= 0.0);
+        assert!(p.uptime_s >= 0.0);
+        // stdin/stdout/stderr at minimum.
+        assert!(p.open_fds >= 3, "fds {}", p.open_fds);
     }
 
     #[test]

@@ -1,0 +1,851 @@
+//! Observability spine: request-lifecycle tracing + unified metrics
+//! (DESIGN.md §10).
+//!
+//! Every request carries a small, `Copy` [`Span`] — eight fixed stage
+//! marks (`accepted` → `reply_flushed`) stamped with monotonic ticks as
+//! the request crosses the connection plane, admission, the scheduler,
+//! the engine, and the completion sink.  The span travels *inside* the
+//! request (and back inside the response), so stamping is a relaxed
+//! store into an inline array: no mutex, no allocation, no global map.
+//!
+//! Retention is split in two:
+//!
+//! * **Head sampling** (`--trace-sample-rate`): one in N spans is
+//!   marked `sampled` at accept time; on completion a sampled span is
+//!   recorded into one of a fixed set of lock-free [`TraceRing`]s
+//!   (per-IO-lane on the event plane, id-hashed on the threads plane
+//!   and for library callers).  The rings are single-word-atomic
+//!   seqlock buffers: writers never block, never allocate, and a
+//!   reader (`{"cmd":"trace"}`) that races a writer simply skips the
+//!   torn slot — traces are diagnostics, best-effort by design.
+//! * **Always-capture for anomalies**: a request that is shed
+//!   (predicted or expired), misses its deadline, or lands in the
+//!   slowest tail (coarse online p99.9 estimate) is pushed into a
+//!   bounded slow log with its full stage breakdown regardless of the
+//!   sample decision — the requests worth debugging are exactly the
+//!   ones sampling would usually drop.
+//!
+//! Per-stage latency *distributions* are kept separately in
+//! [`StageHist`] (one per model generation, merged across models via
+//! [`Histogram::merge`] for the unified `{"cmd":"metrics"}` export);
+//! those are recorded once per batch under a short lock, off the
+//! per-request path.
+//!
+//! Overhead budget (enforced by `rust/benches/trace_overhead.rs`): the
+//! default sample rate must cost ≤5% p99 and ≤5% allocations/request
+//! against tracing compiled in but sampled out.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+
+/// Number of lifecycle stages in a [`Span`].
+pub const STAGES: usize = 8;
+
+/// Stage names in mark order (wire names for `{"cmd":"trace"}`).
+pub const STAGE_NAMES: [&str; STAGES] = [
+    "accepted",
+    "parsed",
+    "admitted",
+    "dequeued",
+    "batch_formed",
+    "infer_start",
+    "infer_done",
+    "reply_flushed",
+];
+
+/// Fixed request-lifecycle stages, in the order they are stamped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request line received from the socket.
+    Accepted = 0,
+    /// Request line parsed into a protocol message.
+    Parsed = 1,
+    /// Admitted into a scheduler queue (selector routed, queue accepted).
+    Admitted = 2,
+    /// Popped from the queue by a runtime worker.
+    Dequeued = 3,
+    /// Batch assembled (post-shed, post-split, pixels copied in place).
+    BatchFormed = 4,
+    /// Engine `infer_view` entered.
+    InferStart = 5,
+    /// Engine `infer_view` returned.
+    InferDone = 6,
+    /// Reply bytes handed to the connection (write buffer flushed).
+    ReplyFlushed = 7,
+}
+
+/// Span flag bits (`Span::flags`).
+pub mod flag {
+    /// Head-sampled at accept time (recorded into a trace ring).
+    pub const SAMPLED: u64 = 1;
+    /// Shed at admission: no engine predicted to meet the deadline.
+    pub const SHED_PREDICTED: u64 = 1 << 1;
+    /// Admitted but shed in-queue after the deadline passed.
+    pub const SHED_EXPIRED: u64 = 1 << 2;
+    /// Served, but the reply landed after the deadline budget.
+    pub const DEADLINE_MISSED: u64 = 1 << 3;
+    /// Landed in the slowest tail (online p99.9 estimate).
+    pub const SLOW: u64 = 1 << 4;
+    /// Answered from the response cache (no engine stages).
+    pub const CACHE_HIT: u64 = 1 << 5;
+    /// Structurally rejected (queue full / closed) after routing.
+    pub const REJECTED: u64 = 1 << 6;
+}
+
+/// Human-readable names for set flag bits, in bit order.
+pub fn flag_names(flags: u64) -> Vec<&'static str> {
+    const TABLE: [(u64, &str); 7] = [
+        (flag::SAMPLED, "sampled"),
+        (flag::SHED_PREDICTED, "shed_predicted"),
+        (flag::SHED_EXPIRED, "shed_expired"),
+        (flag::DEADLINE_MISSED, "deadline_missed"),
+        (flag::SLOW, "slow"),
+        (flag::CACHE_HIT, "cache_hit"),
+        (flag::REJECTED, "rejected"),
+    ];
+    TABLE
+        .iter()
+        .filter(|(bit, _)| flags & bit != 0)
+        .map(|&(_, name)| name)
+        .collect()
+}
+
+/// One request's lifecycle timeline: eight monotonic marks (nanoseconds
+/// since the hub epoch; 0 = stage not reached), the deadline budget,
+/// and classification flags.  `Copy` and mutex-free on purpose: it
+/// rides inside the [`crate::coordinator::Request`] and back inside the
+/// [`crate::coordinator::Response`], so stamping a stage is one inline
+/// store.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Span {
+    /// Coordinator-internal request id (0 until submit assigns one).
+    pub id: u64,
+    /// Per-stage monotonic marks, ns since the hub epoch; 0 = unset.
+    pub marks: [u64; STAGES],
+    /// Deadline budget in ns (0 = best-effort), measured from admission.
+    pub deadline_ns: u64,
+    pub flags: u64,
+}
+
+impl Span {
+    /// Stamp `stage` at tick `now_ns` (from [`ObsHub::now_ns`]).
+    #[inline]
+    pub fn set(&mut self, stage: Stage, now_ns: u64) {
+        self.marks[stage as usize] = now_ns;
+    }
+
+    /// The mark for `stage`, if that stage was reached.
+    pub fn get(&self, stage: Stage) -> Option<u64> {
+        let v = self.marks[stage as usize];
+        (v != 0).then_some(v)
+    }
+
+    pub fn sampled(&self) -> bool {
+        self.flags & flag::SAMPLED != 0
+    }
+
+    /// Earliest set mark (the span's start), 0 if none.
+    pub fn first_ns(&self) -> u64 {
+        self.marks.iter().copied().filter(|&m| m != 0).min().unwrap_or(0)
+    }
+
+    /// Latest set mark (the span's end), 0 if none.
+    pub fn last_ns(&self) -> u64 {
+        self.marks.iter().copied().max().unwrap_or(0)
+    }
+
+    /// End-to-end wall time across set marks, in ms.
+    pub fn total_ms(&self) -> f64 {
+        self.last_ns().saturating_sub(self.first_ns()) as f64 / 1e6
+    }
+
+    /// Latency basis for deadline accounting: the admission mark when
+    /// reached (deadlines are measured from submit), else the earliest
+    /// mark.
+    fn deadline_basis_ns(&self) -> u64 {
+        self.get(Stage::Admitted).unwrap_or_else(|| self.first_ns())
+    }
+
+    /// True when every set mark is ≥ the previous set mark — the
+    /// invariant `{"cmd":"trace"}` consumers rely on.
+    pub fn monotonic(&self) -> bool {
+        let mut prev = 0u64;
+        for &m in &self.marks {
+            if m == 0 {
+                continue;
+            }
+            if m < prev {
+                return false;
+            }
+            prev = m;
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free trace ring
+// ---------------------------------------------------------------------------
+
+/// Words per ring slot: id + marks + deadline + flags.
+const SPAN_WORDS: usize = 2 + STAGES + 1;
+
+struct Slot {
+    /// Seqlock version: `2·ticket+1` while a write is in progress,
+    /// `2·ticket+2` once slot holds ticket's span.  A reader that sees
+    /// an odd or changed version skips the slot.
+    ver: AtomicU64,
+    words: [AtomicU64; SPAN_WORDS],
+}
+
+/// A fixed-capacity, lock-free span ring (multi-writer seqlock).
+///
+/// * `push` never blocks and never allocates: one `fetch_add` claims a
+///   ticket, the slot is overwritten in place.
+/// * Readers ([`TraceRing::snapshot`]) are best-effort: a slot being
+///   overwritten concurrently is detected via its version and skipped,
+///   never returned torn.
+/// * The ring never exceeds its capacity — older spans are simply
+///   overwritten (property-tested in rust/tests/obs_props.rs).
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    next: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(1);
+        let slots: Vec<Slot> = (0..capacity)
+            .map(|_| Slot {
+                ver: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        TraceRing {
+            slots: slots.into_boxed_slice(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        (self.next.load(Ordering::Acquire) as usize).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.next.load(Ordering::Acquire) == 0
+    }
+
+    /// Record a span.  Never blocks: one ticket `fetch_add`, one claim
+    /// CAS, then plain stores.  A same-slot lap collision (two writers
+    /// whose tickets are a full capacity apart, racing) makes the loser
+    /// *drop* its span instead of interleaving words into the slot — a
+    /// trace ring favors consistency over completeness, and the lapped
+    /// span was about to be overwritten anyway.
+    pub fn push(&self, s: &Span) {
+        let ticket = self.next.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        // Claim the slot even→odd.  An odd version means a contemporary
+        // writer holds it; a newer version means this ticket was lapped
+        // while parked.  Either way, never write words we don't own.
+        let claim = 2 * ticket + 1;
+        let cur = slot.ver.load(Ordering::Acquire);
+        if cur % 2 == 1
+            || cur > claim
+            || slot
+                .ver
+                .compare_exchange(cur, claim, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+        {
+            return;
+        }
+        // Canonical seqlock writer fence: the word stores below must not
+        // become visible before the odd version above, or a reader could
+        // consume a half-written slot as consistent.
+        std::sync::atomic::fence(Ordering::Release);
+        slot.words[0].store(s.id, Ordering::Relaxed);
+        for (i, m) in s.marks.iter().enumerate() {
+            slot.words[1 + i].store(*m, Ordering::Relaxed);
+        }
+        slot.words[1 + STAGES].store(s.deadline_ns, Ordering::Relaxed);
+        slot.words[2 + STAGES].store(s.flags, Ordering::Relaxed);
+        slot.ver.store(2 * ticket + 2, Ordering::Release);
+    }
+
+    /// Newest-first snapshot of up to `k` retained spans.  Slots being
+    /// overwritten while read are skipped (seqlock check), so a
+    /// snapshot under write load can return fewer than `len()` spans —
+    /// never a torn one.
+    pub fn snapshot(&self, k: usize) -> Vec<Span> {
+        let newest = self.next.load(Ordering::Acquire);
+        let retained = newest.min(self.slots.len() as u64);
+        let mut out = Vec::with_capacity(retained.min(k as u64) as usize);
+        let mut ticket = newest;
+        while ticket > newest - retained && out.len() < k {
+            ticket -= 1;
+            let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+            let want = 2 * ticket + 2;
+            if slot.ver.load(Ordering::Acquire) != want {
+                continue; // mid-write, or lapped by a newer span
+            }
+            let mut s = Span {
+                id: slot.words[0].load(Ordering::Relaxed),
+                ..Span::default()
+            };
+            for (i, m) in s.marks.iter_mut().enumerate() {
+                *m = slot.words[1 + i].load(Ordering::Relaxed);
+            }
+            s.deadline_ns = slot.words[1 + STAGES].load(Ordering::Relaxed);
+            s.flags = slot.words[2 + STAGES].load(Ordering::Relaxed);
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.ver.load(Ordering::Acquire) == want {
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-model stage histograms
+// ---------------------------------------------------------------------------
+
+/// One exported per-stage latency row (`{"cmd":"metrics"}`).
+#[derive(Debug, Clone)]
+pub struct StageRow {
+    pub stage: &'static str,
+    pub count: u64,
+    /// (mean, p50, p95, p99, max) in ms.
+    pub summary: (f64, f64, f64, f64, f64),
+}
+
+/// Per-stage duration histograms for one model generation: index `i`
+/// holds the duration *ending* at stage `i` (from the previous reached
+/// stage), so `stages[InferDone]` is engine wall time and
+/// `stages[Dequeued]` is queue wait.  Recorded once per batch under a
+/// short lock (off the per-request hot path), merged across models via
+/// [`Histogram::merge`] for the unified metrics export.
+pub struct StageHist {
+    inner: Mutex<Vec<Histogram>>,
+}
+
+impl Default for StageHist {
+    fn default() -> Self {
+        StageHist::new()
+    }
+}
+
+impl StageHist {
+    pub fn new() -> StageHist {
+        StageHist {
+            // Bounded retention per stage: metrics snapshots are summaries,
+            // not sample dumps.
+            inner: Mutex::new((0..STAGES).map(|_| Histogram::with_cap(4096)).collect()),
+        }
+    }
+
+    /// Record every stage-to-stage duration present in `spans`.  One
+    /// lock for the whole batch.
+    pub fn record_batch(&self, spans: impl Iterator<Item = Span>) {
+        let mut h = self.inner.lock().unwrap();
+        for span in spans {
+            let mut prev = 0u64;
+            for (i, &m) in span.marks.iter().enumerate() {
+                if m == 0 {
+                    continue;
+                }
+                if prev != 0 {
+                    h[i].record_ms(m.saturating_sub(prev) as f64 / 1e6);
+                }
+                prev = m;
+            }
+        }
+    }
+
+    /// Clone the per-stage histograms (for merging across models).
+    pub fn histograms(&self) -> Vec<Histogram> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Summary rows for stages that saw any samples, skipping
+    /// `accepted` (a point, not a duration).
+    pub fn rows(&self) -> Vec<StageRow> {
+        rows_of(&self.inner.lock().unwrap())
+    }
+}
+
+/// Summary rows from a per-stage histogram slice (shared by per-model
+/// and merged-global exports).  Stage 0 (`accepted`) is a point in
+/// time, not a duration, and is always skipped.
+pub fn rows_of(hists: &[Histogram]) -> Vec<StageRow> {
+    hists
+        .iter()
+        .enumerate()
+        .skip(1)
+        .filter(|(_, h)| h.count() > 0)
+        .map(|(i, h)| StageRow {
+            stage: STAGE_NAMES[i],
+            count: h.count(),
+            summary: h.summary(),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// The hub
+// ---------------------------------------------------------------------------
+
+/// Counter snapshot for the `trace` section of `{"cmd":"metrics"}`.
+#[derive(Debug, Clone, Default)]
+pub struct ObsCounters {
+    /// Spans begun (one per inference request seen by a server plane or
+    /// library submit).
+    pub begun: u64,
+    /// Spans completed through [`ObsHub::complete`].
+    pub completed: u64,
+    /// Sampled spans recorded into trace rings.
+    pub recorded: u64,
+    /// Completed spans dropped by head sampling (zero residue).
+    pub sampled_out: u64,
+    /// Anomalies retained in the slow log (shed / deadline-missed /
+    /// slowest-tail).
+    pub anomalies: u64,
+    /// Effective head-sampling period (0 = never, 1 = every request).
+    pub sample_period: u64,
+    pub rings: usize,
+    pub ring_capacity: usize,
+    pub slow_capacity: usize,
+    /// Online p99.9 latency estimate used for slow-tail capture, ms.
+    pub p999_est_ms: f64,
+    /// Reply-flush segment (infer_done → reply_flushed) count/mean/max
+    /// ms — kept as atomics because completion runs on IO threads.
+    pub flush_count: u64,
+    pub flush_mean_ms: f64,
+    pub flush_max_ms: f64,
+}
+
+/// Completions before the slow-tail (p99.9) capture arms — the
+/// estimator needs a population before "slowest 0.1%" means anything.
+const SLOW_WARMUP: u64 = 512;
+
+/// Process-wide tracing hub: the monotonic clock epoch, the sampling
+/// decision, the trace rings, and the anomaly slow log.  Owned by the
+/// coordinator's `SharedStats` so the server planes, the admission
+/// path, and the runtime workers all stamp against the same epoch.
+pub struct ObsHub {
+    epoch: Instant,
+    /// Head-sampling period: 0 = never, 1 = always, N = one in N.
+    period: u64,
+    sample_counter: AtomicU64,
+    rings: Box<[TraceRing]>,
+    slow: TraceRing,
+    /// Coarse online p99.9 estimate (ns) for slow-tail capture.
+    p999_ns: AtomicU64,
+    begun: AtomicU64,
+    completed: AtomicU64,
+    recorded: AtomicU64,
+    sampled_out: AtomicU64,
+    anomalies: AtomicU64,
+    flush_count: AtomicU64,
+    flush_sum_ns: AtomicU64,
+    flush_max_ns: AtomicU64,
+}
+
+impl Default for ObsHub {
+    /// Library default: 1-in-100 sampling, 4 rings × 1024 spans,
+    /// 256-slot slow log (the config-driven constructor is
+    /// [`ObsHub::new`]).
+    fn default() -> Self {
+        ObsHub::new(0.01, 1024, 256, 4)
+    }
+}
+
+impl ObsHub {
+    pub fn new(sample_rate: f64, ring_cap: usize, slow_cap: usize, rings: usize) -> ObsHub {
+        let period = if sample_rate.is_nan() || sample_rate <= 0.0 {
+            0 // NaN or ≤0: tracing compiled in, sampled out
+        } else if sample_rate >= 1.0 {
+            1
+        } else {
+            (1.0 / sample_rate).round() as u64
+        };
+        let rings: Vec<TraceRing> = (0..rings.max(1)).map(|_| TraceRing::new(ring_cap)).collect();
+        ObsHub {
+            epoch: Instant::now(),
+            period,
+            sample_counter: AtomicU64::new(0),
+            rings: rings.into_boxed_slice(),
+            slow: TraceRing::new(slow_cap),
+            p999_ns: AtomicU64::new(0),
+            begun: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
+            anomalies: AtomicU64::new(0),
+            flush_count: AtomicU64::new(0),
+            flush_sum_ns: AtomicU64::new(0),
+            flush_max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Monotonic tick: ns since the hub epoch, never 0 (0 is the
+    /// "stage not reached" sentinel in [`Span::marks`]).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        (self.epoch.elapsed().as_nanos() as u64).max(1)
+    }
+
+    /// Begin a span now (stamps `accepted`, draws the sample decision).
+    pub fn begin(&self) -> Span {
+        let now = self.now_ns();
+        self.begin_at(now)
+    }
+
+    /// Begin a span whose `accepted` tick was taken earlier (the server
+    /// reads the tick at line receipt, then parses, then begins a span
+    /// only for inference requests).
+    pub fn begin_at(&self, accepted_ns: u64) -> Span {
+        self.begun.fetch_add(1, Ordering::Relaxed);
+        let mut s = Span::default();
+        s.marks[Stage::Accepted as usize] = accepted_ns.max(1);
+        if self.sample() {
+            s.flags |= flag::SAMPLED;
+        }
+        s
+    }
+
+    fn sample(&self) -> bool {
+        match self.period {
+            0 => false,
+            1 => true,
+            p => self.sample_counter.fetch_add(1, Ordering::Relaxed) % p == 0,
+        }
+    }
+
+    /// Always-capture for a request rejected before completion (shed at
+    /// admission, queue-full reject): the span goes to the slow log
+    /// with whatever marks it reached.  Caller sets the shed/reject
+    /// flag bits first.
+    pub fn record_shed(&self, span: &Span) {
+        self.anomalies.fetch_add(1, Ordering::Relaxed);
+        self.slow.push(span);
+        if span.sampled() {
+            self.recorded.fetch_add(1, Ordering::Relaxed);
+            self.ring_for(span.id as usize).push(span);
+        }
+    }
+
+    fn ring_for(&self, lane: usize) -> &TraceRing {
+        &self.rings[lane % self.rings.len()]
+    }
+
+    /// Finish a span at reply-flush time: classify (deadline missed?
+    /// slow tail?), retain anomalies in the slow log, record sampled
+    /// spans into the `lane`'s trace ring.  Atomics only — this runs on
+    /// IO threads and connection threads.
+    pub fn complete(&self, span: &mut Span, lane: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let end = span.last_ns();
+        let total = end.saturating_sub(span.deadline_basis_ns());
+        if span.deadline_ns > 0 && total > span.deadline_ns {
+            span.flags |= flag::DEADLINE_MISSED;
+        }
+
+        // Reply-flush segment accounting (infer_done → reply_flushed).
+        if let (Some(done), Some(flushed)) =
+            (span.get(Stage::InferDone), span.get(Stage::ReplyFlushed))
+        {
+            let d = flushed.saturating_sub(done);
+            self.flush_count.fetch_add(1, Ordering::Relaxed);
+            self.flush_sum_ns.fetch_add(d, Ordering::Relaxed);
+            self.flush_max_ns.fetch_max(d, Ordering::Relaxed);
+        }
+
+        // Coarse online p99.9: step toward samples above the estimate,
+        // decay slowly below it (≈0.1% of samples above at equilibrium).
+        // Lossy under races on purpose — it only gates tail capture.
+        let est = self.p999_ns.load(Ordering::Relaxed);
+        let warmed = self.completed.load(Ordering::Relaxed) >= SLOW_WARMUP;
+        if total > est {
+            if warmed && est > 0 {
+                span.flags |= flag::SLOW;
+            }
+            self.p999_ns
+                .store(est + (total - est) / 8 + 1, Ordering::Relaxed);
+        } else if est > 0 {
+            self.p999_ns.store(est - (est / 1024), Ordering::Relaxed);
+        }
+
+        let anomaly = span.flags
+            & (flag::SHED_PREDICTED
+                | flag::SHED_EXPIRED
+                | flag::DEADLINE_MISSED
+                | flag::SLOW
+                | flag::REJECTED)
+            != 0;
+        if anomaly {
+            self.anomalies.fetch_add(1, Ordering::Relaxed);
+            self.slow.push(span);
+        }
+        if span.sampled() {
+            self.recorded.fetch_add(1, Ordering::Relaxed);
+            self.ring_for(lane).push(span);
+        } else if !anomaly {
+            // Zero residue: not sampled, not anomalous — nothing retained.
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Last `k` sampled timelines across all rings, newest first.
+    pub fn traces(&self, k: usize) -> Vec<Span> {
+        let mut all: Vec<Span> = self.rings.iter().flat_map(|r| r.snapshot(k)).collect();
+        all.sort_by_key(|s| std::cmp::Reverse(s.last_ns()));
+        all.truncate(k);
+        all
+    }
+
+    /// Last `k` anomaly timelines (always-captured), newest first.
+    pub fn slow_log(&self, k: usize) -> Vec<Span> {
+        self.slow.snapshot(k)
+    }
+
+    pub fn counters(&self) -> ObsCounters {
+        let flush_count = self.flush_count.load(Ordering::Relaxed);
+        let flush_sum = self.flush_sum_ns.load(Ordering::Relaxed);
+        ObsCounters {
+            begun: self.begun.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            recorded: self.recorded.load(Ordering::Relaxed),
+            sampled_out: self.sampled_out.load(Ordering::Relaxed),
+            anomalies: self.anomalies.load(Ordering::Relaxed),
+            sample_period: self.period,
+            rings: self.rings.len(),
+            ring_capacity: self.rings[0].capacity(),
+            slow_capacity: self.slow.capacity(),
+            p999_est_ms: self.p999_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            flush_count,
+            flush_mean_ms: if flush_count == 0 {
+                0.0
+            } else {
+                flush_sum as f64 / flush_count as f64 / 1e6
+            },
+            flush_max_ms: self.flush_max_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_at(id: u64, base_ns: u64) -> Span {
+        let mut s = Span {
+            id,
+            ..Span::default()
+        };
+        for (i, stage) in [
+            Stage::Accepted,
+            Stage::Parsed,
+            Stage::Admitted,
+            Stage::Dequeued,
+            Stage::BatchFormed,
+            Stage::InferStart,
+            Stage::InferDone,
+            Stage::ReplyFlushed,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            s.set(stage, base_ns + i as u64 * 1_000);
+        }
+        s
+    }
+
+    #[test]
+    fn span_marks_are_monotonic_and_summable() {
+        let s = span_at(7, 100);
+        assert!(s.monotonic());
+        assert_eq!(s.first_ns(), 100);
+        assert_eq!(s.last_ns(), 100 + 7_000);
+        assert!((s.total_ms() - 0.007).abs() < 1e-9);
+        assert_eq!(s.get(Stage::InferDone), Some(100 + 6_000));
+        let mut bad = s;
+        bad.set(Stage::InferDone, 10); // earlier than infer_start
+        assert!(!bad.monotonic());
+    }
+
+    #[test]
+    fn ring_retains_newest_up_to_capacity() {
+        let ring = TraceRing::new(4);
+        assert!(ring.is_empty());
+        for i in 0..10u64 {
+            ring.push(&span_at(i, (i + 1) * 1_000_000));
+        }
+        assert_eq!(ring.len(), 4);
+        let got = ring.snapshot(16);
+        assert_eq!(got.len(), 4, "never exceeds capacity");
+        let ids: Vec<u64> = got.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![9, 8, 7, 6], "newest first");
+        assert_eq!(ring.snapshot(2).len(), 2);
+    }
+
+    #[test]
+    fn sampling_period_tracks_rate() {
+        let always = ObsHub::new(1.0, 8, 8, 1);
+        let never = ObsHub::new(0.0, 8, 8, 1);
+        let tenth = ObsHub::new(0.1, 8, 8, 1);
+        assert!(always.begin().sampled());
+        assert!(!never.begin().sampled());
+        let sampled = (0..1000).filter(|_| tenth.begin().sampled()).count();
+        assert_eq!(sampled, 100, "deterministic 1-in-10 head sampling");
+        // NaN / negative rates degrade to sampled-out, not panic.
+        assert!(!ObsHub::new(f64::NAN, 8, 8, 1).begin().sampled());
+        assert!(!ObsHub::new(-0.5, 8, 8, 1).begin().sampled());
+    }
+
+    #[test]
+    fn sampled_out_leaves_zero_residue() {
+        let hub = ObsHub::new(0.0, 64, 64, 2);
+        for i in 0..100 {
+            let mut s = hub.begin();
+            s.id = i;
+            s.set(Stage::ReplyFlushed, hub.now_ns());
+            hub.complete(&mut s, i as usize);
+        }
+        assert!(hub.traces(1000).is_empty(), "no ring residue when sampled out");
+        assert!(hub.slow_log(1000).is_empty(), "no anomalies, no slow-log residue");
+        let c = hub.counters();
+        assert_eq!(c.sampled_out, 100);
+        assert_eq!(c.recorded, 0);
+        assert_eq!(c.anomalies, 0);
+    }
+
+    #[test]
+    fn deadline_miss_is_always_captured() {
+        // Sampling off: capture must come from the anomaly path alone.
+        let hub = ObsHub::new(0.0, 8, 8, 1);
+        let mut s = hub.begin();
+        s.id = 42;
+        s.deadline_ns = 1_000_000; // 1ms budget
+        let t = s.marks[Stage::Accepted as usize];
+        s.set(Stage::Admitted, t + 1);
+        s.set(Stage::ReplyFlushed, t + 5_000_000); // 5ms later
+        hub.complete(&mut s, 0);
+        assert!(s.flags & flag::DEADLINE_MISSED != 0);
+        let slow = hub.slow_log(10);
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].id, 42);
+        assert_eq!(hub.counters().anomalies, 1);
+        assert!(hub.traces(10).is_empty(), "not sampled: ring stays clean");
+    }
+
+    #[test]
+    fn shed_is_always_captured() {
+        let hub = ObsHub::new(0.0, 8, 8, 1);
+        let mut s = hub.begin();
+        s.id = 9;
+        s.flags |= flag::SHED_PREDICTED;
+        hub.record_shed(&s);
+        let slow = hub.slow_log(10);
+        assert_eq!(slow.len(), 1);
+        assert!(slow[0].flags & flag::SHED_PREDICTED != 0);
+    }
+
+    #[test]
+    fn slow_tail_capture_waits_for_warmup() {
+        let hub = ObsHub::new(0.0, 8, 1024, 1);
+        // Under SLOW_WARMUP completions: a huge outlier is not flagged
+        // slow (the estimator has no population yet).
+        let mut early = hub.begin();
+        early.set(Stage::ReplyFlushed, early.first_ns() + 50_000_000);
+        hub.complete(&mut early, 0);
+        assert_eq!(early.flags & flag::SLOW, 0);
+        // Build a uniform population past warmup, then an outlier must
+        // be flagged + retained.
+        for _ in 0..(SLOW_WARMUP + 16) {
+            let mut s = hub.begin();
+            s.set(Stage::ReplyFlushed, s.first_ns() + 1_000_000); // 1ms
+            hub.complete(&mut s, 0);
+        }
+        let mut outlier = hub.begin();
+        outlier.id = 777;
+        outlier.set(Stage::ReplyFlushed, outlier.first_ns() + 500_000_000);
+        hub.complete(&mut outlier, 0);
+        assert!(outlier.flags & flag::SLOW != 0, "post-warmup outlier flagged");
+        assert!(hub.slow_log(2048).iter().any(|s| s.id == 777));
+    }
+
+    #[test]
+    fn stage_hist_records_deltas_and_merges() {
+        let h = StageHist::new();
+        h.record_batch(std::iter::once(span_at(1, 1_000_000)));
+        let rows = h.rows();
+        // 7 transitions (accepted is a point, not a duration).
+        assert_eq!(rows.len(), STAGES - 1);
+        assert_eq!(rows[0].stage, "parsed");
+        assert_eq!(rows[0].count, 1);
+        assert!((rows[0].summary.0 - 0.001).abs() < 1e-9, "1µs delta = 0.001ms");
+        // Merge across "models" via Histogram::merge.
+        let other = StageHist::new();
+        other.record_batch(std::iter::once(span_at(2, 9_000_000)));
+        let mut merged = h.histograms();
+        for (acc, g) in merged.iter_mut().zip(other.histograms().iter()) {
+            acc.merge(g);
+        }
+        let rows = rows_of(&merged);
+        assert_eq!(rows[0].count, 2);
+    }
+
+    #[test]
+    fn partial_span_skips_unreached_stage_deltas() {
+        // A shed span never reaches infer: only the transitions between
+        // set marks are recorded, bridging gaps (admitted → flushed).
+        let mut s = Span::default();
+        s.set(Stage::Accepted, 100);
+        s.set(Stage::Parsed, 200);
+        s.set(Stage::Admitted, 300);
+        s.set(Stage::ReplyFlushed, 500);
+        let h = StageHist::new();
+        h.record_batch(std::iter::once(s));
+        let rows = h.rows();
+        let names: Vec<&str> = rows.iter().map(|r| r.stage).collect();
+        assert_eq!(names, vec!["parsed", "admitted", "reply_flushed"]);
+    }
+
+    #[test]
+    fn flag_names_cover_all_bits() {
+        assert!(flag_names(0).is_empty());
+        let all = flag::SAMPLED
+            | flag::SHED_PREDICTED
+            | flag::SHED_EXPIRED
+            | flag::DEADLINE_MISSED
+            | flag::SLOW
+            | flag::CACHE_HIT
+            | flag::REJECTED;
+        assert_eq!(flag_names(all).len(), 7);
+        assert_eq!(flag_names(flag::DEADLINE_MISSED), vec!["deadline_missed"]);
+    }
+
+    #[test]
+    fn counters_report_flush_segment() {
+        let hub = ObsHub::new(1.0, 8, 8, 2);
+        let mut s = hub.begin();
+        let t = s.first_ns();
+        s.set(Stage::InferDone, t + 1_000_000);
+        s.set(Stage::ReplyFlushed, t + 3_000_000);
+        hub.complete(&mut s, 1);
+        let c = hub.counters();
+        assert_eq!(c.flush_count, 1);
+        assert!((c.flush_mean_ms - 2.0).abs() < 1e-6);
+        assert!((c.flush_max_ms - 2.0).abs() < 1e-6);
+        assert_eq!(c.recorded, 1);
+        assert_eq!(hub.traces(10).len(), 1);
+    }
+}

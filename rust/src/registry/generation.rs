@@ -40,11 +40,14 @@ use crate::coordinator::scheduler::{ExecCtx, QueueKey, RuntimeHandle, WorkSource
 use crate::coordinator::worker::SharedStats;
 use crate::coordinator::{ReplySink, Request, Response, SubmitError};
 use crate::engine::{self, EngineKind};
+use crate::metrics::Histogram;
+use crate::obs::{flag, Span, Stage, StageHist};
 use crate::policy::{
     self, image_key, Decision, PolicyCtx, PoolSnapshot, PoolView, Selector, Slo,
 };
 use crate::runtime::Manifest;
 use crate::tensor::{PooledTensor, TensorPool};
+use crate::util::log::{suppressed_note, SHED_LOG};
 
 use super::ModelCounters;
 
@@ -72,6 +75,10 @@ pub struct Generation {
     stats: Arc<SharedStats>,
     /// Per-model counters (survive reloads; shared across generations).
     counters: Arc<ModelCounters>,
+    /// Per-generation stage-latency histograms (DESIGN.md §10): the
+    /// runtime workers record served batches' span deltas here;
+    /// `{"cmd":"metrics"}` merges them across models.
+    stage_hist: Arc<StageHist>,
     /// Wall time spent probe-building + warming one replica per engine
     /// kind (artifact validation; see `start`).
     warm_ms: f64,
@@ -147,6 +154,7 @@ impl Generation {
         arena.prealloc(input_len, cfg.queue_capacity);
 
         let weight = cfg.registry.weight_for(&model);
+        let stage_hist = Arc::new(StageHist::new());
         let exec = Arc::new(ExecCtx {
             model: model.clone(),
             generation,
@@ -154,6 +162,7 @@ impl Generation {
             arena: arena.clone(),
             ctx: ctx.clone(),
             counters: counters.clone(),
+            stage_hist: stage_hist.clone(),
         });
 
         let mut ports = Vec::with_capacity(kinds.len());
@@ -212,6 +221,7 @@ impl Generation {
             arena,
             stats,
             counters,
+            stage_hist,
             warm_ms,
             retired: AtomicBool::new(false),
         })
@@ -244,6 +254,13 @@ impl Generation {
     /// This generation's policy state (per-model predictor + cache).
     pub fn ctx(&self) -> &Arc<PolicyCtx> {
         &self.ctx
+    }
+
+    /// Clones of this generation's per-stage latency histograms, index
+    /// = [`Stage`] (merged across models by
+    /// [`crate::coordinator::Coordinator::metrics`]).
+    pub fn stage_histograms(&self) -> Vec<Histogram> {
+        self.stage_hist.histograms()
     }
 
     /// Requests queued across this generation's queues.
@@ -348,6 +365,28 @@ impl Generation {
         wire_key: Option<u64>,
         reply: ReplySink,
     ) -> Result<(), (SubmitError, Option<PooledTensor>)> {
+        let span = self.stats.obs.begin();
+        self.submit_sink_traced(id, image, slo, wire_key, reply, span)
+    }
+
+    /// [`Generation::submit_sink_reclaim`] with a caller-provided trace
+    /// span (DESIGN.md §10): the connection plane begins the span at
+    /// accept time so the timeline covers parse + admission, not just
+    /// queue + inference.  Stamps `admitted` here; shed/reject paths
+    /// record the span into the hub's anomaly log before returning.
+    pub fn submit_sink_traced(
+        &self,
+        id: u64,
+        image: PooledTensor,
+        slo: Slo,
+        wire_key: Option<u64>,
+        reply: ReplySink,
+        mut span: Span,
+    ) -> Result<(), (SubmitError, Option<PooledTensor>)> {
+        span.id = id;
+        if let Some(ms) = slo.deadline_ms() {
+            span.deadline_ns = (ms * 1e6) as u64;
+        }
         if let Err(e) = self.check_shape(image.shape()) {
             reply.disarm();
             return Err((e, Some(image)));
@@ -365,7 +404,10 @@ impl Generation {
                     self.ctx.cache.put(wk, hit.clone());
                 }
                 let total_ms = crate::util::ms(submitted.elapsed());
-                reply.send(self.cache_hit_response(id, &hit, total_ms));
+                span.flags |= flag::CACHE_HIT;
+                let mut resp = self.cache_hit_response(id, &hit, total_ms);
+                resp.span = Some(span);
+                reply.send(resp);
                 return Ok(());
             }
             Some(key)
@@ -390,22 +432,34 @@ impl Generation {
                 self.count_rejected();
                 reply.disarm();
                 let any_room = views.iter().any(|v| v.queued < v.capacity);
-                return Err((
-                    match (budget_ms, any_room) {
-                        (Some(deadline_ms), true) => {
-                            self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
-                            SubmitError::Shed {
-                                predicted_ms: best_ms,
-                                deadline_ms,
-                            }
+                let err = match (budget_ms, any_room) {
+                    (Some(deadline_ms), true) => {
+                        self.ctx.shed_predicted.fetch_add(1, Ordering::Relaxed);
+                        span.flags |= flag::SHED_PREDICTED;
+                        SubmitError::Shed {
+                            predicted_ms: best_ms,
+                            deadline_ms,
                         }
-                        _ => SubmitError::Overloaded,
-                    },
-                    Some(image),
-                ));
+                    }
+                    _ => {
+                        span.flags |= flag::REJECTED;
+                        SubmitError::Overloaded
+                    }
+                };
+                self.stats.obs.record_shed(&span);
+                if let Some(sup) = SHED_LOG.allow() {
+                    crate::warn!(
+                        "registry",
+                        "shed request {id} on '{}': {err}{}",
+                        self.model,
+                        suppressed_note(sup)
+                    );
+                }
+                return Err((err, Some(image)));
             }
         };
 
+        span.set(Stage::Admitted, self.stats.obs.now_ns());
         let req = Request {
             id,
             image,
@@ -414,12 +468,24 @@ impl Generation {
             cache_key,
             wire_key: wire_key.filter(|_| cache_key.is_some()),
             reply,
+            span,
         };
         match self.ports[port].admit(req) {
             Ok(_) => Ok(()),
             Err(RouteError::Overloaded(r)) => {
                 self.count_rejected();
                 r.reply.disarm();
+                let mut s = r.span;
+                s.flags |= flag::REJECTED;
+                self.stats.obs.record_shed(&s);
+                if let Some(sup) = SHED_LOG.allow() {
+                    crate::warn!(
+                        "registry",
+                        "rejected request {id} on '{}': queue full{}",
+                        self.model,
+                        suppressed_note(sup)
+                    );
+                }
                 Err((SubmitError::Overloaded, Some(r.image)))
             }
             // Retired mid-swap: the caller re-resolves the model and

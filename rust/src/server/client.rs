@@ -67,6 +67,18 @@ impl Client {
         self.roundtrip(r#"{"cmd":"stats"}"#)
     }
 
+    /// Unified metrics snapshot (`{"cmd":"metrics"}`): stats plus
+    /// per-stage histograms, trace counters, and process health.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.roundtrip(r#"{"cmd":"metrics"}"#)
+    }
+
+    /// Last-`n` retained request timelines plus the anomaly slow log
+    /// (`{"cmd":"trace"}`).
+    pub fn trace(&mut self, n: usize) -> Result<Json> {
+        self.roundtrip(&format!(r#"{{"cmd":"trace","n":{n}}}"#))
+    }
+
     /// Policy-layer introspection (`{"cmd":"policy"}`).
     pub fn policy(&mut self) -> Result<Json> {
         self.roundtrip(r#"{"cmd":"policy"}"#)

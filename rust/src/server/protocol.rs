@@ -9,6 +9,8 @@
 //! {"id": 10, "image": {"synthetic": 1},
 //!  "model": "squeezenet-v2"}                        // registry-addressed
 //! {"cmd": "stats"}                                  // live stats
+//! {"cmd": "metrics"}                                // unified snapshot
+//! {"cmd": "trace", "n": 16}                         // recent timelines
 //! {"cmd": "policy"}                                 // policy introspection
 //! {"cmd": "models"}                                 // registry listing
 //! {"cmd": "reload", "model": "squeezenet-v2"}       // hot reload
@@ -56,6 +58,11 @@ pub enum ClientMsg {
         model: Option<String>,
     },
     Stats,
+    /// Unified observability snapshot: stats + per-stage histograms +
+    /// trace-plane counters, one line (DESIGN.md §10).
+    Metrics,
+    /// Last `n` retained request timelines plus the anomaly slow log.
+    Trace { n: usize },
     Policy,
     /// Registry listing: names, generations, load state.
     Models,
@@ -111,6 +118,19 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "stats" => Ok(ClientMsg::Stats),
+            "metrics" => Ok(ClientMsg::Metrics),
+            "trace" => {
+                let n = match j.get("n") {
+                    None => 32,
+                    Some(v) => match v.as_usize() {
+                        // Clamp: the rings are bounded anyway; the cap
+                        // keeps a typo from building a huge reply line.
+                        Some(n) if n >= 1 => n.min(4096),
+                        _ => bail!("'n' must be a positive integer, got {v:?}"),
+                    },
+                };
+                Ok(ClientMsg::Trace { n })
+            }
             "policy" => Ok(ClientMsg::Policy),
             "models" => Ok(ClientMsg::Models),
             "reload" => Ok(ClientMsg::Reload {
@@ -246,6 +266,13 @@ pub fn stats_line_with(
     s: &crate::coordinator::StatsSnapshot,
     conn: &super::ConnPlaneSnapshot,
 ) -> String {
+    stats_obj_with(s, conn).to_string()
+}
+
+fn stats_obj_with(
+    s: &crate::coordinator::StatsSnapshot,
+    conn: &super::ConnPlaneSnapshot,
+) -> Json {
     let mut o = stats_obj(s);
     let mut c = Json::obj();
     c.set("plane", conn.plane.into())
@@ -264,6 +291,119 @@ pub fn stats_line_with(
         .set("outstanding", conn.buffers_outstanding.into());
     c.set("buffers", bufs);
     o.set("conn", c);
+    o
+}
+
+/// `"proc"` stats section: point-in-time process health from /proc
+/// (None on non-Linux hosts — the section is simply omitted).
+fn proc_obj() -> Option<Json> {
+    let p = crate::metrics::sysmon::proc_snapshot().ok()?;
+    let mut o = Json::obj();
+    o.set("rss_mb", p.rss_mb.into())
+        .set("cpu_s", p.cpu_s.into())
+        .set("uptime_s", p.uptime_s.into())
+        .set("open_fds", p.open_fds.into());
+    Some(o)
+}
+
+fn stage_rows_arr(rows: &[crate::obs::StageRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let (mean, p50, p95, p99, max) = r.summary;
+                let mut o = Json::obj();
+                o.set("stage", r.stage.into())
+                    .set("count", r.count.into())
+                    .set("mean_ms", mean.into())
+                    .set("p50_ms", p50.into())
+                    .set("p95_ms", p95.into())
+                    .set("p99_ms", p99.into())
+                    .set("max_ms", max.into());
+                o
+            })
+            .collect(),
+    )
+}
+
+/// One retained timeline: marks as ms offsets from the first stamped
+/// stage (unset stages omitted), plus classification flags.
+fn span_obj(s: &crate::obs::Span) -> Json {
+    let t0 = s.first_ns();
+    let mut marks = Json::obj();
+    for (i, name) in crate::obs::STAGE_NAMES.iter().enumerate() {
+        if s.marks[i] != 0 {
+            marks.set(name, ((s.marks[i] - t0) as f64 / 1e6).into());
+        }
+    }
+    let mut o = Json::obj();
+    o.set("id", s.id.into())
+        .set("total_ms", s.total_ms().into())
+        .set("marks", marks)
+        .set(
+            "flags",
+            Json::Arr(
+                crate::obs::flag_names(s.flags)
+                    .into_iter()
+                    .map(Json::from)
+                    .collect(),
+            ),
+        );
+    if s.deadline_ns != 0 {
+        o.set("deadline_ms", (s.deadline_ns as f64 / 1e6).into());
+    }
+    o
+}
+
+/// `{"cmd":"metrics"}` reply: one line merging every subsystem's view —
+/// the full stats object (scheduler, queues, pool, models), the
+/// connection plane, process health, per-stage latency histograms
+/// (merged and per-model), and the trace-plane counters.
+pub fn metrics_line(
+    m: &crate::coordinator::MetricsSnapshot,
+    conn: &super::ConnPlaneSnapshot,
+) -> String {
+    let mut o = stats_obj_with(&m.stats, conn);
+    o.set("stages", stage_rows_arr(&m.stages));
+    o.set(
+        "model_stages",
+        Json::Arr(
+            m.model_stages
+                .iter()
+                .map(|ms| {
+                    let mut row = Json::obj();
+                    row.set("model", ms.model.as_str().into())
+                        .set("stages", stage_rows_arr(&ms.stages));
+                    row
+                })
+                .collect(),
+        ),
+    );
+    let c = &m.obs;
+    let mut t = Json::obj();
+    t.set("begun", c.begun.into())
+        .set("completed", c.completed.into())
+        .set("recorded", c.recorded.into())
+        .set("sampled_out", c.sampled_out.into())
+        .set("anomalies", c.anomalies.into())
+        .set("sample_period", c.sample_period.into())
+        .set("rings", c.rings.into())
+        .set("ring_capacity", c.ring_capacity.into())
+        .set("slow_capacity", c.slow_capacity.into())
+        .set("p999_est_ms", c.p999_est_ms.into())
+        .set("flush_count", c.flush_count.into())
+        .set("flush_mean_ms", c.flush_mean_ms.into())
+        .set("flush_max_ms", c.flush_max_ms.into());
+    o.set("trace", t);
+    o.to_string()
+}
+
+/// `{"cmd":"trace"}` reply: last-`n` retained timelines (newest last)
+/// plus the anomaly slow log.
+pub fn trace_line(traces: &[crate::obs::Span], slow: &[crate::obs::Span]) -> String {
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("traces", Json::Arr(traces.iter().map(span_obj).collect()))
+        .set("slow", Json::Arr(slow.iter().map(span_obj).collect()));
     o.to_string()
 }
 
@@ -337,6 +477,9 @@ fn stats_obj(s: &crate::coordinator::StatsSnapshot) -> Json {
                 .collect(),
         ),
     );
+    if let Some(p) = proc_obj() {
+        o.set("proc", p);
+    }
     o
 }
 
@@ -596,6 +739,7 @@ mod tests {
             cached: false,
             kind: "",
             error: None,
+            span: None,
         };
         let line = response_line(&r);
         let j = Json::parse(&line).unwrap();
@@ -617,6 +761,75 @@ mod tests {
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(j.str_of("kind").unwrap(), "shed");
         assert!(j.str_of("error").unwrap().contains("deadline"));
+    }
+
+    #[test]
+    fn parse_metrics_and_trace_cmds() {
+        assert_eq!(
+            parse_request(r#"{"cmd":"metrics"}"#).unwrap(),
+            ClientMsg::Metrics
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"trace"}"#).unwrap(),
+            ClientMsg::Trace { n: 32 }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"trace","n":5}"#).unwrap(),
+            ClientMsg::Trace { n: 5 }
+        );
+        // Clamped, not rejected: the rings are bounded anyway.
+        assert_eq!(
+            parse_request(r#"{"cmd":"trace","n":1000000}"#).unwrap(),
+            ClientMsg::Trace { n: 4096 }
+        );
+        assert!(parse_request(r#"{"cmd":"trace","n":0}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"trace","n":"many"}"#).is_err());
+    }
+
+    #[test]
+    fn span_serializes_marks_and_flags() {
+        use crate::obs::{flag, Span, Stage};
+        let mut s = Span {
+            id: 9,
+            deadline_ns: 250_000_000,
+            flags: flag::SAMPLED | flag::DEADLINE_MISSED,
+            ..Span::default()
+        };
+        s.set(Stage::Accepted, 1_000_000);
+        s.set(Stage::Parsed, 1_500_000);
+        s.set(Stage::ReplyFlushed, 301_000_000);
+        let j = Json::parse(&trace_line(&[s], &[])).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        let t = &j.get("traces").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t.usize_of("id").unwrap(), 9);
+        assert_eq!(t.f64_of("deadline_ms").unwrap(), 250.0);
+        let marks = t.get("marks").unwrap();
+        // Offsets are relative to the first stamped stage.
+        assert_eq!(marks.f64_of("accepted").unwrap(), 0.0);
+        assert_eq!(marks.f64_of("parsed").unwrap(), 0.5);
+        assert_eq!(marks.f64_of("reply_flushed").unwrap(), 300.0);
+        assert!(marks.get("dequeued").is_none(), "unset stages are omitted");
+        let flags: Vec<&str> = t
+            .get("flags")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|f| f.as_str())
+            .collect();
+        assert!(flags.contains(&"sampled"));
+        assert!(flags.contains(&"deadline_missed"));
+        assert_eq!(j.get("slow").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn stats_line_carries_proc_section() {
+        let s = crate::coordinator::StatsSnapshot::default();
+        let j = Json::parse(&stats_line(&s)).unwrap();
+        let p = j.get("proc").expect("proc section (Linux host)");
+        assert!(p.f64_of("rss_mb").unwrap() > 0.0);
+        assert!(p.usize_of("open_fds").unwrap() >= 3);
+        assert!(p.f64_of("uptime_s").unwrap() >= 0.0);
     }
 
     #[test]

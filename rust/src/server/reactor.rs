@@ -36,7 +36,9 @@ use crate::config::ServerConfig;
 use crate::coordinator::{
     CompletionSink, CompletionToken, Coordinator, ReplySink, SubmitError,
 };
+use crate::obs::{flag, ObsHub, Span, Stage};
 use crate::policy::Slo;
+use crate::util::log::{suppressed_note, CAPACITY_LOG};
 
 use super::conn::{drain_lines, AcceptBackoff, BufPool, WriteBuf};
 use super::protocol::{self, ClientMsg, ImageSpec};
@@ -65,6 +67,9 @@ struct Done {
     /// Inference completions maintain the global in-flight gauge;
     /// command completions (reload) only settle the connection.
     infer: bool,
+    /// Request timeline riding along with the reply: the IO thread
+    /// stamps `reply_flushed` and retires it (DESIGN.md §10).
+    span: Option<Span>,
 }
 
 /// One IO thread's mailbox: new connections from the acceptor and
@@ -87,6 +92,9 @@ pub(super) struct Shared {
     max_connections: usize,
     max_line_bytes: usize,
     idle_timeout: Option<Duration>,
+    /// Trace hub (same instance the coordinator owns): IO threads
+    /// stamp accepted/parsed/reply_flushed and retire timelines.
+    obs: Arc<ObsHub>,
 }
 
 impl Shared {
@@ -94,9 +102,14 @@ impl Shared {
         &self.lanes[((conn >> LANE_SHIFT) as usize) % self.lanes.len()]
     }
 
-    fn push_done(&self, conn: u64, line: String, infer: bool) {
+    fn push_done(&self, conn: u64, line: String, infer: bool, span: Option<Span>) {
         let lane = self.lane_of(conn);
-        lane.done.lock().unwrap().push(Done { conn, line, infer });
+        lane.done.lock().unwrap().push(Done {
+            conn,
+            line,
+            infer,
+            span,
+        });
         lane.wake.signal();
     }
 
@@ -112,7 +125,8 @@ impl CompletionSink for Shared {
     fn complete(&self, token: CompletionToken, resp: crate::coordinator::Response) {
         let mut resp = resp;
         resp.id = token.request; // echo the client-assigned id
-        self.push_done(token.conn, protocol::response_line(&resp), true);
+        let span = resp.span;
+        self.push_done(token.conn, protocol::response_line(&resp), true, span);
     }
 }
 
@@ -154,6 +168,7 @@ impl Reactor {
                 0 => None,
                 ms => Some(Duration::from_millis(ms)),
             },
+            obs: coord.obs().clone(),
         });
 
         let mut threads = Vec::with_capacity(io_threads + 1);
@@ -267,6 +282,15 @@ fn admit(
             .stats
             .rejected_at_capacity
             .fetch_add(1, Ordering::Relaxed);
+        // Rate-limited: a connection storm hits this once per accept.
+        if let Some(sup) = CAPACITY_LOG.allow() {
+            crate::warn!(
+                "server",
+                "rejecting connection: at cap ({}){}",
+                shared.max_connections,
+                suppressed_note(sup)
+            );
+        }
         // Structured reject so a load generator can tell shed-at-socket
         // from network failure.  Best effort: the socket is fresh and
         // non-blocking, so one short write almost always fits.
@@ -488,6 +512,13 @@ fn deliver(
         shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
         shared.stats.completions.fetch_add(1, Ordering::Relaxed);
     }
+    // Retire the timeline on the owning IO thread (its lane's ring) —
+    // even if the connection vanished, the request did complete.
+    if let Some(mut s) = d.span {
+        s.set(Stage::ReplyFlushed, shared.obs.now_ns());
+        let lane = ((d.conn >> LANE_SHIFT) as usize) % shared.lanes.len();
+        shared.obs.complete(&mut s, lane);
+    }
     let Some(c) = conns.get_mut(&d.conn) else {
         return; // connection closed while the request was in flight
     };
@@ -601,6 +632,9 @@ fn process_line(
     if line.trim().is_empty() {
         return;
     }
+    // Trace epoch: the line is fully framed — "accepted" in timeline
+    // terms.  Only inference requests carry the span further.
+    let t_accepted = shared.obs.now_ns();
     let parsed = protocol::parse_request(line);
     let c = match conns.get_mut(&token) {
         Some(c) => c,
@@ -617,6 +651,15 @@ fn process_line(
             let line =
                 protocol::stats_line_with(&coord.stats(), &shared.snapshot());
             c.wbuf.push_line(&line);
+        }
+        Ok(ClientMsg::Metrics) => {
+            let line = protocol::metrics_line(&coord.metrics(), &shared.snapshot());
+            c.wbuf.push_line(&line);
+        }
+        Ok(ClientMsg::Trace { n }) => {
+            let hub = coord.obs();
+            c.wbuf
+                .push_line(&protocol::trace_line(&hub.traces(n), &hub.slow_log(n)));
         }
         Ok(ClientMsg::Policy) => {
             c.wbuf.push_line(&protocol::policy_line(&coord.policy_snapshot()))
@@ -641,7 +684,7 @@ fn process_line(
                         &format!("{e:#}"),
                     ),
                 };
-                shared.push_done(token, line, false);
+                shared.push_done(token, line, false, None);
             });
         }
         Ok(ClientMsg::Infer {
@@ -649,18 +692,30 @@ fn process_line(
             image,
             slo,
             model,
-        }) => match submit_infer(shared, coord, token, id, model.as_deref(), &image, slo)
-        {
-            Some(reply) => c.wbuf.push_line(&reply),
-            None => {
-                c.pending += 1;
-                shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
-                shared
-                    .stats
-                    .peak_conn_in_flight
-                    .fetch_max(c.pending, Ordering::Relaxed);
+        }) => {
+            let mut span = shared.obs.begin_at(t_accepted);
+            span.set(Stage::Parsed, shared.obs.now_ns());
+            match submit_infer(
+                shared,
+                coord,
+                token,
+                id,
+                model.as_deref(),
+                &image,
+                slo,
+                span,
+            ) {
+                Some(reply) => c.wbuf.push_line(&reply),
+                None => {
+                    c.pending += 1;
+                    shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .stats
+                        .peak_conn_in_flight
+                        .fetch_max(c.pending, Ordering::Relaxed);
+                }
             }
-        },
+        }
     }
 }
 
@@ -669,6 +724,7 @@ fn process_line(
 /// completion sink.  `Some(line)` is an immediate reply (cache hit or
 /// structured reject — the sink was disarmed); `None` means the request
 /// is in flight and exactly one completion will follow.
+#[allow(clippy::too_many_arguments)]
 fn submit_infer(
     shared: &Arc<Shared>,
     coord: &Coordinator,
@@ -677,6 +733,7 @@ fn submit_infer(
     model: Option<&str>,
     image: &ImageSpec,
     slo: Slo,
+    span: Span,
 ) -> Option<String> {
     const ATTEMPTS: usize = 2;
     let mut decoded: Option<crate::tensor::PooledTensor> = None;
@@ -702,6 +759,14 @@ fn submit_infer(
         let wire_key = protocol::wire_key(image);
         if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
             resp.id = id;
+            // Wire-key hit: the reply is queued right here on the IO
+            // thread — stamp and retire the timeline immediately.
+            let mut s = span;
+            s.id = id;
+            s.flags |= flag::CACHE_HIT;
+            s.set(Stage::ReplyFlushed, shared.obs.now_ns());
+            let lane = ((conn >> LANE_SHIFT) as usize) % shared.lanes.len();
+            shared.obs.complete(&mut s, lane);
             return Some(protocol::response_line(&resp));
         }
         let hw = lease.input_hw();
@@ -716,7 +781,9 @@ fn submit_infer(
             shared.clone() as Arc<dyn CompletionSink>,
             CompletionToken { conn, request: id },
         );
-        return match coord.submit_on_sink(&lease, tensor, slo, wire_key, sink) {
+        // Span is Copy: a Closed retry re-submits the same timeline.
+        return match coord.submit_on_sink_traced(&lease, tensor, slo, wire_key, sink, span)
+        {
             Ok(()) => None,
             // Retired mid-swap: resubmit the already-decoded pixels to
             // the fresh generation (the disarmed sink delivered

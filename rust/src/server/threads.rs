@@ -16,8 +16,10 @@ use std::sync::Arc;
 
 use crate::config::ServerConfig;
 use crate::coordinator::{Coordinator, SubmitError};
+use crate::obs::{flag, Span, Stage};
 use crate::policy::Slo;
 use crate::tensor::PooledTensor;
+use crate::util::log::{suppressed_note, CAPACITY_LOG};
 
 use super::conn::AcceptBackoff;
 use super::protocol::{self, ClientMsg, ImageSpec};
@@ -56,10 +58,15 @@ impl ThreadsPlane {
                                 stats2
                                     .rejected_at_capacity
                                     .fetch_add(1, Ordering::Relaxed);
-                                crate::warn!(
-                                    "server",
-                                    "rejecting {peer}: at connection cap"
-                                );
+                                // Rate-limited: under a connection storm
+                                // this fires per accept (DESIGN.md §10).
+                                if let Some(sup) = CAPACITY_LOG.allow() {
+                                    crate::warn!(
+                                        "server",
+                                        "rejecting {peer}: at connection cap{}",
+                                        suppressed_note(sup)
+                                    );
+                                }
                                 // Structured reject, not a silent drop.
                                 let mut line = protocol::error_line_kind(
                                     0,
@@ -211,34 +218,68 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match protocol::parse_request(&line) {
-            Err(e) => {
-                protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}"))
-            }
-            Ok(ClientMsg::Ping) => "{\"ok\":true,\"pong\":true}".to_string(),
-            Ok(ClientMsg::Stats) => protocol::stats_line_with(
-                &coord.stats(),
-                &stats.snapshot("threads", 0, super::conn::BufPoolStats::default()),
+        // Trace epoch: the request line is fully read — "accepted" in
+        // timeline terms (DESIGN.md §10).  Only infer requests carry
+        // the span further.
+        let t_accepted = coord.obs().now_ns();
+        let (reply, span) = match protocol::parse_request(&line) {
+            Err(e) => (
+                protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}")),
+                None,
             ),
-            Ok(ClientMsg::Policy) => protocol::policy_line(&coord.policy_snapshot()),
-            Ok(ClientMsg::Models) => {
-                protocol::models_line(coord.default_model(), &coord.stats().models)
+            Ok(ClientMsg::Ping) => ("{\"ok\":true,\"pong\":true}".to_string(), None),
+            Ok(ClientMsg::Stats) => (
+                protocol::stats_line_with(
+                    &coord.stats(),
+                    &stats.snapshot("threads", 0, super::conn::BufPoolStats::default()),
+                ),
+                None,
+            ),
+            Ok(ClientMsg::Metrics) => (
+                protocol::metrics_line(
+                    &coord.metrics(),
+                    &stats.snapshot("threads", 0, super::conn::BufPoolStats::default()),
+                ),
+                None,
+            ),
+            Ok(ClientMsg::Trace { n }) => {
+                let hub = coord.obs();
+                (protocol::trace_line(&hub.traces(n), &hub.slow_log(n)), None)
             }
+            Ok(ClientMsg::Policy) => {
+                (protocol::policy_line(&coord.policy_snapshot()), None)
+            }
+            Ok(ClientMsg::Models) => (
+                protocol::models_line(coord.default_model(), &coord.stats().models),
+                None,
+            ),
             Ok(ClientMsg::Reload { model }) => match coord.reload(model.as_deref()) {
-                Ok(report) => protocol::reload_line(&report),
-                Err(e) => {
-                    protocol::error_line_kind(0, "reload_failed", &format!("{e:#}"))
-                }
+                Ok(report) => (protocol::reload_line(&report), None),
+                Err(e) => (
+                    protocol::error_line_kind(0, "reload_failed", &format!("{e:#}")),
+                    None,
+                ),
             },
             Ok(ClientMsg::Infer {
                 id,
                 image,
                 slo,
                 model,
-            }) => infer_reply(coord, id, model.as_deref(), &image, slo),
+            }) => {
+                let mut span = coord.obs().begin_at(t_accepted);
+                span.set(Stage::Parsed, coord.obs().now_ns());
+                infer_reply(coord, id, model.as_deref(), &image, slo, span)
+            }
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
+        // The reply bytes are handed to the kernel: stamp the final
+        // stage and retire the timeline.  Lane keyed by request id —
+        // this plane has no fixed IO threads to key by.
+        if let Some(mut s) = span {
+            s.set(Stage::ReplyFlushed, coord.obs().now_ns());
+            coord.obs().complete(&mut s, s.id as usize);
+        }
     }
 }
 
@@ -261,19 +302,26 @@ fn infer_reply(
     model: Option<&str>,
     image: &ImageSpec,
     slo: Slo,
-) -> String {
+    span: Span,
+) -> (String, Option<Span>) {
     const ATTEMPTS: usize = 2;
     let mut decoded: Option<PooledTensor> = None;
     for attempt in 0..ATTEMPTS {
         let lease = match coord.lease(model) {
             Ok(l) => l,
             Err(e @ SubmitError::UnknownModel(_)) => {
-                return protocol::error_line_kind(id, "unknown_model", &e.to_string())
+                return (
+                    protocol::error_line_kind(id, "unknown_model", &e.to_string()),
+                    None,
+                )
             }
             Err(e @ SubmitError::ModelUnavailable { .. }) => {
-                return protocol::error_line_kind(id, "model_unavailable", &e.to_string())
+                return (
+                    protocol::error_line_kind(id, "model_unavailable", &e.to_string()),
+                    None,
+                )
             }
-            Err(e) => return protocol::error_line(id, &e.to_string()),
+            Err(e) => return (protocol::error_line(id, &e.to_string()), None),
         };
         // Wire-key fast path: a repeat of the same raw image spec is
         // answered from this model's response cache before any pixel is
@@ -282,7 +330,10 @@ fn infer_reply(
         let wire_key = protocol::wire_key(image);
         if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
             resp.id = id;
-            return protocol::response_line(&resp);
+            let mut s = span;
+            s.id = id;
+            s.flags |= flag::CACHE_HIT;
+            return (protocol::response_line(&resp), Some(s));
         }
         // Reuse the pixels reclaimed from a Closed first attempt when
         // they still fit the (possibly re-sized) fresh generation.
@@ -290,17 +341,21 @@ fn infer_reply(
         let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
             Some(t) => t,
             None => match super::load_image(image, hw, &lease.arena()) {
-                Err(e) => return protocol::error_line(id, &format!("image: {e}")),
+                Err(e) => {
+                    return (protocol::error_line(id, &format!("image: {e}")), None)
+                }
                 Ok(t) => t,
             },
         };
-        return match coord.submit_on_reclaim(&lease, tensor, slo, wire_key) {
+        // Span is Copy: a Closed retry re-submits the same timeline.
+        return match coord.submit_on_reclaim_traced(&lease, tensor, slo, wire_key, span)
+        {
             Err((SubmitError::Closed, img)) if attempt + 1 < ATTEMPTS => {
                 decoded = img;
                 continue;
             }
             Err((SubmitError::Overloaded, _)) => {
-                protocol::error_line_kind(id, "overloaded", "overloaded")
+                (protocol::error_line_kind(id, "overloaded", "overloaded"), None)
             }
             Err((
                 SubmitError::Shed {
@@ -308,16 +363,16 @@ fn infer_reply(
                     deadline_ms,
                 },
                 _,
-            )) => protocol::shed_line(id, predicted_ms, deadline_ms),
-            Err((e, _)) => protocol::error_line(id, &e.to_string()),
+            )) => (protocol::shed_line(id, predicted_ms, deadline_ms), None),
+            Err((e, _)) => (protocol::error_line(id, &e.to_string()), None),
             Ok(rx) => match rx.recv() {
                 Ok(mut resp) => {
                     resp.id = id; // echo client id, not internal id
-                    protocol::response_line(&resp)
+                    (protocol::response_line(&resp), resp.span)
                 }
-                Err(_) => protocol::error_line(id, "worker gone"),
+                Err(_) => (protocol::error_line(id, "worker gone"), None),
             },
         };
     }
-    protocol::error_line(id, "closed")
+    (protocol::error_line(id, "closed"), None)
 }

@@ -43,6 +43,7 @@ pub fn sim_exec(model: &str, generation: u64) -> Arc<ExecCtx> {
         arena: TensorPool::disabled(),
         ctx: Arc::new(PolicyCtx::new(0.2, 0)),
         counters: Arc::new(ModelCounters::default()),
+        stage_hist: Arc::new(crate::obs::StageHist::new()),
     })
 }
 
@@ -93,5 +94,6 @@ pub fn dummy_request(id: u64, deadline_ms: Option<f64>) -> Request {
         cache_key: None,
         wire_key: None,
         reply: crate::coordinator::ReplySink::channel(tx),
+        span: crate::obs::Span::default(),
     }
 }

@@ -4,7 +4,7 @@
 //! a single `eprintln!`, so disabled levels cost one atomic load on the
 //! request path (the paper's engine keeps the hot loop lean; so do we).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::time::Instant;
 
 pub const ERROR: u8 = 0;
@@ -45,6 +45,101 @@ pub fn log(level: u8, target: &str, msg: std::fmt::Arguments<'_>) {
         _ => "DEBUG",
     };
     eprintln!("[{:9.3}] {} {}: {}", elapsed(), tag, target, msg);
+}
+
+/// Token-bucket rate limiter for WARN/ERROR lines on request-path
+/// failure branches (shed, reject, at-capacity).  Under sustained
+/// overload those branches fire per-request; unthrottled `eprintln!`
+/// there turns the log into the bottleneck.  The bucket admits a burst
+/// then refills at a steady rate; suppressed lines are counted and the
+/// count is drained into the next admitted line (`suppressed_note`),
+/// so no event disappears without a trace.
+///
+/// Lock-free: state is one packed u64 — high 32 bits the last-refill
+/// timestamp (ms since process start), low 32 bits the current token
+/// balance in millitokens — updated by compare-exchange.  A lost race
+/// just retries; a suppressed call is a single `fetch_add`.
+pub struct RateLimiter {
+    /// `(last_refill_ms as u64) << 32 | millitokens`.
+    state: AtomicU64,
+    /// Drained (and reported) by the next admitted line.
+    suppressed: AtomicU64,
+    burst_millitokens: u32,
+    refill_per_sec_millitokens: u32,
+}
+
+impl RateLimiter {
+    /// A bucket admitting `burst` immediate lines, refilling at
+    /// `per_sec` lines per second (const so statics need no lazy init).
+    pub const fn new(burst: u32, per_sec: u32) -> Self {
+        Self {
+            state: AtomicU64::new((burst * 1000) as u64),
+            suppressed: AtomicU64::new(0),
+            burst_millitokens: burst * 1000,
+            refill_per_sec_millitokens: per_sec * 1000,
+        }
+    }
+
+    /// Try to take one token.  `Some(n)` admits the line and drains the
+    /// count of lines suppressed since the last admitted one (render it
+    /// with [`suppressed_note`]); `None` suppresses this line.
+    pub fn allow(&self) -> Option<u64> {
+        self.allow_at((elapsed() * 1000.0) as u64)
+    }
+
+    /// [`RateLimiter::allow`] against an explicit clock (ms on any
+    /// monotonic scale) — the testable core.
+    pub fn allow_at(&self, now_ms: u64) -> Option<u64> {
+        let mut cur = self.state.load(Ordering::Relaxed);
+        loop {
+            let last_ms = cur >> 32;
+            let tokens = (cur & 0xffff_ffff) as u32;
+            // Saturate the elapsed window so a huge gap can't overflow
+            // the refill product; the balance caps at burst anyway.
+            let dt_ms = now_ms.saturating_sub(last_ms).min(1 << 20) as u32;
+            let refilled = (tokens as u64
+                + dt_ms as u64 * self.refill_per_sec_millitokens as u64 / 1000)
+                .min(self.burst_millitokens as u64) as u32;
+            let (next_tokens, admit) = if refilled >= 1000 {
+                (refilled - 1000, true)
+            } else {
+                (refilled, false)
+            };
+            let next = (now_ms.max(last_ms) << 32) | next_tokens as u64;
+            match self.state.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    return if admit {
+                        Some(self.suppressed.swap(0, Ordering::Relaxed))
+                    } else {
+                        self.suppressed.fetch_add(1, Ordering::Relaxed);
+                        None
+                    };
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Shared limiter for shed/reject warns on the admission path.
+pub static SHED_LOG: RateLimiter = RateLimiter::new(10, 2);
+
+/// Shared limiter for connection-cap warns on the accept path.
+pub static CAPACITY_LOG: RateLimiter = RateLimiter::new(10, 2);
+
+/// Render a drained suppression count as a log suffix: empty for 0,
+/// `" [17 suppressed]"` otherwise.
+pub fn suppressed_note(n: u64) -> String {
+    if n == 0 {
+        String::new()
+    } else {
+        format!(" [{n} suppressed]")
+    }
 }
 
 #[macro_export]
@@ -99,5 +194,59 @@ mod tests {
         let a = elapsed();
         let b = elapsed();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn rate_limiter_admits_burst_then_throttles() {
+        let rl = RateLimiter::new(3, 1);
+        assert_eq!(rl.allow_at(0), Some(0));
+        assert_eq!(rl.allow_at(0), Some(0));
+        assert_eq!(rl.allow_at(0), Some(0));
+        // Burst exhausted: everything at the same instant is dropped.
+        for _ in 0..5 {
+            assert_eq!(rl.allow_at(0), None);
+        }
+        // One second later one token has refilled, and the admitted
+        // line drains the 5 suppressed ones.
+        assert_eq!(rl.allow_at(1000), Some(5));
+        assert_eq!(rl.allow_at(1000), None);
+    }
+
+    #[test]
+    fn rate_limiter_refill_caps_at_burst() {
+        let rl = RateLimiter::new(2, 10);
+        assert_eq!(rl.allow_at(0), Some(0));
+        assert_eq!(rl.allow_at(0), Some(0));
+        assert_eq!(rl.allow_at(0), None);
+        // A long idle gap refills to the cap (2), not per_sec × gap.
+        let t = 3_600_000;
+        assert_eq!(rl.allow_at(t), Some(1));
+        assert_eq!(rl.allow_at(t), Some(0));
+        assert_eq!(rl.allow_at(t), None);
+    }
+
+    #[test]
+    fn rate_limiter_partial_refill() {
+        let rl = RateLimiter::new(1, 2); // 2 tokens/sec = 1 per 500 ms
+        assert_eq!(rl.allow_at(0), Some(0));
+        assert_eq!(rl.allow_at(100), None); // only 0.2 tokens back
+        assert_eq!(rl.allow_at(499), None);
+        assert!(rl.allow_at(600).is_some());
+    }
+
+    #[test]
+    fn rate_limiter_stale_clock_does_not_panic() {
+        let rl = RateLimiter::new(1, 1);
+        assert_eq!(rl.allow_at(5000), Some(0));
+        // Clock going backwards (cross-thread skew) just sees an empty
+        // elapsed window — no underflow, no token minting.
+        assert_eq!(rl.allow_at(100), None);
+        assert!(rl.allow_at(6500).is_some());
+    }
+
+    #[test]
+    fn suppressed_note_formats() {
+        assert_eq!(suppressed_note(0), "");
+        assert_eq!(suppressed_note(17), " [17 suppressed]");
     }
 }

@@ -387,6 +387,88 @@ fn threads_plane_holds_the_same_wire_contract() {
     stop_all(server, coord);
 }
 
+/// The full `"conn"` stats-section contract plus the observability
+/// round-trip (`{"cmd":"metrics"}` / `{"cmd":"trace"}`) — asserted
+/// identically against one plane.  Run for both planes below: the
+/// threads plane is the E13 ablation baseline and must expose the same
+/// wire surface, not a subset.
+fn assert_conn_section_and_obs_roundtrip(addr: &str, plane: &str, io_threads: usize) {
+    let mut c = Client::connect(addr).unwrap();
+    // Traffic first, so counters have something to show.
+    for i in 0..4 {
+        let r = c.infer_synthetic(i, 300 + i).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+
+    // Every documented "conn" field is present with a sane value.
+    let stats = c.stats().unwrap();
+    let conn = stats.get("conn").expect("stats must carry a conn section");
+    assert_eq!(conn.get("plane").and_then(|v| v.as_str()), Some(plane));
+    assert_eq!(conn.usize_of("io_threads").unwrap(), io_threads);
+    assert!(conn.usize_of("connections").unwrap() >= 1, "we are connected");
+    assert!(conn.usize_of("accepted").unwrap() >= 1);
+    for key in [
+        "rejected_at_capacity",
+        "oversize_rejected",
+        "backpressure_events",
+        "idle_evicted",
+        "in_flight",
+        "peak_conn_in_flight",
+        "completions",
+    ] {
+        assert!(conn.usize_of(key).is_ok(), "conn section missing {key}");
+    }
+    let bufs = conn.get("buffers").expect("conn section reports buffers");
+    assert!(bufs.usize_of("free").is_ok());
+    assert!(bufs.usize_of("outstanding").is_ok());
+    // The proc section (satellite of the same PR) rides on stats too.
+    let proc = stats.get("proc").expect("stats must carry a proc section");
+    assert!(proc.f64_of("rss_mb").unwrap() > 1.0);
+    assert!(proc.usize_of("open_fds").unwrap() >= 3);
+
+    // `{"cmd":"metrics"}` is a superset: same conn section, same proc
+    // section, plus stages and trace counters.
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let mconn = m.get("conn").expect("metrics must carry the conn section");
+    assert_eq!(mconn.get("plane").and_then(|v| v.as_str()), Some(plane));
+    assert!(m.get("proc").is_some(), "metrics must carry the proc section");
+    assert!(m.get("stages").and_then(|v| v.as_arr()).is_some());
+    let t = m.get("trace").expect("metrics must carry trace counters");
+    assert!(t.usize_of("begun").unwrap() >= 4);
+    assert!(t.usize_of("rings").unwrap() >= 1);
+    assert!(t.usize_of("sample_period").is_ok());
+
+    // `{"cmd":"trace"}` answers a structured line on this plane too.
+    let tr = c.trace(8).unwrap();
+    assert_eq!(tr.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(tr.get("traces").and_then(|v| v.as_arr()).is_some());
+    assert!(tr.get("slow").and_then(|v| v.as_arr()).is_some());
+    drop(c);
+}
+
+#[test]
+fn conn_stats_section_event_plane() {
+    let (server, coord) = start("conn_section_event", ServerConfig::default());
+    let io = ServerConfig::default().io_threads;
+    assert_conn_section_and_obs_roundtrip(&server.addr().to_string(), "event", io);
+    stop_all(server, coord);
+}
+
+#[test]
+fn conn_stats_section_threads_plane() {
+    let (server, coord) = start(
+        "conn_section_threads",
+        ServerConfig {
+            conn_plane: ConnPlane::Threads,
+            ..ServerConfig::default()
+        },
+    );
+    // The threads plane has no fixed io fleet; it reports 0.
+    assert_conn_section_and_obs_roundtrip(&server.addr().to_string(), "threads", 0);
+    stop_all(server, coord);
+}
+
 #[test]
 fn event_plane_thread_count_independent_of_connections() {
     let (server, coord) = start(

@@ -1,0 +1,227 @@
+//! End-to-end observability (DESIGN.md §10): the tracing plane over a
+//! live server — `{"cmd":"metrics"}` merges every subsystem into one
+//! line, `{"cmd":"trace"}` returns retained timelines, and a request
+//! that misses its deadline is always captured in the slow log with all
+//! eight stage marks in monotonic order.
+//!
+//! The deadline miss is staged deterministically: worker replicas build
+//! lazily on first serve and `SimEngine::new` reads ZULUKO_SIM_EXEC_US
+//! at that moment, so setting the env var after server start but before
+//! the first request gives an engine whose real cost (500ms/image)
+//! dwarfs the admission predictor's cold prior (1ms/image) — the
+//! request is admitted against a 200ms budget, executes, and misses.
+//! The env var is process-global, so every test here serializes on one
+//! lock and cleans up before releasing it.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use zuluko::config::Config;
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::sim::SIM_EXEC_ENV;
+use zuluko::engine::EngineKind;
+use zuluko::obs::STAGE_NAMES;
+use zuluko::server::client::Client;
+use zuluko::server::Server;
+use zuluko::util::json::Json;
+
+const HW: usize = 64;
+const MODEL: &str = "m";
+
+/// Serializes the env-var window across tests in this binary.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn start(tag: &str, sample_rate: f64) -> (Server, Arc<Coordinator>) {
+    let dir = std::env::temp_dir().join(format!("zuluko_obs_e2e_{tag}_{}", std::process::id()));
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, 100, HW, &[1, 2, 4]).unwrap();
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(5),
+        queue_capacity: 64,
+        ..Config::default()
+    };
+    cfg.registry.upsert(MODEL, dir);
+    cfg.registry.default_model = Some(MODEL.to_string());
+    cfg.obs.trace_sample_rate = sample_rate;
+    cfg.validate().unwrap();
+    let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+    let s = Server::start_with(coord.clone(), "127.0.0.1:0", &cfg.server).unwrap();
+    (s, coord)
+}
+
+fn stop_all(server: Server, mut coord: Arc<Coordinator>) {
+    server.stop();
+    let coord = loop {
+        match Arc::try_unwrap(coord) {
+            Ok(c) => break c,
+            Err(arc) => {
+                coord = arc;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    coord.shutdown();
+}
+
+/// Marks present in a serialized span, as (stage index, ms offset),
+/// in stage order.
+fn present_marks(span: &Json) -> Vec<(usize, f64)> {
+    let marks = span.get("marks").expect("span has marks");
+    STAGE_NAMES
+        .iter()
+        .enumerate()
+        .filter_map(|(i, name)| marks.f64_of(name).ok().map(|v| (i, v)))
+        .collect()
+}
+
+fn assert_marks_monotonic(span: &Json) {
+    let pm = present_marks(span);
+    for w in pm.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1,
+            "marks out of order: stage {} at {}ms after stage {} at {}ms ({span:?})",
+            w[1].0,
+            w[1].1,
+            w[0].0,
+            w[0].1
+        );
+    }
+}
+
+#[test]
+fn metrics_merges_every_subsystem_and_traces_round_trip() {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (server, coord) = start("metrics", 1.0);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Distinct seeds: every request is a real inference (no wire-key
+    // cache hits), so full 8-stage timelines exist.
+    const N: u64 = 12;
+    for i in 0..N {
+        let r = c.infer_synthetic(i, 500 + i).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+    }
+
+    // --- {"cmd":"metrics"}: one line, every subsystem present. ---
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(m.usize_of("completed").unwrap() >= N as usize);
+    for section in ["latency", "pool", "conn", "proc", "trace"] {
+        assert!(m.get(section).is_some(), "metrics missing {section}");
+    }
+
+    // Per-stage histogram rows: real durations, sane quantiles.
+    let stages = m.get("stages").and_then(|v| v.as_arr()).expect("stages");
+    assert!(!stages.is_empty(), "no stage rows after {N} requests");
+    for row in stages {
+        let name = row.str_of("stage").expect("row has stage name");
+        assert!(STAGE_NAMES.contains(&name), "unknown stage {name}");
+        assert!(row.usize_of("count").unwrap() >= 1);
+        let p50 = row.f64_of("p50_ms").unwrap();
+        let p99 = row.f64_of("p99_ms").unwrap();
+        let max = row.f64_of("max_ms").unwrap();
+        assert!(p50 >= 0.0 && p99 >= p50 && max >= p99, "{name}: {p50}/{p99}/{max}");
+    }
+    // The inference segment itself must have been measured.
+    assert!(
+        stages.iter().any(|r| r.str_of("stage").ok() == Some("infer_done")),
+        "no infer_done row in {stages:?}"
+    );
+    let ms = m.get("model_stages").and_then(|v| v.as_arr()).unwrap();
+    assert!(ms.iter().any(|r| r.str_of("model").ok() == Some(MODEL)));
+
+    // Trace counters: rate 1.0 records every completion.
+    let t = m.get("trace").unwrap();
+    assert_eq!(t.usize_of("sample_period").ok(), Some(1));
+    assert!(t.usize_of("begun").unwrap() >= N as usize);
+    assert!(t.usize_of("completed").unwrap() >= N as usize);
+    assert!(t.usize_of("recorded").unwrap() >= N as usize);
+    assert_eq!(t.usize_of("sampled_out").ok(), Some(0));
+
+    // --- {"cmd":"trace"}: retained timelines, monotonic, complete. ---
+    let tr = c.trace(64).unwrap();
+    assert_eq!(tr.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let traces = tr.get("traces").and_then(|v| v.as_arr()).expect("traces");
+    assert!(traces.len() >= N as usize, "retained {} of {N}", traces.len());
+    for span in traces {
+        assert_marks_monotonic(span);
+        let flags = span.get("flags").and_then(|v| v.as_arr()).unwrap();
+        assert!(
+            flags.iter().any(|f| f.as_str() == Some("sampled")),
+            "retained span not marked sampled: {span:?}"
+        );
+    }
+    // At least one full 8-stage timeline among them.
+    assert!(
+        traces.iter().any(|s| present_marks(s).len() == STAGE_NAMES.len()),
+        "no complete 8-stage timeline retained"
+    );
+
+    // The n clamp: asking for 1 returns at most 1.
+    let one = c.trace(1).unwrap();
+    assert!(one.get("traces").and_then(|v| v.as_arr()).unwrap().len() <= 1);
+
+    drop(c);
+    stop_all(server, coord);
+}
+
+#[test]
+fn deadline_missed_request_lands_in_slow_log_with_full_timeline() {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Sample rate 0: the slow log must capture the anomaly even with
+    // per-request tracing sampled out entirely.
+    let (server, coord) = start("miss", 0.0);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Inflate the sim engine *after* start, *before* the first request:
+    // the worker's replica builds lazily on first serve and reads this.
+    std::env::set_var(SIM_EXEC_ENV, "500000"); // 500ms/image
+    let r = c.infer_synthetic_slo(1, 42, Some(200.0), None).unwrap();
+    std::env::remove_var(SIM_EXEC_ENV);
+    assert!(r.ok, "admitted request must still answer: {:?}", r.error);
+    assert!(
+        r.total_ms > 200.0,
+        "engine not inflated (total {}ms) — miss not staged",
+        r.total_ms
+    );
+
+    let tr = c.trace(32).unwrap();
+    let slow = tr.get("slow").and_then(|v| v.as_arr()).expect("slow log");
+    let miss = slow
+        .iter()
+        .find(|s| {
+            s.get("flags")
+                .and_then(|v| v.as_arr())
+                .is_some_and(|f| f.iter().any(|x| x.as_str() == Some("deadline_missed")))
+        })
+        .unwrap_or_else(|| panic!("no deadline_missed span in slow log: {slow:?}"));
+
+    // All eight stages stamped, in order, and the total really blew
+    // through the 200ms budget recorded on the span.
+    assert_eq!(
+        present_marks(miss).len(),
+        STAGE_NAMES.len(),
+        "missed span lacks stage marks: {miss:?}"
+    );
+    assert_marks_monotonic(miss);
+    assert_eq!(miss.f64_of("deadline_ms").ok(), Some(200.0));
+    assert!(miss.f64_of("total_ms").unwrap() > 200.0);
+
+    // Sampled out (rate 0): the anomaly is in the slow log only — the
+    // trace rings hold zero residue.
+    assert!(
+        tr.get("traces").and_then(|v| v.as_arr()).unwrap().is_empty(),
+        "rate 0 must retain nothing in the rings"
+    );
+    let m = c.metrics().unwrap();
+    let t = m.get("trace").unwrap();
+    assert!(t.usize_of("anomalies").unwrap() >= 1);
+    assert_eq!(t.usize_of("recorded").ok(), Some(0));
+
+    drop(c);
+    stop_all(server, coord);
+}

@@ -1,0 +1,211 @@
+//! Trace-plane property tests (DESIGN.md §10): the invariants the
+//! seqlock ring and sampling hub must hold under any interleaving —
+//!
+//! * a push never blocks and the ring never retains more than its
+//!   capacity, no matter how many writers race;
+//! * a snapshot never returns a torn span (a slot mixing two writes)
+//!   and never more than `min(k, capacity)` entries;
+//! * with sampling compiled in but sampled out (rate 0), completed
+//!   requests leave zero residue — no retained timelines, no slow-log
+//!   entries, no recorded count;
+//! * with rate 1 every completion is retained (up to ring capacity).
+//!
+//! These run hot (hundreds of thousands of pushes) but allocation-free
+//! on the writer side, so they finish in well under a second each.
+
+use std::time::Instant;
+
+use zuluko::obs::{flag, ObsHub, Span, Stage, TraceRing, STAGES};
+
+/// A self-checkable span: every word is a pure function of `v`, so a
+/// torn read (two writers' words mixed in one snapshot entry) breaks
+/// the relation with overwhelming probability.
+fn coded_span(v: u64) -> Span {
+    let mut marks = [0u64; STAGES];
+    for (i, m) in marks.iter_mut().enumerate() {
+        *m = v.wrapping_mul(31).wrapping_add(i as u64 + 1).max(1);
+    }
+    Span {
+        id: v,
+        marks,
+        deadline_ns: v.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        flags: v ^ 0xABCD,
+    }
+}
+
+fn assert_not_torn(s: &Span) {
+    let v = s.id;
+    for (i, &m) in s.marks.iter().enumerate() {
+        assert_eq!(
+            m,
+            v.wrapping_mul(31).wrapping_add(i as u64 + 1).max(1),
+            "torn mark {i} in span coded {v}"
+        );
+    }
+    assert_eq!(s.deadline_ns, v.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    assert_eq!(s.flags, v ^ 0xABCD, "torn flags in span coded {v}");
+}
+
+#[test]
+fn concurrent_pushes_never_block_never_exceed_cap_never_tear() {
+    const CAP: usize = 64;
+    const WRITERS: u64 = 8;
+    const PER: u64 = 20_000;
+    let ring = TraceRing::new(CAP);
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for t in 0..WRITERS {
+            let ring = &ring;
+            scope.spawn(move || {
+                for i in 0..PER {
+                    ring.push(&coded_span((t << 32) | i));
+                }
+            });
+        }
+        // A racing reader: every snapshot it takes mid-storm must be
+        // bounded and tear-free (the seqlock skips in-progress slots).
+        let ring = &ring;
+        scope.spawn(move || {
+            for _ in 0..500 {
+                let snap = ring.snapshot(usize::MAX);
+                assert!(snap.len() <= CAP, "snapshot over cap: {}", snap.len());
+                for s in &snap {
+                    assert_not_torn(s);
+                }
+            }
+        });
+    });
+
+    // 160k contended pushes: seconds would mean a writer blocked.
+    assert!(
+        t0.elapsed().as_secs() < 20,
+        "pushes took {:?} — writers are blocking",
+        t0.elapsed()
+    );
+    assert!(ring.len() <= CAP);
+    let fin = ring.snapshot(usize::MAX);
+    assert!(fin.len() <= CAP);
+    for s in &fin {
+        assert_not_torn(s);
+    }
+}
+
+#[test]
+fn snapshot_is_bounded_by_k_and_cap_and_keeps_newest() {
+    const CAP: usize = 32;
+    let ring = TraceRing::new(CAP);
+    assert!(ring.is_empty());
+    assert_eq!(ring.capacity(), CAP);
+
+    const N: u64 = (CAP as u64) * 10;
+    for v in 0..N {
+        ring.push(&coded_span(v));
+    }
+    assert_eq!(ring.len(), CAP, "ring len must saturate at capacity");
+
+    for k in [0usize, 1, CAP / 2, CAP, CAP * 4, usize::MAX] {
+        let snap = ring.snapshot(k);
+        assert!(snap.len() <= k.min(CAP), "k={k} gave {}", snap.len());
+    }
+
+    // A full snapshot after sequential pushes is exactly the newest
+    // CAP spans — older ones were overwritten, none duplicated.
+    let mut ids: Vec<u64> = ring.snapshot(CAP).iter().map(|s| s.id).collect();
+    ids.sort_unstable();
+    let want: Vec<u64> = (N - CAP as u64..N).collect();
+    assert_eq!(ids, want, "snapshot lost or duplicated recent spans");
+}
+
+/// Drive one span through all eight stages and complete it on the hub.
+fn run_span(hub: &ObsHub, deadline_ns: u64) -> Span {
+    let mut s = hub.begin();
+    s.id = 7;
+    s.deadline_ns = deadline_ns;
+    for stage in [
+        Stage::Parsed,
+        Stage::Admitted,
+        Stage::Dequeued,
+        Stage::BatchFormed,
+        Stage::InferStart,
+        Stage::InferDone,
+        Stage::ReplyFlushed,
+    ] {
+        s.set(stage, hub.now_ns());
+    }
+    hub.complete(&mut s, s.id as usize);
+    s
+}
+
+#[test]
+fn sampled_out_requests_leave_zero_residue() {
+    // Rate 0: tracing compiled in, every request sampled out.  Stay
+    // under SLOW_WARMUP so the tail estimator can never flag anomalies.
+    let hub = ObsHub::new(0.0, 128, 64, 2);
+    const N: u64 = 400;
+    for _ in 0..N {
+        let s = run_span(&hub, 0);
+        assert!(!s.sampled());
+        assert!(s.monotonic(), "stamps out of order: {s:?}");
+    }
+    assert!(hub.traces(10_000).is_empty(), "residue in trace rings");
+    assert!(hub.slow_log(10_000).is_empty(), "residue in slow log");
+    let c = hub.counters();
+    assert_eq!(c.begun, N);
+    assert_eq!(c.completed, N);
+    assert_eq!(c.recorded, 0);
+    assert_eq!(c.sampled_out, N);
+    assert_eq!(c.anomalies, 0);
+    assert_eq!(c.sample_period, 0);
+}
+
+#[test]
+fn rate_one_retains_every_completion_up_to_capacity() {
+    let hub = ObsHub::new(1.0, 1024, 64, 2);
+    const N: u64 = 100;
+    for _ in 0..N {
+        let s = run_span(&hub, 0);
+        assert!(s.sampled());
+    }
+    let traces = hub.traces(10_000);
+    assert_eq!(traces.len() as u64, N, "rate 1 must retain everything");
+    for s in &traces {
+        assert!(s.monotonic());
+        assert_eq!(
+            s.marks.iter().filter(|&&m| m != 0).count(),
+            STAGES,
+            "retained span missing stage marks: {s:?}"
+        );
+    }
+    let c = hub.counters();
+    assert_eq!(c.recorded, N);
+    assert_eq!(c.sampled_out, 0);
+    assert_eq!(c.sample_period, 1);
+}
+
+#[test]
+fn hub_stays_bounded_under_concurrent_anomalies() {
+    // Tiny rings, every span both sampled and deadline-missed: the
+    // worst retention case.  Memory must stay bounded by the configured
+    // capacities no matter how many requests flow.
+    const RING: usize = 32;
+    const SLOW: usize = 16;
+    let hub = ObsHub::new(1.0, RING, SLOW, 2);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let hub = &hub;
+            scope.spawn(move || {
+                for _ in 0..5_000 {
+                    // 1ns budget: every span misses its deadline.
+                    let s = run_span(hub, 1);
+                    assert!(s.flags & flag::DEADLINE_MISSED != 0);
+                }
+            });
+        }
+    });
+    assert!(hub.traces(usize::MAX).len() <= 2 * RING);
+    assert!(hub.slow_log(usize::MAX).len() <= SLOW);
+    let c = hub.counters();
+    assert_eq!(c.completed, 20_000);
+    assert_eq!(c.anomalies, 20_000);
+}

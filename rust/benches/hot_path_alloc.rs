@@ -35,17 +35,32 @@
 //! does; the bytes ratio and the absolute event delta state it
 //! exactly.
 //!
+//! E15 rider (the wire plane): the same binary also measures the
+//! socket-to-reply request path under both wire parsers — the tape
+//! scanner (`--wire-parser tape`, default) vs the legacy tree parser —
+//! over an identical pre-rendered request stream.  Replies must be
+//! byte-for-byte identical (asserted via a hash over every reply
+//! line); the parsers may differ only in ingest allocations and
+//! latency.  The 50% gate applies to the **ingest segment** (framing +
+//! parse + wire key + cache probe) — the exact work the tape scanner
+//! replaces; decode/infer/reply-serialization allocations are identical
+//! in both modes by construction and are reported in the totals.
+//!
 //! Run: cargo bench --bench hot_path_alloc [-- --quick] [--json PATH]
 
 use std::time::Instant;
 
 use zuluko::bench::BenchArgs;
+use zuluko::config::WireParser;
+use zuluko::coordinator::Response;
 use zuluko::metrics::Histogram;
-use zuluko::policy::{image_key, CachedResult, ResponseCache};
+use zuluko::policy::{bytes_key, image_key, CachedResult, ResponseCache};
+use zuluko::server::protocol::{self, ClientMsg, ImageSpec};
 use zuluko::tensor::{Lease, Tensor, TensorPool, TensorView};
 use zuluko::testkit::alloc::CountingAlloc;
 use zuluko::testkit::rng::Rng;
 use zuluko::util::json::Json;
+use zuluko::util::wire::WireTape;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
@@ -226,6 +241,142 @@ fn run_legacy_mode(warmup: usize, waves: usize) -> ModeResult {
     finish("legacy", before, t_start, samples, waves, sink)
 }
 
+/// Deterministic request stream for the wire modes: a bounded seed set
+/// so repeats hit the wire-key cache (the duplicated-frame case the
+/// tape fast path targets), with enough field and spelling variety to
+/// exercise both parsers' full grammar — optional SLO fields, model
+/// names (plain and escaped), a non-canonical number spelling, and
+/// leading whitespace.
+fn wire_request_line(i: usize) -> Vec<u8> {
+    let seed = (i * 31) % 96;
+    match i % 5 {
+        0 => format!(
+            "{{\"id\":{i},\"image\":{{\"synthetic\":{seed}}},\
+             \"deadline_ms\":2500,\"priority\":\"hi\"}}"
+        ),
+        1 => format!(
+            "  {{\"id\":{i},\"image\":{{\"synthetic\":{seed}}},\
+             \"model\":\"squeezenet\"}}"
+        ),
+        // Non-canonical number spelling: the tape's span fast path must
+        // fall back to re-formatting the seed, and still agree with the
+        // tree parser's key.
+        2 => format!("{{\"id\":{i},\"image\":{{\"synthetic\":{seed}e0}}}}"),
+        3 => format!(
+            "{{\"id\":{i},\"image\":{{\"synthetic\":{seed}}},\
+             \"model\":\"sq\\u0075eezenet\"}}"
+        ),
+        _ => format!("{{\"id\":{i},\"image\":{{\"synthetic\":{seed}}}}}"),
+    }
+    .into_bytes()
+}
+
+/// The socket-to-reply loop, parameterized by wire parser (E15).
+/// Mirrors the per-request life on an IO lane: framing is already done
+/// (both planes frame with `next_line_span`, which never allocates),
+/// then parse + wire key -> cache probe -> on a miss decode into a
+/// pooled lease, infer, extract, cache fill -> serialize the reply.
+/// Reply timing fields are pinned to 0.0 so tape and tree replies can
+/// be compared byte for byte via the reply-hash sink.
+///
+/// Returns the mode result plus the ingest (parse + wire key)
+/// allocation events per request — the segment the tape scanner
+/// replaces; everything downstream is identical in both modes by
+/// construction.
+fn run_wire_mode(
+    name: &'static str,
+    parser: WireParser,
+    warmup: usize,
+    waves: usize,
+) -> (ModeResult, f64) {
+    let pool = TensorPool::with_mode(true, 16);
+    let cache = ResponseCache::new(CACHE_CAP);
+    let mut tape = WireTape::new();
+    let model: std::sync::Arc<str> = std::sync::Arc::from("squeezenet");
+    let lines: Vec<Vec<u8>> = (0..(warmup + waves) * BATCH)
+        .map(wire_request_line)
+        .collect();
+    let mut samples: Vec<f64> = Vec::with_capacity(waves * BATCH);
+    let mut scores = vec![0.0f32; CLASSES];
+    let mut sink = 0u64;
+    let mut ingest_allocs = 0u64;
+    let mut before = CountingAlloc::snapshot();
+    let mut t_start = Instant::now();
+
+    for wave in 0..warmup + waves {
+        if wave == warmup {
+            before = CountingAlloc::snapshot();
+            t_start = Instant::now();
+            ingest_allocs = 0;
+        }
+        for slot in 0..BATCH {
+            let line: &[u8] = &lines[wave * BATCH + slot];
+            let t0 = Instant::now();
+            // Ingest: the segment the tape scanner replaces.
+            let s0 = CountingAlloc::snapshot();
+            let (msg, wire_key) = match protocol::parse_line(parser, line, &mut tape) {
+                Ok(parsed) => parsed,
+                Err(e) => panic!("bench request line rejected: {e}"),
+            };
+            ingest_allocs += CountingAlloc::since(s0).0;
+            let (id, image) = match msg {
+                ClientMsg::Infer { id, image, .. } => (id, image),
+                _ => panic!("bench line parsed as a non-infer message"),
+            };
+            // The rest of the request's life is identical in both modes.
+            let (top1, top5, cached) = match wire_key.and_then(|k| cache.peek(k)) {
+                Some(c) => (c.top1, c.top5, true),
+                None => {
+                    let seed = match &image {
+                        ImageSpec::Synthetic(s) => *s,
+                        ImageSpec::Ppm(_) => 0,
+                    };
+                    let mut l = pool.lease(PER);
+                    decode_into(&mut l, &mut Rng::new(seed.wrapping_add(1)));
+                    fake_infer(TensorView::new(&[1, HW, HW, 3], &l), &mut scores);
+                    let sv = TensorView::new(&[1, CLASSES], &scores);
+                    let row = sv.row(0);
+                    let (top1, top5) = (row.argmax(), row.topk(5));
+                    if let Some(k) = wire_key {
+                        cache.put(
+                            k,
+                            CachedResult {
+                                top1,
+                                top5: top5.clone(),
+                            },
+                        );
+                    }
+                    (top1, top5, false)
+                }
+            };
+            let reply = protocol::response_line(&Response {
+                id,
+                top1,
+                top5,
+                queue_ms: 0.0,
+                exec_ms: 0.0,
+                total_ms: 0.0,
+                batch_size: 1,
+                worker: 0,
+                engine: "sim",
+                model: model.clone(),
+                cached,
+                kind: "",
+                error: None,
+                span: None,
+            });
+            sink = sink.wrapping_add(bytes_key(reply.as_bytes()));
+            if wave >= warmup {
+                samples.push(zuluko::util::ms(t0.elapsed()));
+            }
+        }
+    }
+
+    let res = finish(name, before, t_start, samples, waves, sink);
+    let ingest_per_req = ingest_allocs as f64 / (waves * BATCH) as f64;
+    (res, ingest_per_req)
+}
+
 fn finish(
     name: &'static str,
     before: (u64, u64),
@@ -299,6 +450,30 @@ fn main() {
         legacy.bytes_per_req / pooled.bytes_per_req.max(1e-9)
     );
 
+    println!(
+        "\n== E15: socket-to-reply wire plane, tape vs tree parser \
+         ({} requests/mode) ==",
+        waves * BATCH
+    );
+    let (wire_tape, tape_ingest) = run_wire_mode("wire_tape", WireParser::Tape, warmup, waves);
+    let (wire_tree, tree_ingest) = run_wire_mode("wire_tree", WireParser::Tree, warmup, waves);
+    println!("| mode | allocs/req | bytes/req | req/s | p50 ms | p99 ms |");
+    println!("|---|---|---|---|---|---|");
+    println!("{}", wire_tape.row());
+    println!("{}", wire_tree.row());
+    println!(
+        "ingest (parse + wire key) allocs/req: tape {tape_ingest:.2}, \
+         tree {tree_ingest:.2}"
+    );
+
+    // Byte-for-byte criterion: the sink is a content hash over every
+    // reply line, so equality means both parsers answered every request
+    // with identical bytes.
+    assert_eq!(
+        wire_tape.sink, wire_tree.sink,
+        "wire parsers' replies diverged"
+    );
+
     if let Some(path) = json_path() {
         let mut cfg = Json::obj();
         cfg.set("requests_per_mode", (waves * BATCH).into())
@@ -306,16 +481,32 @@ fn main() {
             .set("input_elems", PER.into())
             .set("cache_capacity", CACHE_CAP.into())
             .set("quick", args.quick.into());
+        let mut tape_row = wire_tape.json();
+        tape_row.set("ingest_allocs_per_req", tape_ingest.into());
+        let mut tree_row = wire_tree.json();
+        tree_row.set("ingest_allocs_per_req", tree_ingest.into());
+        let mut wire = Json::obj();
+        wire.set("replies_byte_identical", true.into()).set(
+            "ingest_alloc_events_removed_frac",
+            (1.0 - tape_ingest / tree_ingest.max(1e-9)).into(),
+        );
         let mut o = Json::obj();
         o.set("bench", "hot_path_alloc".into())
-            .set("experiment", "E10".into())
+            .set("experiment", "E10+E15".into())
             .set("config", cfg)
             .set(
                 "modes",
-                Json::Arr(vec![pooled.json(), unpooled.json(), legacy.json()]),
+                Json::Arr(vec![
+                    pooled.json(),
+                    unpooled.json(),
+                    legacy.json(),
+                    tape_row,
+                    tree_row,
+                ]),
             )
             .set("bytes_reduction_pooled_vs_unpooled", bytes_reduction.into())
-            .set("alloc_event_delta_per_req", event_delta.into());
+            .set("alloc_event_delta_per_req", event_delta.into())
+            .set("wire", wire);
         std::fs::write(&path, format!("{}\n", o.to_string())).expect("write bench json");
         println!("wrote {path}");
     }
@@ -333,5 +524,15 @@ fn main() {
          (delta {event_delta:.2}: pooled {:.2}, unpooled {:.2})",
         pooled.allocs_per_req,
         unpooled.allocs_per_req
+    );
+    // ISSUE 8 gate: the tape scanner must remove at least half the
+    // per-request allocation events on the infer hot path's ingest
+    // segment (in practice it removes nearly all of them — what remains
+    // is the owned model-name copy on the minority of requests that
+    // carry one).
+    assert!(
+        tape_ingest <= 0.5 * tree_ingest,
+        "tape ingest must at least halve allocation events/request \
+         (tape {tape_ingest:.2}, tree {tree_ingest:.2})"
     );
 }

@@ -228,6 +228,43 @@ impl std::fmt::Display for ConnPlane {
     }
 }
 
+/// Which request-line parser the serving planes run (DESIGN.md §"Wire
+/// plane").  Both produce identical messages and diagnostics; the flag
+/// exists so the tree baseline stays measurable (E15 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireParser {
+    /// Tape scanner: iterative bounded-depth scan over the pooled read
+    /// buffer, sparse field extraction, zero steady-state allocations
+    /// (the default).
+    #[default]
+    Tape,
+    /// Legacy `Json` tree parser on the wire path (E15 baseline).
+    Tree,
+}
+
+impl WireParser {
+    pub fn parse(s: &str) -> Result<WireParser> {
+        match s {
+            "tape" => Ok(WireParser::Tape),
+            "tree" => Ok(WireParser::Tree),
+            other => bail!("--wire-parser expects tape|tree, got '{other}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireParser::Tape => "tape",
+            WireParser::Tree => "tree",
+        }
+    }
+}
+
+impl std::fmt::Display for WireParser {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Connection-plane knobs for `zuluko serve` (DESIGN.md §"Connection
 /// plane").
 #[derive(Debug, Clone)]
@@ -246,6 +283,9 @@ pub struct ServerConfig {
     pub max_line_bytes: usize,
     /// Evict connections idle this long (0 disables; event plane only).
     pub idle_timeout_ms: u64,
+    /// Request-line parser: tape scanner (default) or the legacy tree
+    /// parser kept as the E15 ablation baseline.
+    pub wire_parser: WireParser,
 }
 
 impl Default for ServerConfig {
@@ -256,6 +296,7 @@ impl Default for ServerConfig {
             max_connections: 1024,
             max_line_bytes: 64 * 1024,
             idle_timeout_ms: 60_000,
+            wire_parser: WireParser::Tape,
         }
     }
 }
@@ -439,6 +480,9 @@ impl Config {
             if let Some(v) = s.get("idle_timeout_ms").and_then(|v| v.as_usize()) {
                 self.server.idle_timeout_ms = v as u64;
             }
+            if let Some(v) = s.get("wire_parser").and_then(|v| v.as_str()) {
+                self.server.wire_parser = WireParser::parse(v)?;
+            }
         }
         // Tracing knobs live under a nested "obs" object.
         if let Some(o) = j.get("obs") {
@@ -556,6 +600,9 @@ impl Config {
         self.server.idle_timeout_ms = a
             .get_usize("idle-timeout-ms", self.server.idle_timeout_ms as usize)
             .map_err(anyhow::Error::msg)? as u64;
+        if let Some(v) = a.get("wire-parser") {
+            self.server.wire_parser = WireParser::parse(v)?;
+        }
         // Tracing.
         self.obs.trace_sample_rate = a
             .get_f64("trace-sample-rate", self.obs.trace_sample_rate)
@@ -773,6 +820,7 @@ impl Config {
         "max-connections",
         "max-line-bytes",
         "idle-timeout-ms",
+        "wire-parser",
         "trace-sample-rate",
         "trace-ring",
         "slow-log",
@@ -1130,7 +1178,7 @@ mod tests {
         let j = Json::parse(
             r#"{"server":{"conn_plane":"threads","io_threads":4,
                 "max_connections":5000,"max_line_bytes":4096,
-                "idle_timeout_ms":0}}"#,
+                "idle_timeout_ms":0,"wire_parser":"tree"}}"#,
         )
         .unwrap();
         let mut c = Config::default();
@@ -1140,6 +1188,7 @@ mod tests {
         assert_eq!(c.server.max_connections, 5000);
         assert_eq!(c.server.max_line_bytes, 4096);
         assert_eq!(c.server.idle_timeout_ms, 0);
+        assert_eq!(c.server.wire_parser, WireParser::Tree);
         c.validate().unwrap();
 
         let a = Args::parse(
@@ -1147,6 +1196,8 @@ mod tests {
                 "serve",
                 "--conn-plane",
                 "event",
+                "--wire-parser",
+                "tape",
                 "--io-threads",
                 "3",
                 "--max-connections",
@@ -1163,6 +1214,7 @@ mod tests {
         .unwrap();
         let c = Config::from_args(&a).unwrap();
         assert_eq!(c.server.conn_plane, ConnPlane::Event);
+        assert_eq!(c.server.wire_parser, WireParser::Tape);
         assert_eq!(c.server.io_threads, 3);
         assert_eq!(c.server.max_connections, 2000);
         assert_eq!(c.server.max_line_bytes, 512);
@@ -1171,6 +1223,12 @@ mod tests {
         // A typo'd plane must error, never silently fall back.
         let bad = Args::parse(
             ["serve", "--conn-plane", "evnt"].iter().map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+        let bad = Args::parse(
+            ["serve", "--wire-parser", "tap"].iter().map(|s| s.to_string()),
             Config::FLAGS,
         )
         .unwrap();
@@ -1250,6 +1308,16 @@ mod tests {
         assert_eq!(ConnPlane::Event.to_string(), "event");
         assert_eq!(ConnPlane::Threads.to_string(), "threads");
         assert_eq!(ConnPlane::default(), ConnPlane::Event);
+    }
+
+    #[test]
+    fn wire_parser_parses_and_displays() {
+        assert_eq!(WireParser::parse("tape").unwrap(), WireParser::Tape);
+        assert_eq!(WireParser::parse("tree").unwrap(), WireParser::Tree);
+        assert!(WireParser::parse("taep").is_err());
+        assert_eq!(WireParser::Tape.to_string(), "tape");
+        assert_eq!(WireParser::Tree.to_string(), "tree");
+        assert_eq!(WireParser::default(), WireParser::Tape);
     }
 
     #[test]

@@ -197,6 +197,19 @@ pub fn bytes_key(bytes: &[u8]) -> u64 {
     fnv1a(FNV_OFFSET, bytes)
 }
 
+/// `bytes_key` over a discontiguous byte sequence: hashes the parts as
+/// if concatenated, without copying them into one buffer.  The wire
+/// plane uses this to key a request straight off its raw value span in
+/// the pooled read buffer (domain tag + digit span), so the hot path
+/// neither re-encodes the seed nor allocates.
+pub fn bytes_key_parts(parts: &[&[u8]]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for p in parts {
+        h = fnv1a(h, p);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +288,14 @@ mod tests {
         assert_eq!(bytes_key(b"s:42"), bytes_key(b"s:42"));
         assert_ne!(bytes_key(b"s:42"), bytes_key(b"s:43"));
         assert_ne!(bytes_key(b""), bytes_key(b"\x00"));
+    }
+
+    #[test]
+    fn bytes_key_parts_matches_concatenation() {
+        assert_eq!(bytes_key_parts(&[b"s", b"42"]), bytes_key(b"s42"));
+        assert_eq!(bytes_key_parts(&[b"s42"]), bytes_key(b"s42"));
+        assert_eq!(bytes_key_parts(&[]), bytes_key(b""));
+        assert_ne!(bytes_key_parts(&[b"s", b"42"]), bytes_key_parts(&[b"s4", b"3"]));
     }
 
     #[test]

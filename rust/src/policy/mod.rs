@@ -39,7 +39,9 @@ pub mod selector;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-pub use cache::{bytes_key, image_key, CacheStats, CachedResult, ResponseCache};
+pub use cache::{
+    bytes_key, bytes_key_parts, image_key, CacheStats, CachedResult, ResponseCache,
+};
 pub use deadline::{Priority, Slo, Urgency};
 pub use predictor::{default_prior_ms, LatencyPredictor, PredictorRow};
 pub use selector::{Decision, PoolView, Selector};

@@ -108,6 +108,37 @@ pub fn drain_lines(rbuf: &mut Vec<u8>, max_line_bytes: usize) -> Result<Vec<Stri
     Ok(lines)
 }
 
+/// Find the next complete newline-terminated line in `rbuf` starting at
+/// `start`, as a byte range (newline excluded) — the zero-copy sibling
+/// of [`drain_lines`].  The wire plane parses straight over the span in
+/// the pooled read buffer, so framing allocates nothing per line.
+///
+/// Same `max_line_bytes` contract as [`drain_lines`]: a complete line
+/// over the bound, or a newline-less residue that has already outgrown
+/// it, is [`Oversize`].  `Ok(None)` means no complete line yet — the
+/// caller drains `..start` and waits for the next read.
+pub fn next_line_span(
+    rbuf: &[u8],
+    start: usize,
+    max_line_bytes: usize,
+) -> Result<Option<std::ops::Range<usize>>, Oversize> {
+    let rest = rbuf.get(start..).unwrap_or(&[]);
+    match rest.iter().position(|&b| b == b'\n') {
+        Some(pos) => {
+            if pos > max_line_bytes {
+                return Err(Oversize { seen: pos });
+            }
+            Ok(Some(start..start + pos))
+        }
+        None => {
+            if rest.len() > max_line_bytes {
+                return Err(Oversize { seen: rest.len() });
+            }
+            Ok(None)
+        }
+    }
+}
+
 /// Buffered writer for a non-blocking socket with watermark-based
 /// backpressure.
 ///
@@ -307,6 +338,27 @@ mod tests {
         let lines = drain_lines(&mut b, 64).unwrap();
         assert_eq!(lines.len(), 1);
         assert!(crate::server::protocol::parse_request(&lines[0]).is_err());
+    }
+
+    #[test]
+    fn next_line_span_mirrors_drain_lines() {
+        let b = b"{\"a\":1}\n{\"b\":2}\n{\"part";
+        let s1 = next_line_span(b, 0, 1024).unwrap().expect("first line");
+        assert_eq!(&b[s1.clone()], b"{\"a\":1}");
+        let s2 = next_line_span(b, s1.end + 1, 1024).unwrap().expect("second line");
+        assert_eq!(&b[s2.clone()], b"{\"b\":2}");
+        // Partial tail: no span, not an error (waits for more bytes).
+        assert_eq!(next_line_span(b, s2.end + 1, 1024).unwrap(), None);
+        // Oversize complete line and oversize newline-less residue both
+        // reject, exactly like drain_lines.
+        let mut big = vec![b'y'; 100];
+        assert_eq!(next_line_span(&big, 0, 64).unwrap_err(), Oversize { seen: 100 });
+        big.push(b'\n');
+        assert_eq!(next_line_span(&big, 0, 64).unwrap_err(), Oversize { seen: 100 });
+        // A line exactly at the bound passes.
+        let mut ok = vec![b'z'; 64];
+        ok.push(b'\n');
+        assert_eq!(next_line_span(&ok, 0, 64).unwrap(), Some(0..64));
     }
 
     // -- write buffer -------------------------------------------------------

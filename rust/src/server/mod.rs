@@ -63,11 +63,13 @@ impl ConnStats {
     pub fn snapshot(
         &self,
         plane: &'static str,
+        wire_parser: &'static str,
         io_threads: usize,
         pool: conn::BufPoolStats,
     ) -> ConnPlaneSnapshot {
         ConnPlaneSnapshot {
             plane,
+            wire_parser,
             io_threads,
             connections: self.connections.load(Ordering::Relaxed),
             accepted: self.accepted.load(Ordering::Relaxed),
@@ -88,6 +90,8 @@ impl ConnStats {
 #[derive(Debug, Clone, Copy)]
 pub struct ConnPlaneSnapshot {
     pub plane: &'static str,
+    /// Active request-line parser: `"tape"` (default) or `"tree"`.
+    pub wire_parser: &'static str,
     pub io_threads: usize,
     pub connections: usize,
     pub accepted: u64,

@@ -43,9 +43,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::config::WireParser;
 use crate::coordinator::Response;
 use crate::policy::{PolicySnapshot, Priority, Slo};
 use crate::util::json::Json;
+use crate::util::wire::{self, WireDoc, WireTape};
 
 /// Parsed client message.
 #[derive(Debug, Clone, PartialEq)]
@@ -91,13 +93,53 @@ pub enum ImageSpec {
 pub fn wire_key(spec: &ImageSpec) -> Option<u64> {
     match spec {
         ImageSpec::Synthetic(seed) => {
-            let mut bytes = [0u8; 9];
-            bytes[0] = b's'; // domain tag vs. future spec kinds
-            bytes[1..].copy_from_slice(&seed.to_le_bytes());
-            Some(crate::policy::bytes_key(&bytes))
+            let mut buf = [0u8; 20];
+            // Key bytes are `s` (domain tag vs. future spec kinds) plus
+            // the seed's ASCII decimal digits — the same bytes a
+            // canonical wire span carries, so the tape path can hash a
+            // raw `"synthetic"` value span without re-encoding the seed
+            // (see `wire_key_for_span`).
+            Some(crate::policy::bytes_key_parts(&[b"s", fmt_u64(*seed, &mut buf)]))
         }
         ImageSpec::Ppm(_) => None,
     }
+}
+
+/// Format `v` as ASCII decimal into `buf`, returning the digit slice.
+/// `u64::MAX` needs 20 digits, so the fixed buffer always fits; the
+/// loop is bounded by the buffer, never by the input.
+fn fmt_u64(mut v: u64, buf: &mut [u8; 20]) -> &[u8] {
+    let mut i = buf.len();
+    loop {
+        i = i.saturating_sub(1);
+        if let Some(b) = buf.get_mut(i) {
+            *b = b'0' + (v % 10) as u8;
+        }
+        v /= 10;
+        if v == 0 || i == 0 {
+            break;
+        }
+    }
+    buf.get(i..).unwrap_or(&[])
+}
+
+/// Wire key straight off a tape span, allocation- and copy-free in the
+/// common case.  A span that already *is* the seed's canonical decimal
+/// spelling — all ASCII digits, no leading zero, and short enough
+/// (<= 15 digits < 2^53) that the f64 round-trip is exact — hashes in
+/// place.  Any other spelling of the same seed (`4.2e1`, `042`, a 16+
+/// digit literal) is formatted canonically first, so every spelling
+/// maps to the one key [`wire_key`] computes from the parsed spec.
+fn wire_key_for_span(seed: u64, span: &[u8]) -> u64 {
+    let canonical = !span.is_empty()
+        && span.len() <= 15
+        && span.iter().all(|b| b.is_ascii_digit())
+        && (span.len() == 1 || span.first() != Some(&b'0'));
+    if canonical {
+        return crate::policy::bytes_key_parts(&[b"s", span]);
+    }
+    let mut buf = [0u8; 20];
+    crate::policy::bytes_key_parts(&[b"s", fmt_u64(seed, &mut buf)])
 }
 
 /// Parse an optional `"model"` field: absent -> None (default model);
@@ -183,6 +225,173 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
         slo,
         model,
     })
+}
+
+/// A tape-path reject.  Cold path: re-run the line through the tree
+/// parser and return *its* error, so diagnostics stay byte-identical
+/// across `--wire-parser` modes (clients and tests never see which
+/// parser rejected them).  If the parsers ever disagree — the tree
+/// accepts what the tape rejected — the request is still rejected,
+/// with the tape's own message; the differential corpus test
+/// (rust/tests/wire_props.rs) is what catches such drift.
+fn tape_reject(line: &[u8], fallback: &str) -> anyhow::Error {
+    match parse_request(&String::from_utf8_lossy(line)) {
+        Err(e) => e,
+        Ok(_) => anyhow::anyhow!("{fallback}"),
+    }
+}
+
+/// Mirror of [`parse_model`] over a tape: absent -> None; present but
+/// not a non-empty string -> reject.
+fn tape_model(line: &[u8], doc: &WireDoc) -> Result<Option<String>> {
+    match doc.get("model") {
+        None => Ok(None),
+        Some(f) => match doc.str_value(f) {
+            Some(s) if !s.is_empty() => Ok(Some(s.into_owned())),
+            _ => Err(tape_reject(line, "'model' must be a non-empty string")),
+        },
+    }
+}
+
+/// Tape-path parse: scan the raw line in place (no value tree, no
+/// per-key allocations) and extract only the fields the hot path needs.
+/// Returns the message plus the pre-decode wire key for self-describing
+/// image specs, computed straight off the raw value span.
+///
+/// Semantics mirror [`parse_request`] branch for branch — duplicate
+/// keys are last-wins, a non-string `"cmd"` falls through to the infer
+/// path, numbers follow the same lax-prefix + `f64` grammar — and the
+/// differential test in rust/tests/wire_props.rs holds the two parsers
+/// to byte-identical accept/reject behavior.
+pub fn parse_tape_keyed(
+    line: &[u8],
+    tape: &mut WireTape,
+) -> Result<(ClientMsg, Option<u64>)> {
+    let trimmed = wire::trim_ws(line);
+    let doc = match wire::scan(trimmed, tape) {
+        Ok(d) => d,
+        Err(e) => return Err(tape_reject(line, &e.to_string())),
+    };
+    if let Some(cmd) = doc.get("cmd").and_then(|f| doc.str_value(f)) {
+        return match &*cmd {
+            "stats" => Ok((ClientMsg::Stats, None)),
+            "metrics" => Ok((ClientMsg::Metrics, None)),
+            "trace" => {
+                let n = match doc.get("n") {
+                    None => 32,
+                    Some(f) => match doc.usize_value(f) {
+                        Some(n) if n >= 1 => n.min(4096),
+                        _ => {
+                            return Err(tape_reject(
+                                line,
+                                "'n' must be a positive integer",
+                            ))
+                        }
+                    },
+                };
+                Ok((ClientMsg::Trace { n }, None))
+            }
+            "policy" => Ok((ClientMsg::Policy, None)),
+            "models" => Ok((ClientMsg::Models, None)),
+            "reload" => Ok((
+                ClientMsg::Reload {
+                    model: tape_model(line, &doc)?,
+                },
+                None,
+            )),
+            "ping" => Ok((ClientMsg::Ping, None)),
+            _ => Err(tape_reject(line, "unknown cmd")),
+        };
+    }
+    let id = match doc.get("id") {
+        None => {
+            return Err(tape_reject(line, "missing 'id' (a non-negative integer)"))
+        }
+        Some(f) => match doc.usize_value(f) {
+            Some(n) => n as u64,
+            None => {
+                return Err(tape_reject(line, "'id' must be a non-negative integer"))
+            }
+        },
+    };
+    let img = match doc.get("image") {
+        Some(f) => f,
+        None => return Err(tape_reject(line, "missing image")),
+    };
+    let (image, key) = if let Some((f, v)) = doc
+        .child(img, "synthetic")
+        .and_then(|f| doc.f64_value(f).map(|v| (f, v)))
+    {
+        let seed = v as u64;
+        (
+            ImageSpec::Synthetic(seed),
+            Some(wire_key_for_span(seed, doc.raw(f))),
+        )
+    } else if let Some(p) = doc.child(img, "ppm").and_then(|f| doc.str_value(f)) {
+        (ImageSpec::Ppm(p.into_owned()), None)
+    } else {
+        return Err(tape_reject(line, "image must have 'synthetic' or 'ppm'"));
+    };
+    let mut slo = Slo::default();
+    if let Some(f) = doc.get("deadline_ms") {
+        match doc.f64_value(f) {
+            Some(ms) if ms > 0.0 && ms <= 1e9 => slo = Slo::with_deadline_ms(ms),
+            _ => {
+                return Err(tape_reject(line, "'deadline_ms' must be in (0, 1e9] ms"))
+            }
+        }
+    }
+    if let Some(f) = doc.get("priority") {
+        match doc.str_value(f).map(|s| Priority::parse(&s)) {
+            Some(Ok(p)) => slo.priority = p,
+            Some(Err(_)) | None => {
+                return Err(tape_reject(
+                    line,
+                    "'priority' must be a string (hi|normal|lo)",
+                ))
+            }
+        }
+    }
+    let model = tape_model(line, &doc)?;
+    Ok((
+        ClientMsg::Infer {
+            id,
+            image,
+            slo,
+            model,
+        },
+        key,
+    ))
+}
+
+impl ClientMsg {
+    /// Tape-path entry point when the caller doesn't need the wire key.
+    pub fn parse_tape(line: &[u8], tape: &mut WireTape) -> Result<ClientMsg> {
+        Ok(parse_tape_keyed(line, tape)?.0)
+    }
+}
+
+/// Parse one raw request line with the configured parser, returning the
+/// message plus its pre-decode wire key (Infer over a self-describing
+/// spec only).  Tape is the hot path; the tree parser is retained as
+/// the E15 ablation baseline (`--wire-parser tree`) and produces
+/// identical messages, keys, and error lines.
+pub fn parse_line(
+    parser: WireParser,
+    line: &[u8],
+    tape: &mut WireTape,
+) -> Result<(ClientMsg, Option<u64>)> {
+    match parser {
+        WireParser::Tape => parse_tape_keyed(line, tape),
+        WireParser::Tree => {
+            let msg = parse_request(&String::from_utf8_lossy(line))?;
+            let key = match &msg {
+                ClientMsg::Infer { image, .. } => wire_key(image),
+                _ => None,
+            };
+            Ok((msg, key))
+        }
+    }
 }
 
 pub fn response_line(r: &Response) -> String {
@@ -276,6 +485,7 @@ fn stats_obj_with(
     let mut o = stats_obj(s);
     let mut c = Json::obj();
     c.set("plane", conn.plane.into())
+        .set("wire_parser", conn.wire_parser.into())
         .set("io_threads", conn.io_threads.into())
         .set("connections", conn.connections.into())
         .set("accepted", conn.accepted.into())
@@ -703,6 +913,132 @@ mod tests {
         assert_eq!(a, b, "same seed must key identically");
         assert_ne!(a, c, "different seeds must not collide");
         assert_eq!(wire_key(&ImageSpec::Ppm("/tmp/x.ppm".into())), None);
+    }
+
+    /// Both parsers over one line: agree on accept/reject; on accept the
+    /// messages and wire keys are equal; on reject the error text is
+    /// byte-identical (the tape defers its message to the tree parser).
+    fn assert_parsers_agree(line: &[u8]) {
+        let mut tape = WireTape::new();
+        let tree = parse_line(WireParser::Tree, line, &mut tape);
+        let tap = parse_line(WireParser::Tape, line, &mut tape);
+        match (tree, tap) {
+            (Ok((m1, k1)), Ok((m2, k2))) => {
+                assert_eq!(m1, m2, "message mismatch on {:?}", String::from_utf8_lossy(line));
+                assert_eq!(k1, k2, "wire key mismatch on {:?}", String::from_utf8_lossy(line));
+            }
+            (Err(e1), Err(e2)) => {
+                assert_eq!(
+                    e1.to_string(),
+                    e2.to_string(),
+                    "error text mismatch on {:?}",
+                    String::from_utf8_lossy(line)
+                );
+            }
+            (t, p) => panic!(
+                "accept/reject mismatch on {:?}: tree={:?} tape={:?}",
+                String::from_utf8_lossy(line),
+                t.is_ok(),
+                p.is_ok()
+            ),
+        }
+    }
+
+    #[test]
+    fn tape_matches_tree_on_the_request_corpus() {
+        let corpus: &[&[u8]] = &[
+            br#"{"id": 7, "image": {"synthetic": 42}}"#,
+            br#"{"id":1,"image":{"ppm":"/tmp/x.ppm"}}"#,
+            br#"{"id":7,"image":{"synthetic":1},"deadline_ms":250,"priority":"hi"}"#,
+            br#"{"id":7,"image":{"synthetic":42},"model":"squeezenet-v2"}"#,
+            br#"{"id":7.0,"image":{"synthetic":1}}"#,
+            br#"{"id":1,"id":2,"image":{"synthetic":1}}"#,
+            br#"  {"cmd":"stats"}  "#,
+            br#"{"cmd":"metrics"}"#,
+            br#"{"cmd":"trace"}"#,
+            br#"{"cmd":"trace","n":5}"#,
+            br#"{"cmd":"trace","n":1000000}"#,
+            br#"{"cmd":"trace","n":0}"#,
+            br#"{"cmd":"trace","n":"many"}"#,
+            br#"{"cmd":"policy"}"#,
+            br#"{"cmd":"models"}"#,
+            br#"{"cmd":"reload"}"#,
+            br#"{"cmd":"reload","model":"b"}"#,
+            br#"{"cmd":"reload","model":3}"#,
+            br#"{"cmd":"ping"}"#,
+            br#"{"cmd":"reboot"}"#,
+            br#"{"cmd":7,"id":1,"image":{"synthetic":1}}"#,
+            br#"{"id":7,"image":{"synthetic":1}}"#,
+            b"not json",
+            br#"{"id":1}"#,
+            br#"{"id":1,"image":{}}"#,
+            br#"{"id":1,"image":7}"#,
+            br#"{"image":{"synthetic":1}}"#,
+            br#"{"id":"seven","image":{"synthetic":1}}"#,
+            br#"{"id":-3,"image":{"synthetic":1}}"#,
+            br#"{"id":1.5,"image":{"synthetic":1}}"#,
+            br#"{"id":1,"image":{"synthetic":1},"deadline_ms":-5}"#,
+            br#"{"id":1,"image":{"synthetic":1},"deadline_ms":1e30}"#,
+            br#"{"id":1,"image":{"synthetic":1},"deadline_ms":"fast"}"#,
+            br#"{"id":1,"image":{"synthetic":1},"priority":"urgent"}"#,
+            br#"{"id":1,"image":{"synthetic":1},"priority":7}"#,
+            br#"{"id":1,"image":{"synthetic":1},"model":7}"#,
+            br#"{"id":1,"image":{"synthetic":1},"model":""}"#,
+            br#"{"id":1,"image":{"synthetic":1},"model":"a\nb"}"#,
+            b"{\"id\":1,\"image\":{\"synthetic\":1},\"model\":\"a\xffb\"}",
+            b"",
+            b"   ",
+            b"{\"id\":1,",
+        ];
+        for line in corpus {
+            assert_parsers_agree(line);
+        }
+    }
+
+    #[test]
+    fn tape_wire_key_matches_tree_across_number_spellings() {
+        // Every spelling of a seed must land on the key the tree path
+        // computes from the parsed spec — canonical spans hash in place,
+        // everything else is re-formatted first.
+        let cases: &[(&str, u64)] = &[
+            ("42", 42),
+            ("4.2e1", 42),
+            ("042", 42),
+            ("0", 0),
+            ("-5", 0),                              // saturating cast
+            ("9007199254740993", 9007199254740992), // 16 digits: f64-rounded
+            ("18446744073709551615", u64::MAX),
+            ("1e309", u64::MAX), // inf saturates
+        ];
+        let mut tape = WireTape::new();
+        for (spelling, seed) in cases {
+            let line = format!(r#"{{"id":1,"image":{{"synthetic":{spelling}}}}}"#);
+            let (msg, key) =
+                parse_line(WireParser::Tape, line.as_bytes(), &mut tape).unwrap();
+            match msg {
+                ClientMsg::Infer { image, .. } => {
+                    assert_eq!(image, ImageSpec::Synthetic(*seed), "seed of {spelling}");
+                    assert_eq!(
+                        key,
+                        wire_key(&ImageSpec::Synthetic(*seed)),
+                        "key of {spelling}"
+                    );
+                }
+                other => panic!("expected infer, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn tape_rejects_deep_nesting_with_a_structured_error() {
+        // 100k opens: the iterative scanner rejects at MAX_DEPTH; the
+        // (bounded) tree parser supplies the error text.
+        let mut line = r#"{"id":"#.to_string();
+        line.push_str(&"[".repeat(100_000));
+        let mut tape = WireTape::new();
+        let e = ClientMsg::parse_tape(line.as_bytes(), &mut tape).unwrap_err();
+        assert!(e.to_string().contains("depth"), "{e}");
+        assert_parsers_agree(line.as_bytes());
     }
 
     #[test]

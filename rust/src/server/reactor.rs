@@ -32,15 +32,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::ServerConfig;
+use crate::config::{ServerConfig, WireParser};
 use crate::coordinator::{
     CompletionSink, CompletionToken, Coordinator, ReplySink, SubmitError,
 };
 use crate::obs::{flag, ObsHub, Span, Stage};
 use crate::policy::Slo;
 use crate::util::log::{suppressed_note, CAPACITY_LOG};
+use crate::util::wire::{self, WireTape};
 
-use super::conn::{drain_lines, AcceptBackoff, BufPool, WriteBuf};
+use super::conn::{next_line_span, AcceptBackoff, BufPool, WriteBuf};
 use super::protocol::{self, ClientMsg, ImageSpec};
 use super::sys::{
     self, Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
@@ -91,6 +92,8 @@ pub(super) struct Shared {
     io_threads: usize,
     max_connections: usize,
     max_line_bytes: usize,
+    /// Request-line parser (tape hot path vs tree ablation baseline).
+    wire: WireParser,
     idle_timeout: Option<Duration>,
     /// Trace hub (same instance the coordinator owns): IO threads
     /// stamp accepted/parsed/reply_flushed and retire timelines.
@@ -114,7 +117,12 @@ impl Shared {
     }
 
     pub(super) fn snapshot(&self) -> ConnPlaneSnapshot {
-        self.stats.snapshot("event", self.io_threads, self.pool.stats())
+        self.stats.snapshot(
+            "event",
+            self.wire.as_str(),
+            self.io_threads,
+            self.pool.stats(),
+        )
     }
 }
 
@@ -164,6 +172,7 @@ impl Reactor {
             io_threads,
             max_connections: cfg.max_connections,
             max_line_bytes: cfg.max_line_bytes,
+            wire: cfg.wire_parser,
             idle_timeout: match cfg.idle_timeout_ms {
                 0 => None,
                 ms => Some(Duration::from_millis(ms)),
@@ -350,6 +359,9 @@ fn io_loop(idx: usize, shared: Arc<Shared>, coord: Arc<Coordinator>) {
     }
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut events = vec![EpollEvent::zeroed(); 512];
+    // One scan tape per IO lane, reused across every request the lane
+    // parses — steady-state parsing allocates nothing.
+    let mut tape = WireTape::new();
     let mut last_sweep = Instant::now();
     let timeout_ms = match shared.idle_timeout {
         Some(d) => ((d.as_millis() / 4) as i32).clamp(10, 500),
@@ -379,7 +391,9 @@ fn io_loop(idx: usize, shared: Arc<Shared>, coord: Arc<Coordinator>) {
                     deliver(&epoll, &shared, &mut conns, d);
                 }
             } else {
-                handle_event(&epoll, &shared, &coord, &mut conns, token, mask);
+                handle_event(
+                    &epoll, &shared, &coord, &mut conns, token, mask, &mut tape,
+                );
             }
         }
         if let Some(idle) = shared.idle_timeout {
@@ -528,6 +542,7 @@ fn deliver(
     settle(epoll, shared, conns, d.conn);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_event(
     epoll: &Epoll,
     shared: &Arc<Shared>,
@@ -535,6 +550,7 @@ fn handle_event(
     conns: &mut HashMap<u64, Conn>,
     token: u64,
     mask: u32,
+    tape: &mut WireTape,
 ) {
     if !conns.contains_key(&token) {
         return; // raced with a close earlier in this batch
@@ -544,7 +560,7 @@ fn handle_event(
         return;
     }
     if mask & (EPOLLIN | EPOLLRDHUP) != 0 {
-        if !on_readable(shared, coord, conns, token) {
+        if !on_readable(shared, coord, conns, token, tape) {
             close_conn(epoll, shared, conns, token);
             return;
         }
@@ -559,6 +575,7 @@ fn on_readable(
     coord: &Arc<Coordinator>,
     conns: &mut HashMap<u64, Conn>,
     token: u64,
+    tape: &mut WireTape,
 ) -> bool {
     let c = match conns.get_mut(&token) {
         Some(c) => c,
@@ -589,31 +606,51 @@ fn on_readable(
     if got_bytes {
         c.last_activity = Instant::now();
     }
-    let lines = match drain_lines(&mut c.rbuf, shared.max_line_bytes) {
-        Ok(lines) => lines,
-        Err(over) => {
-            shared
-                .stats
-                .oversize_rejected
-                .fetch_add(1, Ordering::Relaxed);
-            c.wbuf.push_line(&protocol::error_line_kind(
-                0,
-                "bad_request",
-                &format!(
-                    "request line exceeds {} bytes (got {}+)",
-                    shared.max_line_bytes, over.seen
-                ),
-            ));
-            c.closing = true;
-            c.rbuf.clear();
-            return true;
+    // Move the read buffer out so each complete line can be parsed *in
+    // place* (a borrowed span, no per-line String) while `conns` stays
+    // mutable for dispatch.  The connection keeps an empty placeholder
+    // until the buffer is restored below.
+    let mut rbuf = std::mem::take(&mut c.rbuf);
+    let mut start = 0usize;
+    loop {
+        match next_line_span(&rbuf, start, shared.max_line_bytes) {
+            Ok(Some(span)) => {
+                let end = span.end;
+                let line = rbuf.get(span).unwrap_or(&[]);
+                process_line(shared, coord, conns, token, line, tape);
+                start = end + 1;
+                if !conns.contains_key(&token) {
+                    // Closed mid-batch: close_conn already returned the
+                    // placeholder to the pool (counters are balanced),
+                    // so the real buffer is simply dropped.
+                    return true;
+                }
+            }
+            Ok(None) => break,
+            Err(over) => {
+                shared
+                    .stats
+                    .oversize_rejected
+                    .fetch_add(1, Ordering::Relaxed);
+                if let Some(c) = conns.get_mut(&token) {
+                    c.wbuf.push_line(&protocol::error_line_kind(
+                        0,
+                        "bad_request",
+                        &format!(
+                            "request line exceeds {} bytes (got {}+)",
+                            shared.max_line_bytes, over.seen
+                        ),
+                    ));
+                    c.closing = true;
+                }
+                // Closing: discard the buffered input with the buffer.
+                return true;
+            }
         }
-    };
-    for line in lines {
-        process_line(shared, coord, conns, token, &line);
-        if !conns.contains_key(&token) {
-            return true; // closed mid-batch
-        }
+    }
+    rbuf.drain(..start);
+    if let Some(c) = conns.get_mut(&token) {
+        c.rbuf = rbuf;
     }
     true
 }
@@ -627,15 +664,16 @@ fn process_line(
     coord: &Arc<Coordinator>,
     conns: &mut HashMap<u64, Conn>,
     token: u64,
-    line: &str,
+    line: &[u8],
+    tape: &mut WireTape,
 ) {
-    if line.trim().is_empty() {
+    if wire::is_blank(line) {
         return;
     }
     // Trace epoch: the line is fully framed — "accepted" in timeline
     // terms.  Only inference requests carry the span further.
     let t_accepted = shared.obs.now_ns();
-    let parsed = protocol::parse_request(line);
+    let parsed = protocol::parse_line(shared.wire, line, tape);
     let c = match conns.get_mut(&token) {
         Some(c) => c,
         None => return,
@@ -646,29 +684,29 @@ fn process_line(
             "bad_request",
             &format!("bad request: {e}"),
         )),
-        Ok(ClientMsg::Ping) => c.wbuf.push_line("{\"ok\":true,\"pong\":true}"),
-        Ok(ClientMsg::Stats) => {
+        Ok((ClientMsg::Ping, _)) => c.wbuf.push_line("{\"ok\":true,\"pong\":true}"),
+        Ok((ClientMsg::Stats, _)) => {
             let line =
                 protocol::stats_line_with(&coord.stats(), &shared.snapshot());
             c.wbuf.push_line(&line);
         }
-        Ok(ClientMsg::Metrics) => {
+        Ok((ClientMsg::Metrics, _)) => {
             let line = protocol::metrics_line(&coord.metrics(), &shared.snapshot());
             c.wbuf.push_line(&line);
         }
-        Ok(ClientMsg::Trace { n }) => {
+        Ok((ClientMsg::Trace { n }, _)) => {
             let hub = coord.obs();
             c.wbuf
                 .push_line(&protocol::trace_line(&hub.traces(n), &hub.slow_log(n)));
         }
-        Ok(ClientMsg::Policy) => {
+        Ok((ClientMsg::Policy, _)) => {
             c.wbuf.push_line(&protocol::policy_line(&coord.policy_snapshot()))
         }
-        Ok(ClientMsg::Models) => c.wbuf.push_line(&protocol::models_line(
+        Ok((ClientMsg::Models, _)) => c.wbuf.push_line(&protocol::models_line(
             coord.default_model(),
             &coord.stats().models,
         )),
-        Ok(ClientMsg::Reload { model }) => {
+        Ok((ClientMsg::Reload { model }, _)) => {
             // Reload compiles engines — far too slow for the IO loop.
             // Run it on its own thread and route the result through the
             // completion queue like any other async reply.
@@ -687,12 +725,15 @@ fn process_line(
                 shared.push_done(token, line, false, None);
             });
         }
-        Ok(ClientMsg::Infer {
-            id,
-            image,
-            slo,
-            model,
-        }) => {
+        Ok((
+            ClientMsg::Infer {
+                id,
+                image,
+                slo,
+                model,
+            },
+            wire_key,
+        )) => {
             let mut span = shared.obs.begin_at(t_accepted);
             span.set(Stage::Parsed, shared.obs.now_ns());
             match submit_infer(
@@ -702,6 +743,7 @@ fn process_line(
                 id,
                 model.as_deref(),
                 &image,
+                wire_key,
                 slo,
                 span,
             ) {
@@ -732,6 +774,7 @@ fn submit_infer(
     id: u64,
     model: Option<&str>,
     image: &ImageSpec,
+    wire_key: Option<u64>,
     slo: Slo,
     span: Span,
 ) -> Option<String> {
@@ -756,7 +799,6 @@ fn submit_infer(
             }
             Err(e) => return Some(protocol::error_line(id, &e.to_string())),
         };
-        let wire_key = protocol::wire_key(image);
         if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
             resp.id = id;
             // Wire-key hit: the reply is queued right here on the IO

@@ -14,12 +14,13 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::config::ServerConfig;
+use crate::config::{ServerConfig, WireParser};
 use crate::coordinator::{Coordinator, SubmitError};
 use crate::obs::{flag, Span, Stage};
 use crate::policy::Slo;
 use crate::tensor::PooledTensor;
 use crate::util::log::{suppressed_note, CAPACITY_LOG};
+use crate::util::wire::{self, WireTape};
 
 use super::conn::AcceptBackoff;
 use super::protocol::{self, ClientMsg, ImageSpec};
@@ -29,6 +30,7 @@ use super::{ConnPlaneSnapshot, ConnStats};
 pub struct ThreadsPlane {
     stats: Arc<ConnStats>,
     stop: Arc<AtomicBool>,
+    wire: WireParser,
     accept_thread: std::thread::JoinHandle<()>,
 }
 
@@ -42,6 +44,7 @@ impl ThreadsPlane {
         let stats = Arc::new(ConnStats::default());
         let max_connections = cfg.max_connections;
         let max_line_bytes = cfg.max_line_bytes;
+        let wire = cfg.wire_parser;
         let (stop2, stats2) = (stop.clone(), stats.clone());
 
         let accept_thread = std::thread::Builder::new()
@@ -99,6 +102,7 @@ impl ThreadsPlane {
                                     &coord,
                                     &stats3,
                                     max_line_bytes,
+                                    wire,
                                 );
                             });
                         }
@@ -132,13 +136,18 @@ impl ThreadsPlane {
         Ok(ThreadsPlane {
             stats,
             stop,
+            wire,
             accept_thread,
         })
     }
 
     pub fn snapshot(&self) -> ConnPlaneSnapshot {
-        self.stats
-            .snapshot("threads", 0, super::conn::BufPoolStats::default())
+        self.stats.snapshot(
+            "threads",
+            self.wire.as_str(),
+            0,
+            super::conn::BufPoolStats::default(),
+        )
     }
 
     pub fn stop(self) {
@@ -180,13 +189,17 @@ fn handle_conn(
     coord: &Coordinator,
     stats: &ConnStats,
     max_line_bytes: usize,
+    wire_parser: WireParser,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut raw = Vec::new();
+    // Per-connection scan tape, reused for every request on this
+    // thread — steady-state parsing allocates nothing.
+    let mut tape = WireTape::new();
     loop {
-        let line = match read_bounded_line(&mut reader, &mut raw, max_line_bytes)? {
+        match read_bounded_line(&mut reader, &mut raw, max_line_bytes)? {
             LineRead::Eof => return Ok(()), // client closed
             LineRead::Oversize => {
                 stats.oversize_rejected.fetch_add(1, Ordering::Relaxed);
@@ -213,62 +226,75 @@ fn handle_conn(
                 }
                 return Ok(()); // close: the rest of the stream is garbage
             }
-            LineRead::Line => String::from_utf8_lossy(&raw).into_owned(),
-        };
-        if line.trim().is_empty() {
+            LineRead::Line => {}
+        }
+        if wire::is_blank(&raw) {
             continue;
         }
         // Trace epoch: the request line is fully read — "accepted" in
         // timeline terms (DESIGN.md §10).  Only infer requests carry
         // the span further.
         let t_accepted = coord.obs().now_ns();
-        let (reply, span) = match protocol::parse_request(&line) {
+        let (reply, span) = match protocol::parse_line(wire_parser, &raw, &mut tape) {
             Err(e) => (
                 protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}")),
                 None,
             ),
-            Ok(ClientMsg::Ping) => ("{\"ok\":true,\"pong\":true}".to_string(), None),
-            Ok(ClientMsg::Stats) => (
+            Ok((ClientMsg::Ping, _)) => ("{\"ok\":true,\"pong\":true}".to_string(), None),
+            Ok((ClientMsg::Stats, _)) => (
                 protocol::stats_line_with(
                     &coord.stats(),
-                    &stats.snapshot("threads", 0, super::conn::BufPoolStats::default()),
+                    &stats.snapshot(
+                        "threads",
+                        wire_parser.as_str(),
+                        0,
+                        super::conn::BufPoolStats::default(),
+                    ),
                 ),
                 None,
             ),
-            Ok(ClientMsg::Metrics) => (
+            Ok((ClientMsg::Metrics, _)) => (
                 protocol::metrics_line(
                     &coord.metrics(),
-                    &stats.snapshot("threads", 0, super::conn::BufPoolStats::default()),
+                    &stats.snapshot(
+                        "threads",
+                        wire_parser.as_str(),
+                        0,
+                        super::conn::BufPoolStats::default(),
+                    ),
                 ),
                 None,
             ),
-            Ok(ClientMsg::Trace { n }) => {
+            Ok((ClientMsg::Trace { n }, _)) => {
                 let hub = coord.obs();
                 (protocol::trace_line(&hub.traces(n), &hub.slow_log(n)), None)
             }
-            Ok(ClientMsg::Policy) => {
+            Ok((ClientMsg::Policy, _)) => {
                 (protocol::policy_line(&coord.policy_snapshot()), None)
             }
-            Ok(ClientMsg::Models) => (
+            Ok((ClientMsg::Models, _)) => (
                 protocol::models_line(coord.default_model(), &coord.stats().models),
                 None,
             ),
-            Ok(ClientMsg::Reload { model }) => match coord.reload(model.as_deref()) {
+            Ok((ClientMsg::Reload { model }, _)) => match coord.reload(model.as_deref()) {
                 Ok(report) => (protocol::reload_line(&report), None),
                 Err(e) => (
                     protocol::error_line_kind(0, "reload_failed", &format!("{e:#}")),
                     None,
                 ),
             },
-            Ok(ClientMsg::Infer {
-                id,
-                image,
-                slo,
-                model,
-            }) => {
+            Ok((
+                ClientMsg::Infer {
+                    id,
+                    image,
+                    slo,
+                    model,
+                },
+                wire_key,
+            )) => {
                 let mut span = coord.obs().begin_at(t_accepted);
                 span.set(Stage::Parsed, coord.obs().now_ns());
-                infer_reply(coord, id, model.as_deref(), &image, slo, span)
+                infer_reply(coord, id, model.as_deref(), &image, wire_key, slo, span)
             }
         };
         writer.write_all(reply.as_bytes())?;
@@ -301,6 +327,7 @@ fn infer_reply(
     id: u64,
     model: Option<&str>,
     image: &ImageSpec,
+    wire_key: Option<u64>,
     slo: Slo,
     span: Span,
 ) -> (String, Option<Span>) {
@@ -325,9 +352,9 @@ fn infer_reply(
         };
         // Wire-key fast path: a repeat of the same raw image spec is
         // answered from this model's response cache before any pixel is
-        // decoded.  Per-model caches make the key collision-free across
+        // decoded (the key was hashed straight off the request's value
+        // span).  Per-model caches make the key collision-free across
         // models by construction.
-        let wire_key = protocol::wire_key(image);
         if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
             resp.id = id;
             let mut s = span;

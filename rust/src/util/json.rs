@@ -23,16 +23,39 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset for diagnostics.
+/// Container nesting bound shared by this parser and the wire-path
+/// scanner (`util::wire`).  The tree parser recurses per `[`/`{`, so an
+/// unbounded depth would let one hostile request line overflow an IO
+/// lane's stack; 64 is far beyond any manifest/config/request shape.
+pub const MAX_DEPTH: usize = 64;
+
+/// Parse error with byte offset for diagnostics.  Accessor errors
+/// (missing key, wrong shape) have no meaningful byte offset — they
+/// carry [`NO_POS`](JsonError::NO_POS) and render without one, instead
+/// of the misleading `at byte 0` they used to report.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
     pub msg: String,
     pub pos: usize,
 }
 
+impl JsonError {
+    /// Sentinel for "no byte position" (post-parse accessor errors).
+    pub const NO_POS: usize = usize::MAX;
+
+    /// Accessor error: message only, no byte offset.
+    fn ctx(msg: String) -> JsonError {
+        JsonError { msg, pos: Self::NO_POS }
+    }
+}
+
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+        if self.pos == Self::NO_POS {
+            write!(f, "json error: {}", self.msg)
+        } else {
+            write!(f, "json error at byte {}: {}", self.pos, self.msg)
+        }
     }
 }
 
@@ -65,11 +88,47 @@ impl Json {
         }
     }
 
+    /// Short shape description for error context.
+    fn type_name(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "a bool",
+            Json::Num(_) => "a number",
+            Json::Str(_) => "a string",
+            Json::Arr(_) => "an array",
+            Json::Obj(_) => "an object",
+        }
+    }
+
+    /// Available keys, truncated — so a "missing key" error says what
+    /// the document *does* contain (manifest/config diagnostics).
+    fn keys_summary(&self) -> String {
+        match self {
+            Json::Obj(m) => {
+                let mut keys: Vec<&str> = m.keys().map(|k| k.as_str()).collect();
+                let extra = keys.len().saturating_sub(8);
+                keys.truncate(8);
+                let mut s = keys.join(", ");
+                if extra > 0 {
+                    s.push_str(&format!(", ... {extra} more"));
+                }
+                s
+            }
+            _ => String::new(),
+        }
+    }
+
     /// `get` that treats missing key as an error (manifest loading).
     pub fn req(&self, key: &str) -> Result<&Json, JsonError> {
-        self.get(key).ok_or_else(|| JsonError {
-            msg: format!("missing key '{key}'"),
-            pos: 0,
+        self.get(key).ok_or_else(|| match self {
+            Json::Obj(_) => JsonError::ctx(format!(
+                "missing key '{key}' (object has: {})",
+                self.keys_summary()
+            )),
+            other => JsonError::ctx(format!(
+                "missing key '{key}': value is {}, not an object",
+                other.type_name()
+            )),
         })
     }
 
@@ -124,37 +183,50 @@ impl Json {
 
     /// Convenience: `self[key]` as &str or error.
     pub fn str_of(&self, key: &str) -> Result<&str, JsonError> {
-        self.req(key)?.as_str().ok_or_else(|| JsonError {
-            msg: format!("key '{key}' is not a string"),
-            pos: 0,
+        let v = self.req(key)?;
+        v.as_str().ok_or_else(|| {
+            JsonError::ctx(format!(
+                "key '{key}' is not a string (got {})",
+                v.type_name()
+            ))
         })
     }
 
     pub fn usize_of(&self, key: &str) -> Result<usize, JsonError> {
-        self.req(key)?.as_usize().ok_or_else(|| JsonError {
-            msg: format!("key '{key}' is not a non-negative integer"),
-            pos: 0,
+        let v = self.req(key)?;
+        v.as_usize().ok_or_else(|| {
+            JsonError::ctx(format!(
+                "key '{key}' is not a non-negative integer (got {v:?})"
+            ))
         })
     }
 
     pub fn f64_of(&self, key: &str) -> Result<f64, JsonError> {
-        self.req(key)?.as_f64().ok_or_else(|| JsonError {
-            msg: format!("key '{key}' is not a number"),
-            pos: 0,
+        let v = self.req(key)?;
+        v.as_f64().ok_or_else(|| {
+            JsonError::ctx(format!(
+                "key '{key}' is not a number (got {})",
+                v.type_name()
+            ))
         })
     }
 
     /// Array of usize under `key` (shape fields).
     pub fn shape_of(&self, key: &str) -> Result<Vec<usize>, JsonError> {
-        let arr = self.req(key)?.as_arr().ok_or_else(|| JsonError {
-            msg: format!("key '{key}' is not an array"),
-            pos: 0,
+        let v = self.req(key)?;
+        let arr = v.as_arr().ok_or_else(|| {
+            JsonError::ctx(format!(
+                "key '{key}' is not an array (got {})",
+                v.type_name()
+            ))
         })?;
         arr.iter()
-            .map(|v| {
-                v.as_usize().ok_or_else(|| JsonError {
-                    msg: format!("'{key}' element is not a usize"),
-                    pos: 0,
+            .enumerate()
+            .map(|(i, v)| {
+                v.as_usize().ok_or_else(|| {
+                    JsonError::ctx(format!(
+                        "'{key}[{i}]' is not a usize (got {v:?})"
+                    ))
                 })
             })
             .collect()
@@ -166,6 +238,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -286,6 +359,10 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Open-container count: `value()` recurses per `[`/`{`, so the
+    /// depth must be bounded or a hostile line overflows the stack
+    /// (the wire scanner shares `MAX_DEPTH` and rejects identically).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -345,12 +422,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting exceeds depth limit"));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -364,7 +451,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -372,10 +462,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -384,7 +476,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(v)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(v));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -558,6 +653,47 @@ mod tests {
     fn shape_of_works() {
         let v = Json::parse(r#"{"shape": [7, 7, 3, 96]}"#).unwrap();
         assert_eq!(v.shape_of("shape").unwrap(), vec![7, 7, 3, 96]);
+    }
+
+    #[test]
+    fn depth_is_bounded() {
+        // Exactly MAX_DEPTH nested containers parse; one more is a
+        // structured error, not a stack overflow.
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.msg.contains("depth"), "{e}");
+        // A pathological line (way past any sane stack) still returns.
+        let hostile = "[".repeat(200_000);
+        assert!(Json::parse(&hostile).is_err());
+        // Mixed nesting counts both container kinds.
+        let mixed: String =
+            "[{\"k\":".repeat(MAX_DEPTH) + "1" + &"}]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&mixed).is_err());
+    }
+
+    #[test]
+    fn accessor_errors_carry_context_not_byte_zero() {
+        let v = Json::parse(r#"{"name":"a","shape":[1,"x"],"n":-2}"#).unwrap();
+        let e = v.req("missing").unwrap_err();
+        assert_eq!(e.pos, JsonError::NO_POS);
+        let text = e.to_string();
+        assert!(!text.contains("at byte"), "{text}");
+        assert!(text.contains("missing"), "{text}");
+        assert!(text.contains("name"), "available keys listed: {text}");
+        let e = v.str_of("n").unwrap_err();
+        assert!(e.to_string().contains("a number"), "{e}");
+        let e = v.usize_of("n").unwrap_err();
+        assert!(e.to_string().contains("-2"), "{e}");
+        let e = v.shape_of("shape").unwrap_err();
+        assert!(e.to_string().contains("shape[1]"), "{e}");
+        // Requesting a key on a non-object says so.
+        let e = Json::Num(4.0).req("x").unwrap_err();
+        assert!(e.to_string().contains("not an object"), "{e}");
+        // Parse errors still carry a real byte offset.
+        let e = Json::parse("{\"a\": nope}").unwrap_err();
+        assert!(e.to_string().contains("at byte"), "{e}");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod wire;
 
 /// Duration -> milliseconds as f64 (the unit every report uses).
 pub fn ms(d: std::time::Duration) -> f64 {

@@ -1,0 +1,946 @@
+//! Wire-path JSON scanner: an iterative, bounded-depth, no-panic tape
+//! scanner for the request hot path (DESIGN.md "Wire plane").
+//!
+//! [`Json::parse`](super::json::Json::parse) materializes a full value
+//! tree — a `BTreeMap` node, a `String` per key, and a `Json` per value
+//! — for every request line, making the parser the last allocating
+//! stage between socket and reply.  This module scans a line **in
+//! place** instead: one forward pass validates the full JSON grammar
+//! (same accept/reject behavior as the tree parser) and records a flat
+//! tape of `(key span, value span, type)` byte offsets into the
+//! connection's pooled read buffer.  A sparse extractor then pulls only
+//! the fields the hot path needs (`id`, `cmd`, `model`, `deadline_ms`,
+//! `priority`, the `image` spec) as borrowed `&str`/number views.
+//!
+//! Design rules:
+//!
+//! - **Iterative, bounded depth**: no recursion anywhere; container
+//!   nesting uses a fixed `MAX_DEPTH`-slot frame array, so untrusted
+//!   wire bytes can neither overflow an IO-lane stack nor allocate
+//!   frames.  The legacy tree parser enforces the same bound.
+//! - **No reachable panic**: all byte access goes through `get`; there
+//!   is no indexing, `unwrap`, or unchecked arithmetic on the scan path.
+//! - **Escape deferral**: string spans are recorded with a "contains a
+//!   backslash" flag; decoding (the only allocating operation) happens
+//!   only when an extracted field actually contains escapes.  The
+//!   common request line borrows every field straight from the buffer.
+//! - **Lossy-decode parity**: the serving planes feed the tree parser
+//!   `String::from_utf8_lossy(line)`, where invalid UTF-8 inside
+//!   strings becomes U+FFFD.  The scanner therefore accepts arbitrary
+//!   non-control bytes inside strings and defers the same replacement
+//!   to extraction, so both parsers accept/reject identical byte lines.
+//!
+//! The tree parser remains the right tool off the hot path (manifests,
+//! config files, reply building) — see `util::json`.
+
+use std::borrow::Cow;
+use std::fmt;
+
+use super::json::MAX_DEPTH;
+
+/// Scan error with byte offset, mirroring
+/// [`JsonError`](super::json::JsonError)'s display shape.  The message
+/// is static: rejecting a line must not allocate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireError {
+    pub msg: &'static str,
+    pub pos: usize,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Value type of a tape entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Null,
+    Bool,
+    Num,
+    Str,
+    Arr,
+    Obj,
+}
+
+/// Sentinel for "no key" (the root value) and "no entry to patch"
+/// (array-element containers).
+const NONE_IDX: usize = usize::MAX;
+
+/// One tape row: where a value (and its object key, if any) lives in
+/// the scanned line.  `Str` spans exclude the quotes; `Num`/`Bool`/
+/// `Null` spans cover the token; container spans include the brackets.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    key_start: usize,
+    key_end: usize,
+    key_escaped: bool,
+    val_start: usize,
+    val_end: usize,
+    val_escaped: bool,
+    kind: Kind,
+    /// Container nesting depth of the value (root = 0, top-level object
+    /// members = 1, `image`'s members = 2, ...).
+    depth: usize,
+}
+
+/// Reusable tape scratch.  One lives per IO lane / connection loop; the
+/// entry vector's capacity is retained across requests, so steady-state
+/// scans allocate nothing.
+#[derive(Default)]
+pub struct WireTape {
+    entries: Vec<Entry>,
+}
+
+impl WireTape {
+    pub fn new() -> WireTape {
+        WireTape::default()
+    }
+}
+
+/// A scanned line: borrowed view over the raw bytes plus the tape.
+pub struct WireDoc<'b> {
+    bytes: &'b [u8],
+    entries: &'b [Entry],
+}
+
+/// Handle to one tape entry (index into the tape).
+#[derive(Debug, Clone, Copy)]
+pub struct Fld(usize);
+
+// ---------------------------------------------------------------------------
+// Scanner
+// ---------------------------------------------------------------------------
+
+struct Scanner<'b> {
+    bytes: &'b [u8],
+    pos: usize,
+}
+
+impl Scanner<'_> {
+    fn err(&self, msg: &'static str) -> WireError {
+        WireError { msg, pos: self.pos }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn literal(&mut self, lit: &'static [u8]) -> Result<(), WireError> {
+        if self.bytes.get(self.pos..).is_some_and(|r| r.starts_with(lit)) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err("expected a JSON value"))
+        }
+    }
+
+    /// `"key" :` with surrounding whitespace; leaves the cursor at the
+    /// member's value.  Returns the key's inner span + escape flag.
+    fn scan_key(&mut self) -> Result<(usize, usize, bool), WireError> {
+        self.skip_ws();
+        let key = self.scan_string()?;
+        self.skip_ws();
+        if self.bump() != Some(b':') {
+            self.pos = self.pos.saturating_sub(1);
+            return Err(self.err("expected ':'"));
+        }
+        self.skip_ws();
+        Ok(key)
+    }
+
+    /// Validate a string token; returns `(start, end, has_escapes)` for
+    /// the span between the quotes.  Bytes >= 0x20 other than `"`/`\`
+    /// pass through unexamined (see the lossy-decode parity rule in the
+    /// module docs); escape sequences are validated here so accept and
+    /// reject decisions never wait for (deferred) decoding.
+    fn scan_string(&mut self) -> Result<(usize, usize, bool), WireError> {
+        if self.bump() != Some(b'"') {
+            self.pos = self.pos.saturating_sub(1);
+            return Err(self.err("expected '\"'"));
+        }
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok((start, self.pos - 1, escaped)),
+                Some(b'\\') => {
+                    escaped = true;
+                    self.escape()?;
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("control char in string"))
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Validate one escape sequence (cursor just past the backslash).
+    fn escape(&mut self) -> Result<(), WireError> {
+        match self.bump() {
+            Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => Ok(()),
+            Some(b'u') => {
+                let hi = self.hex4()?;
+                if (0xD800..0xDC00).contains(&hi) {
+                    // High surrogate: a low surrogate escape must follow.
+                    if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                        return Err(self.err("unpaired surrogate"));
+                    }
+                    let lo = self.hex4()?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(self.err("invalid low surrogate"));
+                    }
+                    // Any paired value lands in 0x10000..=0x10FFFF: valid.
+                    Ok(())
+                } else if char::from_u32(hi).is_some() {
+                    Ok(())
+                } else {
+                    // Lone low surrogate.
+                    Err(self.err("invalid codepoint"))
+                }
+            }
+            _ => Err(self.err("bad escape")),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, WireError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    /// Consume a number token with the same lax prefix grammar as the
+    /// tree parser, then validate it with the same `f64` parse (so
+    /// oddities like `1e309` -> inf agree between parsers).
+    fn scan_number(&mut self) -> Result<usize, WireError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let token = self.bytes.get(start..self.pos).unwrap_or(&[]);
+        match std::str::from_utf8(token).ok().and_then(|t| t.parse::<f64>().ok()) {
+            Some(_) => Ok(self.pos),
+            None => Err(self.err("bad number")),
+        }
+    }
+}
+
+/// Scan one line into `tape`, reusing its storage.  The whole line must
+/// be a single JSON value (trailing bytes reject, like the tree parser);
+/// callers trim with [`trim_ws`] first.
+pub fn scan<'b>(
+    bytes: &'b [u8],
+    tape: &'b mut WireTape,
+) -> Result<WireDoc<'b>, WireError> {
+    tape.entries.clear();
+    let mut s = Scanner { bytes, pos: 0 };
+    // Open containers: (is_object, tape index to patch on close —
+    // NONE_IDX for array-element containers, which get no tape row).
+    let mut frames = [(false, NONE_IDX); MAX_DEPTH];
+    let mut depth = 0usize;
+    // Key span of the member value about to be scanned, NONE_IDX-keyed
+    // for root / array elements.
+    let mut key: (usize, usize, bool) = (NONE_IDX, 0, false);
+    s.skip_ws();
+    let mut at_value = true;
+    loop {
+        if at_value {
+            // ---- scan one value starting at the cursor ----------------
+            let val_start = s.pos;
+            let (key_start, key_end, key_escaped) = key;
+            // Tape rows: the root value and every object member.  Array
+            // elements are grammar-validated but not recorded — nothing
+            // on the hot path extracts them.
+            let record = key_start != NONE_IDX || depth == 0;
+            key = (NONE_IDX, 0, false);
+            match s.peek() {
+                Some(open @ (b'{' | b'[')) => {
+                    let is_obj = open == b'{';
+                    if depth == MAX_DEPTH {
+                        return Err(s.err("nesting exceeds depth limit"));
+                    }
+                    s.pos += 1;
+                    let entry = if record {
+                        tape.entries.push(Entry {
+                            key_start,
+                            key_end,
+                            key_escaped,
+                            val_start,
+                            val_end: 0, // patched when the container closes
+                            val_escaped: false,
+                            kind: if is_obj { Kind::Obj } else { Kind::Arr },
+                            depth,
+                        });
+                        tape.entries.len() - 1
+                    } else {
+                        NONE_IDX
+                    };
+                    if let Some(f) = frames.get_mut(depth) {
+                        *f = (is_obj, entry);
+                    }
+                    depth += 1;
+                    s.skip_ws();
+                    let close = if is_obj { b'}' } else { b']' };
+                    if s.peek() == Some(close) {
+                        s.pos += 1;
+                        depth -= 1;
+                        if let Some(e) = tape.entries.get_mut(entry) {
+                            e.val_end = s.pos;
+                        }
+                        at_value = false;
+                    } else if is_obj {
+                        key = s.scan_key()?;
+                        // at_value stays true: scan the member's value.
+                    }
+                    // Non-empty array: at_value stays true, key stays
+                    // unset; the next iteration scans the first element.
+                }
+                Some(b'"') => {
+                    let (st, en, esc) = s.scan_string()?;
+                    if record {
+                        tape.entries.push(Entry {
+                            key_start,
+                            key_end,
+                            key_escaped,
+                            val_start: st,
+                            val_end: en,
+                            val_escaped: esc,
+                            kind: Kind::Str,
+                            depth,
+                        });
+                    }
+                    at_value = false;
+                }
+                Some(b't') => {
+                    s.literal(b"true")?;
+                    if record {
+                        tape.entries.push(Entry {
+                            key_start,
+                            key_end,
+                            key_escaped,
+                            val_start,
+                            val_end: s.pos,
+                            val_escaped: false,
+                            kind: Kind::Bool,
+                            depth,
+                        });
+                    }
+                    at_value = false;
+                }
+                Some(b'f') => {
+                    s.literal(b"false")?;
+                    if record {
+                        tape.entries.push(Entry {
+                            key_start,
+                            key_end,
+                            key_escaped,
+                            val_start,
+                            val_end: s.pos,
+                            val_escaped: false,
+                            kind: Kind::Bool,
+                            depth,
+                        });
+                    }
+                    at_value = false;
+                }
+                Some(b'n') => {
+                    s.literal(b"null")?;
+                    if record {
+                        tape.entries.push(Entry {
+                            key_start,
+                            key_end,
+                            key_escaped,
+                            val_start,
+                            val_end: s.pos,
+                            val_escaped: false,
+                            kind: Kind::Null,
+                            depth,
+                        });
+                    }
+                    at_value = false;
+                }
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    let end = s.scan_number()?;
+                    if record {
+                        tape.entries.push(Entry {
+                            key_start,
+                            key_end,
+                            key_escaped,
+                            val_start,
+                            val_end: end,
+                            val_escaped: false,
+                            kind: Kind::Num,
+                            depth,
+                        });
+                    }
+                    at_value = false;
+                }
+                _ => return Err(s.err("expected a JSON value")),
+            }
+        } else {
+            // ---- a value at `depth` just completed --------------------
+            if depth == 0 {
+                s.skip_ws();
+                if s.pos != s.bytes.len() {
+                    return Err(s.err("trailing characters"));
+                }
+                return Ok(WireDoc { bytes, entries: &tape.entries });
+            }
+            let (is_obj, entry) =
+                frames.get(depth - 1).copied().unwrap_or((false, NONE_IDX));
+            s.skip_ws();
+            match (is_obj, s.bump()) {
+                (true, Some(b',')) => {
+                    key = s.scan_key()?;
+                    at_value = true;
+                }
+                (false, Some(b',')) => {
+                    s.skip_ws();
+                    at_value = true;
+                }
+                (true, Some(b'}')) | (false, Some(b']')) => {
+                    depth -= 1;
+                    if let Some(e) = tape.entries.get_mut(entry) {
+                        e.val_end = s.pos;
+                    }
+                }
+                (true, _) => return Err(s.err("expected ',' or '}'")),
+                (false, _) => return Err(s.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse extractor
+// ---------------------------------------------------------------------------
+
+impl<'b> WireDoc<'b> {
+    pub fn root_is_object(&self) -> bool {
+        matches!(self.entries.first(), Some(e) if e.depth == 0 && e.kind == Kind::Obj)
+    }
+
+    /// Last top-level member named `name` — last-wins on duplicate keys,
+    /// matching the tree parser's `BTreeMap` insert.  `None` when the
+    /// root is not an object (same as `Json::get` on a non-object).
+    pub fn get(&self, name: &str) -> Option<Fld> {
+        // Depth-1 entries exist only under an object root, so no
+        // explicit root-kind guard is needed.
+        self.find(1, 0, self.entries.len(), name)
+    }
+
+    /// Last direct member of the object `parent` named `name`.
+    pub fn child(&self, parent: Fld, name: &str) -> Option<Fld> {
+        let e = self.entries.get(parent.0)?;
+        if e.kind != Kind::Obj {
+            return None;
+        }
+        // Members follow their container on the tape until the first
+        // entry at the container's depth or shallower.
+        let from = parent.0 + 1;
+        let mut to = from;
+        while let Some(n) = self.entries.get(to) {
+            if n.depth <= e.depth {
+                break;
+            }
+            to += 1;
+        }
+        self.find(e.depth + 1, from, to, name)
+    }
+
+    fn find(&self, depth: usize, from: usize, to: usize, name: &str) -> Option<Fld> {
+        let mut found = None;
+        for (i, e) in self.entries.iter().enumerate().take(to).skip(from) {
+            if e.depth == depth && e.key_start != NONE_IDX && self.key_eq(e, name) {
+                found = Some(Fld(i));
+            }
+        }
+        found
+    }
+
+    fn key_eq(&self, e: &Entry, name: &str) -> bool {
+        let raw = self.bytes.get(e.key_start..e.key_end).unwrap_or(&[]);
+        if !e.key_escaped {
+            return raw == name.as_bytes();
+        }
+        // Rare: a key spelled with escapes — decode (allocates) and
+        // compare text, so `{"\u0069d":1}` still finds "id".
+        decode_cow(raw, true) == name
+    }
+
+    pub fn kind(&self, f: Fld) -> Kind {
+        self.entries.get(f.0).map_or(Kind::Null, |e| e.kind)
+    }
+
+    /// Byte offset of the value, for diagnostics.
+    pub fn pos(&self, f: Fld) -> usize {
+        self.entries.get(f.0).map_or(0, |e| e.val_start)
+    }
+
+    /// Raw value span (string spans exclude the quotes).
+    pub fn raw(&self, f: Fld) -> &'b [u8] {
+        self.entries
+            .get(f.0)
+            .and_then(|e| self.bytes.get(e.val_start..e.val_end))
+            .unwrap_or(&[])
+    }
+
+    /// String view: borrowed straight from the buffer unless the span
+    /// contains escapes (decode) or invalid UTF-8 (lossy replacement,
+    /// matching what the tree parser sees after `from_utf8_lossy`).
+    pub fn str_value(&self, f: Fld) -> Option<Cow<'b, str>> {
+        let e = self.entries.get(f.0)?;
+        if e.kind != Kind::Str {
+            return None;
+        }
+        let raw = self.bytes.get(e.val_start..e.val_end)?;
+        Some(decode_cow(raw, e.val_escaped))
+    }
+
+    pub fn f64_value(&self, f: Fld) -> Option<f64> {
+        let e = self.entries.get(f.0)?;
+        if e.kind != Kind::Num {
+            return None;
+        }
+        let raw = self.bytes.get(e.val_start..e.val_end)?;
+        std::str::from_utf8(raw).ok()?.parse().ok()
+    }
+
+    /// Mirror of `Json::as_usize`: non-negative, integer-valued.
+    pub fn usize_value(&self, f: Fld) -> Option<usize> {
+        self.f64_value(f).and_then(|v| {
+            if v >= 0.0 && v.fract() == 0.0 {
+                Some(v as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn bool_value(&self, f: Fld) -> Option<bool> {
+        let e = self.entries.get(f.0)?;
+        if e.kind != Kind::Bool {
+            return None;
+        }
+        Some(self.bytes.get(e.val_start..e.val_end) == Some(b"true".as_ref()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deferred string decoding
+// ---------------------------------------------------------------------------
+
+/// Decode a validated string span.  Escape-free spans borrow (the
+/// overwhelmingly common case); spans with escapes decode into an owned
+/// string.  Invalid UTF-8 becomes U+FFFD either way — identical to the
+/// lossy decode the tree path applies to the whole line (escape
+/// sequences are pure ASCII and escape outputs are valid UTF-8, so
+/// unescape and lossy replacement commute).
+fn decode_cow(raw: &[u8], escaped: bool) -> Cow<'_, str> {
+    if !escaped {
+        return String::from_utf8_lossy(raw);
+    }
+    Cow::Owned(decode_escaped(raw))
+}
+
+fn decode_escaped(raw: &[u8]) -> String {
+    let mut out: Vec<u8> = Vec::with_capacity(raw.len());
+    let mut i = 0usize;
+    while let Some(&b) = raw.get(i) {
+        if b != b'\\' {
+            out.push(b);
+            i += 1;
+            continue;
+        }
+        i += 1;
+        match raw.get(i).copied() {
+            Some(b'"') => {
+                out.push(b'"');
+                i += 1;
+            }
+            Some(b'\\') => {
+                out.push(b'\\');
+                i += 1;
+            }
+            Some(b'/') => {
+                out.push(b'/');
+                i += 1;
+            }
+            Some(b'b') => {
+                out.push(0x08);
+                i += 1;
+            }
+            Some(b'f') => {
+                out.push(0x0C);
+                i += 1;
+            }
+            Some(b'n') => {
+                out.push(b'\n');
+                i += 1;
+            }
+            Some(b'r') => {
+                out.push(b'\r');
+                i += 1;
+            }
+            Some(b't') => {
+                out.push(b'\t');
+                i += 1;
+            }
+            Some(b'u') => {
+                i += 1;
+                // The scan already validated hex digits and surrogate
+                // pairing; the fallbacks below are defensive only.
+                let mut cp = hex4_at(raw, i).unwrap_or(0xFFFD);
+                let mut adv = 4usize;
+                if (0xD800..0xDC00).contains(&cp) {
+                    let paired = raw.get(i + 4) == Some(&b'\\')
+                        && raw.get(i + 5) == Some(&b'u');
+                    match hex4_at(raw, i + 6) {
+                        Some(lo) if paired && (0xDC00..0xE000).contains(&lo) => {
+                            cp = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            adv = 10;
+                        }
+                        _ => cp = 0xFFFD,
+                    }
+                }
+                let ch = char::from_u32(cp).unwrap_or('\u{FFFD}');
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                i += adv;
+            }
+            _ => {
+                // Unreachable after a successful scan; keep the byte.
+                out.push(b'\\');
+            }
+        }
+    }
+    match String::from_utf8(out) {
+        Ok(s) => s,
+        Err(e) => String::from_utf8_lossy(e.as_bytes()).into_owned(),
+    }
+}
+
+fn hex4_at(raw: &[u8], i: usize) -> Option<u32> {
+    let mut v = 0u32;
+    for k in 0..4 {
+        let d = (*raw.get(i + k)? as char).to_digit(16)?;
+        v = v * 16 + d;
+    }
+    Some(v)
+}
+
+// ---------------------------------------------------------------------------
+// Line trimming
+// ---------------------------------------------------------------------------
+
+/// Byte-level equivalent of `str::trim()` on the lossy-decoded line
+/// (the tree path trims Unicode whitespace; parity demands the same
+/// here).  Invalid UTF-8 at an edge stops trimming — lossy decoding
+/// would turn it into U+FFFD, which is not whitespace.
+pub fn trim_ws(bytes: &[u8]) -> &[u8] {
+    let mut b = bytes;
+    while let Some(n) = leading_ws(b) {
+        b = b.get(n..).unwrap_or(&[]);
+    }
+    while let Some(n) = trailing_ws(b) {
+        b = b.get(..b.len().saturating_sub(n)).unwrap_or(&[]);
+    }
+    b
+}
+
+/// Whether the line is whitespace-only (the planes skip such lines
+/// silently — `str::trim().is_empty()` parity).
+pub fn is_blank(bytes: &[u8]) -> bool {
+    trim_ws(bytes).is_empty()
+}
+
+fn leading_ws(b: &[u8]) -> Option<usize> {
+    let &first = b.first()?;
+    if first < 0x80 {
+        return if (first as char).is_whitespace() { Some(1) } else { None };
+    }
+    // Multibyte: decode the first char; whitespace only if valid UTF-8.
+    for len in 2..=4usize.min(b.len()) {
+        if let Ok(s) = std::str::from_utf8(b.get(..len)?) {
+            return match s.chars().next() {
+                Some(c) if c.is_whitespace() => Some(len),
+                _ => None,
+            };
+        }
+    }
+    None
+}
+
+fn trailing_ws(b: &[u8]) -> Option<usize> {
+    let &last = b.last()?;
+    if last < 0x80 {
+        return if (last as char).is_whitespace() { Some(1) } else { None };
+    }
+    // Walk back to the lead byte of the trailing sequence (<= 4 bytes).
+    for back in 2..=4usize.min(b.len()) {
+        let idx = b.len() - back;
+        let &lead = b.get(idx)?;
+        if (0x80..0xC0).contains(&lead) {
+            continue; // continuation byte, keep walking
+        }
+        return match std::str::from_utf8(b.get(idx..)?) {
+            Ok(s) => {
+                let mut chars = s.chars();
+                match (chars.next(), chars.next()) {
+                    (Some(c), None) if c.is_whitespace() => Some(back),
+                    _ => None,
+                }
+            }
+            Err(_) => None,
+        };
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_ok<'b>(bytes: &'b [u8], tape: &'b mut WireTape) -> WireDoc<'b> {
+        match scan(bytes, tape) {
+            Ok(d) => d,
+            Err(e) => panic!("scan failed on {:?}: {e}", String::from_utf8_lossy(bytes)),
+        }
+    }
+
+    #[test]
+    fn scans_a_request_line_and_extracts_fields() {
+        let line = br#"{"id":7,"image":{"synthetic":42},"deadline_ms":250.5,"priority":"hi"}"#;
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        assert!(doc.root_is_object());
+        let id = doc.get("id").expect("id");
+        assert_eq!(doc.kind(id), Kind::Num);
+        assert_eq!(doc.usize_value(id), Some(7));
+        let img = doc.get("image").expect("image");
+        assert_eq!(doc.kind(img), Kind::Obj);
+        let syn = doc.child(img, "synthetic").expect("synthetic");
+        assert_eq!(doc.f64_value(syn), Some(42.0));
+        assert_eq!(doc.raw(syn), b"42");
+        let dl = doc.get("deadline_ms").expect("deadline");
+        assert_eq!(doc.f64_value(dl), Some(250.5));
+        let pr = doc.get("priority").expect("priority");
+        assert_eq!(doc.str_value(pr).as_deref(), Some("hi"));
+        assert!(doc.get("model").is_none());
+    }
+
+    #[test]
+    fn borrowed_strings_do_not_decode() {
+        let line = br#"{"model":"squeezenet-v2"}"#;
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        let m = doc.get("model").expect("model");
+        match doc.str_value(m) {
+            Some(Cow::Borrowed(s)) => assert_eq!(s, "squeezenet-v2"),
+            other => panic!("expected borrowed view, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escaped_strings_decode_on_extraction() {
+        let line = br#"{"model":"a\nb\u0041\ud83d\ude00"}"#;
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        let m = doc.get("model").expect("model");
+        match doc.str_value(m) {
+            Some(Cow::Owned(s)) => assert_eq!(s, "a\nbA😀"),
+            other => panic!("expected owned decode, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escaped_keys_still_match() {
+        let line = br#"{"\u0069d": 9}"#;
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        let id = doc.get("id").expect("escaped key should match 'id'");
+        assert_eq!(doc.usize_value(id), Some(9));
+    }
+
+    #[test]
+    fn duplicate_keys_are_last_wins() {
+        let line = br#"{"id":1,"id":2}"#;
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        assert_eq!(doc.usize_value(doc.get("id").expect("id")), Some(2));
+    }
+
+    #[test]
+    fn nested_keys_do_not_shadow_top_level() {
+        // "synthetic" inside an array-nested object must not satisfy a
+        // top-level or image-child lookup.
+        let line = br#"{"a":[{"synthetic":5}],"image":{"ppm":"/x.ppm"}}"#;
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        assert!(doc.get("synthetic").is_none());
+        let img = doc.get("image").expect("image");
+        assert!(doc.child(img, "synthetic").is_none());
+        assert_eq!(
+            doc.child(img, "ppm").and_then(|f| doc.str_value(f)).as_deref(),
+            Some("/x.ppm")
+        );
+    }
+
+    #[test]
+    fn depth_is_bounded_iteratively() {
+        // MAX_DEPTH nested arrays scan fine; one more is a structured
+        // reject (never a stack overflow — the scanner has no recursion).
+        let ok = "[".repeat(MAX_DEPTH - 1) + &"]".repeat(MAX_DEPTH - 1);
+        let mut tape = WireTape::new();
+        assert!(scan(ok.as_bytes(), &mut tape).is_ok());
+        let deep = "[".repeat(MAX_DEPTH + 1);
+        let err = scan(deep.as_bytes(), &mut tape).expect_err("too deep");
+        assert_eq!(err.msg, "nesting exceeds depth limit");
+        let wide = "[".repeat(100_000);
+        assert!(scan(wide.as_bytes(), &mut tape).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_without_panicking() {
+        let cases: &[&[u8]] = &[
+            b"",
+            b"{",
+            b"}",
+            b"[1,]",
+            b"{\"a\":}",
+            b"{\"a\" 1}",
+            b"tru",
+            b"1 2",
+            b"\"\\q\"",
+            b"\"\\u12\"",
+            b"\"\\ud800x\"",
+            b"\"\\ud800\\u0041\"",
+            b"\"unterminated",
+            b"{\"id\":-}",
+            b"nul",
+            b"\x01",
+            b"{\"a\":1,}",
+        ];
+        let mut tape = WireTape::new();
+        for c in cases {
+            assert!(
+                scan(c, &mut tape).is_err(),
+                "expected reject: {:?}",
+                String::from_utf8_lossy(c)
+            );
+        }
+    }
+
+    #[test]
+    fn accepts_grammar_corners_like_the_tree_parser() {
+        // Keep in lockstep with util::json: lax number prefixes that
+        // f64::parse accepts, big exponents -> inf, empty containers.
+        let cases: &[&[u8]] = &[
+            b"{}",
+            b"[]",
+            b"[[]]",
+            b"0",
+            b"-0",
+            b"1.",
+            b"01",
+            b"1e309",
+            b"[1,2,3]",
+            b"{\"a\":{\"b\":{\"c\":null}}}",
+            b"  {\"a\":1}  ",
+        ];
+        let mut tape = WireTape::new();
+        for c in cases {
+            assert!(
+                scan(trim_ws(c), &mut tape).is_ok(),
+                "expected accept: {:?}",
+                String::from_utf8_lossy(c)
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_utf8_in_strings_matches_lossy_tree_behavior() {
+        // A raw 0xFF inside a string: the planes' lossy decode gives the
+        // tree parser U+FFFD; the scanner accepts the byte and defers
+        // the same replacement to extraction.
+        let line = b"{\"model\":\"a\xffb\"}";
+        let mut tape = WireTape::new();
+        let doc = scan_ok(line, &mut tape);
+        let m = doc.get("model").expect("model");
+        assert_eq!(doc.str_value(m).as_deref(), Some("a\u{FFFD}b"));
+    }
+
+    #[test]
+    fn trim_ws_matches_str_trim() {
+        let cases: &[&str] = &[
+            "  {\"a\":1} \t\r\n",
+            "\u{a0}{\"a\":1}\u{2028}",
+            "   ",
+            "",
+            "x",
+            "\u{3000}x\u{3000}",
+        ];
+        for c in cases {
+            assert_eq!(
+                trim_ws(c.as_bytes()),
+                c.trim().as_bytes(),
+                "trim parity on {c:?}"
+            );
+        }
+        // Invalid UTF-8 at the edge stops trimming (lossy -> U+FFFD).
+        assert_eq!(trim_ws(b" \xff "), b"\xff");
+    }
+
+    #[test]
+    fn tape_is_reused_across_scans() {
+        let mut tape = WireTape::new();
+        for i in 0..32 {
+            let line = format!("{{\"id\":{i},\"image\":{{\"synthetic\":{i}}}}}");
+            let doc = scan_ok(line.as_bytes(), &mut tape);
+            assert_eq!(doc.usize_value(doc.get("id").expect("id")), Some(i));
+        }
+    }
+}

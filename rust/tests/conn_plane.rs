@@ -22,7 +22,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use zuluko::config::{Config, ConnPlane, ServerConfig};
+use zuluko::config::{Config, ConnPlane, ServerConfig, WireParser};
 use zuluko::coordinator::Coordinator;
 use zuluko::engine::sim::expected_top1;
 use zuluko::engine::EngineKind;
@@ -467,6 +467,87 @@ fn conn_stats_section_threads_plane() {
     // The threads plane has no fixed io fleet; it reports 0.
     assert_conn_section_and_obs_roundtrip(&server.addr().to_string(), "threads", 0);
     stop_all(server, coord);
+}
+
+/// Malformed-line contract shared by both planes and both wire parsers
+/// (ISSUE 8): nesting past the depth bound and truncated JSON must come
+/// back as structured `bad_request` lines — the parser rejects
+/// structurally instead of recursing — and the connection stays usable
+/// afterwards.  The stats line names the active parser so an A/B run
+/// can prove which one answered.
+fn assert_malformed_line_contract(addr: &str, wire_parser: &str) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+
+    // Deep nesting: well under the line-size limit, far over the depth
+    // bound.
+    let mut deep = String::from("{\"id\":1,\"image\":");
+    deep.push_str(&"[".repeat(10_000));
+    deep.push('\n');
+    w.write_all(deep.as_bytes()).unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "no reject line");
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(
+        j.get("ok").and_then(|v| v.as_bool()),
+        Some(false),
+        "got: {line}"
+    );
+    assert_eq!(
+        j.get("kind").and_then(|v| v.as_str()),
+        Some("bad_request"),
+        "got: {line}"
+    );
+    assert!(line.contains("depth"), "must name the depth bound: {line}");
+
+    // Truncated request line: structured reject, same connection.
+    w.write_all(b"{\"id\":1,\n").unwrap();
+    line.clear();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "no reject line");
+    assert!(line.contains("bad_request"), "got: {line}");
+
+    // The connection survived both rejects and still serves.
+    w.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    line.clear();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "conn died after reject");
+    assert!(line.contains("pong"), "got: {line}");
+
+    // The stats line reports which parser is on duty.
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    let conn = stats.get("conn").expect("stats must carry a conn section");
+    assert_eq!(
+        conn.get("wire_parser").and_then(|v| v.as_str()),
+        Some(wire_parser),
+        "conn section must name the active wire parser"
+    );
+    drop((c, reader, w));
+}
+
+#[test]
+fn malformed_lines_structured_reject_both_planes_both_parsers() {
+    for (plane, parser) in [
+        (ConnPlane::Event, WireParser::Tape),
+        (ConnPlane::Event, WireParser::Tree),
+        (ConnPlane::Threads, WireParser::Tape),
+        (ConnPlane::Threads, WireParser::Tree),
+    ] {
+        let tag = format!("malformed_{plane}_{parser}");
+        let (server, coord) = start(
+            &tag,
+            ServerConfig {
+                conn_plane: plane,
+                wire_parser: parser,
+                ..ServerConfig::default()
+            },
+        );
+        assert_malformed_line_contract(&server.addr().to_string(), parser.as_str());
+        stop_all(server, coord);
+    }
 }
 
 #[test]

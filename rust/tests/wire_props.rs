@@ -1,0 +1,381 @@
+//! Differential property test for the wire plane (ISSUE 8): the tape
+//! scanner and the legacy tree parser (`--wire-parser tape|tree`) must
+//! agree on **every** input — same accept/reject decision, identical
+//! parsed message on accept, identical error text on reject, and the
+//! same pre-decode wire key for keyable infer requests.
+//!
+//! Inputs come from a curated corpus plus a generator over the full
+//! request grammar with adversarial mutations: truncation at arbitrary
+//! bytes, byte flips and insertions (including invalid UTF-8), escape
+//! and surrogate-pair injection, NaN-adjacent and precision-edge
+//! numbers, duplicate keys, escaped key spellings, unknown fields, and
+//! nesting on both sides of the depth bound.
+//!
+//! Case count is `WIRE_PROPS_CASES` (default 2000); CI runs the same
+//! test with a much larger count.
+
+use zuluko::config::WireParser;
+use zuluko::server::protocol::{self, ClientMsg};
+use zuluko::testkit::rng::Rng;
+use zuluko::util::wire::WireTape;
+
+/// Number spellings that stress the span fast path, f64 precision
+/// edges, and the reject grammar.
+const NUMS: &[&str] = &[
+    "0",
+    "-0",
+    "1",
+    "7",
+    "42",
+    "042",
+    "4.2e1",
+    "250",
+    "2500",
+    "1e308",
+    "1e309",
+    "-1e309",
+    "1e-400",
+    "5e-324",
+    "9007199254740992",
+    "9007199254740993",
+    "18446744073709551615",
+    "99999999999999999999",
+    "1.",
+    "01",
+    ".5",
+    "-",
+    "1e",
+    "1e+",
+    "0x10",
+    "NaN",
+    "Infinity",
+    "-1.5e-3",
+    "1.7976931348623157e308",
+];
+
+/// String payloads (emitted verbatim between quotes): plain text,
+/// well-formed escapes, surrogate pairs, lone surrogates, malformed
+/// escapes, and raw multi-byte UTF-8.
+const STRS: &[&str] = &[
+    "squeezenet",
+    "hi",
+    "lo",
+    "normal",
+    "bogus",
+    "",
+    "a b",
+    "\\n",
+    "\\t",
+    "\\\"",
+    "\\\\",
+    "\\/",
+    "\\u0041",
+    "\\u00e9",
+    "\\ud83d\\ude00",
+    "\\ud800",
+    "\\udc00tail",
+    "\\uD83D\\u0041",
+    "\\uZZZZ",
+    "\\q",
+    "\\u12",
+    "caf\u{e9}",
+    "\u{65e5}\u{672c}",
+];
+
+const KEYS: &[&str] = &[
+    "id",
+    "cmd",
+    "image",
+    "synthetic",
+    "ppm",
+    "deadline_ms",
+    "priority",
+    "model",
+    "n",
+    "extra",
+    "i\\u0064",
+    "",
+    "\u{6a21}",
+];
+
+/// The property: both parsers must agree in every observable way.
+fn check(bytes: &[u8], tape: &mut WireTape) {
+    let shown = String::from_utf8_lossy(bytes).into_owned();
+    let tree = protocol::parse_request(&String::from_utf8_lossy(bytes));
+    let taped = ClientMsg::parse_tape(bytes, tape);
+    match (tree, taped) {
+        (Ok(t), Ok(p)) => {
+            assert_eq!(t, p, "parsed values diverged on {shown:?}");
+            let (msg, key) = protocol::parse_line(WireParser::Tape, bytes, tape)
+                .unwrap_or_else(|e| {
+                    panic!("keyed tape parse rejected accepted input {shown:?}: {e}")
+                });
+            assert_eq!(msg, t, "keyed tape parse diverged on {shown:?}");
+            match &t {
+                ClientMsg::Infer { image, .. } => assert_eq!(
+                    key,
+                    protocol::wire_key(image),
+                    "wire key diverged on {shown:?}"
+                ),
+                _ => assert_eq!(key, None, "non-infer message got a wire key on {shown:?}"),
+            }
+        }
+        (Err(t), Err(p)) => {
+            assert_eq!(
+                t.to_string(),
+                p.to_string(),
+                "error text diverged on {shown:?}"
+            );
+        }
+        (Ok(t), Err(p)) => panic!("tree accepts {shown:?} as {t:?}; tape rejects: {p}"),
+        (Err(t), Ok(p)) => panic!("tape accepts {shown:?} as {p:?}; tree rejects: {t}"),
+    }
+}
+
+fn push_field(out: &mut String, first: &mut bool, key: &str) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push('"');
+    out.push_str(key);
+    out.push_str("\":");
+}
+
+/// Arbitrary JSON value over the token pools, depth-bounded.
+fn gen_value(r: &mut Rng, depth: usize, out: &mut String) {
+    let top = if depth >= 3 { 4 } else { 6 };
+    match r.below(top) {
+        0 | 3 => out.push_str(NUMS[r.below(NUMS.len())]),
+        1 => {
+            out.push('"');
+            out.push_str(STRS[r.below(STRS.len())]);
+            out.push('"');
+        }
+        2 => out.push_str(["true", "false", "null"][r.below(3)]),
+        4 => {
+            out.push('[');
+            let n = r.below(3);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                gen_value(r, depth + 1, out);
+            }
+            out.push(']');
+        }
+        _ => {
+            out.push('{');
+            let n = r.below(3);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                out.push_str(KEYS[r.below(KEYS.len())]);
+                out.push_str("\":");
+                gen_value(r, depth + 1, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Request-shaped document: mostly-valid field combinations with a
+/// controlled dose of wrong types, unknown commands, and junk fields.
+fn gen_request(r: &mut Rng) -> String {
+    let mut out = String::from("{");
+    let mut first = true;
+    if r.chance(0.3) {
+        push_field(&mut out, &mut first, "cmd");
+        if r.chance(0.8) {
+            out.push('"');
+            out.push_str(
+                ["stats", "metrics", "trace", "policy", "models", "reload", "ping", "bogus"]
+                    [r.below(8)],
+            );
+            out.push('"');
+        } else {
+            gen_value(r, 1, &mut out);
+        }
+        if r.chance(0.5) {
+            push_field(&mut out, &mut first, "n");
+            gen_value(r, 1, &mut out);
+        }
+    }
+    if r.chance(0.9) {
+        push_field(&mut out, &mut first, "id");
+        if r.chance(0.8) {
+            out.push_str(NUMS[r.below(NUMS.len())]);
+        } else {
+            gen_value(r, 1, &mut out);
+        }
+    }
+    if r.chance(0.9) {
+        push_field(&mut out, &mut first, "image");
+        if r.chance(0.7) {
+            out.push_str("{\"synthetic\":");
+            out.push_str(NUMS[r.below(NUMS.len())]);
+            out.push('}');
+        } else if r.chance(0.5) {
+            out.push_str("{\"ppm\":\"");
+            out.push_str(STRS[r.below(STRS.len())]);
+            out.push_str("\"}");
+        } else {
+            gen_value(r, 1, &mut out);
+        }
+    }
+    if r.chance(0.4) {
+        push_field(&mut out, &mut first, "deadline_ms");
+        if r.chance(0.7) {
+            out.push_str(NUMS[r.below(NUMS.len())]);
+        } else {
+            gen_value(r, 1, &mut out);
+        }
+    }
+    if r.chance(0.4) {
+        push_field(&mut out, &mut first, "priority");
+        if r.chance(0.7) {
+            out.push('"');
+            out.push_str(["hi", "high", "normal", "mid", "lo", "low", "HI", "bogus"][r.below(8)]);
+            out.push('"');
+        } else {
+            gen_value(r, 1, &mut out);
+        }
+    }
+    if r.chance(0.4) {
+        push_field(&mut out, &mut first, "model");
+        if r.chance(0.7) {
+            out.push('"');
+            out.push_str(STRS[r.below(STRS.len())]);
+            out.push('"');
+        } else {
+            gen_value(r, 1, &mut out);
+        }
+    }
+    if r.chance(0.2) {
+        push_field(&mut out, &mut first, KEYS[r.below(KEYS.len())]);
+        gen_value(r, 1, &mut out);
+    }
+    out.push('}');
+    out
+}
+
+/// Structural mutations: truncate, flip, insert (any byte value, so
+/// invalid UTF-8 lands both inside strings and between tokens), delete,
+/// and whitespace injection.
+fn mutate(r: &mut Rng, bytes: &mut Vec<u8>) {
+    match r.below(5) {
+        0 => {
+            if !bytes.is_empty() {
+                let at = r.below(bytes.len());
+                bytes.truncate(at);
+            }
+        }
+        1 => {
+            if !bytes.is_empty() {
+                let at = r.below(bytes.len());
+                bytes[at] = (r.next_u64() & 0xff) as u8;
+            }
+        }
+        2 => {
+            let at = r.below(bytes.len() + 1);
+            bytes.insert(at, (r.next_u64() & 0xff) as u8);
+        }
+        3 => {
+            if !bytes.is_empty() {
+                let at = r.below(bytes.len());
+                bytes.remove(at);
+            }
+        }
+        _ => {
+            let at = r.below(bytes.len() + 1);
+            for (i, b) in b" \t ".iter().enumerate() {
+                bytes.insert(at + i, *b);
+            }
+        }
+    }
+}
+
+/// Hand-picked inputs exercising every known grammar quirk; these run
+/// on every invocation regardless of the case budget.
+fn curated() -> Vec<Vec<u8>> {
+    let mut v: Vec<Vec<u8>> = [
+        r#"{"id":1,"image":{"synthetic":42}}"#,
+        r#"{"id":1,"image":{"synthetic":4.2e1},"deadline_ms":250,"priority":"hi"}"#,
+        r#"{"id":1,"image":{"synthetic":042}}"#,
+        r#"{"id":1,"image":{"ppm":"/tmp/x.ppm"},"model":"squeezenet"}"#,
+        r#"{"id":1,"image":{"synthetic":1}}"#,
+        r#"{"id":1,"id":2,"image":{"synthetic":1},"image":{"synthetic":3}}"#,
+        r#"{"cmd":"trace","n":0}"#,
+        r#"{"cmd":"trace","n":1e9}"#,
+        r#"{"cmd":7}"#,
+        r#"{"id":1,"image":{"synthetic":-5}}"#,
+        r#"{"id":1,"image":{"synthetic":1e309}}"#,
+        r#"{"id":1,"image":{"synthetic":"9"}}"#,
+        r#"{"id":1,"image":{"synthetic":9007199254740993}}"#,
+        r#"{"id":1,"image":{"synthetic":18446744073709551615}}"#,
+        r#"{"id":1.5,"image":{"synthetic":1}}"#,
+        r#"{"id":1,"image":{"synthetic":1},"model":"😀"}"#,
+        r#"{"id":1,"image":{"synthetic":1},"model":"\ud800"}"#,
+        r#"{"id":1,"image":{"synthetic":1},"priority":"HI"}"#,
+        r#"{"id":1,"image":{"synthetic":1}} "#,
+        r#"  {"id":1,"image":{"synthetic":1}}"#,
+        r#"{"id":1,"image":{"synthetic":1}}x"#,
+        r#"{"id":1,"image":{"synthetic":1}"#,
+        r#"{"id":1,"#,
+        "",
+        " \t ",
+        "null",
+        "[]",
+        "{}",
+        "42",
+        "\"x\"",
+        r#"{"cmd":"ping"}"#,
+        r#"{"cmd":"reload","model":"resnet"}"#,
+        r#"{"cmd":"reload","model":7}"#,
+    ]
+    .iter()
+    .map(|s| s.as_bytes().to_vec())
+    .collect();
+    // Invalid UTF-8 inside a string value, and loose between tokens.
+    v.push(b"{\"id\":1,\"image\":{\"synthetic\":1},\"model\":\"a\xffb\"}".to_vec());
+    v.push(b"{\"id\":1,\xff\"image\":{\"synthetic\":1}}".to_vec());
+    // Nesting past the depth bound (truncated, so also unterminated).
+    let mut deep = String::from("{\"id\":1,\"image\":");
+    deep.push_str(&"[".repeat(200));
+    v.push(deep.into_bytes());
+    // Deep but within bounds, balanced, on an ignored field.
+    let mut ok_deep = String::from("{\"id\":1,\"image\":{\"synthetic\":1},\"x\":");
+    ok_deep.push_str(&"[".repeat(40));
+    ok_deep.push_str(&"]".repeat(40));
+    ok_deep.push('}');
+    v.push(ok_deep.into_bytes());
+    v
+}
+
+#[test]
+fn tape_and_tree_agree_on_generated_corpus() {
+    let cases: usize = std::env::var("WIRE_PROPS_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let mut tape = WireTape::new();
+    for c in curated() {
+        check(&c, &mut tape);
+    }
+    let mut r = Rng::new(0xA11CE);
+    for _ in 0..cases {
+        let mut bytes = if r.chance(0.7) {
+            gen_request(&mut r).into_bytes()
+        } else {
+            let mut s = String::new();
+            gen_value(&mut r, 0, &mut s);
+            s.into_bytes()
+        };
+        for _ in 0..r.below(3) {
+            mutate(&mut r, &mut bytes);
+        }
+        check(&bytes, &mut tape);
+    }
+}

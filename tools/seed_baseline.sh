@@ -11,13 +11,45 @@
 #   tools/seed_baseline.sh <run-id>   # pull the bench-baseline-seed
 #                                     # artifact from that CI run
 #   tools/seed_baseline.sh            # latest run on the current branch
+#   tools/seed_baseline.sh --from-file <path>
+#                                     # seed from a local trajectory
+#                                     # file (e.g. a bench-trajectory
+#                                     # artifact already downloaded);
+#                                     # schema-checked, never hand-write
 #
-# Requires the GitHub CLI (`gh`) authenticated against the repo.
-# After running, review the diff and commit tools/bench_baseline.json.
+# Requires the GitHub CLI (`gh`) authenticated against the repo, except
+# in --from-file mode.  After running, review the diff and commit
+# tools/bench_baseline.json.
 
 set -eu
 
 cd "$(dirname "$0")/.."
+
+# Refuse anything that is not a hot_path_alloc trajectory with the
+# "pooled" mode row the gate keys on — catches seeding from the wrong
+# artifact (or a hand-written file) before the gate goes blind.
+check_schema() {
+    if ! grep -q '"bench":"hot_path_alloc"' "$1" \
+        || ! grep -q '"name":"pooled"' "$1"; then
+        echo "error: $1 is not a hot_path_alloc trajectory (missing" \
+            "\"bench\":\"hot_path_alloc\" or the \"pooled\" mode row)" >&2
+        exit 1
+    fi
+}
+
+if [ "${1:-}" = "--from-file" ]; then
+    SEED="${2:?usage: tools/seed_baseline.sh --from-file <path>}"
+    if [ ! -f "$SEED" ]; then
+        echo "error: no such file: $SEED" >&2
+        exit 1
+    fi
+    check_schema "$SEED"
+    cp "$SEED" tools/bench_baseline.json
+    echo "wrote tools/bench_baseline.json from $SEED:"
+    head -n 5 tools/bench_baseline.json
+    echo "... review and commit it to make the gate enforcing across PRs."
+    exit 0
+fi
 
 if ! command -v gh >/dev/null 2>&1; then
     echo "error: this helper needs the GitHub CLI (gh)" >&2

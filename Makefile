@@ -20,16 +20,17 @@ test-rust:
 	cd rust && cargo test -q
 
 # Perf trajectory: run the simulation benches (no artifacts needed).
-# $(BENCH_OUT) is this PR's headline trajectory (E15 wire-plane parser
-# ablation riding on the hot-path alloc bench, self-gating on
-# byte-identical replies and the ingest alloc reduction); $(GATE_OUT)
+# $(BENCH_OUT) is this PR's headline trajectory (E16 binary-frame
+# ingest vs JSON-embedded pixels riding on the hot-path alloc bench,
+# self-gating on byte-identical replies, the >=2x wire-byte reduction,
+# and the >=50% ingest alloc reduction); $(GATE_OUT)
 # is the hot-path alloc trajectory the cross-PR regression gate
 # compares against tools/bench_baseline.json — same bench, so the
 # trajectory is copied rather than re-measured.  $(TRACE_OUT) keeps the
 # E14 tracing-overhead trajectory.  Parameterized so each PR's
 # trajectory file is explicit — a hardcoded name would silently clobber
 # earlier trajectories.
-BENCH_OUT ?= BENCH_8.json
+BENCH_OUT ?= BENCH_9.json
 GATE_OUT ?= bench_hot_path.json
 TRACE_OUT ?= bench_trace_overhead.json
 bench-json:

@@ -25,7 +25,7 @@ use zuluko::config::Config;
 use zuluko::coordinator::Coordinator;
 use zuluko::engine::EngineKind;
 use zuluko::obs::STAGE_NAMES;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 use zuluko::util::json::Json;
 
@@ -93,14 +93,14 @@ fn main() -> Result<()> {
     //    cache-hit timeline.
     const N: u64 = 24;
     for i in 0..N {
-        let r = c.infer_synthetic(i, 9000 + i)?;
+        let r = c.infer(&InferRequest::new(i).synthetic(9000 + i))?;
         anyhow::ensure!(r.ok, "request {i} failed: {:?}", r.error);
     }
-    let hit = c.infer_synthetic(N, 9000)?;
+    let hit = c.infer(&InferRequest::new(N).synthetic(9000))?;
     anyhow::ensure!(hit.ok && hit.cached, "repeat frame should hit the cache");
 
     // 2. An impossible deadline: shed at admission, always captured.
-    let shed = c.infer_synthetic_slo(N + 1, 31337, Some(0.05), None)?;
+    let shed = c.infer(&InferRequest::new(N + 1).synthetic(31337).deadline_ms(0.05))?;
     anyhow::ensure!(!shed.ok, "a 50µs deadline should be shed");
     println!(
         "\nshed request -> kind={:?} ({})",

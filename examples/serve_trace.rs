@@ -18,7 +18,7 @@ use zuluko::coordinator::Coordinator;
 use zuluko::engine::EngineKind;
 use zuluko::metrics::sysmon::Sysmon;
 use zuluko::metrics::Histogram;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 use zuluko::trace::{Pattern, Trace};
 
@@ -63,7 +63,7 @@ fn main() -> Result<()> {
             // Sleep until this request's arrival offset from trace start.
             std::thread::sleep(at.saturating_sub(start.elapsed()));
             let mut c = Client::connect(&addr).ok()?;
-            c.infer_synthetic(i as u64, seed).ok()
+            c.infer(&InferRequest::new(i as u64).synthetic(seed)).ok()
         }));
     }
     let mut lat = Histogram::default();
@@ -103,7 +103,7 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     let mut closed = Histogram::default();
     for i in 0..m {
-        let r = c.infer_synthetic(i as u64, i as u64)?;
+        let r = c.infer(&InferRequest::new(i as u64).synthetic(i as u64))?;
         anyhow::ensure!(r.ok, "closed-loop request failed: {:?}", r.error);
         closed.record_ms(r.total_ms);
     }

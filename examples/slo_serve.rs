@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use zuluko::config::Config;
 use zuluko::coordinator::Coordinator;
 use zuluko::engine::EngineKind;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 
 fn main() -> Result<()> {
@@ -55,14 +55,14 @@ fn main() -> Result<()> {
     let mut c = Client::connect(&server.addr().to_string())?;
 
     // 1. Deadline-tagged request over the wire.
-    let r = c.infer_synthetic_slo(1, 12345, Some(60_000.0), Some("hi"))?;
+    let r = c.infer(&InferRequest::new(1).synthetic(12345).deadline_ms(60_000.0).priority("hi"))?;
     anyhow::ensure!(r.ok, "deadline-tagged request failed: {:?}", r.error);
     println!("\n#1 deadline=60000ms priority=hi -> ok, engine={} total={:.0}ms \
               top1={}", r.engine, r.total_ms, r.top1);
     anyhow::ensure!(!r.cached, "first frame must be a cold inference");
 
     // 2. The same frame again: served from the response cache.
-    let r2 = c.infer_synthetic_slo(2, 12345, Some(60_000.0), None)?;
+    let r2 = c.infer(&InferRequest::new(2).synthetic(12345).deadline_ms(60_000.0))?;
     anyhow::ensure!(r2.ok, "repeat frame failed: {:?}", r2.error);
     anyhow::ensure!(
         r2.cached && r2.engine == "cache",
@@ -73,7 +73,7 @@ fn main() -> Result<()> {
               {:.0}ms), identical top1={}", r2.total_ms, r.total_ms, r2.top1);
 
     // 3. An impossible deadline: structured shed, no engine time burned.
-    let r3 = c.infer_synthetic_slo(3, 999, Some(1.0), None)?;
+    let r3 = c.infer(&InferRequest::new(3).synthetic(999).deadline_ms(1.0))?;
     anyhow::ensure!(!r3.ok, "1ms deadline should not be servable");
     anyhow::ensure!(
         r3.kind.as_deref() == Some("shed"),

@@ -46,6 +46,17 @@
 //! replaces; decode/infer/reply-serialization allocations are identical
 //! in both modes by construction and are reported in the totals.
 //!
+//! E16 rider (the frame lane, ISSUE 9): pixel ingest over the binary
+//! frame lane (header line + length-prefixed raw payload, reassembled
+//! by the planes' `Framing` machine and decoded straight from the
+//! borrowed payload) vs the counterfactual JSON-embedded-pixels
+//! encoding (the same pixels as a JSON number array, tree-parsed and
+//! collected into an owned byte vec before decode).  Same pixels per
+//! request in both modes, so replies must be byte-identical (hash
+//! sink).  Gates: the frame lane must ingest >= 2x fewer wire
+//! bytes/request and allocate >= 50% fewer events on the ingest
+//! segment (framing + parse + pixels-to-tensor).
+//!
 //! Run: cargo bench --bench hot_path_alloc [-- --quick] [--json PATH]
 
 use std::time::Instant;
@@ -55,8 +66,10 @@ use zuluko::config::WireParser;
 use zuluko::coordinator::Response;
 use zuluko::metrics::Histogram;
 use zuluko::policy::{bytes_key, image_key, CachedResult, ResponseCache};
+use zuluko::server::client::InferRequest;
+use zuluko::server::conn::{Framing, WireItem};
 use zuluko::server::protocol::{self, ClientMsg, ImageSpec};
-use zuluko::tensor::{Lease, Tensor, TensorPool, TensorView};
+use zuluko::tensor::{Image, Lease, Tensor, TensorPool, TensorView};
 use zuluko::testkit::alloc::CountingAlloc;
 use zuluko::testkit::rng::Rng;
 use zuluko::util::json::Json;
@@ -70,6 +83,13 @@ const PER: usize = HW * HW * 3;
 const CLASSES: usize = 1000;
 const BATCH: usize = 4;
 const CACHE_CAP: usize = 256;
+
+// E16 frame-ingest modes use a smaller square so the JSON-embedded
+// baseline (roughly 4 chars per pixel byte) stays cheap to pre-render.
+const FHW: usize = 32;
+const FPER: usize = FHW * FHW * 3;
+const FRAME_LINE_MAX: usize = 64 * 1024;
+const FRAME_MAX: usize = 8 * 1024 * 1024;
 
 /// Synthetic "decode": fill the input buffer in place (models
 /// `Image::to_input_into` writing into a pooled lease).
@@ -329,7 +349,7 @@ fn run_wire_mode(
                 None => {
                     let seed = match &image {
                         ImageSpec::Synthetic(s) => *s,
-                        ImageSpec::Ppm(_) => 0,
+                        ImageSpec::Ppm(_) | ImageSpec::Frame(_) => 0,
                     };
                     let mut l = pool.lease(PER);
                     decode_into(&mut l, &mut Rng::new(seed.wrapping_add(1)));
@@ -375,6 +395,176 @@ fn run_wire_mode(
     let res = finish(name, before, t_start, samples, waves, sink);
     let ingest_per_req = ingest_allocs as f64 / (waves * BATCH) as f64;
     (res, ingest_per_req)
+}
+
+/// Deterministic pixels for E16 request `i` — shared by both encodings
+/// so the reply hashes can be compared byte for byte.
+fn frame_pixels(i: usize) -> Vec<u8> {
+    let mut r = Rng::new(0xE16 ^ i as u64);
+    (0..FPER).map(|_| (r.next_u64() & 0xff) as u8).collect()
+}
+
+/// The counterfactual JSON-embedded encoding: the same pixels as a
+/// number array inside the request line.
+fn json_pixels_wire(i: usize, px: &[u8]) -> Vec<u8> {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(px.len() * 4 + 96);
+    let _ = write!(
+        s,
+        "{{\"id\":{i},\"image\":{{\"pixels\":{{\"h\":{FHW},\"w\":{FHW},\"c\":3,\"data\":["
+    );
+    for (k, b) in px.iter().enumerate() {
+        if k > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{b}");
+    }
+    s.push_str("]}}}\n");
+    s.into_bytes()
+}
+
+/// The frame-lane encoding: the shipped client builder's header line
+/// plus the raw payload, exactly as it goes on a socket.
+fn frame_wire(i: usize, px: &[u8]) -> Vec<u8> {
+    let req = InferRequest::new(i as u64).frame(FHW, FHW, 3, px);
+    let (line, payload) = req.request_line().expect("frame request renders");
+    let mut wire = line.into_bytes();
+    wire.push(b'\n');
+    wire.extend_from_slice(payload.expect("frame request carries a payload"));
+    wire
+}
+
+/// E16: pixel ingest, frame lane vs JSON-embedded pixels.  Ingest is
+/// everything from wire bytes to a ready `(1, FHW, FHW, 3)` input
+/// tensor: framing + parse + pixel materialization + decode-into-lease.
+/// Downstream (infer, extract, reply serialization) is shared code.
+/// Returns (result, ingest allocs/req, wire bytes/req).
+fn run_ingest_mode(
+    name: &'static str,
+    binary: bool,
+    warmup: usize,
+    waves: usize,
+) -> (ModeResult, f64, f64) {
+    let pool = TensorPool::with_mode(true, 16);
+    let mut tape = WireTape::new();
+    let mut framing = Framing::new();
+    let model: std::sync::Arc<str> = std::sync::Arc::from("squeezenet");
+    let streams: Vec<Vec<u8>> = (0..(warmup + waves) * BATCH)
+        .map(|i| {
+            let px = frame_pixels(i);
+            if binary {
+                frame_wire(i, &px)
+            } else {
+                json_pixels_wire(i, &px)
+            }
+        })
+        .collect();
+    let mut samples: Vec<f64> = Vec::with_capacity(waves * BATCH);
+    let mut scores = vec![0.0f32; CLASSES];
+    let mut sink = 0u64;
+    let mut ingest_allocs = 0u64;
+    let mut wire_bytes = 0u64;
+    let mut before = CountingAlloc::snapshot();
+    let mut t_start = Instant::now();
+
+    for wave in 0..warmup + waves {
+        if wave == warmup {
+            before = CountingAlloc::snapshot();
+            t_start = Instant::now();
+            ingest_allocs = 0;
+            wire_bytes = 0;
+        }
+        for slot in 0..BATCH {
+            let idx = wave * BATCH + slot;
+            let buf: &[u8] = &streams[idx];
+            wire_bytes += buf.len() as u64;
+            let t0 = Instant::now();
+            let s0 = CountingAlloc::snapshot();
+            let (id, lease) = if binary {
+                // Frame lane: reassemble with the planes' framing
+                // machine, tape-parse the header, decode straight from
+                // the borrowed payload — no owned pixel copy.
+                let span = match framing.next_item(buf, 0, FRAME_LINE_MAX) {
+                    Ok(Some(WireItem::Line(span))) => span,
+                    other => panic!("expected the header line, got {other:?}"),
+                };
+                let line_end = span.end;
+                let line_bytes = &buf[span.start..line_end];
+                let (msg, key) = protocol::parse_line(WireParser::Tape, line_bytes, &mut tape)
+                    .expect("frame header line parses");
+                assert_eq!(key, None, "frames are never wire-keyed");
+                let (id, fh) = match msg {
+                    ClientMsg::Infer {
+                        id,
+                        image: ImageSpec::Frame(fh),
+                        ..
+                    } => (id, fh),
+                    other => panic!("expected a frame infer, got {other:?}"),
+                };
+                fh.check(FRAME_MAX).expect("bench header is valid");
+                framing.expect_payload(fh.len);
+                let payload = match framing.next_item(buf, line_end + 1, FRAME_LINE_MAX) {
+                    Ok(Some(WireItem::Frame(range))) => &buf[range],
+                    other => panic!("expected the payload, got {other:?}"),
+                };
+                let mut l = pool.lease(FPER);
+                Image::frame_to_input_into(payload, FHW, FHW, &mut l, FHW);
+                (id, l)
+            } else {
+                // JSON-embedded baseline: tree-parse the line (one node
+                // per pixel), collect the array into an owned byte vec,
+                // then the same decode.
+                let text = std::str::from_utf8(buf).expect("json line is utf-8");
+                let j = Json::parse(text.trim_end()).expect("json pixels line parses");
+                let id = j.get("id").and_then(Json::as_f64).expect("id present") as u64;
+                let data = match j
+                    .get("image")
+                    .and_then(|im| im.get("pixels"))
+                    .and_then(|p| p.get("data"))
+                {
+                    Some(Json::Arr(a)) => a,
+                    other => panic!("expected a pixel array, got {other:?}"),
+                };
+                let px: Vec<u8> = data
+                    .iter()
+                    .map(|v| v.as_f64().expect("pixel is a number") as u8)
+                    .collect();
+                let mut l = pool.lease(FPER);
+                Image::frame_to_input_into(&px, FHW, FHW, &mut l, FHW);
+                (id, l)
+            };
+            ingest_allocs += CountingAlloc::since(s0).0;
+            // Downstream of ingest: identical in both modes.
+            fake_infer(TensorView::new(&[1, FHW, FHW, 3], &lease), &mut scores);
+            let sv = TensorView::new(&[1, CLASSES], &scores);
+            let row = sv.row(0);
+            let (top1, top5) = (row.argmax(), row.topk(5));
+            let reply = protocol::response_line(&Response {
+                id,
+                top1,
+                top5,
+                queue_ms: 0.0,
+                exec_ms: 0.0,
+                total_ms: 0.0,
+                batch_size: 1,
+                worker: 0,
+                engine: "sim",
+                model: model.clone(),
+                cached: false,
+                kind: "",
+                error: None,
+                span: None,
+            });
+            sink = sink.wrapping_add(bytes_key(reply.as_bytes()));
+            if wave >= warmup {
+                samples.push(zuluko::util::ms(t0.elapsed()));
+            }
+        }
+    }
+
+    let res = finish(name, before, t_start, samples, waves, sink);
+    let n_req = (waves * BATCH) as f64;
+    (res, ingest_allocs as f64 / n_req, wire_bytes as f64 / n_req)
 }
 
 fn finish(
@@ -474,6 +664,33 @@ fn main() {
         "wire parsers' replies diverged"
     );
 
+    println!(
+        "\n== E16: pixel ingest, binary frame lane vs JSON-embedded \
+         pixels ({FHW}x{FHW}x3, {} requests/mode) ==",
+        waves * BATCH
+    );
+    let (ing_frame, frame_ingest, frame_bytes) =
+        run_ingest_mode("ingest_frame", true, warmup, waves);
+    let (ing_json, json_ingest, json_bytes) =
+        run_ingest_mode("ingest_json_pixels", false, warmup, waves);
+    println!("| mode | allocs/req | bytes/req | req/s | p50 ms | p99 ms |");
+    println!("|---|---|---|---|---|---|");
+    println!("{}", ing_frame.row());
+    println!("{}", ing_json.row());
+    let frame_bytes_reduction = json_bytes / frame_bytes.max(1e-9);
+    println!(
+        "wire bytes/req: frame {frame_bytes:.0}, json {json_bytes:.0} \
+         ({frame_bytes_reduction:.1}x fewer on the frame lane); ingest \
+         allocs/req: frame {frame_ingest:.2}, json {json_ingest:.2}"
+    );
+
+    // Same pixels, same downstream code: the reply streams must match
+    // byte for byte across the two encodings.
+    assert_eq!(
+        ing_frame.sink, ing_json.sink,
+        "frame-lane and JSON-pixel replies diverged"
+    );
+
     if let Some(path) = json_path() {
         let mut cfg = Json::obj();
         cfg.set("requests_per_mode", (waves * BATCH).into())
@@ -490,9 +707,25 @@ fn main() {
             "ingest_alloc_events_removed_frac",
             (1.0 - tape_ingest / tree_ingest.max(1e-9)).into(),
         );
+        let mut frame_row = ing_frame.json();
+        frame_row
+            .set("ingest_allocs_per_req", frame_ingest.into())
+            .set("wire_bytes_per_req", frame_bytes.into());
+        let mut json_row = ing_json.json();
+        json_row
+            .set("ingest_allocs_per_req", json_ingest.into())
+            .set("wire_bytes_per_req", json_bytes.into());
+        let mut frames = Json::obj();
+        frames
+            .set("replies_byte_identical", true.into())
+            .set("wire_bytes_reduction", frame_bytes_reduction.into())
+            .set(
+                "ingest_alloc_events_removed_frac",
+                (1.0 - frame_ingest / json_ingest.max(1e-9)).into(),
+            );
         let mut o = Json::obj();
         o.set("bench", "hot_path_alloc".into())
-            .set("experiment", "E10+E15".into())
+            .set("experiment", "E10+E15+E16".into())
             .set("config", cfg)
             .set(
                 "modes",
@@ -502,11 +735,14 @@ fn main() {
                     legacy.json(),
                     tape_row,
                     tree_row,
+                    frame_row,
+                    json_row,
                 ]),
             )
             .set("bytes_reduction_pooled_vs_unpooled", bytes_reduction.into())
             .set("alloc_event_delta_per_req", event_delta.into())
-            .set("wire", wire);
+            .set("wire", wire)
+            .set("frames", frames);
         std::fs::write(&path, format!("{}\n", o.to_string())).expect("write bench json");
         println!("wrote {path}");
     }
@@ -534,5 +770,22 @@ fn main() {
         tape_ingest <= 0.5 * tree_ingest,
         "tape ingest must at least halve allocation events/request \
          (tape {tape_ingest:.2}, tree {tree_ingest:.2})"
+    );
+    // ISSUE 9 gates: the binary frame lane must at least halve the
+    // ingested wire bytes per request vs JSON-embedded pixels (in
+    // practice ~4x — JSON spends several chars per pixel byte), and at
+    // least halve the allocation events on the ingest segment (the
+    // tree's per-pixel nodes plus the owned pixel vec all disappear;
+    // what remains is the pooled lease bookkeeping).
+    assert!(
+        frame_bytes_reduction >= 2.0,
+        "frame lane must at least halve ingested bytes/request \
+         (got {frame_bytes_reduction:.2}x: frame {frame_bytes:.0} B, \
+         json {json_bytes:.0} B)"
+    );
+    assert!(
+        frame_ingest <= 0.5 * json_ingest,
+        "frame ingest must at least halve allocation events/request \
+         (frame {frame_ingest:.2}, json {json_ingest:.2})"
     );
 }

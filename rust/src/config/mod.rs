@@ -281,6 +281,10 @@ pub struct ServerConfig {
     /// Per-request line budget in bytes; longer lines are a structured
     /// `bad_request` reject + close (OOM-DoS bound).
     pub max_line_bytes: usize,
+    /// Binary frame payload budget in bytes (negotiated connections
+    /// only); a declared frame over the bound is a structured
+    /// `bad_frame` reject + close — the framing layer won't buffer it.
+    pub max_frame_bytes: usize,
     /// Evict connections idle this long (0 disables; event plane only).
     pub idle_timeout_ms: u64,
     /// Request-line parser: tape scanner (default) or the legacy tree
@@ -295,6 +299,9 @@ impl Default for ServerConfig {
             io_threads: 2,
             max_connections: 1024,
             max_line_bytes: 64 * 1024,
+            // A 1024x1024 RGB u8 frame is 3 MiB; 8 MiB leaves headroom
+            // without letting one client pin the read buffer pool.
+            max_frame_bytes: 8 * 1024 * 1024,
             idle_timeout_ms: 60_000,
             wire_parser: WireParser::Tape,
         }
@@ -477,6 +484,9 @@ impl Config {
             if let Some(v) = s.get("max_line_bytes").and_then(|v| v.as_usize()) {
                 self.server.max_line_bytes = v;
             }
+            if let Some(v) = s.get("max_frame_bytes").and_then(|v| v.as_usize()) {
+                self.server.max_frame_bytes = v;
+            }
             if let Some(v) = s.get("idle_timeout_ms").and_then(|v| v.as_usize()) {
                 self.server.idle_timeout_ms = v as u64;
             }
@@ -596,6 +606,9 @@ impl Config {
             .map_err(anyhow::Error::msg)?;
         self.server.max_line_bytes = a
             .get_usize("max-line-bytes", self.server.max_line_bytes)
+            .map_err(anyhow::Error::msg)?;
+        self.server.max_frame_bytes = a
+            .get_usize("max-frame-bytes", self.server.max_frame_bytes)
             .map_err(anyhow::Error::msg)?;
         self.server.idle_timeout_ms = a
             .get_usize("idle-timeout-ms", self.server.idle_timeout_ms as usize)
@@ -717,6 +730,14 @@ impl Config {
                 self.server.max_line_bytes
             );
         }
+        // Below one 1x1 RGB pixel nothing can ship; tests legitimately
+        // use small budgets to exercise oversize rejects.
+        if self.server.max_frame_bytes < 3 {
+            bail!(
+                "max_frame_bytes must be >= 3, got {}",
+                self.server.max_frame_bytes
+            );
+        }
         if !(0.0..=1.0).contains(&self.obs.trace_sample_rate) {
             bail!(
                 "trace_sample_rate must be in [0, 1], got {}",
@@ -819,6 +840,7 @@ impl Config {
         "io-threads",
         "max-connections",
         "max-line-bytes",
+        "max-frame-bytes",
         "idle-timeout-ms",
         "wire-parser",
         "trace-sample-rate",
@@ -1178,6 +1200,7 @@ mod tests {
         let j = Json::parse(
             r#"{"server":{"conn_plane":"threads","io_threads":4,
                 "max_connections":5000,"max_line_bytes":4096,
+                "max_frame_bytes":65536,
                 "idle_timeout_ms":0,"wire_parser":"tree"}}"#,
         )
         .unwrap();
@@ -1187,6 +1210,7 @@ mod tests {
         assert_eq!(c.server.io_threads, 4);
         assert_eq!(c.server.max_connections, 5000);
         assert_eq!(c.server.max_line_bytes, 4096);
+        assert_eq!(c.server.max_frame_bytes, 65536);
         assert_eq!(c.server.idle_timeout_ms, 0);
         assert_eq!(c.server.wire_parser, WireParser::Tree);
         c.validate().unwrap();
@@ -1204,6 +1228,8 @@ mod tests {
                 "2000",
                 "--max-line-bytes",
                 "512",
+                "--max-frame-bytes",
+                "4096",
                 "--idle-timeout-ms",
                 "30000",
             ]
@@ -1218,6 +1244,7 @@ mod tests {
         assert_eq!(c.server.io_threads, 3);
         assert_eq!(c.server.max_connections, 2000);
         assert_eq!(c.server.max_line_bytes, 512);
+        assert_eq!(c.server.max_frame_bytes, 4096);
         assert_eq!(c.server.idle_timeout_ms, 30_000);
 
         // A typo'd plane must error, never silently fall back.
@@ -1245,6 +1272,9 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = Config::default();
         c.server.max_line_bytes = 64;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.server.max_frame_bytes = 2;
         assert!(c.validate().is_err());
         // idle_timeout_ms 0 is valid: it disables eviction.
         let mut c = Config::default();

@@ -1,5 +1,15 @@
 //! Line-protocol client — used by examples, the load generator, and the
 //! server integration test.
+//!
+//! Inference goes through one request type: build an [`InferRequest`]
+//! (id, then pixel source and any SLO/model fields), send it with
+//! [`Client::infer`].  The old per-shape methods
+//! (`infer_synthetic`, `infer_synthetic_model`, `infer_synthetic_slo`,
+//! `infer_ppm`) survive as deprecated delegating shims.
+//!
+//! Binary frames: call [`Client::hello`] with `binary_frames = true`
+//! once per connection, then [`InferRequest::frame`] requests ship
+//! pixels as a raw length-prefixed payload instead of JSON.
 
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -25,7 +35,158 @@ pub struct InferReply {
     pub cached: bool,
     /// Machine-matchable error kind ("shed", "overloaded", ...).
     pub kind: Option<String>,
+    /// Human-readable error text (the `msg` field; falls back to the
+    /// deprecated `error` alias for older servers).
     pub error: Option<String>,
+}
+
+/// Server handshake reply (`{"cmd":"hello"}`).
+#[derive(Debug, Clone)]
+pub struct HelloReply {
+    pub protocol_version: u64,
+    /// Capabilities the server advertises ("binary_frames",
+    /// "wire_parser:tape", "plane:event", ...).
+    pub features: Vec<String>,
+    /// True when this connection may send binary pixel frames.
+    pub binary_frames: bool,
+}
+
+/// Where an [`InferRequest`]'s pixels come from.
+#[derive(Debug, Clone)]
+enum Pixels {
+    Synthetic(u64),
+    Ppm(String),
+    Frame {
+        h: usize,
+        w: usize,
+        c: usize,
+        bytes: Vec<u8>,
+    },
+}
+
+/// One inference request, built field by field:
+///
+/// ```no_run
+/// # use zuluko::server::client::{Client, InferRequest};
+/// # fn demo(c: &mut Client) -> anyhow::Result<()> {
+/// let reply = c.infer(
+///     &InferRequest::new(7)
+///         .model("resnet")
+///         .deadline_ms(50.0)
+///         .synthetic(42),
+/// )?;
+/// # Ok(()) }
+/// ```
+///
+/// Exactly one pixel source must be set ([`synthetic`], [`ppm`], or
+/// [`frame`] — last call wins); [`Client::infer`] rejects a request
+/// without one.
+///
+/// [`synthetic`]: InferRequest::synthetic
+/// [`ppm`]: InferRequest::ppm
+/// [`frame`]: InferRequest::frame
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    id: u64,
+    model: Option<String>,
+    deadline_ms: Option<f64>,
+    priority: Option<String>,
+    pixels: Option<Pixels>,
+}
+
+impl InferRequest {
+    pub fn new(id: u64) -> InferRequest {
+        InferRequest {
+            id,
+            model: None,
+            deadline_ms: None,
+            priority: None,
+            pixels: None,
+        }
+    }
+
+    /// Address a registry model (default: the server's default model).
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = Some(model.to_string());
+        self
+    }
+
+    /// SLO deadline in milliseconds.
+    pub fn deadline_ms(mut self, ms: f64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// SLO priority class (e.g. "high").
+    pub fn priority(mut self, priority: &str) -> Self {
+        self.priority = Some(priority.to_string());
+        self
+    }
+
+    /// Pixels: a server-side seeded synthetic image.
+    pub fn synthetic(mut self, seed: u64) -> Self {
+        self.pixels = Some(Pixels::Synthetic(seed));
+        self
+    }
+
+    /// Pixels: a PPM file (path as seen by the *server*).
+    pub fn ppm(mut self, path: &str) -> Self {
+        self.pixels = Some(Pixels::Ppm(path.to_string()));
+        self
+    }
+
+    /// Pixels: raw u8 RGB (row-major HWC), shipped as a binary frame.
+    /// Requires a [`Client::hello`] negotiation first; `bytes.len()`
+    /// must equal `h * w * c`.
+    pub fn frame(mut self, h: usize, w: usize, c: usize, bytes: &[u8]) -> Self {
+        self.pixels = Some(Pixels::Frame {
+            h,
+            w,
+            c,
+            bytes: bytes.to_vec(),
+        });
+        self
+    }
+
+    /// Encode to the wire: the JSON request line plus, for frame
+    /// requests, the raw payload to ship right after it.  Public so
+    /// tests can assert the exact encoding without a socket.
+    pub fn request_line(&self) -> Result<(String, Option<&[u8]>)> {
+        let mut img = Json::obj();
+        let payload = match &self.pixels {
+            None => bail!("InferRequest needs a pixel source: synthetic(), ppm(), or frame()"),
+            Some(Pixels::Synthetic(seed)) => {
+                img.set("synthetic", (*seed).into());
+                None
+            }
+            Some(Pixels::Ppm(path)) => {
+                img.set("ppm", path.as_str().into());
+                None
+            }
+            Some(Pixels::Frame { h, w, c, bytes }) => {
+                let mut fr = Json::obj();
+                fr.set("len", bytes.len().into());
+                fr.set("h", (*h).into());
+                fr.set("w", (*w).into());
+                fr.set("c", (*c).into());
+                fr.set("dtype", "u8".into());
+                img.set("frame", fr);
+                Some(bytes.as_slice())
+            }
+        };
+        let mut o = Json::obj();
+        o.set("id", self.id.into()).set("image", img);
+        if let Some(m) = &self.model {
+            o.set("model", m.as_str().into());
+        }
+        if let Some(ms) = self.deadline_ms {
+            o.set("deadline_ms", ms.into());
+        }
+        if let Some(p) = &self.priority {
+            o.set("priority", p.as_str().into());
+        }
+        Ok((o.to_string(), payload))
+    }
 }
 
 pub struct Client {
@@ -48,9 +209,7 @@ impl Client {
         })
     }
 
-    fn roundtrip(&mut self, line: &str) -> Result<Json> {
-        self.writer.write_all(line.as_bytes())?;
-        self.writer.write_all(b"\n")?;
+    fn read_reply(&mut self) -> Result<Json> {
         self.replybuf.clear();
         if self.reader.read_line(&mut self.replybuf)? == 0 {
             bail!("server closed connection");
@@ -58,9 +217,50 @@ impl Client {
         Json::parse(&self.replybuf).map_err(|e| anyhow::anyhow!("{e}"))
     }
 
+    fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.read_reply()
+    }
+
     pub fn ping(&mut self) -> Result<bool> {
         let j = self.roundtrip(r#"{"cmd":"ping"}"#)?;
         Ok(j.get("pong").and_then(|v| v.as_bool()).unwrap_or(false))
+    }
+
+    /// Protocol handshake (`{"cmd":"hello"}`): learn the server's
+    /// protocol version and feature set, and opt in to binary pixel
+    /// frames.  Negotiation is sticky for the connection's lifetime.
+    pub fn hello(&mut self, binary_frames: bool) -> Result<HelloReply> {
+        let line = if binary_frames {
+            r#"{"cmd":"hello","features":{"binary_frames":true}}"#
+        } else {
+            r#"{"cmd":"hello"}"#
+        };
+        let j = self.roundtrip(line)?;
+        if !j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false) {
+            bail!("hello rejected: {}", j.to_string());
+        }
+        Ok(HelloReply {
+            protocol_version: j
+                .get("protocol_version")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0) as u64,
+            features: j
+                .get("features")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|f| f.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            binary_frames: j
+                .get("negotiated")
+                .and_then(|n| n.get("binary_frames"))
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
     }
 
     pub fn stats(&mut self) -> Result<Json> {
@@ -84,32 +284,6 @@ impl Client {
         self.roundtrip(r#"{"cmd":"policy"}"#)
     }
 
-    /// Infer on a seeded synthetic image.
-    pub fn infer_synthetic(&mut self, id: u64, seed: u64) -> Result<InferReply> {
-        let line = format!(r#"{{"id":{id},"image":{{"synthetic":{seed}}}}}"#);
-        let j = self.roundtrip(&line)?;
-        Ok(parse_reply(&j))
-    }
-
-    /// Infer on a seeded synthetic image, addressed to a registry model
-    /// (`None` = the server's default model).
-    pub fn infer_synthetic_model(
-        &mut self,
-        id: u64,
-        seed: u64,
-        model: Option<&str>,
-    ) -> Result<InferReply> {
-        let mut img = Json::obj();
-        img.set("synthetic", seed.into());
-        let mut o = Json::obj();
-        o.set("id", id.into()).set("image", img);
-        if let Some(m) = model {
-            o.set("model", m.into());
-        }
-        let j = self.roundtrip(&o.to_string())?;
-        Ok(parse_reply(&j))
-    }
-
     /// Registry listing (`{"cmd":"models"}`).
     pub fn models(&mut self) -> Result<Json> {
         self.roundtrip(r#"{"cmd":"models"}"#)
@@ -125,8 +299,48 @@ impl Client {
         self.roundtrip(&o.to_string())
     }
 
+    /// Send one inference request and wait for its reply.  Frame
+    /// requests ship the header line and the raw payload back to back
+    /// (one write each — the server's framing layer reassembles).
+    pub fn infer(&mut self, req: &InferRequest) -> Result<InferReply> {
+        let (line, payload) = req.request_line()?;
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        if let Some(bytes) = payload {
+            self.writer.write_all(bytes)?;
+        }
+        let j = self.read_reply()?;
+        Ok(parse_reply(&j))
+    }
+
+    /// Infer on a seeded synthetic image.
+    #[deprecated(since = "0.1.0", note = "use Client::infer(&InferRequest::new(id).synthetic(seed))")]
+    pub fn infer_synthetic(&mut self, id: u64, seed: u64) -> Result<InferReply> {
+        self.infer(&InferRequest::new(id).synthetic(seed))
+    }
+
+    /// Infer on a seeded synthetic image, addressed to a registry model
+    /// (`None` = the server's default model).
+    #[deprecated(since = "0.1.0", note = "use Client::infer with InferRequest::model")]
+    pub fn infer_synthetic_model(
+        &mut self,
+        id: u64,
+        seed: u64,
+        model: Option<&str>,
+    ) -> Result<InferReply> {
+        let mut req = InferRequest::new(id).synthetic(seed);
+        if let Some(m) = model {
+            req = req.model(m);
+        }
+        self.infer(&req)
+    }
+
     /// Infer on a seeded synthetic image with an SLO (deadline and/or
     /// priority).
+    #[deprecated(
+        since = "0.1.0",
+        note = "use Client::infer with InferRequest::deadline_ms/priority"
+    )]
     pub fn infer_synthetic_slo(
         &mut self,
         id: u64,
@@ -134,28 +348,20 @@ impl Client {
         deadline_ms: Option<f64>,
         priority: Option<&str>,
     ) -> Result<InferReply> {
-        let mut img = Json::obj();
-        img.set("synthetic", seed.into());
-        let mut o = Json::obj();
-        o.set("id", id.into()).set("image", img);
+        let mut req = InferRequest::new(id).synthetic(seed);
         if let Some(ms) = deadline_ms {
-            o.set("deadline_ms", ms.into());
+            req = req.deadline_ms(ms);
         }
         if let Some(p) = priority {
-            o.set("priority", p.into());
+            req = req.priority(p);
         }
-        let j = self.roundtrip(&o.to_string())?;
-        Ok(parse_reply(&j))
+        self.infer(&req)
     }
 
     /// Infer on a PPM file (path as seen by the *server*).
+    #[deprecated(since = "0.1.0", note = "use Client::infer(&InferRequest::new(id).ppm(path))")]
     pub fn infer_ppm(&mut self, id: u64, path: &str) -> Result<InferReply> {
-        let mut img = Json::obj();
-        img.set("ppm", path.into());
-        let mut o = Json::obj();
-        o.set("id", id.into()).set("image", img);
-        let j = self.roundtrip(&o.to_string())?;
-        Ok(parse_reply(&j))
+        self.infer(&InferRequest::new(id).ppm(path))
     }
 }
 
@@ -184,8 +390,65 @@ fn parse_reply(j: &Json) -> InferReply {
             .and_then(|v| v.as_str())
             .map(|s| s.to_string()),
         error: j
-            .get("error")
+            .get("msg")
+            .or_else(|| j.get("error"))
             .and_then(|v| v.as_str())
             .map(|s| s.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_encodes_every_field() {
+        let (line, payload) = InferRequest::new(7)
+            .model("resnet")
+            .deadline_ms(50.0)
+            .priority("high")
+            .synthetic(42)
+            .request_line()
+            .unwrap();
+        assert_eq!(
+            line,
+            r#"{"deadline_ms":50,"id":7,"image":{"synthetic":42},"model":"resnet","priority":"high"}"#
+        );
+        assert!(payload.is_none());
+    }
+
+    #[test]
+    fn builder_frame_emits_header_and_payload() {
+        let bytes = [1u8, 2, 3, 4, 5, 6];
+        let req = InferRequest::new(1).frame(1, 2, 3, &bytes);
+        let (line, payload) = req.request_line().unwrap();
+        assert_eq!(
+            line,
+            r#"{"id":1,"image":{"frame":{"c":3,"dtype":"u8","h":1,"len":6,"w":2}}}"#
+        );
+        assert_eq!(payload, Some(&bytes[..]));
+    }
+
+    #[test]
+    fn builder_ppm_matches_legacy_encoding() {
+        let (line, payload) =
+            InferRequest::new(3).ppm("/tmp/x.ppm").request_line().unwrap();
+        assert_eq!(line, r#"{"id":3,"image":{"ppm":"/tmp/x.ppm"}}"#);
+        assert!(payload.is_none());
+    }
+
+    #[test]
+    fn builder_without_pixels_is_rejected() {
+        assert!(InferRequest::new(1).request_line().is_err());
+    }
+
+    #[test]
+    fn builder_last_pixel_source_wins() {
+        let (line, _) = InferRequest::new(1)
+            .ppm("/x")
+            .synthetic(9)
+            .request_line()
+            .unwrap();
+        assert_eq!(line, r#"{"id":1,"image":{"synthetic":9}}"#);
     }
 }

@@ -139,6 +139,77 @@ pub fn next_line_span(
     }
 }
 
+/// One complete item framed off the wire, as a byte range into the
+/// pooled read buffer (zero-copy, like [`next_line_span`]).
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireItem {
+    /// A newline-terminated JSON line (newline excluded).
+    Line(std::ops::Range<usize>),
+    /// A binary frame payload: exactly the byte count a preceding
+    /// request line declared via `"image":{"frame":{"len":N,..}}`.
+    Frame(std::ops::Range<usize>),
+}
+
+/// Per-connection framing mode: newline-delimited JSON lines, or —
+/// after a request line declared a binary frame — exactly N raw
+/// payload bytes before line mode resumes.
+///
+/// The mode switch is driven by the protocol layer (only it knows a
+/// line declared a frame); this type owns the byte-level state machine
+/// both planes share: the reactor feeds it the pooled read buffer, the
+/// threads plane drives it over a blocking `BufReader`.  A connection
+/// that never negotiates frames never leaves line mode, so plain JSON
+/// clients are byte-for-byte unaffected.
+#[derive(Debug, Default)]
+pub struct Framing {
+    expecting: Option<usize>,
+}
+
+impl Framing {
+    pub fn new() -> Framing {
+        Framing { expecting: None }
+    }
+
+    /// Switch to payload mode: the next `n` wire bytes are one binary
+    /// frame, not line data.  `n` must already be validated against
+    /// `max_frame_bytes` — the framing layer trusts it so that it
+    /// never needs its own oversize path.
+    pub fn expect_payload(&mut self, n: usize) {
+        debug_assert!(self.expecting.is_none(), "frame declared inside a frame");
+        self.expecting = Some(n);
+    }
+
+    /// Payload bytes still owed before line mode resumes.
+    pub fn expecting(&self) -> Option<usize> {
+        self.expecting
+    }
+
+    /// Frame the next complete item out of `rbuf` at `start`.
+    ///
+    /// In line mode this is exactly [`next_line_span`] (same
+    /// `max_line_bytes` / [`Oversize`] contract).  In payload mode it
+    /// returns a `Frame` span once all expected bytes are buffered and
+    /// switches back to line mode; `Ok(None)` means a partial payload
+    /// — the caller keeps the tail and waits for the next read.
+    pub fn next_item(
+        &mut self,
+        rbuf: &[u8],
+        start: usize,
+        max_line_bytes: usize,
+    ) -> Result<Option<WireItem>, Oversize> {
+        match self.expecting {
+            Some(n) => {
+                if rbuf.len().saturating_sub(start) < n {
+                    return Ok(None);
+                }
+                self.expecting = None;
+                Ok(Some(WireItem::Frame(start..start + n)))
+            }
+            None => Ok(next_line_span(rbuf, start, max_line_bytes)?.map(WireItem::Line)),
+        }
+    }
+}
+
 /// Buffered writer for a non-blocking socket with watermark-based
 /// backpressure.
 ///
@@ -168,6 +239,14 @@ impl WriteBuf {
     pub fn push_line(&mut self, line: &str) {
         self.buf.extend_from_slice(line.as_bytes());
         self.buf.push(b'\n');
+    }
+
+    /// Append one reply line followed by a raw binary payload — the
+    /// write-side mirror of [`Framing`], so future replies can carry
+    /// tensors the same way requests carry frames.
+    pub fn push_frame(&mut self, line: &str, payload: &[u8]) {
+        self.push_line(line);
+        self.buf.extend_from_slice(payload);
     }
 
     pub fn pending(&self) -> usize {
@@ -361,6 +440,83 @@ mod tests {
         assert_eq!(next_line_span(&ok, 0, 64).unwrap(), Some(0..64));
     }
 
+    #[test]
+    fn framing_interleaves_lines_and_payloads() {
+        // line, frame header line, 8-byte payload, line — one buffer.
+        let mut b = b"{\"a\":1}\n{\"hdr\":1}\n".to_vec();
+        b.extend_from_slice(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        b.extend_from_slice(b"{\"b\":2}\n");
+        let mut f = Framing::new();
+        let mut start = 0usize;
+        let i1 = f.next_item(&b, start, 1024).unwrap().unwrap();
+        assert_eq!(i1, WireItem::Line(0..7));
+        start = 8;
+        let i2 = f.next_item(&b, start, 1024).unwrap().unwrap();
+        let hdr = match i2 {
+            WireItem::Line(r) => r,
+            other => panic!("expected header line, got {other:?}"),
+        };
+        assert_eq!(&b[hdr.clone()], b"{\"hdr\":1}");
+        start = hdr.end + 1;
+        // The protocol layer saw the header and declares the payload.
+        f.expect_payload(8);
+        let i3 = f.next_item(&b, start, 1024).unwrap().unwrap();
+        match i3 {
+            WireItem::Frame(r) => {
+                assert_eq!(&b[r.clone()], &[0, 1, 2, 3, 4, 5, 6, 7]);
+                start = r.end;
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        // Back in line mode automatically.
+        assert_eq!(f.expecting(), None);
+        let i4 = f.next_item(&b, start, 1024).unwrap().unwrap();
+        match i4 {
+            WireItem::Line(r) => assert_eq!(&b[r], b"{\"b\":2}"),
+            other => panic!("expected line, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn framing_waits_for_partial_payload() {
+        let mut f = Framing::new();
+        f.expect_payload(10);
+        // Only 4 of 10 payload bytes arrived: wait, stay in payload mode.
+        assert_eq!(f.next_item(&[9u8; 4], 0, 64).unwrap(), None);
+        assert_eq!(f.expecting(), Some(10));
+        // Full payload present (split across reads upstream): framed.
+        assert_eq!(
+            f.next_item(&[9u8; 10], 0, 64).unwrap(),
+            Some(WireItem::Frame(0..10))
+        );
+        assert_eq!(f.expecting(), None);
+    }
+
+    #[test]
+    fn framing_payload_ignores_line_budget_and_newlines() {
+        // Payload bytes may contain b'\n' and exceed max_line_bytes —
+        // neither splits nor rejects a frame (len was validated against
+        // max_frame_bytes before entering payload mode).
+        let mut f = Framing::new();
+        f.expect_payload(100);
+        let b = vec![b'\n'; 100];
+        assert_eq!(
+            f.next_item(&b, 0, 64).unwrap(),
+            Some(WireItem::Frame(0..100))
+        );
+    }
+
+    #[test]
+    fn framing_line_mode_is_next_line_span() {
+        // No negotiation, no frames: behavior is exactly next_line_span.
+        let mut f = Framing::new();
+        let b = b"{\"a\":1}\n{\"part";
+        assert_eq!(f.next_item(b, 0, 1024).unwrap(), Some(WireItem::Line(0..7)));
+        assert_eq!(f.next_item(b, 8, 1024).unwrap(), None);
+        let big = vec![b'y'; 100];
+        assert_eq!(f.next_item(&big, 0, 64).unwrap_err(), Oversize { seen: 100 });
+    }
+
     // -- write buffer -------------------------------------------------------
 
     /// Writer that accepts `quota` bytes then reports WouldBlock, like
@@ -421,6 +577,19 @@ mod tests {
         assert_eq!(wb.pending(), 20);
         assert!(!wb.over_high());
         assert!(wb.under_low());
+    }
+
+    #[test]
+    fn push_frame_appends_line_then_raw_payload() {
+        let mut wb = WriteBuf::new(Vec::new(), 1 << 20);
+        wb.push_frame("{\"ok\":true}", &[1, 2, 3]);
+        wb.push_line("{\"next\":1}");
+        let mut w = Throttled {
+            out: Vec::new(),
+            quota: usize::MAX,
+        };
+        assert!(wb.flush(&mut w).unwrap());
+        assert_eq!(w.out, b"{\"ok\":true}\n\x01\x02\x03{\"next\":1}\n");
     }
 
     #[test]

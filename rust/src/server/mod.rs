@@ -57,6 +57,15 @@ pub struct ConnStats {
     pub peak_conn_in_flight: AtomicUsize,
     /// Async completions delivered (event plane).
     pub completions: AtomicU64,
+    /// Connections that negotiated `binary_frames` via `{"cmd":"hello"}`.
+    pub frames_negotiated: AtomicU64,
+    /// Binary frame payloads accepted and decoded.
+    pub frames_received: AtomicU64,
+    /// Frame payload bytes ingested off the wire.
+    pub frame_bytes: AtomicU64,
+    /// Frames rejected (`bad_frame` / `unsupported_feature`), whether
+    /// or not the payload could be skipped.
+    pub frames_rejected: AtomicU64,
 }
 
 impl ConnStats {
@@ -80,6 +89,10 @@ impl ConnStats {
             in_flight: self.in_flight.load(Ordering::Relaxed),
             peak_conn_in_flight: self.peak_conn_in_flight.load(Ordering::Relaxed),
             completions: self.completions.load(Ordering::Relaxed),
+            frames_negotiated: self.frames_negotiated.load(Ordering::Relaxed),
+            frames_received: self.frames_received.load(Ordering::Relaxed),
+            frame_bytes: self.frame_bytes.load(Ordering::Relaxed),
+            frames_rejected: self.frames_rejected.load(Ordering::Relaxed),
             buffers_free: pool.free,
             buffers_outstanding: pool.outstanding,
         }
@@ -102,6 +115,10 @@ pub struct ConnPlaneSnapshot {
     pub in_flight: usize,
     pub peak_conn_in_flight: usize,
     pub completions: u64,
+    pub frames_negotiated: u64,
+    pub frames_received: u64,
+    pub frame_bytes: u64,
+    pub frames_rejected: u64,
     pub buffers_free: usize,
     pub buffers_outstanding: usize,
 }
@@ -167,6 +184,26 @@ impl Server {
     }
 }
 
+/// Where a request's pixels come from: a parsed spec (synthetic/ppm)
+/// or a binary frame payload still borrowed from the connection's read
+/// buffer (the zero-copy lane).  Both planes route their decode through
+/// [`load_pixels`] so the Closed-retry loop serves both lanes.
+pub(crate) enum PixelSource<'a> {
+    Spec(&'a ImageSpec),
+    Frame(&'a protocol::FrameHeader, &'a [u8]),
+}
+
+pub(crate) fn load_pixels(
+    src: &PixelSource<'_>,
+    hw: usize,
+    pool: &TensorPool,
+) -> Result<PooledTensor> {
+    match src {
+        PixelSource::Spec(spec) => load_image(spec, hw, pool),
+        PixelSource::Frame(header, payload) => load_frame(header, payload, hw, pool),
+    }
+}
+
 /// Decode straight into a pooled lease — steady-state decode allocates
 /// no pixel buffers (the synthetic/ppm byte staging still does; pixels
 /// are the hot part).  The lease comes from the *addressed model's*
@@ -179,9 +216,32 @@ pub(crate) fn load_image(
     let img = match spec {
         ImageSpec::Synthetic(seed) => Image::synthetic(hw, hw, *seed),
         ImageSpec::Ppm(path) => Image::load_ppm(std::path::Path::new(path))?,
+        // Frame payloads live in the connection's read buffer; the
+        // planes decode them via `load_frame` at the point the bytes
+        // exist.  Reaching here would be a plane bug, not a bad client.
+        ImageSpec::Frame(_) => {
+            anyhow::bail!("frame payload not available on the spec-only decode path")
+        }
     };
     let mut buf = pool.lease(hw * hw * 3);
     img.to_input_into_sized(&mut buf, hw);
     // (H, W, C): the coordinator packs batches itself.
+    PooledTensor::new(&[hw, hw, 3], buf)
+}
+
+/// Decode a validated binary frame payload straight into a pooled
+/// lease — the zero-copy lane: `payload` is borrowed from the pooled
+/// connection read buffer and preprocessed directly into the model
+/// arena, with no intermediate pixel `Vec`.  The header must already
+/// have passed [`protocol::FrameHeader::check`].
+pub(crate) fn load_frame(
+    header: &protocol::FrameHeader,
+    payload: &[u8],
+    hw: usize,
+    pool: &TensorPool,
+) -> Result<PooledTensor> {
+    debug_assert_eq!(payload.len(), header.len, "framing delivered wrong span");
+    let mut buf = pool.lease(hw * hw * 3);
+    Image::frame_to_input_into(payload, header.w, header.h, &mut buf, hw);
     PooledTensor::new(&[hw, hw, 3], buf)
 }

@@ -1,45 +1,27 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Wire protocol: newline-delimited JSON over TCP, with an optional
+//! negotiated binary pixel-frame lane.
 //!
-//! Request (one line):
-//! ```json
-//! {"id": 7, "image": {"synthetic": 12345}}          // seeded test image
-//! {"id": 8, "image": {"ppm": "/path/frame.ppm"}}    // file on the device
-//! {"id": 9, "image": {"synthetic": 1},
-//!  "deadline_ms": 250, "priority": "hi"}            // SLO-tagged request
-//! {"id": 10, "image": {"synthetic": 1},
-//!  "model": "squeezenet-v2"}                        // registry-addressed
-//! {"cmd": "stats"}                                  // live stats
-//! {"cmd": "metrics"}                                // unified snapshot
-//! {"cmd": "trace", "n": 16}                         // recent timelines
-//! {"cmd": "policy"}                                 // policy introspection
-//! {"cmd": "models"}                                 // registry listing
-//! {"cmd": "reload", "model": "squeezenet-v2"}       // hot reload
-//! {"cmd": "ping"}
-//! ```
+//! The complete request/reply reference — every `cmd`, every reply
+//! `kind`, and the frame wire format — lives in README.md ("Wire
+//! protocol") and DESIGN.md §5; this module is the single
+//! implementation of that grammar for both wire parsers.
 //!
-//! `model` is optional: absent means the default model; an unknown name
-//! is a structured `"kind":"unknown_model"` reject — never a silent
-//! fallback to the default model.
+//! Invariants the planes lean on:
 //!
-//! `id` is mandatory and must be a non-negative integer: replies are
-//! matched to requests by id, so a silently-defaulted id could cross-wire
-//! routing on the client.  A missing/malformed id is a parse error and
-//! the server answers with a structured `bad_request` line.
-//!
-//! Response (one line):
-//! ```json
-//! {"id":7,"ok":true,"top1":694,"top5":[[694,0.01],...],
-//!  "queue_ms":0.1,"exec_ms":212.4,"total_ms":231.0,"batch":2,
-//!  "engine":"acl","cached":false}
-//! {"id":8,"ok":false,"error":"overloaded","kind":"overloaded"}
-//! {"id":9,"ok":false,"error":"...","kind":"shed",
-//!  "predicted_ms":412.0,"deadline_ms":250.0}        // SLO shed
-//! ```
-//!
-//! Embedded-friendly: the device never receives bulk pixel data over the
-//! demo protocol (images are either on-device files or synthetic); an
-//! ingestion path would replace this transport without touching the
-//! coordinator.
+//! * `id` is mandatory on infer requests and must be a non-negative
+//!   integer: replies are matched to requests by id, so a
+//!   silently-defaulted id could cross-wire routing on the client.
+//! * `model` is optional: absent means the default model; an unknown
+//!   name is a structured `"kind":"unknown_model"` reject — never a
+//!   silent fallback.
+//! * Every reject, on every path and both planes, is one JSON line of
+//!   the same shape: `{"id":…,"ok":false,"kind":…,"msg":…}` with
+//!   `kind` drawn from the closed [`ERROR_KINDS`] set (`"error"` is a
+//!   deprecated alias field for `msg`, kept one release for old
+//!   clients).
+//! * Binary frames (`"image":{"frame":{…}}` + raw payload) are only
+//!   legal after a `{"cmd":"hello"}` negotiation on that connection;
+//!   connections that never negotiate are byte-for-byte unaffected.
 
 use anyhow::{bail, Result};
 
@@ -71,12 +53,84 @@ pub enum ClientMsg {
     /// Hot reload a model's artifacts (None = default model).
     Reload { model: Option<String> },
     Ping,
+    /// Protocol handshake: advertise capabilities and negotiate
+    /// per-connection features.  `binary_frames` is the client's
+    /// opt-in; unknown requested features are ignored (the reply's
+    /// `negotiated` object tells the client what it actually got).
+    Hello { binary_frames: bool },
 }
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum ImageSpec {
     Synthetic(u64),
     Ppm(String),
+    /// Binary pixel frame: the header parsed off the request line; the
+    /// pixel payload follows as exactly `len` raw bytes on the wire
+    /// and is consumed by the connection plane, never by the parser.
+    Frame(FrameHeader),
+}
+
+/// Header of a binary pixel frame, from
+/// `"image":{"frame":{"len":N,"h":N,"w":N,"c":N,"dtype":"u8"}}`.
+///
+/// The parser only enforces JSON structure (integer dims, string
+/// dtype); semantic validation — shape/len consistency, supported
+/// dtype, the `--max-frame-bytes` bound — is [`FrameHeader::check`],
+/// run by the plane so it can answer `bad_frame` and still resync past
+/// the payload when [`FrameHeader::resyncable`] holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameHeader {
+    /// Payload byte count that follows the request line on the wire.
+    pub len: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Raw dtype tag from the wire, kept verbatim so a reject can echo
+    /// it.  `"u8"` (interleaved RGB, row-major HWC) is the only
+    /// supported value; it is also the default when omitted.
+    pub dtype: String,
+}
+
+impl FrameHeader {
+    pub const DTYPE_U8: &'static str = "u8";
+
+    /// Can the connection consume exactly `len` payload bytes and keep
+    /// serving?  True when `len` is in `(0, max_frame_bytes]` — even
+    /// an otherwise-invalid header is then a recoverable `bad_frame`,
+    /// because the framing layer knows how much wire to skip.
+    pub fn resyncable(&self, max_frame_bytes: usize) -> bool {
+        self.len > 0 && self.len <= max_frame_bytes
+    }
+
+    /// Full semantic validation; the `Err` text becomes the
+    /// `bad_frame` reject's `msg`.
+    pub fn check(&self, max_frame_bytes: usize) -> Result<(), String> {
+        if self.len == 0 || self.len > max_frame_bytes {
+            return Err(format!(
+                "frame len {} outside (0, {max_frame_bytes}] (--max-frame-bytes)",
+                self.len
+            ));
+        }
+        if self.dtype != Self::DTYPE_U8 {
+            return Err(format!(
+                "unsupported frame dtype {:?} (supported: \"u8\")",
+                self.dtype
+            ));
+        }
+        if self.h == 0 || self.w == 0 {
+            return Err(format!("frame h/w must be >= 1, got {}x{}", self.h, self.w));
+        }
+        if self.c != 3 {
+            return Err(format!("frame c must be 3 (RGB), got {}", self.c));
+        }
+        match self.h.checked_mul(self.w).and_then(|p| p.checked_mul(self.c)) {
+            Some(n) if n == self.len => Ok(()),
+            _ => Err(format!(
+                "frame len {} != h*w*c = {}*{}*{}",
+                self.len, self.h, self.w, self.c
+            )),
+        }
+    }
 }
 
 /// Pre-decode cache key: a stable hash of the raw image spec, computed
@@ -101,7 +155,10 @@ pub fn wire_key(spec: &ImageSpec) -> Option<u64> {
             // (see `wire_key_for_span`).
             Some(crate::policy::bytes_key_parts(&[b"s", fmt_u64(*seed, &mut buf)]))
         }
-        ImageSpec::Ppm(_) => None,
+        // Neither a ppm path nor a frame header determines the pixels
+        // (file contents / out-of-band payload), so both fall through
+        // to the post-decode content-hash path.
+        ImageSpec::Ppm(_) | ImageSpec::Frame(_) => None,
     }
 }
 
@@ -179,6 +236,19 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
                 model: parse_model(&j)?,
             }),
             "ping" => Ok(ClientMsg::Ping),
+            "hello" => {
+                let binary_frames =
+                    match j.get("features").and_then(|f| f.get("binary_frames")) {
+                        None => false,
+                        Some(v) => match v.as_bool() {
+                            Some(b) => b,
+                            None => {
+                                bail!("feature 'binary_frames' must be a boolean")
+                            }
+                        },
+                    };
+                Ok(ClientMsg::Hello { binary_frames })
+            }
             other => bail!("unknown cmd {other}"),
         };
     }
@@ -198,8 +268,29 @@ pub fn parse_request(line: &str) -> Result<ClientMsg> {
         ImageSpec::Synthetic(seed as u64)
     } else if let Some(p) = img.get("ppm").and_then(|v| v.as_str()) {
         ImageSpec::Ppm(p.to_string())
+    } else if let Some(fr) = img.get("frame") {
+        let dim = |key: &str| -> Result<usize> {
+            match fr.get(key).and_then(|v| v.as_usize()) {
+                Some(n) => Ok(n),
+                None => bail!("frame '{key}' must be a non-negative integer"),
+            }
+        };
+        let dtype = match fr.get("dtype") {
+            None => FrameHeader::DTYPE_U8.to_string(),
+            Some(v) => match v.as_str() {
+                Some(s) => s.to_string(),
+                None => bail!("frame 'dtype' must be a string"),
+            },
+        };
+        ImageSpec::Frame(FrameHeader {
+            len: dim("len")?,
+            h: dim("h")?,
+            w: dim("w")?,
+            c: dim("c")?,
+            dtype,
+        })
     } else {
-        bail!("image must have 'synthetic' or 'ppm'");
+        bail!("image must have 'synthetic', 'ppm', or 'frame'");
     };
     let mut slo = Slo::default();
     if let Some(v) = j.get("deadline_ms") {
@@ -300,6 +391,24 @@ pub fn parse_tape_keyed(
                 None,
             )),
             "ping" => Ok((ClientMsg::Ping, None)),
+            "hello" => {
+                let binary_frames = match doc
+                    .get("features")
+                    .and_then(|f| doc.child(f, "binary_frames"))
+                {
+                    None => false,
+                    Some(f) => match doc.bool_value(f) {
+                        Some(b) => b,
+                        None => {
+                            return Err(tape_reject(
+                                line,
+                                "feature 'binary_frames' must be a boolean",
+                            ))
+                        }
+                    },
+                };
+                Ok((ClientMsg::Hello { binary_frames }, None))
+            }
             _ => Err(tape_reject(line, "unknown cmd")),
         };
     }
@@ -329,8 +438,41 @@ pub fn parse_tape_keyed(
         )
     } else if let Some(p) = doc.child(img, "ppm").and_then(|f| doc.str_value(f)) {
         (ImageSpec::Ppm(p.into_owned()), None)
+    } else if let Some(fr) = doc.child(img, "frame") {
+        let dim = |key: &str| -> Result<usize> {
+            match doc.child(fr, key).and_then(|f| doc.usize_value(f)) {
+                Some(n) => Ok(n),
+                None => Err(tape_reject(
+                    line,
+                    &format!("frame '{key}' must be a non-negative integer"),
+                )),
+            }
+        };
+        let (len, h, w, c) = (dim("len")?, dim("h")?, dim("w")?, dim("c")?);
+        let dtype = match doc.child(fr, "dtype") {
+            None => std::borrow::Cow::Borrowed(FrameHeader::DTYPE_U8),
+            Some(f) => match doc.str_value(f) {
+                Some(s) => s,
+                None => {
+                    return Err(tape_reject(line, "frame 'dtype' must be a string"))
+                }
+            },
+        };
+        (
+            ImageSpec::Frame(FrameHeader {
+                len,
+                h,
+                w,
+                c,
+                dtype: dtype.into_owned(),
+            }),
+            None,
+        )
     } else {
-        return Err(tape_reject(line, "image must have 'synthetic' or 'ppm'"));
+        return Err(tape_reject(
+            line,
+            "image must have 'synthetic', 'ppm', or 'frame'",
+        ));
     };
     let mut slo = Slo::default();
     if let Some(f) = doc.get("deadline_ms") {
@@ -394,6 +536,49 @@ pub fn parse_line(
     }
 }
 
+/// Wire protocol version advertised by `{"cmd":"hello"}`.  Version 1
+/// is the first to carry the handshake itself and the binary frame
+/// lane; pre-hello clients are implicitly version 0 (JSON lines only).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// The closed set of reply `kind` strings — every `"ok":false` line,
+/// on every path and both planes, carries exactly one of these (the
+/// conformance test in rust/tests/conn_plane.rs holds the planes to
+/// it; README.md documents what each means).
+pub const ERROR_KINDS: &[&str] = &[
+    "bad_request",
+    "bad_frame",
+    "unsupported_feature",
+    "at_capacity",
+    "overloaded",
+    "shed",
+    "unknown_model",
+    "model_unavailable",
+    "reload_failed",
+    "error",
+];
+
+/// `{"cmd":"hello"}` reply: the protocol version, the server's feature
+/// list (binary frame support, the active wire parser, the serving
+/// plane), and the features this connection actually negotiated.
+pub fn hello_line(plane: &str, wire_parser: &str, binary_frames: bool) -> String {
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("protocol_version", PROTOCOL_VERSION.into())
+        .set(
+            "features",
+            Json::Arr(vec![
+                "binary_frames".into(),
+                format!("wire_parser:{wire_parser}").into(),
+                format!("plane:{plane}").into(),
+            ]),
+        );
+    let mut neg = Json::obj();
+    neg.set("binary_frames", binary_frames.into());
+    o.set("negotiated", neg);
+    o.to_string()
+}
+
 pub fn response_line(r: &Response) -> String {
     let mut o = Json::obj();
     o.set("id", r.id.into());
@@ -401,6 +586,9 @@ pub fn response_line(r: &Response) -> String {
         Some(e) => {
             o.set("ok", false.into())
                 .set("kind", r.kind.into())
+                .set("msg", e.as_str().into())
+                // Deprecated alias of "msg", kept one release for old
+                // clients (README "Wire protocol").
                 .set("error", e.as_str().into());
         }
         None => {
@@ -434,13 +622,16 @@ pub fn error_line(id: u64, msg: &str) -> String {
     error_line_kind(id, "error", msg)
 }
 
-/// Structured error: `kind` is machine-matchable ("bad_request",
-/// "overloaded", "shed", ...), `error` is the human text.
+/// Structured error: `kind` is machine-matchable (one of
+/// [`ERROR_KINDS`]), `msg` is the human text (`error` is its
+/// deprecated alias, kept one release for old clients).
 pub fn error_line_kind(id: u64, kind: &str, msg: &str) -> String {
+    debug_assert!(ERROR_KINDS.contains(&kind), "unlisted error kind {kind:?}");
     let mut o = Json::obj();
     o.set("id", id.into())
         .set("ok", false.into())
         .set("kind", kind.into())
+        .set("msg", msg.into())
         .set("error", msg.into());
     o.to_string()
 }
@@ -458,6 +649,7 @@ pub fn shed_line(id: u64, predicted_ms: f64, deadline_ms: f64) -> String {
     o.set("id", id.into())
         .set("ok", false.into())
         .set("kind", "shed".into())
+        .set("msg", msg.as_str().into())
         .set("error", msg.into())
         .set("predicted_ms", predicted_ms.into())
         .set("deadline_ms", deadline_ms.into());
@@ -496,6 +688,13 @@ fn stats_obj_with(
         .set("in_flight", conn.in_flight.into())
         .set("peak_conn_in_flight", conn.peak_conn_in_flight.into())
         .set("completions", conn.completions.into());
+    let mut frames = Json::obj();
+    frames
+        .set("negotiated", conn.frames_negotiated.into())
+        .set("received", conn.frames_received.into())
+        .set("bytes", conn.frame_bytes.into())
+        .set("rejected", conn.frames_rejected.into());
+    c.set("frames", frames);
     let mut bufs = Json::obj();
     bufs.set("free", conn.buffers_free.into())
         .set("outstanding", conn.buffers_outstanding.into());
@@ -905,6 +1104,173 @@ mod tests {
     }
 
     #[test]
+    fn parse_hello_negotiation() {
+        assert_eq!(
+            parse_request(r#"{"cmd":"hello"}"#).unwrap(),
+            ClientMsg::Hello {
+                binary_frames: false
+            }
+        );
+        assert_eq!(
+            parse_request(r#"{"cmd":"hello","features":{"binary_frames":true}}"#)
+                .unwrap(),
+            ClientMsg::Hello {
+                binary_frames: true
+            }
+        );
+        // Unknown requested features are ignored, not rejected: the
+        // client learns what it got from the reply's negotiated set.
+        assert_eq!(
+            parse_request(r#"{"cmd":"hello","features":{"quantum_lane":true}}"#)
+                .unwrap(),
+            ClientMsg::Hello {
+                binary_frames: false
+            }
+        );
+        // A malformed opt-in is a parse error, never a silent false.
+        assert!(
+            parse_request(r#"{"cmd":"hello","features":{"binary_frames":1}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn parse_frame_header() {
+        let m = parse_request(
+            r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":"u8"}}}"#,
+        )
+        .unwrap();
+        match m {
+            ClientMsg::Infer { image, .. } => {
+                assert_eq!(
+                    image,
+                    ImageSpec::Frame(FrameHeader {
+                        len: 12,
+                        h: 2,
+                        w: 2,
+                        c: 3,
+                        dtype: "u8".to_string(),
+                    })
+                );
+                assert_eq!(wire_key(&image), None, "frames are never wire-keyed");
+            }
+            other => panic!("expected infer, got {other:?}"),
+        }
+        // dtype defaults to u8; dims are mandatory integers.
+        let m = parse_request(r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3}}}"#)
+            .unwrap();
+        match m {
+            ClientMsg::Infer {
+                image: ImageSpec::Frame(h),
+                ..
+            } => assert_eq!(h.dtype, "u8"),
+            other => panic!("expected frame infer, got {other:?}"),
+        }
+        assert!(parse_request(r#"{"id":1,"image":{"frame":{"h":2,"w":2,"c":3}}}"#).is_err());
+        assert!(parse_request(
+            r#"{"id":1,"image":{"frame":{"len":-1,"h":2,"w":2,"c":3}}}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":7}}}"#
+        )
+        .is_err());
+        // Unsupported dtype *strings* parse fine — the plane rejects
+        // them as bad_frame so it can still resync past the payload.
+        assert!(parse_request(
+            r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":"f32"}}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn frame_header_check_covers_every_reject() {
+        let ok = FrameHeader {
+            len: 12,
+            h: 2,
+            w: 2,
+            c: 3,
+            dtype: "u8".into(),
+        };
+        assert!(ok.check(1024).is_ok());
+        assert!(ok.resyncable(1024));
+        // Oversize: not even resyncable under the budget.
+        assert!(ok.check(11).unwrap_err().contains("max-frame-bytes"));
+        assert!(!ok.resyncable(11));
+        let bad_dtype = FrameHeader {
+            dtype: "f32".into(),
+            ..ok.clone()
+        };
+        assert!(bad_dtype.check(1024).unwrap_err().contains("dtype"));
+        assert!(bad_dtype.resyncable(1024), "dtype reject can still resync");
+        let bad_c = FrameHeader { c: 4, ..ok.clone() };
+        assert!(bad_c.check(1024).unwrap_err().contains("c must be 3"));
+        let mismatch = FrameHeader { h: 3, ..ok.clone() };
+        assert!(mismatch.check(1024).unwrap_err().contains("h*w*c"));
+        let zero = FrameHeader {
+            h: 0,
+            ..ok.clone()
+        };
+        assert!(zero.check(1024).is_err());
+        // Overflow in h*w*c must reject, not wrap.
+        let huge = FrameHeader {
+            len: 12,
+            h: usize::MAX,
+            w: 2,
+            c: 3,
+            dtype: "u8".into(),
+        };
+        assert!(huge.check(usize::MAX).is_err());
+    }
+
+    #[test]
+    fn hello_line_advertises_version_and_features() {
+        let j = Json::parse(&hello_line("event", "tape", true)).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.usize_of("protocol_version").unwrap(), 1);
+        let feats: Vec<&str> = j
+            .get("features")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|f| f.as_str())
+            .collect();
+        assert!(feats.contains(&"binary_frames"));
+        assert!(feats.contains(&"wire_parser:tape"));
+        assert!(feats.contains(&"plane:event"));
+        assert_eq!(
+            j.get("negotiated").unwrap().get("binary_frames").unwrap().as_bool(),
+            Some(true)
+        );
+        let j = Json::parse(&hello_line("threads", "tree", false)).unwrap();
+        assert_eq!(
+            j.get("negotiated").unwrap().get("binary_frames").unwrap().as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn error_lines_carry_unified_schema() {
+        // {ok:false, id, kind, msg} on every reject shape; "error" is
+        // the deprecated alias of "msg" during the transition.
+        for line in [
+            error_line(1, "boom"),
+            error_line_kind(2, "bad_frame", "frame len 0 outside (0, 8]"),
+            error_line_kind(3, "unsupported_feature", "negotiate first"),
+            shed_line(4, 412.0, 250.0),
+        ] {
+            let j = Json::parse(&line).unwrap();
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+            let kind = j.str_of("kind").unwrap();
+            assert!(ERROR_KINDS.contains(&kind), "unlisted kind {kind}");
+            let msg = j.str_of("msg").unwrap();
+            assert!(!msg.is_empty());
+            assert_eq!(j.str_of("error").unwrap(), msg, "alias must match msg");
+        }
+    }
+
+    #[test]
     fn wire_key_only_for_self_describing_specs() {
         let a = wire_key(&ImageSpec::Synthetic(42));
         let b = wire_key(&ImageSpec::Synthetic(42));
@@ -966,6 +1332,24 @@ mod tests {
             br#"{"cmd":"reload","model":"b"}"#,
             br#"{"cmd":"reload","model":3}"#,
             br#"{"cmd":"ping"}"#,
+            br#"{"cmd":"hello"}"#,
+            br#"{"cmd":"hello","features":{"binary_frames":true}}"#,
+            br#"{"cmd":"hello","features":{"binary_frames":false}}"#,
+            br#"{"cmd":"hello","features":{"binary_frames":1}}"#,
+            br#"{"cmd":"hello","features":{"quantum_lane":true}}"#,
+            br#"{"cmd":"hello","features":7}"#,
+            br#"{"cmd":"hello","features":["binary_frames"]}"#,
+            br#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3}}}"#,
+            br#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":"u8"}}}"#,
+            br#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":"f32"}}}"#,
+            br#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":7}}}"#,
+            br#"{"id":1,"image":{"frame":{"h":2,"w":2,"c":3}}}"#,
+            br#"{"id":1,"image":{"frame":{"len":-1,"h":2,"w":2,"c":3}}}"#,
+            br#"{"id":1,"image":{"frame":{"len":1.5,"h":2,"w":2,"c":3}}}"#,
+            br#"{"id":1,"image":{"frame":7}}"#,
+            br#"{"id":1,"image":{"frame":{}}}"#,
+            br#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3}},"deadline_ms":250,"priority":"hi","model":"m"}"#,
+            br#"{"id":1,"image":{"synthetic":5,"frame":{"len":12,"h":2,"w":2,"c":3}}}"#,
             br#"{"cmd":"reboot"}"#,
             br#"{"cmd":7,"id":1,"image":{"synthetic":1}}"#,
             br#"{"id":7,"image":{"synthetic":1}}"#,

@@ -41,13 +41,13 @@ use crate::policy::Slo;
 use crate::util::log::{suppressed_note, CAPACITY_LOG};
 use crate::util::wire::{self, WireTape};
 
-use super::conn::{next_line_span, AcceptBackoff, BufPool, WriteBuf};
-use super::protocol::{self, ClientMsg, ImageSpec};
+use super::conn::{AcceptBackoff, BufPool, Framing, WireItem, WriteBuf};
+use super::protocol::{self, ClientMsg, FrameHeader, ImageSpec};
 use super::sys::{
     self, Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
     EPOLLRDHUP,
 };
-use super::{ConnPlaneSnapshot, ConnStats};
+use super::{ConnPlaneSnapshot, ConnStats, PixelSource};
 
 /// Lane index lives in the token's top bits so a completion can find
 /// its owning IO thread without a lookup table.
@@ -92,6 +92,7 @@ pub(super) struct Shared {
     io_threads: usize,
     max_connections: usize,
     max_line_bytes: usize,
+    max_frame_bytes: usize,
     /// Request-line parser (tape hot path vs tree ablation baseline).
     wire: WireParser,
     idle_timeout: Option<Duration>,
@@ -172,6 +173,7 @@ impl Reactor {
             io_threads,
             max_connections: cfg.max_connections,
             max_line_bytes: cfg.max_line_bytes,
+            max_frame_bytes: cfg.max_frame_bytes,
             wire: cfg.wire_parser,
             idle_timeout: match cfg.idle_timeout_ms {
                 0 => None,
@@ -342,6 +344,30 @@ struct Conn {
     read_paused: bool,
     /// Half-closed or errored: flush what's owed, then close.
     closing: bool,
+    /// Line mode ⇄ expecting-payload-bytes mode (binary frame lane).
+    framing: Framing,
+    /// `binary_frames` negotiated via `{"cmd":"hello"}`; sticky for
+    /// the connection's lifetime.  Never set = plain JSON, unchanged.
+    binary_frames: bool,
+    /// What to do with the payload the framing layer is collecting.
+    pending_frame: Option<PendingFrame>,
+}
+
+/// Disposition of an in-flight frame payload, decided when its header
+/// line was processed.
+enum PendingFrame {
+    /// The header was rejected (reply already queued) but declared a
+    /// trustworthy `len`: consume that many bytes and keep serving.
+    Skip,
+    /// Valid header on a negotiated connection: decode the payload into
+    /// the addressed model's arena and submit.
+    Submit {
+        id: u64,
+        header: FrameHeader,
+        slo: Slo,
+        model: Option<String>,
+        span: Span,
+    },
 }
 
 fn io_loop(idx: usize, shared: Arc<Shared>, coord: Arc<Coordinator>) {
@@ -435,6 +461,9 @@ fn register_conn(
             interest,
             read_paused: false,
             closing: false,
+            framing: Framing::new(),
+            binary_frames: false,
+            pending_frame: None,
         },
     );
 }
@@ -613,16 +642,39 @@ fn on_readable(
     let mut rbuf = std::mem::take(&mut c.rbuf);
     let mut start = 0usize;
     loop {
-        match next_line_span(&rbuf, start, shared.max_line_bytes) {
-            Ok(Some(span)) => {
+        let item = match conns.get_mut(&token) {
+            Some(c) => c.framing.next_item(&rbuf, start, shared.max_line_bytes),
+            None => return true,
+        };
+        match item {
+            Ok(Some(WireItem::Line(span))) => {
                 let end = span.end;
                 let line = rbuf.get(span).unwrap_or(&[]);
+                let was_closing = conns.get(&token).is_some_and(|c| c.closing);
                 process_line(shared, coord, conns, token, line, tape);
                 start = end + 1;
                 if !conns.contains_key(&token) {
                     // Closed mid-batch: close_conn already returned the
                     // placeholder to the pool (counters are balanced),
                     // so the real buffer is simply dropped.
+                    return true;
+                }
+                if !was_closing && conns.get(&token).is_some_and(|c| c.closing) {
+                    // This line set closing: a non-resyncable frame
+                    // reject.  The reply is queued; the rest of the
+                    // input is untrustworthy and discarded with the
+                    // buffer (like oversize).  EOF-driven closing (set
+                    // before the loop) keeps draining buffered lines —
+                    // answer what is owed, then close.
+                    return true;
+                }
+            }
+            Ok(Some(WireItem::Frame(range))) => {
+                let end = range.end;
+                let payload = rbuf.get(range).unwrap_or(&[]);
+                process_frame(shared, coord, conns, token, payload);
+                start = end;
+                if !conns.contains_key(&token) {
                     return true;
                 }
             }
@@ -685,6 +737,19 @@ fn process_line(
             &format!("bad request: {e}"),
         )),
         Ok((ClientMsg::Ping, _)) => c.wbuf.push_line("{\"ok\":true,\"pong\":true}"),
+        Ok((ClientMsg::Hello { binary_frames }, _)) => {
+            // Opt-in is sticky for the connection's lifetime; repeating
+            // the handshake is idempotent (no double-count, no downgrade).
+            if binary_frames && !c.binary_frames {
+                c.binary_frames = true;
+                shared.stats.frames_negotiated.fetch_add(1, Ordering::Relaxed);
+            }
+            c.wbuf.push_line(&protocol::hello_line(
+                "event",
+                shared.wire.as_str(),
+                c.binary_frames,
+            ));
+        }
         Ok((ClientMsg::Stats, _)) => {
             let line =
                 protocol::stats_line_with(&coord.stats(), &shared.snapshot());
@@ -733,17 +798,121 @@ fn process_line(
                 model,
             },
             wire_key,
-        )) => {
-            let mut span = shared.obs.begin_at(t_accepted);
-            span.set(Stage::Parsed, shared.obs.now_ns());
+        )) => match image {
+            ImageSpec::Frame(header) => {
+                let reject: Option<(&str, String)> = if !c.binary_frames {
+                    Some((
+                        "unsupported_feature",
+                        "binary_frames not negotiated; send \
+                         {\"cmd\":\"hello\",\"features\":{\"binary_frames\":true}} \
+                         first"
+                            .to_string(),
+                    ))
+                } else {
+                    header
+                        .check(shared.max_frame_bytes)
+                        .err()
+                        .map(|msg| ("bad_frame", msg))
+                };
+                match reject {
+                    Some((kind, msg)) => {
+                        shared.stats.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                        c.wbuf.push_line(&protocol::error_line_kind(id, kind, &msg));
+                        if header.resyncable(shared.max_frame_bytes) {
+                            // The declared len is trustworthy even though
+                            // the header is not: consume exactly that many
+                            // payload bytes and keep the connection alive.
+                            c.framing.expect_payload(header.len);
+                            c.pending_frame = Some(PendingFrame::Skip);
+                        } else {
+                            // Can't tell where the payload ends — the only
+                            // safe resync point is a fresh connection.
+                            c.closing = true;
+                        }
+                    }
+                    None => {
+                        let mut span = shared.obs.begin_at(t_accepted);
+                        span.set(Stage::Parsed, shared.obs.now_ns());
+                        c.framing.expect_payload(header.len);
+                        c.pending_frame = Some(PendingFrame::Submit {
+                            id,
+                            header,
+                            slo,
+                            model,
+                            span,
+                        });
+                    }
+                }
+            }
+            image => {
+                let mut span = shared.obs.begin_at(t_accepted);
+                span.set(Stage::Parsed, shared.obs.now_ns());
+                match submit_infer(
+                    shared,
+                    coord,
+                    token,
+                    id,
+                    model.as_deref(),
+                    PixelSource::Spec(&image),
+                    wire_key,
+                    slo,
+                    span,
+                ) {
+                    Some(reply) => c.wbuf.push_line(&reply),
+                    None => {
+                        c.pending += 1;
+                        shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+                        shared
+                            .stats
+                            .peak_conn_in_flight
+                            .fetch_max(c.pending, Ordering::Relaxed);
+                    }
+                }
+            }
+        },
+    }
+}
+
+/// Consume one complete frame payload (borrowed from the read buffer)
+/// according to the disposition recorded when its header line arrived.
+fn process_frame(
+    shared: &Arc<Shared>,
+    coord: &Arc<Coordinator>,
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+    payload: &[u8],
+) {
+    let c = match conns.get_mut(&token) {
+        Some(c) => c,
+        None => return,
+    };
+    match c.pending_frame.take() {
+        None => {
+            // Framing only enters payload mode through expect_payload,
+            // which is always paired with a disposition.
+            debug_assert!(false, "frame payload with no pending disposition");
+        }
+        Some(PendingFrame::Skip) => {} // reject reply already queued
+        Some(PendingFrame::Submit {
+            id,
+            header,
+            slo,
+            model,
+            span,
+        }) => {
+            shared.stats.frames_received.fetch_add(1, Ordering::Relaxed);
+            shared
+                .stats
+                .frame_bytes
+                .fetch_add(payload.len() as u64, Ordering::Relaxed);
             match submit_infer(
                 shared,
                 coord,
                 token,
                 id,
                 model.as_deref(),
-                &image,
-                wire_key,
+                PixelSource::Frame(&header, payload),
+                None,
                 slo,
                 span,
             ) {
@@ -773,7 +942,7 @@ fn submit_infer(
     conn: u64,
     id: u64,
     model: Option<&str>,
-    image: &ImageSpec,
+    src: PixelSource<'_>,
     wire_key: Option<u64>,
     slo: Slo,
     span: Span,
@@ -814,7 +983,7 @@ fn submit_infer(
         let hw = lease.input_hw();
         let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
             Some(t) => t,
-            None => match super::load_image(image, hw, &lease.arena()) {
+            None => match super::load_pixels(&src, hw, &lease.arena()) {
                 Err(e) => return Some(protocol::error_line(id, &format!("image: {e}"))),
                 Ok(t) => t,
             },

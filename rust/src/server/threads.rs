@@ -24,7 +24,7 @@ use crate::util::wire::{self, WireTape};
 
 use super::conn::AcceptBackoff;
 use super::protocol::{self, ClientMsg, ImageSpec};
-use super::{ConnPlaneSnapshot, ConnStats};
+use super::{ConnPlaneSnapshot, ConnStats, PixelSource};
 
 /// Running thread-per-connection plane.
 pub struct ThreadsPlane {
@@ -44,6 +44,7 @@ impl ThreadsPlane {
         let stats = Arc::new(ConnStats::default());
         let max_connections = cfg.max_connections;
         let max_line_bytes = cfg.max_line_bytes;
+        let max_frame_bytes = cfg.max_frame_bytes;
         let wire = cfg.wire_parser;
         let (stop2, stats2) = (stop.clone(), stats.clone());
 
@@ -102,6 +103,7 @@ impl ThreadsPlane {
                                     &coord,
                                     &stats3,
                                     max_line_bytes,
+                                    max_frame_bytes,
                                     wire,
                                 );
                             });
@@ -184,17 +186,38 @@ fn read_bounded_line(
     Ok(LineRead::Line)
 }
 
+/// Blocking `read_exact` of a frame payload.  The buffer is reused
+/// across frames on this connection; a short read (client disconnected
+/// mid-payload) surfaces as the `Err` that ends the handler.
+fn read_payload(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    n: usize,
+) -> std::io::Result<()> {
+    buf.clear();
+    buf.resize(n, 0);
+    reader.read_exact(buf)
+}
+
 fn handle_conn(
     stream: TcpStream,
     coord: &Coordinator,
     stats: &ConnStats,
     max_line_bytes: usize,
+    max_frame_bytes: usize,
     wire_parser: WireParser,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut raw = Vec::new();
+    // Frame payload staging, reused across frames on this connection.
+    // (The event plane decodes payloads in place from its pooled read
+    // buffer; this plane's BufReader has no such buffer to borrow.)
+    let mut payload = Vec::new();
+    // `binary_frames` negotiated via `{"cmd":"hello"}`; sticky for the
+    // connection's lifetime.  Never set = plain JSON, unchanged.
+    let mut negotiated = false;
     // Per-connection scan tape, reused for every request on this
     // thread — steady-state parsing allocates nothing.
     let mut tape = WireTape::new();
@@ -241,6 +264,18 @@ fn handle_conn(
                 None,
             ),
             Ok((ClientMsg::Ping, _)) => ("{\"ok\":true,\"pong\":true}".to_string(), None),
+            Ok((ClientMsg::Hello { binary_frames }, _)) => {
+                // Opt-in is sticky for the connection's lifetime;
+                // repeating the handshake is idempotent.
+                if binary_frames && !negotiated {
+                    negotiated = true;
+                    stats.frames_negotiated.fetch_add(1, Ordering::Relaxed);
+                }
+                (
+                    protocol::hello_line("threads", wire_parser.as_str(), negotiated),
+                    None,
+                )
+            }
             Ok((ClientMsg::Stats, _)) => (
                 protocol::stats_line_with(
                     &coord.stats(),
@@ -294,7 +329,69 @@ fn handle_conn(
             )) => {
                 let mut span = coord.obs().begin_at(t_accepted);
                 span.set(Stage::Parsed, coord.obs().now_ns());
-                infer_reply(coord, id, model.as_deref(), &image, wire_key, slo, span)
+                match image {
+                    ImageSpec::Frame(header) => {
+                        let reject: Option<(&str, String)> = if !negotiated {
+                            Some((
+                                "unsupported_feature",
+                                "binary_frames not negotiated; send \
+                                 {\"cmd\":\"hello\",\"features\":{\"binary_frames\":true}} \
+                                 first"
+                                    .to_string(),
+                            ))
+                        } else {
+                            header
+                                .check(max_frame_bytes)
+                                .err()
+                                .map(|msg| ("bad_frame", msg))
+                        };
+                        match reject {
+                            Some((kind, msg)) => {
+                                stats.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                                let reply = protocol::error_line_kind(id, kind, &msg);
+                                if header.resyncable(max_frame_bytes) {
+                                    // The declared len is trustworthy even
+                                    // though the header is not: consume the
+                                    // payload and keep the connection alive.
+                                    read_payload(&mut reader, &mut payload, header.len)?;
+                                    (reply, None)
+                                } else {
+                                    // Can't tell where the payload ends —
+                                    // the only safe resync point is a
+                                    // fresh connection.
+                                    writer.write_all(reply.as_bytes())?;
+                                    writer.write_all(b"\n")?;
+                                    return Ok(());
+                                }
+                            }
+                            None => {
+                                read_payload(&mut reader, &mut payload, header.len)?;
+                                stats.frames_received.fetch_add(1, Ordering::Relaxed);
+                                stats
+                                    .frame_bytes
+                                    .fetch_add(header.len as u64, Ordering::Relaxed);
+                                infer_reply(
+                                    coord,
+                                    id,
+                                    model.as_deref(),
+                                    &PixelSource::Frame(&header, &payload),
+                                    wire_key,
+                                    slo,
+                                    span,
+                                )
+                            }
+                        }
+                    }
+                    image => infer_reply(
+                        coord,
+                        id,
+                        model.as_deref(),
+                        &PixelSource::Spec(&image),
+                        wire_key,
+                        slo,
+                        span,
+                    ),
+                }
             }
         };
         writer.write_all(reply.as_bytes())?;
@@ -326,7 +423,7 @@ fn infer_reply(
     coord: &Coordinator,
     id: u64,
     model: Option<&str>,
-    image: &ImageSpec,
+    src: &PixelSource<'_>,
     wire_key: Option<u64>,
     slo: Slo,
     span: Span,
@@ -367,7 +464,7 @@ fn infer_reply(
         let hw = lease.input_hw();
         let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
             Some(t) => t,
-            None => match super::load_image(image, hw, &lease.arena()) {
+            None => match super::load_pixels(src, hw, &lease.arena()) {
                 Err(e) => {
                     return (protocol::error_line(id, &format!("image: {e}")), None)
                 }

@@ -117,19 +117,37 @@ impl Image {
     /// manifest, so the server decodes at whatever size the addressed
     /// model wants.  `out` must hold exactly `hw*hw*3` elements.
     pub fn to_input_into_sized(&self, out: &mut [f32], hw: usize) {
+        Self::frame_to_input_into(&self.rgb, self.width, self.height, out, hw);
+    }
+
+    /// Preprocess raw u8 RGB (row-major HWC) pixels straight into the
+    /// caller's buffer — the from-raw-frame path.  The binary frame
+    /// lane calls this with the payload borrowed from the pooled
+    /// connection read buffer, so wire-to-tensor decode never builds an
+    /// owned `Image` copy.  `rgb` must hold exactly `width*height*3`
+    /// bytes and `out` exactly `hw*hw*3` elements.
+    pub fn frame_to_input_into(
+        rgb: &[u8],
+        width: usize,
+        height: usize,
+        out: &mut [f32],
+        hw: usize,
+    ) {
         assert!(hw > 0, "decode size must be positive");
+        assert!(width > 0 && height > 0, "frame dims must be positive");
+        assert_eq!(rgb.len(), width * height * 3, "frame payload size");
         assert_eq!(out.len(), hw * hw * 3, "decode buffer size");
-        let side = self.width.min(self.height);
-        let x0 = (self.width - side) / 2;
-        let y0 = (self.height - side) / 2;
+        let side = width.min(height);
+        let x0 = (width - side) / 2;
+        let y0 = (height - side) / 2;
         let mut w = 0usize;
         for oy in 0..hw {
             let sy = y0 + oy * side / hw;
             for ox in 0..hw {
                 let sx = x0 + ox * side / hw;
-                let base = (sy * self.width + sx) * 3;
+                let base = (sy * width + sx) * 3;
                 for c in 0..3 {
-                    let v = self.rgb[base + c] as f32;
+                    let v = rgb[base + c] as f32;
                     out[w] = v / 127.5 - 1.0;
                     w += 1;
                 }
@@ -179,6 +197,19 @@ mod tests {
         for &v in t.data() {
             assert!((-1.0..=1.0).contains(&v));
         }
+    }
+
+    #[test]
+    fn frame_decode_matches_owned_image_decode() {
+        // The borrowed-payload path must be bit-identical to decoding
+        // through an owned Image — the frame lane's correctness hinges
+        // on it (byte-identical replies vs the JSON lane).
+        let img = Image::synthetic(40, 30, 11);
+        let mut via_image = vec![0.0f32; 16 * 16 * 3];
+        img.to_input_into_sized(&mut via_image, 16);
+        let mut via_frame = vec![9.0f32; 16 * 16 * 3];
+        Image::frame_to_input_into(&img.rgb, 40, 30, &mut via_frame, 16);
+        assert_eq!(via_image, via_frame);
     }
 
     #[test]

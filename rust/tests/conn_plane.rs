@@ -14,7 +14,15 @@
 //!   both planes (the threads plane must hold the same contract — it
 //!   is the E13 ablation baseline, not a second protocol);
 //! * the event plane's thread count is independent of connection
-//!   count (the whole point of the reactor).
+//!   count (the whole point of the reactor);
+//! * the binary frame lane (ISSUE 9): `{"cmd":"hello"}` negotiation,
+//!   frames interleaved with JSON lines on one pipelined connection
+//!   answered exactly once with lane-identical results, structured
+//!   `bad_frame`/`unsupported_feature` rejects that leave the
+//!   connection recoverable, and mid-frame disconnects that don't
+//!   wedge the server — on both planes;
+//! * every reject on either plane carries the unified error schema
+//!   (`ok:false`, documented `kind`, human `msg`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -26,7 +34,7 @@ use zuluko::config::{Config, ConnPlane, ServerConfig, WireParser};
 use zuluko::coordinator::Coordinator;
 use zuluko::engine::sim::expected_top1;
 use zuluko::engine::EngineKind;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 use zuluko::tensor::image::Image;
 use zuluko::testkit::sched::threads_named;
@@ -77,6 +85,20 @@ fn frame_pixels(seed: u64) -> Vec<f32> {
     img.to_input_into(&mut buf);
     buf
 }
+
+/// Raw u8 RGB whose frame-lane decode equals `frame_pixels(seed)` —
+/// what a client ships to get the same answer as `{"synthetic":seed}`.
+fn frame_rgb(seed: u64) -> Vec<u8> {
+    Image::synthetic(HW, HW, seed).rgb
+}
+
+fn frame_header_line(id: u64, len: usize, h: usize, w: usize, c: usize) -> String {
+    format!(
+        "{{\"id\":{id},\"image\":{{\"frame\":{{\"len\":{len},\"h\":{h},\"w\":{w},\"c\":{c},\"dtype\":\"u8\"}}}}}}\n"
+    )
+}
+
+const HELLO_FRAMES: &[u8] = b"{\"cmd\":\"hello\",\"features\":{\"binary_frames\":true}}\n";
 
 /// Tear down server + coordinator: wait for server threads to release
 /// their Arc clones, then shutdown.
@@ -195,7 +217,7 @@ fn slow_reader_hits_backpressure_without_starving_others() {
     // A second connection stays responsive while the first is parked.
     let mut c = Client::connect(&addr.to_string()).unwrap();
     assert!(c.ping().unwrap());
-    let r = c.infer_synthetic(1, 99).unwrap();
+    let r = c.infer(&InferRequest::new(1).synthetic(99)).unwrap();
     assert!(r.ok, "other connection starved: {:?}", r.error);
 
     // Drain the flood: every reply arrives (nothing was dropped under
@@ -373,7 +395,7 @@ fn threads_plane_holds_the_same_wire_contract() {
 
     let mut c = Client::connect(&addr).unwrap();
     assert!(c.ping().unwrap());
-    let r = c.infer_synthetic(5, 77).unwrap();
+    let r = c.infer(&InferRequest::new(5).synthetic(77)).unwrap();
     assert!(r.ok, "{:?}", r.error);
     assert_eq!(r.top1, expected_top1(MODEL, &frame_pixels(77), CLASSES));
     let stats = c.stats().unwrap();
@@ -396,7 +418,7 @@ fn assert_conn_section_and_obs_roundtrip(addr: &str, plane: &str, io_threads: us
     let mut c = Client::connect(addr).unwrap();
     // Traffic first, so counters have something to show.
     for i in 0..4 {
-        let r = c.infer_synthetic(i, 300 + i).unwrap();
+        let r = c.infer(&InferRequest::new(i).synthetic(300 + i)).unwrap();
         assert!(r.ok, "{:?}", r.error);
     }
 
@@ -421,6 +443,10 @@ fn assert_conn_section_and_obs_roundtrip(addr: &str, plane: &str, io_threads: us
     let bufs = conn.get("buffers").expect("conn section reports buffers");
     assert!(bufs.usize_of("free").is_ok());
     assert!(bufs.usize_of("outstanding").is_ok());
+    let frames = conn.get("frames").expect("conn section reports frames");
+    for key in ["negotiated", "received", "bytes", "rejected"] {
+        assert!(frames.usize_of(key).is_ok(), "frames section missing {key}");
+    }
     // The proc section (satellite of the same PR) rides on stats too.
     let proc = stats.get("proc").expect("stats must carry a proc section");
     assert!(proc.f64_of("rss_mb").unwrap() > 1.0);
@@ -546,6 +572,329 @@ fn malformed_lines_structured_reject_both_planes_both_parsers() {
             },
         );
         assert_malformed_line_contract(&server.addr().to_string(), parser.as_str());
+        stop_all(server, coord);
+    }
+}
+
+/// Open a raw pipelining socket: a line reader plus the write half.
+fn raw_conn(addr: &str) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    (BufReader::new(stream.try_clone().unwrap()), stream)
+}
+
+fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "early EOF");
+    Json::parse(&line).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+}
+
+/// The tentpole contract, asserted per plane: after a hello handshake
+/// one pipelined connection interleaves binary frames and JSON lines in
+/// a single write; every request is answered exactly once, and a frame
+/// carrying the same pixels as `{"synthetic":seed}` gets the same
+/// answer (the two lanes are result-identical, not merely compatible).
+fn assert_frames_interleave_with_json(addr: &str) {
+    let (mut reader, mut w) = raw_conn(addr);
+
+    let mut burst: Vec<u8> = Vec::new();
+    burst.extend_from_slice(HELLO_FRAMES);
+    let px1 = frame_rgb(501);
+    burst.extend_from_slice(frame_header_line(1, px1.len(), HW, HW, 3).as_bytes());
+    burst.extend_from_slice(&px1);
+    burst.extend_from_slice(b"{\"id\":2,\"image\":{\"synthetic\":502}}\n");
+    let px3 = frame_rgb(503);
+    burst.extend_from_slice(frame_header_line(3, px3.len(), HW, HW, 3).as_bytes());
+    burst.extend_from_slice(&px3);
+    // Same pixels as id 2, via the frame lane: must match id 2's answer.
+    let px4 = frame_rgb(502);
+    burst.extend_from_slice(frame_header_line(4, px4.len(), HW, HW, 3).as_bytes());
+    burst.extend_from_slice(&px4);
+    w.write_all(&burst).unwrap();
+
+    // Hello reply comes first (command replies are inline/in order).
+    let hello = read_json_line(&mut reader);
+    assert_eq!(hello.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(hello.usize_of("protocol_version").unwrap(), 1);
+    assert_eq!(
+        hello
+            .get("negotiated")
+            .and_then(|n| n.get("binary_frames"))
+            .and_then(|v| v.as_bool()),
+        Some(true),
+        "hello must confirm the negotiation"
+    );
+    let features = hello.get("features").and_then(|v| v.as_arr()).unwrap();
+    assert!(
+        features.iter().any(|f| f.as_str() == Some("binary_frames")),
+        "hello must advertise binary_frames"
+    );
+
+    // Inference replies may complete out of order: collect by id.
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..4 {
+        let j = read_json_line(&mut reader);
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let id = j.usize_of("id").unwrap() as u64;
+        let top1 = j.usize_of("top1").unwrap();
+        assert!(seen.insert(id, top1).is_none(), "id {id} answered twice");
+    }
+    assert_eq!(seen[&1], expected_top1(MODEL, &frame_pixels(501), CLASSES));
+    assert_eq!(seen[&2], expected_top1(MODEL, &frame_pixels(502), CLASSES));
+    assert_eq!(seen[&3], expected_top1(MODEL, &frame_pixels(503), CLASSES));
+    assert_eq!(seen[&4], seen[&2], "frame lane must answer like the JSON lane");
+
+    // The stats line accounts for the lane.
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    let frames = stats
+        .get("conn")
+        .and_then(|c| c.get("frames"))
+        .expect("conn section reports frames");
+    assert!(frames.usize_of("negotiated").unwrap() >= 1);
+    assert!(frames.usize_of("received").unwrap() >= 3);
+    assert!(frames.usize_of("bytes").unwrap() >= 3 * HW * HW * 3);
+    assert_eq!(frames.usize_of("rejected").unwrap(), 0);
+    drop((c, reader, w));
+}
+
+#[test]
+fn binary_frames_interleaved_exactly_once_both_planes() {
+    for plane in [ConnPlane::Event, ConnPlane::Threads] {
+        let (server, coord) = start(
+            &format!("frames_{plane}"),
+            ServerConfig {
+                conn_plane: plane,
+                ..ServerConfig::default()
+            },
+        );
+        assert_frames_interleave_with_json(&server.addr().to_string());
+        stop_all(server, coord);
+    }
+}
+
+#[test]
+fn client_builder_ships_frames_end_to_end() {
+    let (server, coord) = start("client_frames", ServerConfig::default());
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    let hello = c.hello(true).unwrap();
+    assert_eq!(hello.protocol_version, 1);
+    assert!(hello.binary_frames, "server must confirm the opt-in");
+    assert!(hello.features.iter().any(|f| f == "binary_frames"));
+
+    let rgb = frame_rgb(77);
+    let r = c.infer(&InferRequest::new(9).frame(HW, HW, 3, &rgb)).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.top1, expected_top1(MODEL, &frame_pixels(77), CLASSES));
+
+    drop(c);
+    stop_all(server, coord);
+}
+
+/// Rejected-frame recovery contract, per plane: a frame on an
+/// un-negotiated connection is `unsupported_feature`, a bad header on a
+/// negotiated one is `bad_frame` — and when the declared `len` is
+/// trustworthy the payload is skipped and the connection keeps serving.
+fn assert_frame_rejects_recoverable(addr: &str) {
+    // Un-negotiated: reject, skip the payload, keep serving.
+    let (mut reader, mut w) = raw_conn(addr);
+    let px = frame_rgb(1);
+    let mut burst: Vec<u8> = Vec::new();
+    burst.extend_from_slice(frame_header_line(1, px.len(), HW, HW, 3).as_bytes());
+    burst.extend_from_slice(&px);
+    burst.extend_from_slice(b"{\"cmd\":\"ping\"}\n");
+    w.write_all(&burst).unwrap();
+    let j = read_json_line(&mut reader);
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(
+        j.get("kind").and_then(|v| v.as_str()),
+        Some("unsupported_feature")
+    );
+    assert!(j.get("msg").and_then(|v| v.as_str()).unwrap().contains("hello"));
+    let pong = read_json_line(&mut reader);
+    assert_eq!(
+        pong.get("pong").and_then(|v| v.as_bool()),
+        Some(true),
+        "connection must survive an unsupported_feature reject"
+    );
+    drop((reader, w));
+
+    // Negotiated, header dims don't match len (len itself trustworthy):
+    // bad_frame, payload skipped, connection recoverable.
+    let (mut reader, mut w) = raw_conn(addr);
+    let mut burst: Vec<u8> = Vec::new();
+    burst.extend_from_slice(HELLO_FRAMES);
+    burst.extend_from_slice(frame_header_line(2, 300, 9, 9, 3).as_bytes());
+    burst.extend_from_slice(&[0u8; 300]);
+    burst.extend_from_slice(b"{\"cmd\":\"ping\"}\n");
+    w.write_all(&burst).unwrap();
+    let hello = read_json_line(&mut reader);
+    assert_eq!(hello.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let j = read_json_line(&mut reader);
+    assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("bad_frame"));
+    assert!(j.get("msg").and_then(|v| v.as_str()).is_some());
+    let pong = read_json_line(&mut reader);
+    assert_eq!(
+        pong.get("pong").and_then(|v| v.as_bool()),
+        Some(true),
+        "connection must survive a bad_frame reject"
+    );
+    drop((reader, w));
+}
+
+#[test]
+fn frame_rejects_are_structured_and_recoverable_both_planes() {
+    for plane in [ConnPlane::Event, ConnPlane::Threads] {
+        let (server, coord) = start(
+            &format!("frame_rej_{plane}"),
+            ServerConfig {
+                conn_plane: plane,
+                ..ServerConfig::default()
+            },
+        );
+        assert_frame_rejects_recoverable(&server.addr().to_string());
+        assert!(server.conn_snapshot().frames_rejected >= 2);
+        stop_all(server, coord);
+    }
+}
+
+/// A frame whose declared len exceeds `--max-frame-bytes` cannot be
+/// skipped (the bound is exactly what made the len untrustworthy):
+/// structured `bad_frame` naming the limit, then close.
+fn assert_oversize_frame_rejected_and_closed(addr: &str) {
+    let (mut reader, mut w) = raw_conn(addr);
+    w.write_all(HELLO_FRAMES).unwrap();
+    let hello = read_json_line(&mut reader);
+    assert_eq!(hello.get("ok").and_then(|v| v.as_bool()), Some(true));
+    w.write_all(frame_header_line(1, 1 << 20, 1024, 1024, 3).as_bytes())
+        .unwrap();
+    let j = read_json_line(&mut reader);
+    assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("bad_frame"));
+    assert!(
+        j.get("msg").and_then(|v| v.as_str()).unwrap().contains("max-frame-bytes"),
+        "reject must name the limit: {j:?}"
+    );
+    let mut line = String::new();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "must close: {line}");
+    drop((reader, w));
+}
+
+#[test]
+fn oversize_frame_structured_reject_both_planes() {
+    for plane in [ConnPlane::Event, ConnPlane::Threads] {
+        let (server, coord) = start(
+            &format!("frame_big_{plane}"),
+            ServerConfig {
+                conn_plane: plane,
+                max_frame_bytes: 64 * 1024,
+                ..ServerConfig::default()
+            },
+        );
+        assert_oversize_frame_rejected_and_closed(&server.addr().to_string());
+        assert!(server.conn_snapshot().frames_rejected >= 1);
+        stop_all(server, coord);
+    }
+}
+
+#[test]
+fn mid_frame_disconnect_leaves_server_healthy_both_planes() {
+    for plane in [ConnPlane::Event, ConnPlane::Threads] {
+        let (server, coord) = start(
+            &format!("frame_cut_{plane}"),
+            ServerConfig {
+                conn_plane: plane,
+                ..ServerConfig::default()
+            },
+        );
+        let addr = server.addr().to_string();
+
+        // Negotiate, declare a frame, send half the payload, vanish.
+        let (mut reader, mut w) = raw_conn(&addr);
+        w.write_all(HELLO_FRAMES).unwrap();
+        let hello = read_json_line(&mut reader);
+        assert_eq!(hello.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let px = frame_rgb(5);
+        w.write_all(frame_header_line(1, px.len(), HW, HW, 3).as_bytes())
+            .unwrap();
+        w.write_all(&px[..px.len() / 2]).unwrap();
+        drop((reader, w));
+
+        // The abandoned connection is reaped and new clients are served.
+        assert!(
+            wait_until(Duration::from_secs(10), || {
+                server.conn_snapshot().connections == 0
+            }),
+            "half-sent frame wedged the connection: {:?}",
+            server.conn_snapshot()
+        );
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.infer(&InferRequest::new(2).synthetic(6)).unwrap();
+        assert!(r.ok, "server unhealthy after mid-frame disconnect: {:?}", r.error);
+        assert_eq!(server.conn_snapshot().in_flight, 0, "leaked in-flight slot");
+
+        drop(c);
+        stop_all(server, coord);
+    }
+}
+
+/// Unified error schema (ISSUE 9 satellite): every reject the server
+/// can emit carries `ok:false`, a `kind` from the documented closed
+/// set, and a human `msg` — asserted across reject paths on both
+/// planes.
+fn assert_error_schema(addr: &str) {
+    let check = |j: &Json, expect_kind: &str| {
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false), "{j:?}");
+        let kind = j.get("kind").and_then(|v| v.as_str()).expect("reject has kind");
+        assert_eq!(kind, expect_kind, "{j:?}");
+        assert!(
+            zuluko::server::protocol::ERROR_KINDS.contains(&kind),
+            "kind {kind} not in the documented set"
+        );
+        let msg = j.get("msg").and_then(|v| v.as_str()).expect("reject has msg");
+        assert!(!msg.is_empty());
+    };
+
+    let (mut reader, mut w) = raw_conn(addr);
+    // bad_request: malformed JSON.
+    w.write_all(b"{nope\n").unwrap();
+    check(&read_json_line(&mut reader), "bad_request");
+    // unknown_model.
+    w.write_all(b"{\"id\":1,\"image\":{\"synthetic\":1},\"model\":\"ghost\"}\n")
+        .unwrap();
+    check(&read_json_line(&mut reader), "unknown_model");
+    // unsupported_feature: frame before hello (resyncable — skipped).
+    w.write_all(frame_header_line(2, 3, 1, 1, 3).as_bytes()).unwrap();
+    w.write_all(&[0u8; 3]).unwrap();
+    check(&read_json_line(&mut reader), "unsupported_feature");
+    // bad_frame: negotiated but inconsistent header.
+    w.write_all(HELLO_FRAMES).unwrap();
+    let hello = read_json_line(&mut reader);
+    assert_eq!(hello.get("ok").and_then(|v| v.as_bool()), Some(true));
+    w.write_all(frame_header_line(3, 3, 2, 2, 3).as_bytes()).unwrap();
+    w.write_all(&[0u8; 3]).unwrap();
+    check(&read_json_line(&mut reader), "bad_frame");
+    // The connection survived all four rejects.
+    w.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    let pong = read_json_line(&mut reader);
+    assert_eq!(pong.get("pong").and_then(|v| v.as_bool()), Some(true));
+    drop((reader, w));
+}
+
+#[test]
+fn error_schema_unified_both_planes() {
+    for plane in [ConnPlane::Event, ConnPlane::Threads] {
+        let (server, coord) = start(
+            &format!("errschema_{plane}"),
+            ServerConfig {
+                conn_plane: plane,
+                ..ServerConfig::default()
+            },
+        );
+        assert_error_schema(&server.addr().to_string());
         stop_all(server, coord);
     }
 }

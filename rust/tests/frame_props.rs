@@ -1,0 +1,197 @@
+//! Frame-lane property tests (ISSUE 9): the binary pixel frame
+//! round-trip must be an identity, under arbitrary chunking of the wire
+//! bytes, for random shapes — and the header-validation split
+//! (`FrameHeader::check` vs `FrameHeader::resyncable`) must classify
+//! every header into exactly one of {accept, recoverable reject,
+//! connection-fatal reject}.
+//!
+//! Encode with the public client builder ([`InferRequest::frame`]),
+//! deliver through the same [`Framing`] state machine the planes run,
+//! parse the header with BOTH wire parsers — so this test pins the
+//! client encoding, the framing layer, and parser parity in one loop.
+//!
+//! Case count is `FRAME_PROPS_CASES` (default 500); CI runs the same
+//! test with a much larger count.
+
+use zuluko::config::WireParser;
+use zuluko::server::client::InferRequest;
+use zuluko::server::conn::{Framing, WireItem};
+use zuluko::server::protocol::{self, ClientMsg, FrameHeader, ImageSpec};
+use zuluko::testkit::rng::Rng;
+use zuluko::util::wire::WireTape;
+
+fn cases(default: usize) -> usize {
+    std::env::var("FRAME_PROPS_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+const MAX_LINE: usize = 64 * 1024;
+const MAX_FRAME: usize = 8 * 1024 * 1024;
+
+#[test]
+fn frame_roundtrip_is_identity_under_arbitrary_chunking() {
+    let n = cases(500);
+    let mut r = Rng::new(0xF7A3E);
+    let mut tape = WireTape::new();
+    for i in 0..n {
+        let h = 1 + r.below(24);
+        let w = 1 + r.below(24);
+        let pixels: Vec<u8> = (0..h * w * 3).map(|_| (r.next_u64() & 0xff) as u8).collect();
+
+        // Client-side encoding.
+        let req = InferRequest::new(i as u64).frame(h, w, 3, &pixels);
+        let (line, payload) = req.request_line().unwrap();
+        let payload = payload.expect("frame request carries a payload");
+        assert_eq!(payload, &pixels[..], "builder must ship the pixels verbatim");
+
+        // The exact bytes a socket would carry.
+        let mut wire_bytes = line.into_bytes();
+        wire_bytes.push(b'\n');
+        wire_bytes.extend_from_slice(payload);
+
+        // Server-side reassembly: feed in random-size chunks through
+        // the planes' framing machine; parse the header with both
+        // parsers; the reassembled payload must be byte-identical.
+        let mut framing = Framing::new();
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut fed = 0usize;
+        let mut start = 0usize;
+        let mut header: Option<FrameHeader> = None;
+        let reassembled: Vec<u8> = loop {
+            match framing.next_item(&rbuf, start, MAX_LINE).unwrap() {
+                Some(WireItem::Line(span)) => {
+                    let line_bytes = &rbuf[span.clone()];
+                    let (msg, key) =
+                        protocol::parse_line(WireParser::Tape, line_bytes, &mut tape)
+                            .expect("tape must accept the builder's encoding");
+                    let (msg2, key2) =
+                        protocol::parse_line(WireParser::Tree, line_bytes, &mut tape)
+                            .expect("tree must accept the builder's encoding");
+                    assert_eq!(msg, msg2, "parsers diverged on a frame header");
+                    assert_eq!(key, key2);
+                    assert_eq!(key, None, "frames are never wire-keyed");
+                    match msg {
+                        ClientMsg::Infer {
+                            id,
+                            image: ImageSpec::Frame(fh),
+                            ..
+                        } => {
+                            assert_eq!(id, i as u64);
+                            fh.check(MAX_FRAME).expect("valid header must check()");
+                            assert_eq!(
+                                (fh.len, fh.h, fh.w, fh.c, fh.dtype.as_str()),
+                                (pixels.len(), h, w, 3, "u8")
+                            );
+                            framing.expect_payload(fh.len);
+                            header = Some(fh);
+                        }
+                        other => panic!("expected a frame infer, got {other:?}"),
+                    }
+                    start = span.end + 1;
+                }
+                Some(WireItem::Frame(range)) => break rbuf[range].to_vec(),
+                None => {
+                    // Starvation guard: with every byte fed, the machine
+                    // must have produced the frame already.
+                    assert!(
+                        fed < wire_bytes.len(),
+                        "framing starved with all {} bytes fed (case {i})",
+                        wire_bytes.len()
+                    );
+                    let step = (1 + r.below(97)).min(wire_bytes.len() - fed);
+                    rbuf.extend_from_slice(&wire_bytes[fed..fed + step]);
+                    fed += step;
+                }
+            }
+        };
+        assert!(header.is_some(), "payload surfaced before its header");
+        assert_eq!(reassembled, pixels, "round-trip lost or reordered bytes");
+    }
+}
+
+/// Every header lands in exactly one bucket, and the buckets agree
+/// with the wire contract: accept ⇒ resyncable; reject with a
+/// trustworthy len ⇒ recoverable (skip `len` bytes, keep serving);
+/// len outside the budget ⇒ connection-fatal.
+#[test]
+fn header_check_and_resync_classify_every_header() {
+    let n = cases(500) * 4;
+    let mut r = Rng::new(0xBADF);
+    let max = 4096;
+    let lens = [0usize, 1, 2, 3, 12, 300, 4095, 4096, 4097, usize::MAX];
+    let dims = [0usize, 1, 2, 4, 9, 1000, usize::MAX / 2];
+    let dtypes = ["u8", "f32", "U8", ""];
+    for _ in 0..n {
+        let hdr = FrameHeader {
+            len: lens[r.below(lens.len())],
+            h: dims[r.below(dims.len())],
+            w: dims[r.below(dims.len())],
+            c: [3, 0, 1, 4][r.below(4)],
+            dtype: dtypes[r.below(dtypes.len())].to_string(),
+        };
+        match hdr.check(max) {
+            Ok(()) => {
+                assert!(hdr.resyncable(max), "accepted header must be resyncable");
+                assert_eq!(hdr.h * hdr.w * hdr.c, hdr.len);
+                assert_eq!(hdr.dtype, "u8");
+            }
+            Err(msg) => {
+                assert!(!msg.is_empty(), "reject must explain itself");
+                let len_ok = hdr.len > 0 && hdr.len <= max;
+                assert_eq!(
+                    hdr.resyncable(max),
+                    len_ok,
+                    "resync must depend on len alone: {hdr:?}"
+                );
+                if !len_ok {
+                    assert!(
+                        msg.contains("max-frame-bytes"),
+                        "fatal reject must name the bound: {msg}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A truncated payload never surfaces: for any prefix of the wire
+/// bytes that ends mid-payload, the framing machine reports "need more"
+/// rather than a short frame.
+#[test]
+fn truncated_payload_never_surfaces() {
+    let n = cases(200);
+    let mut r = Rng::new(0x7C0FFEE);
+    for i in 0..n {
+        let h = 1 + r.below(8);
+        let w = 1 + r.below(8);
+        let pixels: Vec<u8> = (0..h * w * 3).map(|_| (r.next_u64() & 0xff) as u8).collect();
+        let (line, payload) = InferRequest::new(i as u64)
+            .frame(h, w, 3, &pixels)
+            .request_line()
+            .unwrap();
+        let mut wire_bytes = line.into_bytes();
+        wire_bytes.push(b'\n');
+        let header_end = wire_bytes.len();
+        wire_bytes.extend_from_slice(payload.unwrap());
+
+        // Cut anywhere inside the payload (after the header line).
+        let cut = header_end + r.below(pixels.len());
+        let rbuf = &wire_bytes[..cut];
+        let mut framing = Framing::new();
+        let span = match framing.next_item(rbuf, 0, MAX_LINE).unwrap() {
+            Some(WireItem::Line(span)) => span,
+            other => panic!("expected the header line, got {other:?}"),
+        };
+        framing.expect_payload(pixels.len());
+        assert!(
+            framing
+                .next_item(rbuf, span.end + 1, MAX_LINE)
+                .unwrap()
+                .is_none(),
+            "short payload must not surface (cut {cut}/{})",
+            wire_bytes.len()
+        );
+    }
+}

@@ -21,7 +21,7 @@ use zuluko::coordinator::Coordinator;
 use zuluko::engine::sim::SIM_EXEC_ENV;
 use zuluko::engine::EngineKind;
 use zuluko::obs::STAGE_NAMES;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 use zuluko::util::json::Json;
 
@@ -101,7 +101,7 @@ fn metrics_merges_every_subsystem_and_traces_round_trip() {
     // cache hits), so full 8-stage timelines exist.
     const N: u64 = 12;
     for i in 0..N {
-        let r = c.infer_synthetic(i, 500 + i).unwrap();
+        let r = c.infer(&InferRequest::new(i).synthetic(500 + i)).unwrap();
         assert!(r.ok, "{:?}", r.error);
     }
 
@@ -180,7 +180,7 @@ fn deadline_missed_request_lands_in_slow_log_with_full_timeline() {
     // Inflate the sim engine *after* start, *before* the first request:
     // the worker's replica builds lazily on first serve and reads this.
     std::env::set_var(SIM_EXEC_ENV, "500000"); // 500ms/image
-    let r = c.infer_synthetic_slo(1, 42, Some(200.0), None).unwrap();
+    let r = c.infer(&InferRequest::new(1).synthetic(42).deadline_ms(200.0)).unwrap();
     std::env::remove_var(SIM_EXEC_ENV);
     assert!(r.ok, "admitted request must still answer: {:?}", r.error);
     assert!(

@@ -27,7 +27,7 @@ use zuluko::coordinator::{Coordinator, SubmitError};
 use zuluko::engine::sim::expected_top1;
 use zuluko::engine::EngineKind;
 use zuluko::policy::Slo;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 use zuluko::tensor::image::Image;
 use zuluko::tensor::Tensor;
@@ -109,12 +109,12 @@ fn unknown_model_rejected_not_defaulted() {
     // Wire surface: structured `unknown_model` kind, connection stays up.
     let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
     let mut c = Client::connect(&server.addr().to_string()).unwrap();
-    let r = c.infer_synthetic_model(1, 42, Some("nope")).unwrap();
+    let r = c.infer(&InferRequest::new(1).synthetic(42).model("nope")).unwrap();
     assert!(!r.ok);
     assert_eq!(r.kind.as_deref(), Some("unknown_model"));
 
     // Absent model field = default model, by name.
-    let r = c.infer_synthetic_model(2, 42, None).unwrap();
+    let r = c.infer(&InferRequest::new(2).synthetic(42)).unwrap();
     assert!(r.ok, "default-model request failed: {:?}", r.error);
     assert_eq!(r.model, "ua");
     assert_eq!(r.top1, expected_top1("ua", &frame_pixels(42), CLASSES));
@@ -144,7 +144,7 @@ fn two_models_serve_concurrently_without_crossing() {
                 for i in 0..SEEDS {
                     let seed = 5000 + i; // same seeds for both models
                     let id = t as u64 * 10_000 + i;
-                    let r = c.infer_synthetic_model(id, seed, Some(model.as_str())).unwrap();
+                    let r = c.infer(&InferRequest::new(id).synthetic(seed).model(&model)).unwrap();
                     assert!(r.ok, "{model} seed {seed}: {:?}", r.error);
                     assert_eq!(r.id, id);
                     assert_eq!(r.model, model, "reply crossed models");
@@ -164,8 +164,8 @@ fn two_models_serve_concurrently_without_crossing() {
 
     // Same bytes, two models -> two live cache entries, two answers.
     let mut c = Client::connect(&addr).unwrap();
-    let ra = c.infer_synthetic_model(900, 5000, Some("xa")).unwrap();
-    let rb = c.infer_synthetic_model(901, 5000, Some("xb")).unwrap();
+    let ra = c.infer(&InferRequest::new(900).synthetic(5000).model("xa")).unwrap();
+    let rb = c.infer(&InferRequest::new(901).synthetic(5000).model("xb")).unwrap();
     assert!(ra.cached, "repeat frame should hit xa's cache");
     assert!(rb.cached, "repeat frame should hit xb's cache");
     assert_eq!(ra.top1, expected_top1("xa", &frame_pixels(5000), CLASSES));
@@ -255,7 +255,7 @@ fn hot_reload_under_load_loses_no_inflight_requests() {
                     // Distinct seeds: cache is off, every request must
                     // reach an engine (real in-flight work).
                     let seed = (t << 32) | i;
-                    let r = c.infer_synthetic_model(i, seed, Some(model.as_str())).unwrap();
+                    let r = c.infer(&InferRequest::new(i).synthetic(seed).model(&model)).unwrap();
                     assert!(
                         r.ok,
                         "{model} lost a request during reload: {:?} ({:?})",

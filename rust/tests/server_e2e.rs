@@ -11,7 +11,7 @@ use std::time::Duration;
 use zuluko::config::Config;
 use zuluko::coordinator::{Coordinator, SubmitError};
 use zuluko::engine::EngineKind;
-use zuluko::server::client::Client;
+use zuluko::server::client::{Client, InferRequest};
 use zuluko::server::Server;
 use zuluko::tensor::Tensor;
 
@@ -44,7 +44,7 @@ fn serve_infer_stats_ping_roundtrip() {
     let mut c = Client::connect(&addr).unwrap();
     assert!(c.ping().unwrap());
 
-    let r = c.infer_synthetic(7, 12345).unwrap();
+    let r = c.infer(&InferRequest::new(7).synthetic(12345)).unwrap();
     assert!(r.ok, "error: {:?}", r.error);
     assert_eq!(r.id, 7);
     assert!(r.total_ms > 0.0);
@@ -52,7 +52,7 @@ fn serve_infer_stats_ping_roundtrip() {
     assert!(r.top1 < 1000);
 
     // Same seed -> same class (determinism through the whole wire path).
-    let r2 = c.infer_synthetic(8, 12345).unwrap();
+    let r2 = c.infer(&InferRequest::new(8).synthetic(12345)).unwrap();
     assert_eq!(r2.top1, r.top1);
 
     let stats = c.stats().unwrap();
@@ -94,7 +94,7 @@ fn concurrent_clients_get_batched() {
             let addr = addr.clone();
             std::thread::spawn(move || {
                 let mut c = Client::connect(&addr).unwrap();
-                c.infer_synthetic(i, 1000 + i).unwrap()
+                c.infer(&InferRequest::new(i).synthetic(1000 + i)).unwrap()
             })
         })
         .collect();

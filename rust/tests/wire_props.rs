@@ -191,8 +191,10 @@ fn gen_request(r: &mut Rng) -> String {
         if r.chance(0.8) {
             out.push('"');
             out.push_str(
-                ["stats", "metrics", "trace", "policy", "models", "reload", "ping", "bogus"]
-                    [r.below(8)],
+                [
+                    "stats", "metrics", "trace", "policy", "models", "reload", "ping",
+                    "hello", "bogus",
+                ][r.below(9)],
             );
             out.push('"');
         } else {
@@ -201,6 +203,16 @@ fn gen_request(r: &mut Rng) -> String {
         if r.chance(0.5) {
             push_field(&mut out, &mut first, "n");
             gen_value(r, 1, &mut out);
+        }
+        if r.chance(0.5) {
+            push_field(&mut out, &mut first, "features");
+            if r.chance(0.7) {
+                out.push_str("{\"binary_frames\":");
+                out.push_str(["true", "false", "1", "\"yes\"", "null"][r.below(5)]);
+                out.push('}');
+            } else {
+                gen_value(r, 1, &mut out);
+            }
         }
     }
     if r.chance(0.9) {
@@ -213,14 +225,38 @@ fn gen_request(r: &mut Rng) -> String {
     }
     if r.chance(0.9) {
         push_field(&mut out, &mut first, "image");
-        if r.chance(0.7) {
+        if r.chance(0.6) {
             out.push_str("{\"synthetic\":");
             out.push_str(NUMS[r.below(NUMS.len())]);
             out.push('}');
-        } else if r.chance(0.5) {
+        } else if r.chance(0.4) {
             out.push_str("{\"ppm\":\"");
             out.push_str(STRS[r.below(STRS.len())]);
             out.push_str("\"}");
+        } else if r.chance(0.6) {
+            // Frame headers: mostly-valid dims with number-grammar edge
+            // cases in every slot, plus wrong-typed/missing members.
+            out.push_str("{\"frame\":{");
+            let mut ffirst = true;
+            for key in ["len", "h", "w", "c"] {
+                if r.chance(0.9) {
+                    push_field(&mut out, &mut ffirst, key);
+                    if r.chance(0.8) {
+                        out.push_str(NUMS[r.below(NUMS.len())]);
+                    } else {
+                        gen_value(r, 2, &mut out);
+                    }
+                }
+            }
+            if r.chance(0.6) {
+                push_field(&mut out, &mut ffirst, "dtype");
+                if r.chance(0.7) {
+                    out.push_str(["\"u8\"", "\"f32\"", "\"U8\"", "7"][r.below(4)]);
+                } else {
+                    gen_value(r, 2, &mut out);
+                }
+            }
+            out.push_str("}}");
         } else {
             gen_value(r, 1, &mut out);
         }
@@ -334,6 +370,23 @@ fn curated() -> Vec<Vec<u8>> {
         r#"{"cmd":"ping"}"#,
         r#"{"cmd":"reload","model":"resnet"}"#,
         r#"{"cmd":"reload","model":7}"#,
+        r#"{"cmd":"hello"}"#,
+        r#"{"cmd":"hello","features":{"binary_frames":true}}"#,
+        r#"{"cmd":"hello","features":{"binary_frames":false}}"#,
+        r#"{"cmd":"hello","features":{"binary_frames":1}}"#,
+        r#"{"cmd":"hello","features":{}}"#,
+        r#"{"cmd":"hello","features":null}"#,
+        r#"{"cmd":"hello","features":["binary_frames"]}"#,
+        r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":"u8"}}}"#,
+        r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3}}}"#,
+        r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2}}}"#,
+        r#"{"id":1,"image":{"frame":{"len":-1,"h":2,"w":2,"c":3}}}"#,
+        r#"{"id":1,"image":{"frame":{"len":1.5,"h":2,"w":2,"c":3}}}"#,
+        r#"{"id":1,"image":{"frame":{"len":12,"h":2,"w":2,"c":3,"dtype":7}}}"#,
+        r#"{"id":1,"image":{"frame":7}}"#,
+        r#"{"id":1,"image":{"frame":{}}}"#,
+        r#"{"id":1,"image":{"synthetic":1,"frame":{"len":3,"h":1,"w":1,"c":3}}}"#,
+        r#"{"id":1,"image":{"frame":{"len":18446744073709551615,"h":2,"w":2,"c":3}}}"#,
     ]
     .iter()
     .map(|s| s.as_bytes().to_vec())

@@ -20,25 +20,21 @@ test-rust:
 	cd rust && cargo test -q
 
 # Perf trajectory: run the simulation benches (no artifacts needed).
-# $(BENCH_OUT) is this PR's headline trajectory (E16 binary-frame
-# ingest vs JSON-embedded pixels riding on the hot-path alloc bench,
-# self-gating on byte-identical replies, the >=2x wire-byte reduction,
-# and the >=50% ingest alloc reduction); $(GATE_OUT)
-# is the hot-path alloc trajectory the cross-PR regression gate
-# compares against tools/bench_baseline.json — same bench, so the
-# trajectory is copied rather than re-measured.  $(TRACE_OUT) keeps the
-# E14 tracing-overhead trajectory.  Parameterized so each PR's
-# trajectory file is explicit — a hardcoded name would silently clobber
-# earlier trajectories.
-BENCH_OUT ?= BENCH_9.json
+# $(BENCH_OUT) is this PR's headline trajectory (E17 AOT replica
+# snapshots: snapshot-path construction >= 5x faster than a cold build,
+# cold-model first-request p99 <= 2x warm p99 with snapshots + prefetch
+# on, and a snapshots-off ablation that leaves the steady-state serving
+# path unchanged — all self-gating in benches/replica_snapshot.rs);
+# $(GATE_OUT) is the hot-path alloc trajectory the cross-PR regression
+# gate compares against tools/bench_baseline.json.  Parameterized so
+# each PR's trajectory file is explicit — a hardcoded name would
+# silently clobber earlier trajectories.
+BENCH_OUT ?= BENCH_10.json
 GATE_OUT ?= bench_hot_path.json
 TRACE_OUT ?= bench_trace_overhead.json
 bench-json:
-	cd rust && cargo bench --bench hot_path_alloc -- --json ../$(BENCH_OUT)
-	@if [ "$(BENCH_OUT)" != "$(GATE_OUT)" ]; then \
-		cp $(BENCH_OUT) $(GATE_OUT); \
-		echo "copied $(BENCH_OUT) -> $(GATE_OUT) for the regression gate"; \
-	fi
+	cd rust && cargo bench --bench replica_snapshot -- --json ../$(BENCH_OUT)
+	cd rust && cargo bench --bench hot_path_alloc -- --json ../$(GATE_OUT)
 	cd rust && cargo bench --bench trace_overhead -- --json ../$(TRACE_OUT)
 	cd rust && cargo bench --bench policy_slo -- --quick
 
@@ -46,6 +42,7 @@ bench-json:
 bench-smoke:
 	cd rust && cargo bench --bench trace_overhead -- --quick
 	cd rust && cargo bench --bench hot_path_alloc -- --quick
+	cd rust && cargo bench --bench replica_snapshot -- --quick
 	cd rust && cargo bench --bench policy_slo -- --quick
 
 # Seed/refresh the committed perf baseline (run on a quiet machine).

@@ -1,0 +1,78 @@
+//! E17 CI smoke: replica-snapshot round trip against a persistent
+//! directory (the CI `.zsnap` cache, see .github/workflows/ci.yml).
+//!
+//! Load-or-capture: if the directory already holds a valid snapshot
+//! (written by an earlier CI job and restored from the cache), validate
+//! and serve from it — proving cross-job durability of the format.  If
+//! not (cold cache, or the format/content hash changed), capture one
+//! from the deterministic synthetic artifacts and seed the cache.
+//! Either way, build a sim replica from the snapshot and check one
+//! inference against the sim oracle, so a snapshot that validated but
+//! decoded wrong weights fails loudly.
+//!
+//! Run: cargo run --release --example snapshot_roundtrip [-- DIR]
+
+use zuluko::engine::sim::expected_top1;
+use zuluko::engine::{self, EngineKind};
+use zuluko::runtime::{Manifest, ReplicaSnapshot};
+use zuluko::tensor::image::Image;
+use zuluko::tensor::Tensor;
+
+const HW: usize = 64;
+const CLASSES: usize = 1000;
+const MODEL: &str = "squeezenet";
+
+fn main() {
+    let root = std::env::args().nth(1).unwrap_or_else(|| "ci-snapshots".into());
+    let dir = std::path::PathBuf::from(root).join("squeezenet_sim");
+
+    // Deterministic artifacts: identical bytes on every run, so the
+    // content hash embedded in a cached snapshot stays valid across CI
+    // jobs until the synthetic generator itself changes.
+    if !dir.join("manifest.json").exists() {
+        zuluko::testkit::manifest::write_synthetic(&dir, MODEL, CLASSES, HW, &[1, 2, 4])
+            .expect("write synthetic artifacts");
+        println!("seeded synthetic artifacts in {}", dir.display());
+    }
+
+    let snap = match ReplicaSnapshot::load(&dir) {
+        Ok(snap) => {
+            println!(
+                "snapshot cache HIT: validated {} ({} resident bytes) against live artifacts",
+                ReplicaSnapshot::path_for(&dir).display(),
+                snap.resident_bytes()
+            );
+            snap
+        }
+        Err(e) => {
+            println!("snapshot cache MISS ({e:#}); capturing");
+            let m = Manifest::load(&dir).expect("manifest loads");
+            let snap = ReplicaSnapshot::capture(&m, &[EngineKind::Sim]).expect("capture");
+            snap.write(&dir).expect("atomic snapshot write");
+            // Immediately re-load through the full validate path, so a
+            // capture that writes an unloadable file fails this run, not
+            // the next cached one.
+            ReplicaSnapshot::load(&dir).expect("fresh snapshot re-loads")
+        }
+    };
+
+    let mut eng =
+        engine::build_from_snapshot(EngineKind::Sim, &snap).expect("replica from snapshot");
+    if !snap.warm_covers(EngineKind::Sim) {
+        eng.warmup().expect("warmup");
+    }
+
+    let img = Image::synthetic(HW, HW, 42);
+    let mut buf = vec![0.0f32; HW * HW * 3];
+    img.to_input_into(&mut buf);
+    let want = expected_top1(MODEL, &buf, CLASSES);
+    let out = eng
+        .infer(&Tensor::new(&[1, HW, HW, 3], buf).unwrap())
+        .expect("infer");
+    let got = out.view().row(0).argmax();
+    assert_eq!(
+        got, want,
+        "snapshot-built replica disagrees with the sim oracle"
+    );
+    println!("snapshot round-trip OK: top1 {got} matches the oracle");
+}

@@ -69,7 +69,8 @@ use zuluko::policy::{bytes_key, image_key, CachedResult, ResponseCache};
 use zuluko::server::client::InferRequest;
 use zuluko::server::conn::{Framing, WireItem};
 use zuluko::server::protocol::{self, ClientMsg, ImageSpec};
-use zuluko::tensor::{Image, Lease, Tensor, TensorPool, TensorView};
+use zuluko::tensor::image::Image;
+use zuluko::tensor::{Lease, Tensor, TensorPool, TensorView};
 use zuluko::testkit::alloc::CountingAlloc;
 use zuluko::testkit::rng::Rng;
 use zuluko::util::json::Json;

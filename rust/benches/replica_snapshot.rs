@@ -1,0 +1,306 @@
+//! E17: AOT replica snapshots + predictive warm-up (DESIGN.md §11) —
+//! cold start as a file read, not a rebuild.
+//!
+//! Three self-gating measurements over the sim engine (no artifacts or
+//! XLA needed, so the gates run everywhere including CI):
+//!
+//! 1. **Replica construction**: snapshot path (`ReplicaSnapshot::load`
+//!    -> `engine::build_from_snapshot`, warm-up covered by the captured
+//!    warm plan) vs the cold path (`Manifest::load` -> `engine::build`
+//!    -> `warmup()`).  Gate: snapshot construction >= 5x faster.  The
+//!    sim per-image cost is pinned via `ZULUKO_SIM_EXEC_US` so the
+//!    warm-up work the snapshot elides is deterministic, standing in
+//!    for the graph build + first-inference warm-up a real backend
+//!    pays (Table 2 of the paper: seconds, not microseconds).
+//!
+//! 2. **Cold-start economics on the serving stack**: p99 of the *first*
+//!    request into a freshly booted coordinator (snapshot present,
+//!    snapshots + prefetch on) vs steady-state warm p99.  Gate: cold
+//!    first-request p99 <= 2x warm p99 — with snapshots, a cold boot is
+//!    no longer a rebuild, just a small constant on top of one inference.
+//!    The snapshot-less cold boot is measured and reported for contrast.
+//!
+//! 3. **Ablation**: steady-state serving with `--snapshots off` vs on.
+//!    Gate: warm p99s within 1.5x either way — snapshots touch replica
+//!    construction only, never the per-request path.
+//!
+//! Run: cargo bench --bench replica_snapshot [-- --quick] [--json PATH]
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use zuluko::bench::BenchArgs;
+use zuluko::config::{Config, SnapshotMode};
+use zuluko::coordinator::Coordinator;
+use zuluko::engine::{self, sim::SIM_EXEC_ENV, EngineKind};
+use zuluko::metrics::Histogram;
+use zuluko::policy::Slo;
+use zuluko::runtime::{Manifest, ReplicaSnapshot};
+use zuluko::tensor::image::Image;
+use zuluko::tensor::Tensor;
+use zuluko::util::json::Json;
+
+const HW: usize = 64;
+const CLASSES: usize = 100;
+const MODEL: &str = "m";
+/// Pinned sim per-image busy-wait (µs): the deterministic stand-in for
+/// the warm-up inference a cold build pays and a snapshot build skips.
+const EXEC_US: u64 = 2000;
+
+fn model_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zuluko_bench_e17_{}", std::process::id()));
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, CLASSES, HW, &[1, 2, 4])
+        .expect("write synthetic artifacts");
+    dir
+}
+
+fn sim_cfg(dir: &Path, mode: SnapshotMode) -> Config {
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: 1,
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_capacity: 64,
+        ..Config::default()
+    };
+    cfg.policy.cache_capacity = 0; // every request runs an engine
+    cfg.snapshots = mode;
+    cfg.prefetch_threshold = 0.5;
+    cfg.registry.upsert(MODEL, dir.to_path_buf());
+    cfg.registry.default_model = Some(MODEL.to_string());
+    cfg.validate().expect("bench config validates");
+    cfg
+}
+
+fn frame_tensor(seed: u64) -> Tensor {
+    let img = Image::synthetic(HW, HW, seed);
+    let mut buf = vec![0.0f32; HW * HW * 3];
+    img.to_input_into(&mut buf);
+    Tensor::new(&[HW, HW, 3], buf).unwrap()
+}
+
+fn one_request(coord: &Coordinator, seed: u64) -> f64 {
+    let t0 = Instant::now();
+    let r = coord
+        .submit_model(Some(MODEL), frame_tensor(seed), Slo::default())
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(r.is_ok(), "bench request failed: {:?}", r.error);
+    zuluko::util::ms(t0.elapsed())
+}
+
+fn p99(samples: &[f64]) -> f64 {
+    let mut h = Histogram::default();
+    for &s in samples {
+        h.record_ms(s);
+    }
+    let (_, _, _, p99, _) = h.summary();
+    p99
+}
+
+fn mean(samples: &[f64]) -> f64 {
+    samples.iter().sum::<f64>() / samples.len().max(1) as f64
+}
+
+struct BuildRow {
+    name: &'static str,
+    mean_ms: f64,
+    p99_ms: f64,
+    builds: usize,
+}
+
+impl BuildRow {
+    fn json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.into())
+            .set("mean_ms", self.mean_ms.into())
+            .set("p99_ms", self.p99_ms.into())
+            .set("builds", self.builds.into());
+        o
+    }
+}
+
+/// The cold replica build exactly as the worker pays it on a
+/// snapshot-miss: artifact read + parse, engine construction, warm-up.
+fn cold_build(dir: &Path) -> f64 {
+    let t0 = Instant::now();
+    let m = Manifest::load(dir).expect("manifest loads");
+    let mut eng = engine::build(EngineKind::Sim, &m).expect("cold build");
+    eng.warmup().expect("warmup");
+    zuluko::util::ms(t0.elapsed())
+}
+
+/// The snapshot build exactly as the worker pays it on a hit: load +
+/// validate the file, build from pre-decoded state, and skip warm-up
+/// when the captured warm plan covers this engine kind.
+fn snapshot_build(dir: &Path) -> f64 {
+    let t0 = Instant::now();
+    let snap = ReplicaSnapshot::load(dir).expect("snapshot loads");
+    let mut eng = engine::build_from_snapshot(EngineKind::Sim, &snap).expect("snapshot build");
+    if !snap.warm_covers(EngineKind::Sim) {
+        eng.warmup().expect("warmup");
+    }
+    zuluko::util::ms(t0.elapsed())
+}
+
+fn run_builds(
+    name: &'static str,
+    warmup: usize,
+    iters: usize,
+    f: impl Fn() -> f64,
+) -> BuildRow {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters).map(|_| f()).collect();
+    BuildRow {
+        name,
+        mean_ms: mean(&samples),
+        p99_ms: p99(&samples),
+        builds: iters,
+    }
+}
+
+/// Time the first request into `boots` freshly started coordinators.
+fn cold_first_requests(dir: &Path, mode: SnapshotMode, boots: usize) -> Vec<f64> {
+    (0..boots)
+        .map(|i| {
+            let coord = Coordinator::start(&sim_cfg(dir, mode)).expect("coordinator starts");
+            let ms = one_request(&coord, 1000 + i as u64);
+            coord.shutdown();
+            ms
+        })
+        .collect()
+}
+
+/// Steady-state request latencies on one warm coordinator.
+fn warm_requests(dir: &Path, mode: SnapshotMode, n: usize) -> Vec<f64> {
+    let coord = Coordinator::start(&sim_cfg(dir, mode)).expect("coordinator starts");
+    for i in 0..5 {
+        one_request(&coord, i); // load the generation, settle caches
+    }
+    let samples = (0..n).map(|i| one_request(&coord, 2000 + i as u64)).collect();
+    coord.shutdown();
+    samples
+}
+
+fn json_path() -> Option<String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    argv.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+}
+
+fn main() {
+    // Pin the sim per-image cost before any engine exists so every mode
+    // (cold, snapshot, serving) sees the same deterministic exec time.
+    std::env::set_var(SIM_EXEC_ENV, EXEC_US.to_string());
+
+    let args = BenchArgs::from_env(60);
+    let build_iters = args.iters.max(3);
+    let boots = if args.quick { 4 } else { 12 };
+    let serve_n = if args.quick { 30 } else { 200 };
+
+    let dir = model_dir();
+    // Seed the snapshot the way the serving stack does: capture from the
+    // live manifest with the sim warm plan, atomically written.
+    let m = Manifest::load(&dir).expect("manifest loads");
+    let snap = ReplicaSnapshot::capture(&m, &[EngineKind::Sim]).expect("capture");
+    snap.write(&dir).expect("snapshot writes");
+    let snap_bytes = std::fs::metadata(ReplicaSnapshot::path_for(&dir))
+        .expect("snapshot file")
+        .len();
+
+    println!(
+        "== E17: replica construction, snapshot vs cold (sim exec {EXEC_US} us/image, \
+         {build_iters} builds/mode, snapshot {snap_bytes} B on disk) =="
+    );
+    let cold = run_builds("cold_build", args.warmup, build_iters, || cold_build(&dir));
+    let snapb = run_builds("snapshot_build", args.warmup, build_iters, || {
+        snapshot_build(&dir)
+    });
+    println!("| mode | mean ms | p99 ms |");
+    println!("|---|---|---|");
+    println!("| {} | {:.3} | {:.3} |", cold.name, cold.mean_ms, cold.p99_ms);
+    println!("| {} | {:.3} | {:.3} |", snapb.name, snapb.mean_ms, snapb.p99_ms);
+    let build_speedup = cold.mean_ms / snapb.mean_ms.max(1e-9);
+    println!("snapshot build speedup: {build_speedup:.1}x");
+
+    println!("\n== E17: cold-start economics on the serving stack ({boots} boots) ==");
+    let on_first = cold_first_requests(&dir, SnapshotMode::On, boots);
+    // Contrast: the same boots with snapshots off pay the full rebuild
+    // (delete nothing — off never reads the file).
+    let off_first = cold_first_requests(&dir, SnapshotMode::Off, boots);
+    let on_warm = warm_requests(&dir, SnapshotMode::On, serve_n);
+    let off_warm = warm_requests(&dir, SnapshotMode::Off, serve_n);
+    let (on_first_p99, off_first_p99) = (p99(&on_first), p99(&off_first));
+    let (on_warm_p99, off_warm_p99) = (p99(&on_warm), p99(&off_warm));
+    println!("| path | p99 ms |");
+    println!("|---|---|");
+    println!("| first request, snapshots on  | {on_first_p99:.3} |");
+    println!("| first request, snapshots off | {off_first_p99:.3} |");
+    println!("| warm request, snapshots on   | {on_warm_p99:.3} |");
+    println!("| warm request, snapshots off  | {off_warm_p99:.3} |");
+    let cold_ratio = on_first_p99 / on_warm_p99.max(1e-9);
+    let ablation_ratio = off_warm_p99 / on_warm_p99.max(1e-9);
+    println!(
+        "cold-first/warm p99 with snapshots: {cold_ratio:.2}x; warm-path \
+         ablation off/on: {ablation_ratio:.2}x"
+    );
+
+    if let Some(path) = json_path() {
+        let mut cfg = Json::obj();
+        cfg.set("sim_exec_us", EXEC_US.into())
+            .set("build_iters", build_iters.into())
+            .set("boots", boots.into())
+            .set("serve_requests", serve_n.into())
+            .set("snapshot_bytes", (snap_bytes as usize).into())
+            .set("input_hw", HW.into())
+            .set("quick", args.quick.into());
+        let mut serving = Json::obj();
+        serving
+            .set("cold_first_p99_ms_snapshots_on", on_first_p99.into())
+            .set("cold_first_p99_ms_snapshots_off", off_first_p99.into())
+            .set("warm_p99_ms_snapshots_on", on_warm_p99.into())
+            .set("warm_p99_ms_snapshots_off", off_warm_p99.into());
+        let mut gates = Json::obj();
+        gates
+            .set("build_speedup", build_speedup.into())
+            .set("build_speedup_min", 5.0.into())
+            .set("cold_first_over_warm_p99", cold_ratio.into())
+            .set("cold_first_over_warm_p99_max", 2.0.into())
+            .set("warm_ablation_off_over_on", ablation_ratio.into())
+            .set("warm_ablation_tolerance", 1.5.into());
+        let mut o = Json::obj();
+        o.set("bench", "replica_snapshot".into())
+            .set("experiment", "E17".into())
+            .set("config", cfg)
+            .set("modes", Json::Arr(vec![cold.json(), snapb.json()]))
+            .set("serving", serving)
+            .set("gates", gates);
+        std::fs::write(&path, format!("{}\n", o.to_string())).expect("write bench json");
+        println!("wrote {path}");
+    }
+
+    // ISSUE 10 gates.
+    assert!(
+        build_speedup >= 5.0,
+        "snapshot-path replica construction must be >= 5x faster than a \
+         cold build (got {build_speedup:.2}x: cold {:.3} ms, snapshot {:.3} ms)",
+        cold.mean_ms,
+        snapb.mean_ms
+    );
+    assert!(
+        cold_ratio <= 2.0,
+        "with snapshots + prefetch on, a cold model's first-request p99 \
+         must be <= 2x the warm p99 (got {cold_ratio:.2}x: first \
+         {on_first_p99:.3} ms, warm {on_warm_p99:.3} ms)"
+    );
+    assert!(
+        ablation_ratio <= 1.5 && ablation_ratio >= 1.0 / 1.5,
+        "snapshots must not change the steady-state serving path \
+         (off/on warm p99 ratio {ablation_ratio:.2}x)"
+    );
+}

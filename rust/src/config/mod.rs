@@ -228,6 +228,56 @@ impl std::fmt::Display for ConnPlane {
     }
 }
 
+/// Replica-snapshot policy (DESIGN.md §"Replica snapshots").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SnapshotMode {
+    /// Load `.zsnap` files when valid, write one after every cold probe
+    /// build (the default).
+    #[default]
+    On,
+    /// Never read or write snapshots — the cold-build ablation; byte-
+    /// for-byte the pre-snapshot behavior.
+    Off,
+    /// Ignore any existing snapshot, cold-build, and rewrite it —
+    /// operator escape hatch for a suspect snapshot file.
+    Refresh,
+}
+
+impl SnapshotMode {
+    pub fn parse(s: &str) -> Result<SnapshotMode> {
+        match s {
+            "on" => Ok(SnapshotMode::On),
+            "off" => Ok(SnapshotMode::Off),
+            "refresh" => Ok(SnapshotMode::Refresh),
+            other => bail!("--snapshots expects on|off|refresh, got '{other}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SnapshotMode::On => "on",
+            SnapshotMode::Off => "off",
+            SnapshotMode::Refresh => "refresh",
+        }
+    }
+
+    /// May replica builds consume an existing snapshot?
+    pub fn reads(&self) -> bool {
+        matches!(self, SnapshotMode::On)
+    }
+
+    /// Should a cold probe build write a fresh snapshot?
+    pub fn writes(&self) -> bool {
+        !matches!(self, SnapshotMode::Off)
+    }
+}
+
+impl std::fmt::Display for SnapshotMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Which request-line parser the serving planes run (DESIGN.md §"Wire
 /// plane").  Both produce identical messages and diagnostics; the flag
 /// exists so the tree baseline stays measurable (E15 ablation).
@@ -290,6 +340,11 @@ pub struct ServerConfig {
     /// Request-line parser: tape scanner (default) or the legacy tree
     /// parser kept as the E15 ablation baseline.
     pub wire_parser: WireParser,
+    /// Emit the deprecated duplicate `error` field (alias of `msg`) on
+    /// error lines, for clients not yet reading the PR 9 unified schema.
+    /// Off by default — the alias was kept "for one release" and this
+    /// flag is its sunset path.
+    pub compat_error_alias: bool,
 }
 
 impl Default for ServerConfig {
@@ -304,6 +359,7 @@ impl Default for ServerConfig {
             max_frame_bytes: 8 * 1024 * 1024,
             idle_timeout_ms: 60_000,
             wire_parser: WireParser::Tape,
+            compat_error_alias: false,
         }
     }
 }
@@ -349,6 +405,14 @@ pub struct Config {
     /// cache — bounds resident weights when one worker serves many
     /// models.  A single replica larger than the budget is kept alone.
     pub replica_cache_mb: usize,
+    /// Replica-snapshot policy: `on` loads/writes `.zsnap` files so
+    /// cold replica builds become load-and-validate; `off` is the
+    /// cold-build ablation; `refresh` rebuilds and rewrites.
+    pub snapshots: SnapshotMode,
+    /// Predictive warm-up: when a cold (model, engine) queue's EWMA
+    /// arrival rate (requests/sec) crosses this threshold, idle workers
+    /// prefetch-build its replica before traffic lands.  0 disables.
+    pub prefetch_threshold: f64,
     /// Dynamic batcher: max images per batch (must have an artifact).
     pub max_batch: usize,
     /// Dynamic batcher: how long to wait for a batch to fill.
@@ -385,6 +449,8 @@ impl Default for Config {
             // core (the embedded budget the scheduler divides), never 0.
             workers: crate::metrics::sysmon::num_cpus().max(1),
             replica_cache_mb: 128,
+            snapshots: SnapshotMode::On,
+            prefetch_threshold: 0.0,
             max_batch: 8,
             batch_timeout: Duration::from_millis(20),
             queue_capacity: 64,
@@ -427,6 +493,12 @@ impl Config {
         }
         if let Some(v) = j.get("replica_cache_mb").and_then(|v| v.as_usize()) {
             self.replica_cache_mb = v;
+        }
+        if let Some(v) = j.get("snapshots").and_then(|v| v.as_str()) {
+            self.snapshots = SnapshotMode::parse(v)?;
+        }
+        if let Some(v) = j.get("prefetch_threshold").and_then(|v| v.as_f64()) {
+            self.prefetch_threshold = v;
         }
         if let Some(v) = j.get("max_batch").and_then(|v| v.as_usize()) {
             self.max_batch = v;
@@ -493,6 +565,9 @@ impl Config {
             if let Some(v) = s.get("wire_parser").and_then(|v| v.as_str()) {
                 self.server.wire_parser = WireParser::parse(v)?;
             }
+            if let Some(v) = s.get("compat_error_alias").and_then(|v| v.as_bool()) {
+                self.server.compat_error_alias = v;
+            }
         }
         // Tracing knobs live under a nested "obs" object.
         if let Some(o) = j.get("obs") {
@@ -546,6 +621,14 @@ impl Config {
             .map_err(anyhow::Error::msg)?;
         self.replica_cache_mb = a
             .get_usize("replica-cache-mb", self.replica_cache_mb)
+            .map_err(anyhow::Error::msg)?;
+        // Strict enum parse — a typo'd mode must error, never silently
+        // fall back to cold builds (same policy as --conn-plane).
+        if let Some(v) = a.get("snapshots") {
+            self.snapshots = SnapshotMode::parse(v)?;
+        }
+        self.prefetch_threshold = a
+            .get_f64("prefetch-threshold", self.prefetch_threshold)
             .map_err(anyhow::Error::msg)?;
         self.max_batch = a
             .get_usize("max-batch", self.max_batch)
@@ -615,6 +698,9 @@ impl Config {
             .map_err(anyhow::Error::msg)? as u64;
         if let Some(v) = a.get("wire-parser") {
             self.server.wire_parser = WireParser::parse(v)?;
+        }
+        if a.get("compat-error-alias").is_some() {
+            self.server.compat_error_alias = a.get_bool("compat-error-alias");
         }
         // Tracing.
         self.obs.trace_sample_rate = a
@@ -690,6 +776,12 @@ impl Config {
         }
         if self.replica_cache_mb == 0 {
             bail!("replica_cache_mb must be >= 1");
+        }
+        if !self.prefetch_threshold.is_finite() || self.prefetch_threshold < 0.0 {
+            bail!(
+                "prefetch_threshold must be finite and >= 0 (req/s; 0 disables), got {}",
+                self.prefetch_threshold
+            );
         }
         if self.max_batch == 0 {
             bail!("max_batch must be >= 1");
@@ -846,6 +938,9 @@ impl Config {
         "trace-sample-rate",
         "trace-ring",
         "slow-log",
+        "snapshots",
+        "prefetch-threshold",
+        "compat-error-alias",
     ];
 }
 
@@ -1328,6 +1423,72 @@ mod tests {
         let mut c = Config::default();
         c.obs.slow_log = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn snapshot_knobs_from_json_and_cli() {
+        let j = Json::parse(r#"{"snapshots":"refresh","prefetch_threshold":2.5}"#)
+            .unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.snapshots, SnapshotMode::Refresh);
+        assert_eq!(c.prefetch_threshold, 2.5);
+        c.validate().unwrap();
+
+        let a = Args::parse(
+            ["serve", "--snapshots", "off", "--prefetch-threshold", "1.5"]
+                .iter()
+                .map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.snapshots, SnapshotMode::Off);
+        assert_eq!(c.prefetch_threshold, 1.5);
+
+        // Typos must error, never silently fall back to cold builds.
+        let bad = Args::parse(
+            ["serve", "--snapshots", "onn"].iter().map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        assert!(Config::from_args(&bad).is_err());
+
+        let mut c = Config::default();
+        c.prefetch_threshold = -1.0;
+        assert!(c.validate().is_err());
+        c.prefetch_threshold = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn snapshot_mode_parses_and_displays() {
+        assert_eq!(SnapshotMode::parse("on").unwrap(), SnapshotMode::On);
+        assert_eq!(SnapshotMode::parse("off").unwrap(), SnapshotMode::Off);
+        assert_eq!(SnapshotMode::parse("refresh").unwrap(), SnapshotMode::Refresh);
+        assert!(SnapshotMode::parse("never").is_err());
+        assert_eq!(SnapshotMode::default(), SnapshotMode::On);
+        assert_eq!(SnapshotMode::On.to_string(), "on");
+        assert!(SnapshotMode::On.reads() && SnapshotMode::On.writes());
+        assert!(!SnapshotMode::Off.reads() && !SnapshotMode::Off.writes());
+        assert!(!SnapshotMode::Refresh.reads() && SnapshotMode::Refresh.writes());
+    }
+
+    #[test]
+    fn compat_error_alias_from_json_and_cli() {
+        assert!(!ServerConfig::default().compat_error_alias);
+        let j = Json::parse(r#"{"server":{"compat_error_alias":true}}"#).unwrap();
+        let mut c = Config::default();
+        c.apply_json(&j).unwrap();
+        assert!(c.server.compat_error_alias);
+
+        let a = Args::parse(
+            ["serve", "--compat-error-alias"].iter().map(|s| s.to_string()),
+            Config::FLAGS,
+        )
+        .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert!(c.server.compat_error_alias);
     }
 
     #[test]

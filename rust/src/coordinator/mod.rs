@@ -345,6 +345,18 @@ pub struct ModelStatsSnapshot {
     /// resets on reload — new weights mean a cold cache).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Probe build + warm-up wall time of the serving generation, ms
+    /// (0.0 when unloaded, or when a no-op reload skipped the rebuild).
+    pub warm_ms: f64,
+    /// AOT snapshot counters (survive reloads; DESIGN.md §11):
+    /// replica builds served from a snapshot / cold builds that found
+    /// no usable snapshot / validated snapshots whose engine build
+    /// failed and fell back cold.
+    pub snapshot_hits: u64,
+    pub snapshot_misses: u64,
+    pub snapshot_fallbacks: u64,
+    /// Replicas pre-built by the predictive warm-up path.
+    pub prefetch_builds: u64,
 }
 
 /// Live stats snapshot.
@@ -438,6 +450,13 @@ impl Coordinator {
             urgency_window,
             stats.clone(),
         );
+        // Predictive warm-up (DESIGN.md §11): idle workers pre-build
+        // replicas for queues whose arrival EWMA crosses the threshold,
+        // at most once per worker per queue (each worker has its own
+        // byte-bounded replica cache).  0.0 (the default) disables it.
+        runtime
+            .scheduler()
+            .set_prefetch(cfg.prefetch_threshold, runtime.workers());
         // Startup failures must not leak the worker fleet (tests build
         // coordinators in-process; detached idle threads add up).
         let registry = match ModelRegistry::new(cfg.clone(), stats.clone(), runtime.handle()) {
@@ -709,6 +728,20 @@ impl Coordinator {
                 rejected: entry.counters().rejected.load(Ordering::Relaxed),
                 cache_hits: hits,
                 cache_misses: misses,
+                warm_ms: gen.as_ref().map(|g| g.warm_ms()).unwrap_or(0.0),
+                snapshot_hits: entry.counters().snapshot_hits.load(Ordering::Relaxed),
+                snapshot_misses: entry
+                    .counters()
+                    .snapshot_misses
+                    .load(Ordering::Relaxed),
+                snapshot_fallbacks: entry
+                    .counters()
+                    .snapshot_fallbacks
+                    .load(Ordering::Relaxed),
+                prefetch_builds: entry
+                    .counters()
+                    .prefetch_builds
+                    .load(Ordering::Relaxed),
             });
         }
 

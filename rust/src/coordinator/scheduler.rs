@@ -93,6 +93,16 @@ pub struct ExecCtx {
     /// record each served batch's span deltas here; `{"cmd":"metrics"}`
     /// merges them across models.
     pub stage_hist: Arc<crate::obs::StageHist>,
+    /// AOT replica snapshot for this generation, when one was loaded or
+    /// captured at generation start (DESIGN.md §11): workers build their
+    /// replicas from the pre-decoded buffers instead of re-reading and
+    /// re-decoding the artifact directory.  `None` = snapshots disabled
+    /// or unavailable — workers cold-build exactly as before.
+    pub snapshot: Option<Arc<crate::runtime::ReplicaSnapshot>>,
+    /// Whether snapshots are enabled for this generation (drives the
+    /// `snapshot_misses` counter semantics: a cold build only counts as
+    /// a miss when a snapshot *could* have served it).
+    pub snapshots_on: bool,
 }
 
 /// One schedulable (model, generation, engine) queue.
@@ -109,7 +119,26 @@ pub struct WorkSource {
     /// *before* the first pop of a batch so drain can never observe
     /// "queue empty" while a batch is mid-flight.
     inflight: AtomicUsize,
+    /// Arrival-rate EWMA (req/s), fed by [`Scheduler::submit`].  The
+    /// predictive warm-up scan reads it to find queues whose traffic
+    /// justifies pre-building a replica while the fleet is idle.
+    arrivals: Mutex<ArrivalEwma>,
 }
+
+/// EWMA of a queue's request arrival rate.  Updated per admission from
+/// inter-arrival gaps; read (with a staleness clamp) by the prefetch
+/// scan.
+#[derive(Default)]
+struct ArrivalEwma {
+    last: Option<Instant>,
+    /// Smoothed arrivals per second (0 until the second arrival).
+    rate: f64,
+}
+
+/// Smoothing factor for the arrival EWMA — biased toward recent
+/// traffic so a warm-up decision reflects the current burst, not
+/// history.
+const ARRIVAL_ALPHA: f64 = 0.2;
 
 impl WorkSource {
     pub fn new(
@@ -128,11 +157,37 @@ impl WorkSource {
             fill_cache,
             exec,
             inflight: AtomicUsize::new(0),
+            arrivals: Mutex::new(ArrivalEwma::default()),
         }
     }
 
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Record one admission into the arrival EWMA.
+    fn note_arrival(&self) {
+        let now = Instant::now();
+        let mut a = self.arrivals.lock().unwrap();
+        if let Some(prev) = a.last {
+            let dt = now.duration_since(prev).as_secs_f64().max(1e-6);
+            a.rate = ARRIVAL_ALPHA * (1.0 / dt) + (1.0 - ARRIVAL_ALPHA) * a.rate;
+        }
+        a.last = Some(now);
+    }
+
+    /// Smoothed arrival rate in req/s, clamped by the gap since the
+    /// last arrival so a queue that went quiet decays toward zero
+    /// instead of holding its burst-time rate forever.
+    pub fn arrival_rate(&self) -> f64 {
+        let a = self.arrivals.lock().unwrap();
+        match a.last {
+            Some(prev) => {
+                let gap = prev.elapsed().as_secs_f64().max(1e-6);
+                a.rate.min(1.0 / gap)
+            }
+            None => 0.0,
+        }
     }
 }
 
@@ -171,6 +226,12 @@ pub enum Pick {
         source: Arc<WorkSource>,
         contended: bool,
     },
+    /// Predictive warm-up: nothing is runnable, but this queue's
+    /// arrival rate crossed the prefetch threshold — build its replica
+    /// now (snapshot-fast) so the next burst doesn't pay a cold build.
+    /// The worker checks its own replica cache first; a replica already
+    /// present makes this a no-op.
+    Prefetch { source: Arc<WorkSource> },
     /// Timed out with nothing to do (worker housekeeping tick).
     Idle,
     /// Scheduler closed and every queue fully drained — exit.
@@ -197,6 +258,13 @@ struct Slot {
     /// Whether the queue was backlogged at the last pick scan.  The
     /// empty→non-empty edge is where the stride join-clamp applies.
     active: bool,
+    /// Prefetch grants handed out for this queue so far.  Bounded by
+    /// the fleet size (each worker has its own replica cache) and
+    /// monotonic per generation: once every worker had its chance to
+    /// pre-build, demand builds take over — an evicted replica is not
+    /// re-prefetched (that would thrash exactly when the cache is
+    /// under byte pressure).
+    prefetch_grants: usize,
 }
 
 struct SchedInner {
@@ -208,6 +276,13 @@ struct SchedInner {
     /// credit (and a long-busy queue is never locked out of the EDF
     /// override by a waking queue's stale low pass).
     vtime: f64,
+    /// Predictive warm-up: arrival-rate threshold (req/s) above which
+    /// an idle pick may hand out a [`Pick::Prefetch`] for a queue.
+    /// 0.0 disables the scan entirely (the default).
+    prefetch_threshold: f64,
+    /// Max prefetch grants per queue (the worker-fleet size: one
+    /// replica cache per worker).
+    prefetch_grants_max: usize,
 }
 
 /// The shared-runtime scheduler (one per process, inside the
@@ -236,12 +311,24 @@ impl Scheduler {
                 slots: Vec::new(),
                 closed: false,
                 vtime: 0.0,
+                prefetch_threshold: 0.0,
+                prefetch_grants_max: 0,
             }),
             cv: Condvar::new(),
             drain_cv: Condvar::new(),
             urgency_window,
             table_epoch: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Enable the predictive warm-up scan: idle picks may return
+    /// [`Pick::Prefetch`] for queues whose arrival EWMA is at least
+    /// `threshold` req/s, at most `grants` times per queue (the
+    /// worker-fleet size).  `threshold <= 0` disables the scan.
+    pub fn set_prefetch(&self, threshold: f64, grants: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefetch_threshold = if threshold.is_finite() { threshold } else { 0.0 };
+        g.prefetch_grants_max = grants;
     }
 
     /// Register a generation's queue.  Its pass starts at the current
@@ -253,6 +340,7 @@ impl Scheduler {
             source,
             pass,
             active: false,
+            prefetch_grants: 0,
         });
         drop(g);
         self.table_epoch.fetch_add(1, Ordering::AcqRel);
@@ -268,6 +356,7 @@ impl Scheduler {
         req: Request,
     ) -> Result<(), PushError<Request>> {
         source.queue.try_push(req)?;
+        source.note_arrival();
         // Notify under the scheduler mutex: queue state lives under the
         // queue's own lock, so a bare notify could land between a
         // worker's empty-check and its wait (lost wakeup → the request
@@ -327,6 +416,25 @@ impl Scheduler {
             .map(|(i, _)| i)
             .collect();
         if candidates.is_empty() {
+            // Predictive warm-up: with nothing runnable, offer an idle
+            // worker a replica pre-build for a queue whose traffic says
+            // a burst is live (or imminent) but whose replicas may be
+            // cold.  Grants are bounded per queue so an already-warm
+            // fleet can't spin here instead of idle-waiting.
+            if g.prefetch_threshold > 0.0 {
+                let threshold = g.prefetch_threshold;
+                let max = g.prefetch_grants_max;
+                if let Some(s) = g.slots.iter_mut().find(|s| {
+                    s.prefetch_grants < max
+                        && !s.source.queue.is_closed()
+                        && s.source.arrival_rate() >= threshold
+                }) {
+                    s.prefetch_grants += 1;
+                    return Some(Pick::Prefetch {
+                        source: s.source.clone(),
+                    });
+                }
+            }
             return None;
         }
         let contended = candidates.len() > 1;

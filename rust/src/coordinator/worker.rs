@@ -129,6 +129,50 @@ fn run_worker(w: RuntimeWorker) -> WorkerReport {
                     ledger.merge(dead.ledger());
                 }
             }
+            Pick::Prefetch { source } => {
+                // Predictive warm-up: pre-build this queue's replica so
+                // the next burst skips the cold build.  The cache check
+                // is the dedup guard — a replica already present (this
+                // worker served the queue, or a previous grant landed
+                // here) makes the grant a no-op.
+                if cache.get_quiet(&source.key).is_none() {
+                    let t0 = Instant::now();
+                    match build_replica(&source) {
+                        Ok((mut eng, prewarmed)) => {
+                            let warm = if prewarmed { Ok(()) } else { eng.warmup() };
+                            match warm {
+                                Ok(()) => {
+                                    compile_ms += crate::util::ms(t0.elapsed());
+                                    let bytes = replica_bytes(
+                                        source.key.engine,
+                                        &source.exec.manifest,
+                                    );
+                                    for old in
+                                        cache.insert(source.key.clone(), eng, bytes)
+                                    {
+                                        ledger.merge(old.ledger());
+                                    }
+                                    source
+                                        .exec
+                                        .counters
+                                        .prefetch_builds
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(e) => crate::warn!(
+                                    "worker",
+                                    "prefetch warm-up for {} failed: {e:#}",
+                                    source.key
+                                ),
+                            }
+                        }
+                        Err(e) => crate::warn!(
+                            "worker",
+                            "prefetch build for {} failed: {e:#}",
+                            source.key
+                        ),
+                    }
+                }
+            }
             Pick::Work { source, contended } => {
                 // Inflight is marked before any pop so a concurrent
                 // drain can never miss this batch.
@@ -177,6 +221,36 @@ fn run_worker(w: RuntimeWorker) -> WorkerReport {
     }
 }
 
+/// Construct one engine replica for `source`'s queue, preferring the
+/// generation's in-memory [`crate::runtime::ReplicaSnapshot`] when one
+/// is attached (pre-decoded weights, no artifact-directory reads).
+/// Returns the engine plus whether the snapshot's warm-plan covers this
+/// kind (`true` = the caller may skip `warmup()`).  Any snapshot-path
+/// error falls back to a cold build — a snapshot is never load-bearing.
+fn build_replica(source: &WorkSource) -> anyhow::Result<(Box<dyn Engine>, bool)> {
+    let exec = &source.exec;
+    let kind = source.key.engine;
+    if let Some(snap) = &exec.snapshot {
+        match engine::build_from_snapshot(kind, snap) {
+            Ok(eng) => {
+                exec.counters.snapshot_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((eng, snap.warm_covers(kind)));
+            }
+            Err(e) => {
+                exec.counters.snapshot_fallbacks.fetch_add(1, Ordering::Relaxed);
+                crate::warn!(
+                    "worker",
+                    "snapshot build for {} failed ({e:#}); cold-building",
+                    source.key
+                );
+            }
+        }
+    } else if exec.snapshots_on {
+        exec.counters.snapshot_misses.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok((engine::build(kind, &exec.manifest)?, false))
+}
+
 /// Borrow (or build + warm) the engine replica for `source`'s queue.
 /// Replicas evicted for byte pressure fold their ledgers into the
 /// worker's report instead of vanishing.
@@ -188,8 +262,10 @@ fn replica<'a>(
 ) -> anyhow::Result<&'a mut Box<dyn Engine>> {
     if cache.get(&source.key).is_none() {
         let t0 = Instant::now();
-        let mut eng = engine::build(source.key.engine, &source.exec.manifest)?;
-        eng.warmup()?;
+        let (mut eng, prewarmed) = build_replica(source)?;
+        if !prewarmed {
+            eng.warmup()?;
+        }
         *compile_ms += crate::util::ms(t0.elapsed());
         let bytes = replica_bytes(source.key.engine, &source.exec.manifest);
         for old in cache.insert(source.key.clone(), eng, bytes) {

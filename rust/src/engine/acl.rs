@@ -62,8 +62,29 @@ pub struct AclEngine {
 
 impl AclEngine {
     pub fn new(manifest: &Manifest, mode: Mode) -> Result<AclEngine> {
-        let runtime = Runtime::cpu()?;
         let weights = WeightStore::load(manifest)?;
+        Self::with_weights(manifest, mode, weights)
+    }
+
+    /// Snapshot fast path: weights come pre-decoded from a validated
+    /// [`ReplicaSnapshot`], skipping the weights.bin read + decode.  The
+    /// HLO artifacts still compile here — XLA executables are
+    /// process-local and cannot be serialized.
+    pub fn from_snapshot(
+        snap: &crate::runtime::ReplicaSnapshot,
+        mode: Mode,
+    ) -> Result<AclEngine> {
+        let weights =
+            WeightStore::from_decoded(&snap.manifest, &snap.f32_bufs, &snap.q8_bufs)?;
+        Self::with_weights(&snap.manifest, mode, weights)
+    }
+
+    fn with_weights(
+        manifest: &Manifest,
+        mode: Mode,
+        weights: WeightStore,
+    ) -> Result<AclEngine> {
+        let runtime = Runtime::cpu()?;
 
         let (entries, batch_sizes): (Vec<StageEntry>, Vec<usize>) = match mode {
             Mode::Staged => (manifest.stages.clone(), manifest.batch_sizes.clone()),

@@ -131,6 +131,35 @@ pub fn build(kind: EngineKind, manifest: &Manifest) -> Result<Box<dyn Engine>> {
     })
 }
 
+/// Build an engine from a validated [`ReplicaSnapshot`] — the AOT
+/// fast path.  Weights arrive pre-decoded in engine-ready layout and the
+/// manifest comes from the snapshot's embedded text, so construction
+/// skips every artifact-directory read except HLO compilation (XLA
+/// executables are process-local and cannot be serialized).
+///
+/// Callers decide warm-up: if `snap.warm_covers(kind)` the probe warm-up
+/// that ran at capture time stands in for a fresh one.  Any `Err` here
+/// means "fall back to [`build`]" — a snapshot is never load-bearing.
+pub fn build_from_snapshot(
+    kind: EngineKind,
+    snap: &crate::runtime::ReplicaSnapshot,
+) -> Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::AclStaged => {
+            Box::new(acl::AclEngine::from_snapshot(snap, acl::Mode::Staged)?)
+        }
+        EngineKind::AclFused => {
+            Box::new(acl::AclEngine::from_snapshot(snap, acl::Mode::Fused)?)
+        }
+        EngineKind::AclProbe => {
+            Box::new(acl::AclEngine::from_snapshot(snap, acl::Mode::Probe)?)
+        }
+        EngineKind::TfBaseline => Box::new(tf::TfBaselineEngine::from_snapshot(snap)?),
+        EngineKind::Quant => Box::new(quant::QuantEngine::from_snapshot(snap)?),
+        EngineKind::Sim => Box::new(sim::SimEngine::from_snapshot(snap)?),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

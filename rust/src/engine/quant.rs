@@ -28,8 +28,21 @@ pub struct QuantEngine {
 
 impl QuantEngine {
     pub fn new(manifest: &Manifest) -> Result<QuantEngine> {
-        let runtime = Runtime::cpu()?;
         let weights = WeightStore::load(manifest)?;
+        Self::with_weights(manifest, weights)
+    }
+
+    /// Snapshot fast path: pre-decoded weights from a validated
+    /// [`crate::runtime::ReplicaSnapshot`]; the quantized op graph still
+    /// compiles here (XLA handles are process-local).
+    pub fn from_snapshot(snap: &crate::runtime::ReplicaSnapshot) -> Result<QuantEngine> {
+        let weights =
+            WeightStore::from_decoded(&snap.manifest, &snap.f32_bufs, &snap.q8_bufs)?;
+        Self::with_weights(&snap.manifest, weights)
+    }
+
+    fn with_weights(manifest: &Manifest, weights: WeightStore) -> Result<QuantEngine> {
+        let runtime = Runtime::cpu()?;
         let ops = graph_exec::compile_graph(&runtime, manifest, &manifest.quant_ops)?;
         Ok(QuantEngine {
             ops,

@@ -75,6 +75,14 @@ impl SimEngine {
             ledger: Ledger::new(),
         })
     }
+
+    /// Snapshot fast path: build from the snapshot's embedded manifest —
+    /// no manifest.json read.  The busy-wait env override is still read
+    /// at build time (same semantics as a cold build), so tests that
+    /// inflate later replicas keep working on the snapshot path.
+    pub fn from_snapshot(snap: &crate::runtime::ReplicaSnapshot) -> Result<SimEngine> {
+        Self::new(&snap.manifest)
+    }
 }
 
 impl super::Engine for SimEngine {

@@ -34,8 +34,23 @@ pub struct TfBaselineEngine {
 
 impl TfBaselineEngine {
     pub fn new(manifest: &Manifest) -> Result<TfBaselineEngine> {
-        let runtime = Runtime::cpu()?;
         let weights = WeightStore::load(manifest)?;
+        Self::with_weights(manifest, weights)
+    }
+
+    /// Snapshot fast path: pre-decoded weights from a validated
+    /// [`crate::runtime::ReplicaSnapshot`]; op executables still compile
+    /// (XLA handles are process-local).
+    pub fn from_snapshot(
+        snap: &crate::runtime::ReplicaSnapshot,
+    ) -> Result<TfBaselineEngine> {
+        let weights =
+            WeightStore::from_decoded(&snap.manifest, &snap.f32_bufs, &snap.q8_bufs)?;
+        Self::with_weights(&snap.manifest, weights)
+    }
+
+    fn with_weights(manifest: &Manifest, weights: WeightStore) -> Result<TfBaselineEngine> {
+        let runtime = Runtime::cpu()?;
         let ops = graph_exec::compile_graph(&runtime, manifest, &manifest.ops)?;
         Ok(TfBaselineEngine {
             ops,

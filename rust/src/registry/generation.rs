@@ -82,6 +82,11 @@ pub struct Generation {
     /// Wall time spent probe-building + warming one replica per engine
     /// kind (artifact validation; see `start`).
     warm_ms: f64,
+    /// Content hash of the artifacts this generation was built from
+    /// (manifest + weight files; see
+    /// [`crate::runtime::artifact_content_hash`]).  The registry's
+    /// no-op reload short-circuit compares against it.
+    content_hash: u64,
     retired: AtomicBool,
 }
 
@@ -111,8 +116,36 @@ impl Generation {
         counters: Arc<ModelCounters>,
     ) -> Result<Generation> {
         let t0 = Instant::now();
-        let manifest = Manifest::load(artifacts)
-            .with_context(|| format!("loading manifest for model '{model}'"))?;
+        let content_hash = crate::runtime::artifact_content_hash(artifacts)
+            .with_context(|| format!("hashing artifacts for model '{model}'"))?;
+
+        // AOT snapshot fast path (DESIGN.md §11): a valid `.zsnap` next
+        // to the manifest carries the parsed manifest and pre-decoded
+        // weight buffers from a previous build of these exact artifacts
+        // (content-addressed — `load` rejects anything stale, corrupt,
+        // or version-skewed).  Any load failure is a cold build, never
+        // an error.
+        let mut snap: Option<Arc<crate::runtime::ReplicaSnapshot>> = None;
+        if cfg.snapshots.reads() {
+            match crate::runtime::ReplicaSnapshot::load(artifacts) {
+                Ok(s) => {
+                    counters.snapshot_hits.fetch_add(1, Ordering::Relaxed);
+                    snap = Some(Arc::new(s));
+                }
+                Err(e) => {
+                    counters.snapshot_misses.fetch_add(1, Ordering::Relaxed);
+                    crate::info!(
+                        "registry",
+                        "model '{model}': no usable snapshot ({e:#}); cold build"
+                    );
+                }
+            }
+        }
+        let manifest = match &snap {
+            Some(s) => s.manifest.clone(),
+            None => Manifest::load(artifacts)
+                .with_context(|| format!("loading manifest for model '{model}'"))?,
+        };
 
         // With `cfg.policy.adaptive`, two queues come up — the
         // configured engine (quality path) plus the int8 quant path —
@@ -126,14 +159,71 @@ impl Generation {
         // Probe-build: prove every engine kind builds + warms before
         // anything is published.  The probe replica is dropped — it
         // validated the artifacts; serving replicas are built inside
-        // the runtime workers' threads on first batch.
+        // the runtime workers' threads on first batch.  With a snapshot
+        // in hand the probe builds from pre-decoded buffers and skips
+        // the warm-up for kinds the snapshot's warm-plan covers (the
+        // capture-time warm-up stands in); a snapshot-path failure
+        // falls back to the cold build for that kind.
         for &kind in &kinds {
-            let mut probe = engine::build(kind, &manifest).with_context(|| {
-                format!("model '{model}': building {} probe", kind.as_str())
-            })?;
-            probe.warmup().with_context(|| {
-                format!("model '{model}': warming {} probe", kind.as_str())
-            })?;
+            let (mut probe, prewarmed) = match &snap {
+                Some(s) => match engine::build_from_snapshot(kind, s) {
+                    Ok(p) => (p, s.warm_covers(kind)),
+                    Err(e) => {
+                        counters.snapshot_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        crate::warn!(
+                            "registry",
+                            "model '{model}': snapshot probe for {} failed \
+                             ({e:#}); cold-building",
+                            kind.as_str()
+                        );
+                        let p = engine::build(kind, &manifest).with_context(|| {
+                            format!("model '{model}': building {} probe", kind.as_str())
+                        })?;
+                        (p, false)
+                    }
+                },
+                None => {
+                    let p = engine::build(kind, &manifest).with_context(|| {
+                        format!("model '{model}': building {} probe", kind.as_str())
+                    })?;
+                    (p, false)
+                }
+            };
+            if !prewarmed {
+                probe.warmup().with_context(|| {
+                    format!("model '{model}': warming {} probe", kind.as_str())
+                })?;
+            }
+        }
+
+        // Capture the snapshot after a successful cold probe (On mode
+        // with no valid snapshot on disk, or Refresh mode, which always
+        // rebuilds and rewrites).  The captured snapshot also rides
+        // along in memory (ExecCtx below) so this generation's worker
+        // replicas build snapshot-fast even on the very first cold
+        // start.  Write failures are logged, never fatal — the build
+        // already proved itself.
+        if cfg.snapshots.writes() && snap.is_none() {
+            match crate::runtime::ReplicaSnapshot::capture(&manifest, &kinds) {
+                Ok(s) => match s.write(artifacts) {
+                    Ok(()) => {
+                        crate::info!(
+                            "registry",
+                            "model '{model}': wrote replica snapshot (hash {:016x})",
+                            content_hash
+                        );
+                        snap = Some(Arc::new(s));
+                    }
+                    Err(e) => crate::warn!(
+                        "registry",
+                        "model '{model}': snapshot write failed: {e:#}"
+                    ),
+                },
+                Err(e) => crate::warn!(
+                    "registry",
+                    "model '{model}': snapshot capture failed: {e:#}"
+                ),
+            }
         }
 
         let ctx = Arc::new(PolicyCtx::new(
@@ -163,6 +253,8 @@ impl Generation {
             ctx: ctx.clone(),
             counters: counters.clone(),
             stage_hist: stage_hist.clone(),
+            snapshot: snap.clone(),
+            snapshots_on: cfg.snapshots.reads() || cfg.snapshots.writes(),
         });
 
         let mut ports = Vec::with_capacity(kinds.len());
@@ -223,8 +315,15 @@ impl Generation {
             counters,
             stage_hist,
             warm_ms,
+            content_hash,
             retired: AtomicBool::new(false),
         })
+    }
+
+    /// Content hash of the artifacts this generation was built from
+    /// (the registry's no-op reload detector).
+    pub fn content_hash(&self) -> u64 {
+        self.content_hash
     }
 
     pub fn model(&self) -> &str {

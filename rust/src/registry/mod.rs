@@ -50,6 +50,18 @@ pub struct ModelCounters {
     pub completed: AtomicU64,
     pub images: AtomicU64,
     pub rejected: AtomicU64,
+    /// Replica constructions served from a validated AOT snapshot
+    /// (probe builds and worker builds alike; DESIGN.md §11).
+    pub snapshot_hits: AtomicU64,
+    /// Cold builds that ran with snapshots enabled but none available
+    /// (missing, stale, corrupt, or version-skewed `.zsnap`).
+    pub snapshot_misses: AtomicU64,
+    /// Validated snapshots whose engine construction still failed —
+    /// each one fell back to a cold build (never a serving error).
+    pub snapshot_fallbacks: AtomicU64,
+    /// Replicas pre-built by the predictive warm-up path before any
+    /// batch of theirs was picked.
+    pub prefetch_builds: AtomicU64,
 }
 
 /// RAII guard pinning one model generation for the duration of a
@@ -78,6 +90,11 @@ pub struct ReloadReport {
     /// Wall time spent building + validating the new generation (the
     /// old one kept serving throughout).
     pub warm_ms: f64,
+    /// `false` when the reload short-circuited because the artifact
+    /// content hash was unchanged: the generation number was bumped to
+    /// acknowledge the request, but no probe build ran and the serving
+    /// generation (weights, queues, caches) is untouched.
+    pub rebuilt: bool,
 }
 
 /// One registered model: artifact location, lifetime counters, and the
@@ -283,6 +300,35 @@ impl ModelRegistry {
             .with_context(|| format!("unknown model '{name}'"))?;
 
         let _build = entry.build_lock.lock().unwrap();
+
+        // No-op reload short-circuit: if the artifacts on disk hash to
+        // exactly what the serving generation was built from, a rebuild
+        // would produce byte-identical weights — skip the probe build
+        // entirely and acknowledge with a generation-number bump.  The
+        // serving generation (queues, caches, predictor) is untouched,
+        // so a fleet-wide `reload` sweep against unchanged models costs
+        // three file reads per model instead of a build + warm-up.
+        // Hash errors (e.g. artifacts deleted mid-flight) fall through
+        // to the build path, which reports the real failure.
+        if let Some(current) = entry.current() {
+            if let Ok(live) = crate::runtime::artifact_content_hash(&entry.artifacts) {
+                if live == current.content_hash() {
+                    let gen_no = entry.generations.fetch_add(1, Ordering::Relaxed) + 1;
+                    crate::info!(
+                        "registry",
+                        "reload '{name}': artifacts unchanged (hash {live:016x}); \
+                         gen {gen_no} is a no-op bump"
+                    );
+                    return Ok(ReloadReport {
+                        model: name.to_string(),
+                        generation: gen_no,
+                        warm_ms: 0.0,
+                        rebuilt: false,
+                    });
+                }
+            }
+        }
+
         let gen_no = entry.generations.fetch_add(1, Ordering::Relaxed) + 1;
         let fresh = Arc::new(Generation::start(
             entry.name.clone(),
@@ -315,6 +361,7 @@ impl ModelRegistry {
             model: name.to_string(),
             generation: gen_no,
             warm_ms,
+            rebuilt: true,
         })
     }
 
@@ -404,14 +451,20 @@ mod tests {
 
     #[test]
     fn lazy_build_then_reload_bumps_generation() {
-        let reg = registry(sim_cfg(&[("a", synth_dir("lazyreload"))]));
+        let dir = synth_dir("lazyreload");
+        let reg = registry(sim_cfg(&[("a", dir.clone())]));
         assert_eq!(reg.entry("a").unwrap().generation_number(), 0);
         let lease = reg.resolve(Some("a")).unwrap();
         assert_eq!(lease.generation(), 1);
         // Generation 1 registered exactly one queue (sim, non-adaptive).
         assert_eq!(reg.runtime.scheduler.queue_rows().len(), 1);
+        // Change the artifacts so the reload is a *real* rebuild (an
+        // unchanged dir would short-circuit — covered separately below).
+        crate::testkit::manifest::write_synthetic(&dir, "a", 101, 227, &[1, 2])
+            .unwrap();
         let report = reg.reload(Some("a")).unwrap();
         assert_eq!(report.generation, 2);
+        assert!(report.rebuilt);
         // The old lease still works structurally (model name intact),
         // and the new resolution sees the new generation.
         assert_eq!(lease.model(), "a");
@@ -422,6 +475,38 @@ mod tests {
         // Every queue drained + deregistered: the scheduler table is
         // empty — the drain condition replaced thread joins.
         assert_eq!(reg.runtime.scheduler.queue_rows().len(), 0);
+    }
+
+    #[test]
+    fn noop_reload_short_circuits_without_a_probe_build() {
+        let dir = synth_dir("noopreload");
+        let reg = registry(sim_cfg(&[("a", dir.clone())]));
+        let lease = reg.resolve(Some("a")).unwrap();
+        assert_eq!(lease.generation(), 1);
+        drop(lease);
+        // Reload with byte-identical artifacts: the content hash
+        // matches the serving generation, so no probe build runs — the
+        // scheduler table still holds exactly generation 1's queue (a
+        // rebuild would have registered gen 2's queue alongside it
+        // while the old one drains).
+        let report = reg.reload(Some("a")).unwrap();
+        assert!(!report.rebuilt, "unchanged artifacts must not rebuild");
+        assert_eq!(report.generation, 2, "the bump is still acknowledged");
+        assert_eq!(report.warm_ms, 0.0);
+        let rows = reg.runtime.scheduler.queue_rows();
+        assert_eq!(rows.len(), 1, "no new queue: {rows:?}");
+        assert_eq!(rows[0].generation, 1);
+        // Serving continues on the original generation object.
+        let lease = reg.resolve(Some("a")).unwrap();
+        assert_eq!(lease.generation(), 1);
+        // Touching the artifacts makes the next reload a real rebuild.
+        crate::testkit::manifest::write_synthetic(&dir, "a", 102, 227, &[1, 2])
+            .unwrap();
+        let report = reg.reload(Some("a")).unwrap();
+        assert!(report.rebuilt);
+        assert_eq!(report.generation, 3);
+        drop(lease);
+        reg.shutdown();
     }
 
     #[test]

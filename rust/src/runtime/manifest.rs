@@ -165,7 +165,15 @@ impl Manifest {
         let path = root.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::parse(&text, root)
+    }
+
+    /// Parse and validate manifest JSON text with artifact paths resolved
+    /// against `root`.  Split out of [`Manifest::load`] so a replica
+    /// snapshot can embed the manifest text and rebuild the typed view
+    /// without re-reading `manifest.json` (runtime::snapshot).
+    pub fn parse(text: &str, root: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
 
         let params = j
             .req("params")?

@@ -11,6 +11,7 @@
 //!   engine replica owns its own `Runtime` (see coordinator::worker).
 
 pub mod manifest;
+pub mod snapshot;
 pub mod weights;
 
 use anyhow::{Context, Result};
@@ -22,6 +23,7 @@ use std::time::{Duration, Instant};
 use crate::tensor::Tensor;
 
 pub use manifest::{Manifest, OpEntry, StageEntry};
+pub use snapshot::{artifact_content_hash, ReplicaSnapshot};
 pub use weights::WeightStore;
 
 /// A PJRT CPU client plus a compile cache.

@@ -1,0 +1,457 @@
+//! AOT replica snapshots — cold-start as load-and-validate, not rebuild.
+//!
+//! A `.zsnap` file sits next to `manifest.json` and caches everything a
+//! replica build would otherwise recompute from the artifact directory:
+//! the manifest text (re-parsed, not re-read), the decoded f32/q8 weight
+//! buffers in engine-ready layout, input/arena sizing, and a warm-plan of
+//! engine kinds that were probe-warmed when the snapshot was captured.
+//! `engine::build_from_snapshot` consumes it to skip filesystem reads,
+//! weight decoding, and (when the warm-plan covers the kind) the warm-up
+//! inference.
+//!
+//! Trust model — a snapshot is an *optimization*, never an authority:
+//!
+//! * **Versioned.** Magic + format version up front; any skew is a clean
+//!   load error, never a misparse.
+//! * **Checksummed.** A trailing FNV-1a-64 over header+payload catches
+//!   truncation and bit-flips before any field is trusted.
+//! * **Content-addressed.** The header stores the FNV hash of
+//!   manifest.json + weights.bin + weights_q8.bin at capture time; the
+//!   loader recomputes it from the live artifacts and refuses on any
+//!   mismatch — a stale snapshot self-invalidates, so it can never serve
+//!   weights that don't match the manifest on disk.
+//! * **Fail-open to cold build.** Every failure above surfaces as
+//!   `Err`, and every caller falls back to the existing cold build path
+//!   (`engine::build`) — corruption degrades startup latency, never
+//!   correctness (proven adversarially in tests/snapshot_props.rs).
+//!
+//! Writes are atomic: encode to `replica.zsnap.tmp`, then rename — a
+//! concurrent reader sees either the old snapshot or the new one, never
+//! a torn file.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::engine::EngineKind;
+use crate::policy::bytes_key_parts;
+
+use super::manifest::Manifest;
+
+/// File name, next to manifest.json in the artifact directory.
+pub const SNAPSHOT_FILE: &str = "replica.zsnap";
+
+/// Format version; bump on any layout change.  Loads of other versions
+/// fail cleanly (tested: version-skew → cold-build fallback).
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// 8-byte magic. The embedded `\r\n\x1a` bytes catch text-mode mangling
+/// the same way the PNG magic does.
+const MAGIC: [u8; 8] = *b"ZSNP\r\n\x1a\0";
+
+/// Warmed replica state, reconstructable without touching weights.bin.
+pub struct ReplicaSnapshot {
+    /// Hash of the artifacts this snapshot was captured from (see
+    /// [`artifact_content_hash`]); the load path recomputes and compares.
+    pub content_hash: u64,
+    /// Parsed manifest (from the embedded text, rooted at the live
+    /// artifact directory so HLO artifact relpaths still resolve).
+    pub manifest: Manifest,
+    /// The exact manifest.json text the snapshot embeds (what
+    /// `manifest` was parsed from).
+    pub manifest_text: String,
+    /// Decoded fp32 weight buffers, keyed by param name.
+    pub f32_bufs: BTreeMap<String, Vec<f32>>,
+    /// Raw int8 weight buffers, keyed by param name (empty when the
+    /// model ships no weights_q8.bin).
+    pub q8_bufs: BTreeMap<String, Vec<u8>>,
+    /// Input/arena sizing captured for cross-checks against the manifest.
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub batch_sizes: Vec<usize>,
+    /// Engine kinds that were probe-warmed when this snapshot was
+    /// captured; builds for these kinds may skip `warmup()`.
+    pub warm_plan: Vec<EngineKind>,
+}
+
+/// FNV-1a-64 over manifest.json + weights.bin + weights_q8.bin bytes
+/// (absent weight files contribute nothing).  This is both the snapshot
+/// staleness key and the registry's no-op-reload detector.
+pub fn artifact_content_hash(root: &Path) -> Result<u64> {
+    let mpath = root.join("manifest.json");
+    let mbytes = std::fs::read(&mpath)
+        .with_context(|| format!("reading {}", mpath.display()))?;
+    let wbytes = std::fs::read(root.join("weights.bin")).unwrap_or_default();
+    let qbytes = std::fs::read(root.join("weights_q8.bin")).unwrap_or_default();
+    Ok(bytes_key_parts(&[&mbytes, &wbytes, &qbytes]))
+}
+
+impl ReplicaSnapshot {
+    /// Snapshot file path for an artifact directory.
+    pub fn path_for(root: &Path) -> PathBuf {
+        root.join(SNAPSHOT_FILE)
+    }
+
+    /// Does the warm-plan cover `kind` (i.e. may a build from this
+    /// snapshot skip the warm-up inference)?
+    pub fn warm_covers(&self, kind: EngineKind) -> bool {
+        self.warm_plan.contains(&kind)
+    }
+
+    /// Capture a snapshot from the live artifact directory of an
+    /// already-validated `manifest`.  Reads manifest.json and the weight
+    /// bins once, decodes every parameter into engine-ready buffers, and
+    /// stamps the content hash from the exact bytes read.
+    pub fn capture(manifest: &Manifest, warm_plan: &[EngineKind]) -> Result<ReplicaSnapshot> {
+        let root = &manifest.root;
+        let mpath = root.join("manifest.json");
+        let mbytes = std::fs::read(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let wbytes = std::fs::read(root.join("weights.bin")).unwrap_or_default();
+        let qbytes = std::fs::read(root.join("weights_q8.bin")).unwrap_or_default();
+        let content_hash = bytes_key_parts(&[&mbytes, &wbytes, &qbytes]);
+
+        let total: usize = manifest.params.iter().map(|p| p.nelems).sum();
+        if !manifest.params.is_empty() && wbytes.len() != total * 4 {
+            bail!(
+                "weights.bin is {} bytes, manifest wants {}",
+                wbytes.len(),
+                total * 4
+            );
+        }
+        let mut f32_bufs = BTreeMap::new();
+        for p in &manifest.params {
+            let lo = p.offset * 4;
+            let hi = lo + p.nelems * 4;
+            if hi > wbytes.len() {
+                bail!("param {} spans past weights.bin", p.name);
+            }
+            let vals: Vec<f32> = wbytes[lo..hi]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            f32_bufs.insert(p.name.clone(), vals);
+        }
+        let mut q8_bufs = BTreeMap::new();
+        if !qbytes.is_empty() {
+            for p in &manifest.params_q8 {
+                let hi = p.offset + p.nelems;
+                if hi > qbytes.len() {
+                    bail!("q8 param {} spans past weights_q8.bin", p.name);
+                }
+                q8_bufs.insert(p.name.clone(), qbytes[p.offset..hi].to_vec());
+            }
+        }
+
+        let manifest_text = String::from_utf8(mbytes).context("manifest.json utf8")?;
+        // Re-parse the embedded text so the snapshot's manifest is
+        // exactly what a loader will reconstruct (not the caller's
+        // possibly-drifted copy).
+        let manifest = Manifest::parse(&manifest_text, root)?;
+        Ok(ReplicaSnapshot {
+            content_hash,
+            input_hw: manifest.input_hw,
+            num_classes: manifest.num_classes,
+            batch_sizes: manifest.batch_sizes.clone(),
+            manifest,
+            manifest_text,
+            f32_bufs,
+            q8_bufs,
+            warm_plan: warm_plan.to_vec(),
+        })
+    }
+
+    /// Load `<root>/replica.zsnap`, fully validating before trusting:
+    /// magic, version, trailing checksum, embedded-manifest re-parse,
+    /// sizing cross-checks, and the content hash against the *live*
+    /// artifacts in `root`.  Any failure is an `Err` — callers fall back
+    /// to cold build.
+    pub fn load(root: &Path) -> Result<ReplicaSnapshot> {
+        let path = Self::path_for(root);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let snap = Self::decode(&bytes, root)?;
+        let live = artifact_content_hash(root)?;
+        if live != snap.content_hash {
+            bail!(
+                "snapshot is stale: artifacts hash {live:#x}, snapshot captured {:#x}",
+                snap.content_hash
+            );
+        }
+        Ok(snap)
+    }
+
+    /// Atomically write `<root>/replica.zsnap` (tmp + rename).
+    pub fn write(&self, root: &Path) -> Result<()> {
+        let bytes = self.encode();
+        let tmp = root.join(format!("{SNAPSHOT_FILE}.tmp"));
+        let dst = Self::path_for(root);
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &dst)
+            .with_context(|| format!("renaming into {}", dst.display()))?;
+        Ok(())
+    }
+
+    /// Serialize: magic, version, content hash, payload, trailing
+    /// FNV-1a-64 checksum over everything before it.  All integers LE.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4096);
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, SNAPSHOT_VERSION);
+        put_u64(&mut out, self.content_hash);
+        put_bytes(&mut out, self.manifest_text.as_bytes());
+        put_u32(&mut out, self.f32_bufs.len() as u32);
+        for (name, vals) in &self.f32_bufs {
+            put_bytes(&mut out, name.as_bytes());
+            put_u32(&mut out, vals.len() as u32);
+            for v in vals {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        put_u32(&mut out, self.q8_bufs.len() as u32);
+        for (name, buf) in &self.q8_bufs {
+            put_bytes(&mut out, name.as_bytes());
+            put_bytes(&mut out, buf);
+        }
+        put_u32(&mut out, self.input_hw as u32);
+        put_u32(&mut out, self.num_classes as u32);
+        put_u32(&mut out, self.batch_sizes.len() as u32);
+        for &b in &self.batch_sizes {
+            put_u32(&mut out, b as u32);
+        }
+        put_u32(&mut out, self.warm_plan.len() as u32);
+        for k in &self.warm_plan {
+            put_bytes(&mut out, k.as_str().as_bytes());
+        }
+        let sum = bytes_key_parts(&[&out]);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse + validate an encoded snapshot.  Every read is
+    /// bounds-checked against the remaining buffer (a bit-flipped length
+    /// field fails cleanly instead of allocating gigabytes), and nothing
+    /// is trusted before the trailing checksum verifies.
+    pub fn decode(bytes: &[u8], root: &Path) -> Result<ReplicaSnapshot> {
+        if bytes.len() < MAGIC.len() + 4 + 8 + 8 {
+            bail!("snapshot too short ({} bytes)", bytes.len());
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored_sum = u64::from_le_bytes(tail.try_into().unwrap());
+        let actual_sum = bytes_key_parts(&[body]);
+        if stored_sum != actual_sum {
+            bail!("snapshot checksum mismatch (corrupt or truncated)");
+        }
+        let mut cur = Cur { b: body, i: 0 };
+        let magic = cur.take(MAGIC.len())?;
+        if magic != MAGIC {
+            bail!("not a zsnap file (bad magic)");
+        }
+        let version = cur.u32()?;
+        if version != SNAPSHOT_VERSION {
+            bail!("snapshot version {version}, runtime speaks {SNAPSHOT_VERSION}");
+        }
+        let content_hash = cur.u64()?;
+        let manifest_text =
+            String::from_utf8(cur.bytes32()?.to_vec()).context("manifest text utf8")?;
+        let n_f32 = cur.u32()? as usize;
+        let mut f32_bufs = BTreeMap::new();
+        for _ in 0..n_f32 {
+            let name = cur.str32()?;
+            let nelems = cur.u32()? as usize;
+            let raw = cur.take(nelems.checked_mul(4).context("f32 buf overflow")?)?;
+            let vals: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            f32_bufs.insert(name, vals);
+        }
+        let n_q8 = cur.u32()? as usize;
+        let mut q8_bufs = BTreeMap::new();
+        for _ in 0..n_q8 {
+            let name = cur.str32()?;
+            q8_bufs.insert(name, cur.bytes32()?.to_vec());
+        }
+        let input_hw = cur.u32()? as usize;
+        let num_classes = cur.u32()? as usize;
+        let n_batch = cur.u32()? as usize;
+        let mut batch_sizes = Vec::new();
+        for _ in 0..n_batch {
+            batch_sizes.push(cur.u32()? as usize);
+        }
+        let n_warm = cur.u32()? as usize;
+        let mut warm_plan = Vec::new();
+        for _ in 0..n_warm {
+            warm_plan.push(EngineKind::parse(&cur.str32()?)?);
+        }
+        if cur.i != body.len() {
+            bail!("snapshot has {} trailing payload bytes", body.len() - cur.i);
+        }
+
+        let manifest = Manifest::parse(&manifest_text, root)
+            .context("snapshot embedded manifest")?;
+        // Sizing fields must agree with the embedded manifest; a
+        // disagreement means the payload was assembled inconsistently.
+        if input_hw != manifest.input_hw
+            || num_classes != manifest.num_classes
+            || batch_sizes != manifest.batch_sizes
+        {
+            bail!("snapshot sizing disagrees with its embedded manifest");
+        }
+        Ok(ReplicaSnapshot {
+            content_hash,
+            manifest,
+            manifest_text,
+            f32_bufs,
+            q8_bufs,
+            input_hw,
+            num_classes,
+            batch_sizes,
+            warm_plan,
+        })
+    }
+
+    /// Resident payload size (for replica-cache style accounting/logs).
+    pub fn resident_bytes(&self) -> usize {
+        let f: usize = self.f32_bufs.values().map(|v| v.len() * 4).sum();
+        let q: usize = self.q8_bufs.values().map(|v| v.len()).sum();
+        f + q
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Bounds-checked cursor over the snapshot body.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.i.checked_add(n).context("snapshot length overflow")?;
+        if end > self.b.len() {
+            bail!(
+                "snapshot truncated: want {n} bytes at {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            );
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes32(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    fn str32(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes32()?.to_vec()).context("snapshot string utf8")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "zuluko_snap_unit_{tag}_{}",
+            std::process::id()
+        ));
+        crate::testkit::manifest::write_synthetic(&dir, tag, 100, 32, &[1, 2]).unwrap();
+        dir
+    }
+
+    #[test]
+    fn capture_write_load_roundtrip() {
+        let dir = synth_dir("rt");
+        let m = Manifest::load(&dir).unwrap();
+        let snap = ReplicaSnapshot::capture(&m, &[EngineKind::Sim]).unwrap();
+        snap.write(&dir).unwrap();
+        let back = ReplicaSnapshot::load(&dir).unwrap();
+        assert_eq!(back.content_hash, snap.content_hash);
+        assert_eq!(back.manifest.model, "rt");
+        assert_eq!(back.input_hw, 32);
+        assert_eq!(back.batch_sizes, vec![1, 2]);
+        assert!(back.warm_covers(EngineKind::Sim));
+        assert!(!back.warm_covers(EngineKind::Quant));
+        // No tmp file left behind.
+        assert!(!dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+    }
+
+    #[test]
+    fn bitflip_fails_checksum() {
+        let dir = synth_dir("flip");
+        let m = Manifest::load(&dir).unwrap();
+        let snap = ReplicaSnapshot::capture(&m, &[]).unwrap();
+        let mut bytes = snap.encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = ReplicaSnapshot::decode(&bytes, &dir).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncation_fails_cleanly() {
+        let dir = synth_dir("trunc");
+        let m = Manifest::load(&dir).unwrap();
+        let bytes = ReplicaSnapshot::capture(&m, &[]).unwrap().encode();
+        for keep in [0, 7, 19, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                ReplicaSnapshot::decode(&bytes[..keep], &dir).is_err(),
+                "decode of {keep}-byte prefix should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn version_skew_is_rejected() {
+        let dir = synth_dir("skew");
+        let m = Manifest::load(&dir).unwrap();
+        let mut bytes = ReplicaSnapshot::capture(&m, &[]).unwrap().encode();
+        // Bump the version field (right after the magic), then re-seal
+        // the checksum so only the version check can object.
+        bytes[MAGIC.len()] = 99;
+        let n = bytes.len();
+        let sum = bytes_key_parts(&[&bytes[..n - 8]]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = ReplicaSnapshot::decode(&bytes, &dir).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn stale_content_hash_rejected_on_load() {
+        let dir = synth_dir("stale");
+        let m = Manifest::load(&dir).unwrap();
+        ReplicaSnapshot::capture(&m, &[]).unwrap().write(&dir).unwrap();
+        // Mutate the artifacts after capture: same schema, different text.
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"stale\"", "\"stale2\"")).unwrap();
+        let err = ReplicaSnapshot::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
+    }
+}

@@ -77,6 +77,71 @@ impl WeightStore {
         })
     }
 
+    /// Rebuild a store from pre-decoded per-parameter buffers — the
+    /// replica-snapshot fast path.  No filesystem reads and no
+    /// weights.bin framing re-validation happen here; the snapshot layer
+    /// has already checksummed the buffers and matched them against the
+    /// manifest content-hash.  Per-param lengths are still checked so a
+    /// logic bug upstream fails loudly instead of serving garbage.
+    pub fn from_decoded(
+        manifest: &Manifest,
+        f32_bufs: &BTreeMap<String, Vec<f32>>,
+        q8_bufs: &BTreeMap<String, Vec<u8>>,
+    ) -> Result<WeightStore> {
+        let mut f32_lits = BTreeMap::new();
+        let mut f32_raw = BTreeMap::new();
+        for p in &manifest.params {
+            let vals = f32_bufs
+                .get(&p.name)
+                .with_context(|| format!("snapshot missing f32 buffer for {}", p.name))?;
+            if vals.len() != p.nelems {
+                bail!(
+                    "snapshot f32 buffer for {} has {} elems, manifest wants {}",
+                    p.name,
+                    vals.len(),
+                    p.nelems
+                );
+            }
+            let lit = super::literal_from_slice(&p.shape, vals)
+                .with_context(|| format!("literal for {}", p.name))?;
+            f32_lits.insert(p.name.clone(), lit);
+            f32_raw.insert(p.name.clone(), vals.clone());
+        }
+
+        let mut q8_lits = BTreeMap::new();
+        for p in &manifest.params_q8 {
+            // q8 buffers are optional as a set (weights_q8.bin may be
+            // absent) but must be complete if any are present.
+            let Some(chunk) = q8_bufs.get(&p.name) else {
+                if q8_bufs.is_empty() {
+                    continue;
+                }
+                bail!("snapshot missing q8 buffer for {}", p.name);
+            };
+            if chunk.len() != p.nelems {
+                bail!(
+                    "snapshot q8 buffer for {} has {} bytes, manifest wants {}",
+                    p.name,
+                    chunk.len(),
+                    p.nelems
+                );
+            }
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8,
+                &p.shape,
+                chunk,
+            )
+            .with_context(|| format!("q8 literal for {}", p.name))?;
+            q8_lits.insert(p.name.clone(), lit);
+        }
+
+        Ok(WeightStore {
+            f32_lits,
+            q8_lits,
+            f32_raw,
+        })
+    }
+
     /// Literal for a parameter (fp32 table first, then q8 table).
     pub fn literal(&self, name: &str) -> Result<&xla::Literal> {
         self.f32_lits

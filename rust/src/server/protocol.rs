@@ -16,9 +16,10 @@
 //!   silent fallback.
 //! * Every reject, on every path and both planes, is one JSON line of
 //!   the same shape: `{"id":…,"ok":false,"kind":…,"msg":…}` with
-//!   `kind` drawn from the closed [`ERROR_KINDS`] set (`"error"` is a
-//!   deprecated alias field for `msg`, kept one release for old
-//!   clients).
+//!   `kind` drawn from the closed [`ERROR_KINDS`] set.  The deprecated
+//!   `"error"` alias of `msg` (pre-`kind` clients) is gone from the
+//!   default wire; `--compat-error-alias` re-enables it via
+//!   [`ReplyFmt`] for one more release.
 //! * Binary frames (`"image":{"frame":{…}}` + raw payload) are only
 //!   legal after a `{"cmd":"hello"}` negotiation on that connection;
 //!   connections that never negotiate are byte-for-byte unaffected.
@@ -579,81 +580,122 @@ pub fn hello_line(plane: &str, wire_parser: &str, binary_frames: bool) -> String
     o.to_string()
 }
 
-pub fn response_line(r: &Response) -> String {
-    let mut o = Json::obj();
-    o.set("id", r.id.into());
-    match &r.error {
-        Some(e) => {
-            o.set("ok", false.into())
-                .set("kind", r.kind.into())
-                .set("msg", e.as_str().into())
-                // Deprecated alias of "msg", kept one release for old
-                // clients (README "Wire protocol").
-                .set("error", e.as_str().into());
-        }
-        None => {
-            o.set("ok", true.into())
-                .set("top1", r.top1.into())
-                .set(
-                    "top5",
-                    Json::Arr(
-                        r.top5
-                            .iter()
-                            .map(|(i, p)| {
-                                Json::Arr(vec![(*i).into(), Json::Num(*p as f64)])
-                            })
-                            .collect(),
-                    ),
-                )
-                .set("queue_ms", r.queue_ms.into())
-                .set("exec_ms", r.exec_ms.into())
-                .set("total_ms", r.total_ms.into())
-                .set("batch", r.batch_size.into())
-                .set("worker", r.worker.into())
-                .set("engine", r.engine.into())
-                .set("model", (&*r.model).into())
-                .set("cached", r.cached.into());
+/// Per-plane reply formatting knobs, threaded from `ServerConfig` to
+/// every site that emits an `"ok":false` line.
+///
+/// `error_alias` re-emits the deprecated `"error"` duplicate of `msg`
+/// for pre-`kind` clients (`--compat-error-alias`).  The default wire
+/// no longer carries it — the conformance test in
+/// rust/tests/conn_plane.rs asserts its absence on both planes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplyFmt {
+    pub error_alias: bool,
+}
+
+impl ReplyFmt {
+    pub fn new(error_alias: bool) -> Self {
+        Self { error_alias }
+    }
+
+    /// Append the deprecated alias when this connection's plane was
+    /// started with `--compat-error-alias`.
+    fn alias(&self, o: &mut Json, msg: &str) {
+        if self.error_alias {
+            o.set("error", msg.into());
         }
     }
-    o.to_string()
+
+    pub fn response_line(&self, r: &Response) -> String {
+        let mut o = Json::obj();
+        o.set("id", r.id.into());
+        match &r.error {
+            Some(e) => {
+                o.set("ok", false.into())
+                    .set("kind", r.kind.into())
+                    .set("msg", e.as_str().into());
+                self.alias(&mut o, e);
+            }
+            None => {
+                o.set("ok", true.into())
+                    .set("top1", r.top1.into())
+                    .set(
+                        "top5",
+                        Json::Arr(
+                            r.top5
+                                .iter()
+                                .map(|(i, p)| {
+                                    Json::Arr(vec![(*i).into(), Json::Num(*p as f64)])
+                                })
+                                .collect(),
+                        ),
+                    )
+                    .set("queue_ms", r.queue_ms.into())
+                    .set("exec_ms", r.exec_ms.into())
+                    .set("total_ms", r.total_ms.into())
+                    .set("batch", r.batch_size.into())
+                    .set("worker", r.worker.into())
+                    .set("engine", r.engine.into())
+                    .set("model", (&*r.model).into())
+                    .set("cached", r.cached.into());
+            }
+        }
+        o.to_string()
+    }
+
+    pub fn error_line(&self, id: u64, msg: &str) -> String {
+        self.error_line_kind(id, "error", msg)
+    }
+
+    /// Structured error: `kind` is machine-matchable (one of
+    /// [`ERROR_KINDS`]), `msg` is the human text.
+    pub fn error_line_kind(&self, id: u64, kind: &str, msg: &str) -> String {
+        debug_assert!(ERROR_KINDS.contains(&kind), "unlisted error kind {kind:?}");
+        let mut o = Json::obj();
+        o.set("id", id.into())
+            .set("ok", false.into())
+            .set("kind", kind.into())
+            .set("msg", msg.into());
+        self.alias(&mut o, msg);
+        o.to_string()
+    }
+
+    /// Structured SLO shed: no engine variant was predicted to meet the
+    /// request's deadline.  The human text is SubmitError::Shed's
+    /// Display, so wire and library error messages cannot drift apart.
+    pub fn shed_line(&self, id: u64, predicted_ms: f64, deadline_ms: f64) -> String {
+        let msg = crate::coordinator::SubmitError::Shed {
+            predicted_ms,
+            deadline_ms,
+        }
+        .to_string();
+        let mut o = Json::obj();
+        o.set("id", id.into())
+            .set("ok", false.into())
+            .set("kind", "shed".into())
+            .set("msg", msg.as_str().into());
+        self.alias(&mut o, &msg);
+        o.set("predicted_ms", predicted_ms.into())
+            .set("deadline_ms", deadline_ms.into());
+        o.to_string()
+    }
+}
+
+/// Alias-free [`ReplyFmt::response_line`] for callers without a plane
+/// config (benches, library users).
+pub fn response_line(r: &Response) -> String {
+    ReplyFmt::default().response_line(r)
 }
 
 pub fn error_line(id: u64, msg: &str) -> String {
-    error_line_kind(id, "error", msg)
+    ReplyFmt::default().error_line(id, msg)
 }
 
-/// Structured error: `kind` is machine-matchable (one of
-/// [`ERROR_KINDS`]), `msg` is the human text (`error` is its
-/// deprecated alias, kept one release for old clients).
 pub fn error_line_kind(id: u64, kind: &str, msg: &str) -> String {
-    debug_assert!(ERROR_KINDS.contains(&kind), "unlisted error kind {kind:?}");
-    let mut o = Json::obj();
-    o.set("id", id.into())
-        .set("ok", false.into())
-        .set("kind", kind.into())
-        .set("msg", msg.into())
-        .set("error", msg.into());
-    o.to_string()
+    ReplyFmt::default().error_line_kind(id, kind, msg)
 }
 
-/// Structured SLO shed: no engine variant was predicted to meet the
-/// request's deadline.  The human text is SubmitError::Shed's Display,
-/// so wire and library error messages cannot drift apart.
 pub fn shed_line(id: u64, predicted_ms: f64, deadline_ms: f64) -> String {
-    let msg = crate::coordinator::SubmitError::Shed {
-        predicted_ms,
-        deadline_ms,
-    }
-    .to_string();
-    let mut o = Json::obj();
-    o.set("id", id.into())
-        .set("ok", false.into())
-        .set("kind", "shed".into())
-        .set("msg", msg.as_str().into())
-        .set("error", msg.into())
-        .set("predicted_ms", predicted_ms.into())
-        .set("deadline_ms", deadline_ms.into());
-    o.to_string()
+    ReplyFmt::default().shed_line(id, predicted_ms, deadline_ms)
 }
 
 pub fn stats_line(s: &crate::coordinator::StatsSnapshot) -> String {
@@ -902,7 +944,14 @@ fn model_stats_obj(m: &crate::coordinator::ModelStatsSnapshot) -> Json {
         .set("images", m.images.into())
         .set("rejected", m.rejected.into())
         .set("cache_hits", m.cache_hits.into())
-        .set("cache_misses", m.cache_misses.into());
+        .set("cache_misses", m.cache_misses.into())
+        // Cold-start economics (DESIGN.md §11): last generation build
+        // wall time plus the snapshot/prefetch counters behind it.
+        .set("warm_ms", m.warm_ms.into())
+        .set("snapshot_hits", m.snapshot_hits.into())
+        .set("snapshot_misses", m.snapshot_misses.into())
+        .set("snapshot_fallbacks", m.snapshot_fallbacks.into())
+        .set("prefetch_builds", m.prefetch_builds.into());
     o
 }
 
@@ -918,13 +967,16 @@ pub fn models_line(default_model: &str, models: &[crate::coordinator::ModelStats
     o.to_string()
 }
 
-/// `{"cmd":"reload"}` success reply.
+/// `{"cmd":"reload"}` success reply.  `rebuilt:false` marks a no-op
+/// reload: artifacts' content hash was unchanged, so the registry
+/// bumped the generation counter without a probe build.
 pub fn reload_line(r: &crate::registry::ReloadReport) -> String {
     let mut o = Json::obj();
     o.set("ok", true.into())
         .set("model", r.model.as_str().into())
         .set("generation", r.generation.into())
-        .set("warm_ms", r.warm_ms.into());
+        .set("warm_ms", r.warm_ms.into())
+        .set("rebuilt", r.rebuilt.into());
     o.to_string()
 }
 
@@ -1252,21 +1304,28 @@ mod tests {
 
     #[test]
     fn error_lines_carry_unified_schema() {
-        // {ok:false, id, kind, msg} on every reject shape; "error" is
-        // the deprecated alias of "msg" during the transition.
-        for line in [
-            error_line(1, "boom"),
-            error_line_kind(2, "bad_frame", "frame len 0 outside (0, 8]"),
-            error_line_kind(3, "unsupported_feature", "negotiate first"),
-            shed_line(4, 412.0, 250.0),
-        ] {
-            let j = Json::parse(&line).unwrap();
-            assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
-            let kind = j.str_of("kind").unwrap();
-            assert!(ERROR_KINDS.contains(&kind), "unlisted kind {kind}");
-            let msg = j.str_of("msg").unwrap();
-            assert!(!msg.is_empty());
-            assert_eq!(j.str_of("error").unwrap(), msg, "alias must match msg");
+        // {ok:false, id, kind, msg} on every reject shape.  The
+        // deprecated "error" alias is off the default wire; it only
+        // reappears under --compat-error-alias, duplicating msg.
+        for fmt in [ReplyFmt::default(), ReplyFmt::new(true)] {
+            for line in [
+                fmt.error_line(1, "boom"),
+                fmt.error_line_kind(2, "bad_frame", "frame len 0 outside (0, 8]"),
+                fmt.error_line_kind(3, "unsupported_feature", "negotiate first"),
+                fmt.shed_line(4, 412.0, 250.0),
+            ] {
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+                let kind = j.str_of("kind").unwrap();
+                assert!(ERROR_KINDS.contains(&kind), "unlisted kind {kind}");
+                let msg = j.str_of("msg").unwrap();
+                assert!(!msg.is_empty());
+                if fmt.error_alias {
+                    assert_eq!(j.str_of("error").unwrap(), msg, "alias must match msg");
+                } else {
+                    assert!(j.get("error").is_none(), "alias leaked into {line}");
+                }
+            }
         }
     }
 
@@ -1480,6 +1539,10 @@ mod tests {
         let j = Json::parse(&response_line(&r)).unwrap();
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(j.str_of("kind").unwrap(), "shed");
+        assert!(j.str_of("msg").unwrap().contains("deadline"));
+        assert!(j.get("error").is_none(), "alias is off the default wire");
+        // The compat formatter restores the alias for old clients.
+        let j = Json::parse(&ReplyFmt::new(true).response_line(&r)).unwrap();
         assert!(j.str_of("error").unwrap().contains("deadline"));
     }
 

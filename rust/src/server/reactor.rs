@@ -95,6 +95,8 @@ pub(super) struct Shared {
     max_frame_bytes: usize,
     /// Request-line parser (tape hot path vs tree ablation baseline).
     wire: WireParser,
+    /// Reply formatting knobs (`--compat-error-alias`).
+    fmt: protocol::ReplyFmt,
     idle_timeout: Option<Duration>,
     /// Trace hub (same instance the coordinator owns): IO threads
     /// stamp accepted/parsed/reply_flushed and retire timelines.
@@ -135,7 +137,7 @@ impl CompletionSink for Shared {
         let mut resp = resp;
         resp.id = token.request; // echo the client-assigned id
         let span = resp.span;
-        self.push_done(token.conn, protocol::response_line(&resp), true, span);
+        self.push_done(token.conn, self.fmt.response_line(&resp), true, span);
     }
 }
 
@@ -175,6 +177,7 @@ impl Reactor {
             max_line_bytes: cfg.max_line_bytes,
             max_frame_bytes: cfg.max_frame_bytes,
             wire: cfg.wire_parser,
+            fmt: protocol::ReplyFmt::new(cfg.compat_error_alias),
             idle_timeout: match cfg.idle_timeout_ms {
                 0 => None,
                 ms => Some(Duration::from_millis(ms)),
@@ -305,12 +308,10 @@ fn admit(
         // Structured reject so a load generator can tell shed-at-socket
         // from network failure.  Best effort: the socket is fresh and
         // non-blocking, so one short write almost always fits.
-        let mut line = protocol::error_line_kind(
-            0,
-            "at_capacity",
-            "connection limit reached",
-        )
-        .into_bytes();
+        let mut line = shared
+            .fmt
+            .error_line_kind(0, "at_capacity", "connection limit reached")
+            .into_bytes();
         line.push(b'\n');
         let _ = stream.write_all(&line);
         return; // drop closes
@@ -685,7 +686,7 @@ fn on_readable(
                     .oversize_rejected
                     .fetch_add(1, Ordering::Relaxed);
                 if let Some(c) = conns.get_mut(&token) {
-                    c.wbuf.push_line(&protocol::error_line_kind(
+                    c.wbuf.push_line(&shared.fmt.error_line_kind(
                         0,
                         "bad_request",
                         &format!(
@@ -731,7 +732,7 @@ fn process_line(
         None => return,
     };
     match parsed {
-        Err(e) => c.wbuf.push_line(&protocol::error_line_kind(
+        Err(e) => c.wbuf.push_line(&shared.fmt.error_line_kind(
             0,
             "bad_request",
             &format!("bad request: {e}"),
@@ -781,7 +782,7 @@ fn process_line(
             std::thread::spawn(move || {
                 let line = match coord.reload(model.as_deref()) {
                     Ok(report) => protocol::reload_line(&report),
-                    Err(e) => protocol::error_line_kind(
+                    Err(e) => shared.fmt.error_line_kind(
                         0,
                         "reload_failed",
                         &format!("{e:#}"),
@@ -817,7 +818,7 @@ fn process_line(
                 match reject {
                     Some((kind, msg)) => {
                         shared.stats.frames_rejected.fetch_add(1, Ordering::Relaxed);
-                        c.wbuf.push_line(&protocol::error_line_kind(id, kind, &msg));
+                        c.wbuf.push_line(&shared.fmt.error_line_kind(id, kind, &msg));
                         if header.resyncable(shared.max_frame_bytes) {
                             // The declared len is trustworthy even though
                             // the header is not: consume exactly that many
@@ -953,20 +954,20 @@ fn submit_infer(
         let lease = match coord.lease(model) {
             Ok(l) => l,
             Err(e @ SubmitError::UnknownModel(_)) => {
-                return Some(protocol::error_line_kind(
+                return Some(shared.fmt.error_line_kind(
                     id,
                     "unknown_model",
                     &e.to_string(),
                 ))
             }
             Err(e @ SubmitError::ModelUnavailable { .. }) => {
-                return Some(protocol::error_line_kind(
+                return Some(shared.fmt.error_line_kind(
                     id,
                     "model_unavailable",
                     &e.to_string(),
                 ))
             }
-            Err(e) => return Some(protocol::error_line(id, &e.to_string())),
+            Err(e) => return Some(shared.fmt.error_line(id, &e.to_string())),
         };
         if let Some(mut resp) = wire_key.and_then(|k| lease.cached_response(k)) {
             resp.id = id;
@@ -978,13 +979,15 @@ fn submit_infer(
             s.set(Stage::ReplyFlushed, shared.obs.now_ns());
             let lane = ((conn >> LANE_SHIFT) as usize) % shared.lanes.len();
             shared.obs.complete(&mut s, lane);
-            return Some(protocol::response_line(&resp));
+            return Some(shared.fmt.response_line(&resp));
         }
         let hw = lease.input_hw();
         let tensor = match decoded.take().filter(|t| t.shape() == [hw, hw, 3]) {
             Some(t) => t,
             None => match super::load_pixels(&src, hw, &lease.arena()) {
-                Err(e) => return Some(protocol::error_line(id, &format!("image: {e}"))),
+                Err(e) => {
+                    return Some(shared.fmt.error_line(id, &format!("image: {e}")))
+                }
                 Ok(t) => t,
             },
         };
@@ -1004,7 +1007,7 @@ fn submit_infer(
                 continue;
             }
             Err((SubmitError::Overloaded, _)) => {
-                Some(protocol::error_line_kind(id, "overloaded", "overloaded"))
+                Some(shared.fmt.error_line_kind(id, "overloaded", "overloaded"))
             }
             Err((
                 SubmitError::Shed {
@@ -1012,11 +1015,11 @@ fn submit_infer(
                     deadline_ms,
                 },
                 _,
-            )) => Some(protocol::shed_line(id, predicted_ms, deadline_ms)),
-            Err((e, _)) => Some(protocol::error_line(id, &e.to_string())),
+            )) => Some(shared.fmt.shed_line(id, predicted_ms, deadline_ms)),
+            Err((e, _)) => Some(shared.fmt.error_line(id, &e.to_string())),
         };
     }
-    Some(protocol::error_line(id, "closed"))
+    Some(shared.fmt.error_line(id, "closed"))
 }
 
 fn sweep_idle(

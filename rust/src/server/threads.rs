@@ -46,6 +46,7 @@ impl ThreadsPlane {
         let max_line_bytes = cfg.max_line_bytes;
         let max_frame_bytes = cfg.max_frame_bytes;
         let wire = cfg.wire_parser;
+        let fmt = protocol::ReplyFmt::new(cfg.compat_error_alias);
         let (stop2, stats2) = (stop.clone(), stats.clone());
 
         let accept_thread = std::thread::Builder::new()
@@ -72,12 +73,13 @@ impl ThreadsPlane {
                                     );
                                 }
                                 // Structured reject, not a silent drop.
-                                let mut line = protocol::error_line_kind(
-                                    0,
-                                    "at_capacity",
-                                    "connection limit reached",
-                                )
-                                .into_bytes();
+                                let mut line = fmt
+                                    .error_line_kind(
+                                        0,
+                                        "at_capacity",
+                                        "connection limit reached",
+                                    )
+                                    .into_bytes();
                                 line.push(b'\n');
                                 let _ = stream.write_all(&line);
                                 continue;
@@ -105,6 +107,7 @@ impl ThreadsPlane {
                                     max_line_bytes,
                                     max_frame_bytes,
                                     wire,
+                                    fmt,
                                 );
                             });
                         }
@@ -206,6 +209,7 @@ fn handle_conn(
     max_line_bytes: usize,
     max_frame_bytes: usize,
     wire_parser: WireParser,
+    fmt: protocol::ReplyFmt,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -226,7 +230,7 @@ fn handle_conn(
             LineRead::Eof => return Ok(()), // client closed
             LineRead::Oversize => {
                 stats.oversize_rejected.fetch_add(1, Ordering::Relaxed);
-                let reply = protocol::error_line_kind(
+                let reply = fmt.error_line_kind(
                     0,
                     "bad_request",
                     &format!("request line exceeds {max_line_bytes} bytes"),
@@ -260,7 +264,7 @@ fn handle_conn(
         let t_accepted = coord.obs().now_ns();
         let (reply, span) = match protocol::parse_line(wire_parser, &raw, &mut tape) {
             Err(e) => (
-                protocol::error_line_kind(0, "bad_request", &format!("bad request: {e}")),
+                fmt.error_line_kind(0, "bad_request", &format!("bad request: {e}")),
                 None,
             ),
             Ok((ClientMsg::Ping, _)) => ("{\"ok\":true,\"pong\":true}".to_string(), None),
@@ -314,7 +318,7 @@ fn handle_conn(
             Ok((ClientMsg::Reload { model }, _)) => match coord.reload(model.as_deref()) {
                 Ok(report) => (protocol::reload_line(&report), None),
                 Err(e) => (
-                    protocol::error_line_kind(0, "reload_failed", &format!("{e:#}")),
+                    fmt.error_line_kind(0, "reload_failed", &format!("{e:#}")),
                     None,
                 ),
             },
@@ -348,7 +352,7 @@ fn handle_conn(
                         match reject {
                             Some((kind, msg)) => {
                                 stats.frames_rejected.fetch_add(1, Ordering::Relaxed);
-                                let reply = protocol::error_line_kind(id, kind, &msg);
+                                let reply = fmt.error_line_kind(id, kind, &msg);
                                 if header.resyncable(max_frame_bytes) {
                                     // The declared len is trustworthy even
                                     // though the header is not: consume the
@@ -378,6 +382,7 @@ fn handle_conn(
                                     wire_key,
                                     slo,
                                     span,
+                                    fmt,
                                 )
                             }
                         }
@@ -390,6 +395,7 @@ fn handle_conn(
                         wire_key,
                         slo,
                         span,
+                        fmt,
                     ),
                 }
             }
@@ -427,6 +433,7 @@ fn infer_reply(
     wire_key: Option<u64>,
     slo: Slo,
     span: Span,
+    fmt: protocol::ReplyFmt,
 ) -> (String, Option<Span>) {
     const ATTEMPTS: usize = 2;
     let mut decoded: Option<PooledTensor> = None;
@@ -435,17 +442,17 @@ fn infer_reply(
             Ok(l) => l,
             Err(e @ SubmitError::UnknownModel(_)) => {
                 return (
-                    protocol::error_line_kind(id, "unknown_model", &e.to_string()),
+                    fmt.error_line_kind(id, "unknown_model", &e.to_string()),
                     None,
                 )
             }
             Err(e @ SubmitError::ModelUnavailable { .. }) => {
                 return (
-                    protocol::error_line_kind(id, "model_unavailable", &e.to_string()),
+                    fmt.error_line_kind(id, "model_unavailable", &e.to_string()),
                     None,
                 )
             }
-            Err(e) => return (protocol::error_line(id, &e.to_string()), None),
+            Err(e) => return (fmt.error_line(id, &e.to_string()), None),
         };
         // Wire-key fast path: a repeat of the same raw image spec is
         // answered from this model's response cache before any pixel is
@@ -457,7 +464,7 @@ fn infer_reply(
             let mut s = span;
             s.id = id;
             s.flags |= flag::CACHE_HIT;
-            return (protocol::response_line(&resp), Some(s));
+            return (fmt.response_line(&resp), Some(s));
         }
         // Reuse the pixels reclaimed from a Closed first attempt when
         // they still fit the (possibly re-sized) fresh generation.
@@ -466,7 +473,7 @@ fn infer_reply(
             Some(t) => t,
             None => match super::load_pixels(src, hw, &lease.arena()) {
                 Err(e) => {
-                    return (protocol::error_line(id, &format!("image: {e}")), None)
+                    return (fmt.error_line(id, &format!("image: {e}")), None)
                 }
                 Ok(t) => t,
             },
@@ -479,7 +486,7 @@ fn infer_reply(
                 continue;
             }
             Err((SubmitError::Overloaded, _)) => {
-                (protocol::error_line_kind(id, "overloaded", "overloaded"), None)
+                (fmt.error_line_kind(id, "overloaded", "overloaded"), None)
             }
             Err((
                 SubmitError::Shed {
@@ -487,16 +494,16 @@ fn infer_reply(
                     deadline_ms,
                 },
                 _,
-            )) => (protocol::shed_line(id, predicted_ms, deadline_ms), None),
-            Err((e, _)) => (protocol::error_line(id, &e.to_string()), None),
+            )) => (fmt.shed_line(id, predicted_ms, deadline_ms), None),
+            Err((e, _)) => (fmt.error_line(id, &e.to_string()), None),
             Ok(rx) => match rx.recv() {
                 Ok(mut resp) => {
                     resp.id = id; // echo client id, not internal id
-                    (protocol::response_line(&resp), resp.span)
+                    (fmt.response_line(&resp), resp.span)
                 }
-                Err(_) => (protocol::error_line(id, "worker gone"), None),
+                Err(_) => (fmt.error_line(id, "worker gone"), None),
             },
         };
     }
-    (protocol::error_line(id, "closed"), None)
+    (fmt.error_line(id, "closed"), None)
 }

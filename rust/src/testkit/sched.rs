@@ -44,6 +44,8 @@ pub fn sim_exec(model: &str, generation: u64) -> Arc<ExecCtx> {
         ctx: Arc::new(PolicyCtx::new(0.2, 0)),
         counters: Arc::new(ModelCounters::default()),
         stage_hist: Arc::new(crate::obs::StageHist::new()),
+        snapshot: None,
+        snapshots_on: false,
     })
 }
 

@@ -844,8 +844,9 @@ fn mid_frame_disconnect_leaves_server_healthy_both_planes() {
 /// Unified error schema (ISSUE 9 satellite): every reject the server
 /// can emit carries `ok:false`, a `kind` from the documented closed
 /// set, and a human `msg` — asserted across reject paths on both
-/// planes.
-fn assert_error_schema(addr: &str) {
+/// planes.  The deprecated `error` alias (ISSUE 10 cleanup) is off the
+/// default wire and only returns under `--compat-error-alias`.
+fn assert_error_schema_fmt(addr: &str, compat_alias: bool) {
     let check = |j: &Json, expect_kind: &str| {
         assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false), "{j:?}");
         let kind = j.get("kind").and_then(|v| v.as_str()).expect("reject has kind");
@@ -856,6 +857,18 @@ fn assert_error_schema(addr: &str) {
         );
         let msg = j.get("msg").and_then(|v| v.as_str()).expect("reject has msg");
         assert!(!msg.is_empty());
+        if compat_alias {
+            assert_eq!(
+                j.get("error").and_then(|v| v.as_str()),
+                Some(msg),
+                "compat alias must duplicate msg: {j:?}"
+            );
+        } else {
+            assert!(
+                j.get("error").is_none(),
+                "deprecated alias leaked onto the default wire: {j:?}"
+            );
+        }
     };
 
     let (mut reader, mut w) = raw_conn(addr);
@@ -894,7 +907,25 @@ fn error_schema_unified_both_planes() {
                 ..ServerConfig::default()
             },
         );
-        assert_error_schema(&server.addr().to_string());
+        assert_error_schema_fmt(&server.addr().to_string(), false);
+        stop_all(server, coord);
+    }
+}
+
+#[test]
+fn compat_error_alias_restores_deprecated_field_both_planes() {
+    // `--compat-error-alias` buys old clients one more release: every
+    // reject re-grows the `error` duplicate of `msg`, on both planes.
+    for plane in [ConnPlane::Event, ConnPlane::Threads] {
+        let (server, coord) = start(
+            &format!("erralias_{plane}"),
+            ServerConfig {
+                conn_plane: plane,
+                compat_error_alias: true,
+                ..ServerConfig::default()
+            },
+        );
+        assert_error_schema_fmt(&server.addr().to_string(), true);
         stop_all(server, coord);
     }
 }

@@ -1,0 +1,460 @@
+//! Replica-snapshot trust model (DESIGN.md §11), proven adversarially
+//! over the sim engine — no artifacts or XLA needed, so these run
+//! everywhere including CI:
+//!
+//! * a corrupt snapshot (truncation, bit-flip, version skew, garbage)
+//!   NEVER panics and NEVER serves — every boot falls back to a cold
+//!   build with byte-identical answers, counting a snapshot miss;
+//! * a stale snapshot (artifacts changed underneath it) self-invalidates
+//!   via the content hash and the new artifacts are what gets served;
+//! * snapshot-built and cold-built replicas answer identically (the sim
+//!   oracle makes "wrong weights" directly observable as a wrong class);
+//! * concurrent refresh is atomic: readers racing writers see a whole
+//!   snapshot or a clean error, never a misparse;
+//! * a no-op `{"cmd":"reload"}` (unchanged artifacts) reports
+//!   `rebuilt:false` with zero warm time and no probe build;
+//! * predictive warm-up: a hot queue's arrival rate makes idle workers
+//!   prefetch-build replicas before traffic lands on them.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zuluko::config::{Config, SnapshotMode};
+use zuluko::coordinator::{Coordinator, ModelStatsSnapshot};
+use zuluko::engine::sim::expected_top1;
+use zuluko::engine::EngineKind;
+use zuluko::policy::{bytes_key_parts, Slo};
+use zuluko::runtime::snapshot::SNAPSHOT_FILE;
+use zuluko::runtime::{Manifest, ReplicaSnapshot};
+use zuluko::server::client::{Client, InferRequest};
+use zuluko::server::Server;
+use zuluko::tensor::image::Image;
+use zuluko::tensor::Tensor;
+
+const HW: usize = 32;
+const CLASSES: usize = 100;
+const MODEL: &str = "m";
+
+/// A fresh synthetic-model artifacts dir, unique per test.
+fn model_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "zuluko_snapshot_props_{tag}_{}",
+        std::process::id()
+    ));
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+    dir
+}
+
+/// One sim model, response cache off so every request runs an engine.
+fn sim_cfg(dir: &Path, mode: SnapshotMode) -> Config {
+    let mut cfg = Config {
+        engine: EngineKind::Sim,
+        workers: 1,
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        queue_capacity: 64,
+        ..Config::default()
+    };
+    cfg.policy.cache_capacity = 0;
+    cfg.snapshots = mode;
+    cfg.registry.upsert(MODEL, dir.to_path_buf());
+    cfg.registry.default_model = Some(MODEL.to_string());
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Exactly the pixels the stack decodes for `{"synthetic": seed}`.
+fn frame_pixels(seed: u64) -> Vec<f32> {
+    let img = Image::synthetic(HW, HW, seed);
+    let mut buf = vec![0.0f32; HW * HW * 3];
+    img.to_input_into(&mut buf);
+    buf
+}
+
+fn frame_tensor(seed: u64) -> Tensor {
+    Tensor::new(&[HW, HW, 3], frame_pixels(seed)).unwrap()
+}
+
+fn model_stats(coord: &Coordinator) -> ModelStatsSnapshot {
+    coord
+        .stats()
+        .models
+        .into_iter()
+        .find(|m| m.model == MODEL)
+        .expect("model row in stats")
+}
+
+/// Serve `n` distinct seeds through a coordinator, asserting every
+/// answer against the sim oracle, and return the top1 sequence.
+fn serve_seeds(coord: &Coordinator, base: u64, n: u64, label: &str) -> Vec<usize> {
+    (0..n)
+        .map(|i| {
+            let seed = base + i;
+            let r = coord
+                .submit_model(Some(MODEL), frame_tensor(seed), Slo::default())
+                .unwrap()
+                .recv()
+                .unwrap();
+            assert!(r.is_ok(), "{label}: seed {seed} failed: {:?}", r.error);
+            assert_eq!(
+                r.top1,
+                expected_top1(MODEL, &frame_pixels(seed), CLASSES),
+                "{label}: seed {seed} served the wrong class"
+            );
+            r.top1
+        })
+        .collect()
+}
+
+fn stop_all(server: Server, mut coord: Arc<Coordinator>) {
+    server.stop();
+    let coord = loop {
+        match Arc::try_unwrap(coord) {
+            Ok(c) => break c,
+            Err(arc) => {
+                coord = arc;
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    coord.shutdown();
+}
+
+/// Encoded-snapshot sweep: every truncation point and every flipped
+/// byte must decode to a clean `Err` — never a panic, never an `Ok`
+/// over corrupt bytes (the trailing checksum is verified first).
+#[test]
+fn decode_rejects_every_truncation_and_bitflip() {
+    let dir = model_dir("sweep");
+    let m = Manifest::load(&dir).unwrap();
+    let bytes = ReplicaSnapshot::capture(&m, &[EngineKind::Sim])
+        .unwrap()
+        .encode();
+
+    for keep in (0..bytes.len()).step_by(7).chain([bytes.len() - 1]) {
+        assert!(
+            ReplicaSnapshot::decode(&bytes[..keep], &dir).is_err(),
+            "decode accepted a {keep}-byte prefix of {}",
+            bytes.len()
+        );
+    }
+    for pos in (0..bytes.len()).step_by(11) {
+        for bit in [0x01u8, 0x80] {
+            let mut b = bytes.clone();
+            b[pos] ^= bit;
+            assert!(
+                ReplicaSnapshot::decode(&b, &dir).is_err(),
+                "decode accepted a flip of bit {bit:#x} at byte {pos}"
+            );
+        }
+    }
+    // The untouched bytes still decode — the sweep tested the codec,
+    // not a broken fixture.
+    assert!(ReplicaSnapshot::decode(&bytes, &dir).is_ok());
+}
+
+/// Differential: cold-built (snapshots off), capture-then-serve (first
+/// boot on), snapshot-built (second boot on), and refresh-mode replicas
+/// all answer identically.
+#[test]
+fn snapshot_and_cold_builds_serve_identically() {
+    let dir = model_dir("diff");
+    let snap_path = dir.join(SNAPSHOT_FILE);
+
+    // Ablation baseline: snapshots off — no file appears.
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::Off)).unwrap();
+    let cold = serve_seeds(&coord, 100, 8, "off");
+    assert!(!snap_path.exists(), "snapshots=off must not write {SNAPSHOT_FILE}");
+    assert_eq!(model_stats(&coord).snapshot_hits, 0);
+    assert_eq!(model_stats(&coord).snapshot_misses, 0);
+    coord.shutdown();
+
+    // First boot with snapshots on: cold build (a miss), then capture.
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap();
+    let first = serve_seeds(&coord, 100, 8, "on/first");
+    assert!(snap_path.exists(), "first boot must write the snapshot");
+    assert!(model_stats(&coord).snapshot_misses >= 1);
+    coord.shutdown();
+
+    // Second boot: replica construction comes from the snapshot.
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap();
+    let second = serve_seeds(&coord, 100, 8, "on/second");
+    assert!(
+        model_stats(&coord).snapshot_hits >= 1,
+        "second boot never loaded the snapshot: {:?}",
+        model_stats(&coord)
+    );
+    coord.shutdown();
+
+    // Refresh: always cold-build, rewrite the file.
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::Refresh)).unwrap();
+    let refreshed = serve_seeds(&coord, 100, 8, "refresh");
+    coord.shutdown();
+
+    assert_eq!(cold, first, "capture boot diverged from the cold baseline");
+    assert_eq!(cold, second, "snapshot-built replica diverged from cold");
+    assert_eq!(cold, refreshed, "refresh-built replica diverged from cold");
+}
+
+/// Every corruption of the on-disk snapshot degrades to a cold build —
+/// the boot serves correct answers and counts a miss, never panicking,
+/// never trusting the corrupt bytes.
+#[test]
+fn corrupt_snapshots_always_fall_back_to_cold_build() {
+    let dir = model_dir("corrupt");
+    let path = dir.join(SNAPSHOT_FILE);
+
+    // Seed a valid snapshot to corrupt.
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap();
+    serve_seeds(&coord, 200, 2, "seed");
+    coord.shutdown();
+    let valid = std::fs::read(&path).unwrap();
+
+    let truncated_half = valid[..valid.len() / 2].to_vec();
+    let mut flipped = valid.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x20;
+    // Version skew with a re-sealed checksum, so only the version check
+    // can object (the byte after the 8-byte magic is the version LE).
+    let mut skewed = valid.clone();
+    skewed[8] = 99;
+    let n = skewed.len();
+    let sum = bytes_key_parts(&[&skewed[..n - 8]]);
+    skewed[n - 8..].copy_from_slice(&sum.to_le_bytes());
+
+    let variants: &[(&str, &[u8])] = &[
+        ("empty file", &[]),
+        ("truncated to half", &truncated_half),
+        ("single bit flip", &flipped),
+        ("version skew", &skewed),
+        ("garbage", b"ZSNP but not really a snapshot at all"),
+    ];
+    for (label, bytes) in variants {
+        std::fs::write(&path, bytes).unwrap();
+        let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap();
+        serve_seeds(&coord, 300, 4, label);
+        let m = model_stats(&coord);
+        // The probe found no usable snapshot (miss); worker replicas may
+        // still count hits afterwards — they build from the in-memory
+        // snapshot the cold probe re-captured, which is the fast path
+        // working as designed, not the corrupt file being trusted.
+        assert!(
+            m.snapshot_misses >= 1,
+            "{label}: corrupt snapshot must count a miss, got {m:?}"
+        );
+        coord.shutdown();
+        // The boot healed the file: the next load sees a valid snapshot.
+        assert!(
+            ReplicaSnapshot::load(&dir).is_ok(),
+            "{label}: boot did not rewrite a valid snapshot"
+        );
+    }
+}
+
+/// Artifacts mutated after capture: the content hash refuses the old
+/// snapshot and the NEW artifacts are what gets served — a stale
+/// snapshot can never pin old weights or old sizing.
+#[test]
+fn stale_snapshot_self_invalidates_and_new_artifacts_win() {
+    let dir = model_dir("stale");
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap();
+    serve_seeds(&coord, 400, 2, "before");
+    coord.shutdown();
+    assert!(dir.join(SNAPSHOT_FILE).exists());
+
+    // Same model name, different class count: answers must change.
+    const NEW_CLASSES: usize = 37;
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, NEW_CLASSES, HW, &[1, 2, 4])
+        .unwrap();
+
+    let coord = Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap();
+    for i in 0..4u64 {
+        let seed = 500 + i;
+        let r = coord
+            .submit_model(Some(MODEL), frame_tensor(seed), Slo::default())
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(r.is_ok(), "stale: {:?}", r.error);
+        assert_eq!(
+            r.top1,
+            expected_top1(MODEL, &frame_pixels(seed), NEW_CLASSES),
+            "stale snapshot served the old artifacts"
+        );
+    }
+    let m = model_stats(&coord);
+    assert!(m.snapshot_misses >= 1, "stale load must count a miss: {m:?}");
+    coord.shutdown();
+
+    // The refreshed snapshot reflects the new artifacts.
+    assert_eq!(
+        ReplicaSnapshot::load(&dir).unwrap().num_classes,
+        NEW_CLASSES,
+        "boot did not refresh the stale snapshot"
+    );
+}
+
+/// Readers racing concurrent refresh writers: every successful load is
+/// a whole, correct snapshot; every race loss is a clean error (which
+/// callers treat as cold-build); nothing panics.
+#[test]
+fn concurrent_refresh_never_yields_a_torn_snapshot() {
+    let dir = model_dir("refresh_race");
+    let m = Manifest::load(&dir).unwrap();
+    let snap = Arc::new(ReplicaSnapshot::capture(&m, &[EngineKind::Sim]).unwrap());
+    snap.write(&dir).unwrap();
+    let want = snap.content_hash;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut writers = Vec::new();
+    let mut wrote = 0usize;
+    for _ in 0..3 {
+        let snap = snap.clone();
+        let dir = dir.clone();
+        writers.push(std::thread::spawn(move || {
+            // Writers share one tmp path, so a racing rename can make a
+            // write fail (ENOENT) — that is allowed; a torn *read* is not.
+            (0..50).filter(|_| snap.write(&dir).is_ok()).count()
+        }));
+    }
+    let reader = {
+        let dir = dir.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut oks = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                if let Ok(s) = ReplicaSnapshot::load(&dir) {
+                    assert_eq!(s.content_hash, want, "torn snapshot passed validation");
+                    assert_eq!(s.num_classes, CLASSES);
+                    oks += 1;
+                }
+            }
+            oks
+        })
+    };
+    for w in writers {
+        wrote += w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let oks = reader.join().unwrap();
+    assert!(wrote >= 1, "no refresh ever landed");
+    assert!(oks >= 1, "no load ever succeeded under concurrent refresh");
+}
+
+/// Wire-level no-op reload (ISSUE 10 bugfix): unchanged artifacts bump
+/// the generation without a probe build — `rebuilt:false`, zero warm
+/// time — and a real artifact change still rebuilds.  Also pins the new
+/// per-model snapshot counters on the stats line.
+#[test]
+fn noop_reload_reports_rebuilt_false_on_the_wire() {
+    let dir = model_dir("noop_wire");
+    let coord = Arc::new(Coordinator::start(&sim_cfg(&dir, SnapshotMode::On)).unwrap());
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&server.addr().to_string()).unwrap();
+
+    // Load generation 1 lazily.
+    let r = c.infer(&InferRequest::new(1).synthetic(5)).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+
+    // Unchanged artifacts: generation bump, no rebuild, no warm time.
+    let j = c.reload(Some(MODEL)).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{j:?}");
+    assert_eq!(
+        j.get("rebuilt").and_then(|v| v.as_bool()),
+        Some(false),
+        "no-op reload must not rebuild: {j:?}"
+    );
+    assert_eq!(j.f64_of("warm_ms").unwrap(), 0.0, "{j:?}");
+    assert_eq!(j.usize_of("generation").unwrap(), 2, "{j:?}");
+
+    // Serving is untouched by the no-op bump.
+    let r = c.infer(&InferRequest::new(2).synthetic(6)).unwrap();
+    assert!(r.ok, "{:?}", r.error);
+    assert_eq!(r.top1, expected_top1(MODEL, &frame_pixels(6), CLASSES));
+
+    // A real artifact change still rebuilds.
+    zuluko::testkit::manifest::write_synthetic(&dir, MODEL, CLASSES, HW, &[1, 2])
+        .unwrap();
+    let j = c.reload(Some(MODEL)).unwrap();
+    assert_eq!(
+        j.get("rebuilt").and_then(|v| v.as_bool()),
+        Some(true),
+        "changed artifacts must rebuild: {j:?}"
+    );
+
+    // The stats line carries the cold-start economics per model.
+    let stats = c.stats().unwrap();
+    let models = stats.get("models").and_then(|m| m.as_arr()).unwrap();
+    let row = models
+        .iter()
+        .find(|m| m.str_of("model").ok() == Some(MODEL))
+        .expect("model row");
+    for key in [
+        "snapshot_hits",
+        "snapshot_misses",
+        "snapshot_fallbacks",
+        "prefetch_builds",
+    ] {
+        assert!(row.usize_of(key).is_ok(), "stats row missing {key}: {row:?}");
+    }
+    assert!(row.f64_of("warm_ms").is_ok(), "stats row missing warm_ms");
+
+    drop(c);
+    stop_all(server, coord);
+}
+
+/// Predictive warm-up: closed-loop traffic on one queue pushes its
+/// arrival EWMA over the threshold, and workers that never served it
+/// prefetch-build their replica (observable as `prefetch_builds`),
+/// while every answer stays correct.
+#[test]
+fn predictive_prefetch_builds_replicas_on_idle_workers() {
+    let dir = model_dir("prefetch");
+    let mut cfg = sim_cfg(&dir, SnapshotMode::On);
+    cfg.workers = 3;
+    cfg.prefetch_threshold = 0.5;
+    cfg.validate().unwrap();
+    let coord = Coordinator::start(&cfg).unwrap();
+
+    // Bursts of two concurrent requests: at most two of the three
+    // workers are ever serving, so each burst leaves an idle worker —
+    // and in the early bursts that worker has no cached replica, which
+    // is exactly whom the (fleet-bounded) prefetch grants are for.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut fired = false;
+    let mut i = 0u64;
+    while Instant::now() < deadline {
+        let seeds = [10_000 + 2 * i, 10_001 + 2 * i];
+        let pending: Vec<_> = seeds
+            .iter()
+            .map(|&seed| {
+                coord
+                    .submit_model(Some(MODEL), frame_tensor(seed), Slo::default())
+                    .unwrap()
+            })
+            .collect();
+        for (rx, &seed) in pending.iter().zip(&seeds) {
+            let r = rx.recv().unwrap();
+            assert!(r.is_ok(), "{:?}", r.error);
+            assert_eq!(
+                r.top1,
+                expected_top1(MODEL, &frame_pixels(seed), CLASSES),
+                "answer drifted while prefetch was active"
+            );
+        }
+        i += 1;
+        if model_stats(&coord).prefetch_builds >= 1 {
+            fired = true;
+            break;
+        }
+    }
+    assert!(
+        fired,
+        "hot-queue traffic ({i} bursts) never triggered a prefetch build: {:?}",
+        model_stats(&coord)
+    );
+    coord.shutdown();
+}
